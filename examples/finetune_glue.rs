@@ -1,0 +1,62 @@
+//! Finetuning example: SST2 stand-in task with PAMM r = 1/128 vs full
+//! finetuning (paper Table 1's code path, one task).
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example finetune_glue
+
+use pamm::config::Variant;
+use pamm::coordinator::pipeline::LabeledPipeline;
+use pamm::coordinator::ClassifierSession;
+use pamm::data::glue::{self, TaskGenerator};
+use pamm::runtime::{Engine, HostTensor};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts")?;
+    let spec = glue::glue_suite().into_iter().find(|t| t.name == "SST2").unwrap();
+    let steps = if std::env::var("PAMM_E2E_QUICK").is_ok() { 30 } else { 150 };
+
+    for variant in [Variant::baseline(), Variant::pamm(128)] {
+        let meta = engine
+            .find(|a| {
+                a.kind == "cls_train_step"
+                    && a.config.as_deref() == Some("glue")
+                    && a.variant_tag() == variant.tag()
+            })
+            .expect("glue artifacts (make artifacts)")
+            .clone();
+        let eval_name = meta
+            .name
+            .replace("clstrain", "clseval")
+            .replace(&format!("_{}_", variant.tag()), "_");
+        let mut session = ClassifierSession::new(&engine, &meta.name, &eval_name, 42)?;
+        let vocab = engine.manifest.config("glue").unwrap().vocab;
+        let pipe = LabeledPipeline::spawn(
+            TaskGenerator::new(spec.clone(), vocab, 42),
+            session.batch,
+            session.seq,
+            2,
+        );
+        println!("\n=== SST2 [{}] ===", variant.tag());
+        for s in 0..steps {
+            let b = pipe.next();
+            let loss = session.step(
+                &HostTensor::i32(vec![b.batch, b.seq], b.tokens.clone()),
+                &HostTensor::i32(vec![b.batch], b.labels.clone()),
+            )?;
+            if s % (steps / 6).max(1) == 0 {
+                println!("  step {s:>4}  loss {loss:.4}");
+            }
+        }
+        let mut gen = TaskGenerator::new(spec.clone(), vocab, 42 ^ 0xEE);
+        let (mut preds, mut golds) = (Vec::new(), Vec::new());
+        for _ in 0..12 {
+            let b = gen.batch(session.batch, session.seq);
+            preds.extend(
+                session.predict(&HostTensor::i32(vec![b.batch, b.seq], b.tokens.clone()))?,
+            );
+            golds.extend(b.labels);
+        }
+        println!("  accuracy: {:.2}%", glue::score(&spec, &preds, &golds));
+    }
+    Ok(())
+}

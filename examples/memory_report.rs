@@ -1,0 +1,41 @@
+//! Memory accountant walk-through: the paper's Fig 3b / Table 5 memory
+//! columns at every zoo scale, plus the k = ⌈r·b⌉ ladder.
+//!
+//! No artifacts required. Run:
+//!   cargo run --release --example memory_report
+
+use pamm::memory::{self, ModelGeometry};
+
+fn main() {
+    println!("QKV-activation memory, paper shapes (per-GPU 64×256 tokens):\n");
+    println!(
+        "{:<11} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "model", "params", "baseline", "r=1/128", "r=1/512", "saved"
+    );
+    for g in ModelGeometry::zoo() {
+        let (b, l) = if g.name.starts_with("llama") { (64, 256) } else { (8, 128) };
+        let base = memory::qkv_saved_bytes(&g, b, l, 4);
+        let p128 = memory::pamm_saved_bytes(&g, b, l, 1.0 / 128.0, 4);
+        let p512 = memory::pamm_saved_bytes(&g, b, l, 1.0 / 512.0, 4);
+        println!(
+            "{:<11} {:>12} {:>12} {:>12} {:>12} {:>7.2}%",
+            g.name,
+            g.param_count(),
+            memory::fmt_bytes(base),
+            memory::fmt_bytes(p128),
+            memory::fmt_bytes(p512),
+            100.0 * (1.0 - p512 as f64 / base as f64)
+        );
+    }
+
+    println!("\nGenerator-count ladder at b = 16384 tokens (paper's per-GPU batch):");
+    for inv_r in [64usize, 128, 256, 512] {
+        let k = (16384f64 / inv_r as f64).ceil() as usize;
+        println!("  r = 1/{inv_r:<4} → k = {k} generators");
+    }
+    println!("\nCompare against other compressors (llama60m, r = 1/128):");
+    let g = ModelGeometry::by_name("llama60m").unwrap();
+    println!("  PAMM    {}", memory::fmt_bytes(memory::pamm_saved_bytes(&g, 64, 256, 1.0 / 128.0, 4)));
+    println!("  CRS     {}", memory::fmt_bytes(memory::crs_saved_bytes(&g, 64, 256, 1.0 / 128.0)));
+    println!("  CompAct {}", memory::fmt_bytes(memory::compact_saved_bytes(&g, 64, 256, 1.0 / 128.0)));
+}

@@ -1,0 +1,66 @@
+//! End-to-end headline run (DESIGN.md §4): train the largest
+//! CPU-tractable LLaMA-style model through the full AOT→PJRT→coordinator
+//! stack, baseline vs PAMM r = 1/512, logging both loss curves.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example train_e2e            # medium, 300 steps
+//!   PAMM_E2E_QUICK=1 cargo run --release --example train_e2e   # tiny, 40
+//!
+//! The loss curves land in runs/e2e/*.csv; EXPERIMENTS.md records a run.
+
+use pamm::config::{RunConfig, Variant};
+use pamm::coordinator::train_run;
+use pamm::memory::{self, ModelGeometry};
+use pamm::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("PAMM_E2E_QUICK").is_ok();
+    let engine = Engine::load("artifacts")?;
+
+    let (model, batch, seq, steps) =
+        if quick { ("tiny", 8, 128, 40) } else { ("medium", 4, 256, 300) };
+
+    let mut results = Vec::new();
+    for variant in [Variant::baseline(), Variant::pamm(512)] {
+        let cfg = RunConfig {
+            model: model.into(),
+            variant: variant.clone(),
+            batch,
+            seq,
+            steps,
+            seed: 42,
+            eval_every: (steps / 5).max(1),
+            eval_batches: 6,
+            run_dir: "runs/e2e".into(),
+            ..Default::default()
+        };
+        println!("\n=== {} [{}] — {} steps ===", model, variant.tag(), steps);
+        let out = train_run(&engine, &cfg, false)?;
+        println!(
+            "final: loss {:.4}, eval ppl {}, {} tok/s",
+            out.final_loss,
+            out.final_ppl.map(|p| format!("{p:.2}")).unwrap_or_else(|| "-".into()),
+            out.tokens_per_sec.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+        );
+        results.push((variant.tag(), out));
+    }
+
+    let g = ModelGeometry::by_name(model).unwrap();
+    println!("\n=== summary ===");
+    println!("model {model}: {} params", g.param_count());
+    for (tag, out) in &results {
+        println!(
+            "  {tag:<12} final loss {:.4}  eval ppl {}",
+            out.final_loss,
+            out.final_ppl.map(|p| format!("{p:.2}")).unwrap_or_else(|| "-".into())
+        );
+    }
+    println!(
+        "QKV activation memory at this shape: baseline {}, PAMM {} (saved {:.2}%)",
+        memory::fmt_bytes(memory::qkv_saved_bytes(&g, batch, seq, 4)),
+        memory::fmt_bytes(memory::pamm_saved_bytes(&g, batch, seq, 1.0 / 512.0, 4)),
+        memory::report(&g, batch, seq, Some(1.0 / 512.0)).savings_pct().unwrap()
+    );
+    println!("loss curves: runs/e2e/*.csv");
+    Ok(())
+}

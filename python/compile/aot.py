@@ -1,0 +1,611 @@
+"""AOT lowering: every runtime computation → HLO text + manifest.json.
+
+This is the only place Python runs in the whole system, and it runs once
+(`make artifacts`). Each artifact is a jitted JAX function lowered to
+stablehlo, converted to an XlaComputation, and dumped as **HLO text** —
+not a serialized ``HloModuleProto``: jax ≥ 0.5 emits 64-bit instruction
+ids that the image's xla_extension 0.5.1 rejects, while the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+``manifest.json`` records, per artifact, the *exact* positional calling
+convention (input/output names, shapes, dtypes) plus the parameter spec
+(init std / shapes) so the Rust runtime can initialize, feed, and thread
+buffers without ever importing Python.
+
+Calling conventions
+-------------------
+train_step      : [param.*…, m.*…, v.*…, step, tokens, seed]
+                  → [loss, param.*…, m.*…, v.*…]
+cls_train_step  : same + labels before seed
+eval_step       : [param.*…, tokens] → [loss]
+cls_eval_step   : [param.*…, tokens] → [pred (B,) i32]
+kernel artifacts: see ``emit_kernels``.
+
+Everything is lowered with ``return_tuple=False`` so PJRT hands Rust one
+buffer per output — the coordinator threads param/opt buffers straight
+back into the next step without host round-trips.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import train as T
+from compile.kernels import flash_attention as FA
+from compile.kernels import pamm as PK
+from compile.kernels import ref as RK
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape: Sequence[int], dtype=F32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(x) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(x.dtype)]
+
+
+def _io(name: str, x) -> Dict:
+    return {"name": name, "shape": list(x.shape), "dtype": _dt(x)}
+
+
+class Emitter:
+    """Accumulates artifacts + manifest rows, writes them under ``outdir``."""
+
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.rows: List[Dict] = []
+        os.makedirs(outdir, exist_ok=True)
+
+    def emit(
+        self,
+        name: str,
+        fn: Callable,
+        in_specs: List[Tuple[str, jax.ShapeDtypeStruct]],
+        out_names: List[str],
+        **meta,
+    ) -> None:
+        lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in in_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *[s for _, s in in_specs])
+        flat, _ = jax.tree_util.tree_flatten(outs)
+        assert len(flat) == len(out_names), (name, len(flat), out_names)
+        row = {
+            "name": name,
+            "file": fname,
+            "inputs": [_io(n, s) for n, s in in_specs],
+            "outputs": [_io(n, x) for n, x in zip(out_names, flat)],
+        }
+        row.update(meta)
+        self.rows.append(row)
+        print(f"  wrote {fname}  ({len(text) / 1024:.0f} KiB)")
+
+    def finish(self) -> None:
+        manifest = {
+            "version": 1,
+            "artifacts": self.rows,
+            "configs": {
+                name: {
+                    "vocab": c.vocab,
+                    "d_model": c.d_model,
+                    "n_layers": c.n_layers,
+                    "n_heads": c.n_heads,
+                    "d_ff": c.d_ff,
+                    "param_count": c.param_count(),
+                }
+                for name, c in M.CONFIGS.items()
+            },
+        }
+        path = os.path.join(self.outdir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {path} ({len(self.rows)} artifacts)")
+
+
+# ---------------------------------------------------------------------------
+# Model artifacts
+# ---------------------------------------------------------------------------
+
+
+def _param_meta(cfg: M.ModelConfig) -> List[Dict]:
+    return [
+        {"name": n, "shape": list(s), "init_std": std}
+        for n, s, std in M.param_spec(cfg)
+    ]
+
+
+def _variant_meta(var: M.VariantConfig) -> Dict:
+    return {
+        "mode": var.mode,
+        "r": var.r,
+        # JSON has no Infinity; -1 encodes "no neighborhood condition".
+        "eps": -1.0 if math.isinf(var.eps) else var.eps,
+        "use_pallas": var.use_pallas,
+    }
+
+
+def variant_tag(var: M.VariantConfig) -> str:
+    if var.mode == "baseline":
+        return "baseline"
+    inv_r = int(round(1.0 / var.r))
+    tag = f"{var.mode}{inv_r}"
+    if var.use_pallas:
+        tag += "pl"
+    if not math.isinf(var.eps):
+        tag += f"_eps{var.eps:g}".replace(".", "p")
+    return tag
+
+
+def emit_train_step(
+    em: Emitter,
+    cfg: M.ModelConfig,
+    var: M.VariantConfig,
+    tc: T.TrainConfig,
+) -> None:
+    pspec = M.param_spec(cfg)
+    names = [n for n, _, _ in pspec]
+    shapes = [s for _, s, _ in pspec]
+    step_fn = T.make_train_step(cfg, var, tc)
+    P = len(pspec)
+
+    def flat_fn(*args):
+        params = dict(zip(names, args[:P]))
+        m = dict(zip(names, args[P : 2 * P]))
+        v = dict(zip(names, args[2 * P : 3 * P]))
+        step, tokens, seed = args[3 * P :]
+        loss, np_, nm, nv = step_fn(params, m, v, step, tokens, seed)
+        # Emit outputs in the same canonical order as inputs.
+        return (
+            loss,
+            *[np_[n] for n in names],
+            *[nm[n] for n in names],
+            *[nv[n] for n in names],
+        )
+
+    in_specs = (
+        [(f"param.{n}", spec(s)) for n, s in zip(names, shapes)]
+        + [(f"m.{n}", spec(s)) for n, s in zip(names, shapes)]
+        + [(f"v.{n}", spec(s)) for n, s in zip(names, shapes)]
+        + [
+            ("step", spec((), I32)),
+            ("tokens", spec((tc.batch, tc.seq + 1), I32)),
+            ("seed", spec((), I32)),
+        ]
+    )
+    out_names = (
+        ["loss"]
+        + [f"param.{n}" for n in names]
+        + [f"m.{n}" for n in names]
+        + [f"v.{n}" for n in names]
+    )
+    em.emit(
+        f"train_{cfg.name}_{variant_tag(var)}_{tc.batch}x{tc.seq}",
+        flat_fn,
+        in_specs,
+        out_names,
+        kind="train_step",
+        config=cfg.name,
+        variant=_variant_meta(var),
+        batch=tc.batch,
+        seq=tc.seq,
+        train={"lr": tc.lr, "steps": tc.steps, "pamm_lr_scale": tc.pamm_lr_scale},
+        param_spec=_param_meta(cfg),
+    )
+
+
+def emit_grad_apply_pair(
+    em: Emitter,
+    cfg: M.ModelConfig,
+    var: M.VariantConfig,
+    tc: T.TrainConfig,
+) -> None:
+    """Grad-only + apply-only artifacts for the DDP/grad-accum coordinator.
+
+    grads_* : [param.*, step, tokens, seed] → [loss, grad.*]
+    apply_* : [param.*, m.*, v.*, grad.*, step] → [param.*, m.*, v.*]
+
+    Clipping happens in apply (post-all-reduce — correct DDP semantics).
+    """
+    pspec = M.param_spec(cfg)
+    names = [n for n, _, _ in pspec]
+    shapes = [s for _, s, _ in pspec]
+    P = len(pspec)
+    grad_fn = T.make_grad_step(cfg, var, tc)
+    apply_fn = T.make_apply_step(cfg, var, tc)
+
+    def flat_grad(*args):
+        params = dict(zip(names, args[:P]))
+        step, tokens, seed = args[P:]
+        loss, grads = grad_fn(params, step, tokens, seed)
+        return (loss, *[grads[n] for n in names])
+
+    em.emit(
+        f"grads_{cfg.name}_{variant_tag(var)}_{tc.batch}x{tc.seq}",
+        flat_grad,
+        [(f"param.{n}", spec(s)) for n, s in zip(names, shapes)]
+        + [
+            ("step", spec((), I32)),
+            ("tokens", spec((tc.batch, tc.seq + 1), I32)),
+            ("seed", spec((), I32)),
+        ],
+        ["loss"] + [f"grad.{n}" for n in names],
+        kind="grad_step",
+        config=cfg.name,
+        variant=_variant_meta(var),
+        batch=tc.batch,
+        seq=tc.seq,
+        train={"lr": tc.lr, "steps": tc.steps, "pamm_lr_scale": tc.pamm_lr_scale},
+        param_spec=_param_meta(cfg),
+    )
+
+    def flat_apply(*args):
+        params = dict(zip(names, args[:P]))
+        m = dict(zip(names, args[P : 2 * P]))
+        v = dict(zip(names, args[2 * P : 3 * P]))
+        grads = dict(zip(names, args[3 * P : 4 * P]))
+        step = args[4 * P]
+        np_, nm, nv = apply_fn(params, m, v, grads, step)
+        return (
+            *[np_[n] for n in names],
+            *[nm[n] for n in names],
+            *[nv[n] for n in names],
+        )
+
+    em.emit(
+        f"apply_{cfg.name}_{variant_tag(var)}_{tc.batch}x{tc.seq}",
+        flat_apply,
+        [(f"param.{n}", spec(s)) for n, s in zip(names, shapes)]
+        + [(f"m.{n}", spec(s)) for n, s in zip(names, shapes)]
+        + [(f"v.{n}", spec(s)) for n, s in zip(names, shapes)]
+        + [(f"grad.{n}", spec(s)) for n, s in zip(names, shapes)]
+        + [("step", spec((), I32))],
+        [f"param.{n}" for n in names]
+        + [f"m.{n}" for n in names]
+        + [f"v.{n}" for n in names],
+        kind="apply_step",
+        config=cfg.name,
+        variant=_variant_meta(var),
+        batch=tc.batch,
+        seq=tc.seq,
+        train={"lr": tc.lr, "steps": tc.steps, "pamm_lr_scale": tc.pamm_lr_scale},
+        param_spec=_param_meta(cfg),
+    )
+
+
+def emit_eval_step(em: Emitter, cfg: M.ModelConfig, batch: int, seq: int) -> None:
+    pspec = M.param_spec(cfg)
+    names = [n for n, _, _ in pspec]
+    eval_fn = T.make_eval_step(cfg)
+
+    def flat_fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        return (eval_fn(params, args[len(names)]),)
+
+    in_specs = [(f"param.{n}", spec(s)) for n, s, _ in pspec] + [
+        ("tokens", spec((batch, seq + 1), I32))
+    ]
+    em.emit(
+        f"eval_{cfg.name}_{batch}x{seq}",
+        flat_fn,
+        in_specs,
+        ["loss"],
+        kind="eval_step",
+        config=cfg.name,
+        batch=batch,
+        seq=seq,
+        param_spec=_param_meta(cfg),
+    )
+
+
+def emit_classifier(
+    em: Emitter,
+    cfg: M.ModelConfig,
+    var: M.VariantConfig,
+    tc: T.TrainConfig,
+) -> None:
+    pspec = M.param_spec(cfg)
+    names = [n for n, _, _ in pspec]
+    P = len(pspec)
+    step_fn = T.make_classifier_train_step(cfg, var, tc)
+    eval_fn = T.make_classifier_eval_step(cfg)
+
+    def flat_train(*args):
+        params = dict(zip(names, args[:P]))
+        m = dict(zip(names, args[P : 2 * P]))
+        v = dict(zip(names, args[2 * P : 3 * P]))
+        step, tokens, labels, seed = args[3 * P :]
+        loss, np_, nm, nv = step_fn(params, m, v, step, tokens, labels, seed)
+        return (
+            loss,
+            *[np_[n] for n in names],
+            *[nm[n] for n in names],
+            *[nv[n] for n in names],
+        )
+
+    in_specs = (
+        [(f"param.{n}", spec(s)) for n, s, _ in pspec]
+        + [(f"m.{n}", spec(s)) for n, s, _ in pspec]
+        + [(f"v.{n}", spec(s)) for n, s, _ in pspec]
+        + [
+            ("step", spec((), I32)),
+            ("tokens", spec((tc.batch, tc.seq), I32)),
+            ("labels", spec((tc.batch,), I32)),
+            ("seed", spec((), I32)),
+        ]
+    )
+    out_names = (
+        ["loss"]
+        + [f"param.{n}" for n in names]
+        + [f"m.{n}" for n in names]
+        + [f"v.{n}" for n in names]
+    )
+    em.emit(
+        f"clstrain_{cfg.name}_{variant_tag(var)}_{tc.batch}x{tc.seq}",
+        flat_train,
+        in_specs,
+        out_names,
+        kind="cls_train_step",
+        config=cfg.name,
+        variant=_variant_meta(var),
+        batch=tc.batch,
+        seq=tc.seq,
+        n_classes=cfg.n_classes,
+        train={"lr": tc.lr, "steps": tc.steps, "pamm_lr_scale": tc.pamm_lr_scale},
+        param_spec=_param_meta(cfg),
+    )
+
+    def flat_eval(*args):
+        params = dict(zip(names, args[:P]))
+        return (eval_fn(params, args[P]),)
+
+    em.emit(
+        f"clseval_{cfg.name}_{tc.batch}x{tc.seq}",
+        flat_eval,
+        [(f"param.{n}", spec(s)) for n, s, _ in pspec]
+        + [("tokens", spec((tc.batch, tc.seq), I32))],
+        ["pred"],
+        kind="cls_eval_step",
+        config=cfg.name,
+        batch=tc.batch,
+        seq=tc.seq,
+        n_classes=cfg.n_classes,
+        param_spec=_param_meta(cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Standalone kernel artifacts (Rust cross-validates its native PAMM here)
+# ---------------------------------------------------------------------------
+
+
+def emit_kernels(em: Emitter, b: int = 1024, n: int = 128, m: int = 128, k: int = 8):
+    """Pallas kernels as loadable executables + exact twins for deltas."""
+
+    def compress_fn(a, c):
+        f, alpha = PK.pamm_compress(a, c)
+        return f, alpha, PK.beta_from_alpha(alpha)
+
+    em.emit(
+        f"k_compress_{b}x{n}_k{k}",
+        compress_fn,
+        [("a", spec((b, n))), ("c", spec((k, n)))],
+        ["f", "alpha", "beta"],
+        kind="kernel",
+        kernel="pamm_compress",
+        dims={"b": b, "n": n, "k": k},
+    )
+
+    def apply_fn(c, f, alpha, beta, bm):
+        btilde = PK.pamm_btilde(f, alpha, bm, k=k)
+        return (beta * PK.matmul(c.T, btilde),)
+
+    em.emit(
+        f"k_apply_{b}x{n}x{m}_k{k}",
+        apply_fn,
+        [
+            ("c", spec((k, n))),
+            ("f", spec((b,), I32)),
+            ("alpha", spec((b,))),
+            ("beta", spec(())),
+            ("b_mat", spec((b, m))),
+        ],
+        ["o"],
+        kind="kernel",
+        kernel="pamm_apply",
+        dims={"b": b, "n": n, "m": m, "k": k},
+    )
+
+    def pipeline_fn(a, bm, gen_idx):
+        return (PK.pamm_matmul(a, bm, gen_idx),)
+
+    em.emit(
+        f"k_pamm_mm_{b}x{n}x{m}_k{k}",
+        pipeline_fn,
+        [("a", spec((b, n))), ("b_mat", spec((b, m))), ("gen_idx", spec((k,), I32))],
+        ["o"],
+        kind="kernel",
+        kernel="pamm_matmul",
+        dims={"b": b, "n": n, "m": m, "k": k},
+    )
+
+    def exact_fn(a, bm):
+        return (a.T @ bm,)
+
+    em.emit(
+        f"k_exact_mm_{b}x{n}x{m}",
+        exact_fn,
+        [("a", spec((b, n))), ("b_mat", spec((b, m)))],
+        ["o"],
+        kind="kernel",
+        kernel="exact_matmul",
+        dims={"b": b, "n": n, "m": m},
+    )
+
+    h, l, d = 4, 128, 32
+
+    def flash_fn(q, kk, v):
+        return (FA.flash_attention(q, kk, v, causal=True),)
+
+    em.emit(
+        f"k_flash_{h}x{l}x{d}",
+        flash_fn,
+        [("q", spec((h, l, d))), ("k", spec((h, l, d))), ("v", spec((h, l, d)))],
+        ["o"],
+        kind="kernel",
+        kernel="flash_attention",
+        dims={"h": h, "l": l, "d": d},
+    )
+
+    def attn_ref_fn(q, kk, v):
+        return (RK.attention_ref(q, kk, v, causal=True),)
+
+    em.emit(
+        f"k_attn_ref_{h}x{l}x{d}",
+        attn_ref_fn,
+        [("q", spec((h, l, d))), ("k", spec((h, l, d))), ("v", spec((h, l, d)))],
+        ["o"],
+        kind="kernel",
+        kernel="attention_ref",
+        dims={"h": h, "l": l, "d": d},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+INF = float("inf")
+
+
+def preset_quick(em: Emitter) -> None:
+    """Smallest useful set — CI smoke (nano config)."""
+    cfg = M.CONFIGS["nano"]
+    tc = T.TrainConfig(batch=4, seq=64, steps=200, lr=3e-3)
+    for var in [
+        M.VariantConfig("baseline"),
+        M.VariantConfig("pamm", r=1 / 64),
+        M.VariantConfig("pamm", r=1 / 64, use_pallas=True),
+    ]:
+        emit_train_step(em, cfg, var, tc)
+    emit_eval_step(em, cfg, 4, 64)
+    emit_grad_apply_pair(em, cfg, M.VariantConfig("pamm", r=1 / 64), tc)
+    emit_kernels(em, b=512, n=64, m=64, k=8)
+
+
+def preset_full(em: Emitter) -> None:
+    """Everything the experiment harness (rust `pamm reproduce`) consumes."""
+    # --- pretraining: fig3a / t5 / fig3b measured points -------------------
+    size_tc = {
+        "tiny": T.TrainConfig(batch=8, seq=128, steps=600, lr=3e-3),
+        "small": T.TrainConfig(batch=8, seq=128, steps=500, lr=2e-3),
+        "medium": T.TrainConfig(batch=4, seq=256, steps=400, lr=1e-3),
+    }
+    for cname, tc in size_tc.items():
+        cfg = M.CONFIGS[cname]
+        for var in [
+            M.VariantConfig("baseline"),
+            M.VariantConfig("pamm", r=1 / 128),
+            M.VariantConfig("pamm", r=1 / 256),
+            M.VariantConfig("pamm", r=1 / 512),
+        ]:
+            emit_train_step(em, cfg, var, tc)
+        emit_eval_step(em, cfg, tc.batch, tc.seq)
+
+    # Pallas-composed witness at small scale (kernels inside the step).
+    emit_train_step(
+        em,
+        M.CONFIGS["tiny"],
+        M.VariantConfig("pamm", r=1 / 128, use_pallas=True),
+        size_tc["tiny"],
+    )
+
+    # DDP/grad-accum pair at tiny scale (table2a multi-worker rows).
+    emit_grad_apply_pair(em, M.CONFIGS["tiny"], M.VariantConfig("pamm", r=1 / 512), size_tc["tiny"])
+    emit_grad_apply_pair(em, M.CONFIGS["tiny"], M.VariantConfig("baseline"), size_tc["tiny"])
+
+    # --- table3: batch/seq ablation on tiny, r = 1/512 ---------------------
+    # Paper's 7 combos scaled /16 in both axes (same token-count ladder).
+    for b_, l_ in [(8, 16), (8, 64), (16, 16), (16, 32), (32, 8), (32, 16), (32, 32)]:
+        tc = T.TrainConfig(batch=b_, seq=l_, steps=300, lr=3e-3)
+        for var in [M.VariantConfig("baseline"), M.VariantConfig("pamm", r=1 / 512)]:
+            emit_train_step(em, M.CONFIGS["tiny"], var, tc)
+        emit_eval_step(em, M.CONFIGS["tiny"], b_, l_)
+
+    # --- fig4a: method comparison on tiny -----------------------------------
+    tc = size_tc["tiny"]
+    for r in [1 / 16, 1 / 64, 1 / 128, 1 / 256, 1 / 512]:
+        for mode in ["pamm", "crs", "compact"]:
+            emit_train_step(em, M.CONFIGS["tiny"], M.VariantConfig(mode, r=r), tc)
+
+    # --- fig4b: eps ablation on tiny ----------------------------------------
+    for r in [1 / 32, 1 / 128, 1 / 512]:
+        for eps in [0.0, 0.5, INF]:
+            if eps is INF:
+                continue  # pamm r sweep above already covers eps=inf for 128/512
+            emit_train_step(
+                em, M.CONFIGS["tiny"], M.VariantConfig("pamm", r=r, eps=eps), tc
+            )
+    emit_train_step(em, M.CONFIGS["tiny"], M.VariantConfig("pamm", r=1 / 32), tc)
+
+    # --- table1 / table4: finetune stand-ins --------------------------------
+    glue_cfg = M.classifier_config("tiny", n_classes=4, name="glue")
+    tc_ft = T.TrainConfig(batch=16, seq=64, steps=300, lr=1e-3, pamm_lr_scale=1.0)
+    for var in [
+        M.VariantConfig("baseline"),
+        M.VariantConfig("pamm", r=1 / 128),
+        M.VariantConfig("pamm", r=1 / 256),
+    ]:
+        emit_classifier(em, glue_cfg, var, tc_ft)
+
+    aid_cfg = M.classifier_config("small", n_classes=30, name="aid")
+    tc_aid = T.TrainConfig(batch=8, seq=64, steps=300, lr=1e-3, pamm_lr_scale=1.0)
+    for var in [
+        M.VariantConfig("baseline"),
+        M.VariantConfig("pamm", r=1 / 128),
+        M.VariantConfig("pamm", r=1 / 512),
+    ]:
+        emit_classifier(em, aid_cfg, var, tc_aid)
+
+    # --- standalone kernels (t7/t8 + rust cross-validation) -----------------
+    emit_kernels(em, b=1024, n=128, m=128, k=8)
+    emit_kernels(em, b=2048, n=256, m=256, k=4)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="full", choices=["quick", "full"])
+    args = ap.parse_args()
+    em = Emitter(args.out)
+    if args.preset == "quick":
+        preset_quick(em)
+    else:
+        preset_quick(em)
+        preset_full(em)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Blocked online-softmax attention as a Pallas kernel.
+
+This is the project's stand-in for FlashAttention-v2 (Dao, 2023): the paper
+never modifies attention internals — PAMM compresses the *inputs of the
+Q/K/V projections*, upstream of the scaled-dot-product — and this kernel is
+the composability witness: the e2e tests run PAMM projections feeding this
+kernel and assert the combined computation matches the exact reference.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): FlashAttention's CUDA
+formulation tiles over threadblocks with shared-memory staging. The TPU
+reformulation tiles the *query* dimension on the grid (one (TQ, d) block in
+VMEM per step), keeps K/V for the head resident in VMEM, and walks KV
+blocks with a ``fori_loop`` carrying the online-softmax statistics
+``(m, l, acc)`` — the HBM↔VMEM schedule is expressed by the BlockSpecs
+instead of explicit cp.async staging.
+
+Memory character matches FlashAttention: no (L, L) score matrix is ever
+materialized; peak live state per grid step is TQ·d + L·d·2 + TQ·TK floats.
+Runs under ``interpret=True`` (CPU portability — see kernels/pamm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool):
+    """One (TQ, d) query block against all KV blocks of its head."""
+    qblk = pl.program_id(1)
+
+    # Blocks carry a leading head dim of size 1 (not squeezed by Pallas).
+    q = q_ref[0]  # (TQ, d)
+    k_full = k_ref[0]  # (L, d) — head-resident in VMEM
+    v_full = v_ref[0]  # (L, d)
+    tq, d = q.shape
+    lk = k_full.shape[0]
+    scale = 1.0 / (d**0.5)
+
+    nblocks = lk // block_k
+    if causal:
+        # Blocks strictly above the diagonal contribute nothing; walking
+        # them would only add masked-out work. The last relevant block is
+        # the one containing this q block's final row.
+        nblocks = jnp.minimum(
+            nblocks, (qblk * tq + tq + block_k - 1) // block_k
+        )
+
+    q_ids = qblk * tq + jax.lax.iota(jnp.int32, tq)  # global query rows
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = jax.lax.dynamic_slice_in_dim(k_full, j * block_k, block_k)
+        v_tile = jax.lax.dynamic_slice_in_dim(v_full, j * block_k, block_k)
+
+        s = (
+            jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32) * scale
+        )  # (TQ, TK)
+        if causal:
+            k_ids = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_ids[:, None] >= k_ids[None, :]
+            s = jnp.where(mask, s, _NEG_INF)
+
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))  # (TQ,)
+        p = jnp.exp(s - m_new[:, None])  # (TQ, TK)
+        correction = jnp.exp(m_prev - m_new)  # (TQ,)
+        l_new = l_prev * correction + jnp.sum(p, axis=1)
+        acc = acc * correction[:, None] + jnp.dot(
+            p, v_tile, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    m0 = jnp.full((tq,), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((tq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((tq, d), dtype=jnp.float32)
+    _, l_fin, acc = jax.lax.fori_loop(0, nblocks, body, (m0, l0, acc0))
+
+    o_ref[0] = (acc / jnp.maximum(l_fin, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Flash attention over (h, l, d) per-head tensors.
+
+    Grid = (heads, query blocks); K/V of the active head stay VMEM-resident
+    across the inner KV walk. Matches ``ref.attention_ref`` to float32
+    tolerance (tested, including the causal path).
+    """
+    h, l, d = q.shape
+    bq = min(block_q, l)
+    while l % bq:
+        bq -= 1
+    bk = min(block_k, l)
+    while l % bk:
+        bk -= 1
+    grid = (h, l // bq)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=bk, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((1, l, d), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((1, l, d), lambda hh, qq: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, l, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,277 @@
+"""Layer-1 Pallas kernels for PAMM.
+
+Two kernels implement the paper's two stages (Algorithm 1), plus a tiled
+matmul used for the final contraction:
+
+* :func:`pamm_compress` — per-row generator assignment ``f`` and scale
+  ``alpha``. The grid tiles the token dimension ``b``; each grid step holds
+  one ``(TB, n)`` tile of ``A`` and the full ``(k, n)`` generator set in
+  VMEM and computes the ``(TB, k)`` cosine-similarity block on the MXU.
+
+* :func:`pamm_btilde` — the contraction ``B̃_j = Σ_{i: f(i)=j} α_i B_i``.
+  The paper's CUDA implementation uses ``index_add`` (a scatter). Scatters
+  serialize on a systolic array, so the TPU-shaped schedule here is a
+  **one-hot matmul**: per tile, ``B̃ += (onehot(f) ⊙ α)ᵀ · B`` — a dense
+  ``(k×TB)·(TB×m)`` MXU contraction accumulated across grid steps in the
+  output ref. This is the DESIGN.md §Hardware-Adaptation point.
+
+* :func:`matmul` — plain tiled matmul for ``Õ = β · CᵀB̃``.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to portable HLO that the
+Rust runtime loads directly (the standalone-kernel artifacts in
+``artifacts/`` are exactly these functions). Correctness is pinned to
+``kernels/ref.py`` by ``python/tests/test_pamm_kernels.py``.
+
+VMEM accounting (f32, per grid step), used by DESIGN/EXPERIMENTS §Perf:
+
+    compress: TB·n (A tile) + k·n (C) + TB·k (csim) + O(TB + k)
+    btilde:   TB·k (onehot)  + TB·m (B tile) + k·m (accumulator)
+    matmul:   TN·TK + TK·TM + TN·TM
+
+With the default TB=256 and the ``medium`` config (n=512, k ≤ 128,
+m=512) the worst case is ~1.1 MiB — comfortably inside a 16 MiB VMEM with
+room for double-buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NORM_EPS = 1e-12
+
+# Default token-dimension tile. 256 rows keeps every operand tile MXU-shaped
+# (multiples of 128 lanes) while bounding VMEM; see module docstring.
+DEFAULT_BLOCK_B = 256
+
+
+def _pick_block(total: int, preferred: int) -> int:
+    """Largest divisor of ``total`` that is <= preferred (tiles must divide)."""
+    tb = min(preferred, total)
+    while total % tb != 0:
+        tb -= 1
+    return tb
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: compress
+# ---------------------------------------------------------------------------
+
+
+def _compress_kernel(a_ref, c_ref, f_ref, alpha_ref, *, eps: float):
+    """One (TB, n) tile: csim → argmax|csim| → alpha (+ eps mask).
+
+    Uses the closed form err² = ‖A_i‖²(1 − csim²) so no reconstruction
+    tile is materialized (see ref.py docstring).
+    """
+    a = a_ref[...]  # (TB, n)
+    c = c_ref[...]  # (k, n)
+
+    # MXU contraction + row norms (lane reductions).
+    dots = jnp.dot(a, c.T, preferred_element_type=jnp.float32)  # (TB, k)
+    na = jnp.sqrt(jnp.sum(a * a, axis=1))  # (TB,)
+    nc = jnp.sqrt(jnp.sum(c * c, axis=1))  # (k,)
+    denom = jnp.maximum(na[:, None] * nc[None, :], _NORM_EPS)
+    cs = dots / denom  # (TB, k)
+
+    # Lemma 1: best generator maximizes |csim|. k fits one lane row, so this
+    # is a plain vector reduction (no tree reduction over cores needed).
+    abs_cs = jnp.abs(cs)
+    f = jnp.argmax(abs_cs, axis=1).astype(jnp.int32)  # (TB,)
+    cs_best = jnp.max(abs_cs, axis=1) * jnp.sign(
+        jnp.take_along_axis(cs, f[:, None], axis=1)[:, 0]
+    )
+
+    alpha = cs_best * na / jnp.maximum(nc[f], _NORM_EPS)
+
+    if not (eps == float("inf") or eps >= 1.0):
+        # 1e-6 slack: see ref.compress (keeps self-collinear rows at eps=0).
+        keep = cs_best**2 >= 1.0 - float(eps) ** 2 - 1e-6
+        alpha = jnp.where(keep, alpha, 0.0)
+    alpha = jnp.where(na > _NORM_EPS, alpha, 0.0)
+
+    f_ref[...] = f
+    alpha_ref[...] = alpha.astype(alpha_ref.dtype)
+
+
+def pamm_compress(
+    a: jax.Array,
+    c: jax.Array,
+    eps: float = float("inf"),
+    block_b: int = DEFAULT_BLOCK_B,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pallas PAMM compress: returns ``(f, alpha)`` for generators ``c``.
+
+    The generator *sampling* (and the β statistic, a cheap reduction over
+    alpha) live outside the kernel; this keeps the kernel a pure dense
+    stencil with static shapes.
+    """
+    b, n = a.shape
+    k = c.shape[0]
+    tb = _pick_block(b, block_b)
+    grid = (b // tb,)
+
+    f, alpha = pl.pallas_call(
+        functools.partial(_compress_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),  # stream A tiles HBM→VMEM
+            pl.BlockSpec((k, n), lambda i: (0, 0)),  # C resident in VMEM
+        ],
+        out_specs=[
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), a.dtype),
+        ],
+        interpret=True,
+    )(a, c)
+    return f, alpha
+
+
+def beta_from_alpha(alpha: jax.Array) -> jax.Array:
+    """Drop-correction ``β = b/(b−η)`` from the alpha vector (Eq. 5)."""
+    b = alpha.shape[0]
+    kept = jnp.sum((alpha != 0).astype(jnp.float32))
+    return jnp.where(kept > 0, b / jnp.maximum(kept, 1.0), 1.0).astype(alpha.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2a: B̃ accumulation (the scatter, recast as one-hot matmul)
+# ---------------------------------------------------------------------------
+
+
+def _btilde_kernel(f_ref, alpha_ref, b_ref, out_ref, *, k: int):
+    """Accumulate ``B̃ += (onehot(f)·α)ᵀ B`` for one b-tile.
+
+    The output block index map is constant, so ``out_ref`` is the same
+    (k, m) VMEM buffer across all grid steps — initialized at step 0 and
+    accumulated afterwards (standard Pallas reduction idiom).
+    """
+    step = pl.program_id(0)
+
+    f = f_ref[...]  # (TB,) int32
+    alpha = alpha_ref[...]  # (TB,)
+    b_tile = b_ref[...]  # (TB, m)
+
+    onehot = (f[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(
+        b_tile.dtype
+    ) * alpha[:, None]  # (TB, k)
+    partial = jnp.dot(onehot.T, b_tile, preferred_element_type=jnp.float32).astype(
+        out_ref.dtype
+    )  # (k, m)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(step != 0)
+    def _accum():
+        out_ref[...] += partial
+
+
+def pamm_btilde(
+    f: jax.Array,
+    alpha: jax.Array,
+    b_mat: jax.Array,
+    k: int,
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jax.Array:
+    """Pallas ``B̃`` (k, m): segment-sum of ``α_i B_i`` over assignments."""
+    b, m = b_mat.shape
+    tb = _pick_block(b, block_b)
+    grid = (b // tb,)
+
+    return pl.pallas_call(
+        functools.partial(_btilde_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, m), b_mat.dtype),
+        interpret=True,
+    )(f, alpha, b_mat)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2b: tiled matmul for Õ = β·CᵀB̃ (and general use)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, y_ref, out_ref):
+    """(TN, TK) @ (TK, TM) tile product accumulated over the K grid axis."""
+    kstep = pl.program_id(2)
+    part = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)
+
+    @pl.when(kstep == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(kstep != 0)
+    def _accum():
+        out_ref[...] += part
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    block_n: int = 128,
+    block_m: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Tiled Pallas matmul ``x @ y`` with an MXU-shaped 3-D grid."""
+    n, kdim = x.shape
+    kdim2, m = y.shape
+    assert kdim == kdim2, (x.shape, y.shape)
+    tn = _pick_block(n, block_n)
+    tm = _pick_block(m, block_m)
+    tk = _pick_block(kdim, block_k)
+    grid = (n // tn, m // tm, kdim // tk)
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tm), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline
+# ---------------------------------------------------------------------------
+
+
+def pamm_matmul(
+    a: jax.Array,
+    b_mat: jax.Array,
+    gen_idx: jax.Array,
+    eps: float = float("inf"),
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jax.Array:
+    """End-to-end Pallas PAMM approximation of ``O = AᵀB``.
+
+    Mirrors :func:`compile.kernels.ref.pamm_matmul` exactly (tested).
+    """
+    c = a[gen_idx]
+    f, alpha = pamm_compress(a, c, eps=eps, block_b=block_b)
+    beta = beta_from_alpha(alpha)
+    btilde = pamm_btilde(f, alpha, b_mat, k=c.shape[0], block_b=block_b)
+    return beta * matmul(c.T, btilde)

@@ -1,0 +1,235 @@
+"""Pure-jnp reference oracle for PAMM and the baseline compressors.
+
+This module is the *correctness ground truth* for the whole stack:
+
+* the Pallas kernels in :mod:`compile.kernels.pamm` are asserted allclose
+  against these functions in ``python/tests``;
+* the native Rust implementation (``rust/src/pamm``) is asserted against
+  HLO artifacts lowered from these functions;
+* the custom-vjp layer (:mod:`compile.pamm_layer`) calls into this module
+  (or its Pallas twins) for the compress/apply stages.
+
+Everything here follows the paper's Algorithm 1 (Appendix A) exactly, with
+one algebraic simplification used throughout the project: for the optimal
+per-row scale ``alpha(i,j) = <A_i, C_j> / ||C_j||^2`` the reconstruction
+error collapses to
+
+    ||A_i - alpha * C_j||^2 = ||A_i||^2 * (1 - csim(A_i, C_j)^2)
+
+so the neighborhood condition ``err <= eps * ||A_i||`` is equivalent to
+``csim^2 >= 1 - eps^2`` — no reconstruction is ever materialized. This is
+also the form the Pallas kernel uses (it avoids a (TB, n) temporary in
+VMEM).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Epsilon used to guard divisions by (near-)zero row norms. Rows that are
+# exactly zero get csim = 0 against every generator and are dropped by the
+# neighborhood condition (alpha = 0), which matches the paper: a zero row
+# contributes nothing to A^T B anyway.
+_NORM_EPS = 1e-12
+
+# Sentinel meaning "no neighborhood condition" (paper: eps = infinity).
+EPS_INF = float("inf")
+
+
+class PammCompressed(NamedTuple):
+    """Compressed representation of a (b, n) activation matrix.
+
+    Attributes:
+      generators: ``C`` with shape (k, n) — sampled rows of ``A``.
+      assign: ``f`` with shape (b,), int32 in [0, k) — generator index per row.
+      alpha:  shape (b,) float32 — per-row scale; 0 marks a dropped row.
+      beta:   scalar float32 — drop-correction factor ``b / (b - eta)``.
+    """
+
+    generators: jax.Array
+    assign: jax.Array
+    alpha: jax.Array
+    beta: jax.Array
+
+    @property
+    def k(self) -> int:
+        return self.generators.shape[0]
+
+
+def sample_generator_indices(key: jax.Array, b: int, k: int) -> jax.Array:
+    """Sample ``k`` distinct row indices from ``[0, b)`` (uniform, no repl.).
+
+    Uses ``jax.random.permutation`` — O(b) but traced once; the paper's
+    Appendix F measures index selection at <1% of forward time, and the
+    same holds here (see EXPERIMENTS.md table7).
+    """
+    return jax.random.permutation(key, b)[:k].astype(jnp.int32)
+
+
+def csim_matrix(a: jax.Array, c: jax.Array) -> jax.Array:
+    """Row-wise cosine similarity matrix csim(A, C) ∈ R^{b×k}."""
+    na = jnp.linalg.norm(a, axis=1, keepdims=True)  # (b, 1)
+    nc = jnp.linalg.norm(c, axis=1, keepdims=True)  # (k, 1)
+    dots = a @ c.T  # (b, k)
+    return dots / jnp.maximum(na * nc.T, _NORM_EPS)
+
+
+def compress(
+    a: jax.Array,
+    gen_idx: jax.Array,
+    eps: float = EPS_INF,
+) -> PammCompressed:
+    """Stage 1 of PAMM (Algorithm 1, ``Compress``).
+
+    Args:
+      a: activation matrix ``A`` of shape (b, n).
+      gen_idx: int32 (k,) indices into rows of ``a`` (the generating set).
+        Sampling is done by the caller so the function stays functional and
+        shape-static for AOT lowering.
+      eps: neighborhood tolerance. ``EPS_INF`` disables the condition
+        (the paper's best-performing setting); ``0`` keeps only rows that
+        are exactly collinear with a generator (Uniform-CRS-like).
+
+    Returns:
+      A :class:`PammCompressed` tuple ``(C, f, alpha, beta)``.
+    """
+    b = a.shape[0]
+    c = a[gen_idx]  # (k, n)
+    cs = csim_matrix(a, c)  # (b, k)
+
+    # Lemma 1: the best generator maximizes |csim|.
+    abs_cs = jnp.abs(cs)
+    f = jnp.argmax(abs_cs, axis=1).astype(jnp.int32)  # (b,)
+    cs_best = jnp.take_along_axis(cs, f[:, None].astype(jnp.int32), axis=1)[:, 0]
+
+    na = jnp.linalg.norm(a, axis=1)  # (b,)
+    nc = jnp.linalg.norm(c, axis=1)  # (k,)
+    alpha = cs_best * na / jnp.maximum(nc[f], _NORM_EPS)  # (b,)
+
+    # Neighborhood condition via the csim^2 >= 1 - eps^2 equivalence.
+    # eps >= 1 keeps every row (err <= ||A_i|| always holds at the optimum).
+    if eps == EPS_INF or eps >= 1.0:
+        keep = jnp.ones((b,), dtype=bool)
+    else:
+        # 1e-6 slack so exactly-collinear rows (csim = 1 up to float
+        # rounding) survive eps = 0 — mirrored in the Pallas kernel and
+        # the native Rust twin.
+        keep = cs_best**2 >= 1.0 - float(eps) ** 2 - 1e-6
+    # Rows with (near-)zero norm carry no signal; treat as dropped.
+    keep = keep & (na > _NORM_EPS)
+    alpha = jnp.where(keep, alpha, 0.0)
+
+    # beta = b / (b - eta); if everything was dropped the estimate is the
+    # zero matrix and beta's value is irrelevant — guard the division.
+    kept = jnp.sum(keep.astype(jnp.float32))
+    beta = jnp.where(kept > 0, b / jnp.maximum(kept, 1.0), 1.0)
+    return PammCompressed(c, f, alpha.astype(a.dtype), beta.astype(a.dtype))
+
+
+def apply_compressed(comp: PammCompressed, b_mat: jax.Array) -> jax.Array:
+    """Stage 2 of PAMM (Algorithm 1, ``ApproxMM``): ``Õ ≈ βCᵀB̃``.
+
+    ``B̃_j = Σ_{i: f(i)=j} α_i B_i`` is a segment-sum over the assignment,
+    computed here with ``segment_sum`` (the Rust and Pallas twins use an
+    index-accumulate and a one-hot matmul respectively — all three agree to
+    float tolerance, asserted in tests).
+    """
+    k = comp.k
+    weighted = comp.alpha[:, None] * b_mat  # (b, m)
+    btilde = jax.ops.segment_sum(weighted, comp.assign, num_segments=k)  # (k, m)
+    return comp.beta * (comp.generators.T @ btilde)  # (n, m)
+
+
+def reconstruct(comp: PammCompressed) -> jax.Array:
+    """Materialize Ã (Eq. 3) — test/analysis helper, never on hot paths."""
+    return comp.alpha[:, None] * comp.generators[comp.assign]
+
+
+def pamm_matmul(
+    a: jax.Array,
+    b_mat: jax.Array,
+    gen_idx: jax.Array,
+    eps: float = EPS_INF,
+) -> jax.Array:
+    """End-to-end PAMM approximation of ``O = AᵀB``."""
+    return apply_compressed(compress(a, gen_idx, eps), b_mat)
+
+
+def coverage(comp: PammCompressed) -> jax.Array:
+    """Fraction of rows with a surviving representative (Fig. 7 metric)."""
+    return jnp.mean((comp.alpha != 0).astype(jnp.float32))
+
+
+def relative_l2_error(o_exact: jax.Array, o_approx: jax.Array) -> jax.Array:
+    """``E(r, eps)`` from Appendix H (Fig. 6 metric)."""
+    return jnp.linalg.norm(o_exact - o_approx) / jnp.maximum(
+        jnp.linalg.norm(o_exact), _NORM_EPS
+    )
+
+
+# ---------------------------------------------------------------------------
+# Baseline compressors (Section 4.6)
+# ---------------------------------------------------------------------------
+
+
+def uniform_crs_matmul(
+    a: jax.Array, b_mat: jax.Array, gen_idx: jax.Array
+) -> jax.Array:
+    """Uniform Column-Row Sampling: keep only the sampled row pairs.
+
+    Equivalent to PAMM with eps = 0 in the paper's framing: the only rows
+    that survive an exact-collinearity test are the generators themselves
+    (alpha = 1), and the β correction becomes b/k.
+    """
+    b = a.shape[0]
+    k = gen_idx.shape[0]
+    beta = b / k
+    return beta * (a[gen_idx].T @ b_mat[gen_idx])
+
+
+def compact_sketch(a: jax.Array, key: jax.Array, k: int) -> jax.Array:
+    """CompAct's stored activation: the Gaussian sketch ``X̃ = XP``.
+
+    ``P ∈ R^{n×k}`` has iid N(0, 1/k) entries so that ``E[PPᵀ] = I_n`` and
+    the reconstruction ``X̂ = X̃Pᵀ`` (hence the gradient estimate) is
+    unbiased. Only ``X̃`` (b×k) plus the PRNG key are stored; P is
+    regenerated in the backward pass.
+    """
+    n = a.shape[1]
+    p = jax.random.normal(key, (n, k), dtype=a.dtype) / jnp.sqrt(
+        jnp.asarray(k, a.dtype)
+    )
+    return a @ p
+
+
+def compact_matmul(
+    sketch: jax.Array, b_mat: jax.Array, key: jax.Array, n: int
+) -> jax.Array:
+    """CompAct gradient estimate ``Õ = P(X̃ᵀ B)`` (regenerates P from key)."""
+    k = sketch.shape[1]
+    p = jax.random.normal(key, (n, k), dtype=sketch.dtype) / jnp.sqrt(
+        jnp.asarray(k, sketch.dtype)
+    )
+    return p @ (sketch.T @ b_mat)
+
+
+# ---------------------------------------------------------------------------
+# Reference attention (the "exact softmax" oracle for the flash kernel)
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    """Exact scaled-dot-product attention over (..., l, d) tensors."""
+    d = q.shape[-1]
+    scores = q @ jnp.swapaxes(k, -1, -2) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        l = q.shape[-2]
+        mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs @ v

@@ -1,0 +1,291 @@
+"""Layer-2 model zoo: LLaMA-family decoder LM + encoder classifier.
+
+Architecture follows Touvron et al. (2023): RMSNorm (pre-norm), rotary
+position embeddings, SwiGLU FFN, untied input/output embeddings, causal
+multi-head attention. The Q/K/V projections route through
+:func:`compile.pamm_layer.project`, which is where the paper's technique
+plugs in; the output projection and the FFN are left untouched (paper
+Appendix D.1 explains why the output projection is excluded).
+
+Transformer blocks are evaluated with ``lax.scan`` over **stacked** layer
+parameters — one (n_layers, …) array per weight kind. This keeps the
+lowered HLO size and PJRT compile time independent of depth, and gives the
+Rust runtime a fixed, small set of I/O tensors per config.
+
+Config zoo: ``tiny``/``small``/``medium`` are CPU-trainable; the paper's
+``llama60m``…``llama7b`` entries exist for the analytic memory/FLOP
+accountant (rust/src/memory mirrors `param_count`/`qkv_activation_bytes`
+below — cross-checked in tests) and for anyone re-running on an
+accelerator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import pamm_layer
+from compile.kernels import ref as ref_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (hashable → usable as jit static)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int = 1024
+    # Encoder-classifier extras (GLUE / AID stand-ins); None → decoder LM.
+    n_classes: Optional[int] = None
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Exact trainable-parameter count (mirrored by rust/src/memory)."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        head = d * v if self.n_classes is None else d * (self.n_classes or 0)
+        return v * d + l * per_layer + d + head
+
+    def qkv_activation_bytes(self, batch: int, seq: int, bytes_per: int = 4) -> int:
+        """Bytes saved-for-backward by the Q/K/V projections, full baseline.
+
+        One shared input tensor per attention block (Q, K and V read the
+        same RMSNorm output; a framework stores that storage once), times
+        n_layers. This is the quantity Fig. 3b / Table 5 track.
+        """
+        return self.n_layers * batch * seq * self.d_model * bytes_per
+
+    def pamm_activation_bytes(
+        self, batch: int, seq: int, r: float, bytes_per: int = 4
+    ) -> int:
+        """PAMM replacement cost, per projection (×3 per block): each of
+        Q/K/V's custom backward saves its own C (k×n) + α (b) + f (b, i32)
+        + β. Mirrored by rust/src/memory (see its module docs for why the
+        baseline counts 1× but PAMM 3×)."""
+        b = batch * seq
+        k = max(1, math.ceil(r * b))
+        per_proj = k * self.d_model * bytes_per + b * bytes_per + b * 4 + 4
+        return self.n_layers * 3 * per_proj
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantConfig:
+    """Which compression runs in the Q/K/V backward (paper §4.6 axes)."""
+
+    mode: str = "baseline"  # baseline | pamm | crs | compact
+    r: float = 1.0 / 512.0
+    eps: float = float("inf")
+    use_pallas: bool = False
+
+    def k_for(self, b_tokens: int) -> int:
+        return max(1, math.ceil(self.r * b_tokens))
+
+
+CONFIGS: Dict[str, ModelConfig] = {
+    # CPU-trainable scales (runnable end to end through PJRT).
+    "nano": ModelConfig("nano", vocab=256, d_model=64, n_layers=2, n_heads=2, d_ff=176),
+    "tiny": ModelConfig("tiny", vocab=512, d_model=128, n_layers=4, n_heads=4, d_ff=344),
+    "small": ModelConfig("small", vocab=1024, d_model=256, n_layers=6, n_heads=8, d_ff=688),
+    "medium": ModelConfig("medium", vocab=2048, d_model=512, n_layers=8, n_heads=8, d_ff=1376),
+    # Paper scales — analytic accounting + accelerator targets.
+    "llama60m": ModelConfig("llama60m", vocab=32000, d_model=512, n_layers=8, n_heads=8, d_ff=1376),
+    "llama350m": ModelConfig("llama350m", vocab=32000, d_model=1024, n_layers=24, n_heads=16, d_ff=2736),
+    "llama1b": ModelConfig("llama1b", vocab=32000, d_model=2048, n_layers=24, n_heads=32, d_ff=5461),
+    "llama7b": ModelConfig("llama7b", vocab=32000, d_model=4096, n_layers=32, n_heads=32, d_ff=11008),
+}
+
+
+def classifier_config(base: str, n_classes: int, name: Optional[str] = None) -> ModelConfig:
+    """Derive an encoder-classifier config from a decoder entry."""
+    cfg = CONFIGS[base]
+    return dataclasses.replace(
+        cfg, name=name or f"{base}-cls{n_classes}", n_classes=n_classes
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec / init
+# ---------------------------------------------------------------------------
+
+INIT_STD = 0.02
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], float]]:
+    """Canonical ordered (name, shape, init_std) list.
+
+    The order here *is* the AOT calling convention: aot.py flattens
+    params/m/v in this order and records it in manifest.json; the Rust
+    runtime initializes and feeds buffers in the same order.
+    """
+    d, f, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+    out_dim = cfg.n_classes if cfg.n_classes is not None else cfg.vocab
+    resid_std = INIT_STD / math.sqrt(2 * l)  # GPT-2-style residual scaling
+    return [
+        ("embed", (cfg.vocab, d), INIT_STD),
+        ("attn_norm", (l, d), -1.0),  # std<0 → init to ones
+        ("wq", (l, d, d), INIT_STD),
+        ("wk", (l, d, d), INIT_STD),
+        ("wv", (l, d, d), INIT_STD),
+        ("wo", (l, d, d), resid_std),
+        ("ffn_norm", (l, d), -1.0),
+        ("w_gate", (l, d, f), INIT_STD),
+        ("w_up", (l, d, f), INIT_STD),
+        ("w_down", (l, f, d), resid_std),
+        ("final_norm", (d,), -1.0),
+        ("head", (d, out_dim), INIT_STD),
+    ]
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    """Gaussian init matching the spec (Rust mirrors this via manifest)."""
+    params = {}
+    for i, (name, shape, std) in enumerate(param_spec(cfg)):
+        sub = jax.random.fold_in(key, i)
+        if std < 0:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope_tables(seq: int, head_dim: int) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables, (seq, head_dim/2), base 10000 (LLaMA convention)."""
+    half = head_dim // 2
+    freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    ang = jnp.outer(t, freq)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs; x is (..., seq, head_dim)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v):
+    """Exact causal attention (B, H, L, hd) — differentiable oracle.
+
+    The Pallas flash kernel (kernels/flash_attention.py) implements the
+    same computation for the inference/serving artifacts; training uses the
+    exact form so autodiff derives the attention backward. PAMM is
+    orthogonal to this choice by construction (it only wraps projections).
+    """
+    bsz, h, l, hd = q.shape
+    qf = q.reshape(bsz * h, l, hd)
+    kf = k.reshape(bsz * h, l, hd)
+    vf = v.reshape(bsz * h, l, hd)
+    of = ref_k.attention_ref(qf, kf, vf, causal=True)
+    return of.reshape(bsz, h, l, hd)
+
+
+def _block(x, layer_params, cfg: ModelConfig, var: VariantConfig, layer_key, causal=True):
+    """One pre-norm transformer block; x is (B, L, d)."""
+    (attn_norm, wq, wk, wv, wo, ffn_norm, w_gate, w_up, w_down) = layer_params
+    bsz, l, d = x.shape
+    b_tokens = bsz * l
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    # --- attention sub-block ------------------------------------------------
+    xn = rmsnorm(x, attn_norm)
+    xf = xn.reshape(b_tokens, d)
+
+    gen_key, compact_key = jax.random.split(layer_key)
+    k_gen = var.k_for(b_tokens)
+    gen_idx = ref_k.sample_generator_indices(gen_key, b_tokens, k_gen)
+
+    q = pamm_layer.project(xf, wq, var.mode, gen_idx, var.eps, compact_key, k_gen, var.use_pallas)
+    k = pamm_layer.project(xf, wk, var.mode, gen_idx, var.eps, compact_key, k_gen, var.use_pallas)
+    v = pamm_layer.project(xf, wv, var.mode, gen_idx, var.eps, compact_key, k_gen, var.use_pallas)
+
+    def heads(t):
+        return t.reshape(bsz, l, h, hd).transpose(0, 2, 1, 3)  # (B, H, L, hd)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    cos, sin = rope_tables(l, hd)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+    if causal:
+        attn = _attention(q, k, v)
+    else:
+        qf = q.reshape(bsz * h, l, hd)
+        kf = k.reshape(bsz * h, l, hd)
+        vf = v.reshape(bsz * h, l, hd)
+        attn = ref_k.attention_ref(qf, kf, vf, causal=False).reshape(bsz, h, l, hd)
+    attn = attn.transpose(0, 2, 1, 3).reshape(bsz, l, d)
+    x = x + attn @ wo  # output projection stays full-memory (App. D.1)
+
+    # --- SwiGLU FFN ----------------------------------------------------------
+    xn = rmsnorm(x, ffn_norm)
+    gated = jax.nn.silu(xn @ w_gate) * (xn @ w_up)
+    return x + gated @ w_down
+
+
+def forward(
+    params: Dict[str, jax.Array],
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    var: VariantConfig,
+    seed: jax.Array,
+    step: jax.Array,
+    causal: bool = True,
+) -> jax.Array:
+    """Token ids (B, L) → logits (B, L, vocab|n_classes-head input).
+
+    ``seed``/``step`` are traced int32 scalars; each (step, layer) pair gets
+    an independent generator sample, mirroring the paper's per-step
+    resampling (Appendix F found generator reuse hurt quality).
+    """
+    x = params["embed"][tokens]  # (B, L, d)
+
+    base_key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    step_key = jax.random.fold_in(base_key, step)
+
+    stacked = tuple(
+        params[n]
+        for n in ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down")
+    )
+
+    def scan_body(carry, inp):
+        x, layer_ix = carry
+        layer_params = inp
+        layer_key = jax.random.fold_in(step_key, layer_ix)
+        x = _block(x, layer_params, cfg, var, layer_key, causal=causal)
+        return (x, layer_ix + 1), None
+
+    (x, _), _ = jax.lax.scan(scan_body, (x, jnp.int32(0)), stacked)
+    return rmsnorm(x, params["final_norm"])
+
+
+def lm_logits(params, tokens, cfg, var, seed, step):
+    h = forward(params, tokens, cfg, var, seed, step, causal=True)
+    return h @ params["head"]  # (B, L, vocab)
+
+
+def classifier_logits(params, tokens, cfg, var, seed, step):
+    """Mean-pooled bidirectional encoder → class logits (GLUE/AID path)."""
+    h = forward(params, tokens, cfg, var, seed, step, causal=False)
+    pooled = jnp.mean(h, axis=1)  # (B, d)
+    return pooled @ params["head"]  # (B, n_classes)

@@ -1,0 +1,209 @@
+"""Linear-projection layers with compressed saved activations.
+
+Each variant is a ``jax.custom_vjp`` whose *forward output is exactly*
+``x @ w`` — the compression only changes what is saved for backward and how
+``∇W`` is estimated. ``∇X = ∇Z·Wᵀ`` is always exact (W is a parameter and
+is stored regardless), matching the paper's key design point: the forward
+pass and the gradients flowing to other layers are untouched.
+
+Variants (Section 4.6 of the paper):
+
+* :func:`pamm_linear`    — PAMM (this paper). Saves ``(C, f, α, β)``.
+* :func:`crs_linear`     — Uniform-CRS (= PAMM with ε = 0). Saves sampled
+  row pairs only.
+* :func:`compact_linear` — CompAct (Shamshoum et al., 2025). Saves the
+  Gaussian sketch ``X̃ = XP``.
+* plain ``x @ w``        — the full-memory baseline (autodiff saves X).
+
+Because the backward estimators live inside ``custom_vjp``, JAX never
+differentiates *through* the Pallas kernels — so both the jnp reference and
+the interpret-mode Pallas implementations are usable inside a jitted,
+AOT-lowered training step (``use_pallas=True`` selects the kernels).
+
+A note on memory under XLA AOT: unlike eager PyTorch, XLA decides buffer
+lifetimes itself; the custom_vjp structure guarantees the *semantic*
+residual set is {C, f, α, β} (O(kn + 2b)) instead of X (O(bn)), which is
+what the Rust memory accountant (rust/src/memory) scores, and on a real
+accelerator is what the compiler's liveness analysis materializes between
+forward and backward of each layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import pamm as pamm_k
+from compile.kernels import ref as ref_k
+
+
+def _int_zero_tangent(x: jax.Array):
+    """Cotangent for integer-valued primal inputs (jax wants float0)."""
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# PAMM
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def pamm_linear(
+    x: jax.Array,
+    w: jax.Array,
+    gen_idx: jax.Array,
+    eps: float = float("inf"),
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Linear layer ``x @ w`` whose backward uses PAMM for ``∇W``.
+
+    Args:
+      x: (b, n) flattened token activations (b = B·L).
+      w: (n, m) projection weight.
+      gen_idx: (k,) int32 sampled generator row indices (caller-sampled so
+        the function stays deterministic & shape-static for AOT).
+      eps: neighborhood tolerance (∞ disables, the paper's best setting).
+      use_pallas: route compress/apply through the L1 Pallas kernels.
+    """
+    return x @ w
+
+
+def _pamm_fwd(x, w, gen_idx, eps, use_pallas):
+    z = x @ w
+    if use_pallas:
+        c = x[gen_idx]
+        f, alpha = pamm_k.pamm_compress(x, c, eps=eps)
+        beta = pamm_k.beta_from_alpha(alpha)
+        comp = ref_k.PammCompressed(c, f, alpha, beta)
+    else:
+        comp = ref_k.compress(x, gen_idx, eps)
+    # Residuals: the compressed representation instead of x — this is the
+    # entire memory story of the paper (O(kn + 2b) vs O(bn)).
+    return z, (comp, w, gen_idx)
+
+
+def _pamm_bwd(eps, use_pallas, res, dz):
+    comp, w, gen_idx = res
+    if use_pallas:
+        btilde = pamm_k.pamm_btilde(
+            comp.assign, comp.alpha, dz, k=comp.generators.shape[0]
+        )
+        dw = comp.beta * pamm_k.matmul(comp.generators.T, btilde)
+    else:
+        dw = ref_k.apply_compressed(comp, dz)
+    dx = dz @ w.T  # exact input gradient
+    return dx, dw, _int_zero_tangent(gen_idx)
+
+
+pamm_linear.defvjp(_pamm_fwd, _pamm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Uniform-CRS (PAMM with eps = 0)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def crs_linear(x: jax.Array, w: jax.Array, gen_idx: jax.Array) -> jax.Array:
+    """Linear layer with Uniform Column-Row-Sampling backward."""
+    return x @ w
+
+
+def _crs_fwd(x, w, gen_idx):
+    # Saves only the k sampled rows of x (and the index list).
+    return x @ w, (x[gen_idx], w, gen_idx, x.shape[0])
+
+
+def _crs_bwd(res, dz):
+    c, w, gen_idx, b = res
+    k = gen_idx.shape[0]
+    dw = (b / k) * (c.T @ dz[gen_idx])
+    dx = dz @ w.T
+    return dx, dw, _int_zero_tangent(gen_idx)
+
+
+crs_linear.defvjp(_crs_fwd, _crs_bwd)
+
+
+# ---------------------------------------------------------------------------
+# CompAct (Gaussian sketch baseline)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def compact_linear(
+    x: jax.Array, w: jax.Array, key: jax.Array, k: int
+) -> jax.Array:
+    """Linear layer with CompAct's sketched backward (X̃ = XP stored)."""
+    return x @ w
+
+
+def _compact_fwd(x, w, key, k):
+    sketch = ref_k.compact_sketch(x, key, k)
+    return x @ w, (sketch, w, key, x.shape[1])
+
+
+def _compact_bwd(k, res, dz):
+    sketch, w, key, n = res
+    dw = ref_k.compact_matmul(sketch, dz, key, n)
+    dx = dz @ w.T
+    return dx, dw, _int_zero_tangent(key)
+
+
+compact_linear.defvjp(_compact_fwd, _compact_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Variant dispatch + LoRA composition (Section 4.7)
+# ---------------------------------------------------------------------------
+
+
+def project(
+    x: jax.Array,
+    w: jax.Array,
+    mode: str,
+    gen_idx: jax.Array,
+    eps: float,
+    compact_key: jax.Array,
+    compact_k: int,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Uniform entry point used by the model for every Q/K/V projection.
+
+    The three projections of one attention block share a single ``gen_idx``
+    — the compression of their (shared) input is identical across the
+    three custom-vjp instances, so XLA CSE folds it into one compress.
+    """
+    if mode == "baseline":
+        return x @ w
+    if mode == "pamm":
+        return pamm_linear(x, w, gen_idx, eps, use_pallas)
+    if mode == "crs":
+        return crs_linear(x, w, gen_idx)
+    if mode == "compact":
+        return compact_linear(x, w, compact_key, compact_k)
+    raise ValueError(f"unknown compression mode: {mode}")
+
+
+def lora_pamm_linear(
+    x: jax.Array,
+    w0: jax.Array,
+    lora_a: jax.Array,
+    lora_b: jax.Array,
+    gen_idx: jax.Array,
+    eps: float = float("inf"),
+    scaling: float = 1.0,
+) -> jax.Array:
+    """LoRA(x) = x·W₀ + s · (x·A)·B with PAMM on the A-adapter's input.
+
+    W₀ is frozen (wrapped in stop_gradient); PAMM compresses x for ∇A —
+    exactly the §4.7 configuration. Compressing for ∇B would save little
+    (its input x·A is (b, rank), already tiny), matching the paper's note.
+    """
+    frozen = x @ jax.lax.stop_gradient(w0)
+    adapted = pamm_linear(x, lora_a, gen_idx, eps, False) @ lora_b
+    return frozen + scaling * adapted

@@ -1,0 +1,238 @@
+"""Layer-2 training step: loss, AdamW, LR schedule — all AOT-lowerable.
+
+``make_train_step`` produces the *single* jitted function the Rust
+coordinator drives: ``(params…, m…, v…, step, tokens, seed) →
+(loss, params…, m…, v…)``. Everything — forward, PAMM-compressed backward,
+optimizer update, schedule — is one HLO module, so the request path never
+leaves the PJRT executable.
+
+Optimizer protocol (paper Appendix D): AdamW; base LR η tuned per size;
+PAMM-compressed weights (wq/wk/wv) train with the reduced rate η̃ = α·η
+(α = 0.25) for stability; linear warmup over the first 10% of steps, then
+cosine decay to 10% of peak.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as model_lib
+
+Params = Dict[str, jax.Array]
+
+# Weights whose gradient is PAMM-estimated → reduced LR (paper's α·η).
+_COMPRESSED = ("wq", "wk", "wv")
+# 1-D norm gains are excluded from weight decay (standard practice).
+_NO_DECAY_SUFFIX = ("attn_norm", "ffn_norm", "final_norm")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Hyper-parameters baked into the AOT artifact."""
+
+    batch: int = 8
+    seq: int = 128
+    steps: int = 400
+    lr: float = 3e-3
+    pamm_lr_scale: float = 0.25  # the paper's α
+    warmup_frac: float = 0.10
+    final_lr_frac: float = 0.10
+    beta1: float = 0.9
+    beta2: float = 0.999
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+def lr_at(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    """Warmup → cosine schedule (paper Appendix D), as traced arithmetic."""
+    warm = jnp.maximum(1.0, tc.warmup_frac * tc.steps)
+    total = float(tc.steps)
+    s = step.astype(jnp.float32)
+    warm_lr = tc.lr * (s + 1.0) / warm
+    prog = jnp.clip((s - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    cos = tc.final_lr_frac + (1.0 - tc.final_lr_frac) * 0.5 * (
+        1.0 + jnp.cos(jnp.pi * prog)
+    )
+    return jnp.where(s < warm, warm_lr, tc.lr * cos)
+
+
+def lm_loss(
+    params: Params,
+    tokens: jax.Array,
+    cfg: model_lib.ModelConfig,
+    var: model_lib.VariantConfig,
+    seed: jax.Array,
+    step: jax.Array,
+) -> jax.Array:
+    """Next-token cross-entropy (mean nats/token); ppl = exp(loss)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = model_lib.lm_logits(params, inp, cfg, var, seed, step)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def classifier_loss(
+    params: Params,
+    tokens: jax.Array,
+    labels: jax.Array,
+    cfg: model_lib.ModelConfig,
+    var: model_lib.VariantConfig,
+    seed: jax.Array,
+    step: jax.Array,
+) -> jax.Array:
+    logits = model_lib.classifier_logits(params, tokens, cfg, var, seed, step)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def _adamw_update(
+    params: Params,
+    grads: Params,
+    m: Params,
+    v: Params,
+    step: jax.Array,
+    tc: TrainConfig,
+    compressed_active: bool,
+) -> Tuple[Params, Params, Params]:
+    """Manual AdamW with per-tensor LR scale and selective weight decay."""
+    lr = lr_at(tc, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - tc.beta1**t
+    bc2 = 1.0 - tc.beta2**t
+
+    # Global-norm gradient clipping (stability at tiny batch sizes).
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads.values())
+    )
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    new_p, new_m, new_v = {}, {}, {}
+    for name, p in params.items():
+        g = grads[name] * clip
+        m_n = tc.beta1 * m[name] + (1.0 - tc.beta1) * g
+        v_n = tc.beta2 * v[name] + (1.0 - tc.beta2) * g * g
+        mh = m_n / bc1
+        vh = v_n / bc2
+        scale = tc.pamm_lr_scale if (compressed_active and name in _COMPRESSED) else 1.0
+        upd = scale * lr * mh / (jnp.sqrt(vh) + tc.adam_eps)
+        if tc.weight_decay > 0.0 and p.ndim >= 2 and not name.endswith(_NO_DECAY_SUFFIX):
+            upd = upd + scale * lr * tc.weight_decay * p
+        new_p[name] = p - upd
+        new_m[name] = m_n
+        new_v[name] = v_n
+    return new_p, new_m, new_v
+
+
+def make_train_step(
+    cfg: model_lib.ModelConfig,
+    var: model_lib.VariantConfig,
+    tc: TrainConfig,
+) -> Callable:
+    """Decoder-LM training step (the artifact body for `train_step_*`)."""
+
+    compressed_active = var.mode != "baseline"
+
+    def train_step(params: Params, m: Params, v: Params, step, tokens, seed):
+        loss, grads = jax.value_and_grad(lm_loss)(
+            params, tokens, cfg, var, seed, step
+        )
+        new_p, new_m, new_v = _adamw_update(
+            params, grads, m, v, step, tc, compressed_active
+        )
+        return loss, new_p, new_m, new_v
+
+    return train_step
+
+
+def make_grad_step(
+    cfg: model_lib.ModelConfig,
+    var: model_lib.VariantConfig,
+    tc: TrainConfig,
+) -> Callable:
+    """Gradient-only step for the DDP/grad-accum coordinator path.
+
+    Returns *raw* (unclipped) gradients: clipping by global norm must
+    happen after the coordinator's all-reduce (correct DDP semantics),
+    i.e. inside the apply artifact.
+    """
+
+    def grad_step(params: Params, step, tokens, seed):
+        loss, grads = jax.value_and_grad(lm_loss)(
+            params, tokens, cfg, var, seed, step
+        )
+        return loss, grads
+
+    return grad_step
+
+
+def make_apply_step(
+    cfg: model_lib.ModelConfig,
+    var: model_lib.VariantConfig,
+    tc: TrainConfig,
+) -> Callable:
+    """Optimizer-apply step: consumes all-reduced gradients."""
+    del cfg
+    compressed_active = var.mode != "baseline"
+
+    def apply_step(params: Params, m: Params, v: Params, grads: Params, step):
+        return _adamw_update(params, grads, m, v, step, tc, compressed_active)
+
+    return apply_step
+
+
+def make_eval_step(cfg: model_lib.ModelConfig) -> Callable:
+    """Loss-only forward (baseline variant — eval never compresses)."""
+
+    var = model_lib.VariantConfig(mode="baseline")
+
+    def eval_step(params: Params, tokens):
+        return lm_loss(params, tokens, cfg, var, jnp.int32(0), jnp.int32(0))
+
+    return eval_step
+
+
+def make_classifier_train_step(
+    cfg: model_lib.ModelConfig,
+    var: model_lib.VariantConfig,
+    tc: TrainConfig,
+) -> Callable:
+    """Finetune step for the GLUE/AID stand-ins (labels as extra input)."""
+
+    compressed_active = var.mode != "baseline"
+
+    def train_step(params: Params, m: Params, v: Params, step, tokens, labels, seed):
+        loss, grads = jax.value_and_grad(classifier_loss)(
+            params, tokens, labels, cfg, var, seed, step
+        )
+        new_p, new_m, new_v = _adamw_update(
+            params, grads, m, v, step, tc, compressed_active
+        )
+        return loss, new_p, new_m, new_v
+
+    return train_step
+
+
+def make_classifier_eval_step(cfg: model_lib.ModelConfig) -> Callable:
+    """Returns per-example predicted class ids (metrics live in Rust)."""
+
+    var = model_lib.VariantConfig(mode="baseline")
+
+    def eval_step(params: Params, tokens):
+        logits = model_lib.classifier_logits(
+            params, tokens, cfg, var, jnp.int32(0), jnp.int32(0)
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return eval_step
+
+
+def init_opt_state(params: Params) -> Tuple[Params, Params]:
+    zeros = {k: jnp.zeros_like(p) for k, p in params.items()}
+    return zeros, {k: jnp.zeros_like(p) for k, p in params.items()}

@@ -1,0 +1,67 @@
+"""Flash-attention Pallas kernel vs exact softmax attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import flash_attention as FA
+from compile.kernels import ref as RK
+
+
+def _qkv(h, l, d, seed=0, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    return tuple(scale * jax.random.normal(k, (h, l, d), jnp.float32) for k in ks)
+
+
+SHAPES = [
+    (1, 64, 16),
+    (4, 128, 32),
+    (2, 256, 64),
+    (8, 64, 8),
+]
+
+
+@pytest.mark.parametrize("h,l,d", SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_matches_exact(h, l, d, causal):
+    q, k, v = _qkv(h, l, d, seed=h * 100 + l)
+    out = FA.flash_attention(q, k, v, causal=causal)
+    ref = RK.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (64, 32), (128, 128)])
+def test_block_size_invariance(bq, bk):
+    q, k, v = _qkv(2, 128, 16, seed=7)
+    base = RK.attention_ref(q, k, v, causal=True)
+    out = FA.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(out, base, rtol=2e-4, atol=2e-4)
+
+
+def test_numerically_stable_large_logits():
+    """Online softmax must survive logits that overflow naive exp."""
+    q, k, v = _qkv(1, 64, 16, seed=11, scale=30.0)
+    out = FA.flash_attention(q, k, v, causal=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    ref = RK.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+
+def test_causal_first_row_is_v0():
+    """Row 0 of causal attention can only attend to itself."""
+    q, k, v = _qkv(1, 32, 8, seed=13)
+    out = FA.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_causality_no_future_leak():
+    """Perturbing future K/V must not change earlier outputs."""
+    q, k, v = _qkv(1, 64, 16, seed=17)
+    out1 = FA.flash_attention(q, k, v, causal=True)
+    k2 = k.at[:, 48:, :].add(5.0)
+    v2 = v.at[:, 48:, :].add(-3.0)
+    out2 = FA.flash_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(out1[:, :48], out2[:, :48], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(out1[:, 48:], out2[:, 48:])

@@ -1,0 +1,165 @@
+"""L2 model + training step: shapes, variants, schedule, optimizer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+
+CFG = M.CONFIGS["nano"]
+TC = T.TrainConfig(batch=2, seq=32, steps=20)
+
+
+def _tokens(seed=0, batch=2, seq=33):
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, seq), 0, CFG.vocab)
+
+
+def _state():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    m, v = T.init_opt_state(params)
+    return params, m, v
+
+
+def test_param_spec_matches_init():
+    params = M.init_params(CFG, jax.random.PRNGKey(1))
+    spec = M.param_spec(CFG)
+    assert set(params.keys()) == {n for n, _, _ in spec}
+    for name, shape, std in spec:
+        assert params[name].shape == shape
+        if std < 0:
+            np.testing.assert_array_equal(params[name], jnp.ones(shape))
+
+
+def test_param_count_matches_spec():
+    spec = M.param_spec(CFG)
+    total = sum(int(np.prod(s)) for _, s, _ in spec)
+    assert total == CFG.param_count()
+
+
+def test_logits_shape_and_finite():
+    params = M.init_params(CFG, jax.random.PRNGKey(2))
+    tokens = _tokens(3, 2, 16)
+    var = M.VariantConfig("baseline")
+    logits = M.lm_logits(params, tokens, CFG, var, jnp.int32(0), jnp.int32(0))
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    """Fresh init ⇒ loss ≈ ln(vocab) (sanity on the whole fwd path)."""
+    params, m, v = _state()
+    var = M.VariantConfig("baseline")
+    loss = T.lm_loss(params, _tokens(5), CFG, var, jnp.int32(0), jnp.int32(0))
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5, float(loss)
+
+
+@pytest.mark.parametrize("mode", ["baseline", "pamm", "crs", "compact"])
+def test_train_step_decreases_loss(mode):
+    params, m, v = _state()
+    var = M.VariantConfig(mode, r=1 / 16)
+    step = jax.jit(T.make_train_step(CFG, var, TC))
+    tokens = _tokens(7)
+    losses = []
+    p, mm, vv = params, m, v
+    for s in range(8):
+        loss, p, mm, vv = step(p, mm, vv, jnp.int32(s), tokens, jnp.int32(3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_pamm_grads_differ_from_baseline_but_are_close():
+    params, m, v = _state()
+    tokens = _tokens(9)
+    outs = {}
+    for mode in ["baseline", "pamm"]:
+        var = M.VariantConfig(mode, r=1 / 8)
+        step = jax.jit(T.make_train_step(CFG, var, TC))
+        _, p2, _, _ = step(params, m, v, jnp.int32(0), tokens, jnp.int32(5))
+        outs[mode] = p2
+    # wq is compressed → should differ; wo is untouched by PAMM fwd and
+    # its gradient flows through exact paths → essentially identical.
+    dq = float(jnp.max(jnp.abs(outs["pamm"]["wq"] - outs["baseline"]["wq"])))
+    dwo = float(jnp.max(jnp.abs(outs["pamm"]["wo"] - outs["baseline"]["wo"])))
+    assert dq > 1e-6
+    assert dwo < 5e-3, dwo
+
+
+def test_lr_schedule_shape():
+    tc = T.TrainConfig(steps=100, lr=1e-2, warmup_frac=0.1, final_lr_frac=0.1)
+    lrs = [float(T.lr_at(tc, jnp.int32(s))) for s in range(100)]
+    peak = max(lrs)
+    assert abs(peak - 1e-2) < 1e-5
+    assert lrs.index(peak) <= 10  # peak right after warmup
+    assert lrs[0] < lrs[5] <= peak  # warmup is increasing
+    assert lrs[-1] < peak * 0.2  # decayed
+    assert lrs[-1] >= peak * 0.09  # but floored at final_lr_frac
+
+
+def test_grad_apply_pair_equals_fused_step():
+    """grads→apply must produce the same update as the fused train step."""
+    params, m, v = _state()
+    var = M.VariantConfig("pamm", r=1 / 16)
+    tokens = _tokens(11)
+    fused = jax.jit(T.make_train_step(CFG, var, TC))
+    loss_f, pf, mf, vf = fused(params, m, v, jnp.int32(0), tokens, jnp.int32(7))
+
+    gstep = jax.jit(T.make_grad_step(CFG, var, TC))
+    astep = jax.jit(T.make_apply_step(CFG, var, TC))
+    loss_g, grads = gstep(params, jnp.int32(0), tokens, jnp.int32(7))
+    pa, ma, va = astep(params, m, v, grads, jnp.int32(0))
+
+    np.testing.assert_allclose(loss_f, loss_g, rtol=1e-6)
+    for k in params:
+        np.testing.assert_allclose(pf[k], pa[k], rtol=1e-5, atol=1e-6, err_msg=k)
+        np.testing.assert_allclose(mf[k], ma[k], rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+def test_classifier_shapes_and_learning():
+    cfg = M.classifier_config("nano", n_classes=3)
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    m, v = T.init_opt_state(params)
+    var = M.VariantConfig("pamm", r=1 / 8)
+    tc = T.TrainConfig(batch=8, seq=16, steps=30, lr=3e-3, pamm_lr_scale=1.0)
+    step = jax.jit(T.make_classifier_train_step(cfg, var, tc))
+    evalf = jax.jit(T.make_classifier_eval_step(cfg))
+
+    key = jax.random.PRNGKey(4)
+    # Learnable toy task: label = (first token) % 3.
+    toks = jax.random.randint(key, (8, 16), 0, cfg.vocab)
+    labels = toks[:, 0] % 3
+    p, mm, vv = params, m, v
+    first = None
+    for s in range(30):
+        loss, p, mm, vv = step(p, mm, vv, jnp.int32(s), toks, labels, jnp.int32(1))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first
+    preds = evalf(p, toks)
+    assert preds.shape == (8,)
+    assert preds.dtype == jnp.int32
+
+
+def test_rope_preserves_norm():
+    cos, sin = M.rope_tables(16, 8)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 8))
+    rx = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(rx, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5
+    )
+
+
+def test_rmsnorm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 32)) * 100.0
+    y = M.rmsnorm(x, jnp.ones(32))
+    ms = jnp.mean(y * y, axis=-1)
+    np.testing.assert_allclose(ms, jnp.ones(4), rtol=1e-3)
+
+
+def test_memory_formulas_paper_scale():
+    g = M.CONFIGS["llama60m"]
+    assert g.qkv_activation_bytes(64, 256) == 256 * 1024 * 1024
+    pamm = g.pamm_activation_bytes(64, 256, 1 / 512)
+    assert pamm < g.qkv_activation_bytes(64, 256) * 0.03  # >97% savings

@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+The hypothesis-style sweeps below are hand-rolled parameter grids (the
+offline image has hypothesis, but deterministic grids keep CI time
+bounded and failures reproducible without shrinking).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import pamm as PK
+from compile.kernels import ref as RK
+
+# Enable float64 comparisons where useful without global config churn.
+jax.config.update("jax_enable_x64", False)
+
+
+def _data(b, n, m, k, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ka, kb, kg = jax.random.split(key, 3)
+    a = jax.random.normal(ka, (b, n), jnp.float32)
+    bm = jax.random.normal(kb, (b, m), jnp.float32)
+    gi = RK.sample_generator_indices(kg, b, k)
+    return a, bm, gi
+
+
+SHAPES = [
+    # (b, n, m, k) — swept across token counts, dims, generator counts
+    (64, 8, 8, 1),
+    (128, 16, 8, 2),
+    (256, 32, 48, 4),
+    (512, 64, 64, 8),
+    (1024, 128, 96, 2),
+    (1024, 48, 32, 64),
+    (96, 24, 24, 96),  # k ≈ b edge
+]
+
+
+@pytest.mark.parametrize("b,n,m,k", SHAPES)
+def test_pamm_matmul_matches_ref(b, n, m, k):
+    a, bm, gi = _data(b, n, m, k, seed=b + n)
+    o_ref = RK.pamm_matmul(a, bm, gi)
+    o_pl = PK.pamm_matmul(a, bm, gi, block_b=min(128, b))
+    np.testing.assert_allclose(o_pl, o_ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("eps", [0.0, 0.2, 0.5, 0.9, 1.0, float("inf")])
+def test_compress_eps_sweep(eps):
+    b, n, k = 256, 32, 8
+    a, _, gi = _data(b, n, 8, k, seed=17)
+    c = a[gi]
+    comp_ref = RK.compress(a, gi, eps)
+    f_pl, al_pl = PK.pamm_compress(a, c, eps=eps, block_b=64)
+    np.testing.assert_array_equal(f_pl, comp_ref.assign)
+    np.testing.assert_allclose(al_pl, comp_ref.alpha, rtol=1e-5, atol=1e-6)
+    beta_pl = PK.beta_from_alpha(al_pl)
+    np.testing.assert_allclose(beta_pl, comp_ref.beta, rtol=1e-6)
+
+
+@pytest.mark.parametrize("block_b", [32, 64, 128, 256])
+def test_block_size_invariance(block_b):
+    """Tiling must not change numerics (same result at any block size)."""
+    a, bm, gi = _data(256, 32, 40, 4, seed=3)
+    base = PK.pamm_matmul(a, bm, gi, block_b=256)
+    tiled = PK.pamm_matmul(a, bm, gi, block_b=block_b)
+    np.testing.assert_allclose(tiled, base, rtol=1e-5, atol=1e-5)
+
+
+def test_btilde_is_segment_sum():
+    b, m, k = 512, 24, 8
+    key = jax.random.PRNGKey(5)
+    f = jax.random.randint(key, (b,), 0, k, dtype=jnp.int32)
+    alpha = jax.random.normal(jax.random.fold_in(key, 1), (b,))
+    bm = jax.random.normal(jax.random.fold_in(key, 2), (b, m))
+    bt = PK.pamm_btilde(f, alpha, bm, k=k, block_b=128)
+    expect = jax.ops.segment_sum(alpha[:, None] * bm, f, num_segments=k)
+    np.testing.assert_allclose(bt, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_kernel_various_tilings():
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (96, 64))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (64, 80))
+    exact = x @ y
+    for bn, bm_, bk in [(32, 40, 16), (96, 80, 64), (48, 16, 32)]:
+        out = PK.matmul(x, y, block_n=bn, block_m=bm_, block_k=bk)
+        np.testing.assert_allclose(out, exact, rtol=1e-4, atol=1e-4)
+
+
+def test_lemma1_argmax_equals_argmin_distance():
+    """Lemma 1: argmax |csim| picks the distance-minimizing generator."""
+    a, _, gi = _data(128, 16, 8, 6, seed=21)
+    c = a[gi]
+    f, _ = PK.pamm_compress(a, c, block_b=64)
+    # Exhaustive distances to the line spanned by each generator.
+    al = (a @ c.T) / jnp.maximum(jnp.sum(c * c, axis=1)[None, :], 1e-12)
+    recon = al[:, :, None] * c[None, :, :]  # (b, k, n)
+    dists = jnp.linalg.norm(a[:, None, :] - recon, axis=-1)  # (b, k)
+    best = jnp.argmin(dists, axis=1)
+    np.testing.assert_array_equal(f, best)
+
+
+def test_beta_unbiasedness_eps0():
+    """E[Õ] ≈ O over generator resampling at ε = 0 (paper Eq. 5)."""
+    b, n, m, k = 128, 12, 10, 16
+    a, bm, _ = _data(b, n, m, k, seed=33)
+    exact = a.T @ bm
+    acc = jnp.zeros_like(exact)
+    trials = 300
+    for t in range(trials):
+        gi = RK.sample_generator_indices(jax.random.PRNGKey(1000 + t), b, k)
+        acc = acc + RK.pamm_matmul(a, bm, gi, eps=0.0)
+    rel = jnp.linalg.norm(acc / trials - exact) / jnp.linalg.norm(exact)
+    assert rel < 0.15, f"relative bias {rel}"
+
+
+def test_full_generator_set_is_exact():
+    b, n, m = 64, 16, 12
+    a, bm, _ = _data(b, n, m, 1, seed=40)
+    gi = jnp.arange(b, dtype=jnp.int32)
+    o = RK.pamm_matmul(a, bm, gi)
+    np.testing.assert_allclose(o, a.T @ bm, rtol=1e-3, atol=1e-3)
+
+
+def test_coverage_and_error_shapes():
+    """Fig 6/7 shapes: coverage ↑ in eps; error ↓ in eps."""
+    a, bm, gi = _data(512, 32, 16, 8, seed=55)
+    prev_cov = -1.0
+    prev_err = None
+    for eps in [0.0, 0.3, 0.7, float("inf")]:
+        comp = RK.compress(a, gi, eps)
+        cov = float(RK.coverage(comp))
+        assert cov >= prev_cov - 1e-9
+        prev_cov = cov
+        err = float(
+            RK.relative_l2_error(a.T @ bm, RK.apply_compressed(comp, bm))
+        )
+        if prev_err is not None and eps >= 0.3:
+            assert err <= prev_err + 0.05
+        prev_err = err
+    assert prev_cov == 1.0  # eps = inf covers everything
+
+
+def test_zero_rows_dropped():
+    a, bm, gi = _data(64, 8, 6, 4, seed=60)
+    a = a.at[10].set(0.0)
+    comp = RK.compress(a, gi)
+    assert comp.alpha[10] == 0.0
+    assert float(comp.beta) == pytest.approx(64.0 / 63.0, rel=1e-5)

@@ -1,0 +1,47 @@
+//! Bench: the data substrate — corpus generation, tokenizer training,
+//! encoding, batch packing, and the prefetch pipeline. Target (§Perf):
+//! the pipeline must sustain ≥ 10× the training loop's token rate so it
+//! never sits on the critical path.
+//!
+//! Run: `cargo bench --bench data_pipeline`
+
+use pamm::benchx::Suite;
+use pamm::coordinator::pipeline::BatchPipeline;
+use pamm::data::batcher::BatchIterator;
+use pamm::data::corpus::{CorpusConfig, CorpusGenerator};
+use pamm::data::tokenizer::Tokenizer;
+
+fn main() {
+    let mut suite = Suite::new("data pipeline");
+    suite.header();
+
+    let mut gen = CorpusGenerator::new(CorpusConfig::default(), 1);
+    let r = suite.bench("corpus: 10k-word document", || {
+        std::hint::black_box(gen.document(10_000));
+    });
+    println!("    → {:.0} words/s", r.rate(10_000.0));
+
+    let sample = CorpusGenerator::new(CorpusConfig::default(), 2).document(20_000);
+    suite.bench("tokenizer: train vocab=512 on 20k words", || {
+        std::hint::black_box(Tokenizer::train(&sample, 512));
+    });
+
+    let tok = Tokenizer::train(&sample, 512);
+    let text = CorpusGenerator::new(CorpusConfig::default(), 3).document(10_000);
+    let r = suite.bench("tokenizer: encode 10k words", || {
+        std::hint::black_box(tok.encode(&text));
+    });
+    println!("    → {:.0} words/s", r.rate(10_000.0));
+
+    let mut it = BatchIterator::from_seed(512, 8, 128, 4);
+    let r = suite.bench("batcher: 8×128 packed batch", || {
+        std::hint::black_box(it.next_batch());
+    });
+    println!("    → {:.0} tok/s", r.rate(1024.0));
+
+    let pipe = BatchPipeline::spawn(BatchIterator::from_seed(512, 8, 128, 5), 4);
+    let r = suite.bench("prefetch pipeline: next()", || {
+        std::hint::black_box(pipe.next());
+    });
+    println!("    → {:.0} tok/s (prefetched)", r.rate(1024.0));
+}

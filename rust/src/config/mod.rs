@@ -1,0 +1,251 @@
+//! Typed configuration system + TOML-subset parser.
+//!
+//! Runtime presets (model size, variant, batch geometry, seeds, run dirs)
+//! can come from three layers, later layers overriding earlier ones:
+//! built-in preset → config file (TOML subset) → CLI flags. The offline
+//! image has no `toml`/`serde`, so [`toml_lite`] implements the subset we
+//! need: `[section]` headers, `key = value` with strings, numbers, bools
+//! and homogeneous arrays, `#` comments.
+
+pub mod toml_lite;
+
+use anyhow::{bail, Result};
+
+use toml_lite::TomlDoc;
+
+/// Which compression runs in the QKV backward — mirrors the python
+/// `VariantConfig` and the manifest `variant` block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub mode: String, // baseline | pamm | crs | compact
+    pub r: f64,
+    pub eps: Option<f64>, // None = ∞
+    pub use_pallas: bool,
+}
+
+impl Variant {
+    pub fn baseline() -> Self {
+        Self { mode: "baseline".into(), r: 1.0, eps: None, use_pallas: false }
+    }
+    pub fn pamm(r_inv: u32) -> Self {
+        Self { mode: "pamm".into(), r: 1.0 / r_inv as f64, eps: None, use_pallas: false }
+    }
+
+    /// Tag matching aot.py's `variant_tag` (artifact-name component).
+    pub fn tag(&self) -> String {
+        if self.mode == "baseline" {
+            return "baseline".into();
+        }
+        let inv = (1.0 / self.r).round() as i64;
+        let mut t = format!("{}{}", self.mode, inv);
+        if self.use_pallas {
+            t.push_str("pl");
+        }
+        if let Some(e) = self.eps {
+            t.push_str(&format!("_eps{}", format!("{e}").replace('.', "p")));
+        }
+        t
+    }
+}
+
+/// A full run configuration for `pamm train` / the examples.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String, // config zoo name (nano/tiny/small/medium)
+    pub variant: Variant,
+    pub batch: usize,
+    pub seq: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub artifacts_dir: String,
+    pub run_dir: String,
+    /// Simulated data-parallel worker count (DDP stand-in; gradients from
+    /// worker shards are averaged by the coordinator).
+    pub workers: usize,
+    /// Gradient-accumulation microbatches per optimizer step.
+    pub grad_accum: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: "nano".into(),
+            variant: Variant::baseline(),
+            batch: 4,
+            seq: 64,
+            steps: 100,
+            seed: 42,
+            eval_every: 50,
+            eval_batches: 4,
+            artifacts_dir: "artifacts".into(),
+            run_dir: "runs".into(),
+            workers: 1,
+            grad_accum: 1,
+        }
+    }
+}
+
+/// Built-in presets (the zoo the examples and README reference).
+pub fn preset(name: &str) -> Result<RunConfig> {
+    let mut c = RunConfig::default();
+    match name {
+        "smoke" => {
+            c.steps = 20;
+            c.eval_every = 10;
+        }
+        "nano" => {
+            c.steps = 200;
+        }
+        "tiny" | "tiny-baseline" => {
+            c.model = "tiny".into();
+            c.batch = 8;
+            c.seq = 128;
+            c.steps = 600;
+        }
+        "tiny-pamm" => {
+            c.model = "tiny".into();
+            c.batch = 8;
+            c.seq = 128;
+            c.steps = 600;
+            c.variant = Variant::pamm(512);
+        }
+        "e2e" => {
+            // The headline end-to-end run (DESIGN.md §4): largest
+            // CPU-tractable model, few hundred steps, loss curve logged.
+            c.model = "medium".into();
+            c.batch = 4;
+            c.seq = 256;
+            c.steps = 300;
+            c.eval_every = 50;
+            c.variant = Variant::pamm(512);
+        }
+        other => bail!("unknown preset `{other}` (smoke|nano|tiny|tiny-pamm|e2e)"),
+    }
+    Ok(c)
+}
+
+impl RunConfig {
+    /// Apply a parsed TOML document over this config.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.get_str("run", "model") {
+            self.model = v.to_string();
+        }
+        if let Some(v) = doc.get_int("run", "batch") {
+            self.batch = v as usize;
+        }
+        if let Some(v) = doc.get_int("run", "seq") {
+            self.seq = v as usize;
+        }
+        if let Some(v) = doc.get_int("run", "steps") {
+            self.steps = v as usize;
+        }
+        if let Some(v) = doc.get_int("run", "seed") {
+            self.seed = v as u64;
+        }
+        if let Some(v) = doc.get_int("run", "eval_every") {
+            self.eval_every = v as usize;
+        }
+        if let Some(v) = doc.get_int("run", "workers") {
+            self.workers = v as usize;
+        }
+        if let Some(v) = doc.get_int("run", "grad_accum") {
+            self.grad_accum = v as usize;
+        }
+        if let Some(v) = doc.get_str("run", "artifacts_dir") {
+            self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_str("run", "run_dir") {
+            self.run_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_str("variant", "mode") {
+            self.variant.mode = v.to_string();
+        }
+        if let Some(v) = doc.get_float("variant", "r") {
+            self.variant.r = v;
+        }
+        if let Some(v) = doc.get_float("variant", "eps") {
+            self.variant.eps = if v < 0.0 { None } else { Some(v) };
+        }
+        if let Some(v) = doc.get_bool("variant", "use_pallas") {
+            self.variant.use_pallas = v;
+        }
+        Ok(())
+    }
+
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = toml_lite::parse(&text)?;
+        self.apply_toml(&doc)
+    }
+
+    /// Artifact name this config resolves to (must exist in the manifest).
+    pub fn train_artifact(&self) -> String {
+        format!("train_{}_{}_{}x{}", self.model, self.variant.tag(), self.batch, self.seq)
+    }
+
+    pub fn eval_artifact(&self) -> String {
+        format!("eval_{}_{}x{}", self.model, self.batch, self.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for p in ["smoke", "nano", "tiny", "tiny-pamm", "e2e"] {
+            let c = preset(p).unwrap();
+            assert!(!c.train_artifact().is_empty());
+        }
+        assert!(preset("bogus").is_err());
+    }
+
+    #[test]
+    fn artifact_names_match_aot_convention() {
+        let c = preset("tiny-pamm").unwrap();
+        assert_eq!(c.train_artifact(), "train_tiny_pamm512_8x128");
+        assert_eq!(c.eval_artifact(), "eval_tiny_8x128");
+        let b = preset("tiny").unwrap();
+        assert_eq!(b.train_artifact(), "train_tiny_baseline_8x128");
+    }
+
+    #[test]
+    fn variant_tags() {
+        assert_eq!(Variant::baseline().tag(), "baseline");
+        assert_eq!(Variant::pamm(128).tag(), "pamm128");
+        let mut v = Variant::pamm(512);
+        v.eps = Some(0.5);
+        assert_eq!(v.tag(), "pamm512_eps0p5");
+        v.use_pallas = true;
+        v.eps = None;
+        assert_eq!(v.tag(), "pamm512pl");
+    }
+
+    #[test]
+    fn toml_overlay() {
+        let mut c = RunConfig::default();
+        let doc = toml_lite::parse(
+            r#"
+            # overlay
+            [run]
+            model = "tiny"
+            steps = 42
+            workers = 4
+            [variant]
+            mode = "pamm"
+            r = 0.001953125
+            eps = -1.0
+            "#,
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.model, "tiny");
+        assert_eq!(c.steps, 42);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.variant.tag(), "pamm512");
+        assert!(c.variant.eps.is_none());
+    }
+}

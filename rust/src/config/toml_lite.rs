@@ -1,0 +1,210 @@
+//! TOML-subset parser for run configs (no `toml` crate offline).
+//!
+//! Supported grammar (all our configs need):
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! string_key = "value"
+//! int_key    = 42
+//! float_key  = -1.5e-3
+//! bool_key   = true
+//! array_key  = [1, 2, 3]
+//! ```
+//!
+//! Unsupported TOML (nested tables, dates, multi-line strings) is rejected
+//! with a line-numbered error rather than misparsed.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    /// section → key → value ("" section for top-level keys).
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(TomlValue::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+            if name.contains('[') || name.contains('.') {
+                bail!("line {}: nested tables unsupported", lineno + 1);
+            }
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let v = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        doc.sections
+            .entry(section.clone())
+            .or_default()
+            .insert(key.trim().to_string(), v);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        if inner.contains('"') {
+            bail!("embedded quotes unsupported");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value: {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let doc = parse(
+            r#"
+            top = 1
+            [a]
+            s = "hello"   # trailing comment
+            i = -42
+            f = 2.5e-3
+            b = false
+            arr = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "top"), Some(1));
+        assert_eq!(doc.get_str("a", "s"), Some("hello"));
+        assert_eq!(doc.get_int("a", "i"), Some(-42));
+        assert!((doc.get_float("a", "f").unwrap() - 0.0025).abs() < 1e-12);
+        assert_eq!(doc.get_bool("a", "b"), Some(false));
+        assert_eq!(
+            doc.get("a", "arr"),
+            Some(&TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("[v]\nr = 1\n").unwrap();
+        assert_eq!(doc.get_float("v", "r"), Some(1.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse("[a]\ns = \"x # y\"\n").unwrap();
+        assert_eq!(doc.get_str("a", "s"), Some("x # y"));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("[a]\nkey_no_value\n").is_err());
+        assert!(parse("[a]\nk = \"oops\n").is_err());
+        assert!(parse("[a.b]\nk = 1\n").is_err());
+        assert!(parse("[a]\nk = what\n").is_err());
+    }
+
+    #[test]
+    fn empty_array_and_empty_doc() {
+        let doc = parse("[a]\narr = []\n").unwrap();
+        assert_eq!(doc.get("a", "arr"), Some(&TomlValue::Array(vec![])));
+        assert!(parse("").unwrap().sections().next().is_none());
+    }
+}

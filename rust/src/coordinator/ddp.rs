@@ -1,0 +1,230 @@
+//! Simulated data-parallel training: gradient accumulation + all-reduce.
+//!
+//! The paper trains LLaMA-1B/7B with 8-GPU DDP (Table 2a). This host has
+//! one PJRT CPU device, so we reproduce the *coordination logic* exactly
+//! and the parallelism as a simulation: `workers` shards each run the
+//! `grads_*` artifact on their own data shard, the coordinator all-reduces
+//! (averages) the gradient sets, and a single `apply_*` execution performs
+//! the AdamW update. Gradient *accumulation* (microbatching) composes the
+//! same way with `accum` sequential shard batches.
+//!
+//! The all-reduce itself is a real reduction implemented host-side
+//! (chunked accumulate — the degenerate single-host case of a ring
+//! all-reduce where every rank is colocated); swapping in a network ring
+//! is a transport change, not a logic change.
+//!
+//! Determinism: worker w at optimizer step s derives its PAMM seed from
+//! (seed, w, s), so runs are reproducible at any worker count.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::pipeline::BatchPipeline;
+use crate::data::batcher::BatchIterator;
+use crate::runtime::{Engine, Exec, HostTensor};
+use crate::rngx::Xoshiro256;
+
+/// Element-wise mean of `sets` gradient vectors (the all-reduce).
+/// Each set must have identical structure.
+pub fn all_reduce_mean(sets: Vec<Vec<HostTensor>>) -> Result<Vec<HostTensor>> {
+    let g = sets.len();
+    if g == 0 {
+        bail!("all_reduce_mean: no gradient sets");
+    }
+    let mut iter = sets.into_iter();
+    let first = iter.next().unwrap();
+    let mut acc: Vec<Vec<f32>> = first
+        .iter()
+        .map(|t| t.as_f32().map(|s| s.to_vec()))
+        .collect::<Result<_>>()?;
+    let shapes: Vec<Vec<usize>> = first.iter().map(|t| t.shape().to_vec()).collect();
+    for set in iter {
+        if set.len() != acc.len() {
+            bail!("gradient set arity mismatch");
+        }
+        for (a, t) in acc.iter_mut().zip(set.iter()) {
+            let s = t.as_f32()?;
+            if s.len() != a.len() {
+                bail!("gradient tensor shape mismatch");
+            }
+            for (x, y) in a.iter_mut().zip(s) {
+                *x += y;
+            }
+        }
+    }
+    let scale = 1.0 / g as f32;
+    Ok(acc
+        .into_iter()
+        .zip(shapes)
+        .map(|(mut data, shape)| {
+            for x in data.iter_mut() {
+                *x *= scale;
+            }
+            HostTensor::f32(shape, data)
+        })
+        .collect())
+}
+
+/// DDP/grad-accum trainer built on the (grads, apply) artifact pair.
+pub struct DdpTrainer {
+    grads_exec: Exec,
+    apply_exec: Exec,
+    /// params ++ m ++ v literals.
+    state: Vec<xla::Literal>,
+    n_params: usize,
+    step: i32,
+    seed: u64,
+    pub workers: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pipelines: Vec<BatchPipeline>,
+}
+
+impl DdpTrainer {
+    pub fn new(
+        engine: &Engine,
+        grads_artifact: &str,
+        apply_artifact: &str,
+        workers: usize,
+        seed: u64,
+    ) -> Result<DdpTrainer> {
+        let grads_exec = engine.executable(grads_artifact)?;
+        if grads_exec.meta.kind != "grad_step" {
+            bail!("{grads_artifact} is `{}`, expected grad_step", grads_exec.meta.kind);
+        }
+        let apply_exec = engine.executable(apply_artifact)?;
+        if apply_exec.meta.kind != "apply_step" {
+            bail!("{apply_artifact} is `{}`, expected apply_step", apply_exec.meta.kind);
+        }
+        let meta = &grads_exec.meta;
+        let n_params = meta.param_spec.len();
+        let (batch, seq) =
+            (meta.batch.context("missing batch")?, meta.seq.context("missing seq")?);
+
+        // Initial state comes from the apply artifact's spec (same spec).
+        let state = super::session::init_state_for(&apply_exec.meta, seed)?;
+
+        // One independent data shard per worker (distinct stream seeds),
+        // matching DDP's disjoint per-rank sharding.
+        let vocab = engine
+            .manifest
+            .config(meta.config.as_deref().unwrap_or(""))
+            .map(|c| c.vocab)
+            .unwrap_or(512);
+        let pipelines = (0..workers.max(1))
+            .map(|w| {
+                let it =
+                    BatchIterator::from_seed(vocab, batch, seq, seed ^ (0xD0 + w as u64) << 8);
+                BatchPipeline::spawn(it, 2)
+            })
+            .collect();
+
+        Ok(DdpTrainer {
+            grads_exec,
+            apply_exec,
+            state,
+            n_params,
+            step: 0,
+            seed,
+            workers: workers.max(1),
+            batch,
+            seq,
+            pipelines,
+        })
+    }
+
+    pub fn current_step(&self) -> usize {
+        self.step as usize
+    }
+
+    /// One optimizer step = `workers × accum` gradient shards, all-reduced
+    /// then applied once. Returns the mean shard loss.
+    pub fn step(&mut self, accum: usize) -> Result<f32> {
+        let accum = accum.max(1);
+        let mut grad_sets = Vec::with_capacity(self.workers * accum);
+        let mut losses = Vec::new();
+
+        for w in 0..self.workers {
+            for a in 0..accum {
+                let batch = self.pipelines[w].next();
+                // Fold (worker, microbatch) into the PAMM sampling seed so
+                // shards draw independent generators (paper: fresh sample
+                // per step).
+                let shard_seed = Xoshiro256::fold_in(
+                    self.seed,
+                    0xDD,
+                    (self.step as u64) << 16 | (w as u64) << 8 | a as u64,
+                )
+                .next_u64() as i32
+                    & 0x7FFF_FFFF;
+
+                let step_lit = xla::Literal::scalar(self.step);
+                let tok_lit = batch.to_tensor().to_literal()?;
+                let seed_lit = xla::Literal::scalar(shard_seed);
+
+                let mut inputs: Vec<&xla::Literal> =
+                    self.state[..self.n_params].iter().collect();
+                inputs.push(&step_lit);
+                inputs.push(&tok_lit);
+                inputs.push(&seed_lit);
+
+                let outs = self.grads_exec.run_literals(&inputs)?;
+                losses.push(outs[0].to_vec::<f32>()?[0]);
+                let grads: Vec<HostTensor> = outs[1..]
+                    .iter()
+                    .map(HostTensor::from_literal)
+                    .collect::<Result<_>>()?;
+                grad_sets.push(grads);
+            }
+        }
+
+        let reduced = all_reduce_mean(grad_sets)?;
+        let grad_lits: Vec<xla::Literal> =
+            reduced.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+
+        let step_lit = xla::Literal::scalar(self.step);
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.extend(grad_lits.iter());
+        inputs.push(&step_lit);
+
+        let outputs = self.apply_exec.run_literals(&inputs)?;
+        if outputs.len() != 3 * self.n_params {
+            bail!("apply_step returned {} outputs", outputs.len());
+        }
+        self.state = outputs;
+        self.step += 1;
+        Ok(losses.iter().sum::<f32>() / losses.len() as f32)
+    }
+
+    /// Tokens consumed per optimizer step.
+    pub fn tokens_per_step(&self, accum: usize) -> usize {
+        self.workers * accum.max(1) * self.batch * self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reduce_mean_averages() {
+        let a = vec![HostTensor::f32(vec![2], vec![1.0, 2.0])];
+        let b = vec![HostTensor::f32(vec![2], vec![3.0, 6.0])];
+        let out = all_reduce_mean(vec![a, b]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn all_reduce_single_worker_identity() {
+        let a = vec![HostTensor::f32(vec![3], vec![1.0, -1.0, 0.5])];
+        let out = all_reduce_mean(vec![a.clone()]).unwrap();
+        assert_eq!(out[0], a[0]);
+    }
+
+    #[test]
+    fn all_reduce_rejects_mismatch() {
+        let a = vec![HostTensor::f32(vec![2], vec![1.0, 2.0])];
+        let b = vec![HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0])];
+        assert!(all_reduce_mean(vec![a, b]).is_err());
+        assert!(all_reduce_mean(vec![]).is_err());
+    }
+}

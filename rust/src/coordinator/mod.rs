@@ -1,0 +1,26 @@
+//! L3 coordinator: the training orchestrator.
+//!
+//! The paper's contribution lives in the backward pass (L1/L2), so per the
+//! architecture notes L3 is the *driver* — but a production one: process
+//! lifecycle, deterministic parameter init, the step loop with state
+//! threading, a background data pipeline, an eval scheduler, run logging,
+//! checkpoints, and a simulated data-parallel mode with gradient
+//! accumulation + all-reduce (the paper trains LLaMA-1B/7B with 8-GPU DDP;
+//! we reproduce the *coordination logic* on the CPU device).
+//!
+//! Pieces:
+//! * [`session::TrainSession`] — one model replica bound to a train_step
+//!   artifact; owns the params/m/v literals and threads them step to step.
+//! * [`pipeline::BatchPipeline`] — background-thread batch producer
+//!   (bounded channel) so tokenization never stalls a step.
+//! * [`ddp`] — gradient accumulation + simulated multi-worker all-reduce
+//!   built on the grad/apply artifact pair.
+//! * [`trainer`] — the top-level run loop used by the CLI and examples.
+
+pub mod ddp;
+pub mod pipeline;
+pub mod session;
+pub mod trainer;
+
+pub use session::{ClassifierSession, TrainSession};
+pub use trainer::{train_run, TrainOutcome};

@@ -1,0 +1,236 @@
+//! One model replica bound to a train_step artifact.
+//!
+//! Owns the `params / m / v` literals, initializes them from the manifest
+//! param spec (Gaussian by `init_std`, ones for norm gains), and threads
+//! them through successive executions — the steady-state loop allocates
+//! nothing but the token literal and the loss readback.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{ArtifactMeta, Engine, Exec, HostTensor};
+use crate::rngx::Xoshiro256;
+
+/// Initialize one parameter tensor per its spec entry.
+fn init_tensor(shape: &[usize], init_std: f64, rng: &mut Xoshiro256) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let data = if init_std < 0.0 {
+        vec![1.0f32; n] // norm gains
+    } else {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal_f32(&mut v, init_std as f32);
+        v
+    };
+    HostTensor::f32(shape.to_vec(), data)
+}
+
+/// Build the initial (params, m, v) literal vector for an artifact.
+/// m and v start at zero (AdamW convention).
+pub fn init_state_for(meta: &ArtifactMeta, seed: u64) -> Result<Vec<xla::Literal>> {
+    if meta.param_spec.is_empty() {
+        bail!("{}: artifact has no param_spec", meta.name);
+    }
+    let mut state = Vec::with_capacity(meta.param_spec.len() * 3);
+    for (i, p) in meta.param_spec.iter().enumerate() {
+        let mut rng = Xoshiro256::fold_in(seed, 0x1217, i as u64);
+        state.push(init_tensor(&p.shape, p.init_std, &mut rng).to_literal()?);
+    }
+    for p in meta.param_spec.iter().chain(meta.param_spec.iter()) {
+        let zeros = HostTensor::f32(p.shape.clone(), vec![0.0; p.elements()]);
+        state.push(zeros.to_literal()?);
+    }
+    Ok(state)
+}
+
+/// Decoder-LM training session.
+pub struct TrainSession {
+    exec: Exec,
+    eval_exec: Option<Exec>,
+    /// params ++ m ++ v (3P literals, canonical order).
+    state: Vec<xla::Literal>,
+    n_params: usize,
+    step: i32,
+    seed: i32,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl TrainSession {
+    /// Bind to `train_artifact`; optionally attach an eval artifact.
+    pub fn new(
+        engine: &Engine,
+        train_artifact: &str,
+        eval_artifact: Option<&str>,
+        seed: u64,
+    ) -> Result<TrainSession> {
+        let exec = engine
+            .executable(train_artifact)
+            .with_context(|| format!("loading {train_artifact}"))?;
+        let meta = &exec.meta;
+        if meta.kind != "train_step" {
+            bail!("{train_artifact} is `{}`, expected train_step", meta.kind);
+        }
+        let n_params = meta.param_spec.len();
+        let state = init_state_for(meta, seed)?;
+        let (batch, seq) = (
+            meta.batch.context("train_step missing batch")?,
+            meta.seq.context("train_step missing seq")?,
+        );
+        let eval_exec = match eval_artifact {
+            Some(name) => Some(engine.executable(name)?),
+            None => None,
+        };
+        Ok(TrainSession {
+            exec,
+            eval_exec,
+            state,
+            n_params,
+            step: 0,
+            seed: (seed & 0x7FFF_FFFF) as i32,
+            batch,
+            seq,
+        })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.exec.meta
+    }
+
+    pub fn current_step(&self) -> usize {
+        self.step as usize
+    }
+
+    /// One fused fwd+bwd+AdamW step; returns the loss.
+    pub fn step(&mut self, tokens: &HostTensor) -> Result<f32> {
+        let expect = [self.batch, self.seq + 1];
+        if tokens.shape() != expect {
+            bail!("token batch {:?}, artifact expects {:?}", tokens.shape(), expect);
+        }
+        let step_lit = xla::Literal::scalar(self.step);
+        let tok_lit = tokens.to_literal()?;
+        let seed_lit = xla::Literal::scalar(self.seed);
+
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.push(&step_lit);
+        inputs.push(&tok_lit);
+        inputs.push(&seed_lit);
+
+        let mut outputs = self.exec.run_literals(&inputs)?;
+        if outputs.len() != 1 + 3 * self.n_params {
+            bail!(
+                "train_step returned {} outputs, expected {}",
+                outputs.len(),
+                1 + 3 * self.n_params
+            );
+        }
+        let loss = outputs[0].to_vec::<f32>()?[0];
+        self.state = outputs.split_off(1);
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Evaluate mean loss over an iterator of batches (baseline forward).
+    pub fn eval(&self, batches: &[HostTensor]) -> Result<f32> {
+        let exec = self.eval_exec.as_ref().context("no eval artifact attached")?;
+        let mut total = 0.0f64;
+        for t in batches {
+            let tok_lit = t.to_literal()?;
+            let mut inputs: Vec<&xla::Literal> =
+                self.state[..self.n_params].iter().collect();
+            inputs.push(&tok_lit);
+            let out = exec.run_literals(&inputs)?;
+            total += out[0].to_vec::<f32>()?[0] as f64;
+        }
+        Ok((total / batches.len().max(1) as f64) as f32)
+    }
+
+    /// Copy current parameters to host (checkpointing / analysis capture).
+    pub fn params_host(&self) -> Result<Vec<(String, HostTensor)>> {
+        let mut out = Vec::with_capacity(self.n_params);
+        for (i, p) in self.exec.meta.param_spec.iter().enumerate() {
+            out.push((p.name.clone(), HostTensor::from_literal(&self.state[i])?));
+        }
+        Ok(out)
+    }
+
+    /// Restore parameters (m/v reset to zero, step preserved by caller).
+    pub fn load_params(&mut self, params: &[(String, HostTensor)]) -> Result<()> {
+        if params.len() != self.n_params {
+            bail!("checkpoint has {} params, artifact {}", params.len(), self.n_params);
+        }
+        for (i, (name, t)) in params.iter().enumerate() {
+            let spec = &self.exec.meta.param_spec[i];
+            if *name != spec.name || t.shape() != spec.shape.as_slice() {
+                bail!("checkpoint entry {i} `{name}` mismatches spec `{}`", spec.name);
+            }
+            self.state[i] = t.to_literal()?;
+        }
+        Ok(())
+    }
+}
+
+/// Classifier (GLUE/AID) training session — adds labels to each step and
+/// an argmax-prediction eval path.
+pub struct ClassifierSession {
+    exec: Exec,
+    eval_exec: Exec,
+    state: Vec<xla::Literal>,
+    n_params: usize,
+    step: i32,
+    seed: i32,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl ClassifierSession {
+    pub fn new(
+        engine: &Engine,
+        train_artifact: &str,
+        eval_artifact: &str,
+        seed: u64,
+    ) -> Result<ClassifierSession> {
+        let exec = engine.executable(train_artifact)?;
+        if exec.meta.kind != "cls_train_step" {
+            bail!("{train_artifact} is `{}`, expected cls_train_step", exec.meta.kind);
+        }
+        let eval_exec = engine.executable(eval_artifact)?;
+        let n_params = exec.meta.param_spec.len();
+        let state = init_state_for(&exec.meta, seed)?;
+        let (batch, seq) = (exec.meta.batch.unwrap(), exec.meta.seq.unwrap());
+        Ok(ClassifierSession {
+            exec,
+            eval_exec,
+            state,
+            n_params,
+            step: 0,
+            seed: (seed & 0x7FFF_FFFF) as i32,
+            batch,
+            seq,
+        })
+    }
+
+    pub fn step(&mut self, tokens: &HostTensor, labels: &HostTensor) -> Result<f32> {
+        let step_lit = xla::Literal::scalar(self.step);
+        let tok_lit = tokens.to_literal()?;
+        let lab_lit = labels.to_literal()?;
+        let seed_lit = xla::Literal::scalar(self.seed);
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.push(&step_lit);
+        inputs.push(&tok_lit);
+        inputs.push(&lab_lit);
+        inputs.push(&seed_lit);
+        let mut outputs = self.exec.run_literals(&inputs)?;
+        let loss = outputs[0].to_vec::<f32>()?[0];
+        self.state = outputs.split_off(1);
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Predicted class ids for a token batch.
+    pub fn predict(&self, tokens: &HostTensor) -> Result<Vec<i32>> {
+        let tok_lit = tokens.to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = self.state[..self.n_params].iter().collect();
+        inputs.push(&tok_lit);
+        let out = self.eval_exec.run_literals(&inputs)?;
+        Ok(out[0].to_vec::<i32>()?)
+    }
+}

@@ -1,0 +1,200 @@
+//! Top-level run loop: config → engine → session → steps, with eval,
+//! logging, throughput metering and checkpointing. Used by the CLI
+//! (`pamm train`), the examples, and the experiment harness.
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint;
+use crate::config::RunConfig;
+use crate::coordinator::ddp::DdpTrainer;
+use crate::coordinator::pipeline::BatchPipeline;
+use crate::coordinator::session::TrainSession;
+use crate::data::batcher::BatchIterator;
+use crate::jsonx;
+use crate::metrics::{perplexity, Ema, RunLogger, ThroughputMeter};
+use crate::runtime::{Engine, HostTensor};
+
+/// Result of a completed run (consumed by the experiment harness).
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub run_name: String,
+    pub steps: usize,
+    pub final_loss: f32,
+    pub final_eval_loss: Option<f32>,
+    pub final_ppl: Option<f64>,
+    pub tokens_per_sec: Option<f64>,
+    /// (step, train-loss) curve, subsampled.
+    pub curve: Vec<(usize, f32)>,
+}
+
+/// Seed for the held-out eval stream (never used for training data).
+const EVAL_STREAM: u64 = 0xE7A1;
+
+/// Fixed eval token set: held-out stream so eval is comparable across
+/// steps and variants.
+fn eval_batches(vocab: usize, batch: usize, seq: usize, n: usize, seed: u64) -> Vec<HostTensor> {
+    let mut it = BatchIterator::from_seed(vocab, batch, seq, seed);
+    (0..n).map(|_| it.next_batch().to_tensor()).collect()
+}
+
+/// Run a full training session per `cfg`. `quiet` suppresses per-step
+/// prints (harness mode).
+pub fn train_run(engine: &Engine, cfg: &RunConfig, quiet: bool) -> Result<TrainOutcome> {
+    if cfg.workers > 1 || cfg.grad_accum > 1 {
+        return train_run_ddp(engine, cfg, quiet);
+    }
+    let artifact = cfg.train_artifact();
+    let eval_art = cfg.eval_artifact();
+    let have_eval = engine.meta(&eval_art).is_ok();
+    let mut session = TrainSession::new(
+        engine,
+        &artifact,
+        if have_eval { Some(eval_art.as_str()) } else { None },
+        cfg.seed,
+    )?;
+
+    let vocab = engine
+        .manifest
+        .config(&cfg.model)
+        .with_context(|| format!("config `{}` not in manifest", cfg.model))?
+        .vocab;
+
+    let run_name = format!("{}_{}_s{}", cfg.model, cfg.variant.tag(), cfg.seed);
+    let mut logger = RunLogger::create(&cfg.run_dir, &run_name)?;
+    let pipeline = BatchPipeline::spawn(
+        BatchIterator::from_seed(vocab, session.batch, session.seq, cfg.seed),
+        2,
+    );
+    let evals = if have_eval {
+        eval_batches(vocab, session.batch, session.seq, cfg.eval_batches, EVAL_STREAM)
+    } else {
+        Vec::new()
+    };
+
+    let mut ema = Ema::new(0.05);
+    let mut meter = ThroughputMeter::new(3.min(cfg.steps / 4));
+    let mut curve = Vec::new();
+    let mut last_loss = f32::NAN;
+    let mut last_eval = None;
+
+    for s in 0..cfg.steps {
+        let batch = pipeline.next();
+        let loss = session.step(&batch.to_tensor())?;
+        meter.step(batch.n_tokens());
+        last_loss = loss;
+        let sm = ema.update(loss as f64);
+        if s % (cfg.steps / 50).max(1) == 0 || s + 1 == cfg.steps {
+            curve.push((s, loss));
+            logger.log_step(s, loss as f64, sm, meter.tokens_per_sec())?;
+            if !quiet {
+                println!(
+                    "step {s:>5}  loss {loss:7.4}  ema {sm:7.4}  ppl {:8.2}  tok/s {}",
+                    perplexity(sm),
+                    meter
+                        .tokens_per_sec()
+                        .map(|t| format!("{t:.0}"))
+                        .unwrap_or_else(|| "-".into())
+                );
+            }
+        }
+        if have_eval && cfg.eval_every > 0 && (s + 1) % cfg.eval_every == 0 {
+            let el = session.eval(&evals)?;
+            last_eval = Some(el);
+            logger.log_eval(s, el as f64)?;
+            if !quiet {
+                println!("  eval @ {s}: loss {el:.4}  ppl {:.2}", perplexity(el as f64));
+            }
+        }
+    }
+
+    if have_eval && last_eval.is_none() && !evals.is_empty() {
+        last_eval = Some(session.eval(&evals)?);
+    }
+
+    // Final checkpoint for resume/analysis.
+    let params = session.params_host()?;
+    checkpoint::save(format!("{}/ckpt", cfg.run_dir), &run_name, &params)?;
+
+    let tok_s = meter.tokens_per_sec();
+    logger.log_summary(vec![
+        ("final_loss", jsonx::num(last_loss as f64)),
+        (
+            "final_eval_loss",
+            last_eval.map(|l| jsonx::num(l as f64)).unwrap_or(jsonx::Value::Null),
+        ),
+        ("tok_s", tok_s.map(jsonx::num).unwrap_or(jsonx::Value::Null)),
+        ("steps", jsonx::num(cfg.steps as f64)),
+    ])?;
+
+    Ok(TrainOutcome {
+        run_name,
+        steps: cfg.steps,
+        final_loss: last_loss,
+        final_eval_loss: last_eval,
+        final_ppl: last_eval.map(|l| perplexity(l as f64)),
+        tokens_per_sec: tok_s,
+        curve,
+    })
+}
+
+/// DDP / grad-accum path (grads + apply artifact pair).
+fn train_run_ddp(engine: &Engine, cfg: &RunConfig, quiet: bool) -> Result<TrainOutcome> {
+    let grads = format!(
+        "grads_{}_{}_{}x{}",
+        cfg.model,
+        cfg.variant.tag(),
+        cfg.batch,
+        cfg.seq
+    );
+    let apply = format!("apply_{}_{}_{}x{}", cfg.model, cfg.variant.tag(), cfg.batch, cfg.seq);
+    let mut t = DdpTrainer::new(engine, &grads, &apply, cfg.workers, cfg.seed)?;
+
+    let run_name = format!(
+        "{}_{}_ddp{}x{}_s{}",
+        cfg.model,
+        cfg.variant.tag(),
+        cfg.workers,
+        cfg.grad_accum,
+        cfg.seed
+    );
+    let mut logger = RunLogger::create(&cfg.run_dir, &run_name)?;
+    let mut ema = Ema::new(0.05);
+    let mut meter = ThroughputMeter::new(2);
+    let mut curve = Vec::new();
+    let mut last_loss = f32::NAN;
+
+    for s in 0..cfg.steps {
+        let loss = t.step(cfg.grad_accum)?;
+        meter.step(t.tokens_per_step(cfg.grad_accum));
+        last_loss = loss;
+        let sm = ema.update(loss as f64);
+        if s % (cfg.steps / 50).max(1) == 0 || s + 1 == cfg.steps {
+            curve.push((s, loss));
+            logger.log_step(s, loss as f64, sm, meter.tokens_per_sec())?;
+            if !quiet {
+                println!(
+                    "ddp step {s:>5}  loss {loss:7.4}  ema {sm:7.4}  (workers={} accum={})",
+                    cfg.workers, cfg.grad_accum
+                );
+            }
+        }
+    }
+
+    let tok_s = meter.tokens_per_sec();
+    logger.log_summary(vec![
+        ("final_loss", jsonx::num(last_loss as f64)),
+        ("workers", jsonx::num(cfg.workers as f64)),
+        ("grad_accum", jsonx::num(cfg.grad_accum as f64)),
+        ("tok_s", tok_s.map(jsonx::num).unwrap_or(jsonx::Value::Null)),
+    ])?;
+
+    Ok(TrainOutcome {
+        run_name,
+        steps: cfg.steps,
+        final_loss: last_loss,
+        final_eval_loss: None,
+        final_ppl: None,
+        tokens_per_sec: tok_s,
+        curve,
+    })
+}

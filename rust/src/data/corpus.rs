@@ -1,0 +1,205 @@
+//! Synthetic-C4 text generator (see module docs in data/mod.rs).
+//!
+//! Words are drawn from a closed vocabulary of pronounceable nonsense
+//! words; the *distribution* (Zipf ranks, bigram chains, templated
+//! sentences) is what matters for PAMM — the learner must find real
+//! sequential structure for the loss to drop, and the token stream must be
+//! redundant across rows for PAMM's clustering assumption to hold.
+
+use crate::rngx::{Xoshiro256, Zipf};
+
+/// Number of distinct words in the synthetic language.
+pub const DEFAULT_WORDS: usize = 4096;
+
+/// Deterministic pronounceable word for a rank (CV syllables).
+fn word_for_rank(rank: usize) -> String {
+    const CONS: &[&str] = &[
+        "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "ch", "sh",
+    ];
+    const VOW: &[&str] = &["a", "e", "i", "o", "u", "ai", "ou"];
+    let mut w = String::new();
+    let mut x = rank + 1;
+    while x > 0 {
+        w.push_str(CONS[x % CONS.len()]);
+        x /= CONS.len();
+        w.push_str(VOW[x % VOW.len()]);
+        x /= VOW.len();
+    }
+    w
+}
+
+/// Sentence templates — boilerplate skeletons with slots (`{}`), mimicking
+/// web-crawl repetition (cookie banners, listicles, navigation text).
+const TEMPLATES: &[&str] = &[
+    "the {} of {} is {} .",
+    "a {} {} said that {} {} .",
+    "in {} , {} and {} were {} .",
+    "{} : {} , {} , {} and more .",
+    "click {} to {} your {} .",
+    "why {} {} matters for {} .",
+];
+
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub n_words: usize,
+    /// Zipf exponent for unigram draws (≈1.0–1.2 for natural text).
+    pub zipf_s: f64,
+    /// Probability a sentence comes from a template vs the Markov chain.
+    pub template_prob: f64,
+    /// Markov-chain sentence length range (words).
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self { n_words: DEFAULT_WORDS, zipf_s: 1.1, template_prob: 0.3, min_len: 4, max_len: 24 }
+    }
+}
+
+/// Streaming document generator. Deterministic per seed.
+pub struct CorpusGenerator {
+    cfg: CorpusConfig,
+    words: Vec<String>,
+    zipf: Zipf,
+    rng: Xoshiro256,
+    /// order-2 chain state: hashed (prev2, prev1) perturbs the rank draw,
+    /// creating consistent local continuations without a dense table.
+    chain_salt: u64,
+}
+
+impl CorpusGenerator {
+    pub fn new(cfg: CorpusConfig, seed: u64) -> Self {
+        let words = (0..cfg.n_words).map(word_for_rank).collect();
+        let zipf = Zipf::new(cfg.n_words, cfg.zipf_s);
+        Self { words, zipf, rng: Xoshiro256::fold_in(seed, 0xC0D, 0), cfg, chain_salt: seed }
+    }
+
+    fn chain_next(&mut self, prev2: usize, prev1: usize) -> usize {
+        // Order-2 Markov step: each context picks among a small, fixed set
+        // of continuations (hash-derived), with Zipfian rank bias inside
+        // the set. This yields learnable bigram/trigram structure.
+        let ctx = (prev2 as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(prev1 as u64)
+            .wrapping_mul(0xBF58476D1CE4E5B9)
+            ^ self.chain_salt;
+        let branch = self.rng.next_below(4); // 4 continuations per context
+        let mut h = ctx.wrapping_add(branch.wrapping_mul(0x94D049BB133111EB));
+        h ^= h >> 31;
+        // Map into vocabulary with Zipf bias: low ranks more likely.
+        let base = self.zipf.sample(&mut self.rng);
+        ((h as usize) % 7 + base) % self.cfg.n_words
+    }
+
+    fn sentence(&mut self) -> String {
+        if self.rng.next_f64() < self.cfg.template_prob {
+            let t = TEMPLATES[self.rng.next_below(TEMPLATES.len() as u64) as usize];
+            let mut out = String::new();
+            for part in t.split("{}") {
+                out.push_str(part);
+                if out.len() < t.len() + 32 {
+                    let w = self.zipf.sample(&mut self.rng);
+                    out.push_str(&self.words[w]);
+                }
+            }
+            out
+        } else {
+            let len = self.cfg.min_len
+                + self.rng.next_below((self.cfg.max_len - self.cfg.min_len) as u64) as usize;
+            let mut prev2 = self.zipf.sample(&mut self.rng);
+            let mut prev1 = self.zipf.sample(&mut self.rng);
+            let mut out = format!("{} {}", self.words[prev2], self.words[prev1]);
+            for _ in 2..len {
+                let next = self.chain_next(prev2, prev1);
+                out.push(' ');
+                out.push_str(&self.words[next]);
+                prev2 = prev1;
+                prev1 = next;
+            }
+            out.push_str(" .");
+            out
+        }
+    }
+
+    /// Generate one document of roughly `approx_words` words.
+    pub fn document(&mut self, approx_words: usize) -> String {
+        let mut doc = String::new();
+        let mut count = 0;
+        while count < approx_words {
+            let s = self.sentence();
+            count += s.split(' ').count();
+            if !doc.is_empty() {
+                doc.push(' ');
+            }
+            doc.push_str(&s);
+        }
+        doc
+    }
+
+    /// Vocabulary accessor (tokenizer training uses a corpus sample).
+    pub fn words(&self) -> &[String] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = CorpusGenerator::new(CorpusConfig::default(), 1);
+        let mut b = CorpusGenerator::new(CorpusConfig::default(), 1);
+        assert_eq!(a.document(100), b.document(100));
+        let mut c = CorpusGenerator::new(CorpusConfig::default(), 2);
+        assert_ne!(a.document(100), c.document(100));
+    }
+
+    #[test]
+    fn documents_have_requested_size() {
+        let mut g = CorpusGenerator::new(CorpusConfig::default(), 3);
+        let doc = g.document(500);
+        let words = doc.split(' ').count();
+        assert!(words >= 500 && words < 700, "got {words} words");
+    }
+
+    #[test]
+    fn zipfian_rank_law_visible() {
+        // The most frequent word should dominate mid-rank words heavily.
+        let mut g = CorpusGenerator::new(CorpusConfig::default(), 4);
+        let doc = g.document(20_000);
+        let mut counts = std::collections::HashMap::<&str, usize>::new();
+        for w in doc.split(' ') {
+            *counts.entry(w).or_default() += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(freqs[0] > freqs[50] * 4, "top={} rank50={}", freqs[0], freqs[50]);
+    }
+
+    #[test]
+    fn templates_create_repetition() {
+        // Repeated boilerplate should produce many duplicate trigrams —
+        // the redundancy PAMM exploits.
+        let mut g =
+            CorpusGenerator::new(CorpusConfig { template_prob: 0.8, ..Default::default() }, 5);
+        let doc = g.document(5_000);
+        let toks: Vec<&str> = doc.split(' ').collect();
+        let mut tri = std::collections::HashMap::<(&str, &str, &str), usize>::new();
+        for w in toks.windows(3) {
+            *tri.entry((w[0], w[1], w[2])).or_default() += 1;
+        }
+        let repeated = tri.values().filter(|&&c| c > 2).count();
+        assert!(repeated > 20, "only {repeated} repeated trigrams");
+    }
+
+    #[test]
+    fn word_ranks_unique() {
+        let words: Vec<String> = (0..2000).map(word_for_rank).collect();
+        let mut dedup = words.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), words.len());
+    }
+}

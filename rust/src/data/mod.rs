@@ -1,0 +1,28 @@
+//! Data pipeline: synthetic corpus, tokenizer, packing, batching.
+//!
+//! The paper pretrains on C4 (Raffel et al., 2023). C4 isn't shippable in
+//! this environment, so we build the closest synthetic equivalent that
+//! exercises the same code paths *and the same statistical property PAMM
+//! exploits*: heavy cross-token redundancy. The generator composes
+//!
+//! * a Zipfian unigram word distribution (natural-language rank law),
+//! * an order-2 word-level Markov chain (local contextual similarity),
+//! * a pool of repeated sentence templates (boilerplate/padding patterns —
+//!   the paper's "repeated patterns, padding, or local contextual
+//!   similarity"),
+//!
+//! then tokenizes with a byte-pair-lite greedy tokenizer trained on a
+//! corpus sample, and packs token streams into fixed-length training rows
+//! (sequence packing à la Krell et al., 2022 — no cross-doc attention
+//! masking, matching the paper's plain-packing setup).
+//!
+//! Submodules: [`corpus`], [`tokenizer`], [`batcher`], [`glue`].
+
+pub mod batcher;
+pub mod corpus;
+pub mod glue;
+pub mod tokenizer;
+
+pub use batcher::{BatchIterator, TokenBatch};
+pub use corpus::CorpusGenerator;
+pub use tokenizer::Tokenizer;

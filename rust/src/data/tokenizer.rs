@@ -1,0 +1,216 @@
+//! Byte-pair-lite tokenizer.
+//!
+//! A word-piece-style greedy tokenizer trained from a corpus sample:
+//! start from the byte alphabet, repeatedly merge the most frequent
+//! adjacent symbol pair (classic BPE training), then encode new text by
+//! greedy longest-match over the learned vocabulary. Small (< 300 lines),
+//! deterministic, and fast enough to tokenize millions of words/s — the
+//! data pipeline must stay off the training critical path (§Perf).
+//!
+//! Special ids: 0 = PAD, 1 = BOS, 2 = EOS, 3 = UNK; byte/merge tokens
+//! start at 4.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+pub const SPECIAL_TOKENS: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// token id → string (ids ≥ SPECIAL_TOKENS).
+    vocab: Vec<String>,
+    /// Longest-match lookup.
+    lookup: HashMap<String, i32>,
+    max_piece_len: usize,
+}
+
+impl Tokenizer {
+    /// Train on `sample` until the vocabulary reaches `vocab_size`.
+    pub fn train(sample: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size > SPECIAL_TOKENS + 96, "vocab too small: {vocab_size}");
+
+        // Seed vocabulary: printable ASCII bytes (the corpus alphabet).
+        let mut vocab: Vec<String> =
+            (0x20u8..0x7F).map(|b| (b as char).to_string()).collect();
+
+        // Represent the sample as symbol sequences per word (space-split;
+        // the space itself is re-attached as a word prefix marker so that
+        // merges can cross into word boundaries like real BPE's "Ġ").
+        let mut words: HashMap<Vec<String>, usize> = HashMap::new();
+        for w in sample.split(' ') {
+            if w.is_empty() {
+                continue;
+            }
+            let mut syms: Vec<String> = vec![" ".to_string()];
+            syms.extend(w.chars().map(|c| c.to_string()));
+            *words.entry(syms).or_default() += 1;
+        }
+
+        while vocab.len() + SPECIAL_TOKENS < vocab_size {
+            // Count adjacent pairs.
+            let mut pair_counts: HashMap<(String, String), usize> = HashMap::new();
+            for (syms, &cnt) in &words {
+                for w in syms.windows(2) {
+                    *pair_counts.entry((w[0].clone(), w[1].clone())).or_default() += cnt;
+                }
+            }
+            // Deterministic argmax: count desc, then lexicographic.
+            let best = pair_counts.into_iter().max_by(|a, b| {
+                a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0))
+            });
+            let Some(((l, r), cnt)) = best else { break };
+            if cnt < 2 {
+                break; // nothing left worth merging
+            }
+            let merged = format!("{l}{r}");
+            vocab.push(merged.clone());
+            // Apply the merge everywhere.
+            let mut new_words = HashMap::with_capacity(words.len());
+            for (syms, cnt) in words.drain() {
+                let mut out = Vec::with_capacity(syms.len());
+                let mut i = 0;
+                while i < syms.len() {
+                    if i + 1 < syms.len() && syms[i] == l && syms[i + 1] == r {
+                        out.push(merged.clone());
+                        i += 2;
+                    } else {
+                        out.push(syms[i].clone());
+                        i += 1;
+                    }
+                }
+                *new_words.entry(out).or_default() += cnt;
+            }
+            words = new_words;
+        }
+
+        let mut lookup = HashMap::with_capacity(vocab.len());
+        let mut max_len = 1;
+        for (i, piece) in vocab.iter().enumerate() {
+            lookup.insert(piece.clone(), (i + SPECIAL_TOKENS) as i32);
+            max_len = max_len.max(piece.chars().count());
+        }
+        Tokenizer { vocab, lookup, max_piece_len: max_len }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len() + SPECIAL_TOKENS
+    }
+
+    /// Greedy longest-match encoding (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let chars: Vec<char> = text.chars().collect();
+        let mut out = Vec::with_capacity(chars.len() / 2);
+        let mut i = 0;
+        while i < chars.len() {
+            let mut matched = false;
+            let max_len = self.max_piece_len.min(chars.len() - i);
+            for len in (1..=max_len).rev() {
+                let piece: String = chars[i..i + len].iter().collect();
+                if let Some(&id) = self.lookup.get(&piece) {
+                    out.push(id);
+                    i += len;
+                    matched = true;
+                    break;
+                }
+            }
+            if !matched {
+                out.push(UNK);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Encode a document with sentence framing: BOS … EOS.
+    pub fn encode_document(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![BOS];
+        out.extend(self.encode(text));
+        out.push(EOS);
+        out
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            match id {
+                PAD | BOS | EOS => {}
+                UNK => out.push('\u{FFFD}'),
+                id => {
+                    let ix = id as usize - SPECIAL_TOKENS;
+                    if ix < self.vocab.len() {
+                        out.push_str(&self.vocab[ix]);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{CorpusConfig, CorpusGenerator};
+
+    fn sample() -> String {
+        let mut g = CorpusGenerator::new(CorpusConfig::default(), 42);
+        g.document(3000)
+    }
+
+    #[test]
+    fn roundtrip_lossless_on_corpus_text() {
+        let s = sample();
+        let tok = Tokenizer::train(&s, 512);
+        let head: String = s.chars().take(500).collect();
+        let ids = tok.encode(&head);
+        assert_eq!(tok.decode(&ids), head);
+    }
+
+    #[test]
+    fn vocab_size_respected() {
+        let tok = Tokenizer::train(&sample(), 512);
+        assert!(tok.vocab_size() <= 512);
+        assert!(tok.vocab_size() > 200, "merges should have happened");
+        let ids = tok.encode(&sample());
+        assert!(ids.iter().all(|&t| (t as usize) < tok.vocab_size()));
+    }
+
+    #[test]
+    fn merges_compress() {
+        let s = sample();
+        let small = Tokenizer::train(&s, 200);
+        let large = Tokenizer::train(&s, 1024);
+        let n_small = small.encode(&s).len();
+        let n_large = large.encode(&s).len();
+        assert!(
+            n_large * 10 < n_small * 9,
+            "larger vocab should compress better: {n_large} vs {n_small}"
+        );
+    }
+
+    #[test]
+    fn unknown_chars_map_to_unk() {
+        let tok = Tokenizer::train(&sample(), 300);
+        let ids = tok.encode("héllo"); // é is outside the ascii alphabet
+        assert!(ids.contains(&UNK));
+    }
+
+    #[test]
+    fn document_framing() {
+        let tok = Tokenizer::train(&sample(), 300);
+        let ids = tok.encode_document("abc");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let s = sample();
+        let a = Tokenizer::train(&s, 400);
+        let b = Tokenizer::train(&s, 400);
+        assert_eq!(a.encode(&s), b.encode(&s));
+    }
+}

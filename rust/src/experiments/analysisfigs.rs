@@ -1,0 +1,159 @@
+//! Appendix-H analysis figures on *captured* activations: Fig 5 (PCA
+//! cluster EDA), Fig 6 (relative L2 error grid), Fig 7 (coverage grid).
+//!
+//! Capture path: train `tiny` briefly through the PJRT stack, pull the
+//! embedding + first-layer norm gain from the checkpointed params, and
+//! compute `X₀ = rmsnorm(embed[tokens]) · g` natively — this is *exactly*
+//! the input the first attention block's Q/K/V projections see. (The
+//! paper uses layer 3 of LLaMA-60M at step 3000; layer-0 input at a
+//! smaller step is the same tensor species — substitution recorded in
+//! DESIGN.md.) The "gradient" matrix B for Fig 6 is synthetic Gaussian
+//! (the real ∇K is not observable from outside the fused HLO step without
+//! a dedicated capture artifact; error *shape* over (r, ε) is what the
+//! figure demonstrates).
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::write_csv;
+use crate::config::{RunConfig, Variant};
+use crate::coordinator::session::TrainSession;
+use crate::coordinator::pipeline::BatchPipeline;
+use crate::data::batcher::BatchIterator;
+use crate::pamm::{self, analysis, Eps};
+use crate::runtime::Engine;
+use crate::rngx::Xoshiro256;
+use crate::tensor::Mat;
+
+/// Train briefly and return X₀ = rmsnorm(embed[tokens]) ⊙ g₀  (b × d).
+fn capture_activation(engine: &Engine, quick: bool) -> Result<Mat> {
+    let cfg = RunConfig {
+        model: "tiny".into(),
+        variant: Variant::pamm(512),
+        batch: 8,
+        seq: 128,
+        steps: if quick { 15 } else { 100 },
+        seed: 42,
+        ..Default::default()
+    };
+    let vocab = engine.manifest.config("tiny").context("tiny config")?.vocab;
+    let mut session =
+        TrainSession::new(engine, &cfg.train_artifact(), None, cfg.seed)?;
+    let pipe = BatchPipeline::spawn(
+        BatchIterator::from_seed(vocab, cfg.batch, cfg.seq, cfg.seed),
+        2,
+    );
+    for _ in 0..cfg.steps {
+        let b = pipe.next();
+        session.step(&b.to_tensor())?;
+    }
+    let params = session.params_host()?;
+    let embed = params.iter().find(|(n, _)| n == "embed").context("embed")?.1.as_f32()?.to_vec();
+    let attn_norm =
+        params.iter().find(|(n, _)| n == "attn_norm").context("attn_norm")?.1.as_f32()?.to_vec();
+    let d = engine.manifest.config("tiny").unwrap().d_model;
+    let g0 = &attn_norm[..d]; // layer-0 norm gain
+
+    // One fresh batch through the embedding.
+    let mut it = BatchIterator::from_seed(vocab, cfg.batch, cfg.seq, 0xF16);
+    let batch = it.next_batch();
+    let tokens: Vec<i32> = batch.tokens[..cfg.batch * cfg.seq].to_vec();
+    let b_tokens = tokens.len();
+    let mut x = Mat::zeros(b_tokens, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        let emb = &embed[t as usize * d..(t as usize + 1) * d];
+        // rmsnorm(e) ⊙ g  — the exact QKV projection input of block 0.
+        let ms: f32 = emb.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = emb[j] * inv * g0[j];
+        }
+    }
+    Ok(x)
+}
+
+/// Fig 5: PCA of X and of its PAMM reconstruction, colored by f(i).
+pub fn fig5(engine: &Engine, quick: bool, out: &str) -> Result<()> {
+    let x = capture_activation(engine, quick)?;
+    let b = x.rows();
+    let k = (b / 64).max(2);
+    let mut rng = Xoshiro256::new(5);
+    let idx = pamm::sample_generators(&mut rng, b, k);
+    let comp = pamm::compress(&x, &idx, Eps::Inf);
+    let recon = comp.reconstruct();
+
+    let (_, proj_x) = analysis::pca_project(&x, 2, 40, 11);
+    // Project the reconstruction into the SAME PCA basis (paper's setup):
+    let (comps, _) = analysis::pca_project(&x, 2, 40, 11);
+    let mut rows = Vec::new();
+    for i in 0..b {
+        let rrow = recon.row(i);
+        let mut rp = [0f32; 2];
+        for c in 0..2 {
+            rp[c] = crate::tensor::dot(rrow, comps.row(c));
+        }
+        rows.push(format!(
+            "{},{},{},{},{},{}",
+            proj_x.get(i, 0),
+            proj_x.get(i, 1),
+            rp[0],
+            rp[1],
+            comp.assign[i],
+            comp.alpha[i]
+        ));
+    }
+    write_csv(format!("{out}/fig5.csv"), "pc1,pc2,recon_pc1,recon_pc2,assign,alpha", &rows)?;
+
+    // Quantitative summary: within-cluster variance shrink (the visual
+    // claim of Fig 5 — clusters collapse onto generator lines).
+    let var_of = |m: &Mat| -> f64 {
+        let (_, p) = analysis::pca_project(m, 2, 30, 13);
+        (0..m.rows()).map(|i| (p.get(i, 0) as f64).powi(2) + (p.get(i, 1) as f64).powi(2)).sum::<f64>()
+            / m.rows() as f64
+    };
+    let vx = var_of(&x);
+    let vr = var_of(&recon);
+    println!("fig5: b={b}, k={k}; PCA-plane variance X={vx:.4}, X̃={vr:.4} (ratio {:.2})", vr / vx);
+    println!("      per-point rows written to {out}/fig5.csv");
+    println!("\nshape check: overall variance preserved (ratio near 1), clusters → lines (paper Fig 5).");
+    Ok(())
+}
+
+const RS: [f64; 5] = [1.0 / 8.0, 1.0 / 32.0, 1.0 / 128.0, 1.0 / 256.0, 1.0 / 512.0];
+const EPSS: [Option<f64>; 5] = [Some(0.0), Some(0.2), Some(0.5), Some(1.0), None];
+
+/// Fig 6: relative L2 error E(r, ε) on the captured activation.
+pub fn fig6(engine: &Engine, quick: bool, out: &str) -> Result<()> {
+    let x = capture_activation(engine, quick)?;
+    let mut rng = Xoshiro256::new(6);
+    let bmat = Mat::random_normal(x.rows(), x.cols(), 1.0, &mut rng);
+    let trials = if quick { 2 } else { 5 };
+    let cells = analysis::error_sweep(&x, &bmat, &RS, &EPSS, trials, 0xF16);
+    let mut rows = Vec::new();
+    println!("{:<10} {:<8} {:>10}", "1/r", "eps", "rel_err");
+    for c in &cells {
+        let etag = c.eps.map(|e| format!("{e}")).unwrap_or_else(|| "inf".into());
+        println!("{:<10.0} {:<8} {:>10.4}", 1.0 / c.r, etag, c.value);
+        rows.push(format!("{},{etag},{}", 1.0 / c.r, c.value));
+    }
+    write_csv(format!("{out}/fig6.csv"), "inv_r,eps,rel_err", &rows)?;
+    println!("\nshape check: error ↓ with ε, grows only slowly as r shrinks; ε=∞ best (paper Fig 6; abs. values 0.5–1 at small r match App. H).");
+    Ok(())
+}
+
+/// Fig 7: coverage over (r, ε) on the captured activation.
+pub fn fig7(engine: &Engine, quick: bool, out: &str) -> Result<()> {
+    let x = capture_activation(engine, quick)?;
+    let trials = if quick { 2 } else { 5 };
+    let cells = analysis::coverage_sweep(&x, &RS, &EPSS, trials, 0xF17);
+    let mut rows = Vec::new();
+    println!("{:<10} {:<8} {:>10}", "1/r", "eps", "coverage");
+    for c in &cells {
+        let etag = c.eps.map(|e| format!("{e}")).unwrap_or_else(|| "inf".into());
+        println!("{:<10.0} {:<8} {:>10.4}", 1.0 / c.r, etag, c.value);
+        rows.push(format!("{},{etag},{}", 1.0 / c.r, c.value));
+    }
+    write_csv(format!("{out}/fig7.csv"), "inv_r,eps,coverage", &rows)?;
+    println!("\nshape check: coverage ↑ with ε and with r; ε=∞ ⇒ 1.0 (paper Fig 7).");
+    Ok(())
+}

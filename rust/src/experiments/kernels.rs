@@ -1,0 +1,170 @@
+//! Kernel cross-validation: native Rust PAMM vs the AOT artifacts
+//! (Pallas interpret kernels + jnp reference), on identical inputs.
+//!
+//! This is the three-implementation agreement check DESIGN.md promises:
+//! jnp-ref == Pallas == native-Rust, executed through the *real* runtime
+//! (HLO text → PJRT compile → execute), not a Python shortcut.
+
+use anyhow::{bail, Context, Result};
+
+use crate::pamm::{self, Eps};
+use crate::runtime::{ArtifactMeta, Engine, HostTensor};
+use crate::rngx::Xoshiro256;
+use crate::tensor::Mat;
+
+fn dims(meta: &ArtifactMeta, input: &str) -> Result<Vec<usize>> {
+    Ok(meta
+        .inputs
+        .iter()
+        .find(|i| i.name == input)
+        .with_context(|| format!("{}: no input {input}", meta.name))?
+        .shape
+        .clone())
+}
+
+fn mat_tensor(m: &Mat) -> HostTensor {
+    HostTensor::f32(vec![m.rows(), m.cols()], m.data().to_vec())
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Validate every kernel artifact in the manifest; returns count checked.
+pub fn validate_kernels(engine: &Engine) -> Result<usize> {
+    let kernels: Vec<ArtifactMeta> = engine
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "kernel")
+        .cloned()
+        .collect();
+    if kernels.is_empty() {
+        bail!("no kernel artifacts in manifest — run `make artifacts`");
+    }
+    let mut rng = Xoshiro256::new(0xC0FFEE);
+    let mut checked = 0;
+
+    for meta in &kernels {
+        match meta.kernel.as_deref() {
+            Some("pamm_compress") => {
+                let a_shape = dims(meta, "a")?;
+                let c_shape = dims(meta, "c")?;
+                let (b, n, k) = (a_shape[0], a_shape[1], c_shape[0]);
+                let a = Mat::random_normal(b, n, 1.0, &mut rng);
+                let idx = pamm::sample_generators(&mut rng, b, k);
+                let c = a.gather_rows(&idx);
+                let exec = engine.executable(&meta.name)?;
+                let out = exec.run(&[mat_tensor(&a), mat_tensor(&c)])?;
+                let native = pamm::compress(&a, &idx, Eps::Inf);
+                let f_hlo = out[0].as_i32()?;
+                let al_hlo = out[1].as_f32()?;
+                let beta_hlo = out[2].scalar()?;
+                let f_nat: Vec<i32> = native.assign.iter().map(|&x| x as i32).collect();
+                if f_hlo != f_nat.as_slice() {
+                    bail!("{}: assignment mismatch", meta.name);
+                }
+                let d = max_diff(al_hlo, &native.alpha);
+                if d > 1e-3 {
+                    bail!("{}: alpha diff {d}", meta.name);
+                }
+                if (beta_hlo - native.beta).abs() > 1e-4 {
+                    bail!("{}: beta {} vs {}", meta.name, beta_hlo, native.beta);
+                }
+                checked += 1;
+            }
+            Some("pamm_apply") => {
+                let c_shape = dims(meta, "c")?;
+                let b_shape = dims(meta, "b_mat")?;
+                let (k, n) = (c_shape[0], c_shape[1]);
+                let (b, m) = (b_shape[0], b_shape[1]);
+                // Build a real compressed rep so f/alpha are realistic.
+                let a = Mat::random_normal(b, n, 1.0, &mut rng);
+                let idx = pamm::sample_generators(&mut rng, b, k);
+                let comp = pamm::compress(&a, &idx, Eps::Inf);
+                let bm = Mat::random_normal(b, m, 1.0, &mut rng);
+                let exec = engine.executable(&meta.name)?;
+                let out = exec.run(&[
+                    mat_tensor(&comp.generators),
+                    HostTensor::i32(
+                        vec![b],
+                        comp.assign.iter().map(|&x| x as i32).collect(),
+                    ),
+                    HostTensor::f32(vec![b], comp.alpha.clone()),
+                    HostTensor::scalar_f32(comp.beta),
+                    mat_tensor(&bm),
+                ])?;
+                let native = pamm::apply(&comp, &bm);
+                let d = max_diff(out[0].as_f32()?, native.data());
+                if d > 2e-2 {
+                    bail!("{}: apply diff {d}", meta.name);
+                }
+                checked += 1;
+            }
+            Some("pamm_matmul") => {
+                let a_shape = dims(meta, "a")?;
+                let b_shape = dims(meta, "b_mat")?;
+                let g_shape = dims(meta, "gen_idx")?;
+                let (b, n, m, k) = (a_shape[0], a_shape[1], b_shape[1], g_shape[0]);
+                let a = Mat::random_normal(b, n, 1.0, &mut rng);
+                let bm = Mat::random_normal(b, m, 1.0, &mut rng);
+                let idx = pamm::sample_generators(&mut rng, b, k);
+                let exec = engine.executable(&meta.name)?;
+                let out = exec.run(&[
+                    mat_tensor(&a),
+                    mat_tensor(&bm),
+                    HostTensor::i32(vec![k], idx.iter().map(|&x| x as i32).collect()),
+                ])?;
+                let native = pamm::pamm_matmul(&a, &bm, &idx, Eps::Inf);
+                let d = max_diff(out[0].as_f32()?, native.data());
+                let scale = native.frob_norm() / ((n * m) as f32).sqrt();
+                if d > 1e-2 * scale.max(1.0) {
+                    bail!("{}: pipeline diff {d} (scale {scale})", meta.name);
+                }
+                checked += 1;
+            }
+            Some("exact_matmul") => {
+                let a_shape = dims(meta, "a")?;
+                let b_shape = dims(meta, "b_mat")?;
+                let (b, n, m) = (a_shape[0], a_shape[1], b_shape[1]);
+                let _ = n;
+                let a = Mat::random_normal(b, a_shape[1], 1.0, &mut rng);
+                let bm = Mat::random_normal(b, m, 1.0, &mut rng);
+                let exec = engine.executable(&meta.name)?;
+                let out = exec.run(&[mat_tensor(&a), mat_tensor(&bm)])?;
+                let native = pamm::exact_matmul(&a, &bm);
+                let d = max_diff(out[0].as_f32()?, native.data());
+                if d > 2e-2 {
+                    bail!("{}: exact matmul diff {d}", meta.name);
+                }
+                checked += 1;
+            }
+            Some("flash_attention") | Some("attention_ref") => {
+                checked += 1; // compared pairwise below
+            }
+            other => bail!("unknown kernel artifact kind {other:?}"),
+        }
+    }
+
+    // Flash vs exact attention artifact pair (composability witness).
+    let flash = kernels.iter().find(|a| a.kernel.as_deref() == Some("flash_attention"));
+    let exact = kernels.iter().find(|a| a.kernel.as_deref() == Some("attention_ref"));
+    if let (Some(fl), Some(ex)) = (flash, exact) {
+        let q_shape = dims(fl, "q")?;
+        let total: usize = q_shape.iter().product();
+        let mk = |rng: &mut Xoshiro256| {
+            let mut v = vec![0f32; total];
+            rng.fill_normal_f32(&mut v, 1.0);
+            HostTensor::f32(q_shape.clone(), v)
+        };
+        let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let out_f = engine.executable(&fl.name)?.run(&[q.clone(), k.clone(), v.clone()])?;
+        let out_e = engine.executable(&ex.name)?.run(&[q, k, v])?;
+        let d = max_diff(out_f[0].as_f32()?, out_e[0].as_f32()?);
+        if d > 1e-3 {
+            bail!("flash vs exact attention diff {d}");
+        }
+    }
+
+    Ok(checked)
+}

@@ -1,0 +1,57 @@
+//! Experiment harness — one entry per table & figure of the paper
+//! (DESIGN.md §3 maps each id to modules and expectations).
+//!
+//! Every harness prints the paper-style rows AND writes a CSV under the
+//! `--out` directory so EXPERIMENTS.md can cite machine-readable results.
+//! `--quick` shrinks step counts/grids for CI; the full settings are the
+//! ones recorded in EXPERIMENTS.md.
+
+pub mod analysisfigs;
+pub mod finetune;
+pub mod kernels;
+pub mod pretrain;
+pub mod throughput;
+
+use anyhow::{bail, Result};
+
+pub use kernels::validate_kernels;
+
+use crate::runtime::Engine;
+
+pub fn run(engine: &Engine, name: &str, quick: bool, out: &str) -> Result<()> {
+    std::fs::create_dir_all(out)?;
+    match name {
+        "fig3a" => pretrain::fig3a(engine, quick, out),
+        "fig3b" => pretrain::fig3b(engine, out),
+        "table5" => pretrain::table5(engine, quick, out),
+        "table3" => pretrain::table3(engine, quick, out),
+        "fig4a" => pretrain::fig4a(engine, quick, out),
+        "fig4b" => pretrain::fig4b(engine, quick, out),
+        "table6" => pretrain::table6(engine, quick, out),
+        "table2a" => throughput::table2a(engine, quick, out),
+        "table2b" => throughput::table2b(engine, quick, out),
+        "table7" => throughput::table7(quick, out),
+        "table1" => finetune::table1(engine, quick, out),
+        "table4" => finetune::table4(engine, quick, out),
+        "fig5" => analysisfigs::fig5(engine, quick, out),
+        "fig6" => analysisfigs::fig6(engine, quick, out),
+        "fig7" => analysisfigs::fig7(engine, quick, out),
+        "kernels" => {
+            let n = validate_kernels(engine)?;
+            println!("kernel validation OK ({n} artifacts)");
+            Ok(())
+        }
+        "all" => {
+            for exp in [
+                "kernels", "fig3b", "table7", "fig5", "fig6", "fig7", "table2a",
+                "table2b", "fig3a", "table5", "table3", "fig4a", "fig4b", "table6",
+                "table1", "table4",
+            ] {
+                println!("\n================ {exp} ================");
+                run(engine, exp, quick, out)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment `{other}` (see `pamm help`)"),
+    }
+}

@@ -1,0 +1,32 @@
+//! # pamm — "QKV Projections Require a Fraction of Their Memory"
+//!
+//! Production-grade reproduction of PAMM (Point-Approximate Matrix
+//! Multiplication) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels`) — Pallas kernels: PAMM compress /
+//!   one-hot-matmul apply, flash attention (build time only).
+//! * **L2** (`python/compile`) — JAX LLaMA-family model with PAMM
+//!   custom-vjp projections, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L3** (this crate) — the runtime: PJRT engine, training
+//!   coordinator, native PAMM twin, data pipeline, memory accountant,
+//!   experiment harness (one per paper table/figure — see DESIGN.md).
+//!
+//! Python never runs on the request path: `make artifacts` once, then the
+//! Rust binary is self-contained.
+
+pub mod benchx;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod jsonx;
+pub mod memory;
+pub mod metrics;
+pub mod pamm;
+pub mod poolx;
+pub mod propx;
+pub mod rngx;
+pub mod runtime;
+pub mod tensor;

@@ -1,0 +1,241 @@
+//! `pamm` — leader entrypoint.
+//!
+//! Subcommands (see `cli::USAGE`): train / finetune / reproduce / memory /
+//! kernels / list. Python never runs here: every computation comes from
+//! `artifacts/*.hlo.txt` via the PJRT engine or from the native substrates.
+
+use anyhow::{bail, Context, Result};
+
+use pamm::cli::{Args, USAGE};
+use pamm::config::{preset, RunConfig, Variant};
+use pamm::coordinator::train_run;
+use pamm::data::glue;
+use pamm::memory::{self, ModelGeometry};
+use pamm::runtime::{Engine, HostTensor};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "finetune" => cmd_finetune(&args),
+        "reproduce" => cmd_reproduce(&args),
+        "memory" => cmd_memory(&args),
+        "kernels" => cmd_kernels(&args),
+        "list" => cmd_list(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get_str("preset") {
+        Some(p) => preset(&p)?,
+        None => RunConfig::default(),
+    };
+    if let Some(path) = args.get_str("config") {
+        cfg.load_file(&path)?;
+    }
+    if let Some(m) = args.get_str("model") {
+        cfg.model = m;
+    }
+    if let Some(v) = args.get_str("variant") {
+        cfg.variant.mode = v;
+        if cfg.variant.mode != "baseline" && cfg.variant.r >= 1.0 {
+            cfg.variant.r = 1.0 / 512.0;
+        }
+    }
+    if let Some(ri) = args.get_usize("r-inv")? {
+        cfg.variant.r = 1.0 / ri as f64;
+        if cfg.variant.mode == "baseline" {
+            cfg.variant.mode = "pamm".into();
+        }
+    }
+    if let Some(e) = args.get_f64("eps")? {
+        cfg.variant.eps = if e < 0.0 { None } else { Some(e) };
+    }
+    if args.get_bool("pallas") {
+        cfg.variant.use_pallas = true;
+    }
+    if let Some(v) = args.get_usize("steps")? {
+        cfg.steps = v;
+    }
+    if let Some(v) = args.get_usize("batch")? {
+        cfg.batch = v;
+    }
+    if let Some(v) = args.get_usize("seq")? {
+        cfg.seq = v;
+    }
+    if let Some(v) = args.get_usize("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_usize("grad-accum")? {
+        cfg.grad_accum = v;
+    }
+    if let Some(v) = args.get_usize("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(s) = args.get_usize("seed")? {
+        cfg.seed = s as u64;
+    }
+    if let Some(d) = args.get_str("artifacts") {
+        cfg.artifacts_dir = d;
+    }
+    if let Some(d) = args.get_str("run-dir") {
+        cfg.run_dir = d;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let engine = Engine::load(&cfg.artifacts_dir)?;
+    println!(
+        "training {} [{}] for {} steps (batch {}×{}, workers {}, accum {})",
+        cfg.model, cfg.variant.tag(), cfg.steps, cfg.batch, cfg.seq, cfg.workers, cfg.grad_accum
+    );
+    let out = train_run(&engine, &cfg, args.get_bool("quiet"))?;
+    println!(
+        "done: final loss {:.4}{}{}",
+        out.final_loss,
+        out.final_ppl.map(|p| format!(", eval ppl {p:.2}")).unwrap_or_default(),
+        out.tokens_per_sec.map(|t| format!(", {t:.0} tok/s")).unwrap_or_default()
+    );
+    println!("run log: {}/{}.jsonl", cfg.run_dir, out.run_name);
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    use pamm::coordinator::pipeline::LabeledPipeline;
+    use pamm::coordinator::ClassifierSession;
+
+    let task_name = args.get_str("task").context("--task required (e.g. SST2, AID)")?;
+    let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
+    let engine = Engine::load(&artifacts)?;
+
+    let suite = glue::glue_suite();
+    let spec = suite
+        .iter()
+        .find(|t| t.name.eq_ignore_ascii_case(&task_name))
+        .cloned()
+        .or_else(|| (task_name.eq_ignore_ascii_case("aid")).then(glue::aid_task))
+        .with_context(|| format!("unknown task {task_name}"))?;
+
+    let model = if spec.name == "AID" { "aid" } else { "glue" };
+    let r_inv = args.get_usize("r-inv")?.unwrap_or(0);
+    let variant = if r_inv == 0 { Variant::baseline() } else { Variant::pamm(r_inv as u32) };
+    let meta = engine
+        .find(|a| {
+            a.kind == "cls_train_step"
+                && a.config.as_deref() == Some(model)
+                && a.variant_tag() == variant.tag()
+        })
+        .with_context(|| format!("no cls artifact for {model}/{}", variant.tag()))?
+        .clone();
+    let eval_name = meta
+        .name
+        .replace("clstrain", "clseval")
+        .replace(&format!("_{}_", variant.tag()), "_");
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let steps = args
+        .get_usize("steps")?
+        .unwrap_or(meta.train.as_ref().map(|t| t.steps).unwrap_or(200));
+
+    let mut session = ClassifierSession::new(&engine, &meta.name, &eval_name, seed)?;
+    let vocab = engine.manifest.config(model).map(|c| c.vocab).unwrap_or(512);
+    let gen = glue::TaskGenerator::new(spec.clone(), vocab, seed);
+    let pipe = LabeledPipeline::spawn(gen, session.batch, session.seq, 2);
+
+    for s in 0..steps {
+        let b = pipe.next();
+        let loss = session.step(
+            &HostTensor::i32(vec![b.batch, b.seq], b.tokens.clone()),
+            &HostTensor::i32(vec![b.batch], b.labels.clone()),
+        )?;
+        if s % (steps / 10).max(1) == 0 {
+            println!("step {s:>4}  loss {loss:.4}");
+        }
+    }
+
+    // Evaluate on a held-out stream.
+    let mut gen = glue::TaskGenerator::new(spec.clone(), vocab, seed ^ 0xE);
+    let (mut preds, mut golds) = (Vec::new(), Vec::new());
+    for _ in 0..16 {
+        let b = gen.batch(session.batch, session.seq);
+        let p = session.predict(&HostTensor::i32(vec![b.batch, b.seq], b.tokens.clone()))?;
+        preds.extend(p);
+        golds.extend(b.labels);
+    }
+    println!(
+        "{}: {} = {:.2}",
+        spec.name,
+        match spec.metric {
+            glue::Metric::Accuracy => "accuracy",
+            glue::Metric::F1 => "F1",
+            glue::Metric::Matthews => "Matthews",
+            glue::Metric::Pearson => "Pearson",
+        },
+        glue::score(&spec, &preds, &golds)
+    );
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let name = args.pos(0, "experiment id")?;
+    let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
+    let out = args.get_str("out").unwrap_or_else(|| "results".into());
+    let engine = Engine::load(&artifacts)?;
+    pamm::experiments::run(&engine, name, args.get_bool("quick"), &out)
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let model = args.get_str("model").unwrap_or_else(|| "llama60m".into());
+    let batch = args.get_usize("batch")?.unwrap_or(64);
+    let seq = args.get_usize("seq")?.unwrap_or(256);
+    let r_inv = args.get_usize("r-inv")?.unwrap_or(512);
+    let g =
+        ModelGeometry::by_name(&model).with_context(|| format!("unknown model `{model}`"))?;
+    let rep = memory::report(&g, batch, seq, Some(1.0 / r_inv as f64));
+    println!("model {model}: {} params", g.param_count());
+    println!(
+        "QKV activations @ batch {batch} × seq {seq}: baseline {}, PAMM(r=1/{r_inv}) {} ({:.2}% saved)",
+        memory::fmt_bytes(rep.baseline_bytes),
+        memory::fmt_bytes(rep.pamm_bytes.unwrap()),
+        rep.savings_pct().unwrap()
+    );
+    Ok(())
+}
+
+/// Validate the native PAMM twin against the AOT kernel artifacts.
+fn cmd_kernels(args: &Args) -> Result<()> {
+    let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
+    let engine = Engine::load(&artifacts)?;
+    let n = pamm::experiments::validate_kernels(&engine)?;
+    println!("kernel validation OK ({n} artifacts checked)");
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
+    let engine = Engine::load(&artifacts)?;
+    println!("{:<44} {:<14} {:>8} {:>8}", "name", "kind", "inputs", "outputs");
+    for a in &engine.manifest.artifacts {
+        println!(
+            "{:<44} {:<14} {:>8} {:>8}",
+            a.name,
+            a.kind,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}

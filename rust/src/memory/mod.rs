@@ -1,0 +1,298 @@
+//! Activation-memory accountant — the paper's memory story, made exact.
+//!
+//! Fig. 3b, Table 1, Table 4 and Table 5 all report "memory consumed by
+//! the activations of the Q, K, V projection layers". That quantity is an
+//! exact analytic function of the model geometry and batch shape, so we
+//! reproduce it *at the paper's own scales* (LLaMA-60M…7B, RoBERTa-base)
+//! analytically, and cross-validate the formulas at runnable scales
+//! against the native `pamm::Compressed::stored_bytes` of real tensors
+//! (integration tests).
+//!
+//! Accounting conventions (documented, because the paper is implicit):
+//!
+//! * Q, K and V projections of one attention block read the *same*
+//!   RMSNorm output; a framework that saves tensors by storage keeps ONE
+//!   copy per block. `qkv_saved_bytes` therefore counts `n_layers` copies
+//!   (not 3×). The paper's Table 5 numbers for full-rank LLaMA match this
+//!   convention at fp32 for 60M (b=131072: 8·b·512·4 ≈ 2 GB global ⇒
+//!   256 MB per GPU at 8-way DDP — exactly the table's "256 MB").
+//! * PAMM replaces that tensor with C (k×n) + α (b f32) + f (b i32) + β,
+//!   per block — `pamm_saved_bytes` (the paper's App. D "this includes
+//!   the α and f(·)").
+
+use crate::runtime::ConfigMeta;
+
+pub const BYTES_F32: usize = 4;
+
+/// Model geometry needed by the accountant (mirrors python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelGeometry {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl ModelGeometry {
+    pub fn from_meta(m: &ConfigMeta) -> Self {
+        Self {
+            name: m.name.clone(),
+            vocab: m.vocab,
+            d_model: m.d_model,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            d_ff: m.d_ff,
+        }
+    }
+
+    /// The paper-scale zoo (matches python/compile/model.py CONFIGS).
+    pub fn zoo() -> Vec<ModelGeometry> {
+        let mk = |name: &str, vocab, d_model, n_layers, n_heads, d_ff| ModelGeometry {
+            name: name.into(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+        };
+        vec![
+            mk("nano", 256, 64, 2, 2, 176),
+            mk("tiny", 512, 128, 4, 4, 344),
+            mk("small", 1024, 256, 6, 8, 688),
+            mk("medium", 2048, 512, 8, 8, 1376),
+            mk("llama60m", 32000, 512, 8, 8, 1376),
+            mk("llama350m", 32000, 1024, 24, 16, 2736),
+            mk("llama1b", 32000, 2048, 24, 32, 5461),
+            mk("llama7b", 32000, 4096, 32, 32, 11008),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelGeometry> {
+        Self::zoo().into_iter().find(|g| g.name == name)
+    }
+
+    /// Exact trainable-parameter count (must equal the manifest's
+    /// `param_count` — cross-checked in integration tests).
+    pub fn param_count(&self) -> usize {
+        let (d, f, v, l) = (self.d_model, self.d_ff, self.vocab, self.n_layers);
+        let per_layer = 4 * d * d + 3 * d * f + 2 * d;
+        v * d + l * per_layer + d + d * v
+    }
+
+    /// FLOPs per token for one fwd+bwd step (standard 6·N approximation
+    /// plus exact attention terms) — used by throughput projections.
+    pub fn train_flops_per_token(&self, seq: usize) -> f64 {
+        let n = self.param_count() as f64;
+        let attn = (self.n_layers * seq * self.d_model) as f64 * 2.0; // scores+mix
+        6.0 * n + 6.0 * attn
+    }
+}
+
+/// Memory report row for one (model, batch-shape, variant) cell.
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    pub model: String,
+    pub batch: usize,
+    pub seq: usize,
+    /// Full-rank saved activations of all QKV projections (bytes).
+    pub baseline_bytes: usize,
+    /// PAMM replacement (bytes), if a ratio was given.
+    pub pamm_bytes: Option<usize>,
+    pub r: Option<f64>,
+}
+
+impl MemoryReport {
+    pub fn savings_pct(&self) -> Option<f64> {
+        self.pamm_bytes
+            .map(|p| 100.0 * (1.0 - p as f64 / self.baseline_bytes.max(1) as f64))
+    }
+}
+
+/// Bytes saved-for-backward by all QKV projections, full baseline.
+/// One shared input per block (see module docs), `n_layers` blocks.
+pub fn qkv_saved_bytes(g: &ModelGeometry, batch: usize, seq: usize, bytes_per: usize) -> usize {
+    g.n_layers * batch * seq * g.d_model * bytes_per
+}
+
+/// PAMM's replacement: per block C (k×n) + α (b×f32) + f (b×i32) + β.
+pub fn pamm_saved_bytes(
+    g: &ModelGeometry,
+    batch: usize,
+    seq: usize,
+    r: f64,
+    bytes_per: usize,
+) -> usize {
+    let b = batch * seq;
+    let k = ((r * b as f64).ceil() as usize).max(1);
+    let per_proj = k * g.d_model * bytes_per + b * bytes_per + b * 4 + 4;
+    g.n_layers * 3 * per_proj
+}
+
+/// Uniform-CRS replacement: the k sampled rows + indices, per block.
+pub fn crs_saved_bytes(g: &ModelGeometry, batch: usize, seq: usize, r: f64) -> usize {
+    let b = batch * seq;
+    let k = ((r * b as f64).ceil() as usize).max(1);
+    g.n_layers * (k * g.d_model * BYTES_F32 + k * 4)
+}
+
+/// CompAct replacement: the (b, k) sketch per block.
+pub fn compact_saved_bytes(g: &ModelGeometry, batch: usize, seq: usize, r: f64) -> usize {
+    let b = batch * seq;
+    let k = ((r * b as f64).ceil() as usize).max(1);
+    g.n_layers * (b * k * BYTES_F32 + 8)
+}
+
+pub fn report(g: &ModelGeometry, batch: usize, seq: usize, r: Option<f64>) -> MemoryReport {
+    MemoryReport {
+        model: g.name.clone(),
+        batch,
+        seq,
+        baseline_bytes: qkv_saved_bytes(g, batch, seq, BYTES_F32),
+        pamm_bytes: r.map(|r| pamm_saved_bytes(g, batch, seq, r, BYTES_F32)),
+        r,
+    }
+}
+
+pub fn fmt_bytes(b: usize) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.1} MB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.1} KB", b / KB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Peak-memory *tracker* for live runs: the coordinator feeds it per-step
+/// allocation observations (activation bytes are analytic; host-side
+/// buffers are measured) and it keeps high-water marks per tag.
+#[derive(Debug, Default)]
+pub struct PeakTracker {
+    peaks: std::collections::BTreeMap<String, usize>,
+}
+
+impl PeakTracker {
+    pub fn observe(&mut self, tag: &str, bytes: usize) {
+        let e = self.peaks.entry(tag.to_string()).or_insert(0);
+        if bytes > *e {
+            *e = bytes;
+        }
+    }
+    pub fn peak(&self, tag: &str) -> usize {
+        self.peaks.get(tag).copied().unwrap_or(0)
+    }
+    pub fn rows(&self) -> impl Iterator<Item = (&String, &usize)> {
+        self.peaks.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(name: &str) -> ModelGeometry {
+        ModelGeometry::by_name(name).unwrap()
+    }
+
+    #[test]
+    fn paper_table5_full_rank_60m() {
+        // Paper setup: global batch 512 × seq 256 on 8 GPUs ⇒ per-GPU
+        // b = 64·256 = 16384 tokens. LLaMA-60M: 8 layers, d=512, fp32.
+        // 8 · 16384 · 512 · 4 B = 256 MB — exactly Table 5's "256 MB".
+        let bytes = qkv_saved_bytes(&g("llama60m"), 64, 256, BYTES_F32);
+        assert_eq!(bytes, 256 * 1024 * 1024);
+    }
+
+    #[test]
+    fn paper_table5_full_rank_1b() {
+        // LLaMA-1B: 24 layers, d=2048, per-GPU b = 16384, fp32 ⇒ 3 GB
+        // (Table 5's "3 GB").
+        let bytes = qkv_saved_bytes(&g("llama1b"), 64, 256, BYTES_F32);
+        assert_eq!(bytes, 3 * 1024 * 1024 * 1024);
+    }
+
+    #[test]
+    fn paper_table5_pamm_is_a_few_mb() {
+        // Table 5 reports 3.5 MB at r=1/512 for 60M (incl. α and f).
+        let bytes = pamm_saved_bytes(&g("llama60m"), 64, 256, 1.0 / 512.0, BYTES_F32);
+        let mb = bytes as f64 / (1024.0 * 1024.0);
+        assert!((2.0..6.0).contains(&mb), "got {mb} MB");
+        // And savings > 97% at every size (Fig. 3b claim).
+        for name in ["llama60m", "llama350m", "llama1b", "llama7b"] {
+            let rep = report(&g(name), 64, 256, Some(1.0 / 512.0));
+            assert!(rep.savings_pct().unwrap() > 97.0, "{name}: {:?}", rep.savings_pct());
+        }
+    }
+
+    #[test]
+    fn savings_monotone_in_r() {
+        let gm = g("llama350m");
+        let s512 = pamm_saved_bytes(&gm, 64, 256, 1.0 / 512.0, BYTES_F32);
+        let s128 = pamm_saved_bytes(&gm, 64, 256, 1.0 / 128.0, BYTES_F32);
+        let s16 = pamm_saved_bytes(&gm, 64, 256, 1.0 / 16.0, BYTES_F32);
+        assert!(s512 < s128 && s128 < s16);
+    }
+
+    #[test]
+    fn compact_dominates_pamm_at_equal_r() {
+        // The Fig. 4a x-axis gap: CompAct's (b,k) sketch ≫ PAMM's k·n + 2b
+        // whenever k > n/b·k + 2 — true for every paper setting.
+        let gm = g("llama60m");
+        let r = 1.0 / 128.0;
+        assert!(
+            compact_saved_bytes(&gm, 64, 256, r) > pamm_saved_bytes(&gm, 64, 256, r, BYTES_F32)
+        );
+    }
+
+    #[test]
+    fn param_counts_are_in_the_advertised_ballpark() {
+        // Names are nominal; counts should land within ~35% of the label
+        // (the paper's own "60M/350M/1B/7B" are similarly nominal).
+        let expect = [
+            ("llama60m", 58e6),
+            ("llama350m", 345e6),
+            ("llama1b", 1.2e9),
+            ("llama7b", 6.8e9),
+        ];
+        for (name, approx) in expect {
+            let n = g(name).param_count() as f64;
+            assert!(
+                (n / approx - 1.0).abs() < 0.35,
+                "{name}: {n:.2e} vs nominal {approx:.1e}"
+            );
+        }
+    }
+
+    #[test]
+    fn fmt_bytes_readable() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.00 GB");
+        assert!(fmt_bytes(256 * 1024 * 1024).starts_with("256"));
+    }
+
+    #[test]
+    fn peak_tracker_high_water() {
+        let mut t = PeakTracker::default();
+        t.observe("qkv", 100);
+        t.observe("qkv", 50);
+        t.observe("qkv", 120);
+        assert_eq!(t.peak("qkv"), 120);
+        assert_eq!(t.peak("missing"), 0);
+    }
+
+    #[test]
+    fn k_floor_of_one_generator() {
+        // Finetuning can have r·b < 1 (paper App. G: k = 1); the formula
+        // must floor at one generator, never zero.
+        let gm = g("tiny");
+        let bytes = pamm_saved_bytes(&gm, 1, 8, 1.0 / 512.0, BYTES_F32);
+        // k=1 ⇒ per projection: 1·128·4 + 8·4 + 8·4 + 4 = 580; ×3 per block.
+        assert_eq!(bytes, gm.n_layers * 3 * (128 * 4 + 8 * 4 + 8 * 4 + 4));
+    }
+}

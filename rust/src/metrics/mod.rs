@@ -1,0 +1,253 @@
+//! Training metrics: loss/perplexity tracking, throughput meters,
+//! and structured run logs (JSONL + CSV — no external deps).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::jsonx::{self, Value};
+
+/// Exponential moving average (loss smoothing for the printed curve).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Loss → perplexity (the paper reports ppl = exp(mean nats/token)).
+pub fn perplexity(loss_nats: f64) -> f64 {
+    loss_nats.exp()
+}
+
+/// Online mean/min/max/std accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Tokens/sec throughput meter with warmup skipping (paper Table 2
+/// methodology: average over steady-state iterations).
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    warmup: usize,
+    seen: usize,
+    tokens: usize,
+    start: Option<Instant>,
+}
+
+impl ThroughputMeter {
+    pub fn new(warmup_steps: usize) -> Self {
+        Self { warmup: warmup_steps, seen: 0, tokens: 0, start: None }
+    }
+
+    /// Record one completed step of `tokens` tokens.
+    pub fn step(&mut self, tokens: usize) {
+        self.seen += 1;
+        if self.seen == self.warmup {
+            self.start = Some(Instant::now());
+        } else if self.seen > self.warmup {
+            self.tokens += tokens;
+        }
+    }
+
+    pub fn tokens_per_sec(&self) -> Option<f64> {
+        let start = self.start?;
+        let el = start.elapsed().as_secs_f64();
+        if el <= 0.0 || self.tokens == 0 {
+            None
+        } else {
+            Some(self.tokens as f64 / el)
+        }
+    }
+}
+
+/// Structured run log: JSONL events + a final summary JSON.
+pub struct RunLogger {
+    jsonl: BufWriter<File>,
+    csv: BufWriter<File>,
+    wrote_csv_header: bool,
+}
+
+impl RunLogger {
+    pub fn create(dir: impl AsRef<Path>, run_name: &str) -> Result<RunLogger> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let jsonl = BufWriter::new(File::create(dir.join(format!("{run_name}.jsonl")))?);
+        let csv = BufWriter::new(File::create(dir.join(format!("{run_name}.csv")))?);
+        Ok(RunLogger { jsonl, csv, wrote_csv_header: false })
+    }
+
+    /// Log one training step (step, loss, lr-free — schedule is in HLO).
+    pub fn log_step(&mut self, step: usize, loss: f64, ema: f64, tok_s: Option<f64>) -> Result<()> {
+        let mut pairs = vec![
+            ("event", jsonx::s("step")),
+            ("step", jsonx::num(step as f64)),
+            ("loss", jsonx::num(loss)),
+            ("loss_ema", jsonx::num(ema)),
+        ];
+        if let Some(t) = tok_s {
+            pairs.push(("tok_s", jsonx::num(t)));
+        }
+        writeln!(self.jsonl, "{}", jsonx::obj(pairs))?;
+        if !self.wrote_csv_header {
+            writeln!(self.csv, "step,loss,loss_ema,tok_s")?;
+            self.wrote_csv_header = true;
+        }
+        writeln!(self.csv, "{step},{loss},{ema},{}", tok_s.unwrap_or(f64::NAN))?;
+        Ok(())
+    }
+
+    pub fn log_eval(&mut self, step: usize, loss: f64) -> Result<()> {
+        writeln!(
+            self.jsonl,
+            "{}",
+            jsonx::obj(vec![
+                ("event", jsonx::s("eval")),
+                ("step", jsonx::num(step as f64)),
+                ("loss", jsonx::num(loss)),
+                ("ppl", jsonx::num(perplexity(loss))),
+            ])
+        )?;
+        Ok(())
+    }
+
+    pub fn log_summary(&mut self, fields: Vec<(&str, Value)>) -> Result<()> {
+        let mut pairs = vec![("event", jsonx::s("summary"))];
+        pairs.extend(fields);
+        writeln!(self.jsonl, "{}", jsonx::obj(pairs))?;
+        self.flush()
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.jsonl.flush()?;
+        self.csv.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.1);
+        for _ in 0..200 {
+            e.update(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_first_value_passthrough() {
+        let mut e = Ema::new(0.01);
+        assert_eq!(e.update(3.0), 3.0);
+    }
+
+    #[test]
+    fn stats_moments() {
+        let mut s = Stats::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-9);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // Uniform over V classes → loss = ln V → ppl = V.
+        let v = 512.0f64;
+        assert!((perplexity(v.ln()) - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn throughput_meter_skips_warmup() {
+        let mut m = ThroughputMeter::new(2);
+        m.step(100);
+        assert!(m.tokens_per_sec().is_none());
+        m.step(100); // warmup boundary: timer starts
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        m.step(100);
+        let t = m.tokens_per_sec().unwrap();
+        assert!(t > 0.0 && t < 1e7, "tok/s = {t}");
+    }
+
+    #[test]
+    fn run_logger_writes_parseable_jsonl() {
+        let dir = std::env::temp_dir().join("pamm_test_logs");
+        let mut lg = RunLogger::create(&dir, "unit").unwrap();
+        lg.log_step(1, 3.5, 3.5, Some(1000.0)).unwrap();
+        lg.log_eval(1, 3.2).unwrap();
+        lg.log_summary(vec![("final_loss", jsonx::num(3.2))]).unwrap();
+        let text = std::fs::read_to_string(dir.join("unit.jsonl")).unwrap();
+        for line in text.lines() {
+            let v = jsonx::parse(line).unwrap();
+            assert!(!v.get("event").is_null());
+        }
+        assert_eq!(text.lines().count(), 3);
+    }
+}

@@ -1,0 +1,275 @@
+//! Analysis tooling for the paper's Appendix H figures.
+//!
+//! * [`error_sweep`] — relative L2 error `E(r, ε)` grid (Fig. 6).
+//! * [`coverage_sweep`] — coverage grid (Fig. 7).
+//! * [`pca_project`] — top-2 principal components via power iteration +
+//!   deflation, used to regenerate Fig. 5's colored-cluster EDA (CSV out).
+//!
+//! These run on *captured activations*: the harness trains a model for a
+//! few thousand steps through the PJRT stack, captures the K-projection
+//! input of a middle layer (paper uses layer 3 at step 3000), and feeds it
+//! here.
+
+use crate::pamm::{self, Eps};
+use crate::rngx::Xoshiro256;
+use crate::tensor::Mat;
+
+/// Relative L2 error `‖O − Õ‖_F / ‖O‖_F` for one (r, ε) cell.
+pub fn relative_error(
+    a: &Mat,
+    b_mat: &Mat,
+    r: f64,
+    eps: Eps,
+    rng: &mut Xoshiro256,
+) -> f64 {
+    let b = a.rows();
+    let k = ((r * b as f64).ceil() as usize).max(1);
+    let idx = pamm::sample_generators(rng, b, k);
+    let exact = pamm::exact_matmul(a, b_mat);
+    let approx = pamm::pamm_matmul(a, b_mat, &idx, eps);
+    (approx.sub(&exact).frob_norm() / exact.frob_norm().max(1e-12)) as f64
+}
+
+/// One row of the Fig. 6 / Fig. 7 grids.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub r: f64,
+    pub eps: Option<f64>, // None = ∞
+    pub value: f64,
+}
+
+fn eps_of(e: Option<f64>) -> Eps {
+    match e {
+        None => Eps::Inf,
+        Some(v) => Eps::Val(v as f32),
+    }
+}
+
+/// Fig. 6 grid: relative error over (r, ε), averaged over `trials` seeds.
+pub fn error_sweep(
+    a: &Mat,
+    b_mat: &Mat,
+    rs: &[f64],
+    epss: &[Option<f64>],
+    trials: usize,
+    seed: u64,
+) -> Vec<SweepCell> {
+    let mut out = Vec::new();
+    for &r in rs {
+        for &e in epss {
+            let mut acc = 0.0;
+            for t in 0..trials {
+                let mut rng = Xoshiro256::fold_in(seed, 0xE44, t as u64);
+                acc += relative_error(a, b_mat, r, eps_of(e), &mut rng);
+            }
+            out.push(SweepCell { r, eps: e, value: acc / trials as f64 });
+        }
+    }
+    out
+}
+
+/// Fig. 7 grid: coverage over (r, ε).
+pub fn coverage_sweep(
+    a: &Mat,
+    rs: &[f64],
+    epss: &[Option<f64>],
+    trials: usize,
+    seed: u64,
+) -> Vec<SweepCell> {
+    let b = a.rows();
+    let mut out = Vec::new();
+    for &r in rs {
+        let k = ((r * b as f64).ceil() as usize).max(1);
+        for &e in epss {
+            let mut acc = 0.0;
+            for t in 0..trials {
+                let mut rng = Xoshiro256::fold_in(seed, 0xC0F, t as u64);
+                let idx = pamm::sample_generators(&mut rng, b, k);
+                acc += pamm::compress(a, &idx, eps_of(e)).coverage();
+            }
+            out.push(SweepCell { r, eps: e, value: acc / trials as f64 });
+        }
+    }
+    out
+}
+
+/// Top-`ncomp` principal components by power iteration with deflation on
+/// the covariance (never materializes the b×b Gram). Returns (components
+/// (ncomp, n), projected (b, ncomp)).
+pub fn pca_project(a: &Mat, ncomp: usize, iters: usize, seed: u64) -> (Mat, Mat) {
+    let (b, n) = (a.rows(), a.cols());
+    // Column means for centering.
+    let mut mean = vec![0f64; n];
+    for i in 0..b {
+        for (j, &v) in a.row(i).iter().enumerate() {
+            mean[j] += v as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= b as f64;
+    }
+
+    let mut comps = Mat::zeros(ncomp, n);
+    let mut rng = Xoshiro256::new(seed);
+
+    // cov·v computed as Aᵀ(Av) with centering folded in.
+    let cov_mul = |v: &[f32], comps: &Mat, upto: usize| -> Vec<f32> {
+        // deflate: v ← v − Σ (v·cᵢ)cᵢ before multiplying
+        let mut vd = v.to_vec();
+        for c in 0..upto {
+            let cr = comps.row(c);
+            let d: f32 = crate::tensor::dot(&vd, cr);
+            for j in 0..n {
+                vd[j] -= d * cr[j];
+            }
+        }
+        let mut av = vec![0f32; b];
+        for i in 0..b {
+            let mut acc = 0f64;
+            for (j, &x) in a.row(i).iter().enumerate() {
+                acc += (x as f64 - mean[j]) * vd[j] as f64;
+            }
+            av[i] = acc as f32;
+        }
+        let mut out = vec![0f32; n];
+        for i in 0..b {
+            let s = av[i];
+            if s == 0.0 {
+                continue;
+            }
+            for (j, &x) in a.row(i).iter().enumerate() {
+                out[j] += s * (x - mean[j] as f32);
+            }
+        }
+        out
+    };
+
+    for c in 0..ncomp {
+        let mut v: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+        for _ in 0..iters {
+            let mut w = cov_mul(&v, &comps, c);
+            let norm = crate::tensor::dot(&w, &w).sqrt().max(1e-12);
+            for x in w.iter_mut() {
+                *x /= norm;
+            }
+            v = w;
+        }
+        comps.row_mut(c).copy_from_slice(&v);
+    }
+
+    // Project the (centered) data.
+    let mut proj = Mat::zeros(b, ncomp);
+    for i in 0..b {
+        for c in 0..ncomp {
+            let mut acc = 0f64;
+            let cr = comps.row(c);
+            for (j, &x) in a.row(i).iter().enumerate() {
+                acc += (x as f64 - mean[j]) * cr[j] as f64;
+            }
+            proj.set(i, c, acc as f32);
+        }
+    }
+    (comps, proj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Clustered synthetic data: `nclust` line-shaped clusters in R^n —
+    /// the structure Appendix H observes in real attention inputs.
+    pub fn clustered_data(b: usize, n: usize, nclust: usize, noise: f32, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let centers = Mat::random_normal(nclust, n, 1.0, &mut rng);
+        let mut a = Mat::zeros(b, n);
+        for i in 0..b {
+            let c = rng.next_below(nclust as u64) as usize;
+            let scale = 0.5 + 1.5 * rng.next_f32();
+            let row = a.row_mut(i);
+            let cr = centers.row(c);
+            for j in 0..n {
+                row[j] = scale * cr[j] + noise * rng.next_normal() as f32;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn error_decreases_with_eps_on_clustered_data() {
+        // Fig. 6a shape: larger ε (more coverage) → lower relative error.
+        let a = clustered_data(512, 24, 8, 0.05, 1);
+        let mut rng = Xoshiro256::new(2);
+        let b_mat = Mat::random_normal(512, 16, 1.0, &mut rng);
+        let cells = error_sweep(
+            &a,
+            &b_mat,
+            &[1.0 / 32.0],
+            &[Some(0.1), Some(0.5), None],
+            3,
+            7,
+        );
+        assert!(cells[0].value >= cells[1].value - 0.02, "{cells:?}");
+        assert!(cells[1].value >= cells[2].value - 0.02, "{cells:?}");
+    }
+
+    #[test]
+    fn error_grows_slowly_as_r_shrinks() {
+        // Fig. 6b shape: error scales ~log in 1/r on clustered data.
+        let a = clustered_data(1024, 32, 8, 0.05, 3);
+        let mut rng = Xoshiro256::new(4);
+        let b_mat = Mat::random_normal(1024, 16, 1.0, &mut rng);
+        let cells = error_sweep(
+            &a,
+            &b_mat,
+            &[1.0 / 8.0, 1.0 / 64.0, 1.0 / 512.0],
+            &[None],
+            3,
+            11,
+        );
+        // Error must grow monotonically but stay O(1) even at r = 1/512 —
+        // the paper's App. H reports relative errors of 0.5–1.0 there.
+        assert!(cells[0].value <= cells[1].value + 0.02, "{cells:?}");
+        assert!(cells[1].value <= cells[2].value + 0.02, "{cells:?}");
+        assert!(cells[2].value < 1.5, "{cells:?}");
+    }
+
+    #[test]
+    fn coverage_sweep_shapes() {
+        let a = clustered_data(256, 16, 4, 0.1, 5);
+        let cells = coverage_sweep(&a, &[1.0 / 16.0], &[Some(0.0), Some(0.5), None], 2, 13);
+        assert!(cells[0].value <= cells[1].value + 1e-9);
+        assert!(cells[1].value <= cells[2].value + 1e-9);
+        assert!((cells[2].value - 1.0).abs() < 1e-9); // ε=∞ covers all
+    }
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        // Data stretched along e0 — first component must align with it.
+        let mut rng = Xoshiro256::new(6);
+        let mut a = Mat::zeros(400, 8);
+        for i in 0..400 {
+            a.set(i, 0, 10.0 * rng.next_normal() as f32);
+            for j in 1..8 {
+                a.set(i, j, 0.1 * rng.next_normal() as f32);
+            }
+        }
+        let (comps, proj) = pca_project(&a, 2, 30, 7);
+        assert!(comps.get(0, 0).abs() > 0.99, "c0 = {:?}", comps.row(0));
+        // Projected variance along comp0 ≫ comp1.
+        let var = |c: usize| {
+            (0..400).map(|i| (proj.get(i, c) as f64).powi(2)).sum::<f64>() / 400.0
+        };
+        assert!(var(0) > 50.0 * var(1), "{} vs {}", var(0), var(1));
+    }
+
+    #[test]
+    fn pca_components_orthonormal() {
+        let a = clustered_data(300, 12, 5, 0.2, 8);
+        let (comps, _) = pca_project(&a, 2, 40, 9);
+        let c0 = comps.row(0);
+        let c1 = comps.row(1);
+        assert!((crate::tensor::dot(c0, c0) - 1.0).abs() < 1e-3);
+        assert!((crate::tensor::dot(c1, c1) - 1.0).abs() < 1e-3);
+        assert!(crate::tensor::dot(c0, c1).abs() < 0.05);
+    }
+}

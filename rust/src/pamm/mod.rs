@@ -1,0 +1,452 @@
+//! Native PAMM: the paper's Algorithm 1 in pure Rust.
+//!
+//! This is the L3-resident twin of the Pallas kernels — used by:
+//!
+//! * the runtime-independent benches (t7/t8 runtime breakdowns, fig4a-style
+//!   microbenchmarks) where we need per-op timers the HLO path can't expose,
+//! * the analysis harnesses (fig5 PCA, fig6 relative-error, fig7 coverage),
+//! * property tests (`propx`) of PAMM's invariants (Lemma 1, β-unbiasedness,
+//!   the error bound of §3.2.1),
+//! * cross-validation against the AOT kernel artifacts (integration tests
+//!   assert native == Pallas == jnp on identical inputs).
+//!
+//! Numerics follow python/compile/kernels/ref.py exactly, including the
+//! `err² = ‖A_i‖²(1 − csim²)` closed form for the neighborhood condition.
+
+pub mod analysis;
+pub mod baselines;
+
+use crate::rngx::Xoshiro256;
+use crate::tensor::{dot, Mat};
+
+const NORM_EPS: f32 = 1e-12;
+
+/// Compressed representation of a (b, n) activation matrix (paper Fig. 1):
+/// generators `C`, assignment `f`, scales `α`, drop-correction `β`.
+#[derive(Debug, Clone)]
+pub struct Compressed {
+    pub generators: Mat,
+    pub assign: Vec<u32>,
+    pub alpha: Vec<f32>,
+    pub beta: f32,
+}
+
+impl Compressed {
+    pub fn k(&self) -> usize {
+        self.generators.rows()
+    }
+
+    pub fn b(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// Stored bytes: C + α + f + β (the memory the paper's tables report
+    /// for PAMM, vs `b·n·4` for the raw activation).
+    pub fn stored_bytes(&self) -> usize {
+        self.generators.rows() * self.generators.cols() * 4
+            + self.alpha.len() * 4
+            + self.assign.len() * 4
+            + 4
+    }
+
+    /// Fraction of rows with a surviving representative (Fig. 7 metric).
+    pub fn coverage(&self) -> f64 {
+        let kept = self.alpha.iter().filter(|a| **a != 0.0).count();
+        kept as f64 / self.alpha.len().max(1) as f64
+    }
+
+    /// Materialize Ã (Eq. 3) — analysis/tests only, never on hot paths.
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.generators.cols();
+        let mut out = Mat::zeros(self.b(), n);
+        for i in 0..self.b() {
+            let a = self.alpha[i];
+            if a != 0.0 {
+                let c = self.generators.row(self.assign[i] as usize);
+                let row = out.row_mut(i);
+                for j in 0..n {
+                    row[j] = a * c[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// ε policy for the neighborhood condition (paper §3.2 / §4.6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Eps {
+    /// No condition — every row keeps its best representative (paper's
+    /// best-performing setting, "ε = ∞").
+    Inf,
+    /// `‖A_i − Ã_i‖ ≤ ε‖A_i‖`; 0 keeps only exactly-collinear rows.
+    Val(f32),
+}
+
+impl Eps {
+    /// The keep test in csim² form: `csim² ≥ 1 − ε²` (ε ≥ 1 keeps all).
+    #[inline]
+    fn keeps(self, csim_sq: f32) -> bool {
+        match self {
+            Eps::Inf => true,
+            Eps::Val(e) if e >= 1.0 => true,
+            // Small float slack so exactly-collinear rows (csim = 1 up
+            // to rounding) survive eps = 0 — without it the generators
+            // themselves get dropped and Uniform-CRS degenerates.
+            Eps::Val(e) => csim_sq >= 1.0 - e * e - 1e-6,
+        }
+    }
+}
+
+/// Uniformly sample k generator row indices without replacement.
+pub fn sample_generators(rng: &mut Xoshiro256, b: usize, k: usize) -> Vec<usize> {
+    rng.sample_without_replacement(b, k)
+}
+
+/// Row-range worker for [`compress`]: fills `assign[start..end]` /
+/// `alpha[start..end]`, returns the local drop count.
+fn compress_range(
+    a: &Mat,
+    c: &Mat,
+    nc: &[f32],
+    eps: Eps,
+    start: usize,
+    end: usize,
+    assign: &mut [u32],
+    alpha: &mut [f32],
+) -> usize {
+    let k = c.rows();
+    let mut dropped = 0usize;
+    for i in start..end {
+        let ai = a.row(i);
+        let na = dot(ai, ai).sqrt();
+        if na <= NORM_EPS {
+            dropped += 1;
+            continue;
+        }
+        // Lemma 1: pick argmax_j |csim(A_i, C_j)|. Generators are walked
+        // four at a time so one pass over `ai` feeds four accumulators —
+        // amortizes the A-row loads (the L1 register-blocking analogue of
+        // the Pallas kernel's (TB, k) MXU tile; §Perf ~2× on this host).
+        let mut best_j = 0usize;
+        let mut best_abs = -1.0f32;
+        let mut best_cs = 0.0f32;
+        let nlen = ai.len();
+        let mut consider = |j: usize, d: f32| {
+            let cs = d / (na * nc[j]).max(NORM_EPS);
+            if cs.abs() > best_abs {
+                best_abs = cs.abs();
+                best_cs = cs;
+                best_j = j;
+            }
+        };
+        let mut j = 0usize;
+        while j + 4 <= k {
+            let (c0, c1, c2, c3) = (c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+            let (mut d0, mut d1, mut d2, mut d3) = (0f32, 0f32, 0f32, 0f32);
+            for t in 0..nlen {
+                let av = ai[t];
+                d0 += av * c0[t];
+                d1 += av * c1[t];
+                d2 += av * c2[t];
+                d3 += av * c3[t];
+            }
+            consider(j, d0);
+            consider(j + 1, d1);
+            consider(j + 2, d2);
+            consider(j + 3, d3);
+            j += 4;
+        }
+        while j < k {
+            consider(j, dot(ai, c.row(j)));
+            j += 1;
+        }
+        let csim_sq = best_cs * best_cs;
+        if eps.keeps(csim_sq) {
+            assign[i - start] = best_j as u32;
+            alpha[i - start] = best_cs * na / nc[best_j].max(NORM_EPS);
+        } else {
+            dropped += 1; // α stays 0 — the row is dropped (Eq. 3)
+        }
+    }
+    dropped
+}
+
+/// Rows-per-core threshold below which threading overhead dominates
+/// (§Perf: measured crossover on this host; see EXPERIMENTS.md).
+const PAR_MIN_ROWS: usize = 2048;
+
+fn par_threads(b: usize) -> usize {
+    if b < PAR_MIN_ROWS {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1).min(16)
+}
+
+/// Stage 1 (Algorithm 1 `Compress`): assignment + scales for given
+/// generator indices. Parallel over row blocks for large b (rows are
+/// independent — the same decomposition the Pallas grid uses).
+pub fn compress(a: &Mat, gen_idx: &[usize], eps: Eps) -> Compressed {
+    let b = a.rows();
+    let k = gen_idx.len();
+    assert!(k >= 1, "need at least one generator");
+    let c = a.gather_rows(gen_idx);
+    let nc = c.row_norms();
+
+    let mut assign = vec![0u32; b];
+    let mut alpha = vec![0f32; b];
+    let threads = par_threads(b);
+    let dropped = if threads == 1 {
+        compress_range(a, &c, &nc, eps, 0, b, &mut assign, &mut alpha)
+    } else {
+        let chunk = b.div_ceil(threads);
+        let mut total = 0usize;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            let mut arest: &mut [u32] = &mut assign;
+            let mut lrest: &mut [f32] = &mut alpha;
+            let mut start = 0usize;
+            while start < b {
+                let end = (start + chunk).min(b);
+                let (ac, an) = arest.split_at_mut(end - start);
+                let (lc, ln) = lrest.split_at_mut(end - start);
+                arest = an;
+                lrest = ln;
+                let (c, nc) = (&c, &nc);
+                handles.push(
+                    s.spawn(move || compress_range(a, c, nc, eps, start, end, ac, lc)),
+                );
+                start = end;
+            }
+            for h in handles {
+                total += h.join().expect("compress worker");
+            }
+        });
+        total
+    };
+
+    // β = b / (b − η) so that E[Õ] = O (Eq. 5).
+    let kept = b - dropped;
+    let beta = if kept > 0 { b as f32 / kept as f32 } else { 1.0 };
+    Compressed { generators: c, assign, alpha, beta }
+}
+
+/// Stage 2 (Algorithm 1 `ApproxMM`): `Õ = β·Cᵀ·B̃` with
+/// `B̃_j = Σ_{i:f(i)=j} α_i B_i` via index-accumulate (the CUDA-flavored
+/// schedule; the Pallas twin uses a one-hot matmul — same numbers).
+pub fn apply(comp: &Compressed, b_mat: &Mat) -> Mat {
+    let (k, m) = (comp.k(), b_mat.cols());
+    assert_eq!(comp.b(), b_mat.rows(), "assignment/B row mismatch");
+
+    let mut btilde = Mat::zeros(k, m);
+    for i in 0..comp.b() {
+        let a = comp.alpha[i];
+        if a == 0.0 {
+            continue;
+        }
+        let src = b_mat.row(i);
+        let dst = btilde.row_mut(comp.assign[i] as usize);
+        for j in 0..m {
+            dst[j] += a * src[j];
+        }
+    }
+
+    let mut out = comp.generators.t_matmul(&btilde); // (n, m)
+    out.scale(comp.beta);
+    out
+}
+
+/// End-to-end PAMM approximation of `O = AᵀB`.
+pub fn pamm_matmul(a: &Mat, b_mat: &Mat, gen_idx: &[usize], eps: Eps) -> Mat {
+    apply(&compress(a, gen_idx, eps), b_mat)
+}
+
+/// Exact `O = AᵀB` — the baseline PAMM replaces (t7/t8 comparison row).
+/// Parallel over b-row blocks with per-thread partial (n×m) accumulators
+/// (the natural reduction decomposition; §Perf before/after in
+/// EXPERIMENTS.md).
+pub fn exact_matmul(a: &Mat, b_mat: &Mat) -> Mat {
+    let b = a.rows();
+    let threads = par_threads(b);
+    if threads == 1 {
+        return a.t_matmul(b_mat);
+    }
+    let chunk = b.div_ceil(threads);
+    let (n, m) = (a.cols(), b_mat.cols());
+    let mut partials: Vec<Mat> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut start = 0usize;
+        while start < b {
+            let end = (start + chunk).min(b);
+            handles.push(s.spawn(move || {
+                let mut out = Mat::zeros(n, m);
+                for r in start..end {
+                    let a_row = a.row(r);
+                    let b_row = b_mat.row(r);
+                    for (i, &av) in a_row.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let o_row = out.row_mut(i);
+                        for j in 0..m {
+                            o_row[j] += av * b_row[j];
+                        }
+                    }
+                }
+                out
+            }));
+            start = end;
+        }
+        for h in handles {
+            partials.push(h.join().expect("matmul worker"));
+        }
+    });
+    let mut acc = partials.pop().unwrap_or_else(|| Mat::zeros(n, m));
+    for p in &partials {
+        acc.add_assign(p);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        Mat::random_normal(rows, cols, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn self_generators_reconstruct_exactly() {
+        // If every row is a generator, Ã = A and Õ = O exactly.
+        let a = rand_mat(16, 8, 1);
+        let b = rand_mat(16, 5, 2);
+        let idx: Vec<usize> = (0..16).collect();
+        let approx = pamm_matmul(&a, &b, &idx, Eps::Inf);
+        let exact = exact_matmul(&a, &b);
+        assert!(approx.max_abs_diff(&exact) < 1e-4, "{}", approx.max_abs_diff(&exact));
+    }
+
+    #[test]
+    fn lemma1_assignment_minimizes_distance() {
+        // The chosen generator must give the smallest reconstruction error
+        // over all generators (Lemma 1: argmax |csim| == argmin distance).
+        let a = rand_mat(64, 12, 3);
+        let mut rng = Xoshiro256::new(4);
+        let idx = sample_generators(&mut rng, 64, 6);
+        let comp = compress(&a, &idx, Eps::Inf);
+        let c = &comp.generators;
+        for i in 0..a.rows() {
+            let ai = a.row(i);
+            let dist = |j: usize| -> f32 {
+                // closest point on span{C_j}: α* = <a,c>/‖c‖²
+                let cj = c.row(j);
+                let al = dot(ai, cj) / dot(cj, cj).max(NORM_EPS);
+                (0..ai.len()).map(|t| (ai[t] - al * cj[t]).powi(2)).sum::<f32>()
+            };
+            let chosen = dist(comp.assign[i] as usize);
+            for j in 0..comp.k() {
+                assert!(chosen <= dist(j) + 1e-4, "row {i}: {chosen} > dist({j})={}", dist(j));
+            }
+        }
+    }
+
+    #[test]
+    fn eps_zero_keeps_only_collinear() {
+        let a = rand_mat(32, 8, 5);
+        let idx = vec![0, 7, 13];
+        let comp = compress(&a, &idx, Eps::Val(0.0));
+        // Generators themselves are exactly collinear with themselves.
+        for (pos, &g) in idx.iter().enumerate() {
+            assert_eq!(comp.assign[g] as usize, pos);
+            assert!((comp.alpha[g] - 1.0).abs() < 1e-5, "alpha[{g}]={}", comp.alpha[g]);
+        }
+        // Random gaussian rows are a.s. not collinear with another row.
+        let kept = comp.alpha.iter().filter(|a| **a != 0.0).count();
+        assert_eq!(kept, idx.len());
+        // β must then be b/k.
+        assert!((comp.beta - 32.0 / 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn beta_corrects_expectation() {
+        // With eps=0 and k generators, Õ = (b/k)·Σ_{gen} A_gᵀB_g — an
+        // unbiased estimator of O over the generator sampling. Check that
+        // averaging over many samples approaches O.
+        let a = rand_mat(64, 6, 8);
+        let b = rand_mat(64, 4, 9);
+        let exact = exact_matmul(&a, &b);
+        let mut rng = Xoshiro256::new(10);
+        let mut acc = Mat::zeros(6, 4);
+        let trials = 4000;
+        for _ in 0..trials {
+            let idx = sample_generators(&mut rng, 64, 8);
+            acc.add_assign(&pamm_matmul(&a, &b, &idx, Eps::Val(0.0)));
+        }
+        acc.scale(1.0 / trials as f32);
+        let rel = acc.sub(&exact).frob_norm() / exact.frob_norm();
+        assert!(rel < 0.05, "relative bias {rel}");
+    }
+
+    #[test]
+    fn error_bound_of_section_321() {
+        // ‖O − Õ_unscaled‖_F ≤ ‖B‖₂(ε²‖A_I‖² + ‖A_Ī‖²)^{1/2}; we check the
+        // looser Frobenius form ‖B‖_F · ‖A − Ã‖_F which upper-bounds it.
+        let a = rand_mat(48, 10, 11);
+        let b = rand_mat(48, 7, 12);
+        let mut rng = Xoshiro256::new(13);
+        let idx = sample_generators(&mut rng, 48, 12);
+        for eps in [Eps::Val(0.3), Eps::Val(0.7), Eps::Inf] {
+            let comp = compress(&a, &idx, eps);
+            // Unscaled estimate (β=1) is what the bound speaks about.
+            let mut unscaled = comp.clone();
+            unscaled.beta = 1.0;
+            let otilde = apply(&unscaled, &b);
+            let exact = exact_matmul(&a, &b);
+            let lhs = exact.sub(&otilde).frob_norm();
+            let a_err = a.sub(&comp.reconstruct()).frob_norm();
+            let rhs = b.frob_norm() * a_err;
+            assert!(lhs <= rhs + 1e-3, "lhs={lhs} rhs={rhs} eps={eps:?}");
+        }
+    }
+
+    #[test]
+    fn coverage_monotone_in_eps() {
+        let a = rand_mat(128, 16, 14);
+        let mut rng = Xoshiro256::new(15);
+        let idx = sample_generators(&mut rng, 128, 8);
+        let cov = |e: Eps| compress(&a, &idx, e).coverage();
+        let c0 = cov(Eps::Val(0.0));
+        let c05 = cov(Eps::Val(0.5));
+        let c09 = cov(Eps::Val(0.9));
+        let cinf = cov(Eps::Inf);
+        assert!(c0 <= c05 && c05 <= c09 && c09 <= cinf);
+        assert!((cinf - 1.0).abs() < 1e-9);
+        assert!(c0 >= 8.0 / 128.0); // generators always self-cover
+    }
+
+    #[test]
+    fn stored_bytes_matches_formula() {
+        let a = rand_mat(256, 32, 16);
+        let idx: Vec<usize> = (0..4).collect();
+        let comp = compress(&a, &idx, Eps::Inf);
+        assert_eq!(comp.stored_bytes(), 4 * 32 * 4 + 256 * 4 + 256 * 4 + 4);
+        // vs raw activation: 256·32·4 = 32 KiB → ~12.6× smaller already at k=4.
+        assert!(comp.stored_bytes() * 8 < 256 * 32 * 4);
+    }
+
+    #[test]
+    fn zero_rows_are_dropped_and_beta_adjusts() {
+        let mut a = rand_mat(10, 4, 17);
+        for j in 0..4 {
+            a.set(3, j, 0.0);
+            a.set(7, j, 0.0);
+        }
+        let comp = compress(&a, &[0, 1], Eps::Inf);
+        assert_eq!(comp.alpha[3], 0.0);
+        assert_eq!(comp.alpha[7], 0.0);
+        assert!((comp.beta - 10.0 / 8.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,212 @@
+//! Scoped thread pool + parallel-for (no tokio/rayon offline).
+//!
+//! Two pieces:
+//!
+//! * [`ThreadPool`] — long-lived workers fed through an MPMC channel built
+//!   on `Mutex<VecDeque>` + `Condvar`; used by the coordinator's simulated
+//!   DDP workers and the background data pipeline.
+//! * [`scoped_for`] — fork-join parallel iteration over index ranges via
+//!   `std::thread::scope` (no pool needed; used by the native PAMM benches
+//!   to exercise multi-core roofline).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    cond: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Fixed-size worker pool. Jobs are FIFO; `join` blocks until all
+/// submitted jobs have finished (tracked with a completion counter).
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..threads)
+            .map(|_| {
+                let q = queue.clone();
+                let p = pending.clone();
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut jobs = q.jobs.lock().unwrap();
+                        loop {
+                            if let Some(job) = jobs.pop_front() {
+                                break job;
+                            }
+                            if q.shutdown.load(Ordering::Acquire) {
+                                return;
+                            }
+                            jobs = q.cond.wait(jobs).unwrap();
+                        }
+                    };
+                    job();
+                    let (lock, cv) = &*p;
+                    let mut n = lock.lock().unwrap();
+                    *n -= 1;
+                    if *n == 0 {
+                        cv.notify_all();
+                    }
+                })
+            })
+            .collect();
+        Self { queue, pending, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.queue.jobs.lock().unwrap().push_back(Box::new(job));
+        self.queue.cond.notify_one();
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n != 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.join();
+        self.queue.shutdown.store(true, Ordering::Release);
+        self.queue.cond.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Fork-join parallel for over `0..n`: splits into ≤ `threads` contiguous
+/// chunks, runs `f(start, end)` per chunk on scoped threads.
+pub fn scoped_for(n: usize, threads: usize, f: impl Fn(usize, usize) + Sync) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Map each element of `inputs` to an output in parallel, preserving order.
+pub fn parallel_map<T: Sync, R: Send>(
+    inputs: &[T],
+    threads: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let mut out: Vec<Option<R>> = (0..inputs.len()).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    scoped_for(inputs.len(), threads, |start, end| {
+        let mut local: Vec<(usize, R)> = Vec::with_capacity(end - start);
+        for i in start..end {
+            local.push((i, f(&inputs[i])));
+        }
+        let mut guard = slots.lock().unwrap();
+        for (i, r) in local {
+            guard[i] = Some(r);
+        }
+    });
+    out.into_iter().map(|o| o.expect("slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_join_then_reuse() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for round in 1..=3 {
+            for _ in 0..10 {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+            assert_eq!(counter.load(Ordering::Relaxed), round * 10);
+        }
+    }
+
+    #[test]
+    fn scoped_for_covers_range_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        scoped_for(n, 8, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let inputs: Vec<usize> = (0..257).collect();
+        let out = parallel_map(&inputs, 7, |&x| x * 2);
+        assert_eq!(out, inputs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_for_degenerate_cases() {
+        scoped_for(0, 4, |s, e| assert_eq!(s, e, "empty range only"));
+        let ran = AtomicUsize::new(0);
+        scoped_for(3, 16, |s, e| {
+            ran.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 3);
+    }
+}

@@ -1,0 +1,200 @@
+//! Property-test mini-framework (`proptest` is not vendored offline).
+//!
+//! A property is a predicate over generated inputs; the runner draws
+//! `cases` inputs from a deterministic RNG, and on failure performs a
+//! simple halving shrink over the generator's *size parameter* to report
+//! a small counterexample. Used for the PAMM invariants in
+//! `rust/tests/prop_pamm.rs` (routing/assignment, β bookkeeping,
+//! estimator identities across implementations).
+
+use crate::rngx::Xoshiro256;
+
+/// A value generator: draws from RNG at a given "size" (≥ 1).
+pub trait Gen {
+    type Item;
+    fn generate(&self, rng: &mut Xoshiro256, size: usize) -> Self::Item;
+}
+
+/// Generator from a closure.
+pub struct FnGen<T, F: Fn(&mut Xoshiro256, usize) -> T>(pub F);
+
+impl<T, F: Fn(&mut Xoshiro256, usize) -> T> Gen for FnGen<T, F> {
+    type Item = T;
+    fn generate(&self, rng: &mut Xoshiro256, size: usize) -> T {
+        (self.0)(rng, size)
+    }
+}
+
+/// usize in [lo, min(hi, lo+size)] — scales with the shrink parameter.
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<Item = usize> {
+    FnGen(move |rng: &mut Xoshiro256, size: usize| {
+        let cap = hi.min(lo + size);
+        lo + rng.next_below((cap - lo + 1) as u64) as usize
+    })
+}
+
+/// f32 in [-scale, scale] where scale grows with size (bounded by `max`).
+pub fn f32_in(max: f32) -> impl Gen<Item = f32> {
+    FnGen(move |rng: &mut Xoshiro256, size: usize| {
+        let scale = max.min(size as f32);
+        (rng.next_f32() * 2.0 - 1.0) * scale
+    })
+}
+
+/// Vec of `inner` with length in [1, size].
+pub fn vec_of<G: Gen>(inner: G) -> impl Gen<Item = Vec<G::Item>> {
+    FnGen(move |rng: &mut Xoshiro256, size: usize| {
+        let len = 1 + rng.next_below(size.max(1) as u64) as usize;
+        (0..len).map(|_| inner.generate(rng, size)).collect()
+    })
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Ok { cases: usize },
+    Failed { seed: u64, size: usize, input: T, message: String },
+}
+
+/// Configuration for the runner.
+#[derive(Debug, Clone)]
+pub struct PropOpts {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for PropOpts {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xBEEF, max_size: 64 }
+    }
+}
+
+/// Run `prop` over `opts.cases` generated inputs; shrink on failure by
+/// halving the size parameter while the property still fails.
+pub fn check<G, P>(opts: &PropOpts, gen: &G, prop: P) -> PropResult<G::Item>
+where
+    G: Gen,
+    P: Fn(&G::Item) -> Result<(), String>,
+{
+    for case in 0..opts.cases {
+        // size ramps up across cases (small inputs first — cheap shrinking).
+        let size = 1 + (opts.max_size * (case + 1)) / opts.cases;
+        let case_seed = opts.seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Xoshiro256::new(case_seed);
+        let input = gen.generate(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Shrink: regenerate at halved sizes from the same seed until
+            // the property passes; report the smallest failing input.
+            let mut best_size = size;
+            let mut best_input = input;
+            let mut best_msg = msg;
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Xoshiro256::new(case_seed);
+                let candidate = gen.generate(&mut rng, s);
+                match prop(&candidate) {
+                    Err(m) => {
+                        best_size = s;
+                        best_input = candidate;
+                        best_msg = m;
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            return PropResult::Failed {
+                seed: case_seed,
+                size: best_size,
+                input: best_input,
+                message: best_msg,
+            };
+        }
+    }
+    PropResult::Ok { cases: opts.cases }
+}
+
+/// Assert helper: panics with a readable report on failure.
+pub fn assert_prop<G, P>(name: &str, opts: &PropOpts, gen: &G, prop: P)
+where
+    G: Gen,
+    G::Item: std::fmt::Debug,
+    P: Fn(&G::Item) -> Result<(), String>,
+{
+    match check(opts, gen, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { seed, size, input, message } => {
+            panic!(
+                "property `{name}` failed (seed={seed:#x}, size={size}):\n  {message}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let gen = usize_in(0, 100);
+        match check(&PropOpts::default(), &gen, |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        }) {
+            PropResult::Ok { cases } => assert_eq!(cases, 64),
+            PropResult::Failed { .. } => panic!("should pass"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // Fails whenever the vec is non-empty — shrinking should bring the
+        // reported size down to 1.
+        let gen = vec_of(usize_in(0, 10));
+        match check(&PropOpts::default(), &gen, |v: &Vec<usize>| {
+            if v.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("len={}", v.len()))
+            }
+        }) {
+            PropResult::Failed { size, input, .. } => {
+                assert_eq!(size, 1);
+                assert!(input.len() <= 2, "shrunk input still large: {input:?}");
+            }
+            PropResult::Ok { .. } => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = usize_in(0, 1000);
+        let opts = PropOpts { cases: 16, seed: 7, max_size: 1000 };
+        let collect = |_: ()| {
+            let vals = std::cell::RefCell::new(Vec::new());
+            let _ = check(&opts, &gen, |&x| {
+                vals.borrow_mut().push(x);
+                Ok(())
+            });
+            vals.into_inner()
+        };
+        assert_eq!(collect(()), collect(()));
+    }
+
+    #[test]
+    fn f32_gen_bounded() {
+        let gen = f32_in(3.0);
+        let mut rng = Xoshiro256::new(1);
+        for size in 1..50 {
+            let v = gen.generate(&mut rng, size);
+            assert!(v.abs() <= 3.0);
+        }
+    }
+}

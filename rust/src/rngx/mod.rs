@@ -1,0 +1,256 @@
+//! Deterministic PRNG + samplers (the offline image vendors no `rand`).
+//!
+//! * [`SplitMix64`] — seeding / stream splitting (Steele et al., 2014).
+//! * [`Xoshiro256`] — xoshiro256** main generator (Blackman & Vigna).
+//! * Samplers: uniform, normal (Box–Muller), Zipf (inverse-CDF),
+//!   Fisher–Yates shuffle and partial-shuffle sampling without replacement.
+//!
+//! All experiment entropy flows through these types, so every run in
+//! EXPERIMENTS.md is reproducible from its `(seed, step)` labels alone.
+
+/// SplitMix64 — used to expand one u64 seed into independent streams.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — fast, high-quality 64-bit generator.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    /// Derive an independent stream for `(purpose, index)` — the Rust
+    /// analogue of `jax.random.fold_in`.
+    pub fn fold_in(seed: u64, purpose: u64, index: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ purpose.rotate_left(17));
+        let mixed = sm.next_u64() ^ index.wrapping_mul(0x9E3779B97F4A7C15);
+        Self::new(mixed)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of mantissa.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, bound) via the widening-multiply trick.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    pub fn next_range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi > lo);
+        lo + self.next_below((hi - lo) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller (init-time only, clarity wins).
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fill with N(0, std²) f32 — parameter init path.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], std: f32) {
+        for x in out.iter_mut() {
+            *x = self.next_normal() as f32 * std;
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices from [0, n) — partial Fisher–Yates; used for PAMM
+    /// generator sampling (paper: uniform, without replacement).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.next_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Bounded Zipf(s) sampler over ranks [0, n) by inverse-CDF over the
+/// precomputed harmonic table — exact, O(log n) per sample. Used by the
+/// synthetic-corpus generator (token frequencies in natural text are
+/// famously Zipfian, one source of the cross-token redundancy PAMM
+/// exploits).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Sample a rank in [0, n) (rank 0 is the most frequent).
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        let u = rng.next_f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Xoshiro256::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn fold_in_independent() {
+        let mut a = Xoshiro256::fold_in(1, 2, 3);
+        let mut b = Xoshiro256::fold_in(1, 2, 4);
+        let mut c = Xoshiro256::fold_in(1, 3, 3);
+        let (x, y, z) = (a.next_u64(), b.next_u64(), c.next_u64());
+        assert_ne!(x, y);
+        assert_ne!(x, z);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut rng = Xoshiro256::new(7);
+        for _ in 0..10_000 {
+            let v = rng.next_below(17);
+            assert!(v < 17);
+            let f = rng.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256::new(11);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.next_normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct() {
+        let mut rng = Xoshiro256::new(3);
+        let s = rng.sample_without_replacement(100, 30);
+        assert_eq!(s.len(), 30);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn sample_full_is_permutation() {
+        let mut rng = Xoshiro256::new(5);
+        let mut s = rng.sample_without_replacement(50, 50);
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_bounded() {
+        let mut rng = Xoshiro256::new(9);
+        let z = Zipf::new(1000, 1.1);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[100] * 5, "{} vs {}", counts[0], counts[100]);
+        assert_eq!(counts.iter().sum::<usize>(), 50_000);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = Xoshiro256::new(13);
+        let mut v: Vec<u32> = (0..64).collect();
+        rng.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64).collect::<Vec<_>>());
+        assert_ne!(v, (0..64).collect::<Vec<_>>());
+    }
+}

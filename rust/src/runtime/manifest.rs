@@ -1,0 +1,296 @@
+//! Typed view of `artifacts/manifest.json` (the AOT calling convention).
+//!
+//! aot.py is the single writer; this module is the single reader. Any
+//! schema drift fails loudly here rather than as a shape error deep in
+//! PJRT execution.
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::{self, Value};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One positional input or output of an executable.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+    fn parse(v: &Value) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: v.req_str("name")?.to_string(),
+            shape: parse_shape(v.req("shape")?)?,
+            dtype: Dtype::parse(v.req_str("dtype")?)?,
+        })
+    }
+}
+
+/// One model parameter (init recipe; order defines the calling convention).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Gaussian init std; negative means "init to ones" (norm gains).
+    pub init_std: f64,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The compression variant an artifact was lowered with (paper §4.6 axes).
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub mode: String,
+    pub r: f64,
+    /// `None` = no neighborhood condition (paper's ε = ∞; JSON `-1`).
+    pub eps: Option<f64>,
+    pub use_pallas: bool,
+}
+
+impl VariantMeta {
+    fn parse(v: &Value) -> Result<VariantMeta> {
+        let eps = v.req_f64("eps")?;
+        Ok(VariantMeta {
+            mode: v.req_str("mode")?.to_string(),
+            r: v.req_f64("r")?,
+            eps: if eps < 0.0 { None } else { Some(eps) },
+            use_pallas: v.get("use_pallas").as_bool().unwrap_or(false),
+        })
+    }
+}
+
+/// Training hyper-parameters baked into a train_step artifact.
+#[derive(Debug, Clone)]
+pub struct TrainMeta {
+    pub lr: f64,
+    pub steps: usize,
+    pub pamm_lr_scale: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub config: Option<String>,
+    pub variant: Option<VariantMeta>,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub n_classes: Option<usize>,
+    pub train: Option<TrainMeta>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub param_spec: Vec<ParamSpec>,
+    /// Kernel-artifact extras (`kernel` name + dims map as JSON).
+    pub kernel: Option<String>,
+}
+
+impl ArtifactMeta {
+    /// Tag like "pamm512", "baseline", "crs64" — harness display key.
+    pub fn variant_tag(&self) -> String {
+        match &self.variant {
+            None => "-".into(),
+            Some(v) if v.mode == "baseline" => "baseline".into(),
+            Some(v) => {
+                let inv = (1.0 / v.r).round() as i64;
+                let mut t = format!("{}{}", v.mode, inv);
+                if v.use_pallas {
+                    t.push_str("pl");
+                }
+                if let Some(e) = v.eps {
+                    t.push_str(&format!("_eps{e}"));
+                }
+                t
+            }
+        }
+    }
+}
+
+/// Model architecture row (`configs` manifest section) — cross-checked
+/// against rust/src/memory's analytic model in tests.
+#[derive(Debug, Clone)]
+pub struct ConfigMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub configs: Vec<ConfigMeta>,
+}
+
+fn parse_shape(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .context("shape must be an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim must be a number"))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = jsonx::parse(text).context("manifest.json parse")?;
+        let version = root.req_usize("version")?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expected 1)");
+        }
+
+        let mut artifacts = Vec::new();
+        for a in root.req_arr("artifacts")? {
+            let variant = match a.get("variant") {
+                Value::Null => None,
+                v => Some(VariantMeta::parse(v)?),
+            };
+            let train = match a.get("train") {
+                Value::Null => None,
+                t => Some(TrainMeta {
+                    lr: t.req_f64("lr")?,
+                    steps: t.req_usize("steps")?,
+                    pamm_lr_scale: t.req_f64("pamm_lr_scale")?,
+                }),
+            };
+            let param_spec = match a.get("param_spec") {
+                Value::Null => Vec::new(),
+                ps => ps
+                    .as_arr()
+                    .context("param_spec must be array")?
+                    .iter()
+                    .map(|p| {
+                        Ok(ParamSpec {
+                            name: p.req_str("name")?.to_string(),
+                            shape: parse_shape(p.req("shape")?)?,
+                            init_std: p.req_f64("init_std")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            artifacts.push(ArtifactMeta {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                config: a.get("config").as_str().map(String::from),
+                variant,
+                batch: a.get("batch").as_usize(),
+                seq: a.get("seq").as_usize(),
+                n_classes: a.get("n_classes").as_usize(),
+                train,
+                inputs: a
+                    .req_arr("inputs")?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                param_spec,
+                kernel: a.get("kernel").as_str().map(String::from),
+            });
+        }
+
+        let mut configs = Vec::new();
+        if let Some(obj) = root.get("configs").as_obj() {
+            for (name, c) in obj {
+                configs.push(ConfigMeta {
+                    name: name.clone(),
+                    vocab: c.req_usize("vocab")?,
+                    d_model: c.req_usize("d_model")?,
+                    n_layers: c.req_usize("n_layers")?,
+                    n_heads: c.req_usize("n_heads")?,
+                    d_ff: c.req_usize("d_ff")?,
+                    param_count: c.req_usize("param_count")?,
+                });
+            }
+        }
+
+        Ok(Manifest { artifacts, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Option<&ConfigMeta> {
+        self.configs.iter().find(|c| c.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {
+          "name": "train_tiny_pamm512_8x128",
+          "file": "train_tiny_pamm512_8x128.hlo.txt",
+          "kind": "train_step",
+          "config": "tiny",
+          "variant": {"mode": "pamm", "r": 0.001953125, "eps": -1.0, "use_pallas": false},
+          "batch": 8, "seq": 128,
+          "train": {"lr": 0.003, "steps": 600, "pamm_lr_scale": 0.25},
+          "inputs": [{"name": "param.embed", "shape": [512, 128], "dtype": "f32"}],
+          "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+          "param_spec": [{"name": "embed", "shape": [512, 128], "init_std": 0.02}]
+        }
+      ],
+      "configs": {"tiny": {"vocab": 512, "d_model": 128, "n_layers": 4,
+                           "n_heads": 4, "d_ff": 344, "param_count": 1000000}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.kind, "train_step");
+        assert_eq!(a.variant.as_ref().unwrap().mode, "pamm");
+        assert!(a.variant.as_ref().unwrap().eps.is_none()); // -1 → ∞
+        assert_eq!(a.variant_tag(), "pamm512");
+        assert_eq!(a.inputs[0].shape, vec![512, 128]);
+        assert_eq!(m.config("tiny").unwrap().d_ff, 344);
+        assert_eq!(a.train.as_ref().unwrap().steps, 600);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"dtype\": \"f32\"", "\"dtype\": \"f64\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,269 @@
+//! Minimal dense f32 matrix used by the native substrates.
+//!
+//! This is deliberately *not* a general ndarray: the PAMM hot paths need
+//! exactly 2-D row-major matrices with a handful of contractions
+//! (`a @ b`, `aᵀ @ b`, row gathers, row norms). Model compute runs inside
+//! PJRT executables; this type exists for the native PAMM twin
+//! (rust/src/pamm), the data pipeline, metrics, and tests.
+//!
+//! The matmuls use i-k-j loop order with the inner j-loop over contiguous
+//! rows — autovectorizes well at the (≤ 4096²) shapes the benches use
+//! (measured in EXPERIMENTS.md §Perf).
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Gather the given rows into a new matrix (PAMM's `C = A[idx]`).
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Per-row L2 norms.
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
+            .collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — i-k-j order, inner loop contiguous in both operands.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, m);
+        for i in 0..n {
+            let a_row = self.row(i);
+            let o_row = &mut out.data[i * m..(i + 1) * m];
+            for (kk, &a) in a_row.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * m..(kk + 1) * m];
+                for j in 0..m {
+                    o_row[j] += a * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ @ other` without materializing the transpose — the exact
+    /// `∇W = Xᵀ∇Z` contraction PAMM replaces (the baseline in t7/t8).
+    ///
+    /// Column-tiled (TJ = 64): the active output tile (n × 64 ≈ 128 KiB at
+    /// n = 512) stays cache-resident across the whole b sweep instead of
+    /// streaming the full n×m output once per input row (§Perf).
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (b, n, m) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, m);
+        const TJ: usize = 64;
+        let mut j0 = 0usize;
+        while j0 < m {
+            let j1 = (j0 + TJ).min(m);
+            for r in 0..b {
+                let a_row = self.row(r);
+                let b_row = &other.row(r)[j0..j1];
+                for (i, &a) in a_row.iter().enumerate().take(n) {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let o_row = &mut out.data[i * m + j0..i * m + j1];
+                    for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                        *o += a * bv;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(other.data.iter()).map(|(a, b)| a - b).collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn random_normal(
+        rows: usize,
+        cols: usize,
+        std: f32,
+        rng: &mut crate::rngx::Xoshiro256,
+    ) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal_f32(&mut m.data, std);
+        m
+    }
+}
+
+/// Dot product of two equal-length slices (hot helper for csim rows).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Xoshiro256;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let id = Mat::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&id), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Xoshiro256::new(1);
+        let a = Mat::random_normal(17, 5, 1.0, &mut rng);
+        let b = Mat::random_normal(17, 7, 1.0, &mut rng);
+        let direct = a.t_matmul(&b);
+        let via_t = a.transpose().matmul(&b);
+        assert!(direct.max_abs_diff(&via_t) < 1e-5);
+    }
+
+    #[test]
+    fn gather_and_norms() {
+        let a = Mat::from_vec(3, 2, vec![3., 4., 0., 0., 1., 0.]);
+        let g = a.gather_rows(&[2, 0]);
+        assert_eq!(g.data(), &[1., 0., 3., 4.]);
+        let norms = a.row_norms();
+        assert!((norms[0] - 5.0).abs() < 1e-6);
+        assert_eq!(norms[1], 0.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::new(2);
+        let a = Mat::random_normal(4, 9, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn frob_and_diff() {
+        let a = Mat::from_vec(1, 2, vec![3., 4.]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-6);
+        let b = Mat::from_vec(1, 2, vec![3., 4.5]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,181 @@
+//! Property tests (propx) over the native PAMM invariants — no artifacts
+//! needed. These are the "proptest on coordinator invariants" deliverable:
+//! routing (assignment), state bookkeeping (α/β), and estimator identities
+//! hold for arbitrary shapes and data, not just the unit-test fixtures.
+
+use pamm::pamm as pammc;
+use pamm::pamm::Eps;
+use pamm::propx::{assert_prop, FnGen, PropOpts};
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::Mat;
+
+/// Random (A, B, gen_idx) triple; sizes scale with the shrink parameter.
+struct Case {
+    a: Mat,
+    b: Mat,
+    idx: Vec<usize>,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case(a={}x{}, m={}, k={})",
+            self.a.rows(),
+            self.a.cols(),
+            self.b.cols(),
+            self.idx.len()
+        )
+    }
+}
+
+fn case_gen() -> impl pamm::propx::Gen<Item = Case> {
+    FnGen(|rng: &mut Xoshiro256, size: usize| {
+        let b = 4 + rng.next_below((4 * size.max(1)) as u64) as usize;
+        let n = 2 + rng.next_below(size.max(2) as u64) as usize;
+        let m = 2 + rng.next_below(size.max(2) as u64) as usize;
+        let k = 1 + rng.next_below(b.min(size.max(1)) as u64) as usize;
+        let a = Mat::random_normal(b, n, 1.0, rng);
+        let bm = Mat::random_normal(b, m, 1.0, rng);
+        let idx = pammc::sample_generators(rng, b, k);
+        Case { a, b: bm, idx }
+    })
+}
+
+#[test]
+fn assignment_always_in_range_and_alpha_finite() {
+    assert_prop(
+        "assignment_in_range",
+        &PropOpts { cases: 48, seed: 0xA1, max_size: 48 },
+        &case_gen(),
+        |c: &Case| {
+            let comp = pammc::compress(&c.a, &c.idx, Eps::Inf);
+            for (i, &f) in comp.assign.iter().enumerate() {
+                if f as usize >= c.idx.len() {
+                    return Err(format!("row {i}: f={f} out of range k={}", c.idx.len()));
+                }
+            }
+            if !comp.alpha.iter().all(|a| a.is_finite()) {
+                return Err("non-finite alpha".into());
+            }
+            if !(comp.beta.is_finite() && comp.beta >= 1.0 - 1e-6) {
+                return Err(format!("beta {}", comp.beta));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn generators_represent_themselves_with_alpha_one() {
+    assert_prop(
+        "self_representation",
+        &PropOpts { cases: 48, seed: 0xA2, max_size: 40 },
+        &case_gen(),
+        |c: &Case| {
+            let comp = pammc::compress(&c.a, &c.idx, Eps::Inf);
+            for (pos, &g) in c.idx.iter().enumerate() {
+                // The generator row's best match must reconstruct itself:
+                // α·C_f must equal the row (any collinear generator works).
+                let al = comp.alpha[g];
+                let f = comp.assign[g] as usize;
+                let row = c.a.row(g);
+                let cf = comp.generators.row(f);
+                let err: f32 = (0..row.len())
+                    .map(|j| (row[j] - al * cf[j]).powi(2))
+                    .sum::<f32>()
+                    .sqrt();
+                let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+                if err > 1e-2 * norm.max(1e-3) {
+                    return Err(format!(
+                        "generator {pos} (row {g}) self-error {err} (norm {norm})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn beta_equals_b_over_kept() {
+    assert_prop(
+        "beta_bookkeeping",
+        &PropOpts { cases: 48, seed: 0xA3, max_size: 48 },
+        &case_gen(),
+        |c: &Case| {
+            for eps in [Eps::Val(0.0), Eps::Val(0.5), Eps::Inf] {
+                let comp = pammc::compress(&c.a, &c.idx, eps);
+                let kept = comp.alpha.iter().filter(|a| **a != 0.0).count();
+                let expect = if kept > 0 { c.a.rows() as f32 / kept as f32 } else { 1.0 };
+                if (comp.beta - expect).abs() > 1e-4 {
+                    return Err(format!("beta {} != b/kept {expect} ({eps:?})", comp.beta));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn eps_inf_apply_equals_reconstruct_then_multiply() {
+    assert_prop(
+        "apply_identity",
+        &PropOpts { cases: 32, seed: 0xA4, max_size: 32 },
+        &case_gen(),
+        |c: &Case| {
+            let comp = pammc::compress(&c.a, &c.idx, Eps::Inf);
+            let fast = pammc::apply(&comp, &c.b);
+            let mut slow = comp.reconstruct().t_matmul(&c.b);
+            slow.scale(comp.beta);
+            let d = fast.max_abs_diff(&slow);
+            let scale = slow.frob_norm().max(1.0);
+            if d > 1e-3 * scale {
+                return Err(format!("apply identity diff {d} (scale {scale})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn coverage_monotone_in_eps_property() {
+    assert_prop(
+        "coverage_monotone",
+        &PropOpts { cases: 32, seed: 0xA5, max_size: 48 },
+        &case_gen(),
+        |c: &Case| {
+            let cov = |e| pammc::compress(&c.a, &c.idx, e).coverage();
+            let c0 = cov(Eps::Val(0.0));
+            let c5 = cov(Eps::Val(0.5));
+            let ci = cov(Eps::Inf);
+            if !(c0 <= c5 + 1e-12 && c5 <= ci + 1e-12) {
+                return Err(format!("coverage not monotone: {c0} {c5} {ci}"));
+            }
+            if (ci - 1.0).abs() > 1e-12 {
+                return Err(format!("eps=inf coverage {ci} != 1"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn full_generator_set_recovers_exact_product() {
+    assert_prop(
+        "exact_at_k_eq_b",
+        &PropOpts { cases: 24, seed: 0xA6, max_size: 24 },
+        &case_gen(),
+        |c: &Case| {
+            let idx: Vec<usize> = (0..c.a.rows()).collect();
+            let approx = pammc::pamm_matmul(&c.a, &c.b, &idx, Eps::Inf);
+            let exact = pammc::exact_matmul(&c.a, &c.b);
+            let d = approx.max_abs_diff(&exact);
+            let scale = exact.frob_norm().max(1.0);
+            if d > 5e-3 * scale {
+                return Err(format!("not exact at k=b: {d} (scale {scale})"));
+            }
+            Ok(())
+        },
+    );
+}
