@@ -1,48 +1,96 @@
-//! Bench: native PAMM ops vs exact matmul across the paper's shape ladder
-//! (source data for Tables 7/8 and the App. J speedup model γ).
+//! Bench: native PAMM ops vs exact matmul across the paper's shape
+//! ladder, swept over 1/2/4/N worker threads on a shared `poolx::Pool`
+//! (source data for Tables 7/8, the App. J speedup model γ, and the
+//! committed perf trajectory in `benchmarks/BENCH_pamm_ops.json` →
+//! BENCHMARKS.md).
 //!
 //! Run: `cargo bench --bench pamm_ops` (PAMM_BENCH_QUICK=1 for CI).
+//! Persists entries via `benchx::BenchSink` (dir: PAMM_BENCH_DIR,
+//! default `benchmarks/`); render with `pamm bench-report`.
 
-use pamm::benchx::Suite;
+use std::time::Duration;
+
+use pamm::benchx::{thread_sweep, BenchOpts, BenchSink, Suite};
 use pamm::pamm as pammc;
 use pamm::pamm::Eps;
+use pamm::poolx::Pool;
 use pamm::rngx::Xoshiro256;
 use pamm::tensor::Mat;
 
+fn opts() -> BenchOpts {
+    // The 2048² matmul_tn runs seconds per iter single-threaded; keep
+    // the sweep bounded while still getting a stable median.
+    BenchOpts::quick_or(BenchOpts {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 15,
+        max_total: Duration::from_secs(15),
+    })
+}
+
 fn main() {
     let shapes: &[(usize, usize, usize, usize)] = &[
-        // (b, n, m, k) — paper-like per-GPU shapes scaled to CPU budget
-        (1024, 128, 128, 2),
+        // (b, n, m, k) — paper-like per-GPU shapes scaled to CPU budget;
+        // the 2048² row is the acceptance shape for the 4-thread speedup.
         (1024, 128, 128, 8),
-        (4096, 256, 256, 8),
         (4096, 256, 256, 32),
-        (8192, 512, 512, 16),
+        (2048, 2048, 2048, 32),
     ];
+    let sweep = thread_sweep();
+    let mut sink = BenchSink::new("pamm_ops");
+
     for &(b, n, m, k) in shapes {
+        let shape_s = format!("b={b} n={n} m={m} k={k}");
         let mut rng = Xoshiro256::new(1);
         let a = Mat::random_normal(b, n, 1.0, &mut rng);
         let dz = Mat::random_normal(b, m, 1.0, &mut rng);
         let idx = pammc::sample_generators(&mut rng, b, k);
-        let comp = pammc::compress(&a, &idx, Eps::Inf);
 
-        let mut suite = Suite::new(&format!("pamm_ops b={b} n={n} m={m} k={k}"));
+        let mut suite = Suite::with_opts(&format!("pamm_ops {shape_s}"), opts());
         suite.header();
-        suite.bench("exact dW = XᵀdZ", || {
-            std::hint::black_box(pammc::exact_matmul(&a, &dz));
-        });
-        suite.bench("pamm compress", || {
-            std::hint::black_box(pammc::compress(&a, &idx, Eps::Inf));
-        });
-        suite.bench("pamm apply (approx dW)", || {
-            std::hint::black_box(pammc::apply(&comp, &dz));
-        });
-        suite.bench("pamm compress+apply", || {
-            let c = pammc::compress(&a, &idx, Eps::Inf);
-            std::hint::black_box(pammc::apply(&c, &dz));
-        });
-        let gamma = (b * m) as f64 / (k * (b + m)) as f64;
-        if let Some(speedup) = suite.ratio("pamm apply (approx dW)", "exact dW = XᵀdZ") {
-            println!("  apply speedup over exact: {speedup:.1}×  (App. J model γ = {gamma:.1})");
+
+        for &t in &sweep {
+            let pool = Pool::new(t);
+            let comp = pammc::compress_with(&a, &idx, Eps::Inf, &pool);
+
+            let r = suite
+                .bench(&format!("matmul_tn (exact dW) t={t}"), || {
+                    std::hint::black_box(pammc::exact_matmul_with(&a, &dz, &pool));
+                })
+                .clone();
+            sink.record("matmul_tn", &shape_s, t, &r);
+
+            let r = suite
+                .bench(&format!("pamm compress t={t}"), || {
+                    std::hint::black_box(pammc::compress_with(&a, &idx, Eps::Inf, &pool));
+                })
+                .clone();
+            sink.record("compress", &shape_s, t, &r);
+
+            let r = suite
+                .bench(&format!("pamm apply (approx dW) t={t}"), || {
+                    std::hint::black_box(pammc::apply_with(&comp, &dz, &pool));
+                })
+                .clone();
+            sink.record("apply", &shape_s, t, &r);
         }
+
+        for op in ["matmul_tn (exact dW)", "pamm compress", "pamm apply (approx dW)"] {
+            // ratio(a, b) = median(b)/median(a) → t=1 time over t=4 time.
+            if let Some(sp) = suite.ratio(&format!("{op} t=4"), &format!("{op} t=1")) {
+                println!("  {op}: 4-thread speedup {sp:.2}x");
+            }
+        }
+        let gamma = (b * m) as f64 / (k * (b + m)) as f64;
+        if let Some(speedup) =
+            suite.ratio("pamm apply (approx dW) t=1", "matmul_tn (exact dW) t=1")
+        {
+            println!("  apply speedup over exact (serial): {speedup:.1}x  (App. J model γ = {gamma:.1})");
+        }
+    }
+
+    match sink.flush() {
+        Ok(path) => println!("\npersisted {} entries to {}", sink.entries().len(), path.display()),
+        Err(e) => eprintln!("bench persistence failed: {e}"),
     }
 }

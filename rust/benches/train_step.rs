@@ -1,17 +1,70 @@
-//! Bench: full training-step latency through the PJRT stack — baseline vs
-//! PAMM vs PAMM-Pallas and the DDP grad/apply split (source data for
-//! Table 2a/2b). Requires `make artifacts`.
+//! Bench: training-step latency, two tiers.
+//!
+//! 1. **Native QKV projection-step twin** (always runs, no artifacts):
+//!    fwd `x@W` + PAMM compress + approx-dW apply at a paper-like shape,
+//!    swept over 1/2/4/N threads on a shared `poolx::Pool`. Persists to
+//!    `benchmarks/BENCH_train_step.json` for the perf trail.
+//! 2. **Full PJRT step** — baseline vs PAMM vs PAMM-Pallas and the DDP
+//!    grad/apply split (source data for Table 2a/2b). Requires
+//!    `make artifacts`; skipped with a note when absent.
 //!
 //! Run: `cargo bench --bench train_step` (PAMM_BENCH_QUICK=1 for CI).
 
-use pamm::benchx::Suite;
+use std::time::Duration;
+
+use pamm::benchx::{thread_sweep, BenchOpts, BenchSink, Suite};
 use pamm::coordinator::session::TrainSession;
 use pamm::data::batcher::BatchIterator;
+use pamm::pamm as pammc;
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
 use pamm::runtime::Engine;
+use pamm::tensor::Mat;
 
-fn main() -> anyhow::Result<()> {
-    let engine = Engine::load("artifacts")?;
-    let mut suite = Suite::new("train_step (nano 4×64)");
+fn native_opts() -> BenchOpts {
+    BenchOpts::quick_or(BenchOpts {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_iters: 20,
+        max_total: Duration::from_secs(10),
+    })
+}
+
+/// Native twin of one QKV projection training step: forward `x@W`,
+/// compress of the projection input, approx dW via apply.
+fn native_sweep(sink: &mut BenchSink) {
+    let (b, n, m, k) = (4096usize, 512usize, 512usize, 16usize);
+    let shape_s = format!("b={b} n={n} m={m} k={k}");
+    let mut rng = Xoshiro256::new(0x7AB7E);
+    let a = Mat::random_normal(b, n, 1.0, &mut rng);
+    let w = Mat::random_normal(n, m, 0.05, &mut rng);
+    let dz = Mat::random_normal(b, m, 1.0, &mut rng);
+    let idx = pammc::sample_generators(&mut rng, b, k);
+
+    let sweep = thread_sweep();
+
+    let mut suite = Suite::with_opts(&format!("train_step native qkv twin {shape_s}"), native_opts());
+    suite.header();
+    for &t in &sweep {
+        let pool = Pool::new(t);
+        let r = suite
+            .bench(&format!("qkv_step t={t}"), || {
+                let z = a.matmul_with(&w, &pool);
+                let comp = pammc::compress_with(&a, &idx, Eps::Inf, &pool);
+                let dw = pammc::apply_with(&comp, &dz, &pool);
+                std::hint::black_box((z, dw));
+            })
+            .clone();
+        sink.record("qkv_step", &shape_s, t, &r);
+    }
+    if let Some(sp) = suite.ratio("qkv_step t=4", "qkv_step t=1") {
+        println!("  qkv_step: 4-thread speedup {sp:.2}x");
+    }
+}
+
+fn pjrt_steps(engine: &Engine) -> anyhow::Result<()> {
+    let mut suite = Suite::new("train_step (nano 4x64)");
     suite.header();
 
     for name in ["train_nano_baseline_4x64", "train_nano_pamm64_4x64", "train_nano_pamm64pl_4x64"] {
@@ -19,7 +72,7 @@ fn main() -> anyhow::Result<()> {
             println!("  (skipping {name}: not in manifest)");
             continue;
         }
-        let mut session = TrainSession::new(&engine, name, None, 7)?;
+        let mut session = TrainSession::new(engine, name, None, 7)?;
         let mut it = BatchIterator::from_seed(256, 4, 64, 7);
         let batches: Vec<_> = (0..4).map(|_| it.next_batch().to_tensor()).collect();
         let mut i = 0;
@@ -27,7 +80,7 @@ fn main() -> anyhow::Result<()> {
             session.step(&batches[i % 4]).expect("step");
             i += 1;
         });
-        println!("    → {:.0} tok/s", r.rate(256.0));
+        println!("    -> {:.0} tok/s", r.rate(256.0));
     }
 
     if let Some(deg) = suite.ratio("train_nano_baseline_4x64", "train_nano_pamm64_4x64") {
@@ -36,10 +89,10 @@ fn main() -> anyhow::Result<()> {
 
     // Larger config if the full artifact set is present.
     if engine.meta("train_tiny_baseline_8x128").is_ok() {
-        let mut suite2 = Suite::new("train_step (tiny 8×128)");
+        let mut suite2 = Suite::new("train_step (tiny 8x128)");
         suite2.header();
         for name in ["train_tiny_baseline_8x128", "train_tiny_pamm512_8x128"] {
-            let mut session = TrainSession::new(&engine, name, None, 7)?;
+            let mut session = TrainSession::new(engine, name, None, 7)?;
             let vocab = engine.manifest.config("tiny").unwrap().vocab;
             let mut it = BatchIterator::from_seed(vocab, 8, 128, 7);
             let batches: Vec<_> = (0..4).map(|_| it.next_batch().to_tensor()).collect();
@@ -48,8 +101,23 @@ fn main() -> anyhow::Result<()> {
                 session.step(&batches[i % 4]).expect("step");
                 i += 1;
             });
-            println!("    → {:.0} tok/s", r.rate(1024.0));
+            println!("    -> {:.0} tok/s", r.rate(1024.0));
         }
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut sink = BenchSink::new("train_step");
+    native_sweep(&mut sink);
+    match sink.flush() {
+        Ok(path) => println!("  persisted {} entries to {}", sink.entries().len(), path.display()),
+        Err(e) => eprintln!("  bench persistence failed: {e}"),
+    }
+
+    match Engine::load("artifacts") {
+        Ok(engine) => pjrt_steps(&engine)?,
+        Err(e) => println!("\n(skipping PJRT train_step suites: {e:#})"),
     }
     Ok(())
 }

@@ -1,12 +1,25 @@
 //! Micro-benchmark harness (criterion is not in the offline vendor set).
 //!
 //! Provides warmup, timed iterations, and robust statistics (median +
-//! percentiles, MAD-based noise estimate). `cargo bench` runs the suites
-//! under `rust/benches/` which are plain `harness = false` binaries built
-//! on this module; the experiment harness (t2/t7/t8) reuses [`bench_fn`]
-//! for its per-op timers.
+//! percentiles). `cargo bench` runs the suites under `rust/benches/`
+//! which are plain `harness = false` binaries built on this module; the
+//! experiment harness (t2/t7/t8) reuses [`bench_fn`] for its per-op
+//! timers.
+//!
+//! Results also persist across PRs: [`BenchSink`] appends
+//! machine-readable entries (op, shape, threads, ns/iter,
+//! speedup-vs-serial) and writes one `BENCH_<suite>.json` per suite
+//! under `benchmarks/` (override with `PAMM_BENCH_DIR`). The [`report`]
+//! module loads every `BENCH_*.json` back and renders the committed
+//! `BENCHMARKS.md` via `pamm bench-report` — the repo's perf trajectory
+//! is a diffable artifact, not folklore.
 
+pub mod report;
+
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::jsonx::{self, Value};
 
 /// One benchmark's result.
 #[derive(Debug, Clone)]
@@ -67,6 +80,27 @@ impl BenchOpts {
             max_total: Duration::from_secs(2),
         }
     }
+
+    /// `full`, unless `PAMM_BENCH_QUICK` is set (the CI profile) — the
+    /// one switch every bench binary shares.
+    pub fn quick_or(full: BenchOpts) -> BenchOpts {
+        if std::env::var("PAMM_BENCH_QUICK").is_ok() {
+            BenchOpts::quick()
+        } else {
+            full
+        }
+    }
+}
+
+/// The thread sweep the bench binaries persist: 1/2/4/host parallelism,
+/// sorted and deduped. Shared so every `BENCH_*.json` suite stays
+/// comparable.
+pub fn thread_sweep() -> Vec<usize> {
+    let max_t = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+    let mut sweep = vec![1, 2, 4, max_t];
+    sweep.sort_unstable();
+    sweep.dedup();
+    sweep
 }
 
 fn percentile(sorted: &[Duration], p: f64) -> Duration {
@@ -111,12 +145,7 @@ pub struct Suite {
 impl Suite {
     pub fn new(title: &str) -> Self {
         // Honor PAMM_BENCH_QUICK=1 to keep `cargo bench` CI-friendly.
-        let opts = if std::env::var("PAMM_BENCH_QUICK").is_ok() {
-            BenchOpts::quick()
-        } else {
-            BenchOpts::default()
-        };
-        Self { title: title.to_string(), opts, results: Vec::new() }
+        Self::with_opts(title, BenchOpts::quick_or(BenchOpts::default()))
     }
 
     pub fn with_opts(title: &str, opts: BenchOpts) -> Self {
@@ -144,6 +173,191 @@ impl Suite {
         let fb = self.results.iter().find(|r| r.name == b)?;
         Some(fb.median_secs() / fa.median_secs())
     }
+}
+
+/// Host fingerprint stored alongside persisted entries so BENCHMARKS.md
+/// can say where a number came from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostInfo {
+    pub os: String,
+    pub arch: String,
+    pub cpus: usize,
+    pub cpu_model: String,
+}
+
+impl HostInfo {
+    pub fn detect() -> Self {
+        let cpus = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+        let cpu_model = std::fs::read_to_string("/proc/cpuinfo")
+            .ok()
+            .and_then(|t| {
+                t.lines()
+                    .find(|l| l.starts_with("model name"))
+                    .and_then(|l| l.split(':').nth(1).map(|s| s.trim().to_string()))
+            })
+            .unwrap_or_else(|| "unknown".into());
+        Self {
+            os: std::env::consts::OS.into(),
+            arch: std::env::consts::ARCH.into(),
+            cpus,
+            cpu_model,
+        }
+    }
+}
+
+/// One persisted benchmark entry (the schema of `BENCH_*.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    pub op: String,
+    /// Free-form shape label, e.g. `b=2048 n=2048 m=2048 k=32`.
+    pub shape: String,
+    pub threads: usize,
+    /// Median wall time per iteration in nanoseconds.
+    pub ns_per_iter: f64,
+    /// `serial_ns / ns` against the `threads == 1` entry of the same
+    /// (op, shape); filled in by [`BenchSink::flush_to`].
+    pub speedup_vs_serial: Option<f64>,
+    pub iters: usize,
+}
+
+/// A persisted suite: host + entries, as loaded from one `BENCH_*.json`.
+#[derive(Debug, Clone)]
+pub struct SuiteRecord {
+    pub suite: String,
+    pub host: HostInfo,
+    pub entries: Vec<BenchEntry>,
+}
+
+/// Accumulates [`BenchEntry`] rows and writes `BENCH_<suite>.json`.
+pub struct BenchSink {
+    suite: String,
+    host: HostInfo,
+    entries: Vec<BenchEntry>,
+}
+
+/// Directory the bench binaries persist to (`PAMM_BENCH_DIR` override).
+pub fn bench_dir() -> PathBuf {
+    std::env::var("PAMM_BENCH_DIR").map(PathBuf::from).unwrap_or_else(|_| "benchmarks".into())
+}
+
+impl BenchSink {
+    pub fn new(suite: &str) -> Self {
+        Self { suite: suite.to_string(), host: HostInfo::detect(), entries: Vec::new() }
+    }
+
+    /// Record one measured result under an op/shape/threads key.
+    pub fn record(&mut self, op: &str, shape: &str, threads: usize, r: &BenchResult) {
+        self.entries.push(BenchEntry {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            threads,
+            ns_per_iter: r.median.as_nanos() as f64,
+            speedup_vs_serial: None,
+            iters: r.iters,
+        });
+    }
+
+    /// Entries recorded so far (speedups not yet resolved).
+    pub fn entries(&self) -> &[BenchEntry] {
+        &self.entries
+    }
+
+    /// Write `BENCH_<suite>.json` into [`bench_dir`], resolving
+    /// speedup-vs-serial against each (op, shape)'s 1-thread entry.
+    pub fn flush(&self) -> std::io::Result<PathBuf> {
+        self.flush_to(bench_dir())
+    }
+
+    /// Like [`BenchSink::flush`] with an explicit directory.
+    pub fn flush_to(&self, dir: impl AsRef<Path>) -> std::io::Result<PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut resolved = self.entries.clone();
+        for e in resolved.iter_mut() {
+            if e.threads != 1 {
+                e.speedup_vs_serial = self
+                    .entries
+                    .iter()
+                    .find(|s| s.threads == 1 && s.op == e.op && s.shape == e.shape)
+                    .map(|s| s.ns_per_iter / e.ns_per_iter.max(1.0));
+            }
+        }
+        let doc = jsonx::obj(vec![
+            ("suite", jsonx::s(self.suite.clone())),
+            (
+                "host",
+                jsonx::obj(vec![
+                    ("os", jsonx::s(self.host.os.clone())),
+                    ("arch", jsonx::s(self.host.arch.clone())),
+                    ("cpus", jsonx::num(self.host.cpus as f64)),
+                    ("cpu_model", jsonx::s(self.host.cpu_model.clone())),
+                ]),
+            ),
+            ("entries", jsonx::arr(resolved.iter().map(entry_json).collect())),
+        ]);
+        let path = dir.join(format!("BENCH_{}.json", self.suite));
+        std::fs::write(&path, format!("{doc}\n"))?;
+        Ok(path)
+    }
+}
+
+fn entry_json(e: &BenchEntry) -> Value {
+    let mut pairs = vec![
+        ("op", jsonx::s(e.op.clone())),
+        ("shape", jsonx::s(e.shape.clone())),
+        ("threads", jsonx::num(e.threads as f64)),
+        ("ns_per_iter", jsonx::num(e.ns_per_iter)),
+        ("iters", jsonx::num(e.iters as f64)),
+    ];
+    if let Some(sp) = e.speedup_vs_serial {
+        pairs.push(("speedup_vs_serial", jsonx::num(sp)));
+    }
+    jsonx::obj(pairs)
+}
+
+/// Parse one `BENCH_*.json` file.
+pub fn load_file(path: impl AsRef<Path>) -> anyhow::Result<SuiteRecord> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    let doc = jsonx::parse(&text)?;
+    let host = doc.get("host");
+    let mut entries = Vec::new();
+    for e in doc.req_arr("entries")? {
+        entries.push(BenchEntry {
+            op: e.req_str("op")?.to_string(),
+            shape: e.req_str("shape")?.to_string(),
+            threads: e.req_usize("threads")?,
+            ns_per_iter: e.req_f64("ns_per_iter")?,
+            speedup_vs_serial: e.get("speedup_vs_serial").as_f64(),
+            iters: e.req_usize("iters")?,
+        });
+    }
+    Ok(SuiteRecord {
+        suite: doc.req_str("suite")?.to_string(),
+        host: HostInfo {
+            os: host.get("os").as_str().unwrap_or("unknown").to_string(),
+            arch: host.get("arch").as_str().unwrap_or("unknown").to_string(),
+            cpus: host.get("cpus").as_usize().unwrap_or(0),
+            cpu_model: host.get("cpu_model").as_str().unwrap_or("unknown").to_string(),
+        },
+        entries,
+    })
+}
+
+/// Load every `BENCH_*.json` under `dir`, sorted by file name.
+pub fn load_dir(dir: impl AsRef<Path>) -> anyhow::Result<Vec<SuiteRecord>> {
+    let dir = dir.as_ref();
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("cannot read bench dir {}: {e}", dir.display()))?
+        .filter_map(|entry| entry.ok().map(|d| d.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|f| f.to_str())
+                .map(|f| f.starts_with("BENCH_") && f.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    paths.sort();
+    paths.iter().map(load_file).collect()
 }
 
 #[cfg(test)]
@@ -193,6 +407,46 @@ mod tests {
         s.bench("slow", || std::thread::sleep(Duration::from_micros(1000)));
         let ratio = s.ratio("fast", "slow").unwrap();
         assert!(ratio > 2.0, "slow/fast = {ratio}");
+    }
+
+    #[test]
+    fn sink_roundtrip_and_speedup_resolution() {
+        let mut sink = BenchSink::new("unit_suite");
+        let mk = |ms: u64| BenchResult {
+            name: "x".into(),
+            iters: 5,
+            median: Duration::from_millis(ms),
+            p10: Duration::from_millis(ms),
+            p90: Duration::from_millis(ms),
+            mean: Duration::from_millis(ms),
+        };
+        sink.record("matmul_tn", "b=2048 n=2048 m=2048 k=32", 1, &mk(400));
+        sink.record("matmul_tn", "b=2048 n=2048 m=2048 k=32", 4, &mk(100));
+        sink.record("compress", "b=2048 n=2048 m=2048 k=32", 1, &mk(80));
+
+        let dir = std::env::temp_dir().join(format!("pamm_benchx_{}", std::process::id()));
+        let path = sink.flush_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit_suite.json"));
+
+        let loaded = load_dir(&dir).unwrap();
+        assert_eq!(loaded.len(), 1);
+        let rec = &loaded[0];
+        assert_eq!(rec.suite, "unit_suite");
+        assert_eq!(rec.entries.len(), 3);
+        let par = rec
+            .entries
+            .iter()
+            .find(|e| e.op == "matmul_tn" && e.threads == 4)
+            .expect("4-thread entry");
+        let sp = par.speedup_vs_serial.expect("speedup resolved at flush");
+        assert!((sp - 4.0).abs() < 1e-6, "speedup {sp}");
+        // Serial entries never get a speedup field.
+        assert!(rec
+            .entries
+            .iter()
+            .filter(|e| e.threads == 1)
+            .all(|e| e.speedup_vs_serial.is_none()));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -100,7 +100,16 @@ USAGE:
   pamm memory [--model M] [--batch N] [--seq N] [--r-inv N]
   pamm kernels [--artifacts DIR]      # validate native vs Pallas artifacts
   pamm list [--artifacts DIR]         # list manifest artifacts
+  pamm bench-report [--dir DIR] [--out FILE]
+                                      # render BENCH_*.json -> BENCHMARKS.md
+                                      # (default: benchmarks/ -> BENCHMARKS.md;
+                                      #  --out - prints to stdout)
   pamm help
+
+GLOBAL FLAGS:
+  --threads N    worker threads for the native compute pool (poolx);
+                 0 or unset = auto (available parallelism, PAMM_THREADS
+                 env respected). Results are bit-identical at any N.
 ";
 
 #[cfg(test)]

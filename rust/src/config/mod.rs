@@ -66,6 +66,9 @@ pub struct RunConfig {
     pub workers: usize,
     /// Gradient-accumulation microbatches per optimizer step.
     pub grad_accum: usize,
+    /// Worker threads for the native compute pool (poolx); 0 = auto
+    /// (available parallelism). CLI `--threads` overrides this.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -83,6 +86,7 @@ impl Default for RunConfig {
             run_dir: "runs".into(),
             workers: 1,
             grad_accum: 1,
+            threads: 0,
         }
     }
 }
@@ -152,6 +156,10 @@ impl RunConfig {
         }
         if let Some(v) = doc.get_int("run", "grad_accum") {
             self.grad_accum = v as usize;
+        }
+        if let Some(v) = doc.get_int("run", "threads") {
+            // Negative values mean "auto" (0), not a wrapped huge usize.
+            self.threads = v.max(0) as usize;
         }
         if let Some(v) = doc.get_str("run", "artifacts_dir") {
             self.artifacts_dir = v.to_string();
@@ -234,6 +242,7 @@ mod tests {
             model = "tiny"
             steps = 42
             workers = 4
+            threads = 3
             [variant]
             mode = "pamm"
             r = 0.001953125
@@ -245,6 +254,7 @@ mod tests {
         assert_eq!(c.model, "tiny");
         assert_eq!(c.steps, 42);
         assert_eq!(c.workers, 4);
+        assert_eq!(c.threads, 3);
         assert_eq!(c.variant.tag(), "pamm512");
         assert!(c.variant.eps.is_none());
     }

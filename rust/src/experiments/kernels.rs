@@ -4,6 +4,10 @@
 //! This is the three-implementation agreement check DESIGN.md promises:
 //! jnp-ref == Pallas == native-Rust, executed through the *real* runtime
 //! (HLO text → PJRT compile → execute), not a Python shortcut.
+//!
+//! The native side runs on the shared poolx pool (`--threads`); its
+//! outputs are bit-identical at any thread count, so the agreement
+//! thresholds below are independent of the host's parallelism.
 
 use anyhow::{bail, Context, Result};
 

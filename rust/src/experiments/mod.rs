@@ -5,6 +5,12 @@
 //! `--out` directory so EXPERIMENTS.md can cite machine-readable results.
 //! `--quick` shrinks step counts/grids for CI; the full settings are the
 //! ones recorded in EXPERIMENTS.md.
+//!
+//! Native PAMM compute inside the harnesses runs on the process-wide
+//! poolx pool (sized by `--threads` / `PAMM_THREADS`); numbers are
+//! bit-identical at any thread count, so a harness row is comparable
+//! across hosts. Per-op timings also persist via `benchx::BenchSink`
+//! from the bench binaries — see BENCHMARKS.md for the rendered trail.
 
 pub mod analysisfigs;
 pub mod finetune;

@@ -1,4 +1,9 @@
 //! Throughput & runtime-breakdown experiments: Tables 2a, 2b, 7/8.
+//!
+//! The native per-op timers (table7) run on the process-wide poolx pool
+//! (`--threads`; the breakdown header records the count), so the
+//! breakdown reflects the same parallel kernels the benches measure.
+//! Results are thread-count invariant; only the timings change.
 
 use anyhow::{Context, Result};
 
@@ -8,6 +13,7 @@ use crate::config::Variant;
 use crate::coordinator::session::TrainSession;
 use crate::data::batcher::BatchIterator;
 use crate::pamm::{self, Eps};
+use crate::poolx;
 use crate::runtime::Engine;
 use crate::rngx::Xoshiro256;
 use crate::tensor::Mat;
@@ -116,10 +122,11 @@ pub fn table7(quick: bool, out: &str) -> Result<()> {
     let w = Mat::random_normal(n, m, 0.05, &mut rng);
     let dz = Mat::random_normal(b, m, 1.0, &mut rng);
     let o = opts(quick);
+    let pool = poolx::global();
 
     // ---- forward ops ------------------------------------------------------
     let fwd_matmul = bench_fn("fwd matmul x@w", &o, || {
-        std::hint::black_box(a.matmul(&w));
+        std::hint::black_box(a.matmul_with(&w, pool));
     })
     .median_secs();
     let mut rng2 = Xoshiro256::new(1);
@@ -130,38 +137,43 @@ pub fn table7(quick: bool, out: &str) -> Result<()> {
     let idx = pamm::sample_generators(&mut rng, b, k);
     let c = a.gather_rows(&idx);
     let normalization = bench_fn("normalization", &o, || {
-        std::hint::black_box(a.row_norms());
+        std::hint::black_box(a.row_norms_with(pool));
         std::hint::black_box(c.row_norms());
     })
     .median_secs();
+    let ct = c.transpose();
     let cosine = bench_fn("cosine matmul A·Cᵀ", &o, || {
-        std::hint::black_box(a.matmul(&c.transpose()));
+        std::hint::black_box(a.matmul_with(&ct, pool));
     })
     .median_secs();
     let compress_total = bench_fn("compress total", &o, || {
-        std::hint::black_box(pamm::compress(&a, &idx, Eps::Inf));
+        std::hint::black_box(pamm::compress_with(&a, &idx, Eps::Inf, pool));
     })
     .median_secs();
     let max_assign = (compress_total - cosine - normalization).max(0.0);
 
     // ---- backward ops -----------------------------------------------------
-    let comp = pamm::compress(&a, &idx, Eps::Inf);
+    let comp = pamm::compress_with(&a, &idx, Eps::Inf, pool);
+    let wt = w.transpose();
     let input_grad = bench_fn("input grad dz@wᵀ", &o, || {
-        std::hint::black_box(dz.matmul(&w.transpose()));
+        std::hint::black_box(dz.matmul_with(&wt, pool));
     })
     .median_secs();
     let apply_total = bench_fn("apply total", &o, || {
-        std::hint::black_box(pamm::apply(&comp, &dz));
+        std::hint::black_box(pamm::apply_with(&comp, &dz, pool));
     })
     .median_secs();
     let exact_dw = bench_fn("exact dW = XᵀdZ", &o, || {
-        std::hint::black_box(pamm::exact_matmul(&a, &dz));
+        std::hint::black_box(pamm::exact_matmul_with(&a, &dz, pool));
     })
     .median_secs();
 
     let fwd_total = fwd_matmul + idx_sel + compress_total;
     let bwd_total = input_grad + apply_total;
-    println!("PAMM forward breakdown (b={b}, n={n}, m={m}, k={k}):");
+    println!(
+        "PAMM forward breakdown (b={b}, n={n}, m={m}, k={k}, threads={}):",
+        pool.threads()
+    );
     let mut rows = Vec::new();
     for (name, t) in [
         ("forward matmul", fwd_matmul),

@@ -1,8 +1,10 @@
 //! Minimal JSON parser/serializer.
 //!
-//! The offline image vendors no `serde`/`serde_json`, so the runtime's
-//! manifest loading, metrics logs, and checkpoint indexes use this ~300-line
-//! implementation instead (DESIGN.md "substrates built from scratch").
+//! The offline image vendors no `serde`/`serde_json` (nor `thiserror` —
+//! [`JsonError`] impls `Display`/`Error` by hand), so the runtime's
+//! manifest loading, metrics logs, checkpoint indexes, and the persisted
+//! `BENCH_*.json` perf entries use this ~300-line implementation instead
+//! (DESIGN.md "substrates built from scratch").
 //!
 //! Scope: full JSON grammar (objects, arrays, strings with escapes incl.
 //! `\uXXXX`, numbers, bools, null); numbers are held as `f64` which is exact
@@ -21,15 +23,26 @@ pub enum Value {
     Obj(BTreeMap<String, Value>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("json type error: expected {expected} at {path}")]
     Type { expected: &'static str, path: String },
-    #[error("json missing key: {0}")]
     Missing(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse(at, msg) => write!(f, "json parse error at byte {at}: {msg}"),
+            JsonError::Type { expected, path } => {
+                write!(f, "json type error: expected {expected} at {path}")
+            }
+            JsonError::Missing(key) => write!(f, "json missing key: {key}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 pub type Result<T> = std::result::Result<T, JsonError>;
 

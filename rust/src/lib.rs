@@ -8,11 +8,17 @@
 //! * **L2** (`python/compile`) — JAX LLaMA-family model with PAMM
 //!   custom-vjp projections, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L3** (this crate) — the runtime: PJRT engine, training
-//!   coordinator, native PAMM twin, data pipeline, memory accountant,
-//!   experiment harness (one per paper table/figure — see DESIGN.md).
+//!   coordinator, native PAMM twin (parallel on the shared `poolx`
+//!   pool, `--threads`), data pipeline, memory accountant, experiment
+//!   harness (one per paper table/figure — see DESIGN.md).
 //!
 //! Python never runs on the request path: `make artifacts` once, then the
 //! Rust binary is self-contained.
+//!
+//! Documentation trail: README.md (overview + quickstart), DESIGN.md
+//! (harness ↔ paper mapping), EXPERIMENTS.md (recorded runs, §Perf),
+//! BENCHMARKS.md (rendered from the persisted `benchmarks/BENCH_*.json`
+//! via `pamm bench-report`).
 
 pub mod benchx;
 pub mod checkpoint;

@@ -22,6 +22,11 @@ fn main() {
 
 fn real_main() -> Result<()> {
     let args = Args::from_env()?;
+    // Fix the native compute pool before any kernel runs; the CLI flag
+    // wins over config-file `threads` (poolx is first-set-wins).
+    if let Some(t) = args.get_usize("threads")? {
+        pamm::poolx::set_global_threads(t);
+    }
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "finetune" => cmd_finetune(&args),
@@ -29,6 +34,7 @@ fn real_main() -> Result<()> {
         "memory" => cmd_memory(&args),
         "kernels" => cmd_kernels(&args),
         "list" => cmd_list(&args),
+        "bench-report" => cmd_bench_report(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -92,6 +98,11 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(d) = args.get_str("run-dir") {
         cfg.run_dir = d;
+    }
+    // Config-file `threads` reaches the pool only if --threads didn't
+    // already fix it in real_main (set_global_threads is first-set-wins).
+    if cfg.threads != 0 {
+        pamm::poolx::set_global_threads(cfg.threads);
     }
     Ok(cfg)
 }
@@ -221,6 +232,20 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     let engine = Engine::load(&artifacts)?;
     let n = pamm::experiments::validate_kernels(&engine)?;
     println!("kernel validation OK ({n} artifacts checked)");
+    Ok(())
+}
+
+/// Render the persisted `BENCH_*.json` perf trail into markdown.
+fn cmd_bench_report(args: &Args) -> Result<()> {
+    let dir = args.get_str("dir").unwrap_or_else(|| "benchmarks".into());
+    let out = args.get_str("out").unwrap_or_else(|| "BENCHMARKS.md".into());
+    let report = pamm::benchx::report::render(&dir)?;
+    if out == "-" {
+        print!("{report}");
+    } else {
+        std::fs::write(&out, &report)?;
+        println!("wrote {out} from {dir}/BENCH_*.json");
+    }
     Ok(())
 }
 

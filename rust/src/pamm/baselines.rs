@@ -9,18 +9,29 @@
 //!
 //! Both are implemented exactly as the JAX twins in
 //! `python/compile/kernels/ref.py` (cross-checked in integration tests).
+//!
+//! Like the PAMM kernels, each estimator has a default entry point on the
+//! process-wide pool and a `*_with` twin taking an explicit
+//! [`Pool`] for the fig4a equal-memory comparison and the benches;
+//! results are bit-identical at any thread count.
 
+use crate::poolx::{self, Pool};
 use crate::rngx::Xoshiro256;
 use crate::tensor::Mat;
 
 /// Uniform-CRS estimate of `O = AᵀB`: `(b/k)·A[idx]ᵀ·B[idx]`.
 pub fn crs_matmul(a: &Mat, b_mat: &Mat, gen_idx: &[usize]) -> Mat {
+    crs_matmul_with(a, b_mat, gen_idx, poolx::global())
+}
+
+/// [`crs_matmul`] on an explicit pool.
+pub fn crs_matmul_with(a: &Mat, b_mat: &Mat, gen_idx: &[usize], pool: &Pool) -> Mat {
     assert_eq!(a.rows(), b_mat.rows());
     let b = a.rows();
     let k = gen_idx.len();
     let a_sub = a.gather_rows(gen_idx);
     let b_sub = b_mat.gather_rows(gen_idx);
-    let mut out = a_sub.t_matmul(&b_sub);
+    let mut out = a_sub.matmul_tn_with(&b_sub, pool);
     out.scale(b as f32 / k as f32);
     out
 }
@@ -46,16 +57,26 @@ fn projection(n: usize, k: usize, seed: u64) -> Mat {
 
 /// Forward-time compression: `X̃ = XP` (only X̃ + seed are stored).
 pub fn compact_compress(a: &Mat, k: usize, seed: u64) -> CompactSketch {
+    compact_compress_with(a, k, seed, poolx::global())
+}
+
+/// [`compact_compress`] on an explicit pool.
+pub fn compact_compress_with(a: &Mat, k: usize, seed: u64, pool: &Pool) -> CompactSketch {
     let p = projection(a.cols(), k, seed);
-    CompactSketch { sketch: a.matmul(&p), seed, n: a.cols() }
+    CompactSketch { sketch: a.matmul_with(&p, pool), seed, n: a.cols() }
 }
 
 /// Backward-time estimate: `Õ = P·(X̃ᵀB)` (P regenerated from the seed).
 pub fn compact_matmul(s: &CompactSketch, b_mat: &Mat) -> Mat {
+    compact_matmul_with(s, b_mat, poolx::global())
+}
+
+/// [`compact_matmul`] on an explicit pool.
+pub fn compact_matmul_with(s: &CompactSketch, b_mat: &Mat, pool: &Pool) -> Mat {
     assert_eq!(s.sketch.rows(), b_mat.rows());
     let p = projection(s.n, s.sketch.cols(), s.seed);
-    let inner = s.sketch.t_matmul(b_mat); // (k, m)
-    p.matmul(&inner) // (n, m)
+    let inner = s.sketch.matmul_tn_with(b_mat, pool); // (k, m)
+    p.matmul_with(&inner, pool) // (n, m)
 }
 
 /// CompAct stored bytes: the (b, k) sketch + the 8-byte seed.

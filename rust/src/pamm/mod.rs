@@ -12,10 +12,19 @@
 //!
 //! Numerics follow python/compile/kernels/ref.py exactly, including the
 //! `err² = ‖A_i‖²(1 − csim²)` closed form for the neighborhood condition.
+//!
+//! Every hot entry point comes in two forms: `compress` / `apply` /
+//! `exact_matmul` run on the process-wide [`crate::poolx::global`] pool
+//! (sized by `--threads` / `PAMM_THREADS`), and the `*_with` twins take
+//! an explicit [`Pool`] — the benches use those to sweep thread counts.
+//! All decompositions are row-blocked (compress) or column-stripped
+//! (apply, exact) so outputs are **bit-identical at any thread count**;
+//! `rust/tests/prop_pamm.rs` asserts this for 1/2/4 threads.
 
 pub mod analysis;
 pub mod baselines;
 
+use crate::poolx::{self, Pool};
 use crate::rngx::Xoshiro256;
 use crate::tensor::{dot, Mat};
 
@@ -172,21 +181,18 @@ fn compress_range(
     dropped
 }
 
-/// Rows-per-core threshold below which threading overhead dominates
-/// (§Perf: measured crossover on this host; see EXPERIMENTS.md).
-const PAR_MIN_ROWS: usize = 2048;
-
-fn par_threads(b: usize) -> usize {
-    if b < PAR_MIN_ROWS {
-        return 1;
-    }
-    std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1).min(16)
+/// Stage 1 (Algorithm 1 `Compress`) on the process-wide pool. See
+/// [`compress_with`].
+pub fn compress(a: &Mat, gen_idx: &[usize], eps: Eps) -> Compressed {
+    compress_with(a, gen_idx, eps, poolx::global())
 }
 
 /// Stage 1 (Algorithm 1 `Compress`): assignment + scales for given
-/// generator indices. Parallel over row blocks for large b (rows are
-/// independent — the same decomposition the Pallas grid uses).
-pub fn compress(a: &Mat, gen_idx: &[usize], eps: Eps) -> Compressed {
+/// generator indices. Parallel over row blocks of `pool` (rows are
+/// independent — the same decomposition the Pallas grid uses), serial
+/// below the pool's chunk threshold. Output is bit-identical at any
+/// thread count.
+pub fn compress_with(a: &Mat, gen_idx: &[usize], eps: Eps, pool: &Pool) -> Compressed {
     let b = a.rows();
     let k = gen_idx.len();
     assert!(k >= 1, "need at least one generator");
@@ -195,35 +201,23 @@ pub fn compress(a: &Mat, gen_idx: &[usize], eps: Eps) -> Compressed {
 
     let mut assign = vec![0u32; b];
     let mut alpha = vec![0f32; b];
-    let threads = par_threads(b);
-    let dropped = if threads == 1 {
-        compress_range(a, &c, &nc, eps, 0, b, &mut assign, &mut alpha)
+    let mut dropped = 0usize;
+    if pool.chunks_for(b) <= 1 {
+        // Serial fast path: write assign/alpha in place, no per-chunk
+        // temporaries.
+        dropped = compress_range(a, &c, &nc, eps, 0, b, &mut assign, &mut alpha);
     } else {
-        let chunk = b.div_ceil(threads);
-        let mut total = 0usize;
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            let mut arest: &mut [u32] = &mut assign;
-            let mut lrest: &mut [f32] = &mut alpha;
-            let mut start = 0usize;
-            while start < b {
-                let end = (start + chunk).min(b);
-                let (ac, an) = arest.split_at_mut(end - start);
-                let (lc, ln) = lrest.split_at_mut(end - start);
-                arest = an;
-                lrest = ln;
-                let (c, nc) = (&c, &nc);
-                handles.push(
-                    s.spawn(move || compress_range(a, c, nc, eps, start, end, ac, lc)),
-                );
-                start = end;
-            }
-            for h in handles {
-                total += h.join().expect("compress worker");
-            }
-        });
-        total
-    };
+        for (start, _end, (ac, lc, d)) in pool.map_chunks(b, |s, e| {
+            let mut ac = vec![0u32; e - s];
+            let mut lc = vec![0f32; e - s];
+            let d = compress_range(a, &c, &nc, eps, s, e, &mut ac, &mut lc);
+            (ac, lc, d)
+        }) {
+            assign[start..start + ac.len()].copy_from_slice(&ac);
+            alpha[start..start + lc.len()].copy_from_slice(&lc);
+            dropped += d;
+        }
+    }
 
     // β = b / (b − η) so that E[Õ] = O (Eq. 5).
     let kept = b - dropped;
@@ -231,82 +225,87 @@ pub fn compress(a: &Mat, gen_idx: &[usize], eps: Eps) -> Compressed {
     Compressed { generators: c, assign, alpha, beta }
 }
 
-/// Stage 2 (Algorithm 1 `ApproxMM`): `Õ = β·Cᵀ·B̃` with
-/// `B̃_j = Σ_{i:f(i)=j} α_i B_i` via index-accumulate (the CUDA-flavored
-/// schedule; the Pallas twin uses a one-hot matmul — same numbers).
+/// Stage 2 (Algorithm 1 `ApproxMM`) on the process-wide pool. See
+/// [`apply_with`].
 pub fn apply(comp: &Compressed, b_mat: &Mat) -> Mat {
-    let (k, m) = (comp.k(), b_mat.cols());
-    assert_eq!(comp.b(), b_mat.rows(), "assignment/B row mismatch");
+    apply_with(comp, b_mat, poolx::global())
+}
 
-    let mut btilde = Mat::zeros(k, m);
+/// One column strip `[j0, j1)` of [`apply`]: the B̃ index-accumulate
+/// over the strip's columns, then the serial `Cᵀ·B̃` kernel
+/// ([`Mat::t_matmul`]) and the β scale. Both phases sweep source rows
+/// in ascending order, so the per-element accumulation order never
+/// depends on the strip bounds (bit-identical at any thread count; the
+/// full-width call `apply_strip(comp, b, 0, m)` *is* the serial
+/// algorithm).
+fn apply_strip(comp: &Compressed, b_mat: &Mat, j0: usize, j1: usize) -> Mat {
+    let (k, w) = (comp.k(), j1 - j0);
+    let mut btilde = Mat::zeros(k, w);
     for i in 0..comp.b() {
         let a = comp.alpha[i];
         if a == 0.0 {
             continue;
         }
-        let src = b_mat.row(i);
+        let src = &b_mat.row(i)[j0..j1];
         let dst = btilde.row_mut(comp.assign[i] as usize);
-        for j in 0..m {
-            dst[j] += a * src[j];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += a * s;
         }
     }
+    let mut strip = comp.generators.t_matmul(&btilde); // (n, w)
+    strip.scale(comp.beta);
+    strip
+}
 
-    let mut out = comp.generators.t_matmul(&btilde); // (n, m)
-    out.scale(comp.beta);
+/// Stage 2 (Algorithm 1 `ApproxMM`): `Õ = β·Cᵀ·B̃` with
+/// `B̃_j = Σ_{i:f(i)=j} α_i B_i` via index-accumulate (the CUDA-flavored
+/// schedule; the Pallas twin uses a one-hot matmul — same numbers).
+/// Parallel over column strips of the output on `pool`; bit-identical at
+/// any thread count.
+pub fn apply_with(comp: &Compressed, b_mat: &Mat, pool: &Pool) -> Mat {
+    let m = b_mat.cols();
+    assert_eq!(comp.b(), b_mat.rows(), "assignment/B row mismatch");
+    let n = comp.generators.cols();
+    let strip_pool = pool.for_columns();
+    if strip_pool.chunks_for(m) <= 1 {
+        return apply_strip(comp, b_mat, 0, m);
+    }
+    let mut out = Mat::zeros(n, m);
+    for (j0, j1, strip) in strip_pool.map_chunks(m, |j0, j1| apply_strip(comp, b_mat, j0, j1)) {
+        out.paste_cols(j0, j1, &strip);
+    }
     out
 }
 
 /// End-to-end PAMM approximation of `O = AᵀB`.
 pub fn pamm_matmul(a: &Mat, b_mat: &Mat, gen_idx: &[usize], eps: Eps) -> Mat {
-    apply(&compress(a, gen_idx, eps), b_mat)
+    pamm_matmul_with(a, b_mat, gen_idx, eps, poolx::global())
+}
+
+/// End-to-end PAMM approximation of `O = AᵀB` on an explicit pool.
+pub fn pamm_matmul_with(
+    a: &Mat,
+    b_mat: &Mat,
+    gen_idx: &[usize],
+    eps: Eps,
+    pool: &Pool,
+) -> Mat {
+    apply_with(&compress_with(a, gen_idx, eps, pool), b_mat, pool)
 }
 
 /// Exact `O = AᵀB` — the baseline PAMM replaces (t7/t8 comparison row).
-/// Parallel over b-row blocks with per-thread partial (n×m) accumulators
-/// (the natural reduction decomposition; §Perf before/after in
-/// EXPERIMENTS.md).
+/// Runs on the process-wide pool; see [`exact_matmul_with`].
 pub fn exact_matmul(a: &Mat, b_mat: &Mat) -> Mat {
-    let b = a.rows();
-    let threads = par_threads(b);
-    if threads == 1 {
-        return a.t_matmul(b_mat);
-    }
-    let chunk = b.div_ceil(threads);
-    let (n, m) = (a.cols(), b_mat.cols());
-    let mut partials: Vec<Mat> = Vec::new();
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        let mut start = 0usize;
-        while start < b {
-            let end = (start + chunk).min(b);
-            handles.push(s.spawn(move || {
-                let mut out = Mat::zeros(n, m);
-                for r in start..end {
-                    let a_row = a.row(r);
-                    let b_row = b_mat.row(r);
-                    for (i, &av) in a_row.iter().enumerate() {
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let o_row = out.row_mut(i);
-                        for j in 0..m {
-                            o_row[j] += av * b_row[j];
-                        }
-                    }
-                }
-                out
-            }));
-            start = end;
-        }
-        for h in handles {
-            partials.push(h.join().expect("matmul worker"));
-        }
-    });
-    let mut acc = partials.pop().unwrap_or_else(|| Mat::zeros(n, m));
-    for p in &partials {
-        acc.add_assign(p);
-    }
-    acc
+    exact_matmul_with(a, b_mat, poolx::global())
+}
+
+/// Exact `O = AᵀB` on an explicit pool: a column-strip
+/// [`Mat::matmul_tn_with`], chosen over per-thread partial accumulators
+/// because the strip reduction keeps f32 summation order fixed — the
+/// result is bit-identical at any thread count (and there is no n×m
+/// scratch allocation per worker).
+pub fn exact_matmul_with(a: &Mat, b_mat: &Mat, pool: &Pool) -> Mat {
+    a.matmul_tn_with(b_mat, pool)
 }
 
 #[cfg(test)]
@@ -435,6 +434,33 @@ mod tests {
         assert_eq!(comp.stored_bytes(), 4 * 32 * 4 + 256 * 4 + 256 * 4 + 4);
         // vs raw activation: 256·32·4 = 32 KiB → ~12.6× smaller already at k=4.
         assert!(comp.stored_bytes() * 8 < 256 * 32 * 4);
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_compressed_output() {
+        // Acceptance invariant: same seed ⇒ identical Compressed
+        // (generators, assign, alpha, beta) at 1, 2 and 4 threads.
+        let a = rand_mat(96, 12, 21);
+        let mut rng = Xoshiro256::new(22);
+        let idx = sample_generators(&mut rng, 96, 7);
+        let dz = rand_mat(96, 9, 23);
+        let serial = Pool::serial();
+        let base = compress_with(&a, &idx, Eps::Inf, &serial);
+        let base_dw = apply_with(&base, &dz, &serial);
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads).with_min_chunk(1);
+            let comp = compress_with(&a, &idx, Eps::Inf, &pool);
+            assert_eq!(comp.generators, base.generators, "t={threads}");
+            assert_eq!(comp.assign, base.assign, "t={threads}");
+            assert_eq!(comp.alpha, base.alpha, "t={threads}");
+            assert_eq!(comp.beta.to_bits(), base.beta.to_bits(), "t={threads}");
+            assert_eq!(apply_with(&comp, &dz, &pool), base_dw, "apply t={threads}");
+            assert_eq!(
+                exact_matmul_with(&a, &dz, &pool),
+                exact_matmul_with(&a, &dz, &serial),
+                "exact t={threads}"
+            );
+        }
     }
 
     #[test]

@@ -1,17 +1,33 @@
-//! Scoped thread pool + parallel-for (no tokio/rayon offline).
+//! Scoped thread pool + shared parallel-compute handle (no tokio/rayon
+//! offline).
 //!
-//! Two pieces:
+//! Three pieces:
 //!
 //! * [`ThreadPool`] — long-lived workers fed through an MPMC channel built
 //!   on `Mutex<VecDeque>` + `Condvar`; used by the coordinator's simulated
-//!   DDP workers and the background data pipeline.
-//! * [`scoped_for`] — fork-join parallel iteration over index ranges via
-//!   `std::thread::scope` (no pool needed; used by the native PAMM benches
-//!   to exercise multi-core roofline).
+//!   DDP workers, the background data pipeline, and as the engine under
+//!   [`Pool`]. Workers survive panicking jobs (the panic is re-raised on
+//!   the submitting thread by [`Pool::map_chunks`]).
+//! * [`Pool`] — the shared handle the native PAMM hot paths take
+//!   (`tensor::Mat::*_with`, `pamm::compress_with`, the experiment
+//!   harnesses and benches). It carries a thread count and a tunable
+//!   serial-fallback threshold ([`Pool::with_min_chunk`]): inputs smaller
+//!   than one chunk run inline on the caller's thread and never touch the
+//!   workers, so tiny matrices pay zero synchronization cost. Workers are
+//!   spawned lazily on first parallel use. [`global`] is the
+//!   process-wide instance configured by `--threads` / `PAMM_THREADS`.
+//! * [`scoped_for`] / [`parallel_map`] — fork-join helpers on plain
+//!   `std::thread::scope` (no pool needed) for one-shot callers.
+//!
+//! Every decomposition [`Pool`] hands out is a contiguous partition of
+//! `0..n` with deterministic bounds, and the kernels built on it are
+//! written so each output element accumulates in the same order at any
+//! thread count — results are **bit-identical** for 1, 2, 4, … threads
+//! (asserted by `rust/tests/prop_pamm.rs`).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -56,7 +72,11 @@ impl ThreadPool {
                             jobs = q.cond.wait(jobs).unwrap();
                         }
                     };
-                    job();
+                    // A panicking job must not kill the worker or wedge
+                    // `join`: the pending count always decrements, and
+                    // `Pool` users observe the panic through their
+                    // completion latch and re-raise it at the call site.
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
                     let (lock, cv) = &*p;
                     let mut n = lock.lock().unwrap();
                     *n -= 1;
@@ -101,6 +121,257 @@ impl Drop for ThreadPool {
             let _ = w.join();
         }
     }
+}
+
+/// Completion latch for one scoped batch of pool jobs: counts jobs down
+/// and remembers whether any of them panicked.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    cond: Condvar,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Self {
+        Self { state: Mutex::new((jobs, false)), cond: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        st.1 |= panicked;
+        if st.0 == 0 {
+            self.cond.notify_all();
+        }
+    }
+
+    /// Wait for all jobs; returns true if any job panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 != 0 {
+            st = self.cond.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+/// Completes its latch when dropped — unwind-safe job bookkeeping.
+struct LatchGuard(Arc<Latch>);
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        self.0.complete(std::thread::panicking());
+    }
+}
+
+/// Default serial-fallback threshold: below this many items per chunk,
+/// threading overhead beats the win on every shape we measured
+/// (EXPERIMENTS.md §Perf), so [`Pool::chunks_for`] degrades to 1 chunk.
+pub const DEFAULT_MIN_CHUNK: usize = 256;
+
+/// Cap for auto-detected parallelism (diminishing returns past this for
+/// the memory-bound PAMM kernels).
+pub const MAX_AUTO_THREADS: usize = 16;
+
+/// Hard cap on explicit thread requests — a typo'd `--threads` or a
+/// bad config value must not try to spawn an unbounded worker count.
+pub const MAX_POOL_THREADS: usize = 256;
+
+/// Fallback threshold for *column-strip* kernels (`matmul_tn`,
+/// `apply`): a column's cost scales with the row count, so strips are
+/// allowed to be much narrower than the row-oriented
+/// [`DEFAULT_MIN_CHUNK`].
+pub const COLUMN_MIN_CHUNK: usize = 32;
+
+/// Shared parallel-compute handle: a thread count, a serial-fallback
+/// threshold, and a lazily-spawned [`ThreadPool`]. Cheap to clone (clones
+/// share the workers). See the module docs for the determinism contract.
+///
+/// `map_chunks` must not be called from inside one of its own jobs
+/// (no nested parallelism) — with every worker blocked on the inner
+/// latch the pool would deadlock. The native kernels are all leaf
+/// computations, so this never arises on the shipped paths.
+#[derive(Clone)]
+pub struct Pool {
+    threads: usize,
+    min_chunk: usize,
+    /// True once `with_min_chunk` ran — lets [`Pool::for_columns`]
+    /// distinguish "still the default" from an explicit request for the
+    /// same value.
+    min_chunk_custom: bool,
+    workers: Arc<OnceLock<ThreadPool>>,
+}
+
+impl Pool {
+    /// Pool that will use up to `threads` threads (clamped to
+    /// 1..=[`MAX_POOL_THREADS`]).
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.clamp(1, MAX_POOL_THREADS),
+            min_chunk: DEFAULT_MIN_CHUNK,
+            min_chunk_custom: false,
+            workers: Arc::new(OnceLock::new()),
+        }
+    }
+
+    /// Single-threaded pool: every `map_chunks` call runs inline.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Pool sized to the host (`available_parallelism`, capped at
+    /// [`MAX_AUTO_THREADS`]).
+    pub fn auto() -> Self {
+        let t = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+        Self::new(t.min(MAX_AUTO_THREADS))
+    }
+
+    /// Override the serial-fallback threshold (items per chunk). The
+    /// returned handle shares this pool's workers. A custom value is
+    /// honored by every kernel, including the column-strip ones (see
+    /// [`Pool::for_columns`]) — set it huge to force inline execution.
+    pub fn with_min_chunk(mut self, min_chunk: usize) -> Self {
+        self.min_chunk = min_chunk.max(1);
+        self.min_chunk_custom = true;
+        self
+    }
+
+    /// Handle for column-strip kernels: if the threshold was never
+    /// customized, tighten it from the row-oriented
+    /// [`DEFAULT_MIN_CHUNK`] to [`COLUMN_MIN_CHUNK`] (a column's cost
+    /// scales with rows, so much narrower chunks are worth splitting).
+    /// Any `with_min_chunk` value — including one equal to the default
+    /// — is kept as-is, so it remains an effective "never/always split"
+    /// override for these kernels too.
+    pub fn for_columns(&self) -> Pool {
+        if self.min_chunk_custom {
+            self.clone()
+        } else {
+            self.clone().with_min_chunk(COLUMN_MIN_CHUNK)
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn min_chunk(&self) -> usize {
+        self.min_chunk
+    }
+
+    /// How many chunks `0..n` will be split into: 1 (serial) when `n` is
+    /// below the fallback threshold, else at most `threads`.
+    pub fn chunks_for(&self, n: usize) -> usize {
+        if self.threads == 1 || n == 0 {
+            return 1;
+        }
+        (n / self.min_chunk).clamp(1, self.threads)
+    }
+
+    fn workers(&self) -> &ThreadPool {
+        self.workers.get_or_init(|| ThreadPool::new(self.threads))
+    }
+
+    /// Partition `0..n` into contiguous chunks, evaluate `f(start, end)`
+    /// per chunk on the worker pool, and return `(start, end, result)`
+    /// per chunk in range order. Runs inline when [`Pool::chunks_for`]
+    /// says 1. A panic inside `f` is re-raised here after all chunks
+    /// finish.
+    pub fn map_chunks<R: Send>(
+        &self,
+        n: usize,
+        f: impl Fn(usize, usize) -> R + Sync,
+    ) -> Vec<(usize, usize, R)> {
+        let chunks = self.chunks_for(n);
+        if chunks <= 1 {
+            return vec![(0, n, f(0, n))];
+        }
+        let chunk = n.div_ceil(chunks);
+        let bounds: Vec<(usize, usize)> = (0..chunks)
+            .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+            .filter(|(s, e)| s < e)
+            .collect();
+        let slots: Vec<Mutex<Option<R>>> = bounds.iter().map(|_| Mutex::new(None)).collect();
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = bounds
+                .iter()
+                .enumerate()
+                .map(|(ix, &(s, e))| {
+                    let f = &f;
+                    let slots = &slots;
+                    Box::new(move || {
+                        *slots[ix].lock().unwrap() = Some(f(s, e));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            self.execute_scoped(jobs);
+        }
+        bounds
+            .into_iter()
+            .zip(slots)
+            .map(|((s, e), slot)| {
+                (s, e, slot.into_inner().unwrap().expect("poolx: chunk result missing"))
+            })
+            .collect()
+    }
+
+    /// Run a batch of borrowed jobs on the worker pool and wait for all
+    /// of them. The latch wait is what makes the lifetime erasure sound:
+    /// no job can outlive this call.
+    fn execute_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let pool = self.workers();
+        let latch = Arc::new(Latch::new(jobs.len()));
+        for job in jobs {
+            // SAFETY: `latch.wait()` below blocks until every job's
+            // LatchGuard has dropped, i.e. until every job has finished
+            // running (or unwound), so the borrows inside `job` are live
+            // for the whole time the workers can touch them.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+            };
+            let latch = latch.clone();
+            pool.submit(move || {
+                let _done = LatchGuard(latch);
+                job();
+            });
+        }
+        if latch.wait() {
+            panic!("poolx: worker job panicked");
+        }
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Pool(threads={}, min_chunk={})", self.threads, self.min_chunk)
+    }
+}
+
+static GLOBAL_POOL: OnceLock<Pool> = OnceLock::new();
+
+fn make_pool(threads: usize) -> Pool {
+    if threads == 0 {
+        Pool::auto()
+    } else {
+        Pool::new(threads)
+    }
+}
+
+/// Configure the process-wide pool (0 = auto). First caller wins — the
+/// CLI calls this with `--threads` before any compute runs; later calls
+/// (e.g. a config-file value after the flag) are ignored and return
+/// false.
+pub fn set_global_threads(threads: usize) -> bool {
+    GLOBAL_POOL.set(make_pool(threads)).is_ok()
+}
+
+/// The process-wide pool used by the default `pamm::compress` / `apply` /
+/// matmul entry points. Initialized from `PAMM_THREADS` (or host
+/// parallelism) on first use unless [`set_global_threads`] ran earlier.
+pub fn global() -> &'static Pool {
+    GLOBAL_POOL.get_or_init(|| {
+        let env = std::env::var("PAMM_THREADS").ok().and_then(|v| v.parse::<usize>().ok());
+        make_pool(env.unwrap_or(0))
+    })
 }
 
 /// Fork-join parallel for over `0..n`: splits into ≤ `threads` contiguous
@@ -208,5 +479,74 @@ mod tests {
             ran.fetch_add(e - s, Ordering::Relaxed);
         });
         assert_eq!(ran.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn map_chunks_covers_range_in_order() {
+        let pool = Pool::new(4).with_min_chunk(1);
+        let res = pool.map_chunks(103, |s, e| (s..e).sum::<usize>());
+        assert!(res.len() > 1, "expected a parallel split, got {}", res.len());
+        let mut expect_start = 0;
+        let mut total = 0;
+        for &(s, e, sum) in &res {
+            assert_eq!(s, expect_start, "chunks must be contiguous");
+            expect_start = e;
+            total += sum;
+        }
+        assert_eq!(expect_start, 103);
+        assert_eq!(total, (0..103).sum::<usize>());
+    }
+
+    #[test]
+    fn small_inputs_fall_back_to_serial() {
+        let pool = Pool::new(8).with_min_chunk(512);
+        assert_eq!(pool.chunks_for(511), 1);
+        assert_eq!(pool.chunks_for(512), 1);
+        assert_eq!(pool.chunks_for(1024), 2);
+        assert_eq!(pool.chunks_for(1_000_000), 8);
+        // Serial fallback runs inline on the calling thread.
+        let main_id = std::thread::current().id();
+        let res = pool.map_chunks(100, |s, e| (std::thread::current().id() == main_id, s, e));
+        assert_eq!(res.len(), 1);
+        let (inline, s, e) = res[0].2;
+        assert!(inline, "below-threshold work must not hit the workers");
+        assert_eq!((s, e), (0, 100));
+    }
+
+    #[test]
+    fn map_chunks_reuses_workers_across_calls() {
+        let pool = Pool::new(3).with_min_chunk(1);
+        for round in 1..=4 {
+            let res = pool.map_chunks(30, |s, e| e - s);
+            let total: usize = res.iter().map(|&(_, _, r)| r).sum();
+            assert_eq!(total, 30, "round {round}");
+        }
+    }
+
+    #[test]
+    fn map_chunks_propagates_panics() {
+        let pool = Pool::new(2).with_min_chunk(1);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map_chunks(8, |s, _e| {
+                if s == 0 {
+                    panic!("boom");
+                }
+                0usize
+            });
+        }));
+        assert!(caught.is_err(), "panic in a chunk must surface to the caller");
+        // Pool must still be usable afterwards.
+        let res = pool.map_chunks(8, |s, e| e - s);
+        assert_eq!(res.iter().map(|&(_, _, r)| r).sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn global_pool_is_configured_once() {
+        // Whichever runs first (this test or a kernel using global())
+        // fixes the pool; the second set call must report failure.
+        let first = set_global_threads(2);
+        let second = set_global_threads(4);
+        assert!(!second || first, "second set cannot succeed after a first");
+        assert!(global().threads() >= 1);
     }
 }

@@ -9,8 +9,19 @@
 //! The matmuls use i-k-j loop order with the inner j-loop over contiguous
 //! rows — autovectorizes well at the (≤ 4096²) shapes the benches use
 //! (measured in EXPERIMENTS.md §Perf).
+//!
+//! Each hot contraction comes in two forms: a serial reference
+//! ([`Mat::matmul`], [`Mat::t_matmul`], [`Mat::row_norms`]) and a
+//! pool-parallel twin ([`Mat::matmul_with`], [`Mat::matmul_tn_with`],
+//! [`Mat::row_norms_with`]) that row-blocks (or column-strips) the work
+//! over a shared [`Pool`]. The parallel decompositions preserve the
+//! serial per-element accumulation order, so outputs are bit-identical
+//! at every thread count; below the pool's serial-fallback threshold
+//! they run inline with zero synchronization cost.
 
 use std::fmt;
+
+use crate::poolx::Pool;
 
 #[derive(Clone, PartialEq)]
 pub struct Mat {
@@ -94,6 +105,21 @@ impl Mat {
             .collect()
     }
 
+    /// Parallel [`Mat::row_norms`] over row blocks of the shared pool.
+    /// Rows are independent, so this is bit-identical at any thread count.
+    pub fn row_norms_with(&self, pool: &Pool) -> Vec<f32> {
+        let chunks = pool.map_chunks(self.rows, |s, e| {
+            (s..e)
+                .map(|i| self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
+                .collect::<Vec<f32>>()
+        });
+        let mut out = Vec::with_capacity(self.rows);
+        for (_, _, block) in chunks {
+            out.extend_from_slice(&block);
+        }
+        out
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -104,14 +130,16 @@ impl Mat {
         out
     }
 
-    /// `self @ other` — i-k-j order, inner loop contiguous in both operands.
-    pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (n, k, m) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(n, m);
-        for i in 0..n {
+    /// Output rows `[s, e)` of `self @ other` into `block` (row-major
+    /// `(e-s) × m`) — i-k-j order, inner loop contiguous in both
+    /// operands. Shared by the serial and parallel entry points so the
+    /// bit-identity of the row-block decomposition holds by
+    /// construction.
+    fn matmul_rows(&self, other: &Mat, s: usize, e: usize, block: &mut [f32]) {
+        let (k, m) = (self.cols, other.cols);
+        for i in s..e {
             let a_row = self.row(i);
-            let o_row = &mut out.data[i * m..(i + 1) * m];
+            let o_row = &mut block[(i - s) * m..(i - s + 1) * m];
             for (kk, &a) in a_row.iter().enumerate().take(k) {
                 if a == 0.0 {
                     continue;
@@ -122,7 +150,38 @@ impl Mat {
                 }
             }
         }
+    }
+
+    /// `self @ other` — i-k-j order, inner loop contiguous in both operands.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (n, m) = (self.rows, other.cols);
+        let mut out = Mat::zeros(n, m);
+        self.matmul_rows(other, 0, n, &mut out.data);
         out
+    }
+
+    /// Parallel [`Mat::matmul`] over row blocks of `self`. Each worker
+    /// runs the same `matmul_rows` kernel on a contiguous block of
+    /// output rows, so the result is bit-identical to `matmul` at any
+    /// thread count. Falls back to the serial path below the pool's
+    /// chunk threshold.
+    pub fn matmul_with(&self, other: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (n, m) = (self.rows, other.cols);
+        if pool.chunks_for(n) <= 1 {
+            return self.matmul(other);
+        }
+        let chunks = pool.map_chunks(n, |s, e| {
+            let mut block = vec![0.0f32; (e - s) * m];
+            self.matmul_rows(other, s, e, &mut block);
+            block
+        });
+        let mut data = Vec::with_capacity(n * m);
+        for (_, _, block) in chunks {
+            data.extend_from_slice(&block);
+        }
+        Mat::from_vec(n, m, data)
     }
 
     /// `selfᵀ @ other` without materializing the transpose — the exact
@@ -153,6 +212,53 @@ impl Mat {
                 }
             }
             j0 = j1;
+        }
+        out
+    }
+
+    /// Copy columns `[j0, j1)` into a new matrix (strip materializer
+    /// for the column-parallel kernels — cheap next to the contraction
+    /// that follows).
+    pub fn slice_cols(&self, j0: usize, j1: usize) -> Mat {
+        let w = j1 - j0;
+        let mut out = Mat::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[j0..j1]);
+        }
+        out
+    }
+
+    /// Paste a `rows × (j1-j0)` strip into columns `[j0, j1)` of `self`
+    /// — the inverse of [`Mat::slice_cols`], shared by the column-strip
+    /// kernels' stitch loops.
+    pub fn paste_cols(&mut self, j0: usize, j1: usize, strip: &Mat) {
+        let w = j1 - j0;
+        assert_eq!((strip.rows, strip.cols), (self.rows, w), "paste_cols shape mismatch");
+        let m = self.cols;
+        for i in 0..self.rows {
+            self.data[i * m + j0..i * m + j1].copy_from_slice(&strip.data[i * w..(i + 1) * w]);
+        }
+    }
+
+    /// Parallel [`Mat::t_matmul`] (`selfᵀ @ other`, "tn" = transposed ×
+    /// normal) over column strips of the output: each strip runs the
+    /// serial `t_matmul` against the materialized B column slice, so
+    /// every output element accumulates over the b rows in the same
+    /// ascending order as the serial path — bit-identical at any thread
+    /// count by construction. Column strips (not per-thread partial
+    /// sums) are what make the reduction deterministic.
+    pub fn matmul_tn_with(&self, other: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (n, m) = (self.cols, other.cols);
+        let strip_pool = pool.for_columns();
+        if strip_pool.chunks_for(m) <= 1 {
+            return self.t_matmul(other);
+        }
+        let strips =
+            strip_pool.map_chunks(m, |j0, j1| self.t_matmul(&other.slice_cols(j0, j1)));
+        let mut out = Mat::zeros(n, m);
+        for (j0, j1, strip) in strips {
+            out.paste_cols(j0, j1, &strip);
         }
         out
     }
@@ -257,6 +363,36 @@ mod tests {
         let mut rng = Xoshiro256::new(2);
         let a = Mat::random_normal(4, 9, 1.0, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn parallel_kernels_match_serial_bitwise() {
+        let mut rng = Xoshiro256::new(3);
+        let a = Mat::random_normal(67, 23, 1.0, &mut rng);
+        let b = Mat::random_normal(23, 31, 1.0, &mut rng);
+        let c = Mat::random_normal(67, 29, 1.0, &mut rng);
+        for threads in [2usize, 4] {
+            // min_chunk 1 forces a real parallel split even at test sizes.
+            let pool = Pool::new(threads).with_min_chunk(1);
+            assert_eq!(a.matmul_with(&b, &pool), a.matmul(&b), "matmul t={threads}");
+            assert_eq!(a.matmul_tn_with(&c, &pool), a.t_matmul(&c), "matmul_tn t={threads}");
+            assert_eq!(a.row_norms_with(&pool), a.row_norms(), "row_norms t={threads}");
+        }
+    }
+
+    #[test]
+    fn small_matrices_take_the_serial_fallback() {
+        // Below the pool's min_chunk threshold the parallel entry points
+        // must degrade to the serial kernels (still exact, no workers).
+        let pool = Pool::new(4).with_min_chunk(256);
+        assert_eq!(pool.chunks_for(8), 1);
+        let mut rng = Xoshiro256::new(4);
+        let a = Mat::random_normal(8, 6, 1.0, &mut rng);
+        let b = Mat::random_normal(6, 5, 1.0, &mut rng);
+        let c = Mat::random_normal(8, 7, 1.0, &mut rng);
+        assert_eq!(a.matmul_with(&b, &pool), a.matmul(&b));
+        assert_eq!(a.matmul_tn_with(&c, &pool), a.t_matmul(&c));
+        assert_eq!(a.row_norms_with(&pool), a.row_norms());
     }
 
     #[test]

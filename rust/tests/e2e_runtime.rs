@@ -1,9 +1,11 @@
 //! Integration tests over the real runtime: artifacts → PJRT → coordinator.
 //!
-//! These require `make artifacts` (at least the quick preset). They pin
-//! down: manifest↔zoo agreement, kernel three-way agreement, training
-//! convergence through the full stack, eval, checkpoints, DDP equivalence
-//! and determinism.
+//! These require `make artifacts` (at least the quick preset) and
+//! **skip with a note when the artifact set is absent** (e.g. in the
+//! Rust-only CI job), so `cargo test -q` stays green either way. They
+//! pin down: manifest↔zoo agreement, kernel three-way agreement,
+//! training convergence through the full stack, eval, checkpoints, DDP
+//! equivalence and determinism.
 
 use pamm::checkpoint;
 use pamm::config::{RunConfig, Variant};
@@ -18,13 +20,26 @@ fn artifacts_dir() -> String {
     std::env::var("PAMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
 }
 
-fn engine() -> Engine {
-    Engine::load(artifacts_dir()).expect("artifacts missing — run `make artifacts`")
+/// Load the artifact set, or None (test skips) when it hasn't been
+/// built — the Rust-only CI job has no `make artifacts` step. Set
+/// `PAMM_REQUIRE_ARTIFACTS=1` in artifact-equipped CI so a broken
+/// loader fails loudly instead of skip-passing the whole suite.
+fn try_engine() -> Option<Engine> {
+    match Engine::load(artifacts_dir()) {
+        Ok(engine) => Some(engine),
+        Err(e) => {
+            if std::env::var("PAMM_REQUIRE_ARTIFACTS").is_ok() {
+                panic!("artifacts required (PAMM_REQUIRE_ARTIFACTS) but unavailable: {e:#}");
+            }
+            eprintln!("skipping e2e test: {e:#} — run `make artifacts`");
+            None
+        }
+    }
 }
 
 #[test]
 fn manifest_param_counts_match_native_zoo() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     for c in &engine.manifest.configs {
         if let Some(g) = ModelGeometry::by_name(&c.name) {
             assert_eq!(
@@ -40,14 +55,14 @@ fn manifest_param_counts_match_native_zoo() {
 
 #[test]
 fn kernels_three_way_agreement() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let n = pamm::experiments::validate_kernels(&engine).expect("kernel validation");
     assert!(n >= 5, "expected several kernel artifacts, got {n}");
 }
 
 #[test]
 fn nano_training_learns_through_full_stack() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let cfg = RunConfig {
         model: "nano".into(),
         variant: Variant::pamm(64),
@@ -68,7 +83,7 @@ fn nano_training_learns_through_full_stack() {
 
 #[test]
 fn training_is_deterministic_per_seed() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let mk = |seed| {
         let name = "train_nano_pamm64_4x64";
         let mut s = TrainSession::new(&engine, name, None, seed).unwrap();
@@ -88,7 +103,7 @@ fn pallas_variant_matches_ref_variant_exactly() {
     // The pamm64 and pamm64pl artifacts implement the same math (jnp ref
     // vs Pallas kernels); with identical seeds the training trajectories
     // must agree to float tolerance.
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let run = |name: &str| {
         let mut s = TrainSession::new(&engine, name, None, 3).unwrap();
         let mut it = BatchIterator::from_seed(256, 4, 64, 11);
@@ -107,7 +122,7 @@ fn pallas_variant_matches_ref_variant_exactly() {
 
 #[test]
 fn checkpoint_roundtrip_preserves_eval() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let dir = std::env::temp_dir().join("pamm_ckpt_e2e");
     let mut s =
         TrainSession::new(&engine, "train_nano_pamm64_4x64", Some("eval_nano_4x64"), 5).unwrap();
@@ -130,7 +145,7 @@ fn checkpoint_roundtrip_preserves_eval() {
 
 #[test]
 fn ddp_single_worker_matches_expected_convergence() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let mut t = DdpTrainer::new(
         &engine,
         "grads_nano_pamm64_4x64",
@@ -149,7 +164,7 @@ fn ddp_single_worker_matches_expected_convergence() {
 
 #[test]
 fn ddp_multi_worker_accumulation_converges() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let mut t = DdpTrainer::new(
         &engine,
         "grads_nano_pamm64_4x64",
@@ -169,7 +184,7 @@ fn ddp_multi_worker_accumulation_converges() {
 
 #[test]
 fn wrong_shape_inputs_are_rejected() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     let mut s = TrainSession::new(&engine, "train_nano_pamm64_4x64", None, 1).unwrap();
     let bad = pamm::runtime::HostTensor::i32(vec![2, 65], vec![0; 130]);
     assert!(s.step(&bad).is_err());
@@ -177,6 +192,6 @@ fn wrong_shape_inputs_are_rejected() {
 
 #[test]
 fn engine_rejects_unknown_artifact() {
-    let engine = engine();
+    let Some(engine) = try_engine() else { return };
     assert!(engine.executable("does_not_exist").is_err());
 }

@@ -5,6 +5,7 @@
 
 use pamm::pamm as pammc;
 use pamm::pamm::Eps;
+use pamm::poolx::Pool;
 use pamm::propx::{assert_prop, FnGen, PropOpts};
 use pamm::rngx::Xoshiro256;
 use pamm::tensor::Mat;
@@ -136,6 +137,80 @@ fn eps_inf_apply_equals_reconstruct_then_multiply() {
             Ok(())
         },
     );
+}
+
+/// Tentpole invariant: the parallel decompositions never change a bit of
+/// the output. For arbitrary shapes, compress / apply / matmul at 2 and
+/// 4 threads must equal the 1-thread result exactly (not within a
+/// tolerance) — generators, assignment, alpha, beta, and every f32 of
+/// the product matrices.
+#[test]
+fn parallel_results_bit_identical_across_1_2_4_threads() {
+    assert_prop(
+        "parallel_parity",
+        &PropOpts { cases: 24, seed: 0xA7, max_size: 40 },
+        &case_gen(),
+        |c: &Case| {
+            let serial = Pool::serial();
+            let comp0 = pammc::compress_with(&c.a, &c.idx, Eps::Inf, &serial);
+            let dw0 = pammc::apply_with(&comp0, &c.b, &serial);
+            let exact0 = pammc::exact_matmul_with(&c.a, &c.b, &serial);
+            let gt = comp0.generators.transpose();
+            let mm0 = c.a.matmul_with(&gt, &serial);
+            for threads in [2usize, 4] {
+                // min_chunk 1 forces real splits at property-test sizes.
+                let pool = Pool::new(threads).with_min_chunk(1);
+                let comp = pammc::compress_with(&c.a, &c.idx, Eps::Inf, &pool);
+                if comp.assign != comp0.assign {
+                    return Err(format!("assign differs at t={threads}"));
+                }
+                if comp.alpha != comp0.alpha {
+                    return Err(format!("alpha differs at t={threads}"));
+                }
+                if comp.beta.to_bits() != comp0.beta.to_bits() {
+                    return Err(format!(
+                        "beta {} != {} at t={threads}",
+                        comp.beta, comp0.beta
+                    ));
+                }
+                if comp.generators != comp0.generators {
+                    return Err(format!("generators differ at t={threads}"));
+                }
+                if pammc::apply_with(&comp, &c.b, &pool) != dw0 {
+                    return Err(format!("apply differs at t={threads}"));
+                }
+                if pammc::exact_matmul_with(&c.a, &c.b, &pool) != exact0 {
+                    return Err(format!("exact_matmul differs at t={threads}"));
+                }
+                if c.a.matmul_with(&gt, &pool) != mm0 {
+                    return Err(format!("matmul differs at t={threads}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The serial-fallback threshold: a pool whose min_chunk exceeds the
+/// input never splits, and the `_with` kernels still agree with the
+/// plain serial entry points.
+#[test]
+fn serial_fallback_below_threshold_is_exact() {
+    let pool = Pool::new(4).with_min_chunk(1 << 20);
+    let mut rng = Xoshiro256::new(0xA8);
+    let a = Mat::random_normal(33, 9, 1.0, &mut rng);
+    let bm = Mat::random_normal(33, 5, 1.0, &mut rng);
+    assert_eq!(pool.chunks_for(33), 1, "threshold must force one chunk");
+    let idx = pammc::sample_generators(&mut rng, 33, 4);
+    let comp_pool = pammc::compress_with(&a, &idx, Eps::Inf, &pool);
+    let comp_serial = pammc::compress_with(&a, &idx, Eps::Inf, &Pool::serial());
+    assert_eq!(comp_pool.assign, comp_serial.assign);
+    assert_eq!(comp_pool.alpha, comp_serial.alpha);
+    assert_eq!(
+        pammc::apply_with(&comp_pool, &bm, &pool),
+        pammc::apply_with(&comp_serial, &bm, &Pool::serial())
+    );
+    assert_eq!(a.matmul_tn_with(&bm, &pool), a.t_matmul(&bm));
 }
 
 #[test]
