@@ -7,6 +7,13 @@
 //! Run: `cargo bench --bench pamm_ops` (PAMM_BENCH_QUICK=1 for CI).
 //! Persists entries via `benchx::BenchSink` (dir: PAMM_BENCH_DIR,
 //! default `benchmarks/`); render with `pamm bench-report`.
+//!
+//! All three ops route through the `tensor::kernels` microkernel GEMM
+//! (compress = Gram pass + sweep, apply/exact = packed `AᵀB`), so
+//! numbers depend on the SIMD dispatch level — the header prints which
+//! one ran (also `pamm kernels --probe`); `PAMM_SIMD=scalar` pins the
+//! portable baseline. The isolated kernel sweep lives in the
+//! `tensor_kernels` suite.
 
 use std::time::Duration;
 
@@ -15,6 +22,7 @@ use pamm::pamm as pammc;
 use pamm::pamm::Eps;
 use pamm::poolx::Pool;
 use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels;
 use pamm::tensor::Mat;
 
 fn opts() -> BenchOpts {
@@ -38,6 +46,7 @@ fn main() {
     ];
     let sweep = thread_sweep();
     let mut sink = BenchSink::new("pamm_ops");
+    println!("pamm_ops: GEMM dispatch = {}", kernels::active().name());
 
     for &(b, n, m, k) in shapes {
         let shape_s = format!("b={b} n={n} m={m} k={k}");

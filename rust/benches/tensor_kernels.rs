@@ -1,0 +1,117 @@
+//! Bench: the `tensor::kernels` microkernel GEMM vs its scalar
+//! reference, per shape × dispatch level × thread count — the
+//! acceptance trail for the SIMD subsystem (`benchmarks/
+//! BENCH_tensor_kernels.json` → BENCHMARKS.md §tensor_kernels).
+//!
+//! Ops are tagged with the dispatch level that actually ran
+//! (`gemm_nn[avx2]`, `gemm_tn[scalar]`, …) so the persisted JSON is its
+//! own provenance record; `benchx` resolves `speedup_vs_scalar` against
+//! the `[scalar]` twin at flush (same thread count when present, else
+//! the 1-thread scalar baseline — scalar is only swept serially to keep
+//! the suite bounded). Entries carry GFLOP/s (`2·m·n·k / ns`).
+//!
+//! Both ops go through the `Mat` entry points (`matmul_with`,
+//! `matmul_tn_with`), not raw kernel calls, so the suite measures the
+//! exact path compress/apply/exact inherit. Dispatch is swept with
+//! `tensor::kernels::force` — safe here because the bench driver owns
+//! the process.
+//!
+//! Run: `cargo bench --bench tensor_kernels` (PAMM_BENCH_QUICK=1 for
+//! CI); render with `pamm bench-report`.
+
+use std::time::Duration;
+
+use pamm::benchx::{BenchOpts, BenchSink, Suite};
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels::{self, Dispatch};
+use pamm::tensor::Mat;
+
+fn opts() -> BenchOpts {
+    if std::env::var("PAMM_BENCH_QUICK").is_ok() {
+        // The 1024³ scalar baseline runs seconds per iter; keep CI smoke
+        // to one measured iteration per slow cell.
+        BenchOpts { warmup_iters: 0, min_iters: 1, max_iters: 5, max_total: Duration::from_secs(2) }
+    } else {
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 15,
+            max_total: Duration::from_secs(10),
+        }
+    }
+}
+
+fn main() {
+    // (m, k, n): the 256/512/1024 square ladder the acceptance bar
+    // speaks about, plus one ragged-tail shape (non-multiples of
+    // MR/NR/KC) so edge-tile handling shows up in the trail.
+    let shapes: &[(usize, usize, usize)] =
+        &[(256, 256, 256), (512, 512, 512), (1024, 1024, 1024), (1021, 1024, 1027)];
+    let native = Dispatch::native();
+    let threads: &[usize] = &[1, 2, 4];
+    let mut sink = BenchSink::new("tensor_kernels");
+
+    println!(
+        "tensor_kernels: native dispatch = {} (tiles MR={} NR={}, blocks MC={} KC={} NC={})",
+        native.name(),
+        kernels::MR,
+        kernels::NR,
+        kernels::MC,
+        kernels::KC,
+        kernels::NC
+    );
+
+    for &(m, k, n) in shapes {
+        let shape_s = format!("m={m} k={k} n={n}");
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let mut rng = Xoshiro256::new(7);
+        let a = Mat::random_normal(m, k, 1.0, &mut rng);
+        let at = a.transpose(); // (k, m): t_matmul's stored layout
+        let b = Mat::random_normal(k, n, 1.0, &mut rng);
+
+        let mut suite = Suite::with_opts(&format!("tensor_kernels {shape_s}"), opts());
+        suite.header();
+
+        // Scalar reference: serial only (the baseline the speedup bar
+        // divides by); native level: full thread sweep.
+        let mut plan: Vec<(Dispatch, usize)> = vec![(Dispatch::Scalar, 1)];
+        if native != Dispatch::Scalar {
+            plan.extend(threads.iter().map(|&t| (native, t)));
+        }
+        for &(d, t) in &plan {
+            kernels::force(Some(d));
+            let tag = d.name();
+            let pool = Pool::new(t);
+            let r = suite
+                .bench(&format!("gemm_nn[{tag}] t={t}"), || {
+                    std::hint::black_box(a.matmul_with(&b, &pool));
+                })
+                .clone();
+            sink.record_flops(&format!("gemm_nn[{tag}]"), &shape_s, t, &r, flops);
+            let r = suite
+                .bench(&format!("gemm_tn[{tag}] t={t}"), || {
+                    std::hint::black_box(at.matmul_tn_with(&b, &pool));
+                })
+                .clone();
+            sink.record_flops(&format!("gemm_tn[{tag}]"), &shape_s, t, &r, flops);
+        }
+        kernels::force(None);
+
+        for op in ["gemm_nn", "gemm_tn"] {
+            if let Some(sp) = suite.ratio(
+                &format!("{op}[{}] t=1", native.name()),
+                &format!("{op}[scalar] t=1"),
+            ) {
+                println!("  {op}: {} vs scalar (single thread): {sp:.2}x", native.name());
+            }
+        }
+    }
+
+    match sink.flush() {
+        Ok(path) => {
+            println!("\npersisted {} entries to {}", sink.entries().len(), path.display())
+        }
+        Err(e) => eprintln!("bench persistence failed: {e}"),
+    }
+}

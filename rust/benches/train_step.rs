@@ -32,8 +32,12 @@ fn native_opts() -> BenchOpts {
 }
 
 /// Native twin of one QKV projection training step: forward `x@W`,
-/// compress of the projection input, approx dW via apply.
+/// compress of the projection input, approx dW via apply — all three
+/// contractions on the `tensor::kernels` microkernel GEMM (the header
+/// prints the active SIMD dispatch level; steady-state iterations reuse
+/// the per-worker kernel workspace, so this loop allocates no scratch).
 fn native_sweep(sink: &mut BenchSink) {
+    println!("train_step: GEMM dispatch = {}", pamm::tensor::kernels::active().name());
     let (b, n, m, k) = (4096usize, 512usize, 512usize, 16usize);
     let shape_s = format!("b={b} n={n} m={m} k={k}");
     let mut rng = Xoshiro256::new(0x7AB7E);

@@ -218,6 +218,25 @@ pub struct BenchEntry {
     /// (op, shape); filled in by [`BenchSink::flush_to`].
     pub speedup_vs_serial: Option<f64>,
     pub iters: usize,
+    /// Median throughput, for ops with a known flop count
+    /// ([`BenchSink::record_flops`]).
+    pub gflops: Option<f64>,
+    /// For dispatch-tagged ops (`name[sse2]`, `name[avx2]`, …):
+    /// `scalar_ns / ns` against the `name[scalar]` entry of the same
+    /// shape (same thread count if present, else the 1-thread scalar
+    /// baseline); filled in by [`BenchSink::flush_to`].
+    pub speedup_vs_scalar: Option<f64>,
+}
+
+/// The `name[scalar]` twin of a dispatch-tagged op name, if `op` is
+/// tagged with a non-scalar dispatch level.
+fn scalar_twin(op: &str) -> Option<String> {
+    let rest = op.strip_suffix(']')?;
+    let (base, disp) = rest.rsplit_once('[')?;
+    if disp == "scalar" {
+        return None;
+    }
+    Some(format!("{base}[scalar]"))
 }
 
 /// A persisted suite: host + entries, as loaded from one `BENCH_*.json`.
@@ -254,7 +273,26 @@ impl BenchSink {
             ns_per_iter: r.median.as_nanos() as f64,
             speedup_vs_serial: None,
             iters: r.iters,
+            gflops: None,
+            speedup_vs_scalar: None,
         });
+    }
+
+    /// [`BenchSink::record`] for an op with a known flop count: also
+    /// persists median GFLOP/s (`flops / ns_per_iter` — flops per
+    /// nanosecond *is* GFLOP/s). Used by the `tensor_kernels` suite so
+    /// the trail states absolute kernel throughput, not just ratios.
+    pub fn record_flops(
+        &mut self,
+        op: &str,
+        shape: &str,
+        threads: usize,
+        r: &BenchResult,
+        flops: f64,
+    ) {
+        self.record(op, shape, threads, r);
+        let e = self.entries.last_mut().expect("just recorded");
+        e.gflops = Some(flops / e.ns_per_iter.max(1.0));
     }
 
     /// Entries recorded so far (speedups not yet resolved).
@@ -263,7 +301,9 @@ impl BenchSink {
     }
 
     /// Write `BENCH_<suite>.json` into [`bench_dir`], resolving
-    /// speedup-vs-serial against each (op, shape)'s 1-thread entry.
+    /// speedup-vs-serial against each (op, shape)'s 1-thread entry and
+    /// speedup-vs-scalar against each dispatch-tagged op's
+    /// `name[scalar]` twin.
     pub fn flush(&self) -> std::io::Result<PathBuf> {
         self.flush_to(bench_dir())
     }
@@ -279,6 +319,21 @@ impl BenchSink {
                     .entries
                     .iter()
                     .find(|s| s.threads == 1 && s.op == e.op && s.shape == e.shape)
+                    .map(|s| s.ns_per_iter / e.ns_per_iter.max(1.0));
+            }
+            if let Some(twin) = scalar_twin(&e.op) {
+                // Prefer a same-thread-count scalar baseline; suites
+                // that only bench scalar serially fall back to its
+                // 1-thread entry.
+                e.speedup_vs_scalar = self
+                    .entries
+                    .iter()
+                    .find(|s| s.op == twin && s.shape == e.shape && s.threads == e.threads)
+                    .or_else(|| {
+                        self.entries
+                            .iter()
+                            .find(|s| s.op == twin && s.shape == e.shape && s.threads == 1)
+                    })
                     .map(|s| s.ns_per_iter / e.ns_per_iter.max(1.0));
             }
         }
@@ -312,6 +367,12 @@ fn entry_json(e: &BenchEntry) -> Value {
     if let Some(sp) = e.speedup_vs_serial {
         pairs.push(("speedup_vs_serial", jsonx::num(sp)));
     }
+    if let Some(g) = e.gflops {
+        pairs.push(("gflops", jsonx::num(g)));
+    }
+    if let Some(sp) = e.speedup_vs_scalar {
+        pairs.push(("speedup_vs_scalar", jsonx::num(sp)));
+    }
     jsonx::obj(pairs)
 }
 
@@ -329,6 +390,8 @@ pub fn load_file(path: impl AsRef<Path>) -> anyhow::Result<SuiteRecord> {
             ns_per_iter: e.req_f64("ns_per_iter")?,
             speedup_vs_serial: e.get("speedup_vs_serial").as_f64(),
             iters: e.req_usize("iters")?,
+            gflops: e.get("gflops").as_f64(),
+            speedup_vs_scalar: e.get("speedup_vs_scalar").as_f64(),
         });
     }
     Ok(SuiteRecord {
@@ -447,6 +510,56 @@ mod tests {
             .filter(|e| e.threads == 1)
             .all(|e| e.speedup_vs_serial.is_none()));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gflops_and_vs_scalar_resolution() {
+        let mut sink = BenchSink::new("kern_suite");
+        let mk = |us: u64| BenchResult {
+            name: "x".into(),
+            iters: 5,
+            median: Duration::from_micros(us),
+            p10: Duration::from_micros(us),
+            p90: Duration::from_micros(us),
+            mean: Duration::from_micros(us),
+        };
+        let flops = 2.0 * 64.0 * 64.0 * 64.0;
+        sink.record_flops("gemm_nn[scalar]", "m=64 k=64 n=64", 1, &mk(800), flops);
+        sink.record_flops("gemm_nn[avx2]", "m=64 k=64 n=64", 1, &mk(100), flops);
+        // 2-thread avx2 has no 2-thread scalar twin → falls back to t=1.
+        sink.record_flops("gemm_nn[avx2]", "m=64 k=64 n=64", 2, &mk(50), flops);
+
+        let dir = std::env::temp_dir().join(format!("pamm_benchx_k_{}", std::process::id()));
+        sink.flush_to(&dir).unwrap();
+        let rec = &load_dir(&dir).unwrap()[0];
+
+        let scalar = rec.entries.iter().find(|e| e.op == "gemm_nn[scalar]").unwrap();
+        assert!(scalar.speedup_vs_scalar.is_none(), "scalar op has no scalar twin");
+        let g = scalar.gflops.expect("gflops persisted");
+        assert!((g - flops / 800_000.0).abs() < 1e-9, "gflops {g}");
+
+        let avx1 = rec
+            .entries
+            .iter()
+            .find(|e| e.op == "gemm_nn[avx2]" && e.threads == 1)
+            .unwrap();
+        assert!((avx1.speedup_vs_scalar.unwrap() - 8.0).abs() < 1e-9);
+        let avx2t = rec
+            .entries
+            .iter()
+            .find(|e| e.op == "gemm_nn[avx2]" && e.threads == 2)
+            .unwrap();
+        assert!((avx2t.speedup_vs_scalar.unwrap() - 16.0).abs() < 1e-9, "fallback to t=1 scalar");
+        assert!((avx2t.speedup_vs_serial.unwrap() - 2.0).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scalar_twin_parsing() {
+        assert_eq!(scalar_twin("gemm_nn[avx2]").as_deref(), Some("gemm_nn[scalar]"));
+        assert_eq!(scalar_twin("gemm_tn[sse2]").as_deref(), Some("gemm_tn[scalar]"));
+        assert_eq!(scalar_twin("gemm_nn[scalar]"), None);
+        assert_eq!(scalar_twin("matmul_tn"), None);
     }
 
     #[test]

@@ -99,6 +99,9 @@ USAGE:
                  [--quick] [--artifacts DIR] [--out DIR]
   pamm memory [--model M] [--batch N] [--seq N] [--r-inv N]
   pamm kernels [--artifacts DIR]      # validate native vs Pallas artifacts
+  pamm kernels --probe                # print SIMD dispatch level, tile
+                                      # parameters, GFLOP/s spot check
+                                      # (no artifacts needed)
   pamm list [--artifacts DIR]         # list manifest artifacts
   pamm bench-report [--dir DIR] [--out FILE]
                                       # render BENCH_*.json -> BENCHMARKS.md
@@ -110,6 +113,8 @@ GLOBAL FLAGS:
   --threads N    worker threads for the native compute pool (poolx);
                  0 or unset = auto (available parallelism, PAMM_THREADS
                  env respected). Results are bit-identical at any N.
+  PAMM_SIMD      env var: scalar|sse2|avx2|native (default native) —
+                 GEMM dispatch level; every level is bit-identical.
 ";
 
 #[cfg(test)]

@@ -8,12 +8,20 @@
 //! The native side runs on the shared poolx pool (`--threads`); its
 //! outputs are bit-identical at any thread count, so the agreement
 //! thresholds below are independent of the host's parallelism.
+//!
+//! Also home of [`probe`] (`pamm kernels --probe`): the SIMD dispatch /
+//! tile-parameter / GFLOP/s report that records which `tensor::kernels`
+//! level a host actually runs — the provenance line for benchmark JSON.
+
+use std::fmt::Write as _;
 
 use anyhow::{bail, Context, Result};
 
+use crate::benchx::{bench_fn, BenchOpts};
 use crate::pamm::{self, Eps};
 use crate::runtime::{ArtifactMeta, Engine, HostTensor};
 use crate::rngx::Xoshiro256;
+use crate::tensor::kernels::{self, Dispatch, KC, LADDER, MC, MR, NC, NR};
 use crate::tensor::Mat;
 
 fn dims(meta: &ArtifactMeta, input: &str) -> Result<Vec<usize>> {
@@ -32,6 +40,87 @@ fn mat_tensor(m: &Mat) -> HostTensor {
 
 fn max_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// `pamm kernels --probe`: report the detected SIMD dispatch ladder,
+/// the tile/block parameters, and a one-shot single-thread GFLOP/s spot
+/// check of every available level on a 512³ `A·B` — so the provenance
+/// of a benchmark JSON ("which kernel actually ran on this host") is
+/// one command away. Pure native compute: needs no artifacts.
+pub fn probe() -> String {
+    let mut out = String::new();
+    let env = std::env::var("PAMM_SIMD").ok();
+    let avail: Vec<&str> =
+        LADDER.iter().filter(|d| d.available()).map(|d| d.name()).collect();
+    let _ = writeln!(out, "tensor::kernels probe");
+    let _ = writeln!(
+        out,
+        "  dispatch: {} (PAMM_SIMD={}; available: {})",
+        kernels::active().name(),
+        env.as_deref().unwrap_or("unset → native"),
+        avail.join(" ")
+    );
+    let _ = writeln!(
+        out,
+        "  tiles: MR={MR} NR={NR}  blocks: MC={MC} KC={KC} NC={NC}  (f32, no-FMA determinism contract)"
+    );
+
+    let dim = 512usize;
+    let flops = 2.0 * (dim as f64).powi(3);
+    let mut rng = Xoshiro256::new(0x9086);
+    let a = Mat::random_normal(dim, dim, 1.0, &mut rng);
+    let b = Mat::random_normal(dim, dim, 1.0, &mut rng);
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 5,
+        max_total: std::time::Duration::from_secs(3),
+    };
+    let _ = writeln!(out, "  spot check: gemm_nn {dim}x{dim}x{dim}, single thread");
+    let mut scalar_ns = None;
+    for d in LADDER {
+        if !d.available() {
+            continue;
+        }
+        let mut c = Mat::zeros(dim, dim);
+        let r = bench_fn(d.name(), &opts, || {
+            c.data_mut().fill(0.0);
+            kernels::with_workspace(|ws| {
+                kernels::gemm_into(
+                    d,
+                    false,
+                    dim,
+                    dim,
+                    dim,
+                    a.data(),
+                    dim,
+                    b.data(),
+                    dim,
+                    c.data_mut(),
+                    dim,
+                    &mut ws.packs,
+                );
+            });
+            std::hint::black_box(c.data().first().copied());
+        });
+        let ns = r.median.as_nanos() as f64;
+        let vs = match (d, scalar_ns) {
+            (Dispatch::Scalar, _) => {
+                scalar_ns = Some(ns);
+                String::new()
+            }
+            (_, Some(s)) => format!("   ({:.2}x vs scalar)", s / ns.max(1.0)),
+            _ => String::new(),
+        };
+        let _ = writeln!(
+            out,
+            "    {:<7} {:>12} /iter   {:>7.2} GFLOP/s{vs}",
+            d.name(),
+            format!("{:.2?}", r.median),
+            flops / ns.max(1.0)
+        );
+    }
+    out
 }
 
 /// Validate every kernel artifact in the manifest; returns count checked.

@@ -1,5 +1,5 @@
 //! Experiment harness — one entry per table & figure of the paper
-//! (DESIGN.md §3 maps each id to modules and expectations).
+//! (DESIGN.md §5 maps each id to modules and expectations).
 //!
 //! Every harness prints the paper-style rows AND writes a CSV under the
 //! `--out` directory so EXPERIMENTS.md can cite machine-readable results.

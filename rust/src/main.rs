@@ -226,8 +226,15 @@ fn cmd_memory(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Validate the native PAMM twin against the AOT kernel artifacts.
+/// Validate the native PAMM twin against the AOT kernel artifacts —
+/// or, with `--probe`, report the SIMD dispatch level / tile parameters
+/// / spot GFLOP/s of the native `tensor::kernels` GEMM (no artifacts
+/// needed).
 fn cmd_kernels(args: &Args) -> Result<()> {
+    if args.get_bool("probe") {
+        print!("{}", pamm::experiments::kernels::probe());
+        return Ok(());
+    }
     let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
     let engine = Engine::load(&artifacts)?;
     let n = pamm::experiments::validate_kernels(&engine)?;

@@ -9,6 +9,12 @@
 //! few thousand steps through the PJRT stack, captures the K-projection
 //! input of a middle layer (paper uses layer 3 at step 3000), and feeds it
 //! here.
+//!
+//! The PAMM calls inside the sweeps ([`error_sweep`]'s exact/approx
+//! products, [`coverage_sweep`]'s compress) route through the
+//! `tensor::kernels` microkernel GEMM like every other native path, so
+//! the full Fig. 6/7 grids — hundreds of compress+apply+exact cells —
+//! run at kernel speed; only the per-cell bookkeeping here is scalar.
 
 use crate::pamm::{self, Eps};
 use crate::rngx::Xoshiro256;

@@ -13,7 +13,12 @@
 //! Like the PAMM kernels, each estimator has a default entry point on the
 //! process-wide pool and a `*_with` twin taking an explicit
 //! [`Pool`] for the fig4a equal-memory comparison and the benches;
-//! results are bit-identical at any thread count.
+//! results are bit-identical at any thread count. All contractions here
+//! (`matmul_with`, `matmul_tn_with`) route through the
+//! `tensor::kernels` microkernel GEMM, so the fig4a wall-clock
+//! comparison pits every estimator against PAMM on the same SIMD
+//! footing — CompAct's sketch/unsketch matmuls in particular are pure
+//! dense GEMMs and inherit the full speedup.
 
 use crate::poolx::{self, Pool};
 use crate::rngx::Xoshiro256;

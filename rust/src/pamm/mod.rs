@@ -20,12 +20,21 @@
 //! All decompositions are row-blocked (compress) or column-stripped
 //! (apply, exact) so outputs are **bit-identical at any thread count**;
 //! `rust/tests/prop_pamm.rs` asserts this for 1/2/4 threads.
+//!
+//! Both stages lean on the `tensor::kernels` microkernel GEMM: Stage 1
+//! computes the similarity scores as one Gram pass `S = A·Cᵀ` (then
+//! sweeps `S` for the Lemma-1 argmax/α/β bookkeeping), and Stage 2's
+//! `Cᵀ·B̃` contraction is the same kernel with the transposed read
+//! packed in. Per-worker scratch (`S` strips, `B̃`, packed panels)
+//! comes from the kernel's thread-local `Workspace`, so steady-state
+//! train-step iterations don't allocate scratch.
 
 pub mod analysis;
 pub mod baselines;
 
 use crate::poolx::{self, Pool};
 use crate::rngx::Xoshiro256;
+use crate::tensor::kernels::{self, Workspace};
 use crate::tensor::{dot, Mat};
 
 const NORM_EPS: f32 = 1e-12;
@@ -114,9 +123,20 @@ pub fn sample_generators(rng: &mut Xoshiro256, b: usize, k: usize) -> Vec<usize>
 
 /// Row-range worker for [`compress`]: fills `assign[start..end]` /
 /// `alpha[start..end]`, returns the local drop count.
+///
+/// The old per-row 4-way generator scan is gone: the scores for the
+/// whole range come from one Gram pass `S = A[start..end) · Cᵀ` through
+/// the blocked `tensor::kernels` GEMM (`ct` is the pre-transposed
+/// generator matrix, shared by all workers), followed by a cheap
+/// Lemma-1 argmax/α sweep over `S`. The `S` strip lives in the worker's
+/// thread-local [`Workspace`], so repeated compress calls allocate no
+/// scratch. The kernel's per-element accumulation order is invariant to
+/// the row partition and to the SIMD dispatch level, so `S` — and
+/// therefore assignment, α and β — is bit-identical at any thread
+/// count and under `PAMM_SIMD=scalar` vs `native`.
 fn compress_range(
     a: &Mat,
-    c: &Mat,
+    ct: &Mat,
     nc: &[f32],
     eps: Eps,
     start: usize,
@@ -124,61 +144,60 @@ fn compress_range(
     assign: &mut [u32],
     alpha: &mut [f32],
 ) -> usize {
-    let k = c.rows();
-    let mut dropped = 0usize;
-    for i in start..end {
-        let ai = a.row(i);
-        let na = dot(ai, ai).sqrt();
-        if na <= NORM_EPS {
-            dropped += 1;
-            continue;
-        }
-        // Lemma 1: pick argmax_j |csim(A_i, C_j)|. Generators are walked
-        // four at a time so one pass over `ai` feeds four accumulators —
-        // amortizes the A-row loads (the L1 register-blocking analogue of
-        // the Pallas kernel's (TB, k) MXU tile; §Perf ~2× on this host).
-        let mut best_j = 0usize;
-        let mut best_abs = -1.0f32;
-        let mut best_cs = 0.0f32;
-        let nlen = ai.len();
-        let mut consider = |j: usize, d: f32| {
-            let cs = d / (na * nc[j]).max(NORM_EPS);
-            if cs.abs() > best_abs {
-                best_abs = cs.abs();
-                best_cs = cs;
-                best_j = j;
+    let rows = end - start;
+    let k = ct.cols();
+    let n = a.cols();
+    kernels::with_workspace(|ws| {
+        let Workspace { packs, s, .. } = ws;
+        s.clear();
+        s.resize(rows * k, 0.0);
+        kernels::gemm_into(
+            kernels::active(),
+            false,
+            rows,
+            k,
+            n,
+            &a.data()[start * n..end * n],
+            n,
+            ct.data(),
+            k,
+            s,
+            k,
+            packs,
+        );
+        let mut dropped = 0usize;
+        for i in start..end {
+            let ai = a.row(i);
+            let na = dot(ai, ai).sqrt();
+            if na <= NORM_EPS {
+                dropped += 1;
+                continue;
             }
-        };
-        let mut j = 0usize;
-        while j + 4 <= k {
-            let (c0, c1, c2, c3) = (c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
-            let (mut d0, mut d1, mut d2, mut d3) = (0f32, 0f32, 0f32, 0f32);
-            for t in 0..nlen {
-                let av = ai[t];
-                d0 += av * c0[t];
-                d1 += av * c1[t];
-                d2 += av * c2[t];
-                d3 += av * c3[t];
+            // Lemma 1: argmax_j |csim(A_i, C_j)| over the Gram row
+            // (strictly-greater keeps the lowest index on ties, like the
+            // scan it replaces).
+            let srow = &s[(i - start) * k..(i - start + 1) * k];
+            let mut best_j = 0usize;
+            let mut best_abs = -1.0f32;
+            let mut best_cs = 0.0f32;
+            for (j, &d) in srow.iter().enumerate() {
+                let cs = d / (na * nc[j]).max(NORM_EPS);
+                if cs.abs() > best_abs {
+                    best_abs = cs.abs();
+                    best_cs = cs;
+                    best_j = j;
+                }
             }
-            consider(j, d0);
-            consider(j + 1, d1);
-            consider(j + 2, d2);
-            consider(j + 3, d3);
-            j += 4;
+            let csim_sq = best_cs * best_cs;
+            if eps.keeps(csim_sq) {
+                assign[i - start] = best_j as u32;
+                alpha[i - start] = best_cs * na / nc[best_j].max(NORM_EPS);
+            } else {
+                dropped += 1; // α stays 0 — the row is dropped (Eq. 3)
+            }
         }
-        while j < k {
-            consider(j, dot(ai, c.row(j)));
-            j += 1;
-        }
-        let csim_sq = best_cs * best_cs;
-        if eps.keeps(csim_sq) {
-            assign[i - start] = best_j as u32;
-            alpha[i - start] = best_cs * na / nc[best_j].max(NORM_EPS);
-        } else {
-            dropped += 1; // α stays 0 — the row is dropped (Eq. 3)
-        }
-    }
-    dropped
+        dropped
+    })
 }
 
 /// Stage 1 (Algorithm 1 `Compress`) on the process-wide pool. See
@@ -188,7 +207,8 @@ pub fn compress(a: &Mat, gen_idx: &[usize], eps: Eps) -> Compressed {
 }
 
 /// Stage 1 (Algorithm 1 `Compress`): assignment + scales for given
-/// generator indices. Parallel over row blocks of `pool` (rows are
+/// generator indices, scored via a Gram-matrix GEMM (see
+/// `compress_range`). Parallel over row blocks of `pool` (rows are
 /// independent — the same decomposition the Pallas grid uses), serial
 /// below the pool's chunk threshold. Output is bit-identical at any
 /// thread count.
@@ -198,6 +218,11 @@ pub fn compress_with(a: &Mat, gen_idx: &[usize], eps: Eps, pool: &Pool) -> Compr
     assert!(k >= 1, "need at least one generator");
     let c = a.gather_rows(gen_idx);
     let nc = c.row_norms();
+    // One transpose shared by every worker: the Gram pass computes
+    // `A_block · Cᵀ`, and pre-materializing Cᵀ keeps the kernel's B
+    // packing on contiguous rows (k×n copy, negligible next to the
+    // b×k×n contraction).
+    let ct = c.transpose();
 
     let mut assign = vec![0u32; b];
     let mut alpha = vec![0f32; b];
@@ -205,12 +230,12 @@ pub fn compress_with(a: &Mat, gen_idx: &[usize], eps: Eps, pool: &Pool) -> Compr
     if pool.chunks_for(b) <= 1 {
         // Serial fast path: write assign/alpha in place, no per-chunk
         // temporaries.
-        dropped = compress_range(a, &c, &nc, eps, 0, b, &mut assign, &mut alpha);
+        dropped = compress_range(a, &ct, &nc, eps, 0, b, &mut assign, &mut alpha);
     } else {
         for (start, _end, (ac, lc, d)) in pool.map_chunks(b, |s, e| {
             let mut ac = vec![0u32; e - s];
             let mut lc = vec![0f32; e - s];
-            let d = compress_range(a, &c, &nc, eps, s, e, &mut ac, &mut lc);
+            let d = compress_range(a, &ct, &nc, eps, s, e, &mut ac, &mut lc);
             (ac, lc, d)
         }) {
             assign[start..start + ac.len()].copy_from_slice(&ac);
@@ -231,47 +256,117 @@ pub fn apply(comp: &Compressed, b_mat: &Mat) -> Mat {
     apply_with(comp, b_mat, poolx::global())
 }
 
-/// One column strip `[j0, j1)` of [`apply`]: the B̃ index-accumulate
-/// over the strip's columns, then the serial `Cᵀ·B̃` kernel
-/// ([`Mat::t_matmul`]) and the β scale. Both phases sweep source rows
-/// in ascending order, so the per-element accumulation order never
-/// depends on the strip bounds (bit-identical at any thread count; the
-/// full-width call `apply_strip(comp, b, 0, m)` *is* the serial
-/// algorithm).
-fn apply_strip(comp: &Compressed, b_mat: &Mat, j0: usize, j1: usize) -> Mat {
-    let (k, w) = (comp.k(), j1 - j0);
-    let mut btilde = Mat::zeros(k, w);
+/// Which generators received at least one surviving row — the rows of
+/// B̃ that can be nonzero. Derived from `assign`/`alpha` alone, so the
+/// mask is identical for every column strip (a per-strip content scan
+/// would let the dense/sparse choice differ between strips and break
+/// thread-count bit-identity).
+fn generator_live(comp: &Compressed) -> (Vec<bool>, usize) {
+    let mut live = vec![false; comp.k()];
+    let mut count = 0usize;
     for i in 0..comp.b() {
-        let a = comp.alpha[i];
-        if a == 0.0 {
-            continue;
-        }
-        let src = &b_mat.row(i)[j0..j1];
-        let dst = btilde.row_mut(comp.assign[i] as usize);
-        for (d, &s) in dst.iter_mut().zip(src) {
-            *d += a * s;
+        if comp.alpha[i] != 0.0 {
+            let j = comp.assign[i] as usize;
+            if !live[j] {
+                live[j] = true;
+                count += 1;
+            }
         }
     }
-    let mut strip = comp.generators.t_matmul(&btilde); // (n, w)
-    strip.scale(comp.beta);
-    strip
+    (live, count)
+}
+
+/// One column strip `[j0, j1)` of [`apply`]: the B̃ index-accumulate
+/// over the strip's columns, then `Cᵀ·B̃` and the β scale. Both phases
+/// sweep source rows in ascending order, so the per-element
+/// accumulation order never depends on the strip bounds (bit-identical
+/// at any thread count; the full-width call
+/// `apply_strip(comp, b, …, 0, m)` *is* the serial algorithm).
+///
+/// The `Cᵀ·B̃` contraction picks its variant from the shared `live`
+/// mask: with every generator live (the ε = ∞ hot path) it is one
+/// dense microkernel GEMM — no zero tests anywhere in the inner loops;
+/// with dead generators (tight ε) it takes a scalar loop whose
+/// zero-row skip is hoisted to **one branch per generator**, never
+/// inside the j-loop. B̃ scratch comes from the worker's thread-local
+/// [`Workspace`].
+fn apply_strip(comp: &Compressed, b_mat: &Mat, live: &[bool], all_live: bool, j0: usize, j1: usize) -> Mat {
+    let (k, w) = (comp.k(), j1 - j0);
+    let n = comp.generators.cols();
+    kernels::with_workspace(|ws| {
+        let Workspace { packs, btilde, .. } = ws;
+        btilde.clear();
+        btilde.resize(k * w, 0.0);
+        for i in 0..comp.b() {
+            let a = comp.alpha[i];
+            if a == 0.0 {
+                continue;
+            }
+            let src = &b_mat.row(i)[j0..j1];
+            let dst = &mut btilde[comp.assign[i] as usize * w..comp.assign[i] as usize * w + w];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += a * s;
+            }
+        }
+        let mut strip = Mat::zeros(n, w);
+        if all_live {
+            kernels::gemm_into(
+                kernels::active(),
+                true,
+                n,
+                w,
+                k,
+                comp.generators.data(),
+                n,
+                btilde,
+                w,
+                strip.data_mut(),
+                w,
+                packs,
+            );
+        } else {
+            // Plain ascending-r accumulation (no KC grouping) so the
+            // skipped rows are the only difference from a flat sweep —
+            // the order every strip and the serial path share.
+            for (r, &is_live) in live.iter().enumerate() {
+                if !is_live {
+                    continue;
+                }
+                let crow = comp.generators.row(r);
+                let brow = &btilde[r * w..(r + 1) * w];
+                for (i2, &cv) in crow.iter().enumerate() {
+                    let orow = &mut strip.data_mut()[i2 * w..(i2 + 1) * w];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += cv * bv;
+                    }
+                }
+            }
+        }
+        strip.scale(comp.beta);
+        strip
+    })
 }
 
 /// Stage 2 (Algorithm 1 `ApproxMM`): `Õ = β·Cᵀ·B̃` with
 /// `B̃_j = Σ_{i:f(i)=j} α_i B_i` via index-accumulate (the CUDA-flavored
 /// schedule; the Pallas twin uses a one-hot matmul — same numbers).
 /// Parallel over column strips of the output on `pool`; bit-identical at
-/// any thread count.
+/// any thread count. The dense-vs-sparse `Cᵀ·B̃` choice is made once
+/// here from the assignment (see `apply_strip`).
 pub fn apply_with(comp: &Compressed, b_mat: &Mat, pool: &Pool) -> Mat {
     let m = b_mat.cols();
     assert_eq!(comp.b(), b_mat.rows(), "assignment/B row mismatch");
     let n = comp.generators.cols();
+    let (live, nlive) = generator_live(comp);
+    let all_live = nlive == comp.k();
     let strip_pool = pool.for_columns();
     if strip_pool.chunks_for(m) <= 1 {
-        return apply_strip(comp, b_mat, 0, m);
+        return apply_strip(comp, b_mat, &live, all_live, 0, m);
     }
     let mut out = Mat::zeros(n, m);
-    for (j0, j1, strip) in strip_pool.map_chunks(m, |j0, j1| apply_strip(comp, b_mat, j0, j1)) {
+    for (j0, j1, strip) in
+        strip_pool.map_chunks(m, |j0, j1| apply_strip(comp, b_mat, &live, all_live, j0, j1))
+    {
         out.paste_cols(j0, j1, &strip);
     }
     out
@@ -461,6 +556,34 @@ mod tests {
                 "exact t={threads}"
             );
         }
+    }
+
+    #[test]
+    fn dead_generator_takes_sparse_apply_and_matches_reconstruct() {
+        // Duplicate a generator row: the later copy never wins the
+        // strict argmax, so that generator receives no assignments under
+        // ε = 0 → B̃ has a zero row → apply takes the hoisted-skip
+        // sparse path. It must still match the reconstruct-then-multiply
+        // identity, serial and parallel alike.
+        let mut a = rand_mat(24, 6, 31);
+        for j in 0..6 {
+            let v = a.get(3, j);
+            a.set(9, j, v);
+        }
+        let idx = vec![3, 9, 17];
+        let comp = compress(&a, &idx, Eps::Val(0.0));
+        assert_eq!(comp.assign[9], 0, "duplicate row must resolve to the first generator");
+        assert!(comp.alpha[9] != 0.0);
+        let (live, nlive) = generator_live(&comp);
+        assert!(!live[1] && nlive == 2, "generator 1 must be dead: {live:?}");
+
+        let bm = rand_mat(24, 5, 32);
+        let mut want = comp.reconstruct().t_matmul(&bm);
+        want.scale(comp.beta);
+        let serial = apply_with(&comp, &bm, &Pool::serial());
+        assert!(serial.max_abs_diff(&want) < 1e-4 * want.frob_norm().max(1.0));
+        let pool = Pool::new(4).with_min_chunk(1);
+        assert_eq!(apply_with(&comp, &bm, &pool), serial, "sparse apply parallel parity");
     }
 
     #[test]

@@ -24,6 +24,12 @@
 //! written so each output element accumulates in the same order at any
 //! thread count — results are **bit-identical** for 1, 2, 4, … threads
 //! (asserted by `rust/tests/prop_pamm.rs`).
+//!
+//! Workers are **long-lived threads**, which is what makes the
+//! `tensor::kernels` per-thread `Workspace` (packed GEMM panels, Gram /
+//! B̃ scratch) effective: each worker's thread-local buffers warm up on
+//! first use and are reused by every later `map_chunks` job, so
+//! steady-state train-step iterations allocate no kernel scratch.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -1,0 +1,710 @@
+//! Register-blocked, panel-packed f32 GEMM microkernel with runtime
+//! SIMD dispatch — the single contraction engine under every native
+//! PAMM hot path.
+//!
+//! One kernel serves all four call sites: `Mat::matmul` (A·B),
+//! `Mat::t_matmul` (Aᵀ·B without materializing the transpose), the
+//! Gram pass `S = A·Cᵀ` inside `pamm::compress`, and the `Cᵀ·B̃`
+//! contraction inside `pamm::apply`. Transposition is absorbed by the
+//! packing step, so there is exactly one inner loop to optimize and
+//! one accumulation order to keep deterministic.
+//!
+//! # Blocking scheme (BLIS-style)
+//!
+//! ```text
+//! for jc in N by NC:                 // B block column  → L3
+//!   for pc in K by KC:               // panel depth     → pb: KC×NC
+//!     pack_b  (NR-wide column strips, zero-padded tails)
+//!     for ic in M by MC:             // A block row     → pa: MC×KC, L2
+//!       pack_a (MR-tall row strips, zero-padded tails)
+//!       for each (MR × NR) micro-tile: micro-kernel over kc
+//! ```
+//!
+//! The micro-kernel holds an MR×NR accumulator tile in registers,
+//! broadcasts one A value per row and multiplies it against an NR-wide
+//! B vector — `MR` reuses of every B load, `NR` of every A load. Tile
+//! sizes: MR = NR = 8 keeps the AVX2 variant at 8 ymm accumulators +
+//! 2 operand registers (half the 16-register file, room for the loop
+//! machinery), and one 8-float vector is exactly one ymm / two xmm.
+//! KC = 256 puts a B strip (KC×NR×4 = 8 KiB) well inside L1 and an A
+//! panel (MC×KC×4 = 128 KiB at MC = 128) inside L2; NC = 2048 bounds
+//! the packed B panel at 2 MiB.
+//!
+//! # Dispatch ladder
+//!
+//! `scalar → sse2 → avx2`, highest available level wins
+//! ([`Dispatch::native`]). Selection order: a programmatic [`force`]
+//! override (benches / `pamm kernels --probe`), else the `PAMM_SIMD`
+//! env var (`scalar|sse2|avx2|native`, parsed once), else native. The
+//! SIMD paths are `std::arch` behind `#[target_feature]` with CPU
+//! support checked at selection time; non-x86_64 hosts always take the
+//! scalar path. "Scalar" means portable Rust — LLVM may still
+//! autovectorize it, which is fine because…
+//!
+//! # Determinism contract
+//!
+//! Every dispatch level produces **bit-identical** output:
+//!
+//! * All levels share one blocking scheme and one per-element
+//!   accumulation order: k ascending, grouped into KC panels (zeroed
+//!   register tile per panel, then one add into C).
+//! * Lanes never mix: each output element is a pure chain of
+//!   `acc = acc + a*b` in that fixed order, and the SIMD kernels use
+//!   separate multiply and add (**no FMA**) so each step rounds exactly
+//!   like the scalar reference. The ~15% FMA win is deliberately traded
+//!   for `PAMM_SIMD=scalar` being a bit-exact oracle for every lane.
+//! * Parallelism (poolx row blocks / column strips) only ever
+//!   partitions M and N, never K, so thread count cannot change any
+//!   per-element order either. `rust/tests/prop_kernels.rs` asserts
+//!   both invariants (dispatch levels × 1/2/4 threads) on ragged-tail
+//!   shapes.
+//!
+//! # Workspace
+//!
+//! Packing buffers (and the Gram/B̃ scratch of the PAMM stages) live in
+//! a per-thread [`Workspace`] reached via [`with_workspace`]. poolx
+//! workers are long-lived, so after warm-up the steady-state train-step
+//! iterations reuse the same buffers and the packing path allocates
+//! nothing. The workspace is not re-entrant: kernels are leaf
+//! computations and must not nest `with_workspace` calls.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Micro-tile rows (A values broadcast per k step).
+pub const MR: usize = 8;
+/// Micro-tile columns (one 8-float SIMD vector).
+pub const NR: usize = 8;
+/// k-panel depth: B strip (KC·NR·4 = 8 KiB) stays L1-resident.
+pub const KC: usize = 256;
+/// m-block height: packed A panel (MC·KC·4 = 128 KiB) stays L2-resident.
+pub const MC: usize = 128;
+/// n-block width: bounds the packed B panel at NC·KC·4 = 2 MiB.
+pub const NC: usize = 2048;
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// A SIMD dispatch level. Variants exist on every architecture; levels
+/// the host cannot run fall back to [`Dispatch::Scalar`] at selection
+/// time, so a `Dispatch` value is always safe to pass around.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Portable Rust reference — the bit-exact oracle for all lanes.
+    Scalar,
+    /// 128-bit `std::arch` path (baseline on x86_64).
+    Sse2,
+    /// 256-bit `std::arch` path (requires AVX2 at runtime).
+    Avx2,
+}
+
+/// The full ladder, lowest to highest.
+pub const LADDER: [Dispatch; 3] = [Dispatch::Scalar, Dispatch::Sse2, Dispatch::Avx2];
+
+fn sse2_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return is_x86_feature_detected!("sse2");
+    #[cfg(not(target_arch = "x86_64"))]
+    return false;
+}
+
+fn avx2_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return is_x86_feature_detected!("avx2");
+    #[cfg(not(target_arch = "x86_64"))]
+    return false;
+}
+
+impl Dispatch {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Sse2 => "sse2",
+            Dispatch::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this level can run on the current host.
+    pub fn available(self) -> bool {
+        match self {
+            Dispatch::Scalar => true,
+            Dispatch::Sse2 => sse2_detected(),
+            Dispatch::Avx2 => avx2_detected(),
+        }
+    }
+
+    /// Highest available level on this host.
+    pub fn native() -> Dispatch {
+        LADDER.iter().rev().copied().find(|d| d.available()).unwrap_or(Dispatch::Scalar)
+    }
+
+    /// Parse a `PAMM_SIMD` value (`scalar|sse2|avx2|native`).
+    pub fn parse(s: &str) -> Option<Dispatch> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Dispatch::Scalar),
+            "sse2" => Some(Dispatch::Sse2),
+            "avx2" => Some(Dispatch::Avx2),
+            "native" => Some(Dispatch::native()),
+            _ => None,
+        }
+    }
+}
+
+/// Process-wide forced override (0 = none); see [`force`].
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// Force a dispatch level for the whole process (`None` restores the
+/// `PAMM_SIMD`/native default). For benches and the `--probe`
+/// subcommand, which sweep levels inside one process; regular code
+/// should rely on [`active`].
+pub fn force(d: Option<Dispatch>) {
+    let code = match d {
+        None => 0,
+        Some(Dispatch::Scalar) => 1,
+        Some(Dispatch::Sse2) => 2,
+        Some(Dispatch::Avx2) => 3,
+    };
+    FORCED.store(code, Ordering::Relaxed);
+}
+
+fn env_default() -> Dispatch {
+    static ENV: OnceLock<Dispatch> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("PAMM_SIMD") {
+        Ok(v) => match Dispatch::parse(&v) {
+            Some(d) if d.available() => d,
+            _ => {
+                eprintln!(
+                    "PAMM_SIMD={v}: unknown or unavailable on this host; using {}",
+                    Dispatch::native().name()
+                );
+                Dispatch::native()
+            }
+        },
+        Err(_) => Dispatch::native(),
+    })
+}
+
+/// The dispatch level the `Mat` entry points use right now:
+/// [`force`] override, else `PAMM_SIMD`, else [`Dispatch::native`] —
+/// always clamped to an available level.
+pub fn active() -> Dispatch {
+    let d = match FORCED.load(Ordering::Relaxed) {
+        1 => Dispatch::Scalar,
+        2 => Dispatch::Sse2,
+        3 => Dispatch::Avx2,
+        _ => env_default(),
+    };
+    if d.available() {
+        d
+    } else {
+        Dispatch::Scalar
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workspace
+// ---------------------------------------------------------------------------
+
+/// Packing buffers for one GEMM invocation (reused across calls).
+#[derive(Default)]
+pub struct PackBufs {
+    pa: Vec<f32>,
+    pb: Vec<f32>,
+}
+
+/// Per-thread scratch shared by the kernel and the PAMM stages built on
+/// it: packed panels, the compress Gram strip `S`, and the apply `B̃`
+/// accumulator. Reach it through [`with_workspace`]; pool workers are
+/// long-lived threads, so steady-state iterations allocate nothing.
+#[derive(Default)]
+pub struct Workspace {
+    /// GEMM packing buffers.
+    pub packs: PackBufs,
+    /// `compress` Gram strip (chunk rows × k), row-major.
+    pub s: Vec<f32>,
+    /// `apply` B̃ accumulator (k × strip width), row-major.
+    pub btilde: Vec<f32>,
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<Workspace> = RefCell::new(Workspace::default());
+}
+
+/// Run `f` with the calling thread's [`Workspace`]. Not re-entrant:
+/// kernels are leaf computations, so nothing on the shipped paths nests
+/// this call (a nested borrow would panic loudly, not corrupt).
+pub fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    WORKSPACE.with(|ws| f(&mut ws.borrow_mut()))
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Pack `kc×nc` of B (row-major, stride `ldb`, origin `(pc, jc)`) into
+/// NR-wide column strips: `pb[strip][p][t] = B[pc+p][jc+strip*NR+t]`,
+/// zero-padding the ragged last strip so the micro-kernel never needs a
+/// width branch in its k-loop.
+fn pack_b(pb: &mut Vec<f32>, b: &[f32], ldb: usize, pc: usize, kc: usize, jc: usize, nc: usize) {
+    let nstrips = nc.div_ceil(NR);
+    pb.clear();
+    pb.resize(nstrips * kc * NR, 0.0);
+    for js in 0..nstrips {
+        let j0 = jc + js * NR;
+        let w = NR.min(jc + nc - j0);
+        let base = js * kc * NR;
+        for p in 0..kc {
+            let src = &b[(pc + p) * ldb + j0..(pc + p) * ldb + j0 + w];
+            pb[base + p * NR..base + p * NR + w].copy_from_slice(src);
+        }
+    }
+}
+
+/// Pack `mc×kc` of op(A) into MR-tall row strips:
+/// `pa[strip][p][i] = A[ic+strip*MR+i][pc+p]`, zero-padding the ragged
+/// last strip. `trans` selects how storage is read — `false`: `a` is
+/// row-major m×k (`A[i][p] = a[i·lda+p]`); `true`: `a` is row-major
+/// k×m and we read its transpose (`A[i][p] = a[p·lda+i]`), which is
+/// what lets `t_matmul` skip materializing Aᵀ.
+fn pack_a(
+    pa: &mut Vec<f32>,
+    a: &[f32],
+    lda: usize,
+    trans: bool,
+    ic: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+) {
+    let mstrips = mc.div_ceil(MR);
+    pa.clear();
+    pa.resize(mstrips * kc * MR, 0.0);
+    for is in 0..mstrips {
+        let i0 = ic + is * MR;
+        let h = MR.min(ic + mc - i0);
+        let base = is * kc * MR;
+        if trans {
+            // Contiguous reads: row p of storage holds A[·][p].
+            for p in 0..kc {
+                let src = &a[(pc + p) * lda + i0..(pc + p) * lda + i0 + h];
+                pa[base + p * MR..base + p * MR + h].copy_from_slice(src);
+            }
+        } else {
+            for ii in 0..h {
+                let src = &a[(i0 + ii) * lda + pc..(i0 + ii) * lda + pc + kc];
+                for (p, &v) in src.iter().enumerate() {
+                    pa[base + p * MR + ii] = v;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Micro-kernels
+// ---------------------------------------------------------------------------
+
+/// One micro-tile: `C[0..mr][0..nr] += Σ_p pa[p][·] ⊗ pb[p][·]`.
+///
+/// # Safety
+/// `pa`/`pb` must point at `kc·MR` / `kc·NR` packed floats; `c` must be
+/// valid for `mr` rows of stride `ldc` with `nr` writable columns. SIMD
+/// variants additionally require the matching CPU feature (checked once
+/// at selection in [`micro_kernel`]).
+type MicroKernel =
+    unsafe fn(kc: usize, pa: *const f32, pb: *const f32, c: *mut f32, ldc: usize, mr: usize, nr: usize);
+
+/// Portable reference micro-kernel — the accumulation order every SIMD
+/// variant must reproduce bit-for-bit: zeroed MR×NR tile, `+= a*b` with
+/// p ascending, one final add into C. The full tile is computed even at
+/// ragged edges (padded lanes multiply packed zeros) so the k-loop is
+/// branch-free; only `mr×nr` is stored.
+unsafe fn mkernel_scalar(
+    kc: usize,
+    pa: *const f32,
+    pb: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let pav = std::slice::from_raw_parts(pa.add(p * MR), MR);
+        let pbv = std::slice::from_raw_parts(pb.add(p * NR), NR);
+        for ii in 0..MR {
+            let av = pav[ii];
+            for jj in 0..NR {
+                acc[ii][jj] += av * pbv[jj];
+            }
+        }
+    }
+    for ii in 0..mr {
+        for jj in 0..nr {
+            *c.add(ii * ldc + jj) += acc[ii][jj];
+        }
+    }
+}
+
+/// SSE2 micro-kernel: two passes of 4 rows × (2×4-lane) accumulators —
+/// 8 xmm accumulators per pass stay in registers (a single 8×2 pass
+/// would need 16 and spill). Separate `mul`/`add` (no FMA) keeps every
+/// lane bit-identical to [`mkernel_scalar`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn mkernel_sse2(
+    kc: usize,
+    pa: *const f32,
+    pb: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    use std::arch::x86_64::*;
+    let mut half = 0usize;
+    while half < MR {
+        let mut acc = [[_mm_setzero_ps(); 2]; 4];
+        for p in 0..kc {
+            let b0 = _mm_loadu_ps(pb.add(p * NR));
+            let b1 = _mm_loadu_ps(pb.add(p * NR + 4));
+            let pap = pa.add(p * MR + half);
+            for ii in 0..4 {
+                let av = _mm_set1_ps(*pap.add(ii));
+                acc[ii][0] = _mm_add_ps(acc[ii][0], _mm_mul_ps(av, b0));
+                acc[ii][1] = _mm_add_ps(acc[ii][1], _mm_mul_ps(av, b1));
+            }
+        }
+        if mr == MR && nr == NR {
+            for ii in 0..4 {
+                let cp = c.add((half + ii) * ldc);
+                _mm_storeu_ps(cp, _mm_add_ps(_mm_loadu_ps(cp), acc[ii][0]));
+                _mm_storeu_ps(cp.add(4), _mm_add_ps(_mm_loadu_ps(cp.add(4)), acc[ii][1]));
+            }
+        } else {
+            let mut buf = [0.0f32; 4 * NR];
+            for ii in 0..4 {
+                _mm_storeu_ps(buf.as_mut_ptr().add(ii * NR), acc[ii][0]);
+                _mm_storeu_ps(buf.as_mut_ptr().add(ii * NR + 4), acc[ii][1]);
+            }
+            let top = mr.min(half + 4);
+            for ii in half..top {
+                for jj in 0..nr {
+                    *c.add(ii * ldc + jj) += buf[(ii - half) * NR + jj];
+                }
+            }
+        }
+        half += 4;
+    }
+}
+
+/// AVX2 micro-kernel: 8 ymm accumulators (one per tile row), one B
+/// vector load + 8 broadcast-multiply-adds per k step. Separate
+/// `mul`/`add` (no FMA) keeps every lane bit-identical to
+/// [`mkernel_scalar`]; ragged edges spill the register tile to a stack
+/// buffer and store `mr×nr` scalar-wise.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mkernel_avx2(
+    kc: usize,
+    pa: *const f32,
+    pb: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    use std::arch::x86_64::*;
+    let mut acc = [_mm256_setzero_ps(); MR];
+    for p in 0..kc {
+        let bv = _mm256_loadu_ps(pb.add(p * NR));
+        let pap = pa.add(p * MR);
+        for (ii, a) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*pap.add(ii));
+            *a = _mm256_add_ps(*a, _mm256_mul_ps(av, bv));
+        }
+    }
+    if mr == MR && nr == NR {
+        for (ii, a) in acc.iter().enumerate() {
+            let cp = c.add(ii * ldc);
+            _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), *a));
+        }
+    } else {
+        let mut buf = [0.0f32; MR * NR];
+        for (ii, a) in acc.iter().enumerate() {
+            _mm256_storeu_ps(buf.as_mut_ptr().add(ii * NR), *a);
+        }
+        for ii in 0..mr {
+            for jj in 0..nr {
+                *c.add(ii * ldc + jj) += buf[ii * NR + jj];
+            }
+        }
+    }
+}
+
+/// Resolve the micro-kernel for a dispatch level, re-checking CPU
+/// support so an unavailable request degrades to scalar instead of
+/// executing illegal instructions.
+fn micro_kernel(d: Dispatch) -> MicroKernel {
+    match d {
+        Dispatch::Scalar => mkernel_scalar,
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Sse2 if sse2_detected() => mkernel_sse2,
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 if avx2_detected() => mkernel_avx2,
+        _ => mkernel_scalar,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// `C += op(A) · B` on dispatch level `d` — the one blocked GEMM every
+/// hot contraction routes through.
+///
+/// * `trans_a = false`: `a` is row-major `m×kdim`, stride `lda`.
+/// * `trans_a = true`: `a` is row-major `kdim×m`, stride `lda`, read as
+///   its transpose (no materialization).
+/// * `b` is row-major `kdim×n`, stride `ldb`; `c` row-major `m×n`,
+///   stride `ldc`, **accumulated into** (callers start from zeros).
+///
+/// Single-threaded by design: poolx parallelism partitions M (row
+/// blocks) or N (column strips) *above* this call, which is exactly why
+/// thread count can never change the per-element accumulation order.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into(
+    d: Dispatch,
+    trans_a: bool,
+    m: usize,
+    n: usize,
+    kdim: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    packs: &mut PackBufs,
+) {
+    if m == 0 || n == 0 || kdim == 0 {
+        return;
+    }
+    if trans_a {
+        assert!(a.len() >= (kdim - 1) * lda + m, "gemm: Aᵀ storage too small");
+        assert!(lda >= m, "gemm: Aᵀ row stride below row width");
+    } else {
+        assert!(a.len() >= (m - 1) * lda + kdim, "gemm: A storage too small");
+        assert!(lda >= kdim, "gemm: A row stride below row width");
+    }
+    assert!(b.len() >= (kdim - 1) * ldb + n, "gemm: B storage too small");
+    assert!(c.len() >= (m - 1) * ldc + n, "gemm: C storage too small");
+    assert!(ldc >= n && ldb >= n, "gemm: row stride below row width");
+
+    let kern = micro_kernel(d);
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        let nstrips = nc.div_ceil(NR);
+        for pc in (0..kdim).step_by(KC) {
+            let kc = KC.min(kdim - pc);
+            pack_b(&mut packs.pb, b, ldb, pc, kc, jc, nc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                let mstrips = mc.div_ceil(MR);
+                pack_a(&mut packs.pa, a, lda, trans_a, ic, mc, pc, kc);
+                for js in 0..nstrips {
+                    let j0 = js * NR;
+                    let nr = NR.min(nc - j0);
+                    for is in 0..mstrips {
+                        let i0 = is * MR;
+                        let mr = MR.min(mc - i0);
+                        let coff = (ic + i0) * ldc + jc + j0;
+                        // SAFETY: packed panels hold kc·MR / kc·NR
+                        // floats per strip (asserted sizes above); the
+                        // C tile stays inside `c` because
+                        // (ic+i0+mr-1)·ldc + jc+j0+nr ≤ (m-1)·ldc + n.
+                        unsafe {
+                            kern(
+                                kc,
+                                packs.pa.as_ptr().add(is * kc * MR),
+                                packs.pb.as_ptr().add(js * kc * NR),
+                                c.as_mut_ptr().add(coff),
+                                ldc,
+                                mr,
+                                nr,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// [`gemm_into`] on the [`active`] dispatch level with the calling
+/// thread's workspace — the form the `Mat` entry points use. Must not
+/// be called while already inside [`with_workspace`] (use
+/// [`gemm_into`] with the borrowed `packs` there instead).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_auto(
+    trans_a: bool,
+    m: usize,
+    n: usize,
+    kdim: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    with_workspace(|ws| {
+        gemm_into(active(), trans_a, m, n, kdim, a, lda, b, ldb, c, ldc, &mut ws.packs)
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Xoshiro256;
+
+    /// f64-accumulated reference (order-independent up to f64 rounding).
+    fn naive(trans_a: bool, m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for p in 0..k {
+                    let av = if trans_a { a[p * m + i] } else { a[i * k + p] };
+                    acc += av as f64 * b[p * n + j] as f64;
+                }
+                c[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut v = vec![0f32; len];
+        rng.fill_normal_f32(&mut v, 1.0);
+        v
+    }
+
+    fn run(d: Dispatch, trans_a: bool, m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        let mut packs = PackBufs::default();
+        let (lda, stored_a_rows) = if trans_a { (m, k) } else { (k, m) };
+        assert_eq!(a.len(), stored_a_rows * lda);
+        gemm_into(d, trans_a, m, n, k, a, lda, b, n, &mut c, n, &mut packs);
+        c
+    }
+
+    #[test]
+    fn matches_naive_on_edge_shapes() {
+        // Ragged tails around MR/NR and a KC-crossing k.
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (MR - 1, NR + 1, 5),
+            (MR, NR, KC),
+            (MR + 1, NR - 1, KC + 1),
+            (17, 13, 19),
+            (3, 2, 2 * KC + 5),
+        ] {
+            for trans_a in [false, true] {
+                let a = rand_vec(m * k, 1 + m as u64);
+                let b = rand_vec(k * n, 2 + n as u64);
+                let got = run(Dispatch::Scalar, trans_a, m, n, k, &a, &b);
+                let want = naive(trans_a, m, n, k, &a, &b);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                        "m={m} n={n} k={k} trans={trans_a}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_level_is_bit_identical_to_scalar() {
+        for &(m, n, k) in &[(5usize, 9usize, 7usize), (MR, NR, KC), (23, 17, KC + 3), (64, 40, 33)]
+        {
+            for trans_a in [false, true] {
+                let a = rand_vec(m * k, 11);
+                let b = rand_vec(k * n, 13);
+                let base = run(Dispatch::Scalar, trans_a, m, n, k, &a, &b);
+                for d in LADDER {
+                    if !d.available() {
+                        continue;
+                    }
+                    let got = run(d, trans_a, m, n, k, &a, &b);
+                    for (i, (g, w)) in got.iter().zip(&base).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{}: elem {i} differs (m={m} n={n} k={k} trans={trans_a})",
+                            d.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let mut packs = PackBufs::default();
+        let mut c = vec![7.0f32; 6];
+        gemm_into(Dispatch::Scalar, false, 0, 3, 4, &[], 4, &[0.0; 12], 3, &mut c, 3, &mut packs);
+        gemm_into(Dispatch::Scalar, false, 2, 0, 4, &[0.0; 8], 4, &[], 0, &mut c, 0, &mut packs);
+        // kdim = 0 leaves C untouched (empty sum).
+        gemm_into(Dispatch::Scalar, false, 2, 3, 0, &[], 0, &[], 3, &mut c, 3, &mut packs);
+        assert!(c.iter().all(|&x| x == 7.0));
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let mut c = vec![10.0f32];
+        let mut packs = PackBufs::default();
+        gemm_into(Dispatch::Scalar, false, 1, 1, 2, &a, 2, &b, 1, &mut c, 1, &mut packs);
+        assert_eq!(c[0], 10.0 + 11.0);
+    }
+
+    #[test]
+    fn dispatch_parse_and_ladder() {
+        assert_eq!(Dispatch::parse("scalar"), Some(Dispatch::Scalar));
+        assert_eq!(Dispatch::parse("AVX2"), Some(Dispatch::Avx2));
+        assert_eq!(Dispatch::parse(" native "), Some(Dispatch::native()));
+        assert_eq!(Dispatch::parse("mmx"), None);
+        assert!(Dispatch::Scalar.available());
+        assert!(Dispatch::native().available());
+    }
+
+    #[test]
+    fn workspace_buffers_are_reused() {
+        // Second identical call must not regrow the packing buffers.
+        let a = rand_vec(40 * 30, 3);
+        let b = rand_vec(30 * 20, 4);
+        let mut c = vec![0f32; 40 * 20];
+        let mut packs = PackBufs::default();
+        gemm_into(Dispatch::Scalar, false, 40, 20, 30, &a, 30, &b, 20, &mut c, 20, &mut packs);
+        let (cap_a, cap_b) = (packs.pa.capacity(), packs.pb.capacity());
+        c.fill(0.0);
+        gemm_into(Dispatch::Scalar, false, 40, 20, 30, &a, 30, &b, 20, &mut c, 20, &mut packs);
+        assert_eq!(packs.pa.capacity(), cap_a);
+        assert_eq!(packs.pb.capacity(), cap_b);
+    }
+
+    #[test]
+    fn forced_dispatch_round_trip() {
+        force(Some(Dispatch::Scalar));
+        assert_eq!(active(), Dispatch::Scalar);
+        force(None);
+        assert!(active().available());
+    }
+}

@@ -6,18 +6,29 @@
 //! PJRT executables; this type exists for the native PAMM twin
 //! (rust/src/pamm), the data pipeline, metrics, and tests.
 //!
-//! The matmuls use i-k-j loop order with the inner j-loop over contiguous
-//! rows — autovectorizes well at the (≤ 4096²) shapes the benches use
-//! (measured in EXPERIMENTS.md §Perf).
+//! Both matmuls route through the [`kernels`] subsystem: a
+//! register-blocked, panel-packed GEMM micro-kernel with runtime SIMD
+//! dispatch (`PAMM_SIMD=scalar|sse2|avx2|native`). Transposition is
+//! absorbed by the packing step, so `t_matmul` (`AᵀB`) never
+//! materializes the transpose, and every dispatch level produces
+//! bit-identical output (see the determinism contract in
+//! [`kernels`]). The dense paths carry no zero-skip branches — sparse
+//! structure is exploited one level up, where the caller knows it
+//! exists (`pamm::apply`'s dead-generator mask).
 //!
 //! Each hot contraction comes in two forms: a serial reference
 //! ([`Mat::matmul`], [`Mat::t_matmul`], [`Mat::row_norms`]) and a
 //! pool-parallel twin ([`Mat::matmul_with`], [`Mat::matmul_tn_with`],
 //! [`Mat::row_norms_with`]) that row-blocks (or column-strips) the work
-//! over a shared [`Pool`]. The parallel decompositions preserve the
-//! serial per-element accumulation order, so outputs are bit-identical
-//! at every thread count; below the pool's serial-fallback threshold
-//! they run inline with zero synchronization cost.
+//! over a shared [`Pool`]. The parallel decompositions partition only M
+//! or N — never the contraction dim — and the serial and parallel
+//! entry points share one kernel, so outputs are bit-identical at every
+//! thread count; below the pool's serial-fallback threshold they run
+//! inline with zero synchronization cost. Parallel results are stitched
+//! by their chunk offsets, never by iteration order, so a reordered
+//! `map_chunks` could not scramble output rows.
+
+pub mod kernels;
 
 use std::fmt;
 
@@ -106,16 +117,19 @@ impl Mat {
     }
 
     /// Parallel [`Mat::row_norms`] over row blocks of the shared pool.
-    /// Rows are independent, so this is bit-identical at any thread count.
+    /// Rows are independent, so this is bit-identical at any thread
+    /// count. Each block lands at its `start` offset — correctness does
+    /// not depend on `map_chunks` returning chunks in range order.
     pub fn row_norms_with(&self, pool: &Pool) -> Vec<f32> {
         let chunks = pool.map_chunks(self.rows, |s, e| {
             (s..e)
                 .map(|i| self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
                 .collect::<Vec<f32>>()
         });
-        let mut out = Vec::with_capacity(self.rows);
-        for (_, _, block) in chunks {
-            out.extend_from_slice(&block);
+        let mut out = vec![0f32; self.rows];
+        for (s, e, block) in chunks {
+            debug_assert_eq!(block.len(), e - s);
+            out[s..s + block.len()].copy_from_slice(&block);
         }
         out
     }
@@ -131,28 +145,18 @@ impl Mat {
     }
 
     /// Output rows `[s, e)` of `self @ other` into `block` (row-major
-    /// `(e-s) × m`) — i-k-j order, inner loop contiguous in both
-    /// operands. Shared by the serial and parallel entry points so the
-    /// bit-identity of the row-block decomposition holds by
-    /// construction.
+    /// `(e-s) × m`, zero-initialized by the caller) via the blocked
+    /// [`kernels`] GEMM. Shared by the serial and parallel entry points,
+    /// and the kernel's accumulation order is invariant to the row
+    /// partition, so the bit-identity of the row-block decomposition
+    /// holds by construction.
     fn matmul_rows(&self, other: &Mat, s: usize, e: usize, block: &mut [f32]) {
         let (k, m) = (self.cols, other.cols);
-        for i in s..e {
-            let a_row = self.row(i);
-            let o_row = &mut block[(i - s) * m..(i - s + 1) * m];
-            for (kk, &a) in a_row.iter().enumerate().take(k) {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[kk * m..(kk + 1) * m];
-                for j in 0..m {
-                    o_row[j] += a * b_row[j];
-                }
-            }
-        }
+        kernels::gemm_auto(false, e - s, m, k, &self.data[s * k..e * k], k, &other.data, m, block, m);
     }
 
-    /// `self @ other` — i-k-j order, inner loop contiguous in both operands.
+    /// `self @ other` through the microkernel GEMM (dense — no
+    /// zero-skip branches; see the module docs).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (n, m) = (self.rows, other.cols);
@@ -164,8 +168,9 @@ impl Mat {
     /// Parallel [`Mat::matmul`] over row blocks of `self`. Each worker
     /// runs the same `matmul_rows` kernel on a contiguous block of
     /// output rows, so the result is bit-identical to `matmul` at any
-    /// thread count. Falls back to the serial path below the pool's
-    /// chunk threshold.
+    /// thread count; blocks are written at their `(start, end)` offsets,
+    /// not appended in chunk-iteration order. Falls back to the serial
+    /// path below the pool's chunk threshold.
     pub fn matmul_with(&self, other: &Mat, pool: &Pool) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (n, m) = (self.rows, other.cols);
@@ -177,48 +182,35 @@ impl Mat {
             self.matmul_rows(other, s, e, &mut block);
             block
         });
-        let mut data = Vec::with_capacity(n * m);
-        for (_, _, block) in chunks {
-            data.extend_from_slice(&block);
+        let mut out = Mat::zeros(n, m);
+        for (s, e, block) in chunks {
+            debug_assert_eq!(block.len(), (e - s) * m);
+            out.data[s * m..s * m + block.len()].copy_from_slice(&block);
         }
-        Mat::from_vec(n, m, data)
+        out
     }
 
     /// `selfᵀ @ other` without materializing the transpose — the exact
     /// `∇W = Xᵀ∇Z` contraction PAMM replaces (the baseline in t7/t8).
     ///
-    /// Column-tiled (TJ = 64): the active output tile (n × 64 ≈ 128 KiB at
-    /// n = 512) stays cache-resident across the whole b sweep instead of
-    /// streaming the full n×m output once per input row (§Perf).
+    /// Dense by design: the transposed read is absorbed by the kernel's
+    /// packing step, and there is no per-element zero test in the inner
+    /// loops (the old `a == 0.0` skip poisoned vectorization of this
+    /// exact path). Callers that *know* whole source rows are zero —
+    /// `pamm::apply` with dead generators — hoist that test above the
+    /// kernel instead.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
         let (b, n, m) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(n, m);
-        const TJ: usize = 64;
-        let mut j0 = 0usize;
-        while j0 < m {
-            let j1 = (j0 + TJ).min(m);
-            for r in 0..b {
-                let a_row = self.row(r);
-                let b_row = &other.row(r)[j0..j1];
-                for (i, &a) in a_row.iter().enumerate().take(n) {
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let o_row = &mut out.data[i * m + j0..i * m + j1];
-                    for (o, &bv) in o_row.iter_mut().zip(b_row) {
-                        *o += a * bv;
-                    }
-                }
-            }
-            j0 = j1;
-        }
+        kernels::gemm_auto(true, n, m, b, &self.data, n, &other.data, m, &mut out.data, m);
         out
     }
 
-    /// Copy columns `[j0, j1)` into a new matrix (strip materializer
-    /// for the column-parallel kernels — cheap next to the contraction
-    /// that follows).
+    /// Copy columns `[j0, j1)` into a new matrix. The column-parallel
+    /// kernels no longer need this (they read strips in place through
+    /// the GEMM's row stride); kept as a utility for callers that want
+    /// an owned slice.
     pub fn slice_cols(&self, j0: usize, j1: usize) -> Mat {
         let w = j1 - j0;
         let mut out = Mat::zeros(self.rows, w);
@@ -241,21 +233,26 @@ impl Mat {
     }
 
     /// Parallel [`Mat::t_matmul`] (`selfᵀ @ other`, "tn" = transposed ×
-    /// normal) over column strips of the output: each strip runs the
-    /// serial `t_matmul` against the materialized B column slice, so
-    /// every output element accumulates over the b rows in the same
-    /// ascending order as the serial path — bit-identical at any thread
-    /// count by construction. Column strips (not per-thread partial
-    /// sums) are what make the reduction deterministic.
+    /// normal) over column strips of the output: each strip is one
+    /// kernel GEMM reading its B columns *in place* (offset `j0`,
+    /// stride `m` — no materialized slice), so every output element
+    /// accumulates over the b rows in the same ascending order as the
+    /// serial path — bit-identical at any thread count by construction.
+    /// Column strips (not per-thread partial sums) are what make the
+    /// reduction deterministic.
     pub fn matmul_tn_with(&self, other: &Mat, pool: &Pool) -> Mat {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
-        let (n, m) = (self.cols, other.cols);
+        let (b, n, m) = (self.rows, self.cols, other.cols);
         let strip_pool = pool.for_columns();
-        if strip_pool.chunks_for(m) <= 1 {
+        if b == 0 || strip_pool.chunks_for(m) <= 1 {
             return self.t_matmul(other);
         }
-        let strips =
-            strip_pool.map_chunks(m, |j0, j1| self.t_matmul(&other.slice_cols(j0, j1)));
+        let strips = strip_pool.map_chunks(m, |j0, j1| {
+            let w = j1 - j0;
+            let mut strip = Mat::zeros(n, w);
+            kernels::gemm_auto(true, n, w, b, &self.data, n, &other.data[j0..], m, &mut strip.data, w);
+            strip
+        });
         let mut out = Mat::zeros(n, m);
         for (j0, j1, strip) in strips {
             out.paste_cols(j0, j1, &strip);
@@ -393,6 +390,71 @@ mod tests {
         assert_eq!(a.matmul_with(&b, &pool), a.matmul(&b));
         assert_eq!(a.matmul_tn_with(&c, &pool), a.t_matmul(&c));
         assert_eq!(a.row_norms_with(&pool), a.row_norms());
+    }
+
+    #[test]
+    fn slice_and_paste_cols_roundtrip() {
+        let mut rng = Xoshiro256::new(9);
+        let a = Mat::random_normal(5, 7, 1.0, &mut rng);
+        let s = a.slice_cols(2, 6);
+        assert_eq!((s.rows(), s.cols()), (5, 4));
+        let mut b = Mat::zeros(5, 7);
+        b.paste_cols(2, 6, &s);
+        for i in 0..5 {
+            for j in 2..6 {
+                assert_eq!(b.get(i, j), a.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn mat_entry_points_match_explicit_scalar_kernel() {
+        // Whatever dispatch level is active (env-dependent in CI), the
+        // Mat entry points must agree bit-for-bit with an explicit
+        // scalar-dispatch kernel call — the determinism contract.
+        let mut rng = Xoshiro256::new(7);
+        let a = Mat::random_normal(21, 13, 1.0, &mut rng);
+        let b = Mat::random_normal(13, 11, 1.0, &mut rng);
+        let mut want = Mat::zeros(21, 11);
+        let mut packs = kernels::PackBufs::default();
+        kernels::gemm_into(
+            kernels::Dispatch::Scalar,
+            false,
+            21,
+            11,
+            13,
+            a.data(),
+            13,
+            b.data(),
+            11,
+            &mut want.data,
+            11,
+            &mut packs,
+        );
+        let got = a.matmul(&b);
+        for (g, w) in got.data().iter().zip(want.data()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        // And the transposed read: t_matmul == transpose-then-matmul
+        // numerically (different packing path, same accumulation order).
+        let c = Mat::random_normal(13, 9, 1.0, &mut rng);
+        let tm = b.t_matmul(&c); // (11, 9) from (13,11)ᵀ·(13,9)
+        let via_t = b.transpose().matmul(&c);
+        for (g, w) in tm.data().iter().zip(via_t.data()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_matmuls_have_empty_or_zero_results() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        assert_eq!(a.matmul(&b).rows(), 0);
+        let c = Mat::zeros(4, 0);
+        let d = Mat::zeros(0, 3);
+        // k = 0: the product is defined and all-zero.
+        assert_eq!(c.matmul(&d), Mat::zeros(4, 3));
+        assert_eq!(a.t_matmul(&Mat::zeros(0, 2)), Mat::zeros(5, 2));
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Property tests for the `tensor::kernels` GEMM subsystem: edge-shape
+//! correctness against an f64 reference, bit-equality across SIMD
+//! dispatch levels, and bit-equality across 1/2/4 worker threads — the
+//! determinism contract DESIGN.md §kernels promises, exercised on
+//! ragged tails around every tile boundary (MR/NR/KC/MC/NC ± 1) and on
+//! empty matrices.
+//!
+//! Run under both `PAMM_SIMD=native` (default) and `PAMM_SIMD=scalar`
+//! (CI does) — the Mat-level assertions then cover both global dispatch
+//! modes, while the explicit-dispatch assertions cover the whole ladder
+//! in a single process regardless of the env var.
+
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels::{self, Dispatch, PackBufs, KC, MC, MR, NC, NR};
+use pamm::tensor::Mat;
+
+fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    Mat::random_normal(rows, cols, 1.0, &mut rng)
+}
+
+/// f64-accumulated reference product (order-insensitive up to f64
+/// rounding, which is far below the f32 comparison tolerance).
+fn naive_matmul(a: &Mat, b: &Mat) -> Vec<f32> {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for p in 0..k {
+                acc += a.get(i, p) as f64 * b.get(p, j) as f64;
+            }
+            c[i * n + j] = acc as f32;
+        }
+    }
+    c
+}
+
+fn explicit_gemm(d: Dispatch, trans_a: bool, a: &Mat, b: &Mat) -> Vec<f32> {
+    let (m, kdim) = if trans_a { (a.cols(), a.rows()) } else { (a.rows(), a.cols()) };
+    let n = b.cols();
+    assert_eq!(kdim, b.rows());
+    let mut c = vec![0f32; m * n];
+    let mut packs = PackBufs::default();
+    let lda = a.cols();
+    kernels::gemm_into(d, trans_a, m, n, kdim, a.data(), lda, b.data(), n, &mut c, n, &mut packs);
+    c
+}
+
+/// The edge-shape ladder: 1, MR−1/MR/MR+1 (= NR±… since MR = NR), a
+/// non-multiple in the middle, and KC/MC/NC crossings. Kept asymmetric
+/// so m/n/k misalignments can't mask each other.
+fn edge_dims() -> Vec<(usize, usize, usize)> {
+    vec![
+        (1, 1, 1),
+        (1, NR + 1, KC + 1),
+        (MR - 1, NR - 1, 3),
+        (MR, NR, KC),
+        (MR + 1, NR + 1, KC - 1),
+        (13, 7, 2 * KC + 3),   // k crosses two KC panels, ragged tiles
+        (MC + 1, 9, 5),        // m crosses the MC block
+        (3, NC + 1, 2),        // n crosses the NC block
+        (65, 33, 17),
+    ]
+}
+
+#[test]
+fn gemm_matches_f64_reference_on_edge_shapes() {
+    for (ix, &(m, n, k)) in edge_dims().iter().enumerate() {
+        let a = rand_mat(m, k, 100 + ix as u64);
+        let b = rand_mat(k, n, 200 + ix as u64);
+        let want = naive_matmul(&a, &b);
+        let got = a.matmul(&b);
+        assert_eq!(got.rows(), m);
+        assert_eq!(got.cols(), n);
+        for (i, (g, w)) in got.data().iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                "m={m} n={n} k={k} elem {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn t_matmul_matches_f64_reference_on_edge_shapes() {
+    for (ix, &(m, n, k)) in edge_dims().iter().enumerate() {
+        // t_matmul input is stored transposed: (k, m) with k = shared dim.
+        let at = rand_mat(k, m, 300 + ix as u64);
+        let b = rand_mat(k, n, 400 + ix as u64);
+        let want = naive_matmul(&at.transpose(), &b);
+        let got = at.t_matmul(&b);
+        for (i, (g, w)) in got.data().iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                "tn m={m} n={n} k={k} elem {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_dispatch_level_is_bit_identical_on_every_edge_shape() {
+    for (ix, &(m, n, k)) in edge_dims().iter().enumerate() {
+        let a = rand_mat(m, k, 500 + ix as u64);
+        let b = rand_mat(k, n, 600 + ix as u64);
+        let at = rand_mat(k, m, 700 + ix as u64);
+        for trans_a in [false, true] {
+            let lhs = if trans_a { &at } else { &a };
+            let base = explicit_gemm(Dispatch::Scalar, trans_a, lhs, &b);
+            for d in [Dispatch::Sse2, Dispatch::Avx2, Dispatch::native()] {
+                if !d.available() {
+                    continue;
+                }
+                let got = explicit_gemm(d, trans_a, lhs, &b);
+                for (i, (g, w)) in got.iter().zip(&base).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "{} vs scalar: m={m} n={n} k={k} trans={trans_a} elem {i}",
+                        d.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_count_is_bit_invariant_on_edge_shapes() {
+    for (ix, &(m, n, k)) in edge_dims().iter().enumerate() {
+        let a = rand_mat(m, k, 800 + ix as u64);
+        let b = rand_mat(k, n, 900 + ix as u64);
+        let at = rand_mat(k, m, 950 + ix as u64);
+        let serial_nn = a.matmul(&b);
+        let serial_tn = at.t_matmul(&b);
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads).with_min_chunk(1);
+            assert_eq!(a.matmul_with(&b, &pool), serial_nn, "nn m={m} n={n} k={k} t={threads}");
+            assert_eq!(
+                at.matmul_tn_with(&b, &pool),
+                serial_tn,
+                "tn m={m} n={n} k={k} t={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn empty_matrices_are_handled() {
+    let e05 = Mat::zeros(0, 5);
+    let e53 = Mat::zeros(5, 3);
+    assert_eq!(e05.matmul(&e53).rows(), 0);
+    assert_eq!(Mat::zeros(4, 0).matmul(&Mat::zeros(0, 3)), Mat::zeros(4, 3));
+    assert_eq!(e05.t_matmul(&Mat::zeros(0, 7)), Mat::zeros(5, 7));
+    let pool = Pool::new(2).with_min_chunk(1);
+    assert_eq!(e05.matmul_with(&e53, &pool).rows(), 0);
+    assert_eq!(e05.matmul_tn_with(&Mat::zeros(0, 7), &pool), Mat::zeros(5, 7));
+}
+
+#[test]
+fn mat_routing_agrees_with_explicit_active_dispatch() {
+    // Mat::matmul must be exactly gemm(active) — i.e. the Mat layer adds
+    // no numerical behavior of its own, under whatever PAMM_SIMD says.
+    let a = rand_mat(33, 29, 42);
+    let b = rand_mat(29, 21, 43);
+    let via_mat = a.matmul(&b);
+    let explicit = explicit_gemm(kernels::active(), false, &a, &b);
+    for (g, w) in via_mat.data().iter().zip(&explicit) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+}
