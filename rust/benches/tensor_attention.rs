@@ -1,0 +1,152 @@
+//! Bench: the native attention subsystem — naive materialized-scores
+//! baseline vs the flash tile walk vs the PAMM-fused path — per shape ×
+//! dispatch level × thread count (the acceptance trail for the
+//! attention subsystem: `benchmarks/BENCH_tensor_attention.json` →
+//! BENCHMARKS.md §tensor_attention).
+//!
+//! Ops are dispatch-tagged (`flash[avx2]`, `fused_pamm[scalar]`, …) via
+//! explicit-dispatch entry points (`flash_attention_on`,
+//! `attend_compressed_on`), so no process-global `kernels::force` state
+//! is involved. Entries carry GFLOP/s (`AttnShape::flops`, causal),
+//! and the fused rows attach their **measured** peak transient bytes
+//! (`memory::MemoryTracker`) — each (level, threads) cell runs on a
+//! fresh pool so the cold per-worker scratch growth is what gets
+//! measured. `benchx` resolves speedup-vs-serial and speedup-vs-scalar
+//! at flush, as with the `tensor_kernels` suite.
+//!
+//! Run: `cargo bench --bench tensor_attention` (PAMM_BENCH_QUICK=1 for
+//! CI); render with `pamm bench-report`.
+
+use std::time::Duration;
+
+use pamm::attention::{self, AttnShape};
+use pamm::benchx::{BenchOpts, BenchSink, Suite};
+use pamm::memory::{fmt_bytes, MemoryTracker};
+use pamm::pamm as pammc;
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels::Dispatch;
+use pamm::tensor::Mat;
+
+fn opts() -> BenchOpts {
+    if std::env::var("PAMM_BENCH_QUICK").is_ok() {
+        BenchOpts { warmup_iters: 0, min_iters: 1, max_iters: 5, max_total: Duration::from_secs(2) }
+    } else {
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 12,
+            max_total: Duration::from_secs(10),
+        }
+    }
+}
+
+fn main() {
+    // (batch, heads, seq, head_dim, generators k) — causal, the LM hot
+    // path; seq sweeps across the Br/Bc tile boundary regimes.
+    let shapes: &[(usize, usize, usize, usize, usize)] =
+        &[(1, 4, 256, 64, 32), (2, 4, 512, 64, 64)];
+    let native = Dispatch::native();
+    let threads: &[usize] = &[1, 2, 4];
+    let mut sink = BenchSink::new("tensor_attention");
+
+    println!(
+        "tensor_attention: native dispatch = {} (tiles Br={} Bc={})",
+        native.name(),
+        attention::BR,
+        attention::BC
+    );
+
+    for &(b, h, l, d, k) in shapes {
+        let shape = AttnShape::new(b, h, l, d, true);
+        let shape_s = format!("b={b} h={h} l={l} d={d} k={k}");
+        let flops = shape.flops();
+        let dm = shape.d_model();
+        let mut rng = Xoshiro256::new(0xA77E);
+        let x = Mat::random_normal(shape.tokens(), dm, 1.0, &mut rng);
+        let wq = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let wk = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let wv = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let idx = pammc::sample_generators(&mut rng, shape.tokens(), k);
+        let comp = pammc::compress(&x, &idx, Eps::Inf);
+
+        // Materialized Q/K/V for the dense attention rows (built once —
+        // these rows time attention proper; projection timing lives in
+        // the pamm_ops / tensor_kernels suites).
+        let q = attention::split_heads(&x.matmul(&wq), &shape);
+        let kk = attention::split_heads(&x.matmul(&wk), &shape);
+        let v = attention::split_heads(&x.matmul(&wv), &shape);
+
+        let mut suite = Suite::with_opts(&format!("tensor_attention {shape_s}"), opts());
+        suite.header();
+
+        let r = suite
+            .bench("attn_naive t=1", || {
+                std::hint::black_box(attention::naive_attention(&q, &kk, &v, &shape));
+            })
+            .clone();
+        sink.record_flops("attn_naive", &shape_s, 1, &r, flops);
+
+        // Dense flash + fused: scalar serial baseline, then the native
+        // level across the thread sweep (mirrors tensor_kernels).
+        let mut plan: Vec<(Dispatch, usize)> = vec![(Dispatch::Scalar, 1)];
+        if native != Dispatch::Scalar {
+            plan.extend(threads.iter().map(|&t| (native, t)));
+        }
+        for &(disp, t) in &plan {
+            let tag = disp.name();
+            let pool = Pool::new(t);
+            let r = suite
+                .bench(&format!("flash[{tag}] t={t}"), || {
+                    std::hint::black_box(attention::flash_attention_on(
+                        disp, &q, &kk, &v, &shape, &pool,
+                    ));
+                })
+                .clone();
+            sink.record_flops(&format!("flash[{tag}]"), &shape_s, t, &r, flops);
+
+            let fused_pool = Pool::new(t);
+            let r = suite
+                .bench(&format!("fused_pamm[{tag}] t={t}"), || {
+                    std::hint::black_box(attention::attend_compressed_on(
+                        disp, &comp, &wq, &wk, &wv, &shape, &fused_pool, None,
+                    ));
+                })
+                .clone();
+            sink.record_flops(&format!("fused_pamm[{tag}]"), &shape_s, t, &r, flops);
+            // Cold peak for the annotation: a fresh pool AND a fresh
+            // caller thread — at t=1 the task grid runs inline on the
+            // caller, whose TLS the projections above already warmed,
+            // so only a scoped thread observes the real scratch growth.
+            let tracker = MemoryTracker::new();
+            std::thread::scope(|sc| {
+                sc.spawn(|| {
+                    let cold = Pool::new(t);
+                    attention::attend_compressed_on(
+                        disp, &comp, &wq, &wk, &wv, &shape, &cold, Some(&tracker),
+                    );
+                });
+            });
+            sink.annotate_peak_bytes(tracker.peak());
+        }
+
+        if let Some(sp) = suite.ratio(
+            &format!("flash[{}] t=1", native.name()),
+            "attn_naive t=1",
+        ) {
+            println!("  flash vs naive (single thread, {}): {sp:.2}x", native.name());
+        }
+        println!(
+            "  materialized Q/K/V set: {}  (the bytes the fused path never allocates)",
+            fmt_bytes(3 * shape.tensor_bytes())
+        );
+    }
+
+    match sink.flush() {
+        Ok(path) => {
+            println!("\npersisted {} entries to {}", sink.entries().len(), path.display())
+        }
+        Err(e) => eprintln!("bench persistence failed: {e}"),
+    }
+}

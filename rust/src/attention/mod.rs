@@ -1,0 +1,805 @@
+//! Native fused flash-attention: tiled online-softmax forward that can
+//! consume PAMM-compressed Q/K/V without ever materializing the full
+//! projections.
+//!
+//! The paper's composability claim — "PAMM is fully composable with
+//! efficient attention techniques such as FlashAttention" — existed in
+//! this repo only as an XLA artifact pair diffed in
+//! `experiments::kernels`. This module is the native realization: a
+//! flash-style forward whose per-tile `Q·Kᵀ` and `P·V` contractions
+//! route through the `tensor::kernels` microkernel (scalar→sse2→avx2,
+//! no FMA), so the bit-identity ladder extends from GEMM to attention,
+//! plus a fused entry point that produces Q/K/V strips on the fly from
+//! a [`Compressed`] representation.
+//!
+//! # Tiling scheme
+//!
+//! Per (batch, head) task, the query dimension is walked in `BR`-row
+//! tiles and, for each, the KV sequence in `BC`-row tiles:
+//!
+//! ```text
+//! for i0 in seq by BR:                  // query tile, acc/m/l reset
+//!   build Q strip (BR × d, pre-scaled by 1/√d)
+//!   for j0 in kv_end(i0) by BC:         // kv tile walk
+//!     Kᵀ panel (d × BC): dense transposes straight from the K slab
+//!       and reads V in place; fused gather-scales K/V strips first
+//!     S  = Qs·Kᵀ            (microkernel GEMM, zeroed tile)
+//!     mask S where j > i    (causal boundary tiles only)
+//!     online-softmax update (m, l, acc scaled by exp(m_prev − m_new))
+//!     acc += P·V            (microkernel GEMM, accumulating)
+//!   out rows = acc / l
+//! ```
+//!
+//! Tile sizes ride the kernel's cache blocking: with `BR = BC = 64` and
+//! head_dim ≤ 128, the live strips (Q, K, V, Kᵀ, S, acc ≈ 6·64·d·4 B)
+//! stay inside L2 next to the kernel's packed panels, the S tile is
+//! 16 KiB, and one KV strip packs into KC×NR panels that stay
+//! L1-resident — the same budget reasoning as `tensor::kernels` MC/KC.
+//! Causal walks skip KV tiles entirely above the diagonal (they
+//! contribute exactly nothing: `exp(−1e30 − m) == 0` in f32).
+//!
+//! # Online-softmax recurrence
+//!
+//! The FlashAttention-2 form, matching the Pallas kernel
+//! (`python/compile/kernels/flash_attention.py`) statement for
+//! statement: `m_new = max(m, max_j S)`, `P = exp(S − m_new)`,
+//! `corr = exp(m − m_new)`, `l ← l·corr + Σ P`, `acc ← acc·corr + P·V`.
+//! All softmax arithmetic is portable scalar Rust; the only SIMD-level-
+//! dependent work is inside the two tile GEMMs, which are bit-identical
+//! across the dispatch ladder — therefore so is the whole forward.
+//!
+//! # Determinism contract
+//!
+//! * **Thread count**: parallelism only partitions the (batch·head)
+//!   task grid (the attention analogue of the partition-only-M/N rule —
+//!   the softmax/contraction dims are never split); each task's tile
+//!   walk is a fixed serial order, and slabs are stitched by
+//!   [`Pool::map_chunks_flat`] offsets. Bit-identical at any `--threads`.
+//! * **Dispatch level**: the GEMM contract (no FMA, fixed accumulation
+//!   order) plus scalar softmax gives `scalar == sse2 == avx2` bitwise.
+//!
+//! Both are property-tested on ragged shapes in
+//! `rust/tests/prop_attention.rs`.
+//!
+//! # PAMM-fused Q/K/V
+//!
+//! [`pamm_qkv_attention`] takes the projection input `x`, the three
+//! weight matrices and a compression budget, and never materializes
+//! `Q = x·Wq` (nor K, V). Instead it uses
+//! `Ã·W = diag(α)·1_f·(C·W)`: project the k generators once
+//! (`G = C·W`, via [`Compressed::project_generators`]), then every
+//! Q/K/V tile row is the gather-scale `α_i · G[f(i)][cols_of_head]`,
+//! built directly into the per-thread tile scratch
+//! (`tensor::kernels::AttnScratch`, riding the same `Workspace` TLS as
+//! the GEMM packing buffers). Peak transient memory is
+//! per-thread tile scratch × workers + the compressed-domain state —
+//! measured, not modeled, via [`crate::memory::MemoryTracker`] and
+//! bounded by [`fused_peak_bound`].
+
+use crate::memory::MemoryTracker;
+use crate::pamm::{self, Compressed, Eps};
+use crate::poolx::{self, Pool};
+use crate::tensor::kernels::{self, Dispatch, Workspace};
+use crate::tensor::{dot, Mat};
+
+/// Query-tile rows per online-softmax pass.
+pub const BR: usize = 64;
+/// KV-tile rows per inner walk step.
+pub const BC: usize = 64;
+
+/// Masked-score sentinel: finite (so `m − m_new` never forms NaN) yet
+/// low enough that `exp(S − m_new)` underflows to exactly `+0.0` —
+/// which is what makes skipping fully-masked KV tiles bit-identical to
+/// walking them. Same value as the Pallas kernel's `_NEG_INF`.
+const NEG_INF: f32 = -1e30;
+
+/// Geometry of one attention call. Q/K/V (and the output) are flat
+/// `f32` slices in row-major `(batch, heads, seq, head_dim)` layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnShape {
+    pub batch: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub head_dim: usize,
+    pub causal: bool,
+}
+
+impl AttnShape {
+    pub fn new(batch: usize, heads: usize, seq: usize, head_dim: usize, causal: bool) -> Self {
+        Self { batch, heads, seq, head_dim, causal }
+    }
+
+    /// Total token rows (`batch · seq`) — the b of the PAMM papers.
+    pub fn tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+
+    /// Width of the projected activation (`heads · head_dim`).
+    pub fn d_model(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Elements of one (batch, heads, seq, head_dim) tensor.
+    pub fn qkv_len(&self) -> usize {
+        self.batch * self.heads * self.seq * self.head_dim
+    }
+
+    /// Bytes of ONE materialized Q/K/V tensor (×3 for all of them) —
+    /// the figure the fused path's measured peak is compared against.
+    pub fn tensor_bytes(&self) -> usize {
+        self.qkv_len() * 4
+    }
+
+    /// Semantic flop count of the forward (`Q·Kᵀ` + `P·V`, 2 flops per
+    /// MAC); the causal count sums the per-row unmasked lengths.
+    pub fn flops(&self) -> f64 {
+        let (b, h, l, d) = (
+            self.batch as f64,
+            self.heads as f64,
+            self.seq as f64,
+            self.head_dim as f64,
+        );
+        if self.causal {
+            2.0 * b * h * d * l * (l + 1.0)
+        } else {
+            4.0 * b * h * d * l * l
+        }
+    }
+
+    fn validate(&self) {
+        assert!(self.head_dim >= 1, "attention: head_dim must be ≥ 1");
+        assert!(
+            self.head_dim <= kernels::NC,
+            "attention: head_dim {} above the kernel NC block {}",
+            self.head_dim,
+            kernels::NC
+        );
+    }
+}
+
+/// Where one head's Q/K/V tile rows come from.
+enum HeadSrc<'a> {
+    /// Materialized `(seq × d)` slabs (the plain flash path).
+    Dense { q: &'a [f32], k: &'a [f32], v: &'a [f32] },
+    /// PAMM-compressed: row `i` of a strip is the gather-scale
+    /// `α_t · G[f(t)][col0..col0+d]` with `t = tok0 + i` — the full
+    /// projection never exists.
+    Pamm {
+        gq: &'a Mat,
+        gk: &'a Mat,
+        gv: &'a Mat,
+        alpha: &'a [f32],
+        assign: &'a [u32],
+        /// First projected column of this head.
+        col0: usize,
+        /// First token row of this batch item.
+        tok0: usize,
+    },
+}
+
+/// Copy rows `[i0, i0+rows)` of a `(seq × d)` slab into `dst`,
+/// multiplying by `scale` (1.0 for K/V, 1/√d for Q).
+fn strip_dense(dst: &mut [f32], slab: &[f32], i0: usize, rows: usize, d: usize, scale: f32) {
+    for r in 0..rows {
+        let src = &slab[(i0 + r) * d..(i0 + r + 1) * d];
+        let out = &mut dst[r * d..(r + 1) * d];
+        if scale == 1.0 {
+            out.copy_from_slice(src);
+        } else {
+            for (o, &s) in out.iter_mut().zip(src) {
+                *o = s * scale;
+            }
+        }
+    }
+}
+
+/// Build rows `[i0, i0+rows)` of a compressed head strip into `dst`:
+/// `α_t · scale · G[f(t)][col0..col0+d]`; dropped rows (α = 0) are zero,
+/// exactly like `Compressed::reconstruct`.
+#[allow(clippy::too_many_arguments)]
+fn strip_pamm(
+    dst: &mut [f32],
+    g: &Mat,
+    alpha: &[f32],
+    assign: &[u32],
+    tok0: usize,
+    col0: usize,
+    i0: usize,
+    rows: usize,
+    d: usize,
+    scale: f32,
+) {
+    for r in 0..rows {
+        let t = tok0 + i0 + r;
+        let out = &mut dst[r * d..(r + 1) * d];
+        let a = alpha[t];
+        if a == 0.0 {
+            out.fill(0.0);
+        } else {
+            let gs = a * scale;
+            let grow = &g.row(assign[t] as usize)[col0..col0 + d];
+            for (o, &gv) in out.iter_mut().zip(grow) {
+                *o = gs * gv;
+            }
+        }
+    }
+}
+
+/// One (batch, head) slab: the full tile walk of the module docs.
+/// Serial leaf computation — all parallelism lives one level up on the
+/// task grid, which is exactly why thread count cannot change any
+/// per-element order here.
+fn attend_head(
+    d: Dispatch,
+    src: &HeadSrc<'_>,
+    seq: usize,
+    dh: usize,
+    causal: bool,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), seq * dh);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let Workspace { packs, attn, .. } = ws;
+    attn.ensure(BR.min(seq.max(1)), BC.min(seq.max(1)), dh);
+
+    for i0 in (0..seq).step_by(BR) {
+        let br = BR.min(seq - i0);
+        match src {
+            HeadSrc::Dense { q, .. } => strip_dense(&mut attn.qs, q, i0, br, dh, scale),
+            HeadSrc::Pamm { gq, alpha, assign, col0, tok0, .. } => {
+                strip_pamm(&mut attn.qs, gq, alpha, assign, *tok0, *col0, i0, br, dh, scale)
+            }
+        }
+        attn.m[..br].fill(NEG_INF);
+        attn.l[..br].fill(0.0);
+        attn.acc[..br * dh].fill(0.0);
+
+        // Causal: the last KV tile that can hold an unmasked column for
+        // this query tile is the one containing row i0+br−1; tiles
+        // beyond it are fully masked and contribute exactly nothing.
+        let ntiles = if causal { (i0 + br).div_ceil(BC) } else { seq.div_ceil(BC) };
+        for jt in 0..ntiles {
+            let j0 = jt * BC;
+            let bc = BC.min(seq - j0);
+            // Kᵀ panel (d × bc): the GEMM B operand of S = Qs·Kᵀ. The
+            // dense path transposes straight from the K slab (and will
+            // read V in place below) — the strip copies exist for the
+            // gather-scale of the compressed path only.
+            match src {
+                HeadSrc::Dense { k, .. } => {
+                    for c in 0..dh {
+                        for r in 0..bc {
+                            attn.kt[c * bc + r] = k[(j0 + r) * dh + c];
+                        }
+                    }
+                }
+                HeadSrc::Pamm { gk, gv, alpha, assign, col0, tok0, .. } => {
+                    strip_pamm(&mut attn.ks, gk, alpha, assign, *tok0, *col0, j0, bc, dh, 1.0);
+                    strip_pamm(&mut attn.vs, gv, alpha, assign, *tok0, *col0, j0, bc, dh, 1.0);
+                    for c in 0..dh {
+                        for r in 0..bc {
+                            attn.kt[c * bc + r] = attn.ks[r * dh + c];
+                        }
+                    }
+                }
+            }
+            attn.s[..br * bc].fill(0.0);
+            kernels::gemm_into(
+                d,
+                false,
+                br,
+                bc,
+                dh,
+                &attn.qs[..br * dh],
+                dh,
+                &attn.kt[..dh * bc],
+                bc,
+                &mut attn.s[..br * bc],
+                bc,
+                packs,
+            );
+            if causal && j0 + bc > i0 + 1 {
+                for r in 0..br {
+                    let first_masked = (i0 + r + 1).saturating_sub(j0);
+                    if first_masked < bc {
+                        attn.s[r * bc + first_masked..(r + 1) * bc].fill(NEG_INF);
+                    }
+                }
+            }
+            // Online-softmax update (scalar, fixed order — see docs).
+            for r in 0..br {
+                let srow = &mut attn.s[r * bc..(r + 1) * bc];
+                let mut mx = NEG_INF;
+                for &sv in srow.iter() {
+                    mx = mx.max(sv);
+                }
+                let m_new = attn.m[r].max(mx);
+                let corr = (attn.m[r] - m_new).exp();
+                let mut psum = 0.0f32;
+                for sv in srow.iter_mut() {
+                    *sv = (*sv - m_new).exp();
+                    psum += *sv;
+                }
+                attn.l[r] = attn.l[r] * corr + psum;
+                attn.m[r] = m_new;
+                if corr != 1.0 {
+                    for av in &mut attn.acc[r * dh..(r + 1) * dh] {
+                        *av *= corr;
+                    }
+                }
+            }
+            // acc += P·V through the same microkernel. Dense reads the
+            // V slab in place; the compressed path uses its built strip.
+            let vsrc: &[f32] = match src {
+                HeadSrc::Dense { v, .. } => &v[j0 * dh..(j0 + bc) * dh],
+                HeadSrc::Pamm { .. } => &attn.vs[..bc * dh],
+            };
+            kernels::gemm_into(
+                d,
+                false,
+                br,
+                dh,
+                bc,
+                &attn.s[..br * bc],
+                bc,
+                vsrc,
+                dh,
+                &mut attn.acc[..br * dh],
+                dh,
+                packs,
+            );
+        }
+        for r in 0..br {
+            let denom = attn.l[r].max(1e-30);
+            let orow = &mut out[(i0 + r) * dh..(i0 + r + 1) * dh];
+            for (o, &av) in orow.iter_mut().zip(&attn.acc[r * dh..(r + 1) * dh]) {
+                *o = av / denom;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense flash entry points
+// ---------------------------------------------------------------------------
+
+/// Flash attention over materialized Q/K/V on the process-wide pool.
+pub fn flash_attention(q: &[f32], k: &[f32], v: &[f32], shape: &AttnShape) -> Vec<f32> {
+    flash_attention_with(q, k, v, shape, poolx::global())
+}
+
+/// [`flash_attention`] on an explicit pool (the bench thread sweeps).
+pub fn flash_attention_with(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: &AttnShape,
+    pool: &Pool,
+) -> Vec<f32> {
+    flash_attention_on(kernels::active(), q, k, v, shape, pool)
+}
+
+/// [`flash_attention`] on an explicit dispatch level — what the
+/// property tests use to sweep the ladder without touching the
+/// process-wide `kernels::force` state.
+pub fn flash_attention_on(
+    d: Dispatch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: &AttnShape,
+    pool: &Pool,
+) -> Vec<f32> {
+    shape.validate();
+    let n = shape.qkv_len();
+    assert_eq!(q.len(), n, "attention: q length vs shape");
+    assert_eq!(k.len(), n, "attention: k length vs shape");
+    assert_eq!(v.len(), n, "attention: v length vs shape");
+    let (sq, dh) = (shape.seq, shape.head_dim);
+    let slab = sq * dh;
+    let tasks = shape.batch * shape.heads;
+    pool.for_tasks().map_chunks_flat(tasks, slab, |s, e, out| {
+        kernels::with_workspace(|ws| {
+            for t in s..e {
+                let off = t * slab;
+                let src = HeadSrc::Dense {
+                    q: &q[off..off + slab],
+                    k: &k[off..off + slab],
+                    v: &v[off..off + slab],
+                };
+                attend_head(
+                    d,
+                    &src,
+                    sq,
+                    dh,
+                    shape.causal,
+                    ws,
+                    &mut out[(t - s) * slab..(t - s + 1) * slab],
+                );
+            }
+        })
+    })
+}
+
+// ---------------------------------------------------------------------------
+// PAMM-fused entry points
+// ---------------------------------------------------------------------------
+
+/// Fused PAMM → attention forward on the process-wide pool: compress
+/// the projection input `x` under the given generator budget, then run
+/// the whole attention block off the compressed representation — full
+/// Q/K/V activations are never resident. Returns the [`Compressed`]
+/// (the activation the training path saves for backward) alongside the
+/// attention output.
+pub fn pamm_qkv_attention(
+    x: &Mat,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    gen_idx: &[usize],
+    eps: Eps,
+    shape: &AttnShape,
+) -> (Compressed, Vec<f32>) {
+    pamm_qkv_attention_with(x, wq, wk, wv, gen_idx, eps, shape, poolx::global())
+}
+
+/// [`pamm_qkv_attention`] on an explicit pool.
+#[allow(clippy::too_many_arguments)]
+pub fn pamm_qkv_attention_with(
+    x: &Mat,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    gen_idx: &[usize],
+    eps: Eps,
+    shape: &AttnShape,
+    pool: &Pool,
+) -> (Compressed, Vec<f32>) {
+    pamm_qkv_attention_tracked(x, wq, wk, wv, gen_idx, eps, shape, pool, None)
+}
+
+/// [`pamm_qkv_attention`] with measured-peak accounting: every
+/// transient the fused path allocates (compressed state, projected
+/// generators, per-worker tile scratch growth) is reported to
+/// `tracker`; the returned output buffer — the caller's product — is
+/// not. See [`fused_peak_bound`] for the ceiling the measurement obeys.
+#[allow(clippy::too_many_arguments)]
+pub fn pamm_qkv_attention_tracked(
+    x: &Mat,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    gen_idx: &[usize],
+    eps: Eps,
+    shape: &AttnShape,
+    pool: &Pool,
+    tracker: Option<&MemoryTracker>,
+) -> (Compressed, Vec<f32>) {
+    assert_eq!(x.rows(), shape.tokens(), "attention: x rows vs batch·seq");
+    let comp = pamm::compress_with(x, gen_idx, eps, pool);
+    let out = attend_compressed_on(kernels::active(), &comp, wq, wk, wv, shape, pool, tracker);
+    (comp, out)
+}
+
+/// Attend straight off an existing [`Compressed`] representation, on
+/// the process-wide pool (active dispatch, no tracking).
+pub fn attend_compressed(
+    comp: &Compressed,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    shape: &AttnShape,
+) -> Vec<f32> {
+    attend_compressed_on(kernels::active(), comp, wq, wk, wv, shape, poolx::global(), None)
+}
+
+/// The fused core: explicit dispatch level, pool and optional tracker.
+///
+/// Projects the generators once per weight (`G = C·W`, k rows), then
+/// walks the (batch·head) grid exactly like [`flash_attention_on`],
+/// except every Q/K/V strip is gather-scaled from G per tile inside the
+/// worker's `AttnScratch`. The accounting contract: `comp` storage and
+/// the three G matrices are alloc'd/freed around the call; per-worker
+/// scratch *growth* is charged as it happens (TLS on long-lived workers
+/// — a warm pool reports zero new bytes, so measure cold peaks on a
+/// fresh pool).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_compressed_on(
+    d: Dispatch,
+    comp: &Compressed,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    shape: &AttnShape,
+    pool: &Pool,
+    tracker: Option<&MemoryTracker>,
+) -> Vec<f32> {
+    shape.validate();
+    assert_eq!(comp.b(), shape.tokens(), "attention: compressed rows vs batch·seq");
+    let n_in = comp.generators.cols();
+    let dm = shape.d_model();
+    for (name, w) in [("wq", wq), ("wk", wk), ("wv", wv)] {
+        assert_eq!(w.rows(), n_in, "attention: {name} rows vs x width");
+        assert_eq!(w.cols(), dm, "attention: {name} cols vs heads·head_dim");
+    }
+    if let Some(t) = tracker {
+        t.alloc(comp.stored_bytes());
+    }
+    // The projections run on the caller thread and grow ITS workspace
+    // packing buffers — a real transient of the fused path, charged
+    // like the worker scratch (TLS, so only growth is new bytes).
+    let packs_before = tracker.map(|_| kernels::with_workspace(|ws| ws_bytes(ws)));
+    let gq = comp.project_generators(wq);
+    let gk = comp.project_generators(wk);
+    let gv = comp.project_generators(wv);
+    let gbytes = 3 * comp.k() * dm * 4;
+    if let Some(t) = tracker {
+        t.alloc(gbytes);
+        if let Some(before) = packs_before {
+            t.alloc(kernels::with_workspace(|ws| ws_bytes(ws)).saturating_sub(before));
+        }
+    }
+
+    let (sq, dh) = (shape.seq, shape.head_dim);
+    let slab = sq * dh;
+    let tasks = shape.batch * shape.heads;
+    let out = pool.for_tasks().map_chunks_flat(tasks, slab, |s, e, out| {
+        kernels::with_workspace(|ws| {
+            let before = ws_bytes(ws);
+            for t in s..e {
+                let (b, h) = (t / shape.heads, t % shape.heads);
+                let src = HeadSrc::Pamm {
+                    gq: &gq,
+                    gk: &gk,
+                    gv: &gv,
+                    alpha: &comp.alpha,
+                    assign: &comp.assign,
+                    col0: h * dh,
+                    tok0: b * sq,
+                };
+                attend_head(
+                    d,
+                    &src,
+                    sq,
+                    dh,
+                    shape.causal,
+                    ws,
+                    &mut out[(t - s) * slab..(t - s + 1) * slab],
+                );
+            }
+            if let Some(tr) = tracker {
+                tr.alloc(ws_bytes(ws).saturating_sub(before));
+            }
+        })
+    });
+    if let Some(t) = tracker {
+        t.free(gbytes);
+        t.free(comp.stored_bytes());
+    }
+    out
+}
+
+/// The workspace bytes the fused path charges per worker: attention
+/// tile scratch + the kernel packing panels it can grow.
+fn ws_bytes(ws: &Workspace) -> usize {
+    ws.attn.bytes() + ws.packs.capacity_bytes()
+}
+
+// ---------------------------------------------------------------------------
+// Memory model
+// ---------------------------------------------------------------------------
+
+/// Per-thread tile-scratch ceiling of one attention tile walk, in
+/// bytes: the `AttnScratch` buffers at full (BR, BC, d) tiles plus the
+/// packing panels the two per-tile GEMMs can reserve (`Q·Kᵀ` packs
+/// BR×kc / kc×BC-strips with kc = min(d, KC); `P·V` packs BR×BC /
+/// BC-deep d-wide strips). Valid for head_dim ≤ NC (asserted at every
+/// entry point). The model counts capacities, which is sound because
+/// both the scratch (`fit`) and the packing buffers (`zero_fit`) grow
+/// with `reserve_exact` — never amortized doubling.
+pub fn tile_scratch_bytes(head_dim: usize) -> usize {
+    use kernels::{KC, MR, NR};
+    let d = head_dim;
+    let tiles = BR * d        // qs
+        + BC * d              // ks
+        + BC * d              // vs
+        + d * BC              // kt
+        + BR * BC             // s
+        + BR * d              // acc
+        + 2 * BR;             // m, l
+    let dp = d.div_ceil(NR) * NR; // zero-padded strip width of the P·V pack
+    let kc = d.min(KC); //          deepest k panel of the Q·Kᵀ pack
+    let pa = BR.div_ceil(MR) * MR * kc.max(BC);
+    let pb = BC.div_ceil(NR) * NR * kc.max(dp);
+    4 * (tiles + pa + pb)
+}
+
+/// Ceiling for the *tracked* peak of [`pamm_qkv_attention_tracked`]:
+/// per-worker tile scratch × thread count, plus the compressed-domain
+/// state (stored compression + the three projected generator matrices,
+/// k rows each), plus the caller-thread packing panels the `G = C·W`
+/// projections reserve. The acceptance test asserts
+/// `measured peak ≤ this bound < materialized Q/K/V`.
+pub fn fused_peak_bound(comp: &Compressed, shape: &AttnShape, threads: usize) -> usize {
+    use kernels::{KC, MC, MR, NC, NR};
+    let n_in = comp.generators.cols();
+    let dm = shape.d_model();
+    // G = C·W packing: pa holds ≤ min(k, MC) MR-padded rows × one KC
+    // panel of n_in; pb holds ≤ min(dm, NC) NR-padded columns × the
+    // same panel depth (exact capacities — see `tile_scratch_bytes`).
+    let kc = n_in.min(KC);
+    let proj_pa = comp.k().min(MC).div_ceil(MR) * MR * kc;
+    let proj_pb = dm.min(NC).div_ceil(NR) * NR * kc;
+    tile_scratch_bytes(shape.head_dim) * threads
+        + comp.stored_bytes()
+        + 3 * comp.k() * dm * 4
+        + 4 * (proj_pa + proj_pb)
+}
+
+// ---------------------------------------------------------------------------
+// Layout + reference helpers
+// ---------------------------------------------------------------------------
+
+/// Reshape a `(tokens × d_model)` projection into the flat
+/// `(batch, heads, seq, head_dim)` slab layout the attention entry
+/// points take — the materialize-then-attend path of the equivalence
+/// tests and the experiment baselines.
+pub fn split_heads(m: &Mat, shape: &AttnShape) -> Vec<f32> {
+    assert_eq!(m.rows(), shape.tokens(), "split_heads: rows vs batch·seq");
+    assert_eq!(m.cols(), shape.d_model(), "split_heads: cols vs heads·head_dim");
+    let (h, l, d) = (shape.heads, shape.seq, shape.head_dim);
+    let mut out = vec![0f32; shape.qkv_len()];
+    for b in 0..shape.batch {
+        for i in 0..l {
+            let row = m.row(b * l + i);
+            for hh in 0..h {
+                out[((b * h + hh) * l + i) * d..((b * h + hh) * l + i + 1) * d]
+                    .copy_from_slice(&row[hh * d..(hh + 1) * d]);
+            }
+        }
+    }
+    out
+}
+
+/// Materialized-scores reference attention: one `(seq × seq)` score
+/// matrix per head, plain f32 softmax. This is the *baseline* the
+/// experiment table and bench time against (the memory the flash walk
+/// erases); the test oracle is an independent f64 implementation in
+/// `rust/tests/prop_attention.rs`.
+pub fn naive_attention(q: &[f32], k: &[f32], v: &[f32], shape: &AttnShape) -> Vec<f32> {
+    shape.validate();
+    let n = shape.qkv_len();
+    assert_eq!(q.len(), n);
+    assert_eq!(k.len(), n);
+    assert_eq!(v.len(), n);
+    let (l, d) = (shape.seq, shape.head_dim);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0f32; n];
+    let mut scores = vec![0f32; l * l];
+    for t in 0..shape.batch * shape.heads {
+        let off = t * l * d;
+        let (qh, kh, vh) = (&q[off..off + l * d], &k[off..off + l * d], &v[off..off + l * d]);
+        for i in 0..l {
+            for j in 0..l {
+                scores[i * l + j] = if shape.causal && j > i {
+                    NEG_INF
+                } else {
+                    scale * dot(&qh[i * d..(i + 1) * d], &kh[j * d..(j + 1) * d])
+                };
+            }
+        }
+        for i in 0..l {
+            let srow = &mut scores[i * l..(i + 1) * l];
+            let mx = srow.iter().fold(NEG_INF, |a, &b| a.max(b));
+            let mut sum = 0.0f32;
+            for s in srow.iter_mut() {
+                *s = (*s - mx).exp();
+                sum += *s;
+            }
+            let denom = sum.max(1e-30);
+            let orow = &mut out[off + i * d..off + (i + 1) * d];
+            for (j, &p) in srow.iter().enumerate() {
+                let pv = p / denom;
+                if pv != 0.0 {
+                    for (o, &vv) in orow.iter_mut().zip(&vh[j * d..(j + 1) * d]) {
+                        *o += pv * vv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Xoshiro256;
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut v = vec![0f32; len];
+        rng.fill_normal_f32(&mut v, 1.0);
+        v
+    }
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        Mat::random_normal(rows, cols, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn flash_matches_naive_on_small_shapes() {
+        for &(b, h, l, d, causal) in
+            &[(1usize, 1usize, 5usize, 4usize, false), (2, 2, 9, 8, true), (1, 2, BR + 1, 8, true)]
+        {
+            let shape = AttnShape::new(b, h, l, d, causal);
+            let q = rand_vec(shape.qkv_len(), 1);
+            let k = rand_vec(shape.qkv_len(), 2);
+            let v = rand_vec(shape.qkv_len(), 3);
+            let want = naive_attention(&q, &k, &v, &shape);
+            let got = flash_attention_with(&q, &k, &v, &shape, &Pool::serial());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "b={b} h={h} l={l} d={d} causal={causal} elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_materialize_then_attend() {
+        let shape = AttnShape::new(2, 2, 33, 8, true);
+        let dm = shape.d_model();
+        let x = rand_mat(shape.tokens(), dm, 10);
+        let wq = rand_mat(dm, dm, 11);
+        let wk = rand_mat(dm, dm, 12);
+        let wv = rand_mat(dm, dm, 13);
+        let mut rng = Xoshiro256::new(14);
+        let idx = pamm::sample_generators(&mut rng, shape.tokens(), 12);
+        let pool = Pool::serial();
+        let (comp, fused) =
+            pamm_qkv_attention_with(&x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, &pool);
+        // Materialize Ã, project densely, attend — must agree with the
+        // fused gather-scale path up to GEMM association rounding.
+        let xr = comp.reconstruct();
+        let q = split_heads(&xr.matmul(&wq), &shape);
+        let k = split_heads(&xr.matmul(&wk), &shape);
+        let v = split_heads(&xr.matmul(&wv), &shape);
+        let want = flash_attention_with(&q, &k, &v, &shape, &pool);
+        for (i, (g, w)) in fused.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                "elem {i}: fused {g} vs materialized {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn split_heads_layout() {
+        let shape = AttnShape::new(2, 2, 3, 2, false);
+        // m[token][col] = token·100 + col; check head hh picks cols [2hh, 2hh+2).
+        let m = Mat::from_fn(6, 4, |i, j| (i * 100 + j) as f32);
+        let s = split_heads(&m, &shape);
+        // (b=1, h=0, i=2) → token 1·3+2 = 5, cols 0..2.
+        let off = ((1 * 2 + 0) * 3 + 2) * 2;
+        assert_eq!(&s[off..off + 2], &[500.0, 501.0]);
+        // (b=0, h=1, i=1) → token 1, cols 2..4.
+        let off = ((0 * 2 + 1) * 3 + 1) * 2;
+        assert_eq!(&s[off..off + 2], &[102.0, 103.0]);
+    }
+
+    #[test]
+    fn flops_and_bounds_sanity() {
+        let sh = AttnShape::new(1, 2, 128, 32, false);
+        assert_eq!(sh.flops(), 4.0 * 2.0 * 32.0 * 128.0 * 128.0);
+        let causal = AttnShape { causal: true, ..sh };
+        assert!(causal.flops() < sh.flops());
+        assert!(tile_scratch_bytes(64) > tile_scratch_bytes(32));
+        // The scratch model is far below one materialized tensor at
+        // real sequence lengths.
+        assert!(tile_scratch_bytes(64) < AttnShape::new(1, 1, 2048, 64, true).tensor_bytes());
+    }
+}

@@ -8,7 +8,9 @@
 //!
 //! Results also persist across PRs: [`BenchSink`] appends
 //! machine-readable entries (op, shape, threads, ns/iter,
-//! speedup-vs-serial) and writes one `BENCH_<suite>.json` per suite
+//! speedup-vs-serial — plus GFLOP/s, speedup-vs-scalar and measured
+//! peak bytes where a suite records them) and writes one
+//! `BENCH_<suite>.json` per suite
 //! under `benchmarks/` (override with `PAMM_BENCH_DIR`). The [`report`]
 //! module loads every `BENCH_*.json` back and renders the committed
 //! `BENCHMARKS.md` via `pamm bench-report` — the repo's perf trajectory
@@ -226,6 +228,11 @@ pub struct BenchEntry {
     /// shape (same thread count if present, else the 1-thread scalar
     /// baseline); filled in by [`BenchSink::flush_to`].
     pub speedup_vs_scalar: Option<f64>,
+    /// Measured peak transient bytes of the op (attention's fused rows
+    /// attach their `memory::MemoryTracker` reading here), so the
+    /// persisted trail carries the memory claim next to the timing —
+    /// not just the analytic model.
+    pub peak_bytes: Option<f64>,
 }
 
 /// The `name[scalar]` twin of a dispatch-tagged op name, if `op` is
@@ -275,6 +282,7 @@ impl BenchSink {
             iters: r.iters,
             gflops: None,
             speedup_vs_scalar: None,
+            peak_bytes: None,
         });
     }
 
@@ -293,6 +301,15 @@ impl BenchSink {
         self.record(op, shape, threads, r);
         let e = self.entries.last_mut().expect("just recorded");
         e.gflops = Some(flops / e.ns_per_iter.max(1.0));
+    }
+
+    /// Attach a measured peak-bytes figure to the most recently
+    /// recorded entry (the attention suite's fused rows carry their
+    /// `MemoryTracker` reading this way).
+    pub fn annotate_peak_bytes(&mut self, bytes: usize) {
+        if let Some(e) = self.entries.last_mut() {
+            e.peak_bytes = Some(bytes as f64);
+        }
     }
 
     /// Entries recorded so far (speedups not yet resolved).
@@ -373,6 +390,9 @@ fn entry_json(e: &BenchEntry) -> Value {
     if let Some(sp) = e.speedup_vs_scalar {
         pairs.push(("speedup_vs_scalar", jsonx::num(sp)));
     }
+    if let Some(pb) = e.peak_bytes {
+        pairs.push(("peak_bytes", jsonx::num(pb)));
+    }
     jsonx::obj(pairs)
 }
 
@@ -392,6 +412,7 @@ pub fn load_file(path: impl AsRef<Path>) -> anyhow::Result<SuiteRecord> {
             iters: e.req_usize("iters")?,
             gflops: e.get("gflops").as_f64(),
             speedup_vs_scalar: e.get("speedup_vs_scalar").as_f64(),
+            peak_bytes: e.get("peak_bytes").as_f64(),
         });
     }
     Ok(SuiteRecord {
@@ -551,6 +572,31 @@ mod tests {
             .unwrap();
         assert!((avx2t.speedup_vs_scalar.unwrap() - 16.0).abs() < 1e-9, "fallback to t=1 scalar");
         assert!((avx2t.speedup_vs_serial.unwrap() - 2.0).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn peak_bytes_annotation_round_trips() {
+        let mut sink = BenchSink::new("attn_suite");
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            median: Duration::from_micros(500),
+            p10: Duration::from_micros(500),
+            p90: Duration::from_micros(500),
+            mean: Duration::from_micros(500),
+        };
+        sink.record_flops("fused_pamm[avx2]", "b=1 h=4 l=256 d=64", 1, &r, 1e6);
+        sink.annotate_peak_bytes(264_708);
+        sink.record("flash[avx2]", "b=1 h=4 l=256 d=64", 1, &r);
+
+        let dir = std::env::temp_dir().join(format!("pamm_benchx_pk_{}", std::process::id()));
+        sink.flush_to(&dir).unwrap();
+        let rec = &load_dir(&dir).unwrap()[0];
+        let fused = rec.entries.iter().find(|e| e.op == "fused_pamm[avx2]").unwrap();
+        assert_eq!(fused.peak_bytes, Some(264_708.0));
+        let flash = rec.entries.iter().find(|e| e.op == "flash[avx2]").unwrap();
+        assert!(flash.peak_bytes.is_none(), "annotation attaches to the last entry only");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -95,13 +95,17 @@ USAGE:
              [--workers N] [--grad-accum N] [--artifacts DIR] [--quiet]
   pamm finetune --task NAME [--r-inv N] [--steps N] [--seed N]
   pamm reproduce <fig3a|fig3b|table1|table2a|table2b|table3|table4|table5|
-                  table6|table7|fig4a|fig4b|fig5|fig6|fig7|all>
+                  table6|table7|fig4a|fig4b|fig5|fig6|fig7|attention|all>
                  [--quick] [--artifacts DIR] [--out DIR]
+                                      # `attention` is native-only (P9/P10):
+                                      # flash/fused throughput + measured
+                                      # peak memory, no artifacts needed
   pamm memory [--model M] [--batch N] [--seq N] [--r-inv N]
   pamm kernels [--artifacts DIR]      # validate native vs Pallas artifacts
   pamm kernels --probe                # print SIMD dispatch level, tile
-                                      # parameters, GFLOP/s spot check
-                                      # (no artifacts needed)
+                                      # parameters (GEMM + attention Br/Bc),
+                                      # GFLOP/s spot checks (no artifacts
+                                      # needed)
   pamm list [--artifacts DIR]         # list manifest artifacts
   pamm bench-report [--dir DIR] [--out FILE]
                                       # render BENCH_*.json -> BENCHMARKS.md

@@ -1,0 +1,205 @@
+//! P9/P10 — native attention throughput + measured peak memory
+//! (`pamm reproduce attention`; EXPERIMENTS.md §Perf P9–P10).
+//!
+//! Three end-to-end variants of one attention block, all starting from
+//! the same projection input `x`:
+//!
+//! * **naive** — dense `x·W{q,k,v}`, then materialized-scores softmax
+//!   (the memory worst case: 3 full Q/K/V tensors + an (L, L) score
+//!   matrix per head).
+//! * **flash** — dense projections, then the tiled online-softmax walk
+//!   (`attention::flash_attention_with`): scores never materialize,
+//!   Q/K/V still do.
+//! * **fused pamm** — `attention::pamm_qkv_attention_tracked`: compress
+//!   `x`, attend straight off the compressed representation. Q/K/V
+//!   never materialize either; peak transient bytes are *measured* via
+//!   `memory::MemoryTracker` (not the analytic `qkv_saved_bytes`
+//!   model) and printed next to the bound
+//!   `tile_bytes × threads + compressed_bytes`
+//!   (`attention::fused_peak_bound`).
+//!
+//! Native-only: needs no artifacts, runs on the process-wide pool.
+
+use anyhow::Result;
+
+use crate::attention::{self, AttnShape};
+use crate::benchx::{bench_fn, BenchOpts};
+use crate::checkpoint::write_csv;
+use crate::memory::{fmt_bytes, MemoryTracker};
+use crate::pamm::{self, Eps};
+use crate::poolx;
+use crate::rngx::Xoshiro256;
+use crate::tensor::kernels;
+use crate::tensor::Mat;
+
+fn opts(quick: bool) -> BenchOpts {
+    if quick {
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            max_total: std::time::Duration::from_secs(10),
+        }
+    } else {
+        BenchOpts {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 12,
+            max_total: std::time::Duration::from_secs(60),
+        }
+    }
+}
+
+/// The P9/P10 table: per shape, time + peak bytes + relative error of
+/// the three variants. CSV lands in `<out>/attention.csv`.
+pub fn native_table(quick: bool, out: &str) -> Result<()> {
+    // (batch, heads, seq, head_dim, generators k) — causal throughout
+    // (the LM hot path). Full shapes keep the naive baseline in
+    // fractions of a second on one core.
+    let shapes: &[(usize, usize, usize, usize, usize)] = if quick {
+        &[(1, 2, 128, 32, 16)]
+    } else {
+        &[(1, 4, 256, 64, 32), (2, 4, 512, 64, 64)]
+    };
+    let o = opts(quick);
+    let pool = poolx::global();
+    println!(
+        "native attention (threads={}, dispatch={}, tiles Br={} Bc={}):",
+        pool.threads(),
+        kernels::active().name(),
+        attention::BR,
+        attention::BC
+    );
+    println!(
+        "{:<16} {:>10} {:>12} {:>14} {:>12}",
+        "variant", "ms/iter", "tok/s", "peak bytes", "rel err"
+    );
+
+    let mut rows = Vec::new();
+    for &(b, h, l, d, k) in shapes {
+        let shape = AttnShape::new(b, h, l, d, true);
+        let dm = shape.d_model();
+        let toks = shape.tokens() as f64;
+        let mut rng = Xoshiro256::new(0xA77E);
+        let x = Mat::random_normal(shape.tokens(), dm, 1.0, &mut rng);
+        let wq = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let wk = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let wv = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let idx = pamm::sample_generators(&mut rng, shape.tokens(), k);
+        println!("--- b={b} h={h} l={l} d={d} k={k} (d_model={dm}, causal) ---");
+
+        // Dense exact output: the error reference for all variants.
+        let project = |w: &Mat| attention::split_heads(&x.matmul_with(w, pool), &shape);
+        let (q, kk, v) = (project(&wq), project(&wk), project(&wv));
+        let exact = attention::naive_attention(&q, &kk, &v, &shape);
+        let exact_norm =
+            exact.iter().map(|e| (*e as f64) * (*e as f64)).sum::<f64>().sqrt().max(1e-12);
+        let rel = |got: &[f32]| {
+            let e2: f64 = got
+                .iter()
+                .zip(&exact)
+                .map(|(g, w)| ((g - w) as f64) * ((g - w) as f64))
+                .sum();
+            e2.sqrt() / exact_norm
+        };
+
+        // Analytic resident set of the materialized paths: 3 Q/K/V
+        // tensors, plus the per-head (L, L) score matrix for naive.
+        let qkv_bytes = 3 * shape.tensor_bytes();
+        let naive_bytes = qkv_bytes + l * l * 4;
+
+        let t_naive = bench_fn("naive", &o, || {
+            let (q, kk, v) = (project(&wq), project(&wk), project(&wv));
+            std::hint::black_box(attention::naive_attention(&q, &kk, &v, &shape));
+        });
+        // The naive output IS the error reference — its rel err is 0 by
+        // definition, no recompute needed.
+        print_row("matmul+naive", &t_naive, toks, &fmt_bytes(naive_bytes), 0.0);
+        rows.push(csv_row(b, h, l, d, k, "naive", &t_naive, naive_bytes as f64, 0.0));
+
+        let t_flash = bench_fn("flash", &o, || {
+            let (q, kk, v) = (project(&wq), project(&wk), project(&wv));
+            std::hint::black_box(attention::flash_attention_with(&q, &kk, &v, &shape, pool));
+        });
+        let r_flash = rel(&attention::flash_attention_with(&q, &kk, &v, &shape, pool));
+        print_row("matmul+flash", &t_flash, toks, &fmt_bytes(qkv_bytes), r_flash);
+        rows.push(csv_row(b, h, l, d, k, "flash", &t_flash, qkv_bytes as f64, r_flash));
+
+        // Timing on the (warm) shared pool, untracked — steady state.
+        let t_fused = bench_fn("fused", &o, || {
+            std::hint::black_box(attention::pamm_qkv_attention_with(
+                &x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, pool,
+            ));
+        });
+        let (comp, fused_out) =
+            attention::pamm_qkv_attention_with(&x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, pool);
+        // Peak measurement per the P10 protocol: a fresh pool (cold
+        // worker TLS) AND a fresh caller thread (so the serial inline
+        // path is cold too) — warm reuse reports zero growth, which is
+        // the steady-state point but not the number the bound checks.
+        let tracker = MemoryTracker::new();
+        let threads = pool.threads();
+        std::thread::scope(|sc| {
+            sc.spawn(|| {
+                let cold = poolx::Pool::new(threads);
+                attention::pamm_qkv_attention_tracked(
+                    &x,
+                    &wq,
+                    &wk,
+                    &wv,
+                    &idx,
+                    Eps::Inf,
+                    &shape,
+                    &cold,
+                    Some(&tracker),
+                );
+            });
+        });
+        let peak = tracker.peak();
+        let r_fused = rel(&fused_out);
+        print_row("pamm fused", &t_fused, toks, &fmt_bytes(peak), r_fused);
+        rows.push(csv_row(b, h, l, d, k, "pamm_fused", &t_fused, peak as f64, r_fused));
+
+        let bound = attention::fused_peak_bound(&comp, &shape, threads);
+        println!(
+            "  measured fused peak {} ≤ fused_peak_bound {} (tile×threads + compressed state + projection packing) — {:.1}% of the materialized Q/K/V set",
+            fmt_bytes(peak),
+            fmt_bytes(bound),
+            100.0 * peak as f64 / qkv_bytes as f64
+        );
+        assert!(peak <= bound, "measured peak {peak} exceeds the analytic bound {bound}");
+    }
+    write_csv(
+        format!("{out}/attention.csv"),
+        "batch,heads,seq,head_dim,k,variant,ms,peak_bytes,rel_err",
+        &rows,
+    )?;
+    println!("\nshape check: fused peak stays flat in seq while the materialized QKV set grows (paper composability claim, CompAct-style).");
+    Ok(())
+}
+
+fn print_row(name: &str, r: &crate::benchx::BenchResult, toks: f64, peak: &str, rel: f64) {
+    println!(
+        "{:<16} {:>10.3} {:>12.0} {:>14} {:>12.2e}",
+        name,
+        r.median_secs() * 1e3,
+        toks / r.median_secs().max(1e-12),
+        peak,
+        rel
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn csv_row(
+    b: usize,
+    h: usize,
+    l: usize,
+    d: usize,
+    k: usize,
+    variant: &str,
+    r: &crate::benchx::BenchResult,
+    peak: f64,
+    rel: f64,
+) -> String {
+    format!("{b},{h},{l},{d},{k},{variant},{},{peak},{rel}", r.median_secs() * 1e3)
+}

@@ -17,6 +17,7 @@ use std::fmt::Write as _;
 
 use anyhow::{bail, Context, Result};
 
+use crate::attention::{self, AttnShape};
 use crate::benchx::{bench_fn, BenchOpts};
 use crate::pamm::{self, Eps};
 use crate::runtime::{ArtifactMeta, Engine, HostTensor};
@@ -43,10 +44,12 @@ fn max_diff(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// `pamm kernels --probe`: report the detected SIMD dispatch ladder,
-/// the tile/block parameters, and a one-shot single-thread GFLOP/s spot
-/// check of every available level on a 512³ `A·B` — so the provenance
-/// of a benchmark JSON ("which kernel actually ran on this host") is
-/// one command away. Pure native compute: needs no artifacts.
+/// the tile/block parameters, a one-shot single-thread GFLOP/s spot
+/// check of every available level on a 512³ `A·B`, and the attention
+/// subsystem's tile parameters plus a spot flash-attention GFLOP/s per
+/// level — so the provenance of a benchmark JSON ("which kernel
+/// actually ran on this host") is one command away. Pure native
+/// compute: needs no artifacts.
 pub fn probe() -> String {
     let mut out = String::new();
     let env = std::env::var("PAMM_SIMD").ok();
@@ -118,6 +121,60 @@ pub fn probe() -> String {
             d.name(),
             format!("{:.2?}", r.median),
             flops / ns.max(1.0)
+        );
+    }
+
+    // Attention tile parameters + spot GFLOP/s (same ladder, single
+    // thread) — the provenance line for BENCH_tensor_attention.json.
+    let threads = crate::poolx::global().threads();
+    let shape = AttnShape::new(1, 4, 256, 64, false);
+    let tasks = shape.batch * shape.heads;
+    let _ = writeln!(
+        out,
+        "  attention: tiles Br={} Bc={}  grid: (batch·head) tasks, min-chunk {} → {} head(s) per task at {} thread(s)",
+        attention::BR,
+        attention::BC,
+        crate::poolx::TASK_MIN_CHUNK,
+        tasks.div_ceil(tasks.min(threads).max(1)),
+        threads
+    );
+    let aflops = shape.flops();
+    let total = shape.qkv_len();
+    let mk_qkv = |rng: &mut Xoshiro256| {
+        let mut v = vec![0f32; total];
+        rng.fill_normal_f32(&mut v, 1.0);
+        v
+    };
+    let (q, k, v) = (mk_qkv(&mut rng), mk_qkv(&mut rng), mk_qkv(&mut rng));
+    let serial = crate::poolx::Pool::serial();
+    let _ = writeln!(
+        out,
+        "  spot check: flash fwd b={} h={} l={} d={}, single thread",
+        shape.batch, shape.heads, shape.seq, shape.head_dim
+    );
+    let mut scalar_ns = None;
+    for d in LADDER {
+        if !d.available() {
+            continue;
+        }
+        let r = bench_fn(d.name(), &opts, || {
+            std::hint::black_box(attention::flash_attention_on(d, &q, &k, &v, &shape, &serial));
+        });
+        let ns = r.median.as_nanos() as f64;
+        let vs = match (d, scalar_ns) {
+            (Dispatch::Scalar, _) => {
+                scalar_ns = Some(ns);
+                String::new()
+            }
+            (_, Some(s)) => format!("   ({:.2}x vs scalar)", s / ns.max(1.0)),
+            _ => String::new(),
+        };
+        let _ = writeln!(
+            out,
+            "    {:<7} {:>12} /iter   {:>7.2} GFLOP/s{vs}",
+            d.name(),
+            format!("{:.2?}", r.median),
+            aflops / ns.max(1.0)
         );
     }
     out

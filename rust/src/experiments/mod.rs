@@ -1,5 +1,6 @@
-//! Experiment harness — one entry per table & figure of the paper
-//! (DESIGN.md §5 maps each id to modules and expectations).
+//! Experiment harness — one entry per table & figure of the paper,
+//! plus the native attention table P9/P10 (DESIGN.md §6 maps each id
+//! to modules and expectations).
 //!
 //! Every harness prints the paper-style rows AND writes a CSV under the
 //! `--out` directory so EXPERIMENTS.md can cite machine-readable results.
@@ -13,6 +14,7 @@
 //! from the bench binaries — see BENCHMARKS.md for the rendered trail.
 
 pub mod analysisfigs;
+pub mod attention;
 pub mod finetune;
 pub mod kernels;
 pub mod pretrain;
@@ -23,6 +25,27 @@ use anyhow::{bail, Result};
 pub use kernels::validate_kernels;
 
 use crate::runtime::Engine;
+
+/// Run a native-only experiment — one that needs no artifacts and no
+/// PJRT engine (`table7`, `attention`). Returns `None` when `name` is
+/// an engine-backed harness, so the CLI can decide whether to load
+/// artifacts at all (this is what makes `pamm reproduce attention
+/// --quick` a zero-dependency smoke drive).
+pub fn run_native(name: &str, quick: bool, out: &str) -> Option<Result<()>> {
+    match name {
+        "table7" | "attention" => {}
+        _ => return None,
+    }
+    let run = || -> Result<()> {
+        std::fs::create_dir_all(out)?;
+        match name {
+            "table7" => throughput::table7(quick, out),
+            "attention" => attention::native_table(quick, out),
+            _ => unreachable!("gated above"),
+        }
+    };
+    Some(run())
+}
 
 pub fn run(engine: &Engine, name: &str, quick: bool, out: &str) -> Result<()> {
     std::fs::create_dir_all(out)?;
@@ -37,6 +60,9 @@ pub fn run(engine: &Engine, name: &str, quick: bool, out: &str) -> Result<()> {
         "table2a" => throughput::table2a(engine, quick, out),
         "table2b" => throughput::table2b(engine, quick, out),
         "table7" => throughput::table7(quick, out),
+        // Native-only (no artifacts): flash/fused attention throughput
+        // + measured-peak-memory table (EXPERIMENTS.md P9–P10).
+        "attention" => attention::native_table(quick, out),
         "table1" => finetune::table1(engine, quick, out),
         "table4" => finetune::table4(engine, quick, out),
         "fig5" => analysisfigs::fig5(engine, quick, out),
@@ -49,9 +75,9 @@ pub fn run(engine: &Engine, name: &str, quick: bool, out: &str) -> Result<()> {
         }
         "all" => {
             for exp in [
-                "kernels", "fig3b", "table7", "fig5", "fig6", "fig7", "table2a",
-                "table2b", "fig3a", "table5", "table3", "fig4a", "fig4b", "table6",
-                "table1", "table4",
+                "kernels", "fig3b", "table7", "attention", "fig5", "fig6", "fig7",
+                "table2a", "table2b", "fig3a", "table5", "table3", "fig4a", "fig4b",
+                "table6", "table1", "table4",
             ] {
                 println!("\n================ {exp} ================");
                 run(engine, exp, quick, out)?;

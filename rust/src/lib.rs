@@ -9,8 +9,10 @@
 //!   custom-vjp projections, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L3** (this crate) — the runtime: PJRT engine, training
 //!   coordinator, native PAMM twin (parallel on the shared `poolx`
-//!   pool, `--threads`), data pipeline, memory accountant, experiment
-//!   harness (one per paper table/figure — see DESIGN.md).
+//!   pool, `--threads`), the fused flash-attention subsystem
+//!   (`attention`: tiled online softmax consuming PAMM-compressed
+//!   Q/K/V), data pipeline, memory accountant, experiment harness (one
+//!   per paper table/figure — see DESIGN.md).
 //!
 //! Python never runs on the request path: `make artifacts` once, then the
 //! Rust binary is self-contained.
@@ -20,6 +22,7 @@
 //! BENCHMARKS.md (rendered from the persisted `benchmarks/BENCH_*.json`
 //! via `pamm bench-report`).
 
+pub mod attention;
 pub mod benchx;
 pub mod checkpoint;
 pub mod cli;

@@ -204,6 +204,11 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
     let name = args.pos(0, "experiment id")?;
     let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
     let out = args.get_str("out").unwrap_or_else(|| "results".into());
+    // Native-only harnesses (table7, attention) run without artifacts —
+    // don't demand an engine they never use.
+    if let Some(r) = pamm::experiments::run_native(name, args.get_bool("quick"), &out) {
+        return r;
+    }
     let engine = Engine::load(&artifacts)?;
     pamm::experiments::run(&engine, name, args.get_bool("quick"), &out)
 }

@@ -169,6 +169,60 @@ pub fn fmt_bytes(b: usize) -> String {
     }
 }
 
+/// Measured-bytes tracker for transient allocations on the native hot
+/// paths — the runtime counterpart of the analytic accountant above.
+/// Callers report what they actually allocate
+/// ([`MemoryTracker::alloc`] / [`MemoryTracker::free`]); the tracker
+/// maintains the live total and its high-water mark. All counters are
+/// atomic, so one tracker can be shared across pool workers and a
+/// parallel kernel's per-thread scratch folds into a single peak
+/// figure. `attention::pamm_qkv_attention` uses it to *measure* that
+/// the fused path never materializes full Q/K/V (asserted in
+/// `rust/tests/prop_attention.rs` against `attention::fused_peak_bound`)
+/// instead of trusting the analytic `qkv_saved_bytes` model.
+#[derive(Debug, Default)]
+pub struct MemoryTracker {
+    live: std::sync::atomic::AtomicUsize,
+    peak: std::sync::atomic::AtomicUsize,
+}
+
+impl MemoryTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `bytes` newly allocated; advances the peak when the live
+    /// total now exceeds it.
+    pub fn alloc(&self, bytes: usize) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let live = self.live.fetch_add(bytes, Relaxed) + bytes;
+        self.peak.fetch_max(live, Relaxed);
+    }
+
+    /// Record `bytes` released (saturates at zero so an over-reported
+    /// free cannot wrap the counter).
+    pub fn free(&self, bytes: usize) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let _ = self.live.fetch_update(Relaxed, Relaxed, |v| Some(v.saturating_sub(bytes)));
+    }
+
+    /// Bytes currently accounted live.
+    pub fn live(&self) -> usize {
+        self.live.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// High-water mark of the live total since construction/reset.
+    pub fn peak(&self) -> usize {
+        self.peak.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.live.store(0, Relaxed);
+        self.peak.store(0, Relaxed);
+    }
+}
+
 /// Peak-memory *tracker* for live runs: the coordinator feeds it per-step
 /// allocation observations (activation bytes are analytic; host-side
 /// buffers are measured) and it keeps high-water marks per tag.
@@ -274,6 +328,39 @@ mod tests {
         assert_eq!(fmt_bytes(512), "512 B");
         assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.00 GB");
         assert!(fmt_bytes(256 * 1024 * 1024).starts_with("256"));
+    }
+
+    #[test]
+    fn memory_tracker_alloc_free_peak() {
+        let t = MemoryTracker::new();
+        assert_eq!((t.live(), t.peak()), (0, 0));
+        t.alloc(100);
+        t.alloc(50);
+        t.free(120);
+        t.alloc(10);
+        assert_eq!(t.live(), 40);
+        assert_eq!(t.peak(), 150, "peak is the high-water mark, not the final live total");
+        t.free(1000); // saturates, never wraps
+        assert_eq!(t.live(), 0);
+        t.reset();
+        assert_eq!((t.live(), t.peak()), (0, 0));
+    }
+
+    #[test]
+    fn memory_tracker_is_shareable_across_threads() {
+        let t = MemoryTracker::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        t.alloc(3);
+                        t.free(3);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.live(), 0);
+        assert!(t.peak() >= 3 && t.peak() <= 12);
     }
 
     #[test]

@@ -73,6 +73,17 @@ impl Compressed {
         kept as f64 / self.alpha.len().max(1) as f64
     }
 
+    /// Project the generators through a weight matrix: `G = C·W`
+    /// (k × m). The fused attention forward (`crate::attention`) leans
+    /// on the identity `Ã·W = diag(α)·1_f·(C·W)`: once `G` exists, any
+    /// row of the projected activation is just `α_i · G[f(i)]`, so
+    /// Q/K/V tiles can be produced straight from the compressed
+    /// representation — `G` is the only projection-side state that
+    /// stays resident, and it is k rows, not b.
+    pub fn project_generators(&self, w: &Mat) -> Mat {
+        self.generators.matmul(w)
+    }
+
     /// Materialize Ã (Eq. 3) — analysis/tests only, never on hot paths.
     pub fn reconstruct(&self) -> Mat {
         let n = self.generators.cols();
@@ -584,6 +595,31 @@ mod tests {
         assert!(serial.max_abs_diff(&want) < 1e-4 * want.frob_norm().max(1.0));
         let pool = Pool::new(4).with_min_chunk(1);
         assert_eq!(apply_with(&comp, &bm, &pool), serial, "sparse apply parallel parity");
+    }
+
+    #[test]
+    fn projected_generators_factor_the_reconstruction() {
+        // Ã·W == diag(α)·1_f·(C·W): gather-scaling rows of G must match
+        // reconstruct-then-multiply up to GEMM rounding.
+        let a = rand_mat(40, 10, 41);
+        let w = rand_mat(10, 6, 42);
+        let mut rng = Xoshiro256::new(43);
+        let idx = sample_generators(&mut rng, 40, 5);
+        let comp = compress(&a, &idx, Eps::Val(0.6)); // some dropped rows
+        let g = comp.project_generators(&w);
+        assert_eq!((g.rows(), g.cols()), (5, 6));
+        let want = comp.reconstruct().matmul(&w);
+        for i in 0..40 {
+            let al = comp.alpha[i];
+            for j in 0..6 {
+                let got = al * g.get(comp.assign[i] as usize, j);
+                assert!(
+                    (got - want.get(i, j)).abs() <= 1e-4 * want.get(i, j).abs().max(1.0),
+                    "row {i} col {j}: {got} vs {}",
+                    want.get(i, j)
+                );
+            }
+        }
     }
 
     #[test]

@@ -23,7 +23,11 @@
 //! `0..n` with deterministic bounds, and the kernels built on it are
 //! written so each output element accumulates in the same order at any
 //! thread count — results are **bit-identical** for 1, 2, 4, … threads
-//! (asserted by `rust/tests/prop_pamm.rs`).
+//! (asserted by `rust/tests/prop_pamm.rs`). Flat outputs are stitched
+//! through [`Pool::map_chunks_flat`]: chunks land at their `(start,
+//! end)` offsets — never in iteration order — with a debug assert that
+//! every range was written exactly once. The GEMM row-block kernels and
+//! the attention (batch·head) grid share that one path.
 //!
 //! Workers are **long-lived threads**, which is what makes the
 //! `tensor::kernels` per-thread `Workspace` (packed GEMM panels, Gram /
@@ -188,6 +192,11 @@ pub const MAX_POOL_THREADS: usize = 256;
 /// [`DEFAULT_MIN_CHUNK`].
 pub const COLUMN_MIN_CHUNK: usize = 32;
 
+/// Fallback threshold for coarse-grained *task grids* (the attention
+/// subsystem's (batch·head) slabs): one item is already a whole tile
+/// walk over a sequence, so splitting pays from the second item onward.
+pub const TASK_MIN_CHUNK: usize = 1;
+
 /// Shared parallel-compute handle: a thread count, a serial-fallback
 /// threshold, and a lazily-spawned [`ThreadPool`]. Cheap to clone (clones
 /// share the workers). See the module docs for the determinism contract.
@@ -256,6 +265,19 @@ impl Pool {
         }
     }
 
+    /// Handle for coarse-grained task grids (one item = one attention
+    /// (batch, head) tile walk): like [`Pool::for_columns`], an
+    /// uncustomized threshold is tightened — here all the way to
+    /// [`TASK_MIN_CHUNK`] — while an explicit `with_min_chunk` value is
+    /// kept as-is, so "never split" overrides still work.
+    pub fn for_tasks(&self) -> Pool {
+        if self.min_chunk_custom {
+            self.clone()
+        } else {
+            self.clone().with_min_chunk(TASK_MIN_CHUNK)
+        }
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -318,6 +340,67 @@ impl Pool {
                 (s, e, slot.into_inner().unwrap().expect("poolx: chunk result missing"))
             })
             .collect()
+    }
+
+    /// Partition `0..n`, run `f(start, end, chunk_out)` per chunk —
+    /// `chunk_out` is the zeroed `(end-start)·width` window of one
+    /// shared `n·width` output, carved out with `split_at_mut` at the
+    /// chunk's `start·width` offset. This is the generalized `(start,
+    /// end)` offset-write path shared by the GEMM row-block kernels
+    /// (`Mat::matmul_with`, `Mat::row_norms_with`) and the attention
+    /// (batch·head) task grid: results land by *range*, never by
+    /// chunk-iteration or append order, there are **no per-chunk
+    /// temporaries** (workers write the final buffer in place — no
+    /// output-sized transient at stitch time), and a debug assert
+    /// checks the chunk ranges tile `0..n` exactly once (no gap, no
+    /// overlap, no double write).
+    ///
+    /// Runs inline (one allocation, no workers) when
+    /// [`Pool::chunks_for`] says 1.
+    pub fn map_chunks_flat<T: Send + Copy + Default>(
+        &self,
+        n: usize,
+        width: usize,
+        f: impl Fn(usize, usize, &mut [T]) + Sync,
+    ) -> Vec<T> {
+        let chunks = self.chunks_for(n);
+        let mut out = vec![T::default(); n * width];
+        if chunks <= 1 || width == 0 {
+            // width 0 ⇒ empty output; one inline call keeps f's side
+            // effects without a zero-sized chunks_mut panic.
+            f(0, n, &mut out);
+            return out;
+        }
+        let chunk = n.div_ceil(chunks);
+        let bounds: Vec<(usize, usize)> = (0..chunks)
+            .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+            .filter(|(s, e)| s < e)
+            .collect();
+        #[cfg(debug_assertions)]
+        {
+            let mut expect = 0usize;
+            for &(s, e) in &bounds {
+                assert_eq!(s, expect, "poolx: chunk ranges must tile 0..{n} exactly once");
+                expect = e;
+            }
+            assert_eq!(expect, n, "poolx: stitch left a gap — some range never written");
+        }
+        {
+            // chunks_mut(chunk·width) carves exactly the bounds
+            // partition out of `out` — disjoint windows, written in
+            // place by the workers.
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = bounds
+                .iter()
+                .zip(out.chunks_mut(chunk * width))
+                .map(|(&(s, e), window)| {
+                    debug_assert_eq!(window.len(), (e - s) * width);
+                    let f = &f;
+                    Box::new(move || f(s, e, window)) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            self.execute_scoped(jobs);
+        }
+        out
     }
 
     /// Run a batch of borrowed jobs on the worker pool and wait for all
@@ -544,6 +627,38 @@ mod tests {
         // Pool must still be usable afterwards.
         let res = pool.map_chunks(8, |s, e| e - s);
         assert_eq!(res.iter().map(|&(_, _, r)| r).sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn map_chunks_flat_matches_serial_and_covers_every_range() {
+        // Fill out[i·w..(i+1)·w] with i so any misplaced chunk shows.
+        let fill = |s: usize, e: usize, buf: &mut [usize]| {
+            for i in s..e {
+                for v in &mut buf[(i - s) * 3..(i - s + 1) * 3] {
+                    *v = i;
+                }
+            }
+        };
+        let serial = Pool::serial().map_chunks_flat(101, 3, fill);
+        let parallel = Pool::new(4).with_min_chunk(1).map_chunks_flat(101, 3, fill);
+        assert_eq!(serial, parallel);
+        for i in 0..101 {
+            assert_eq!(&serial[i * 3..(i + 1) * 3], &[i, i, i]);
+        }
+        // Width 0 degenerates to an empty output without panicking.
+        assert!(Pool::new(2).with_min_chunk(1).map_chunks_flat(8, 0, |_, _, _| {}).is_empty());
+    }
+
+    #[test]
+    fn for_tasks_threshold() {
+        // Uncustomized pools split task grids from the second item on…
+        let pool = Pool::new(4);
+        assert_eq!(pool.chunks_for(4), 1, "row-oriented default stays serial at 4 items");
+        assert_eq!(pool.for_tasks().chunks_for(4), 4);
+        assert_eq!(pool.for_tasks().chunks_for(1), 1);
+        // …while an explicit min-chunk override is honored as-is.
+        let forced = Pool::new(4).with_min_chunk(1_000_000);
+        assert_eq!(forced.for_tasks().chunks_for(4), 1);
     }
 
     #[test]

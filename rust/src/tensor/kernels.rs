@@ -2,12 +2,15 @@
 //! SIMD dispatch — the single contraction engine under every native
 //! PAMM hot path.
 //!
-//! One kernel serves all four call sites: `Mat::matmul` (A·B),
+//! One kernel serves every call site: `Mat::matmul` (A·B),
 //! `Mat::t_matmul` (Aᵀ·B without materializing the transpose), the
-//! Gram pass `S = A·Cᵀ` inside `pamm::compress`, and the `Cᵀ·B̃`
-//! contraction inside `pamm::apply`. Transposition is absorbed by the
-//! packing step, so there is exactly one inner loop to optimize and
-//! one accumulation order to keep deterministic.
+//! Gram pass `S = A·Cᵀ` inside `pamm::compress`, the `Cᵀ·B̃`
+//! contraction inside `pamm::apply`, and the per-tile `Q·Kᵀ` / `P·V`
+//! contractions of the flash-attention walk (`crate::attention`).
+//! Transposition is absorbed by the packing step, so there is exactly
+//! one inner loop to optimize and one accumulation order to keep
+//! deterministic — which is how the bit-identity ladder extends from
+//! GEMM to attention for free.
 //!
 //! # Blocking scheme (BLIS-style)
 //!
@@ -214,10 +217,101 @@ pub struct PackBufs {
     pb: Vec<f32>,
 }
 
-/// Per-thread scratch shared by the kernel and the PAMM stages built on
-/// it: packed panels, the compress Gram strip `S`, and the apply `B̃`
-/// accumulator. Reach it through [`with_workspace`]; pool workers are
-/// long-lived threads, so steady-state iterations allocate nothing.
+impl PackBufs {
+    /// Currently reserved pack bytes (capacities, not live lengths) —
+    /// the figure the attention peak-memory tracking charges per
+    /// worker thread.
+    pub fn capacity_bytes(&self) -> usize {
+        (self.pa.capacity() + self.pb.capacity()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Grow `v` to exactly `need` elements, avoiding `Vec::resize`'s
+/// amortized over-allocation: the attention peak-bytes bound counts
+/// capacities, so scratch growth must be no bigger than requested.
+fn fit(v: &mut Vec<f32>, need: usize) {
+    if v.capacity() < need {
+        v.reserve_exact(need - v.len());
+    }
+    v.resize(need, 0.0);
+}
+
+/// [`fit`] plus zeroing of the retained prefix — the packing buffers
+/// rely on every element starting at 0.0 (ragged-tail padding). Exact
+/// growth matters here too: `PackBufs` capacities are part of the
+/// attention peak-bytes model (`attention::tile_scratch_bytes`), and an
+/// amortized doubling (e.g. pa growing 3072 → 4096 elements would jump
+/// to 6144) would make a measured peak exceed the analytic bound.
+fn zero_fit(v: &mut Vec<f32>, need: usize) {
+    v.clear();
+    if v.capacity() < need {
+        v.reserve_exact(need);
+    }
+    v.resize(need, 0.0);
+}
+
+/// Per-thread scratch of the flash-attention tile walk
+/// (`crate::attention`): Q/K/V strips, the transposed K panel, the
+/// score tile, and the online-softmax state. Lives in [`Workspace`]
+/// beside the PAMM stage scratch so the same long-lived pool workers
+/// warm it up once and reuse it for every later (batch, head) task.
+#[derive(Default)]
+pub struct AttnScratch {
+    /// Br×d query strip (pre-scaled by 1/√d).
+    pub qs: Vec<f32>,
+    /// Bc×d key strip.
+    pub ks: Vec<f32>,
+    /// Bc×d value strip.
+    pub vs: Vec<f32>,
+    /// d×Bc transposed key strip (the GEMM B operand of `Q·Kᵀ`).
+    pub kt: Vec<f32>,
+    /// Br×Bc score tile, exponentiated in place into the P tile.
+    pub s: Vec<f32>,
+    /// Br×d output accumulator of the online softmax.
+    pub acc: Vec<f32>,
+    /// Br running row maxima (online-softmax `m`).
+    pub m: Vec<f32>,
+    /// Br running row sums (online-softmax `l`).
+    pub l: Vec<f32>,
+}
+
+impl AttnScratch {
+    /// Size every buffer for a `(br, bc, d)` tile walk. Returns the
+    /// number of bytes this call grew the scratch by — zero in the warm
+    /// steady state, which is what the attention memory tracker charges
+    /// per worker.
+    pub fn ensure(&mut self, br: usize, bc: usize, d: usize) -> usize {
+        let before = self.bytes();
+        fit(&mut self.qs, br * d);
+        fit(&mut self.ks, bc * d);
+        fit(&mut self.vs, bc * d);
+        fit(&mut self.kt, d * bc);
+        fit(&mut self.s, br * bc);
+        fit(&mut self.acc, br * d);
+        fit(&mut self.m, br);
+        fit(&mut self.l, br);
+        self.bytes().saturating_sub(before)
+    }
+
+    /// Reserved bytes across all buffers (capacities).
+    pub fn bytes(&self) -> usize {
+        (self.qs.capacity()
+            + self.ks.capacity()
+            + self.vs.capacity()
+            + self.kt.capacity()
+            + self.s.capacity()
+            + self.acc.capacity()
+            + self.m.capacity()
+            + self.l.capacity())
+            * std::mem::size_of::<f32>()
+    }
+}
+
+/// Per-thread scratch shared by the kernel and the stages built on it:
+/// packed panels, the compress Gram strip `S`, the apply `B̃`
+/// accumulator, and the attention tile scratch. Reach it through
+/// [`with_workspace`]; pool workers are long-lived threads, so
+/// steady-state iterations allocate nothing.
 #[derive(Default)]
 pub struct Workspace {
     /// GEMM packing buffers.
@@ -226,6 +320,8 @@ pub struct Workspace {
     pub s: Vec<f32>,
     /// `apply` B̃ accumulator (k × strip width), row-major.
     pub btilde: Vec<f32>,
+    /// Flash-attention tile scratch (`crate::attention`).
+    pub attn: AttnScratch,
 }
 
 thread_local! {
@@ -249,8 +345,7 @@ pub fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
 /// width branch in its k-loop.
 fn pack_b(pb: &mut Vec<f32>, b: &[f32], ldb: usize, pc: usize, kc: usize, jc: usize, nc: usize) {
     let nstrips = nc.div_ceil(NR);
-    pb.clear();
-    pb.resize(nstrips * kc * NR, 0.0);
+    zero_fit(pb, nstrips * kc * NR);
     for js in 0..nstrips {
         let j0 = jc + js * NR;
         let w = NR.min(jc + nc - j0);
@@ -279,8 +374,7 @@ fn pack_a(
     kc: usize,
 ) {
     let mstrips = mc.div_ceil(MR);
-    pa.clear();
-    pa.resize(mstrips * kc * MR, 0.0);
+    zero_fit(pa, mstrips * kc * MR);
     for is in 0..mstrips {
         let i0 = ic + is * MR;
         let h = MR.min(ic + mc - i0);
@@ -698,6 +792,23 @@ mod tests {
         gemm_into(Dispatch::Scalar, false, 40, 20, 30, &a, 30, &b, 20, &mut c, 20, &mut packs);
         assert_eq!(packs.pa.capacity(), cap_a);
         assert_eq!(packs.pb.capacity(), cap_b);
+    }
+
+    #[test]
+    fn attn_scratch_growth_is_exact_and_warm_calls_are_free() {
+        let mut a = AttnScratch::default();
+        let grew = a.ensure(64, 64, 32);
+        // Exact sizing: qs/ks/vs/kt/acc = 64·32 or 32·64, s = 64·64, m/l = 64.
+        let want = (5 * 64 * 32 + 64 * 64 + 2 * 64) * 4;
+        assert_eq!(grew, want);
+        assert_eq!(a.bytes(), want);
+        // Warm re-ensure at the same (or smaller) shape grows nothing.
+        assert_eq!(a.ensure(64, 64, 32), 0);
+        assert_eq!(a.ensure(63, 48, 32), 0);
+        assert_eq!(a.bytes(), want, "capacities never shrink");
+        // A bigger shape grows by exactly the delta.
+        let grew2 = a.ensure(64, 64, 64);
+        assert_eq!(a.bytes(), want + grew2);
     }
 
     #[test]

@@ -118,20 +118,15 @@ impl Mat {
 
     /// Parallel [`Mat::row_norms`] over row blocks of the shared pool.
     /// Rows are independent, so this is bit-identical at any thread
-    /// count. Each block lands at its `start` offset — correctness does
-    /// not depend on `map_chunks` returning chunks in range order.
+    /// count. Stitched through [`Pool::map_chunks_flat`]: each block
+    /// lands at its `(start, end)` offset — correctness does not depend
+    /// on `map_chunks` returning chunks in range order.
     pub fn row_norms_with(&self, pool: &Pool) -> Vec<f32> {
-        let chunks = pool.map_chunks(self.rows, |s, e| {
-            (s..e)
-                .map(|i| self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
-                .collect::<Vec<f32>>()
-        });
-        let mut out = vec![0f32; self.rows];
-        for (s, e, block) in chunks {
-            debug_assert_eq!(block.len(), e - s);
-            out[s..s + block.len()].copy_from_slice(&block);
-        }
-        out
+        pool.map_chunks_flat(self.rows, 1, |s, e, out| {
+            for (i, o) in (s..e).zip(out.iter_mut()) {
+                *o = self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            }
+        })
     }
 
     pub fn transpose(&self) -> Mat {
@@ -168,26 +163,19 @@ impl Mat {
     /// Parallel [`Mat::matmul`] over row blocks of `self`. Each worker
     /// runs the same `matmul_rows` kernel on a contiguous block of
     /// output rows, so the result is bit-identical to `matmul` at any
-    /// thread count; blocks are written at their `(start, end)` offsets,
-    /// not appended in chunk-iteration order. Falls back to the serial
-    /// path below the pool's chunk threshold.
+    /// thread count; blocks are stitched by [`Pool::map_chunks_flat`]
+    /// at their `(start, end)` offsets (exactly-once asserted), not
+    /// appended in chunk-iteration order. Falls back to the serial path
+    /// below the pool's chunk threshold.
     pub fn matmul_with(&self, other: &Mat, pool: &Pool) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (n, m) = (self.rows, other.cols);
         if pool.chunks_for(n) <= 1 {
             return self.matmul(other);
         }
-        let chunks = pool.map_chunks(n, |s, e| {
-            let mut block = vec![0.0f32; (e - s) * m];
-            self.matmul_rows(other, s, e, &mut block);
-            block
-        });
-        let mut out = Mat::zeros(n, m);
-        for (s, e, block) in chunks {
-            debug_assert_eq!(block.len(), (e - s) * m);
-            out.data[s * m..s * m + block.len()].copy_from_slice(&block);
-        }
-        out
+        let data =
+            pool.map_chunks_flat(n, m, |s, e, block| self.matmul_rows(other, s, e, block));
+        Mat::from_vec(n, m, data)
     }
 
     /// `selfᵀ @ other` without materializing the transpose — the exact
