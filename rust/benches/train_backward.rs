@@ -1,0 +1,162 @@
+//! Bench: the native compressed-activation training step — forward
+//! (with statistics), backward, and the full fwd+bwd+update step — per
+//! shape × dispatch level × thread count. The acceptance trail for the
+//! autograd subsystem: `benchmarks/BENCH_train_backward.json` →
+//! BENCHMARKS.md §train_backward.
+//!
+//! Ops are dispatch-tagged (`train_fwd[avx2]`, `train_bwd[scalar]`, …)
+//! via explicit-dispatch entry points, so no process-global
+//! `kernels::force` state is involved. GFLOP/s uses the attention flop
+//! model (`AttnShape::flops`; backward = 2.5× for its five tile GEMMs
+//! vs the forward's two). Two memory annotations ride the entries:
+//!
+//! * forward rows carry `saved_bytes` — the EXACT saved-for-backward
+//!   set of the step's tape node (`Compressed::stored_bytes` + the
+//!   O(seq) log-sum-exp), the paper's headline quantity;
+//! * backward rows carry `peak_bytes` — the measured backward-transient
+//!   peak under the cold protocol (fresh pool, fresh caller thread).
+//!
+//! Run: `cargo bench --bench train_backward` (PAMM_BENCH_QUICK=1 for
+//! CI); render with `pamm bench-report`.
+
+use std::time::Duration;
+
+use pamm::attention::AttnShape;
+use pamm::autograd;
+use pamm::benchx::{BenchOpts, BenchSink, Suite};
+use pamm::coordinator::{NativeOpt, NativeTrainer};
+use pamm::memory::{fmt_bytes, MemoryLedger};
+use pamm::pamm as pammc;
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels::Dispatch;
+use pamm::tensor::Mat;
+
+fn opts() -> BenchOpts {
+    if std::env::var("PAMM_BENCH_QUICK").is_ok() {
+        BenchOpts { warmup_iters: 0, min_iters: 1, max_iters: 5, max_total: Duration::from_secs(2) }
+    } else {
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 12,
+            max_total: Duration::from_secs(10),
+        }
+    }
+}
+
+fn main() {
+    // (batch, heads, seq, head_dim, generators k) — causal, matching
+    // the tensor_attention suite so fwd rows line up across suites.
+    let shapes: &[(usize, usize, usize, usize, usize)] =
+        &[(1, 4, 256, 64, 32), (2, 4, 512, 64, 64)];
+    let native = Dispatch::native();
+    let threads: &[usize] = &[1, 2, 4];
+    let mut sink = BenchSink::new("train_backward");
+
+    println!("train_backward: native dispatch = {}", native.name());
+
+    for &(b, h, l, d, k) in shapes {
+        let shape = AttnShape::new(b, h, l, d, true);
+        let shape_s = format!("b={b} h={h} l={l} d={d} k={k}");
+        let fwd_flops = shape.flops();
+        let bwd_flops = 2.5 * fwd_flops;
+        let dm = shape.d_model();
+        let mut rng = Xoshiro256::new(0xBACD);
+        let x = Mat::random_normal(shape.tokens(), dm, 1.0, &mut rng);
+        let wq = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let wk = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let wv = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let idx = pammc::sample_generators(&mut rng, shape.tokens(), k);
+        let mut target = vec![0f32; shape.qkv_len()];
+        rng.fill_normal_f32(&mut target, 1.0);
+
+        let mut suite = Suite::with_opts(&format!("train_backward {shape_s}"), opts());
+        suite.header();
+
+        let mut plan: Vec<(Dispatch, usize)> = vec![(Dispatch::Scalar, 1)];
+        if native != Dispatch::Scalar {
+            plan.extend(threads.iter().map(|&t| (native, t)));
+        }
+        for &(disp, t) in &plan {
+            let tag = disp.name();
+            let pool = Pool::new(t);
+
+            // Forward with statistics — the training fwd, whose tape
+            // node is the whole saved-for-backward set.
+            let r = suite
+                .bench(&format!("train_fwd[{tag}] t={t}"), || {
+                    std::hint::black_box(autograd::qkv_attn_forward_on(
+                        disp, &x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, &pool, None,
+                    ));
+                })
+                .clone();
+            sink.record_flops(&format!("train_fwd[{tag}]"), &shape_s, t, &r, fwd_flops);
+            let (out, saved) = autograd::qkv_attn_forward_on(
+                disp, &x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, &pool, None,
+            );
+            sink.annotate_saved_bytes(saved.saved_bytes());
+
+            // Backward off the saved node.
+            let (_, dout) = autograd::mse_loss(&out, &target);
+            let r = suite
+                .bench(&format!("train_bwd[{tag}] t={t}"), || {
+                    std::hint::black_box(autograd::qkv_attn_backward_on(
+                        disp, &saved, &wq, &wk, &wv, &out, &dout, false, &pool, None,
+                    ));
+                })
+                .clone();
+            sink.record_flops(&format!("train_bwd[{tag}]"), &shape_s, t, &r, bwd_flops);
+            // Cold backward-transient peak: fresh pool AND fresh caller
+            // thread (worker TLS on a warm pool reports zero growth —
+            // the steady-state point, not what the bound checks).
+            let ledger = MemoryLedger::new();
+            std::thread::scope(|sc| {
+                sc.spawn(|| {
+                    let cold = Pool::new(t);
+                    autograd::qkv_attn_backward_on(
+                        disp,
+                        &saved,
+                        &wq,
+                        &wk,
+                        &wv,
+                        &out,
+                        &dout,
+                        false,
+                        &cold,
+                        Some(&ledger),
+                    );
+                });
+            });
+            sink.annotate_peak_bytes(ledger.backward.peak());
+
+            // Full step: fwd + loss + bwd + Adam update.
+            let mut trainer = NativeTrainer::new(shape, k, NativeOpt::adam(1e-3), 7);
+            let r = suite
+                .bench(&format!("train_step[{tag}] t={t}"), || {
+                    std::hint::black_box(trainer.step_report(disp, &x, &target, &pool, None).loss);
+                })
+                .clone();
+            sink.record_flops(&format!("train_step[{tag}]"), &shape_s, t, &r, fwd_flops + bwd_flops);
+        }
+
+        if let Some(sp) = suite.ratio(
+            &format!("train_bwd[{}] t=1", native.name()),
+            "train_bwd[scalar] t=1",
+        ) {
+            println!("  bwd vs scalar (single thread, {}): {sp:.2}x", native.name());
+        }
+        println!(
+            "  dense saved-for-backward baseline: {}  (X + Q/K/V + stats — what the tape never keeps)",
+            fmt_bytes(autograd::dense_saved_bytes(dm, &shape))
+        );
+    }
+
+    match sink.flush() {
+        Ok(path) => {
+            println!("\npersisted {} entries to {}", sink.entries().len(), path.display())
+        }
+        Err(e) => eprintln!("bench persistence failed: {e}"),
+    }
+}

@@ -75,6 +75,23 @@
 //! per-thread tile scratch × workers + the compressed-domain state —
 //! measured, not modeled, via [`crate::memory::MemoryTracker`] and
 //! bounded by [`fused_peak_bound`].
+//!
+//! # Backward (DESIGN.md §6)
+//!
+//! The training forward ([`attend_compressed_fwd_on`],
+//! [`flash_attention_fwd_on`]) additionally emits the per-row
+//! log-sum-exp `L = m + ln l` — together with the caller's
+//! [`Compressed`], the *entire* saved-for-backward set of the fused
+//! block. The backward ([`attend_compressed_bwd_on`],
+//! [`flash_attention_bwd_on`]) is the FlashAttention-2 recomputation
+//! walk: per tile, rebuild `P = exp(S − L)` (Q/K/V strips gather-scaled
+//! from the recomputed `G = C·W` — the dense projections never exist in
+//! the backward either) and form dV/dK/dQ with five microkernel GEMMs,
+//! so the scalar==sse2==avx2 bit-identity ladder and the
+//! partition-only-task thread determinism both extend to gradients
+//! (property-tested in `rust/tests/prop_backward.rs`). The weight
+//! gradients `dW = β·Ãᵀ·dY` then come from `pamm::grad_w` (the
+//! gather-scaled `Cᵀ·B̃` form), composed in `crate::autograd`.
 
 use crate::memory::MemoryTracker;
 use crate::pamm::{self, Compressed, Eps};
@@ -229,6 +246,11 @@ fn strip_pamm(
 /// Serial leaf computation — all parallelism lives one level up on the
 /// task grid, which is exactly why thread count cannot change any
 /// per-element order here.
+///
+/// `lse`, when given, receives the per-row log-sum-exp
+/// `L_i = m_i + ln(l_i)` — the O(seq) softmax statistic the training
+/// forward saves so the backward can rebuild `P = exp(S − L)` per tile
+/// without storing scores (FlashAttention-2's residual).
 fn attend_head(
     d: Dispatch,
     src: &HeadSrc<'_>,
@@ -237,6 +259,7 @@ fn attend_head(
     causal: bool,
     ws: &mut Workspace,
     out: &mut [f32],
+    mut lse: Option<&mut [f32]>,
 ) {
     debug_assert_eq!(out.len(), seq * dh);
     let scale = 1.0 / (dh as f32).sqrt();
@@ -357,6 +380,207 @@ fn attend_head(
                 *o = av / denom;
             }
         }
+        if let Some(stats) = lse.as_deref_mut() {
+            for r in 0..br {
+                stats[i0 + r] = attn.m[r] + attn.l[r].max(1e-30).ln();
+            }
+        }
+    }
+}
+
+/// One (batch, head) slab of the FlashAttention-2 backward: recompute
+/// `P = exp(S − L)` per tile from the saved log-sum-exp, then
+///
+/// ```text
+/// D_i  = Σ_c dO[i,c]·O[i,c]                    (per head, once)
+/// for j0 in seq by BC:                         (KV tile — dK/dV rows)
+///   for i0 in seq by BR:                       (query tile)
+///     skip if causal and the tile is fully masked
+///     S  = Q̂·Kᵀ          (GEMM; Q̂ pre-scaled by 1/√d, as forward)
+///     P  = exp(S − L_i)   (masked entries set to exactly 0.0)
+///     dV[j0..] += Pᵀ·dO                                (GEMM)
+///     dP = dO·Vᵀ                                       (GEMM)
+///     dS = P ∘ (dP − D_i)
+///     dK[j0..] += dSᵀ·Q̂   (scale rides Q̂)              (GEMM)
+///     dQ[i0..] += (dS·scale)·K                         (GEMM)
+/// ```
+///
+/// Five microkernel GEMMs per tile, elementwise math in portable
+/// scalar Rust — the whole backward inherits the forward's
+/// scalar==sse2==avx2 bit-identity and, because the walk is a fixed
+/// serial order per head (parallelism only partitions the (batch·head)
+/// grid one level up), its any-thread-count bit-identity too. The
+/// masked-P zeros match the forward exactly (`exp(−1e30 − m)` is `+0.0`
+/// there), so skipping fully-masked tiles stays bit-identical.
+///
+/// `dq`/`dk`/`dv` are zeroed `seq×dh` windows; accumulation into them
+/// happens in ascending (j0, i0) tile order via the accumulating GEMM.
+#[allow(clippy::too_many_arguments)]
+fn attend_head_bwd(
+    d: Dispatch,
+    src: &HeadSrc<'_>,
+    o: &[f32],
+    dout: &[f32],
+    lse: &[f32],
+    seq: usize,
+    dh: usize,
+    causal: bool,
+    ws: &mut Workspace,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    debug_assert_eq!(o.len(), seq * dh);
+    debug_assert_eq!(dout.len(), seq * dh);
+    debug_assert_eq!(lse.len(), seq);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let Workspace { packs, attn, .. } = ws;
+    attn.ensure_bwd(BR.min(seq.max(1)), BC.min(seq.max(1)), dh, seq.max(1));
+
+    // D_i = Σ_c dO·O, ascending c — one fixed-order pass per head.
+    for i in 0..seq {
+        attn.dvec[i] = dot(&dout[i * dh..(i + 1) * dh], &o[i * dh..(i + 1) * dh]);
+    }
+
+    for j0 in (0..seq).step_by(BC) {
+        let bc = BC.min(seq - j0);
+        // K strip + d×bc Kᵀ panel, V strip + d×bc Vᵀ panel. The dense
+        // path reads its K/V slabs in place for the row-major GEMM
+        // operands and transposes straight from the slab; the fused
+        // path gather-scales strips first, exactly like the forward.
+        match src {
+            HeadSrc::Dense { k, v, .. } => {
+                for c in 0..dh {
+                    for r in 0..bc {
+                        attn.kt[c * bc + r] = k[(j0 + r) * dh + c];
+                        attn.vt[c * bc + r] = v[(j0 + r) * dh + c];
+                    }
+                }
+            }
+            HeadSrc::Pamm { gk, gv, alpha, assign, col0, tok0, .. } => {
+                strip_pamm(&mut attn.ks, gk, alpha, assign, *tok0, *col0, j0, bc, dh, 1.0);
+                strip_pamm(&mut attn.vs, gv, alpha, assign, *tok0, *col0, j0, bc, dh, 1.0);
+                for c in 0..dh {
+                    for r in 0..bc {
+                        attn.kt[c * bc + r] = attn.ks[r * dh + c];
+                        attn.vt[c * bc + r] = attn.vs[r * dh + c];
+                    }
+                }
+            }
+        }
+        for i0 in (0..seq).step_by(BR) {
+            let br = BR.min(seq - i0);
+            if causal && j0 > i0 + br - 1 {
+                continue; // every (i, j) in the tile has j > i — P ≡ 0
+            }
+            match src {
+                HeadSrc::Dense { q, .. } => strip_dense(&mut attn.qs, q, i0, br, dh, scale),
+                HeadSrc::Pamm { gq, alpha, assign, col0, tok0, .. } => {
+                    strip_pamm(&mut attn.qs, gq, alpha, assign, *tok0, *col0, i0, br, dh, scale)
+                }
+            }
+            // S = Q̂·Kᵀ, then P = exp(S − L) with masked entries exactly 0.
+            attn.s[..br * bc].fill(0.0);
+            kernels::gemm_into(
+                d,
+                false,
+                br,
+                bc,
+                dh,
+                &attn.qs[..br * dh],
+                dh,
+                &attn.kt[..dh * bc],
+                bc,
+                &mut attn.s[..br * bc],
+                bc,
+                packs,
+            );
+            for r in 0..br {
+                let l = lse[i0 + r];
+                let srow = &mut attn.s[r * bc..(r + 1) * bc];
+                for (c, sv) in srow.iter_mut().enumerate() {
+                    *sv = if causal && j0 + c > i0 + r { 0.0 } else { (*sv - l).exp() };
+                }
+            }
+            let dout_strip = &dout[i0 * dh..(i0 + br) * dh];
+            // dV[j0 rows] += Pᵀ·dO (transposed read absorbed by packing).
+            kernels::gemm_into(
+                d,
+                true,
+                bc,
+                dh,
+                br,
+                &attn.s[..br * bc],
+                bc,
+                dout_strip,
+                dh,
+                &mut dv[j0 * dh..(j0 + bc) * dh],
+                dh,
+                packs,
+            );
+            // dP = dO·Vᵀ into the dS tile.
+            attn.ds[..br * bc].fill(0.0);
+            kernels::gemm_into(
+                d,
+                false,
+                br,
+                bc,
+                dh,
+                dout_strip,
+                dh,
+                &attn.vt[..dh * bc],
+                bc,
+                &mut attn.ds[..br * bc],
+                bc,
+                packs,
+            );
+            // dS = P ∘ (dP − D_i).
+            for r in 0..br {
+                let dr = attn.dvec[i0 + r];
+                let prow = &attn.s[r * bc..(r + 1) * bc];
+                let dsrow = &mut attn.ds[r * bc..(r + 1) * bc];
+                for (dsv, &pv) in dsrow.iter_mut().zip(prow) {
+                    *dsv = pv * (*dsv - dr);
+                }
+            }
+            // dK[j0 rows] += dSᵀ·Q̂ (the 1/√d rides the pre-scaled Q̂).
+            kernels::gemm_into(
+                d,
+                true,
+                bc,
+                dh,
+                br,
+                &attn.ds[..br * bc],
+                bc,
+                &attn.qs[..br * dh],
+                dh,
+                &mut dk[j0 * dh..(j0 + bc) * dh],
+                dh,
+                packs,
+            );
+            // dQ[i0 rows] += (dS·scale)·K — K is the UNSCALED strip.
+            for dsv in &mut attn.ds[..br * bc] {
+                *dsv *= scale;
+            }
+            let ksrc: &[f32] = match src {
+                HeadSrc::Dense { k, .. } => &k[j0 * dh..(j0 + bc) * dh],
+                HeadSrc::Pamm { .. } => &attn.ks[..bc * dh],
+            };
+            kernels::gemm_into(
+                d,
+                false,
+                br,
+                dh,
+                bc,
+                &attn.ds[..br * bc],
+                bc,
+                ksrc,
+                dh,
+                &mut dq[i0 * dh..(i0 + br) * dh],
+                dh,
+                packs,
+            );
+        }
     }
 }
 
@@ -416,10 +640,127 @@ pub fn flash_attention_on(
                     shape.causal,
                     ws,
                     &mut out[(t - s) * slab..(t - s + 1) * slab],
+                    None,
                 );
             }
         })
     })
+}
+
+/// Training-mode dense flash forward: like [`flash_attention_on`] but
+/// also returns the per-row log-sum-exp statistics
+/// (`batch·heads·seq` f32, task-major) — the O(seq) residual the
+/// backward needs. Output and stats are written in one grid pass via
+/// [`Pool::map_chunks_flat2`], so the determinism contract is identical
+/// to the plain forward.
+pub fn flash_attention_fwd_on(
+    d: Dispatch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: &AttnShape,
+    pool: &Pool,
+) -> (Vec<f32>, Vec<f32>) {
+    shape.validate();
+    let n = shape.qkv_len();
+    assert_eq!(q.len(), n, "attention: q length vs shape");
+    assert_eq!(k.len(), n, "attention: k length vs shape");
+    assert_eq!(v.len(), n, "attention: v length vs shape");
+    let (sq, dh) = (shape.seq, shape.head_dim);
+    let slab = sq * dh;
+    let tasks = shape.batch * shape.heads;
+    pool.for_tasks().map_chunks_flat2(tasks, slab, sq, |s, e, out, stats| {
+        kernels::with_workspace(|ws| {
+            for t in s..e {
+                let off = t * slab;
+                let src = HeadSrc::Dense {
+                    q: &q[off..off + slab],
+                    k: &k[off..off + slab],
+                    v: &v[off..off + slab],
+                };
+                attend_head(
+                    d,
+                    &src,
+                    sq,
+                    dh,
+                    shape.causal,
+                    ws,
+                    &mut out[(t - s) * slab..(t - s + 1) * slab],
+                    Some(&mut stats[(t - s) * sq..(t - s + 1) * sq]),
+                );
+            }
+        })
+    })
+}
+
+/// Dense flash backward: given the forward's Q/K/V slabs, output `o`,
+/// upstream gradient `dout` and the saved log-sum-exp `lse`, produce
+/// `(dQ, dK, dV)` in the same slab layout. Parallel over the
+/// (batch·head) grid only (each head's tile walk is the fixed serial
+/// order of [`attend_head_bwd`]), so the result is bit-identical at any
+/// thread count and across the dispatch ladder.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_attention_bwd_on(
+    d: Dispatch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    dout: &[f32],
+    lse: &[f32],
+    shape: &AttnShape,
+    pool: &Pool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    shape.validate();
+    let n = shape.qkv_len();
+    for (name, buf) in [("q", q), ("k", k), ("v", v), ("o", o), ("dout", dout)] {
+        assert_eq!(buf.len(), n, "attention bwd: {name} length vs shape");
+    }
+    let (sq, dh) = (shape.seq, shape.head_dim);
+    let tasks = shape.batch * shape.heads;
+    assert_eq!(lse.len(), tasks * sq, "attention bwd: lse length vs shape");
+    let slab = sq * dh;
+    let packed = pool.for_tasks().map_chunks_flat(tasks, 3 * slab, |s, e, win| {
+        kernels::with_workspace(|ws| {
+            for t in s..e {
+                let off = t * slab;
+                let src = HeadSrc::Dense {
+                    q: &q[off..off + slab],
+                    k: &k[off..off + slab],
+                    v: &v[off..off + slab],
+                };
+                let base = (t - s) * 3 * slab;
+                let (dq, rest) = win[base..base + 3 * slab].split_at_mut(slab);
+                let (dk, dv) = rest.split_at_mut(slab);
+                attend_head_bwd(
+                    d,
+                    &src,
+                    &o[off..off + slab],
+                    &dout[off..off + slab],
+                    &lse[t * sq..(t + 1) * sq],
+                    sq,
+                    dh,
+                    shape.causal,
+                    ws,
+                    dq,
+                    dk,
+                    dv,
+                );
+            }
+        })
+    });
+    // Unpack the [dq|dk|dv]-per-task layout into three slab tensors —
+    // a deterministic reshape (pure copies at fixed offsets).
+    let mut dq = vec![0f32; n];
+    let mut dk = vec![0f32; n];
+    let mut dv = vec![0f32; n];
+    for t in 0..tasks {
+        let base = t * 3 * slab;
+        dq[t * slab..(t + 1) * slab].copy_from_slice(&packed[base..base + slab]);
+        dk[t * slab..(t + 1) * slab].copy_from_slice(&packed[base + slab..base + 2 * slab]);
+        dv[t * slab..(t + 1) * slab].copy_from_slice(&packed[base + 2 * slab..base + 3 * slab]);
+    }
+    (dq, dk, dv)
 }
 
 // ---------------------------------------------------------------------------
@@ -515,36 +856,58 @@ pub fn attend_compressed_on(
     pool: &Pool,
     tracker: Option<&MemoryTracker>,
 ) -> Vec<f32> {
+    attend_compressed_core(d, comp, wq, wk, wv, shape, pool, tracker, false).0
+}
+
+/// Training-mode fused forward: [`attend_compressed_on`] that also
+/// returns the per-row log-sum-exp statistics (task-major,
+/// `batch·heads·seq` f32). Together with the [`Compressed`] the caller
+/// already holds, those statistics are the ENTIRE saved-for-backward
+/// set of the fused QKV+attention block (`crate::autograd`).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_compressed_fwd_on(
+    d: Dispatch,
+    comp: &Compressed,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    shape: &AttnShape,
+    pool: &Pool,
+    tracker: Option<&MemoryTracker>,
+) -> (Vec<f32>, Vec<f32>) {
+    let (out, lse) = attend_compressed_core(d, comp, wq, wk, wv, shape, pool, tracker, true);
+    (out, lse.expect("stats requested"))
+}
+
+/// Shared fused-forward core (see [`attend_compressed_on`] for the
+/// accounting contract). With `want_stats` the grid pass writes the
+/// output slab and the log-sum-exp rows together through
+/// [`Pool::map_chunks_flat2`]; without, the plain one-output stitch.
+#[allow(clippy::too_many_arguments)]
+fn attend_compressed_core(
+    d: Dispatch,
+    comp: &Compressed,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    shape: &AttnShape,
+    pool: &Pool,
+    tracker: Option<&MemoryTracker>,
+    want_stats: bool,
+) -> (Vec<f32>, Option<Vec<f32>>) {
     shape.validate();
     assert_eq!(comp.b(), shape.tokens(), "attention: compressed rows vs batch·seq");
-    let n_in = comp.generators.cols();
     let dm = shape.d_model();
-    for (name, w) in [("wq", wq), ("wk", wk), ("wv", wv)] {
-        assert_eq!(w.rows(), n_in, "attention: {name} rows vs x width");
-        assert_eq!(w.cols(), dm, "attention: {name} cols vs heads·head_dim");
-    }
     if let Some(t) = tracker {
         t.alloc(comp.stored_bytes());
     }
-    // The projections run on the caller thread and grow ITS workspace
-    // packing buffers — a real transient of the fused path, charged
-    // like the worker scratch (TLS, so only growth is new bytes).
-    let packs_before = tracker.map(|_| kernels::with_workspace(|ws| ws_bytes(ws)));
-    let gq = comp.project_generators(wq);
-    let gk = comp.project_generators(wk);
-    let gv = comp.project_generators(wv);
+    let (gq, gk, gv) = project_qkv_generators(comp, wq, wk, wv, shape, tracker);
     let gbytes = 3 * comp.k() * dm * 4;
-    if let Some(t) = tracker {
-        t.alloc(gbytes);
-        if let Some(before) = packs_before {
-            t.alloc(kernels::with_workspace(|ws| ws_bytes(ws)).saturating_sub(before));
-        }
-    }
 
     let (sq, dh) = (shape.seq, shape.head_dim);
     let slab = sq * dh;
     let tasks = shape.batch * shape.heads;
-    let out = pool.for_tasks().map_chunks_flat(tasks, slab, |s, e, out| {
+    let run_tasks = |s: usize, e: usize, out: &mut [f32], mut stats: Option<&mut [f32]>| {
         kernels::with_workspace(|ws| {
             let before = ws_bytes(ws);
             for t in s..e {
@@ -566,6 +929,142 @@ pub fn attend_compressed_on(
                     shape.causal,
                     ws,
                     &mut out[(t - s) * slab..(t - s + 1) * slab],
+                    stats.as_deref_mut().map(|st| &mut st[(t - s) * sq..(t - s + 1) * sq]),
+                );
+            }
+            if let Some(tr) = tracker {
+                tr.alloc(ws_bytes(ws).saturating_sub(before));
+            }
+        })
+    };
+    let grid = pool.for_tasks();
+    let (out, lse) = if want_stats {
+        let (out, lse) =
+            grid.map_chunks_flat2(tasks, slab, sq, |s, e, out, st| run_tasks(s, e, out, Some(st)));
+        (out, Some(lse))
+    } else {
+        (grid.map_chunks_flat(tasks, slab, |s, e, out| run_tasks(s, e, out, None)), None)
+    };
+    if let Some(t) = tracker {
+        t.free(gbytes);
+        t.free(comp.stored_bytes());
+    }
+    (out, lse)
+}
+
+/// Project the generators through all three weights (`G = C·W`, k rows
+/// each), charging the G bytes and the caller-thread packing growth to
+/// `tracker`. Shared by the fused forward and backward (the backward
+/// *recomputes* G rather than saving it — k·d_model×3 of transient
+/// compute in exchange for keeping the saved-for-backward set at
+/// `Compressed` + statistics only).
+fn project_qkv_generators(
+    comp: &Compressed,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    shape: &AttnShape,
+    tracker: Option<&MemoryTracker>,
+) -> (Mat, Mat, Mat) {
+    let n_in = comp.generators.cols();
+    let dm = shape.d_model();
+    for (name, w) in [("wq", wq), ("wk", wk), ("wv", wv)] {
+        assert_eq!(w.rows(), n_in, "attention: {name} rows vs x width");
+        assert_eq!(w.cols(), dm, "attention: {name} cols vs heads·head_dim");
+    }
+    // The projections run on the caller thread and grow ITS workspace
+    // packing buffers — a real transient of the fused path, charged
+    // like the worker scratch (TLS, so only growth is new bytes).
+    let packs_before = tracker.map(|_| kernels::with_workspace(|ws| ws_bytes(ws)));
+    let gq = comp.project_generators(wq);
+    let gk = comp.project_generators(wk);
+    let gv = comp.project_generators(wv);
+    if let Some(t) = tracker {
+        t.alloc(3 * comp.k() * dm * 4);
+        if let Some(before) = packs_before {
+            t.alloc(kernels::with_workspace(|ws| ws_bytes(ws)).saturating_sub(before));
+        }
+    }
+    (gq, gk, gv)
+}
+
+/// Fused backward of the PAMM-compressed QKV+attention block: from the
+/// saved [`Compressed`], the forward output, the upstream gradient and
+/// the saved log-sum-exp, produce the three **projection-space**
+/// gradients `(dQᵖ, dKᵖ, dVᵖ)` as `(tokens × d_model)` matrices (head
+/// slabs merged back token-major). The weight gradients then follow as
+/// `dW = pamm::grad_w(comp, dYᵖ)` and the exact input gradient as
+/// `dX = Σ dYᵖ·Wᵀ` — composed one level up in `crate::autograd`.
+///
+/// Q/K/V strips are rebuilt per tile from the recomputed `G = C·W`
+/// exactly as the forward built them — the dense projections never
+/// materialize in the backward either. Accounting: G, the packed
+/// per-task dQ/dK/dV buffer, per-worker scratch growth AND the three
+/// merged matrices (which coexist with the still-live packed buffer —
+/// the true transient maximum of the backward) are all charged to
+/// `tracker`; on return the merged matrices leave as the caller's
+/// product (freed here, re-charged by the caller for as long as it
+/// holds them — see `autograd::qkv_attn_backward_on`).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_compressed_bwd_on(
+    d: Dispatch,
+    comp: &Compressed,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    o: &[f32],
+    dout: &[f32],
+    lse: &[f32],
+    shape: &AttnShape,
+    pool: &Pool,
+    tracker: Option<&MemoryTracker>,
+) -> (Mat, Mat, Mat) {
+    shape.validate();
+    assert_eq!(comp.b(), shape.tokens(), "attention bwd: compressed rows vs batch·seq");
+    let n = shape.qkv_len();
+    assert_eq!(o.len(), n, "attention bwd: o length vs shape");
+    assert_eq!(dout.len(), n, "attention bwd: dout length vs shape");
+    let (sq, dh) = (shape.seq, shape.head_dim);
+    let tasks = shape.batch * shape.heads;
+    assert_eq!(lse.len(), tasks * sq, "attention bwd: lse length vs shape");
+    let (gq, gk, gv) = project_qkv_generators(comp, wq, wk, wv, shape, tracker);
+    let gbytes = 3 * comp.k() * shape.d_model() * 4;
+
+    let slab = sq * dh;
+    if let Some(t) = tracker {
+        t.alloc(tasks * 3 * slab * 4); // the packed dQ/dK/dV grid output
+    }
+    let packed = pool.for_tasks().map_chunks_flat(tasks, 3 * slab, |s, e, win| {
+        kernels::with_workspace(|ws| {
+            let before = ws_bytes(ws);
+            for t in s..e {
+                let (b, h) = (t / shape.heads, t % shape.heads);
+                let src = HeadSrc::Pamm {
+                    gq: &gq,
+                    gk: &gk,
+                    gv: &gv,
+                    alpha: &comp.alpha,
+                    assign: &comp.assign,
+                    col0: h * dh,
+                    tok0: b * sq,
+                };
+                let off = t * slab;
+                let base = (t - s) * 3 * slab;
+                let (dq, rest) = win[base..base + 3 * slab].split_at_mut(slab);
+                let (dk, dv) = rest.split_at_mut(slab);
+                attend_head_bwd(
+                    d,
+                    &src,
+                    &o[off..off + slab],
+                    &dout[off..off + slab],
+                    &lse[t * sq..(t + 1) * sq],
+                    sq,
+                    dh,
+                    shape.causal,
+                    ws,
+                    dq,
+                    dk,
+                    dv,
                 );
             }
             if let Some(tr) = tracker {
@@ -573,11 +1072,26 @@ pub fn attend_compressed_on(
             }
         })
     });
+    // The merged matrices coexist with the packed buffer until it
+    // drops below — charge them up front so the tracker sees the true
+    // packed+merged+G maximum, not just its tail.
+    let merged_bytes = 3 * shape.tokens() * shape.d_model() * 4;
     if let Some(t) = tracker {
-        t.free(gbytes);
-        t.free(comp.stored_bytes());
+        t.alloc(merged_bytes);
     }
-    out
+    let dqp = merge_heads_packed(&packed, 0, 3, shape);
+    let dkp = merge_heads_packed(&packed, 1, 3, shape);
+    let dvp = merge_heads_packed(&packed, 2, 3, shape);
+    // `comp` is the caller's saved-for-backward state (accounted in the
+    // ledger's saved column), so unlike the forward it is not charged
+    // as a transient here; the merged matrices leave as the caller's
+    // product (re-charged there while held).
+    if let Some(t) = tracker {
+        t.free(tasks * 3 * slab * 4);
+        t.free(gbytes);
+        t.free(merged_bytes);
+    }
+    (dqp, dkp, dvp)
 }
 
 /// The workspace bytes the fused path charges per worker: attention
@@ -613,6 +1127,18 @@ pub fn tile_scratch_bytes(head_dim: usize) -> usize {
     let pa = BR.div_ceil(MR) * MR * kc.max(BC);
     let pb = BC.div_ceil(NR) * NR * kc.max(dp);
     4 * (tiles + pa + pb)
+}
+
+/// Per-thread tile-scratch ceiling of one **backward** tile walk: the
+/// forward model plus the backward-only buffers (`vt` d×Bc, `ds`
+/// Br×Bc, and the seq-long `D` vector). The backward's five per-tile
+/// GEMMs permute (Br, Bc, d) through the same operand roles as the
+/// forward's two, so the packed-panel ceiling inside
+/// [`tile_scratch_bytes`] — `pa ≤ Br·max(kc, Bc)`, `pb ≤
+/// Bc·max(kc, d̂)` padded — already dominates every backward pack too;
+/// only the explicit scratch grows.
+pub fn bwd_tile_scratch_bytes(head_dim: usize, seq: usize) -> usize {
+    tile_scratch_bytes(head_dim) + 4 * (head_dim * BC + BR * BC + seq)
 }
 
 /// Ceiling for the *tracked* peak of [`pamm_qkv_attention_tracked`]:
@@ -656,6 +1182,41 @@ pub fn split_heads(m: &Mat, shape: &AttnShape) -> Vec<f32> {
             for hh in 0..h {
                 out[((b * h + hh) * l + i) * d..((b * h + hh) * l + i + 1) * d]
                     .copy_from_slice(&row[hh * d..(hh + 1) * d]);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`split_heads`]: fold `(batch, heads, seq, head_dim)`
+/// slabs back into a token-major `(tokens × d_model)` matrix — how the
+/// backward's per-head dQ/dK/dV slabs become the projection-space
+/// gradients `pamm::grad_w` consumes.
+pub fn merge_heads(slabs: &[f32], shape: &AttnShape) -> Mat {
+    merge_heads_packed(slabs, 0, 1, shape)
+}
+
+/// [`merge_heads`] reading lane `lane` of a packed per-task layout:
+/// task `t`'s window holds `lanes` consecutive `seq × head_dim` slabs
+/// (the backward grid writes `[dq|dk|dv]` per task, `lanes = 3`), and
+/// this folds one of them token-major without first unpacking the
+/// buffer. Pure fixed-offset copies — a deterministic reshape.
+pub fn merge_heads_packed(packed: &[f32], lane: usize, lanes: usize, shape: &AttnShape) -> Mat {
+    let (hh, l, d) = (shape.heads, shape.seq, shape.head_dim);
+    let slab = l * d;
+    assert!(lane < lanes, "merge_heads_packed: lane {lane} out of {lanes}");
+    assert_eq!(
+        packed.len(),
+        shape.batch * hh * lanes * slab,
+        "merge_heads_packed: buffer vs shape"
+    );
+    let mut out = Mat::zeros(shape.tokens(), shape.d_model());
+    for b in 0..shape.batch {
+        for h in 0..hh {
+            let base = (b * hh + h) * lanes * slab + lane * slab;
+            for i in 0..l {
+                out.row_mut(b * l + i)[h * d..(h + 1) * d]
+                    .copy_from_slice(&packed[base + i * d..base + (i + 1) * d]);
             }
         }
     }
@@ -792,6 +1353,78 @@ mod tests {
     }
 
     #[test]
+    fn merge_heads_inverts_split_heads() {
+        let shape = AttnShape::new(2, 3, 5, 4, false);
+        let m = Mat::from_fn(shape.tokens(), shape.d_model(), |i, j| (i * 1000 + j) as f32);
+        let slabs = split_heads(&m, &shape);
+        assert_eq!(merge_heads(&slabs, &shape), m);
+        // Packed form: lane 1 of a 3-lane layout round-trips too.
+        let slab = shape.seq * shape.head_dim;
+        let tasks = shape.batch * shape.heads;
+        let mut packed = vec![0f32; tasks * 3 * slab];
+        for t in 0..tasks {
+            packed[t * 3 * slab + slab..t * 3 * slab + 2 * slab]
+                .copy_from_slice(&slabs[t * slab..(t + 1) * slab]);
+        }
+        assert_eq!(merge_heads_packed(&packed, 1, 3, &shape), m);
+    }
+
+    #[test]
+    fn fwd_stats_match_the_output_and_a_direct_logsumexp() {
+        // The stats-producing forward must return the exact same output
+        // as the plain forward, and L_i must equal the masked row
+        // log-sum-exp of the score matrix (within f32 rounding).
+        let shape = AttnShape::new(1, 2, BR + 3, 8, true);
+        let n = shape.qkv_len();
+        let q = rand_vec(n, 40);
+        let k = rand_vec(n, 41);
+        let v = rand_vec(n, 42);
+        let pool = Pool::serial();
+        let d = kernels::active();
+        let plain = flash_attention_on(d, &q, &k, &v, &shape, &pool);
+        let (out, lse) = flash_attention_fwd_on(d, &q, &k, &v, &shape, &pool);
+        assert_eq!(out, plain, "stats pass must not perturb the output");
+        assert_eq!(lse.len(), shape.batch * shape.heads * shape.seq);
+        let (l, dh) = (shape.seq, shape.head_dim);
+        let scale = 1.0 / (dh as f32).sqrt();
+        for t in 0..shape.batch * shape.heads {
+            let off = t * l * dh;
+            for i in 0..l {
+                let mut scores = Vec::new();
+                for j in 0..=i {
+                    scores.push(
+                        scale
+                            * dot(&q[off + i * dh..off + (i + 1) * dh], &k[off + j * dh..off + (j + 1) * dh]),
+                    );
+                }
+                let mx = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let want = mx + scores.iter().map(|s| (s - mx).exp()).sum::<f32>().ln();
+                let got = lse[t * l + i];
+                assert!(
+                    (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                    "task {t} row {i}: lse {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_backward_zero_grad_for_zero_dout() {
+        let shape = AttnShape::new(1, 2, 20, 8, true);
+        let n = shape.qkv_len();
+        let q = rand_vec(n, 50);
+        let k = rand_vec(n, 51);
+        let v = rand_vec(n, 52);
+        let pool = Pool::serial();
+        let d = kernels::active();
+        let (o, lse) = flash_attention_fwd_on(d, &q, &k, &v, &shape, &pool);
+        let dout = vec![0f32; n];
+        let (dq, dk, dv) =
+            flash_attention_bwd_on(d, &q, &k, &v, &o, &dout, &lse, &shape, &pool);
+        assert!(dq.iter().chain(&dk).chain(&dv).all(|&x| x == 0.0));
+    }
+
+    #[test]
     fn flops_and_bounds_sanity() {
         let sh = AttnShape::new(1, 2, 128, 32, false);
         assert_eq!(sh.flops(), 4.0 * 2.0 * 32.0 * 128.0 * 128.0);
@@ -801,5 +1434,10 @@ mod tests {
         // The scratch model is far below one materialized tensor at
         // real sequence lengths.
         assert!(tile_scratch_bytes(64) < AttnShape::new(1, 1, 2048, 64, true).tensor_bytes());
+        // Backward scratch = forward + exactly vt/ds/D.
+        assert_eq!(
+            bwd_tile_scratch_bytes(64, 512),
+            tile_scratch_bytes(64) + 4 * (64 * BC + BR * BC + 512)
+        );
     }
 }

@@ -1,0 +1,489 @@
+//! Minimal reverse-mode autograd for the native hot path — the
+//! compressed-activation training step of the paper, end to end in
+//! Rust (DESIGN.md §6).
+//!
+//! The paper's headline is a *training*-memory claim: the Q/K/V
+//! projection activations are stored PAMM-compressed in the forward
+//! pass and only approximately reconstructed in the backward to form
+//! weight gradients. PRs 1–3 built the forward ( `pamm::compress`,
+//! `attention::pamm_qkv_attention`); this module closes the loop with
+//! a backward that *consumes* the compressed residuals:
+//!
+//! * **Forward** ([`qkv_attn_forward`]): compress `x`, attend straight
+//!   off the [`Compressed`] representation with softmax statistics —
+//!   what gets pushed on the [`Tape`] is **only** the `Compressed`
+//!   struct plus the per-row log-sum-exp (O(seq) per head). No dense
+//!   activation is ever saved.
+//! * **Backward** ([`qkv_attn_backward`]): FlashAttention-2-style
+//!   recomputation (`attention::attend_compressed_bwd_on`) rebuilds
+//!   Q/K/V strips per tile from the recomputed `G = C·W`, yields the
+//!   projection-space gradients, and the weight gradients follow as
+//!   the gather-scaled `dW = β·Cᵀ·B̃` of [`pamm::grad_w`] — the
+//!   `Ãᵀ·dY` form, never a dense `b×n` residual contraction. `dα` and
+//!   `d(assign)` are treated straight-through (constants of the
+//!   forward), exactly like the JAX custom-vjp in
+//!   `python/compile/pamm_layer.py`. The input gradient `dX = Σ
+//!   dYᵖ·Wᵀ` is exact (W is a parameter, stored regardless).
+//!
+//! # Determinism
+//!
+//! Every stage routes through `tensor::kernels` (no-FMA
+//! scalar==sse2==avx2 bit-identity) and partitions work only over the
+//! (batch·head) grid / output rows / output columns on `poolx` — so
+//! loss, gradients and the updated weights are **bit-identical at any
+//! thread count and at every dispatch level**
+//! (`rust/tests/prop_backward.rs`).
+//!
+//! # Memory ledger
+//!
+//! A tracked step fills a [`MemoryLedger`]: forward transients, the
+//! exact saved-for-backward total ([`QkvAttnSaved::saved_bytes`] =
+//! `Compressed::stored_bytes()` + statistics), and backward transients
+//! — the backward peak asserted against the analytic
+//! [`backward_peak_bound`], and the saved total against
+//! [`dense_saved_bytes`], the bytes a dense-autodiff implementation of
+//! the same block would keep between forward and backward (X + the
+//! three Q/K/V tensors + the same statistics). Known undermeasure: the
+//! per-worker B̃ scratch growth inside `pamm::grad_w` is not plumbed to
+//! the tracker (it is covered by the bound's B̃ term); everything else
+//! the backward allocates is charged.
+
+use crate::attention::{self, AttnShape};
+use crate::memory::MemoryLedger;
+use crate::pamm::{self, Compressed, Eps};
+use crate::poolx::{self, Pool};
+use crate::tensor::kernels::{self, Dispatch, KC, MC, MR, NC, NR};
+use crate::tensor::Mat;
+
+/// Saved-for-backward state of one fused PAMM-QKV + flash-attention
+/// block: the compressed projection input and the O(seq) softmax
+/// statistics — nothing else. This struct *is* the paper's memory
+/// story: `stored_bytes + 4·(batch·heads·seq)` versus the dense
+/// `X + Q + K + V` set of an uncompressed autodiff.
+#[derive(Debug, Clone)]
+pub struct QkvAttnSaved {
+    pub comp: Compressed,
+    /// Per-row log-sum-exp of the softmax, task-major
+    /// (`batch·heads·seq` f32) — FlashAttention-2's backward residual.
+    pub lse: Vec<f32>,
+    pub shape: AttnShape,
+}
+
+impl QkvAttnSaved {
+    /// Exact bytes this node keeps live between forward and backward.
+    pub fn saved_bytes(&self) -> usize {
+        self.comp.stored_bytes() + self.lse.len() * 4
+    }
+}
+
+/// Gradients of one fused block. `dx` is present only when requested
+/// (`need_dx`): the last layer of a net feeds no one below it.
+#[derive(Debug)]
+pub struct QkvGrads {
+    pub dwq: Mat,
+    pub dwk: Mat,
+    pub dwv: Mat,
+    pub dx: Option<Mat>,
+}
+
+/// Minimal reverse-mode tape: the forward pushes one saved node per
+/// differentiable block, the backward pops in reverse order. Only the
+/// hot-path op exists (the PAMM-compressed QKV projection fused with
+/// flash attention); a multi-layer model is N pushes and N pops, and
+/// [`Tape::saved_bytes`] is the whole-net saved-for-backward figure
+/// the ledger records.
+#[derive(Debug, Default)]
+pub struct Tape {
+    nodes: Vec<QkvAttnSaved>,
+}
+
+impl Tape {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, saved: QkvAttnSaved) {
+        self.nodes.push(saved);
+    }
+
+    /// Pop the most recent node — backward consumes the tape in
+    /// reverse push order.
+    pub fn pop(&mut self) -> Option<QkvAttnSaved> {
+        self.nodes.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total saved-for-backward bytes currently held by the tape.
+    pub fn saved_bytes(&self) -> usize {
+        self.nodes.iter().map(|n| n.saved_bytes()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward / backward
+// ---------------------------------------------------------------------------
+
+/// Training forward of the fused block on the process-wide pool; see
+/// [`qkv_attn_forward_on`].
+pub fn qkv_attn_forward(
+    x: &Mat,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    gen_idx: &[usize],
+    eps: Eps,
+    shape: &AttnShape,
+) -> (Vec<f32>, QkvAttnSaved) {
+    qkv_attn_forward_on(kernels::active(), x, wq, wk, wv, gen_idx, eps, shape, poolx::global(), None)
+}
+
+/// Training forward: compress `x`, attend off the compressed
+/// representation with statistics. Returns the attention output (the
+/// caller's product, not charged) and the saved node. With a ledger,
+/// forward transients land in `ledger.forward` and the node's exact
+/// byte count is recorded as saved.
+#[allow(clippy::too_many_arguments)]
+pub fn qkv_attn_forward_on(
+    d: Dispatch,
+    x: &Mat,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    gen_idx: &[usize],
+    eps: Eps,
+    shape: &AttnShape,
+    pool: &Pool,
+    ledger: Option<&MemoryLedger>,
+) -> (Vec<f32>, QkvAttnSaved) {
+    assert_eq!(x.rows(), shape.tokens(), "autograd: x rows vs batch·seq");
+    let comp = pamm::compress_with(x, gen_idx, eps, pool);
+    let (out, lse) = attention::attend_compressed_fwd_on(
+        d,
+        &comp,
+        wq,
+        wk,
+        wv,
+        shape,
+        pool,
+        ledger.map(|l| &l.forward),
+    );
+    let saved = QkvAttnSaved { comp, lse, shape: *shape };
+    if let Some(l) = ledger {
+        l.record_saved(saved.saved_bytes());
+    }
+    (out, saved)
+}
+
+/// Backward of the fused block on the process-wide pool; see
+/// [`qkv_attn_backward_on`].
+pub fn qkv_attn_backward(
+    saved: &QkvAttnSaved,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    out: &[f32],
+    dout: &[f32],
+    need_dx: bool,
+) -> QkvGrads {
+    qkv_attn_backward_on(
+        kernels::active(),
+        saved,
+        wq,
+        wk,
+        wv,
+        out,
+        dout,
+        need_dx,
+        poolx::global(),
+        None,
+    )
+}
+
+/// Backward: attention recomputation walk → projection-space gradients
+/// → `dW = pamm::grad_w` per weight (+ exact `dX` when `need_dx`).
+/// With a ledger, backward transients (recomputed G, the dQ/dK/dV grid
+/// buffer, merged projection gradients, the Wᵀ/partial-product
+/// temporaries of dX) land in `ledger.backward`; the returned
+/// gradients are the caller's product and are not charged.
+#[allow(clippy::too_many_arguments)]
+pub fn qkv_attn_backward_on(
+    d: Dispatch,
+    saved: &QkvAttnSaved,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    out: &[f32],
+    dout: &[f32],
+    need_dx: bool,
+    pool: &Pool,
+    ledger: Option<&MemoryLedger>,
+) -> QkvGrads {
+    let shape = &saved.shape;
+    let tracker = ledger.map(|l| &l.backward);
+    let (dqp, dkp, dvp) = attention::attend_compressed_bwd_on(
+        d,
+        &saved.comp,
+        wq,
+        wk,
+        wv,
+        out,
+        dout,
+        &saved.lse,
+        shape,
+        pool,
+        tracker,
+    );
+    let merged_bytes = 3 * shape.tokens() * shape.d_model() * 4;
+    if let Some(t) = tracker {
+        t.alloc(merged_bytes);
+    }
+    // dW = β·Ãᵀ·dYᵖ in the gather-scaled Cᵀ·B̃ form — one index
+    // accumulate + one k-row GEMM per weight, never a dense b×n
+    // contraction (the whole point of the saved Compressed).
+    let dwq = pamm::grad_w_with(&saved.comp, &dqp, pool);
+    let dwk = pamm::grad_w_with(&saved.comp, &dkp, pool);
+    let dwv = pamm::grad_w_with(&saved.comp, &dvp, pool);
+    let dx = if need_dx {
+        // Exact input gradient: dX = dQᵖ·Wqᵀ + dKᵖ·Wkᵀ + dVᵖ·Wvᵀ. One
+        // transposed weight + one partial product live at a time on top
+        // of the accumulator; the accumulator itself becomes the
+        // returned dx (the caller's product) and is freed here like the
+        // other transients once ownership leaves the tracked region.
+        let wt_bytes = wq.rows() * wq.cols() * 4;
+        let part_bytes = shape.tokens() * wq.rows() * 4;
+        let mut dx: Option<Mat> = None;
+        for (dyp, w) in [(&dqp, wq), (&dkp, wk), (&dvp, wv)] {
+            if let Some(t) = tracker {
+                t.alloc(wt_bytes + part_bytes);
+            }
+            let part = dyp.matmul_with(&w.transpose(), pool);
+            match dx.as_mut() {
+                None => dx = Some(part), // the accumulator stays charged
+                Some(acc) => {
+                    acc.add_assign(&part);
+                    if let Some(t) = tracker {
+                        t.free(part_bytes);
+                    }
+                }
+            }
+            if let Some(t) = tracker {
+                t.free(wt_bytes);
+            }
+        }
+        if let Some(t) = tracker {
+            t.free(part_bytes); // the accumulator leaves as the product
+        }
+        dx
+    } else {
+        None
+    };
+    if let Some(t) = tracker {
+        t.free(merged_bytes);
+    }
+    QkvGrads { dwq, dwk, dwv, dx }
+}
+
+/// Mean-squared-error loss and its gradient in one pass:
+/// `L = Σ(out−target)² / (2·len)`, `dout = (out−target)/len`. Scalar
+/// fixed-order f32 arithmetic — thread- and dispatch-invariant by
+/// construction.
+pub fn mse_loss(out: &[f32], target: &[f32]) -> (f32, Vec<f32>) {
+    assert_eq!(out.len(), target.len(), "mse: length mismatch");
+    let n = out.len().max(1) as f32;
+    let mut loss = 0.0f32;
+    let mut dout = Vec::with_capacity(out.len());
+    for (&o, &t) in out.iter().zip(target) {
+        let e = o - t;
+        loss += e * e;
+        dout.push(e / n);
+    }
+    (loss / (2.0 * n), dout)
+}
+
+// ---------------------------------------------------------------------------
+// Analytic memory model
+// ---------------------------------------------------------------------------
+
+/// Packed-panel bytes one `m×n×k` GEMM can reserve (the exact-growth
+/// capacity model of `tensor::kernels`: MR/NR-padded strips of one
+/// MC×KC / KC×NC block).
+fn pack_bytes_bound(m: usize, n: usize, k: usize) -> usize {
+    let kc = k.min(KC);
+    let pa = m.min(MC).div_ceil(MR) * MR * kc;
+    let pb = n.min(NC).div_ceil(NR) * NR * kc;
+    4 * (pa + pb)
+}
+
+/// Ceiling for the tracked backward-transient peak of
+/// [`qkv_attn_backward_on`]:
+///
+/// * the packed per-task dQ/dK/dV grid buffer (3 Q/K/V tensors — the
+///   gradient slabs are genuine outputs of any attention backward),
+/// * the three merged projection-gradient matrices,
+/// * the recomputed `G = C·W` set + the caller's projection packing,
+/// * per-worker backward tile scratch + the apply-stage B̃ (≤ k·d_model
+///   per worker) + the apply GEMM packing,
+/// * the dX temporaries (one Wᵀ + one partial product) when `need_dx`.
+///
+/// Sound for the same reason as `attention::fused_peak_bound`: every
+/// scratch path grows with `reserve_exact`, so capacities equal the
+/// model — and the tracked measurement charges a subset of these
+/// terms (see the module docs on the B̃ undermeasure).
+///
+/// Takes the compression *geometry* (`k` generators over an `n_in`-wide
+/// input) rather than a [`Compressed`] — those two numbers are all the
+/// bound depends on, so callers never need to rebuild a compression
+/// just to evaluate it.
+pub fn backward_peak_bound(
+    k: usize,
+    n_in: usize,
+    shape: &AttnShape,
+    threads: usize,
+    need_dx: bool,
+) -> usize {
+    let dm = shape.d_model();
+    let tokens = shape.tokens();
+    let slabs = 3 * shape.tensor_bytes();
+    let merged = 3 * tokens * dm * 4;
+    let g = 3 * k * dm * 4 + pack_bytes_bound(k, dm, n_in);
+    let per_worker = attention::bwd_tile_scratch_bytes(shape.head_dim, shape.seq)
+        + k * dm * 4
+        + pack_bytes_bound(n_in, dm, k);
+    let dx_extra = if need_dx {
+        n_in * dm * 4 + tokens * n_in * 4 + threads * pack_bytes_bound(tokens, n_in, dm)
+    } else {
+        0
+    };
+    slabs + merged + g + threads * per_worker + dx_extra
+}
+
+/// Saved-for-backward bytes of a *dense* autodiff implementation of
+/// the same block: the shared projection input X (`tokens × n_in`,
+/// saved once per block — the convention of `memory::qkv_saved_bytes`)
+/// plus the three materialized Q/K/V tensors the dense flash backward
+/// keeps, plus the same O(seq) statistics. This is the baseline the
+/// ledger's compression-factor row divides by.
+pub fn dense_saved_bytes(n_in: usize, shape: &AttnShape) -> usize {
+    shape.tokens() * n_in * 4
+        + 3 * shape.tensor_bytes()
+        + shape.batch * shape.heads * shape.seq * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Xoshiro256;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        Mat::random_normal(rows, cols, 1.0, &mut rng)
+    }
+
+    fn setup(shape: &AttnShape, k: usize, seed: u64) -> (Mat, Mat, Mat, Mat, Vec<usize>) {
+        let dm = shape.d_model();
+        let x = rand_mat(shape.tokens(), dm, seed);
+        let wq = rand_mat(dm, dm, seed + 1);
+        let wk = rand_mat(dm, dm, seed + 2);
+        let wv = rand_mat(dm, dm, seed + 3);
+        let mut rng = Xoshiro256::new(seed + 4);
+        let idx = pamm::sample_generators(&mut rng, shape.tokens(), k);
+        (x, wq, wk, wv, idx)
+    }
+
+    #[test]
+    fn forward_output_matches_the_inference_path_bitwise() {
+        // The stats-producing training forward must not perturb the
+        // numbers of the PR-3 inference forward.
+        let shape = AttnShape::new(2, 2, 33, 8, true);
+        let (x, wq, wk, wv, idx) = setup(&shape, 10, 70);
+        let pool = Pool::serial();
+        let (_, want) = attention::pamm_qkv_attention_with(
+            &x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, &pool,
+        );
+        let (out, saved) = qkv_attn_forward_on(
+            kernels::active(),
+            &x,
+            &wq,
+            &wk,
+            &wv,
+            &idx,
+            Eps::Inf,
+            &shape,
+            &pool,
+            None,
+        );
+        assert_eq!(out, want);
+        assert_eq!(saved.lse.len(), shape.batch * shape.heads * shape.seq);
+        assert_eq!(saved.saved_bytes(), saved.comp.stored_bytes() + saved.lse.len() * 4);
+    }
+
+    #[test]
+    fn tape_pushes_and_pops_in_reverse() {
+        let shape = AttnShape::new(1, 1, 8, 4, false);
+        let (x, wq, wk, wv, idx) = setup(&shape, 3, 80);
+        let pool = Pool::serial();
+        let mut tape = Tape::new();
+        assert!(tape.is_empty());
+        let (_, s1) =
+            qkv_attn_forward_on(kernels::active(), &x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, &pool, None);
+        let b1 = s1.saved_bytes();
+        tape.push(s1);
+        let (_, s2) =
+            qkv_attn_forward_on(kernels::active(), &x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, &pool, None);
+        let b2 = s2.saved_bytes();
+        tape.push(s2);
+        assert_eq!(tape.len(), 2);
+        assert_eq!(tape.saved_bytes(), b1 + b2);
+        assert_eq!(tape.pop().map(|n| n.saved_bytes()), Some(b2), "LIFO order");
+        assert_eq!(tape.pop().map(|n| n.saved_bytes()), Some(b1));
+        assert!(tape.pop().is_none());
+    }
+
+    #[test]
+    fn mse_loss_and_gradient() {
+        let out = [1.0f32, 2.0, 3.0];
+        let tgt = [1.0f32, 1.0, 5.0];
+        let (loss, dout) = mse_loss(&out, &tgt);
+        // L = (0 + 1 + 4) / 6, d = e/3.
+        assert!((loss - 5.0 / 6.0).abs() < 1e-6);
+        assert_eq!(dout.len(), 3);
+        assert!((dout[1] - 1.0 / 3.0).abs() < 1e-7);
+        assert!((dout[2] + 2.0 / 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn saved_bytes_beat_the_dense_baseline() {
+        let shape = AttnShape::new(2, 2, 128, 16, true);
+        let (x, wq, wk, wv, idx) = setup(&shape, 8, 90);
+        let pool = Pool::serial();
+        let ledger = MemoryLedger::new();
+        let (_, saved) = qkv_attn_forward_on(
+            kernels::active(),
+            &x,
+            &wq,
+            &wk,
+            &wv,
+            &idx,
+            Eps::Inf,
+            &shape,
+            &pool,
+            Some(&ledger),
+        );
+        assert_eq!(ledger.saved(), saved.saved_bytes());
+        let dense = dense_saved_bytes(shape.d_model(), &shape);
+        // At k = 8 of 256 tokens the saved set must undercut the dense
+        // baseline by a wide margin (the factor row of the ledger).
+        assert!(
+            saved.saved_bytes() * 4 < dense,
+            "saved {} vs dense {dense}",
+            saved.saved_bytes()
+        );
+    }
+}

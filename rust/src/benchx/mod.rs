@@ -8,9 +8,9 @@
 //!
 //! Results also persist across PRs: [`BenchSink`] appends
 //! machine-readable entries (op, shape, threads, ns/iter,
-//! speedup-vs-serial — plus GFLOP/s, speedup-vs-scalar and measured
-//! peak bytes where a suite records them) and writes one
-//! `BENCH_<suite>.json` per suite
+//! speedup-vs-serial — plus GFLOP/s, speedup-vs-scalar, measured peak
+//! bytes and exact saved-for-backward bytes where a suite records
+//! them) and writes one `BENCH_<suite>.json` per suite
 //! under `benchmarks/` (override with `PAMM_BENCH_DIR`). The [`report`]
 //! module loads every `BENCH_*.json` back and renders the committed
 //! `BENCHMARKS.md` via `pamm bench-report` — the repo's perf trajectory
@@ -233,6 +233,11 @@ pub struct BenchEntry {
     /// persisted trail carries the memory claim next to the timing —
     /// not just the analytic model.
     pub peak_bytes: Option<f64>,
+    /// Exact saved-for-backward bytes of a training-step op (the
+    /// `train_backward` suite's forward rows attach
+    /// `autograd::QkvAttnSaved::saved_bytes` here) — the paper's
+    /// headline quantity, persisted beside the timing.
+    pub saved_bytes: Option<f64>,
 }
 
 /// The `name[scalar]` twin of a dispatch-tagged op name, if `op` is
@@ -283,6 +288,7 @@ impl BenchSink {
             gflops: None,
             speedup_vs_scalar: None,
             peak_bytes: None,
+            saved_bytes: None,
         });
     }
 
@@ -309,6 +315,15 @@ impl BenchSink {
     pub fn annotate_peak_bytes(&mut self, bytes: usize) {
         if let Some(e) = self.entries.last_mut() {
             e.peak_bytes = Some(bytes as f64);
+        }
+    }
+
+    /// Attach an exact saved-for-backward byte count to the most
+    /// recently recorded entry (the `train_backward` suite's forward
+    /// rows carry their tape node's figure this way).
+    pub fn annotate_saved_bytes(&mut self, bytes: usize) {
+        if let Some(e) = self.entries.last_mut() {
+            e.saved_bytes = Some(bytes as f64);
         }
     }
 
@@ -393,6 +408,9 @@ fn entry_json(e: &BenchEntry) -> Value {
     if let Some(pb) = e.peak_bytes {
         pairs.push(("peak_bytes", jsonx::num(pb)));
     }
+    if let Some(sb) = e.saved_bytes {
+        pairs.push(("saved_bytes", jsonx::num(sb)));
+    }
     jsonx::obj(pairs)
 }
 
@@ -413,6 +431,7 @@ pub fn load_file(path: impl AsRef<Path>) -> anyhow::Result<SuiteRecord> {
             gflops: e.get("gflops").as_f64(),
             speedup_vs_scalar: e.get("speedup_vs_scalar").as_f64(),
             peak_bytes: e.get("peak_bytes").as_f64(),
+            saved_bytes: e.get("saved_bytes").as_f64(),
         });
     }
     Ok(SuiteRecord {
@@ -588,6 +607,7 @@ mod tests {
         };
         sink.record_flops("fused_pamm[avx2]", "b=1 h=4 l=256 d=64", 1, &r, 1e6);
         sink.annotate_peak_bytes(264_708);
+        sink.annotate_saved_bytes(6_148);
         sink.record("flash[avx2]", "b=1 h=4 l=256 d=64", 1, &r);
 
         let dir = std::env::temp_dir().join(format!("pamm_benchx_pk_{}", std::process::id()));
@@ -595,8 +615,10 @@ mod tests {
         let rec = &load_dir(&dir).unwrap()[0];
         let fused = rec.entries.iter().find(|e| e.op == "fused_pamm[avx2]").unwrap();
         assert_eq!(fused.peak_bytes, Some(264_708.0));
+        assert_eq!(fused.saved_bytes, Some(6_148.0));
         let flash = rec.entries.iter().find(|e| e.op == "flash[avx2]").unwrap();
         assert!(flash.peak_bytes.is_none(), "annotation attaches to the last entry only");
+        assert!(flash.saved_bytes.is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

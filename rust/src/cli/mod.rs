@@ -96,10 +96,19 @@ USAGE:
   pamm finetune --task NAME [--r-inv N] [--steps N] [--seed N]
   pamm reproduce <fig3a|fig3b|table1|table2a|table2b|table3|table4|table5|
                   table6|table7|fig4a|fig4b|fig5|fig6|fig7|attention|all>
-                 [--quick] [--artifacts DIR] [--out DIR]
+                 [--quick] [--native] [--artifacts DIR] [--out DIR]
                                       # `attention` is native-only (P9/P10):
                                       # flash/fused throughput + measured
                                       # peak memory, no artifacts needed
+                                      # `table7 --native` runs REAL native
+                                      # optimization (fwd+bwd+Adam through
+                                      # the compressed-activation autograd)
+                                      # + the measured memory ledger (P11)
+  pamm ledger [--shape BxHxLxD] [--k N | --r-inv N] [--no-causal]
+                                      # one cold tracked native train step:
+                                      # per-phase memory ledger (forward /
+                                      # saved-for-backward / backward) with
+                                      # the analytic bounds, no artifacts
   pamm memory [--model M] [--batch N] [--seq N] [--r-inv N]
   pamm kernels [--artifacts DIR]      # validate native vs Pallas artifacts
   pamm kernels --probe                # print SIMD dispatch level, tile

@@ -15,7 +15,10 @@
 //!   (bounded channel) so tokenization never stalls a step.
 //! * [`ddp`] — gradient accumulation + simulated multi-worker all-reduce
 //!   built on the grad/apply artifact pair.
-//! * [`trainer`] — the top-level run loop used by the CLI and examples.
+//! * [`trainer`] — the top-level run loop used by the CLI and examples,
+//!   plus [`trainer::NativeTrainer`]: the artifact-free native train
+//!   step (compressed-activation fwd+bwd+update through
+//!   `crate::autograd`, the `pamm reproduce table7 --native` engine).
 
 pub mod ddp;
 pub mod pipeline;
@@ -23,4 +26,4 @@ pub mod session;
 pub mod trainer;
 
 pub use session::{ClassifierSession, TrainSession};
-pub use trainer::{train_run, TrainOutcome};
+pub use trainer::{train_run, NativeOpt, NativeTrainer, TrainOutcome};

@@ -1,9 +1,25 @@
 //! Top-level run loop: config → engine → session → steps, with eval,
 //! logging, throughput metering and checkpointing. Used by the CLI
 //! (`pamm train`), the examples, and the experiment harness.
+//!
+//! Two trainers live here:
+//!
+//! * [`train_run`] — the PJRT path: artifacts → [`TrainSession`] steps
+//!   (the model compute is an HLO executable; needs `make artifacts`).
+//! * [`NativeTrainer`] — the **native** path (no artifacts, pure L3):
+//!   one PAMM-compressed QKV + flash-attention block optimized with
+//!   real fwd → loss → bwd → update steps through `crate::autograd`.
+//!   Saved-for-backward state per step is the `Compressed` struct plus
+//!   O(seq) softmax statistics — the paper's training-memory story,
+//!   measured by the [`MemoryLedger`] when one is passed. Loss and the
+//!   updated weights are bit-identical at any thread count and SIMD
+//!   dispatch level (the optimizer arithmetic is fixed-order scalar
+//!   f32 on top of bit-identical gradients).
 
 use anyhow::{Context, Result};
 
+use crate::attention::AttnShape;
+use crate::autograd::{self, QkvGrads};
 use crate::checkpoint;
 use crate::config::RunConfig;
 use crate::coordinator::ddp::DdpTrainer;
@@ -11,8 +27,14 @@ use crate::coordinator::pipeline::BatchPipeline;
 use crate::coordinator::session::TrainSession;
 use crate::data::batcher::BatchIterator;
 use crate::jsonx;
+use crate::memory::MemoryLedger;
 use crate::metrics::{perplexity, Ema, RunLogger, ThroughputMeter};
+use crate::pamm::{self, Eps};
+use crate::poolx::Pool;
+use crate::rngx::Xoshiro256;
 use crate::runtime::{Engine, HostTensor};
+use crate::tensor::kernels::Dispatch;
+use crate::tensor::Mat;
 
 /// Result of a completed run (consumed by the experiment harness).
 #[derive(Debug, Clone)]
@@ -137,6 +159,163 @@ pub fn train_run(engine: &Engine, cfg: &RunConfig, quiet: bool) -> Result<TrainO
     })
 }
 
+// ---------------------------------------------------------------------------
+// Native compressed-activation trainer
+// ---------------------------------------------------------------------------
+
+/// Optimizer of the native train step. Both variants are fixed-order
+/// scalar f32 element loops — given bit-identical gradients, the
+/// updated weights are bit-identical too.
+#[derive(Debug, Clone, Copy)]
+pub enum NativeOpt {
+    Sgd { lr: f32 },
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl NativeOpt {
+    /// Paper-style Adam defaults.
+    pub fn adam(lr: f32) -> Self {
+        NativeOpt::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// First/second-moment state of one weight matrix (Adam only).
+#[derive(Debug, Clone)]
+struct Moments {
+    m: Mat,
+    v: Mat,
+}
+
+/// The native train step: one PAMM-compressed QKV projection layer
+/// fused with the flash-attention block, optimized for real on the L3
+/// substrates — no artifacts, no PJRT. See the module docs.
+pub struct NativeTrainer {
+    pub shape: AttnShape,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    /// Generator budget per step (`k = ⌈r·b⌉` of the paper).
+    pub k: usize,
+    pub eps: Eps,
+    opt: NativeOpt,
+    moments: Option<[Moments; 3]>,
+    step_no: usize,
+    rng: Xoshiro256,
+}
+
+/// Everything one step produced (harness/ledger consumers).
+#[derive(Debug)]
+pub struct NativeStepReport {
+    pub loss: f32,
+    /// Exact saved-for-backward bytes of the step's tape node.
+    pub saved_bytes: usize,
+    pub grads: QkvGrads,
+}
+
+impl NativeTrainer {
+    /// Deterministic init: weights ~ N(0, 0.05) from `seed`, generator
+    /// sampling from an independent stream. Same seed ⇒ the same run
+    /// at any thread count or dispatch level.
+    pub fn new(shape: AttnShape, k: usize, opt: NativeOpt, seed: u64) -> Self {
+        let dm = shape.d_model();
+        let mut rng = Xoshiro256::new(seed);
+        let wq = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let wk = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let wv = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let moments = match opt {
+            NativeOpt::Sgd { .. } => None,
+            NativeOpt::Adam { .. } => Some(std::array::from_fn(|_| Moments {
+                m: Mat::zeros(dm, dm),
+                v: Mat::zeros(dm, dm),
+            })),
+        };
+        Self {
+            shape,
+            wq,
+            wk,
+            wv,
+            k: k.max(1),
+            eps: Eps::Inf,
+            opt,
+            moments,
+            step_no: 0,
+            rng: Xoshiro256::new(seed ^ 0x9E3779B97F4A7C15),
+        }
+    }
+
+    /// One full training step: sample generators → compressed forward
+    /// (tape node = `Compressed` + statistics) → MSE loss vs `target`
+    /// → compressed backward → optimizer update. Returns the loss.
+    pub fn train_step_native(
+        &mut self,
+        x: &Mat,
+        target: &[f32],
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> f32 {
+        self.step_report(crate::tensor::kernels::active(), x, target, pool, ledger).loss
+    }
+
+    /// [`NativeTrainer::train_step_native`] with an explicit dispatch
+    /// level, returning the full report (tests and the ledger harness).
+    pub fn step_report(
+        &mut self,
+        d: Dispatch,
+        x: &Mat,
+        target: &[f32],
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> NativeStepReport {
+        let gen_idx = pamm::sample_generators(&mut self.rng, self.shape.tokens(), self.k);
+        let (out, saved) = autograd::qkv_attn_forward_on(
+            d, x, &self.wq, &self.wk, &self.wv, &gen_idx, self.eps, &self.shape, pool, ledger,
+        );
+        let (loss, dout) = autograd::mse_loss(&out, target);
+        let grads = autograd::qkv_attn_backward_on(
+            d, &saved, &self.wq, &self.wk, &self.wv, &out, &dout, false, pool, ledger,
+        );
+        self.step_no += 1;
+        self.apply_update(&grads);
+        NativeStepReport { loss, saved_bytes: saved.saved_bytes(), grads }
+    }
+
+    fn apply_update(&mut self, grads: &QkvGrads) {
+        let t = self.step_no;
+        let opt = self.opt;
+        let weights = [&mut self.wq, &mut self.wk, &mut self.wv];
+        let gs = [&grads.dwq, &grads.dwk, &grads.dwv];
+        match opt {
+            NativeOpt::Sgd { lr } => {
+                for (w, g) in weights.into_iter().zip(gs) {
+                    for (wv, &gv) in w.data_mut().iter_mut().zip(g.data()) {
+                        *wv -= lr * gv;
+                    }
+                }
+            }
+            NativeOpt::Adam { lr, beta1, beta2, eps } => {
+                let moments = self.moments.as_mut().expect("adam state");
+                let bc1 = 1.0 - beta1.powi(t as i32);
+                let bc2 = 1.0 - beta2.powi(t as i32);
+                for ((w, g), st) in weights.into_iter().zip(gs).zip(moments.iter_mut()) {
+                    for (((wv, &gv), mv), vv) in w
+                        .data_mut()
+                        .iter_mut()
+                        .zip(g.data())
+                        .zip(st.m.data_mut().iter_mut())
+                        .zip(st.v.data_mut().iter_mut())
+                    {
+                        *mv = beta1 * *mv + (1.0 - beta1) * gv;
+                        *vv = beta2 * *vv + (1.0 - beta2) * gv * gv;
+                        let mhat = *mv / bc1;
+                        let vhat = *vv / bc2;
+                        *wv -= lr * mhat / (vhat.sqrt() + eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// DDP / grad-accum path (grads + apply artifact pair).
 fn train_run_ddp(engine: &Engine, cfg: &RunConfig, quiet: bool) -> Result<TrainOutcome> {
     let grads = format!(
@@ -197,4 +376,78 @@ fn train_run_ddp(engine: &Engine, cfg: &RunConfig, quiet: bool) -> Result<TrainO
         tokens_per_sec: tok_s,
         curve,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention;
+
+    /// Teacher-student fixture: the target is the DENSE attention
+    /// output of a fixed teacher weight set, so the loss has a real
+    /// minimum the student can move toward.
+    fn fixture(shape: &AttnShape, seed: u64) -> (Mat, Vec<f32>) {
+        let dm = shape.d_model();
+        let mut rng = Xoshiro256::new(seed);
+        let x = Mat::random_normal(shape.tokens(), dm, 1.0, &mut rng);
+        let tq = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let tk = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let tv = Mat::random_normal(dm, dm, 0.05, &mut rng);
+        let q = attention::split_heads(&x.matmul(&tq), shape);
+        let k = attention::split_heads(&x.matmul(&tk), shape);
+        let v = attention::split_heads(&x.matmul(&tv), shape);
+        let y = attention::flash_attention_with(&q, &k, &v, shape, &Pool::serial());
+        (x, y)
+    }
+
+    #[test]
+    fn native_training_reduces_the_loss() {
+        let shape = AttnShape::new(1, 2, 24, 4, true);
+        let (x, y) = fixture(&shape, 0xBEEF);
+        let mut t = NativeTrainer::new(shape, 12, NativeOpt::adam(2e-3), 7);
+        let pool = Pool::serial();
+        let first = t.train_step_native(&x, &y, &pool, None);
+        let mut last = first;
+        for _ in 0..50 {
+            last = t.train_step_native(&x, &y, &pool, None);
+        }
+        assert!(
+            last < first * 0.9,
+            "optimization must make real progress: first {first}, last {last}"
+        );
+    }
+
+    #[test]
+    fn native_training_is_bit_identical_across_thread_counts() {
+        let shape = AttnShape::new(2, 2, 40, 4, true);
+        let (x, y) = fixture(&shape, 0xF00D);
+        let run = |pool: &Pool| {
+            let mut t = NativeTrainer::new(shape, 10, NativeOpt::Sgd { lr: 0.1 }, 11);
+            let losses: Vec<u32> =
+                (0..4).map(|_| t.train_step_native(&x, &y, pool, None).to_bits()).collect();
+            (losses, t.wq, t.wk, t.wv)
+        };
+        let base = run(&Pool::serial());
+        for threads in [2usize, 4] {
+            let got = run(&Pool::new(threads).with_min_chunk(1));
+            assert_eq!(got.0, base.0, "loss trajectory t={threads}");
+            assert_eq!(got.1, base.1, "wq t={threads}");
+            assert_eq!(got.2, base.2, "wk t={threads}");
+            assert_eq!(got.3, base.3, "wv t={threads}");
+        }
+    }
+
+    #[test]
+    fn ledger_records_saved_bytes_of_each_step() {
+        let shape = AttnShape::new(1, 1, 32, 4, true);
+        let (x, y) = fixture(&shape, 0xABBA);
+        let mut t = NativeTrainer::new(shape, 4, NativeOpt::Sgd { lr: 0.05 }, 3);
+        let ledger = MemoryLedger::new();
+        let pool = Pool::serial();
+        let rep = t.step_report(crate::tensor::kernels::active(), &x, &y, &pool, Some(&ledger));
+        assert_eq!(ledger.saved(), rep.saved_bytes);
+        assert!(ledger.backward.peak() > 0, "backward transients must be charged");
+        let dense = autograd::dense_saved_bytes(shape.d_model(), &shape);
+        assert!(rep.saved_bytes < dense, "compressed saved set must undercut dense");
+    }
 }

@@ -177,6 +177,56 @@ pub fn probe() -> String {
             aflops / ns.max(1.0)
         );
     }
+
+    // Backward tile parameters + spot bwd GFLOP/s: the FA-2
+    // recomputation walk runs 5 tile GEMMs against the forward's 2, so
+    // its semantic flop count is 2.5× the forward's.
+    let _ = writeln!(
+        out,
+        "  attention backward: same Br={}/Bc={} tiles, 5 GEMMs/tile, per-thread scratch {} (d={}, l={}; fwd {})",
+        attention::BR,
+        attention::BC,
+        crate::memory::fmt_bytes(attention::bwd_tile_scratch_bytes(shape.head_dim, shape.seq)),
+        shape.head_dim,
+        shape.seq,
+        crate::memory::fmt_bytes(attention::tile_scratch_bytes(shape.head_dim)),
+    );
+    let bflops = 2.5 * aflops;
+    let _ = writeln!(
+        out,
+        "  spot check: flash bwd b={} h={} l={} d={}, single thread",
+        shape.batch, shape.heads, shape.seq, shape.head_dim
+    );
+    let (o, lse) =
+        attention::flash_attention_fwd_on(Dispatch::Scalar, &q, &k, &v, &shape, &serial);
+    let dout = mk_qkv(&mut rng);
+    let mut scalar_ns = None;
+    for d in LADDER {
+        if !d.available() {
+            continue;
+        }
+        let r = bench_fn(d.name(), &opts, || {
+            std::hint::black_box(attention::flash_attention_bwd_on(
+                d, &q, &k, &v, &o, &dout, &lse, &shape, &serial,
+            ));
+        });
+        let ns = r.median.as_nanos() as f64;
+        let vs = match (d, scalar_ns) {
+            (Dispatch::Scalar, _) => {
+                scalar_ns = Some(ns);
+                String::new()
+            }
+            (_, Some(s)) => format!("   ({:.2}x vs scalar)", s / ns.max(1.0)),
+            _ => String::new(),
+        };
+        let _ = writeln!(
+            out,
+            "    {:<7} {:>12} /iter   {:>7.2} GFLOP/s{vs}",
+            d.name(),
+            format!("{:.2?}", r.median),
+            bflops / ns.max(1.0)
+        );
+    }
     out
 }
 

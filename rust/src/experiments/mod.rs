@@ -1,6 +1,7 @@
 //! Experiment harness — one entry per table & figure of the paper,
-//! plus the native attention table P9/P10 (DESIGN.md §6 maps each id
-//! to modules and expectations).
+//! plus the native attention table P9/P10 and the native train-step
+//! harness P11 (DESIGN.md §7 maps each id to modules and
+//! expectations).
 //!
 //! Every harness prints the paper-style rows AND writes a CSV under the
 //! `--out` directory so EXPERIMENTS.md can cite machine-readable results.
@@ -31,7 +32,13 @@ use crate::runtime::Engine;
 /// an engine-backed harness, so the CLI can decide whether to load
 /// artifacts at all (this is what makes `pamm reproduce attention
 /// --quick` a zero-dependency smoke drive).
-pub fn run_native(name: &str, quick: bool, out: &str) -> Option<Result<()>> {
+///
+/// `native_train` is the `--native` flag: for `table7` it switches
+/// from the isolated per-op breakdown to the REAL optimization loop
+/// (`throughput::table7_native`, P11) — fwd → loss → compressed bwd →
+/// Adam update through `crate::autograd`, with the measured per-phase
+/// memory ledger asserted against its analytic bounds.
+pub fn run_native(name: &str, quick: bool, native_train: bool, out: &str) -> Option<Result<()>> {
     match name {
         "table7" | "attention" => {}
         _ => return None,
@@ -39,6 +46,7 @@ pub fn run_native(name: &str, quick: bool, out: &str) -> Option<Result<()>> {
     let run = || -> Result<()> {
         std::fs::create_dir_all(out)?;
         match name {
+            "table7" if native_train => throughput::table7_native(quick, out),
             "table7" => throughput::table7(quick, out),
             "attention" => attention::native_table(quick, out),
             _ => unreachable!("gated above"),

@@ -11,8 +11,11 @@
 //!   coordinator, native PAMM twin (parallel on the shared `poolx`
 //!   pool, `--threads`), the fused flash-attention subsystem
 //!   (`attention`: tiled online softmax consuming PAMM-compressed
-//!   Q/K/V), data pipeline, memory accountant, experiment harness (one
-//!   per paper table/figure — see DESIGN.md).
+//!   Q/K/V), the compressed-activation autograd (`autograd`: a
+//!   reverse-mode tape whose saved state is the `Compressed` struct +
+//!   O(seq) softmax statistics, with a measured per-phase memory
+//!   ledger), data pipeline, memory accountant, experiment harness
+//!   (one per paper table/figure — see DESIGN.md).
 //!
 //! Python never runs on the request path: `make artifacts` once, then the
 //! Rust binary is self-contained.
@@ -23,6 +26,7 @@
 //! via `pamm bench-report`).
 
 pub mod attention;
+pub mod autograd;
 pub mod benchx;
 pub mod checkpoint;
 pub mod cli;

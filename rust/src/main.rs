@@ -1,8 +1,9 @@
 //! `pamm` — leader entrypoint.
 //!
-//! Subcommands (see `cli::USAGE`): train / finetune / reproduce / memory /
-//! kernels / list. Python never runs here: every computation comes from
-//! `artifacts/*.hlo.txt` via the PJRT engine or from the native substrates.
+//! Subcommands (see `cli::USAGE`): train / finetune / reproduce /
+//! ledger / memory / kernels / list. Python never runs here: every
+//! computation comes from `artifacts/*.hlo.txt` via the PJRT engine or
+//! from the native substrates.
 
 use anyhow::{bail, Context, Result};
 
@@ -31,6 +32,7 @@ fn real_main() -> Result<()> {
         "train" => cmd_train(&args),
         "finetune" => cmd_finetune(&args),
         "reproduce" => cmd_reproduce(&args),
+        "ledger" => cmd_ledger(&args),
         "memory" => cmd_memory(&args),
         "kernels" => cmd_kernels(&args),
         "list" => cmd_list(&args),
@@ -205,12 +207,87 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
     let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
     let out = args.get_str("out").unwrap_or_else(|| "results".into());
     // Native-only harnesses (table7, attention) run without artifacts —
-    // don't demand an engine they never use.
-    if let Some(r) = pamm::experiments::run_native(name, args.get_bool("quick"), &out) {
+    // don't demand an engine they never use. `table7 --native` swaps
+    // the per-op breakdown for the real train-step optimization loop.
+    if let Some(r) =
+        pamm::experiments::run_native(name, args.get_bool("quick"), args.get_bool("native"), &out)
+    {
         return r;
     }
     let engine = Engine::load(&artifacts)?;
     pamm::experiments::run(&engine, name, args.get_bool("quick"), &out)
+}
+
+/// `pamm ledger` — one cold tracked fwd+bwd of the native train step at
+/// a CLI-chosen shape, rendered as the per-phase memory ledger (the
+/// README quickstart for the paper's training-memory claim; no
+/// artifacts needed).
+fn cmd_ledger(args: &Args) -> Result<()> {
+    use pamm::attention::AttnShape;
+    use pamm::coordinator::{NativeOpt, NativeTrainer};
+    use pamm::memory::{fmt_bytes, MemoryLedger};
+    use pamm::rngx::Xoshiro256;
+    use pamm::tensor::Mat;
+
+    let shape_s = args.get_str("shape").unwrap_or_else(|| "2x4x256x64".into());
+    let dims: Vec<usize> = shape_s
+        .split('x')
+        .map(|p| p.parse::<usize>().map_err(|_| anyhow::anyhow!("--shape expects BxHxLxD, got `{shape_s}`")))
+        .collect::<Result<_>>()?;
+    if dims.len() != 4 || dims.iter().any(|&v| v == 0) {
+        bail!("--shape expects 4 nonzero dims BxHxLxD, got `{shape_s}`");
+    }
+    let shape = AttnShape::new(dims[0], dims[1], dims[2], dims[3], !args.get_bool("no-causal"));
+    let tokens = shape.tokens();
+    let k = match args.get_usize("k")? {
+        Some(k) => k.clamp(1, tokens),
+        None => {
+            let r_inv = args.get_usize("r-inv")?.unwrap_or(16).max(1);
+            (tokens.div_ceil(r_inv)).max(1)
+        }
+    };
+    let dm = shape.d_model();
+    let pool_threads = pamm::poolx::global().threads();
+    println!(
+        "memory ledger: one native train step, shape b={} h={} l={} d={} (tokens {tokens}, d_model {dm}), k={k}, threads={pool_threads}",
+        dims[0], dims[1], dims[2], dims[3]
+    );
+
+    let mut rng = Xoshiro256::new(0x1ED6E8);
+    let x = Mat::random_normal(tokens, dm, 1.0, &mut rng);
+    let mut target = vec![0f32; shape.qkv_len()];
+    rng.fill_normal_f32(&mut target, 1.0);
+
+    // Cold protocol (EXPERIMENTS.md P12): fresh pool + fresh caller
+    // thread so per-worker TLS scratch growth is measured.
+    let ledger = MemoryLedger::new();
+    std::thread::scope(|sc| {
+        sc.spawn(|| {
+            let cold = pamm::poolx::Pool::new(pool_threads);
+            let mut t = NativeTrainer::new(shape, k, NativeOpt::adam(1e-3), 7);
+            let _ = t.step_report(
+                pamm::tensor::kernels::active(),
+                &x,
+                &target,
+                &cold,
+                Some(&ledger),
+            );
+        });
+    });
+    // The bound depends only on the compression geometry (k, n_in).
+    let bwd_bound = pamm::autograd::backward_peak_bound(k, dm, &shape, pool_threads, false);
+    let dense = pamm::autograd::dense_saved_bytes(dm, &shape);
+    print!("{}", ledger.render(dense));
+    println!(
+        "backward peak ≤ analytic bound: {} ≤ {}",
+        fmt_bytes(ledger.backward.peak()),
+        fmt_bytes(bwd_bound)
+    );
+    println!(
+        "saved-for-backward = Compressed (C {k}×{dm} + α/f {tokens} rows + β) + log-sum-exp ({} rows)",
+        shape.batch * shape.heads * shape.seq
+    );
+    Ok(())
 }
 
 fn cmd_memory(args: &Args) -> Result<()> {

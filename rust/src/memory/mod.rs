@@ -223,6 +223,84 @@ impl MemoryTracker {
     }
 }
 
+/// Per-phase **memory ledger** of one native train step — the measured
+/// counterpart of the paper's Table 7 memory story, split the way a
+/// training framework experiences it:
+///
+/// * **forward** — transients live only while the forward runs
+///   (compress Gram strips, projected generators, per-worker tile
+///   scratch growth). Peak tracked by a [`MemoryTracker`].
+/// * **saved** — bytes that persist *between* forward and backward:
+///   for the PAMM path, `Compressed::stored_bytes()` plus the O(seq)
+///   flash softmax statistics — the quantity the paper's ×512 claim is
+///   about. An exact running total, not a peak (nothing transient
+///   here by definition).
+/// * **backward** — transients of the backward (recomputed `G = C·W`,
+///   the dQ/dK/dV grid buffer, merged projection gradients). Peak
+///   tracked by a second [`MemoryTracker`].
+///
+/// `crate::autograd` fills one of these per tracked step and asserts
+/// `saved` against both the analytic inventory and the dense baseline
+/// (`autograd::dense_saved_bytes`); `pamm ledger` renders it.
+#[derive(Debug, Default)]
+pub struct MemoryLedger {
+    /// Forward-pass transient tracker.
+    pub forward: MemoryTracker,
+    /// Backward-pass transient tracker.
+    pub backward: MemoryTracker,
+    saved: std::sync::atomic::AtomicUsize,
+}
+
+impl MemoryLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record bytes that persist from forward to backward (additive —
+    /// a multi-layer tape calls this once per layer).
+    pub fn record_saved(&self, bytes: usize) {
+        self.saved.fetch_add(bytes, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Saved-for-backward bytes recorded so far.
+    pub fn saved(&self) -> usize {
+        self.saved.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.forward.reset();
+        self.backward.reset();
+        self.saved.store(0, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Render the ledger as the `pamm ledger` table, against a dense
+    /// saved-activation baseline for the compression-factor row.
+    pub fn render(&self, dense_saved: usize) -> String {
+        let saved = self.saved();
+        let factor = dense_saved as f64 / saved.max(1) as f64;
+        let mut out = String::new();
+        out.push_str(&format!("{:<28} {:>12}\n", "phase", "bytes"));
+        out.push_str(&format!(
+            "{:<28} {:>12}\n",
+            "forward transient peak",
+            fmt_bytes(self.forward.peak())
+        ));
+        out.push_str(&format!("{:<28} {:>12}\n", "saved for backward", fmt_bytes(saved)));
+        out.push_str(&format!(
+            "{:<28} {:>12}\n",
+            "backward transient peak",
+            fmt_bytes(self.backward.peak())
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>12}\n",
+            "dense saved baseline",
+            fmt_bytes(dense_saved)
+        ));
+        out.push_str(&format!("{:<28} {:>11.1}x\n", "saved compression factor", factor));
+        out
+    }
+}
+
 /// Peak-memory *tracker* for live runs: the coordinator feeds it per-step
 /// allocation observations (activation bytes are analytic; host-side
 /// buffers are measured) and it keeps high-water marks per tag.
@@ -361,6 +439,24 @@ mod tests {
         });
         assert_eq!(t.live(), 0);
         assert!(t.peak() >= 3 && t.peak() <= 12);
+    }
+
+    #[test]
+    fn memory_ledger_phases_are_independent_and_render() {
+        let l = MemoryLedger::new();
+        l.forward.alloc(1000);
+        l.forward.free(1000);
+        l.record_saved(64);
+        l.record_saved(36); // second layer of a tape adds on
+        l.backward.alloc(500);
+        assert_eq!(l.forward.peak(), 1000);
+        assert_eq!(l.saved(), 100);
+        assert_eq!(l.backward.peak(), 500);
+        let table = l.render(100 * 64);
+        assert!(table.contains("saved for backward"), "{table}");
+        assert!(table.contains("64.0x"), "factor row: {table}");
+        l.reset();
+        assert_eq!((l.forward.peak(), l.saved(), l.backward.peak()), (0, 0, 0));
     }
 
     #[test]

@@ -383,6 +383,35 @@ pub fn apply_with(comp: &Compressed, b_mat: &Mat, pool: &Pool) -> Mat {
     out
 }
 
+/// Backward entry point of the compressed projection (the native twin
+/// of `python/compile/pamm_layer.py`'s `_pamm_bwd`): the VJP of
+/// `Z = Ã·W` with respect to `W`, treating the assignment `f` and the
+/// scales `α` as constants of the forward (straight-through — the
+/// argmax is not differentiated, per the paper). Because
+/// `Ã = diag(α)·1_f·C`,
+///
+/// ```text
+/// dW = β·Ãᵀ·dZ = β·Cᵀ·(1_fᵀ·diag(α)·dZ) = β·Cᵀ·B̃,
+///      B̃_j = Σ_{i: f(i)=j} α_i·dZ_i
+/// ```
+///
+/// — exactly Algorithm 1 `ApproxMM`, so this is [`apply`] under its
+/// VJP name: the gather-scaled index-accumulate plus one k-row GEMM,
+/// never a `b×n` contraction. β rescales the estimate to be unbiased
+/// for the *dense* gradient `Xᵀ·dZ` (Eq. 5); with ε = ∞ and no zero
+/// rows, β = 1 and the result is the exact gradient of the compressed
+/// forward. `dX = dZ·Wᵀ` stays exact and needs no PAMM state — it is a
+/// plain dense matmul composed by the caller (`crate::autograd`).
+pub fn grad_w(comp: &Compressed, dz: &Mat) -> Mat {
+    grad_w_with(comp, dz, poolx::global())
+}
+
+/// [`grad_w`] on an explicit pool — bit-identical at any thread count,
+/// like the [`apply_with`] it wraps.
+pub fn grad_w_with(comp: &Compressed, dz: &Mat, pool: &Pool) -> Mat {
+    apply_with(comp, dz, pool)
+}
+
 /// End-to-end PAMM approximation of `O = AᵀB`.
 pub fn pamm_matmul(a: &Mat, b_mat: &Mat, gen_idx: &[usize], eps: Eps) -> Mat {
     pamm_matmul_with(a, b_mat, gen_idx, eps, poolx::global())
@@ -620,6 +649,25 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn grad_w_is_the_apply_estimator_and_exact_at_full_rank() {
+        let a = rand_mat(32, 8, 61);
+        let dz = rand_mat(32, 5, 62);
+        let mut rng = Xoshiro256::new(63);
+        let idx = sample_generators(&mut rng, 32, 6);
+        let comp = compress(&a, &idx, Eps::Inf);
+        // The VJP name is the estimator: grad_w ≡ apply, bitwise.
+        assert_eq!(grad_w(&comp, &dz), apply(&comp, &dz));
+        // All-generators ⇒ Ã = A, β = 1 ⇒ grad_w == the exact dense
+        // gradient AᵀdZ up to Lemma-1 rounding of α.
+        let full: Vec<usize> = (0..32).collect();
+        let comp = compress(&a, &full, Eps::Inf);
+        assert_eq!(comp.beta, 1.0);
+        let exact = exact_matmul(&a, &dz);
+        let got = grad_w(&comp, &dz);
+        assert!(got.max_abs_diff(&exact) < 1e-4 * exact.frob_norm().max(1.0));
     }
 
     #[test]

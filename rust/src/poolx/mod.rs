@@ -403,6 +403,63 @@ impl Pool {
         out
     }
 
+    /// [`Pool::map_chunks_flat`] with TWO flat outputs of independent
+    /// per-item widths, carved from the same chunk partition: each
+    /// worker gets `f(start, end, w1_window, w2_window)` where the
+    /// windows are the zeroed `(end-start)·width` slices of the two
+    /// shared outputs at the chunk's offset. Same determinism story as
+    /// the one-output form (results land by range, no per-chunk
+    /// temporaries); the attention training forward uses it to write
+    /// its output slab and its per-row softmax statistics in one pass
+    /// without a packed intermediate.
+    ///
+    /// Runs inline when [`Pool::chunks_for`] says 1 (or either width is
+    /// 0 — a zero-sized `chunks_mut` would panic; the inline call keeps
+    /// `f`'s writes to the non-empty output).
+    pub fn map_chunks_flat2<T: Send + Copy + Default>(
+        &self,
+        n: usize,
+        w1: usize,
+        w2: usize,
+        f: impl Fn(usize, usize, &mut [T], &mut [T]) + Sync,
+    ) -> (Vec<T>, Vec<T>) {
+        let chunks = self.chunks_for(n);
+        let mut out1 = vec![T::default(); n * w1];
+        let mut out2 = vec![T::default(); n * w2];
+        if chunks <= 1 || w1 == 0 || w2 == 0 {
+            f(0, n, &mut out1, &mut out2);
+            return (out1, out2);
+        }
+        let chunk = n.div_ceil(chunks);
+        let bounds: Vec<(usize, usize)> = (0..chunks)
+            .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+            .filter(|(s, e)| s < e)
+            .collect();
+        #[cfg(debug_assertions)]
+        {
+            let mut expect = 0usize;
+            for &(s, e) in &bounds {
+                assert_eq!(s, expect, "poolx: chunk ranges must tile 0..{n} exactly once");
+                expect = e;
+            }
+            assert_eq!(expect, n, "poolx: stitch left a gap — some range never written");
+        }
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = bounds
+                .iter()
+                .zip(out1.chunks_mut(chunk * w1).zip(out2.chunks_mut(chunk * w2)))
+                .map(|(&(s, e), (win1, win2))| {
+                    debug_assert_eq!(win1.len(), (e - s) * w1);
+                    debug_assert_eq!(win2.len(), (e - s) * w2);
+                    let f = &f;
+                    Box::new(move || f(s, e, win1, win2)) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            self.execute_scoped(jobs);
+        }
+        (out1, out2)
+    }
+
     /// Run a batch of borrowed jobs on the worker pool and wait for all
     /// of them. The latch wait is what makes the lifetime erasure sound:
     /// no job can outlive this call.
@@ -647,6 +704,32 @@ mod tests {
         }
         // Width 0 degenerates to an empty output without panicking.
         assert!(Pool::new(2).with_min_chunk(1).map_chunks_flat(8, 0, |_, _, _| {}).is_empty());
+    }
+
+    #[test]
+    fn map_chunks_flat2_matches_serial_on_both_outputs() {
+        // out1[i·2..] = i doubled, out2[i] = i² — any misplaced chunk
+        // or swapped window shows immediately.
+        let fill = |s: usize, e: usize, a: &mut [usize], b: &mut [usize]| {
+            for i in s..e {
+                a[(i - s) * 2] = i;
+                a[(i - s) * 2 + 1] = i;
+                b[i - s] = i * i;
+            }
+        };
+        let (sa, sb) = Pool::serial().map_chunks_flat2(97, 2, 1, fill);
+        let (pa, pb) = Pool::new(4).with_min_chunk(1).map_chunks_flat2(97, 2, 1, fill);
+        assert_eq!(sa, pa);
+        assert_eq!(sb, pb);
+        for i in 0..97 {
+            assert_eq!(&sa[i * 2..i * 2 + 2], &[i, i]);
+            assert_eq!(sb[i], i * i);
+        }
+        // A zero width degrades to the inline path without panicking.
+        let (a, b) =
+            Pool::new(2).with_min_chunk(1).map_chunks_flat2(8, 0, 1, |_, _, _, _| {});
+        assert!(a.is_empty());
+        assert_eq!(b.len(), 8);
     }
 
     #[test]

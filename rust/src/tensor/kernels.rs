@@ -255,6 +255,10 @@ fn zero_fit(v: &mut Vec<f32>, need: usize) {
 /// score tile, and the online-softmax state. Lives in [`Workspace`]
 /// beside the PAMM stage scratch so the same long-lived pool workers
 /// warm it up once and reuse it for every later (batch, head) task.
+/// The backward walk ([`AttnScratch::ensure_bwd`]) adds three buffers
+/// of its own — the transposed V panel, the dS tile and the per-row
+/// `D = Σ_c dO·O` vector — which stay at zero capacity on
+/// forward-only threads, so the forward peak-bytes model is untouched.
 #[derive(Default)]
 pub struct AttnScratch {
     /// Br×d query strip (pre-scaled by 1/√d).
@@ -273,13 +277,21 @@ pub struct AttnScratch {
     pub m: Vec<f32>,
     /// Br running row sums (online-softmax `l`).
     pub l: Vec<f32>,
+    /// d×Bc transposed value strip (the GEMM B operand of the
+    /// backward's `dP = dO·Vᵀ`) — backward only.
+    pub vt: Vec<f32>,
+    /// Br×Bc dS tile of the backward walk — backward only.
+    pub ds: Vec<f32>,
+    /// Per-row `D_i = Σ_c dO[i,c]·O[i,c]` of one head (seq entries) —
+    /// backward only.
+    pub dvec: Vec<f32>,
 }
 
 impl AttnScratch {
-    /// Size every buffer for a `(br, bc, d)` tile walk. Returns the
-    /// number of bytes this call grew the scratch by — zero in the warm
-    /// steady state, which is what the attention memory tracker charges
-    /// per worker.
+    /// Size every forward buffer for a `(br, bc, d)` tile walk. Returns
+    /// the number of bytes this call grew the scratch by — zero in the
+    /// warm steady state, which is what the attention memory tracker
+    /// charges per worker.
     pub fn ensure(&mut self, br: usize, bc: usize, d: usize) -> usize {
         let before = self.bytes();
         fit(&mut self.qs, br * d);
@@ -293,6 +305,19 @@ impl AttnScratch {
         self.bytes().saturating_sub(before)
     }
 
+    /// [`AttnScratch::ensure`] plus the backward-only buffers (`vt`,
+    /// `ds`, and the seq-long `D` vector). Returns the total growth in
+    /// bytes — the figure the backward memory tracking charges per
+    /// worker, exact because every buffer grows via `reserve_exact`.
+    pub fn ensure_bwd(&mut self, br: usize, bc: usize, d: usize, seq: usize) -> usize {
+        let grew = self.ensure(br, bc, d);
+        let before = self.bytes();
+        fit(&mut self.vt, d * bc);
+        fit(&mut self.ds, br * bc);
+        fit(&mut self.dvec, seq);
+        grew + self.bytes().saturating_sub(before)
+    }
+
     /// Reserved bytes across all buffers (capacities).
     pub fn bytes(&self) -> usize {
         (self.qs.capacity()
@@ -302,7 +327,10 @@ impl AttnScratch {
             + self.s.capacity()
             + self.acc.capacity()
             + self.m.capacity()
-            + self.l.capacity())
+            + self.l.capacity()
+            + self.vt.capacity()
+            + self.ds.capacity()
+            + self.dvec.capacity())
             * std::mem::size_of::<f32>()
     }
 }
@@ -809,6 +837,22 @@ mod tests {
         // A bigger shape grows by exactly the delta.
         let grew2 = a.ensure(64, 64, 64);
         assert_eq!(a.bytes(), want + grew2);
+    }
+
+    #[test]
+    fn attn_scratch_bwd_buffers_grow_exactly_and_leave_fwd_alone() {
+        let mut a = AttnScratch::default();
+        let fwd = a.ensure(64, 64, 32);
+        // Backward adds exactly vt (d·bc) + ds (br·bc) + dvec (seq).
+        let grew = a.ensure_bwd(64, 64, 32, 200);
+        let want = (32 * 64 + 64 * 64 + 200) * 4;
+        assert_eq!(grew, want);
+        assert_eq!(a.bytes(), fwd + want);
+        // Warm backward re-ensure at the same shape grows nothing.
+        assert_eq!(a.ensure_bwd(64, 64, 32, 200), 0);
+        // A forward-only scratch never pays for the backward buffers.
+        let mut f = AttnScratch::default();
+        assert_eq!(f.ensure(64, 64, 32), fwd);
     }
 
     #[test]
