@@ -1,0 +1,139 @@
+//! Bench: whole-model native LM pretraining — the forward (tape
+//! build) and the full train step (fwd + xent + tape backward + Adam)
+//! per layer count × dispatch level × thread count. The acceptance
+//! trail for the multi-layer tape: `benchmarks/BENCH_model_train.json`
+//! → BENCHMARKS.md §model_train.
+//!
+//! Ops are dispatch-tagged (`lm_fwd[avx2]`, `lm_step[scalar]`, …) via
+//! the explicit-dispatch entry points. GFLOP/s uses the standard
+//! parameter-flop model: forward ≈ `2·N·tokens`, full step ≈
+//! `6·N·tokens` with `N = LmConfig::param_count()` (attention terms are
+//! second-order at these shapes — the figures are for cross-layer-count
+//! comparability, not absolute kernel throughput; the kernel suites
+//! carry those). Forward rows are annotated with the tape's EXACT
+//! saved-for-backward bytes (`saved_bytes` column) — the whole-model
+//! version of the paper's headline quantity, growing with the layer
+//! count while every block's projection activations stay compressed.
+//!
+//! Run: `cargo bench --bench model_train` (PAMM_BENCH_QUICK=1 for CI);
+//! render with `pamm bench-report`.
+
+use std::time::Duration;
+
+use pamm::benchx::{BenchOpts, BenchSink, Suite};
+use pamm::coordinator::{LmTrainer, NativeOpt};
+use pamm::data::batcher::BatchIterator;
+use pamm::memory::fmt_bytes;
+use pamm::model::{self, LmConfig, TransformerLM};
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels::Dispatch;
+
+fn opts() -> BenchOpts {
+    if std::env::var("PAMM_BENCH_QUICK").is_ok() {
+        BenchOpts { warmup_iters: 0, min_iters: 1, max_iters: 3, max_total: Duration::from_secs(2) }
+    } else {
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            max_total: Duration::from_secs(12),
+        }
+    }
+}
+
+fn main() {
+    // Layer-count sweep at a fixed block geometry (heads=4, d=16 →
+    // d_model 64, d_ff 256, vocab 256), k = tokens/16.
+    let layer_counts: &[usize] = &[2, 4];
+    let (batch, seq) = (2usize, 128usize);
+    let tokens = batch * seq;
+    let k = tokens / 16;
+    let native = Dispatch::native();
+    let threads: &[usize] = &[1, 2, 4];
+    let mut sink = BenchSink::new("model_train");
+
+    println!("model_train: native dispatch = {}", native.name());
+
+    for &layers in layer_counts {
+        let cfg = LmConfig { vocab: 256, n_layers: layers, heads: 4, head_dim: 16, d_ff: 256 };
+        let shape_s = format!("L={layers} b={batch} l={seq} dm={} ff={} k={k}", cfg.d_model(), cfg.d_ff);
+        let n_params = cfg.param_count() as f64;
+        let fwd_flops = 2.0 * n_params * tokens as f64;
+        let step_flops = 6.0 * n_params * tokens as f64;
+
+        let mut it = BatchIterator::from_seed(cfg.vocab, batch, seq, 7);
+        let tok_block = it.next_batch().tokens;
+        let mut inputs = Vec::with_capacity(tokens);
+        let mut targets = Vec::with_capacity(tokens);
+        for r in 0..batch {
+            let row = &tok_block[r * (seq + 1)..(r + 1) * (seq + 1)];
+            inputs.extend_from_slice(&row[..seq]);
+            targets.extend_from_slice(&row[1..]);
+        }
+
+        let mut suite = Suite::with_opts(&format!("model_train {shape_s}"), opts());
+        suite.header();
+
+        let mut plan: Vec<(Dispatch, usize)> = vec![(Dispatch::Scalar, 1)];
+        if native != Dispatch::Scalar {
+            plan.extend(threads.iter().map(|&t| (native, t)));
+        }
+        for &(disp, t) in &plan {
+            let tag = disp.name();
+            let pool = Pool::new(t);
+            let m = TransformerLM::new(cfg.clone(), 11);
+
+            // Forward + tape build (the saved-for-backward producer).
+            let mut rng_f = Xoshiro256::new(21);
+            let r = suite
+                .bench(&format!("lm_fwd[{tag}] t={t}"), || {
+                    std::hint::black_box(m.forward(
+                        disp, &inputs, &targets, batch, seq, k, Eps::Inf, &mut rng_f, &pool,
+                        None,
+                    ));
+                })
+                .clone();
+            sink.record_flops(&format!("lm_fwd[{tag}]"), &shape_s, t, &r, fwd_flops);
+            let mut rng_s = Xoshiro256::new(21);
+            let (_, tape) = m.forward(
+                disp, &inputs, &targets, batch, seq, k, Eps::Inf, &mut rng_s, &pool, None,
+            );
+            sink.annotate_saved_bytes(tape.saved_bytes());
+
+            // Full train step: fwd + xent + tape backward + Adam.
+            let mut trainer =
+                LmTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(1e-3), 11);
+            let r = suite
+                .bench(&format!("lm_step[{tag}] t={t}"), || {
+                    std::hint::black_box(
+                        trainer.step_report(disp, &tok_block, &pool, None).loss,
+                    );
+                })
+                .clone();
+            sink.record_flops(&format!("lm_step[{tag}]"), &shape_s, t, &r, step_flops);
+            println!("    -> {:.0} tok/s", r.rate(tokens as f64));
+        }
+
+        if let Some(sp) =
+            suite.ratio(&format!("lm_step[{}] t=1", native.name()), "lm_step[scalar] t=1")
+        {
+            println!("  step vs scalar (single thread, {}): {sp:.2}x", native.name());
+        }
+        let m = TransformerLM::new(cfg.clone(), 11);
+        let shape = m.shape_for(batch, seq);
+        println!(
+            "  dense saved-for-backward baseline: {} over {layers} layers ({} per block) — what the tape never keeps",
+            fmt_bytes(model::dense_model_saved_bytes(&cfg, &shape)),
+            fmt_bytes(model::dense_block_saved_bytes(&cfg, &shape)),
+        );
+    }
+
+    match sink.flush() {
+        Ok(path) => {
+            println!("\npersisted {} entries to {}", sink.entries().len(), path.display())
+        }
+        Err(e) => eprintln!("bench persistence failed: {e}"),
+    }
+}

@@ -1,52 +1,80 @@
-//! Minimal reverse-mode autograd for the native hot path — the
+//! Reverse-mode autograd for the native hot path — the
 //! compressed-activation training step of the paper, end to end in
-//! Rust (DESIGN.md §6).
+//! Rust (DESIGN.md §6), generalized to a **multi-op graph tape** so a
+//! whole GPT-style block stack trains natively (DESIGN.md §7).
 //!
-//! The paper's headline is a *training*-memory claim: the Q/K/V
-//! projection activations are stored PAMM-compressed in the forward
-//! pass and only approximately reconstructed in the backward to form
-//! weight gradients. PRs 1–3 built the forward ( `pamm::compress`,
-//! `attention::pamm_qkv_attention`); this module closes the loop with
-//! a backward that *consumes* the compressed residuals:
+//! Two levels live here:
 //!
-//! * **Forward** ([`qkv_attn_forward`]): compress `x`, attend straight
-//!   off the [`Compressed`] representation with softmax statistics —
-//!   what gets pushed on the [`Tape`] is **only** the `Compressed`
-//!   struct plus the per-row log-sum-exp (O(seq) per head). No dense
-//!   activation is ever saved.
-//! * **Backward** ([`qkv_attn_backward`]): FlashAttention-2-style
-//!   recomputation (`attention::attend_compressed_bwd_on`) rebuilds
-//!   Q/K/V strips per tile from the recomputed `G = C·W`, yields the
-//!   projection-space gradients, and the weight gradients follow as
-//!   the gather-scaled `dW = β·Cᵀ·B̃` of [`pamm::grad_w`] — the
-//!   `Ãᵀ·dY` form, never a dense `b×n` residual contraction. `dα` and
-//!   `d(assign)` are treated straight-through (constants of the
-//!   forward), exactly like the JAX custom-vjp in
-//!   `python/compile/pamm_layer.py`. The input gradient `dX = Σ
-//!   dYᵖ·Wᵀ` is exact (W is a parameter, stored regardless).
+//! 1. **Fused-block primitives** ([`qkv_attn_forward_on`] /
+//!    [`qkv_attn_backward_on`]): the PAMM-compressed QKV projection
+//!    fused with flash attention. The forward saves **only** the
+//!    [`Compressed`] struct plus the per-row softmax log-sum-exp
+//!    (O(seq) per head); the backward is the FlashAttention-2
+//!    recomputation walk of `attention::attend_compressed_bwd_on`
+//!    followed by `dW = β·Cᵀ·B̃` via [`pamm::grad_w`] (the `Ãᵀ·dY`
+//!    form, never a dense `b×n` residual contraction) and the exact
+//!    `dX = Σ dYᵖ·Wᵀ`. `α`/`f` are straight-through constants of the
+//!    forward, exactly like the JAX custom-vjp in
+//!    `python/compile/pamm_layer.py`.
+//! 2. **The graph [`Tape`]**: a reverse-mode tape over an [`Op`] enum —
+//!    embedding lookup, layernorm, the fused PAMM-QKV attention block,
+//!    residual add, PAMM-compressed MLP (linear → GELU → linear), tied
+//!    LM head and softmax cross-entropy. The forward builder methods
+//!    execute the op, push a node holding its **minimal saved state**
+//!    (see the table below) and hand back the output plus a
+//!    [`ValueId`]; [`Tape::backward`] walks the nodes in reverse,
+//!    accumulating activation gradients per value and parameter
+//!    gradients per [`ParamId`]. `rust/src/model` stacks N transformer
+//!    blocks on top of it.
+//!
+//! # Saved-for-backward inventory (per op)
+//!
+//! | op | saved between fwd and bwd |
+//! |---|---|
+//! | embedding | token ids (u32 per token) |
+//! | layernorm | input `x` + per-row mean/rstd |
+//! | fused QKV attention | [`Compressed`] + log-sum-exp + the output slab `O` |
+//! | residual add | nothing |
+//! | PAMM MLP | [`Compressed`] only — `z = Ã·W₁` and `h = GELU(z)` are **recomputed** in the backward from the saved compression |
+//! | tied LM head | its input `x` (final LN output, once per model) |
+//! | softmax cross-entropy | `dlogits` (the backward seed) |
+//!
+//! The projection-layer activations — the paper's headline quantity —
+//! never persist densely: both the QKV projections and the MLP hidden
+//! activation are represented by their `Compressed` structs between
+//! forward and backward. What *does* persist densely (layernorm inputs
+//! = the residual stream, the attention output `O`, the head input) is
+//! exactly what a dense autodiff keeps too, so the ledger's
+//! compression-factor row compares like against like
+//! (`model::dense_block_saved_bytes`).
 //!
 //! # Determinism
 //!
-//! Every stage routes through `tensor::kernels` (no-FMA
+//! Every contraction routes through `tensor::kernels` (no-FMA
 //! scalar==sse2==avx2 bit-identity) and partitions work only over the
-//! (batch·head) grid / output rows / output columns on `poolx` — so
-//! loss, gradients and the updated weights are **bit-identical at any
+//! (batch·head) grid / output rows / output columns on `poolx`; all
+//! elementwise math (layernorm, GELU, softmax cross-entropy, the
+//! embedding scatter) is fixed-order scalar f32 on the caller thread —
+//! so loss, gradients and updated weights are **bit-identical at any
 //! thread count and at every dispatch level**
-//! (`rust/tests/prop_backward.rs`).
+//! (`rust/tests/prop_backward.rs`, `rust/tests/prop_model.rs`).
 //!
 //! # Memory ledger
 //!
 //! A tracked step fills a [`MemoryLedger`]: forward transients, the
-//! exact saved-for-backward total ([`QkvAttnSaved::saved_bytes`] =
-//! `Compressed::stored_bytes()` + statistics), and backward transients
-//! — the backward peak asserted against the analytic
-//! [`backward_peak_bound`], and the saved total against
-//! [`dense_saved_bytes`], the bytes a dense-autodiff implementation of
-//! the same block would keep between forward and backward (X + the
-//! three Q/K/V tensors + the same statistics). Known undermeasure: the
-//! per-worker B̃ scratch growth inside `pamm::grad_w` is not plumbed to
-//! the tracker (it is covered by the bound's B̃ term); everything else
-//! the backward allocates is charged.
+//! exact saved-for-backward total (each node records its
+//! `saved_bytes()`), and backward transients — the backward peak
+//! asserted against [`backward_peak_bound`] for one fused block and
+//! against `model::backward_peak_bound` (layers × per-block bound +
+//! block-stack residual slack) for a whole model. The charged set is
+//! the fused block's transients (via the tracked
+//! [`qkv_attn_backward_on`] path) and the MLP op's recomputed
+//! G₁/z/h/dz + transposed weights; documented undermeasures — the
+//! per-worker B̃ growth inside `pamm::grad_w`, pool packing growth
+//! during dense MLP/head GEMMs, the split-heads copy of the upstream
+//! gradient, and the activation-gradient chain itself (a product, by
+//! the same convention as returned gradients) — are covered by the
+//! bounds' per-worker and residual-slack terms.
 
 use crate::attention::{self, AttnShape};
 use crate::memory::MemoryLedger;
@@ -54,6 +82,17 @@ use crate::pamm::{self, Compressed, Eps};
 use crate::poolx::{self, Pool};
 use crate::tensor::kernels::{self, Dispatch, KC, MC, MR, NC, NR};
 use crate::tensor::Mat;
+
+/// Identifier of one activation value flowing through a [`Tape`].
+pub type ValueId = usize;
+
+/// Identifier of one parameter matrix in the caller's parameter list
+/// (`rust/src/model` keeps `Vec<Mat>`; layernorm gains/biases are
+/// `1×d_model` matrices so every parameter is a [`Mat`]).
+pub type ParamId = usize;
+
+/// Layernorm variance epsilon (matches the python model's 1e-5).
+pub const LN_EPS: f32 = 1e-5;
 
 /// Saved-for-backward state of one fused PAMM-QKV + flash-attention
 /// block: the compressed projection input and the O(seq) softmax
@@ -86,15 +125,102 @@ pub struct QkvGrads {
     pub dx: Option<Mat>,
 }
 
-/// Minimal reverse-mode tape: the forward pushes one saved node per
-/// differentiable block, the backward pops in reverse order. Only the
-/// hot-path op exists (the PAMM-compressed QKV projection fused with
-/// flash attention); a multi-layer model is N pushes and N pops, and
-/// [`Tape::saved_bytes`] is the whole-net saved-for-backward figure
-/// the ledger records.
+// ---------------------------------------------------------------------------
+// The multi-op graph tape
+// ---------------------------------------------------------------------------
+
+/// One recorded op with its minimal saved state (see the module-level
+/// inventory table). Fields are public so `rust/src/model` can walk
+/// the tape for the per-layer ledger without re-deriving sizes.
+#[derive(Debug)]
+pub enum Op {
+    /// `out[i] = Emb[ids[i]]` — saves only the token ids.
+    Embedding { ids: Vec<u32>, emb: ParamId, out: ValueId },
+    /// `y = g ∘ (x−μ)·rstd + b` — saves the input plus per-row μ/rstd.
+    LayerNorm {
+        x: Mat,
+        mean: Vec<f32>,
+        rstd: Vec<f32>,
+        gain: ParamId,
+        bias: ParamId,
+        input: ValueId,
+        out: ValueId,
+    },
+    /// The fused PAMM-QKV + flash-attention block — saves the
+    /// [`QkvAttnSaved`] node (Compressed + lse) and the output slab
+    /// `O` (FlashAttention-2's backward reads it for `D = Σ dO∘O`).
+    QkvAttn {
+        saved: QkvAttnSaved,
+        out_slab: Vec<f32>,
+        wq: ParamId,
+        wk: ParamId,
+        wv: ParamId,
+        input: ValueId,
+        out: ValueId,
+    },
+    /// `out = a + b` — saves nothing; backward fans the gradient out.
+    Residual { a: ValueId, b: ValueId, out: ValueId },
+    /// PAMM-compressed MLP `y = GELU(Ã·W₁)·W₂` — saves only the
+    /// [`Compressed`]; `z`/`h` are recomputed in the backward.
+    MlpPamm { comp: Compressed, w1: ParamId, w2: ParamId, input: ValueId, out: ValueId },
+    /// `logits = x·Embᵀ` (weight tying) — saves its input `x`.
+    TiedHead { x: Mat, emb: ParamId, input: ValueId, out: ValueId },
+    /// Mean softmax cross-entropy — computes and saves `dlogits`, the
+    /// backward seed, in the forward pass (one pass over the logits).
+    SoftmaxXent { dlogits: Mat, input: ValueId },
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Embedding { .. } => "embedding",
+            Op::LayerNorm { .. } => "layernorm",
+            Op::QkvAttn { .. } => "qkv_attn",
+            Op::Residual { .. } => "residual",
+            Op::MlpPamm { .. } => "mlp_pamm",
+            Op::TiedHead { .. } => "tied_head",
+            Op::SoftmaxXent { .. } => "softmax_xent",
+        }
+    }
+
+    /// Exact bytes this node keeps live between forward and backward.
+    pub fn saved_bytes(&self) -> usize {
+        match self {
+            Op::Embedding { ids, .. } => ids.len() * 4,
+            Op::LayerNorm { x, mean, rstd, .. } => {
+                x.rows() * x.cols() * 4 + (mean.len() + rstd.len()) * 4
+            }
+            Op::QkvAttn { saved, out_slab, .. } => saved.saved_bytes() + out_slab.len() * 4,
+            Op::Residual { .. } => 0,
+            Op::MlpPamm { comp, .. } => comp.stored_bytes(),
+            Op::TiedHead { x, .. } => x.rows() * x.cols() * 4,
+            Op::SoftmaxXent { dlogits, .. } => dlogits.rows() * dlogits.cols() * 4,
+        }
+    }
+}
+
+/// Result of [`Tape::backward`]: parameter gradients (dense, one per
+/// parameter — zeros where a parameter was never touched) plus the
+/// per-value activation gradients for leaves the caller seeded or
+/// wants to inspect (tests).
+#[derive(Debug)]
+pub struct BackwardResult {
+    pub params: Vec<Mat>,
+    pub values: Vec<Option<Mat>>,
+}
+
+/// Reverse-mode tape over [`Op`] nodes. Forward builder methods
+/// execute the op, push the node and return `(output, ValueId)`; the
+/// backward consumes the tape in reverse push order, accumulating
+/// value gradients (fixed order — each value's consumers sit at fixed
+/// node positions, so the f32 addition order never depends on thread
+/// count) and parameter gradients. [`Tape::saved_bytes`] is the
+/// whole-net saved-for-backward figure the ledger records.
 #[derive(Debug, Default)]
 pub struct Tape {
-    nodes: Vec<QkvAttnSaved>,
+    nodes: Vec<Op>,
+    n_values: usize,
+    seeds: Vec<(ValueId, Mat)>,
 }
 
 impl Tape {
@@ -102,14 +228,26 @@ impl Tape {
         Self::default()
     }
 
-    pub fn push(&mut self, saved: QkvAttnSaved) {
-        self.nodes.push(saved);
+    /// Allocate a fresh value id for a graph leaf (an input that no
+    /// tape op produced). Ops allocate their own output ids.
+    pub fn leaf(&mut self) -> ValueId {
+        let id = self.n_values;
+        self.n_values += 1;
+        id
     }
 
-    /// Pop the most recent node — backward consumes the tape in
-    /// reverse push order.
-    pub fn pop(&mut self) -> Option<QkvAttnSaved> {
-        self.nodes.pop()
+    fn push(&mut self, op: Op, ledger: Option<&MemoryLedger>) {
+        if let Some(l) = ledger {
+            l.record_saved(op.saved_bytes());
+        }
+        self.nodes.push(op);
+    }
+
+    /// Seed the backward with an explicit upstream gradient for a
+    /// value (op-level tests; a model's [`Tape::softmax_xent`] node
+    /// seeds itself).
+    pub fn seed(&mut self, vid: ValueId, grad: Mat) {
+        self.seeds.push((vid, grad));
     }
 
     pub fn len(&self) -> usize {
@@ -120,14 +258,493 @@ impl Tape {
         self.nodes.is_empty()
     }
 
+    pub fn nodes(&self) -> &[Op] {
+        &self.nodes
+    }
+
     /// Total saved-for-backward bytes currently held by the tape.
     pub fn saved_bytes(&self) -> usize {
         self.nodes.iter().map(|n| n.saved_bytes()).sum()
     }
+
+    /// Per-node `(op name, saved bytes)` in push order — the raw feed
+    /// of the per-layer ledger table (`model::saved_inventory`).
+    pub fn saved_inventory(&self) -> Vec<(&'static str, usize)> {
+        self.nodes.iter().map(|n| (n.name(), n.saved_bytes())).collect()
+    }
+
+    // -- forward builders ---------------------------------------------------
+
+    /// Embedding lookup `out[i] = emb[ids[i]]`.
+    pub fn embedding(
+        &mut self,
+        emb: &Mat,
+        emb_id: ParamId,
+        ids: &[i32],
+        ledger: Option<&MemoryLedger>,
+    ) -> (Mat, ValueId) {
+        let dm = emb.cols();
+        let mut out = Mat::zeros(ids.len(), dm);
+        let mut saved = Vec::with_capacity(ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            assert!(id >= 0 && (id as usize) < emb.rows(), "embedding: token id {id} out of vocab");
+            out.row_mut(i).copy_from_slice(emb.row(id as usize));
+            saved.push(id as u32);
+        }
+        let vid = self.leaf();
+        self.push(Op::Embedding { ids: saved, emb: emb_id, out: vid }, ledger);
+        (out, vid)
+    }
+
+    /// Layernorm with learnable gain/bias (`1×n` matrices).
+    #[allow(clippy::too_many_arguments)]
+    pub fn layer_norm(
+        &mut self,
+        x: &Mat,
+        xid: ValueId,
+        gain: &Mat,
+        gain_id: ParamId,
+        bias: &Mat,
+        bias_id: ParamId,
+        ledger: Option<&MemoryLedger>,
+    ) -> (Mat, ValueId) {
+        let (rows, n) = (x.rows(), x.cols());
+        assert_eq!((gain.rows(), gain.cols()), (1, n), "layernorm: gain shape");
+        assert_eq!((bias.rows(), bias.cols()), (1, n), "layernorm: bias shape");
+        let inv_n = 1.0 / n as f32;
+        let mut y = Mat::zeros(rows, n);
+        let mut mean = vec![0f32; rows];
+        let mut rstd = vec![0f32; rows];
+        let (g, b) = (gain.data(), bias.data());
+        for i in 0..rows {
+            let xr = x.row(i);
+            let mut mu = 0f32;
+            for &v in xr {
+                mu += v;
+            }
+            mu *= inv_n;
+            let mut var = 0f32;
+            for &v in xr {
+                let d = v - mu;
+                var += d * d;
+            }
+            var *= inv_n;
+            let r = 1.0 / (var + LN_EPS).sqrt();
+            mean[i] = mu;
+            rstd[i] = r;
+            let yr = y.row_mut(i);
+            for j in 0..n {
+                yr[j] = (xr[j] - mu) * r * g[j] + b[j];
+            }
+        }
+        let vid = self.leaf();
+        self.push(
+            Op::LayerNorm {
+                x: x.clone(),
+                mean,
+                rstd,
+                gain: gain_id,
+                bias: bias_id,
+                input: xid,
+                out: vid,
+            },
+            ledger,
+        );
+        (y, vid)
+    }
+
+    /// The fused PAMM-QKV causal attention block: compress `x`, attend
+    /// off the compressed representation with statistics, merge heads.
+    /// Saves the [`QkvAttnSaved`] node plus the output slab.
+    #[allow(clippy::too_many_arguments)]
+    pub fn qkv_attn(
+        &mut self,
+        d: Dispatch,
+        x: &Mat,
+        xid: ValueId,
+        wq: &Mat,
+        wq_id: ParamId,
+        wk: &Mat,
+        wk_id: ParamId,
+        wv: &Mat,
+        wv_id: ParamId,
+        gen_idx: &[usize],
+        eps: Eps,
+        shape: &AttnShape,
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> (Mat, ValueId) {
+        // The fused forward inline (not via `qkv_attn_forward_on`, whose
+        // own record_saved would double-count the Compressed+lse bytes
+        // next to this node's full inventory): forward transients go to
+        // `ledger.forward`, the saved bytes are recorded once by `push`.
+        assert_eq!(x.rows(), shape.tokens(), "autograd: x rows vs batch·seq");
+        let comp = pamm::compress_with(x, gen_idx, eps, pool);
+        let (out_slab, lse) = attention::attend_compressed_fwd_on(
+            d,
+            &comp,
+            wq,
+            wk,
+            wv,
+            shape,
+            pool,
+            ledger.map(|l| &l.forward),
+        );
+        let saved = QkvAttnSaved { comp, lse, shape: *shape };
+        let merged = attention::merge_heads(&out_slab, shape);
+        let vid = self.leaf();
+        self.push(
+            Op::QkvAttn {
+                saved,
+                out_slab,
+                wq: wq_id,
+                wk: wk_id,
+                wv: wv_id,
+                input: xid,
+                out: vid,
+            },
+            ledger,
+        );
+        (merged, vid)
+    }
+
+    /// Residual add `out = a + b`.
+    pub fn residual(
+        &mut self,
+        a: &Mat,
+        aid: ValueId,
+        b: &Mat,
+        bid: ValueId,
+        ledger: Option<&MemoryLedger>,
+    ) -> (Mat, ValueId) {
+        let mut out = a.clone();
+        out.add_assign(b);
+        let vid = self.leaf();
+        self.push(Op::Residual { a: aid, b: bid, out: vid }, ledger);
+        (out, vid)
+    }
+
+    /// PAMM-compressed MLP: `y = GELU(Ã·W₁)·W₂` with
+    /// `Ã = diag(α)·1_f·C`. The hidden activation is produced by
+    /// gather-scaling the projected generators `G₁ = C·W₁` — the dense
+    /// `b×d_ff` pre-activation exists only as a forward transient and
+    /// is **recomputed** in the backward; the node saves the
+    /// [`Compressed`] alone.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mlp_pamm(
+        &mut self,
+        x: &Mat,
+        xid: ValueId,
+        w1: &Mat,
+        w1_id: ParamId,
+        w2: &Mat,
+        w2_id: ParamId,
+        gen_idx: &[usize],
+        eps: Eps,
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> (Mat, ValueId) {
+        assert_eq!(w1.rows(), x.cols(), "mlp: w1 rows vs x width");
+        assert_eq!(w2.rows(), w1.cols(), "mlp: w2 rows vs d_ff");
+        let dff = w1.cols();
+        let comp = pamm::compress_with(x, gen_idx, eps, pool);
+        let fwd_bytes = (comp.k() * dff + comp.b() * dff) * 4;
+        if let Some(l) = ledger {
+            l.forward.alloc(fwd_bytes);
+        }
+        let g1 = comp.project_generators(w1);
+        let mut h = project_rows(&comp, &g1); // z, gelu'd in place
+        for v in h.data_mut() {
+            *v = gelu(*v);
+        }
+        let y = h.matmul_with(w2, pool);
+        if let Some(l) = ledger {
+            l.forward.free(fwd_bytes);
+        }
+        let vid = self.leaf();
+        self.push(Op::MlpPamm { comp, w1: w1_id, w2: w2_id, input: xid, out: vid }, ledger);
+        (y, vid)
+    }
+
+    /// Tied LM head: `logits = x·Embᵀ`. Saves its input.
+    pub fn tied_head(
+        &mut self,
+        x: &Mat,
+        xid: ValueId,
+        emb: &Mat,
+        emb_id: ParamId,
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> (Mat, ValueId) {
+        assert_eq!(x.cols(), emb.cols(), "tied head: x width vs d_model");
+        let et_bytes = emb.rows() * emb.cols() * 4;
+        if let Some(l) = ledger {
+            l.forward.alloc(et_bytes); // the materialized Embᵀ transient
+        }
+        let logits = x.matmul_with(&emb.transpose(), pool);
+        if let Some(l) = ledger {
+            l.forward.free(et_bytes);
+        }
+        let vid = self.leaf();
+        self.push(Op::TiedHead { x: x.clone(), emb: emb_id, input: xid, out: vid }, ledger);
+        (logits, vid)
+    }
+
+    /// Mean softmax cross-entropy over next-token targets. Loss and
+    /// `dlogits = (softmax − onehot)/rows` are computed in one pass;
+    /// the node stores `dlogits` as the backward seed. Fixed-order
+    /// scalar f32/f64 arithmetic — thread- and dispatch-invariant.
+    pub fn softmax_xent(
+        &mut self,
+        logits: &Mat,
+        lid: ValueId,
+        targets: &[i32],
+        ledger: Option<&MemoryLedger>,
+    ) -> f32 {
+        let (rows, vocab) = (logits.rows(), logits.cols());
+        assert_eq!(targets.len(), rows, "xent: targets vs logit rows");
+        let inv = 1.0 / rows.max(1) as f32;
+        let mut dl = Mat::zeros(rows, vocab);
+        let mut loss = 0f64;
+        for i in 0..rows {
+            let lr = logits.row(i);
+            let t = targets[i];
+            assert!(t >= 0 && (t as usize) < vocab, "xent: target {t} out of vocab");
+            let t = t as usize;
+            let mut mx = f32::NEG_INFINITY;
+            for &v in lr {
+                mx = mx.max(v);
+            }
+            let mut sum = 0f32;
+            for &v in lr {
+                sum += (v - mx).exp();
+            }
+            let lse = mx + sum.ln();
+            loss += (lse - lr[t]) as f64;
+            let dr = dl.row_mut(i);
+            for (j, &v) in lr.iter().enumerate() {
+                let p = (v - lse).exp();
+                dr[j] = (p - if j == t { 1.0 } else { 0.0 }) * inv;
+            }
+        }
+        self.push(Op::SoftmaxXent { dlogits: dl, input: lid }, ledger);
+        (loss / rows.max(1) as f64) as f32
+    }
+
+    // -- backward -----------------------------------------------------------
+
+    /// Walk the tape in reverse, producing parameter gradients (one
+    /// per entry of `params`, zeros where untouched) and leaf value
+    /// gradients. With a ledger, each op's genuine transients are
+    /// charged to `ledger.backward` (the attention op through the
+    /// tracked `qkv_attn_backward_on` path; the MLP op's recomputed
+    /// z/h/G₁ and transposed weights here); returned gradients are the
+    /// caller's product and are not charged.
+    pub fn backward(
+        mut self,
+        d: Dispatch,
+        params: &[Mat],
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> BackwardResult {
+        let tracker = ledger.map(|l| &l.backward);
+        let mut vgrads: Vec<Option<Mat>> = (0..self.n_values).map(|_| None).collect();
+        let mut pgrads: Vec<Option<Mat>> = (0..params.len()).map(|_| None).collect();
+        for (vid, g) in self.seeds.drain(..) {
+            acc_value(&mut vgrads, vid, g);
+        }
+        for node in self.nodes.drain(..).rev() {
+            match node {
+                Op::SoftmaxXent { dlogits, input } => {
+                    acc_value(&mut vgrads, input, dlogits);
+                }
+                Op::TiedHead { x, emb, input, out } => {
+                    let Some(g) = vgrads[out].take() else { continue };
+                    // dEmb += dlogitsᵀ·x (tied: the embedding op below
+                    // adds its scatter into the same gradient matrix).
+                    let demb = g.matmul_tn_with(&x, pool);
+                    acc_param(&mut pgrads, emb, demb);
+                    let dx = g.matmul_with(&params[emb], pool);
+                    acc_value(&mut vgrads, input, dx);
+                }
+                Op::LayerNorm { x, mean, rstd, gain, bias, input, out } => {
+                    let Some(g) = vgrads[out].take() else { continue };
+                    let (rows, n) = (x.rows(), x.cols());
+                    let inv_n = 1.0 / n as f32;
+                    let gm = params[gain].data();
+                    let mut dgain = Mat::zeros(1, n);
+                    let mut dbias = Mat::zeros(1, n);
+                    let mut dx = Mat::zeros(rows, n);
+                    for i in 0..rows {
+                        let xr = x.row(i);
+                        let gr = g.row(i);
+                        let (mu, r) = (mean[i], rstd[i]);
+                        let mut s1 = 0f32;
+                        let mut s2 = 0f32;
+                        for j in 0..n {
+                            let xh = (xr[j] - mu) * r;
+                            let dyg = gr[j] * gm[j];
+                            s1 += dyg;
+                            s2 += dyg * xh;
+                            dgain.data_mut()[j] += gr[j] * xh;
+                            dbias.data_mut()[j] += gr[j];
+                        }
+                        let dxr = dx.row_mut(i);
+                        for j in 0..n {
+                            let xh = (xr[j] - mu) * r;
+                            let dyg = gr[j] * gm[j];
+                            dxr[j] = r * (dyg - s1 * inv_n - xh * s2 * inv_n);
+                        }
+                    }
+                    acc_param(&mut pgrads, gain, dgain);
+                    acc_param(&mut pgrads, bias, dbias);
+                    acc_value(&mut vgrads, input, dx);
+                }
+                Op::QkvAttn { saved, out_slab, wq, wk, wv, input, out } => {
+                    let Some(g) = vgrads[out].take() else { continue };
+                    let dout_slab = attention::split_heads(&g, &saved.shape);
+                    let grads = qkv_attn_backward_on(
+                        d,
+                        &saved,
+                        &params[wq],
+                        &params[wk],
+                        &params[wv],
+                        &out_slab,
+                        &dout_slab,
+                        true,
+                        pool,
+                        ledger,
+                    );
+                    acc_param(&mut pgrads, wq, grads.dwq);
+                    acc_param(&mut pgrads, wk, grads.dwk);
+                    acc_param(&mut pgrads, wv, grads.dwv);
+                    acc_value(&mut vgrads, input, grads.dx.expect("need_dx"));
+                }
+                Op::Residual { a, b, out } => {
+                    let Some(g) = vgrads[out].take() else { continue };
+                    acc_value(&mut vgrads, a, g.clone());
+                    acc_value(&mut vgrads, b, g);
+                }
+                Op::MlpPamm { comp, w1, w2, input, out } => {
+                    let Some(g) = vgrads[out].take() else { continue };
+                    let (w1m, w2m) = (&params[w1], &params[w2]);
+                    let dff = w1m.cols();
+                    let tokens = comp.b();
+                    // Recomputed G₁/z/h + dz + the two transposed
+                    // weights — the genuine transients of this op.
+                    // (W₁ᵀ holds w1.rows()·d_ff floats, W₂ᵀ holds
+                    // d_ff·w2.cols() — distinct when the output width
+                    // differs from the input width.)
+                    let charge = (comp.k() * dff
+                        + 3 * tokens * dff
+                        + (w1m.rows() + w2m.cols()) * dff)
+                        * 4;
+                    if let Some(t) = tracker {
+                        t.alloc(charge);
+                    }
+                    let g1 = comp.project_generators(w1m);
+                    let z = project_rows(&comp, &g1);
+                    let mut h = z.clone();
+                    for v in h.data_mut() {
+                        *v = gelu(*v);
+                    }
+                    // dW₂ = hᵀ·dY (exact — h is a transient, not saved).
+                    let dw2 = h.matmul_tn_with(&g, pool);
+                    let mut dz = g.matmul_with(&w2m.transpose(), pool);
+                    for (dv, &zv) in dz.data_mut().iter_mut().zip(z.data()) {
+                        *dv *= gelu_grad(zv);
+                    }
+                    // dW₁ = β·Cᵀ·B̃ off the saved compression — the
+                    // gather-scaled ApproxMM, never a b×d_ff contraction.
+                    let dw1 = pamm::grad_w_with(&comp, &dz, pool);
+                    let dx = dz.matmul_with(&w1m.transpose(), pool);
+                    if let Some(t) = tracker {
+                        t.free(charge);
+                    }
+                    acc_param(&mut pgrads, w1, dw1);
+                    acc_param(&mut pgrads, w2, dw2);
+                    acc_value(&mut vgrads, input, dx);
+                }
+                Op::Embedding { ids, emb, out } => {
+                    let Some(g) = vgrads[out].take() else { continue };
+                    let (vr, vc) = (params[emb].rows(), params[emb].cols());
+                    let slot = pgrads[emb].get_or_insert_with(|| Mat::zeros(vr, vc));
+                    // Fixed ascending-i scatter: deterministic at any
+                    // thread count (runs on the caller thread).
+                    for (i, &id) in ids.iter().enumerate() {
+                        let row = slot.row_mut(id as usize);
+                        for (rv, &gv) in row.iter_mut().zip(g.row(i)) {
+                            *rv += gv;
+                        }
+                    }
+                }
+            }
+        }
+        let params_out = pgrads
+            .into_iter()
+            .enumerate()
+            .map(|(i, g)| g.unwrap_or_else(|| Mat::zeros(params[i].rows(), params[i].cols())))
+            .collect();
+        BackwardResult { params: params_out, values: vgrads }
+    }
+}
+
+fn acc_value(vgrads: &mut [Option<Mat>], id: ValueId, g: Mat) {
+    match &mut vgrads[id] {
+        None => vgrads[id] = Some(g),
+        Some(a) => a.add_assign(&g),
+    }
+}
+
+fn acc_param(pgrads: &mut [Option<Mat>], id: ParamId, g: Mat) {
+    match &mut pgrads[id] {
+        None => pgrads[id] = Some(g),
+        Some(a) => a.add_assign(&g),
+    }
+}
+
+/// Gather-scale the projected generators back to row space:
+/// `out_i = α_i · g[f(i)]` (dropped rows stay zero) — the dense-side
+/// twin of `attention`'s per-tile strip build, materialized once for
+/// the MLP's elementwise GELU.
+pub fn project_rows(comp: &Compressed, g: &Mat) -> Mat {
+    let m = g.cols();
+    let mut out = Mat::zeros(comp.b(), m);
+    for i in 0..comp.b() {
+        let a = comp.alpha[i];
+        if a != 0.0 {
+            let grow = g.row(comp.assign[i] as usize);
+            for (o, &gv) in out.row_mut(i).iter_mut().zip(grow) {
+                *o = a * gv;
+            }
+        }
+    }
+    out
+}
+
+/// tanh-approximation GELU (the GPT-2 form): portable scalar f32, so
+/// the activation is bit-identical everywhere by construction.
+#[inline]
+pub fn gelu(z: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // √(2/π)
+    const A: f32 = 0.044_715;
+    let t = (C * (z + A * z * z * z)).tanh();
+    0.5 * z * (1.0 + t)
+}
+
+/// Derivative of [`gelu`].
+#[inline]
+pub fn gelu_grad(z: f32) -> f32 {
+    const C: f32 = 0.797_884_56;
+    const A: f32 = 0.044_715;
+    let u = C * (z + A * z * z * z);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * A * z * z);
+    0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
 }
 
 // ---------------------------------------------------------------------------
-// Forward / backward
+// Fused-block forward / backward primitives
 // ---------------------------------------------------------------------------
 
 /// Training forward of the fused block on the process-wide pool; see
@@ -313,8 +930,8 @@ pub fn mse_loss(out: &[f32], target: &[f32]) -> (f32, Vec<f32>) {
 
 /// Packed-panel bytes one `m×n×k` GEMM can reserve (the exact-growth
 /// capacity model of `tensor::kernels`: MR/NR-padded strips of one
-/// MC×KC / KC×NC block).
-fn pack_bytes_bound(m: usize, n: usize, k: usize) -> usize {
+/// MC×KC / KC×NC block). Shared with `model`'s whole-net bound.
+pub fn pack_bytes_bound(m: usize, n: usize, k: usize) -> usize {
     let kc = k.min(KC);
     let pa = m.min(MC).div_ceil(MR) * MR * kc;
     let pb = n.min(NC).div_ceil(NR) * NR * kc;
@@ -425,25 +1042,131 @@ mod tests {
     }
 
     #[test]
-    fn tape_pushes_and_pops_in_reverse() {
-        let shape = AttnShape::new(1, 1, 8, 4, false);
-        let (x, wq, wk, wv, idx) = setup(&shape, 3, 80);
+    fn graph_tape_records_inventory_and_backprops_through_tied_weights() {
+        // embedding → tied head → xent: the tied parameter must receive
+        // BOTH the head's dense contribution and the embedding scatter.
+        let vocab = 11usize;
+        let dm = 6usize;
+        let emb = rand_mat(vocab, dm, 100);
+        // Distinct ids: each embedding row receives exactly one scatter
+        // add, so tied == head + scatter holds BITWISE below (repeated
+        // ids would reassociate the f32 sums).
+        let ids: Vec<i32> = vec![3, 7, 0, 10, 4];
+        let targets: Vec<i32> = vec![7, 0, 10, 3, 1];
         let pool = Pool::serial();
         let mut tape = Tape::new();
-        assert!(tape.is_empty());
-        let (_, s1) =
-            qkv_attn_forward_on(kernels::active(), &x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, &pool, None);
-        let b1 = s1.saved_bytes();
-        tape.push(s1);
-        let (_, s2) =
-            qkv_attn_forward_on(kernels::active(), &x, &wq, &wk, &wv, &idx, Eps::Inf, &shape, &pool, None);
-        let b2 = s2.saved_bytes();
-        tape.push(s2);
-        assert_eq!(tape.len(), 2);
-        assert_eq!(tape.saved_bytes(), b1 + b2);
-        assert_eq!(tape.pop().map(|n| n.saved_bytes()), Some(b2), "LIFO order");
-        assert_eq!(tape.pop().map(|n| n.saved_bytes()), Some(b1));
-        assert!(tape.pop().is_none());
+        let (x, xid) = tape.embedding(&emb, 0, &ids, None);
+        let (logits, lid) = tape.tied_head(&x, xid, &emb, 0, &pool, None);
+        let loss = tape.softmax_xent(&logits, lid, &targets, None);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(tape.len(), 3);
+        let inv = tape.saved_inventory();
+        assert_eq!(inv[0], ("embedding", ids.len() * 4));
+        assert_eq!(inv[1].0, "tied_head");
+        assert_eq!(inv[2].0, "softmax_xent");
+        assert_eq!(tape.saved_bytes(), inv.iter().map(|(_, b)| b).sum::<usize>());
+
+        let params = vec![emb.clone()];
+        let res = tape.backward(kernels::active(), &params, &pool, None);
+        assert_eq!(res.params.len(), 1);
+        let demb = &res.params[0];
+        assert_eq!((demb.rows(), demb.cols()), (vocab, dm));
+        // Split the two tied contributions apart by rebuilding the same
+        // graph with the embedding bound to a DIFFERENT param id: param
+        // 0 then carries only the head term, param 1 only the scatter.
+        let mut tape3 = Tape::new();
+        let (x3, x3id) = tape3.embedding(&emb, 1, &ids, None);
+        let (lg3, lg3id) = tape3.tied_head(&x3, x3id, &emb, 0, &pool, None);
+        let _ = tape3.softmax_xent(&lg3, lg3id, &targets, None);
+        let res3 = tape3.backward(kernels::active(), &[emb.clone(), emb.clone()], &pool, None);
+        let head_only = &res3.params[0];
+        let scatter_only = &res3.params[1];
+        // Tied gradient == head term + scatter term, bitwise (fixed
+        // accumulation order: head first, then ascending-i scatter).
+        let mut sum = head_only.clone();
+        sum.add_assign(scatter_only);
+        assert_eq!(demb, &sum, "tied gradient must be the exact sum of both paths");
+        // Rows never referenced by ids get no scatter.
+        assert!(scatter_only.row(5).iter().all(|&v| v == 0.0));
+        assert!(scatter_only.row(3).iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn residual_fans_the_gradient_out_and_layernorm_grads_are_finite() {
+        let rows = 7usize;
+        let n = 5usize;
+        let x = rand_mat(rows, n, 200);
+        let gain = Mat::from_vec(1, n, vec![1.0; n]);
+        let bias = Mat::zeros(1, n);
+        let pool = Pool::serial();
+        let mut tape = Tape::new();
+        let xid = tape.leaf();
+        let (y, yid) = tape.layer_norm(&x, xid, &gain, 0, &bias, 1, None);
+        // Layernorm output rows are standardized: mean ≈ 0, var ≈ 1.
+        for i in 0..rows {
+            let m: f32 = y.row(i).iter().sum::<f32>() / n as f32;
+            assert!(m.abs() < 1e-5, "row {i} mean {m}");
+        }
+        let (z, zid) = tape.residual(&x, xid, &y, yid, None);
+        assert_eq!(z.get(0, 0), x.get(0, 0) + y.get(0, 0));
+        let seed = rand_mat(rows, n, 201);
+        tape.seed(zid, seed.clone());
+        let params = vec![gain.clone(), bias.clone()];
+        let res = tape.backward(kernels::active(), &params, &pool, None);
+        // dbias = column sums of the layernorm's upstream grad (= seed).
+        let mut want_db = vec![0f32; n];
+        for i in 0..rows {
+            for j in 0..n {
+                want_db[j] += seed.get(i, j);
+            }
+        }
+        for j in 0..n {
+            assert!((res.params[1].get(0, j) - want_db[j]).abs() < 1e-5);
+        }
+        // The leaf grad is residual-pass-through + layernorm dx.
+        let dx = res.values[xid].as_ref().expect("leaf grad");
+        assert_eq!((dx.rows(), dx.cols()), (rows, n));
+        assert!(dx.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gelu_matches_finite_difference() {
+        for &z in &[-3.0f32, -1.0, -0.1, 0.0, 0.2, 1.5, 4.0] {
+            let h = 1e-3f64;
+            let f = |v: f64| {
+                let c = 0.7978845608f64;
+                let a = 0.044715f64;
+                0.5 * v * (1.0 + (c * (v + a * v * v * v)).tanh())
+            };
+            let fd = ((f(z as f64 + h) - f(z as f64 - h)) / (2.0 * h)) as f32;
+            assert!(
+                (gelu_grad(z) - fd).abs() < 1e-3,
+                "z={z}: grad {} vs fd {fd}",
+                gelu_grad(z)
+            );
+            assert!((gelu(z) - f(z as f64) as f32).abs() < 1e-5);
+        }
+        assert_eq!(gelu(0.0), 0.0);
+    }
+
+    #[test]
+    fn softmax_xent_loss_and_gradient() {
+        // Uniform logits: loss = ln(vocab), grad rows sum to 0 and the
+        // target entry is (1/vocab − 1)/rows.
+        let (rows, vocab) = (4usize, 8usize);
+        let logits = Mat::zeros(rows, vocab);
+        let targets: Vec<i32> = vec![0, 3, 7, 2];
+        let mut tape = Tape::new();
+        let lid = tape.leaf();
+        let loss = tape.softmax_xent(&logits, lid, &targets, None);
+        assert!((loss - (vocab as f32).ln()).abs() < 1e-5, "{loss}");
+        let Op::SoftmaxXent { dlogits, .. } = &tape.nodes()[0] else { panic!("xent node") };
+        for i in 0..rows {
+            let s: f32 = dlogits.row(i).iter().sum();
+            assert!(s.abs() < 1e-6, "row {i} grad sum {s}");
+            let want = (1.0 / vocab as f32 - 1.0) / rows as f32;
+            assert!((dlogits.get(i, targets[i] as usize) - want).abs() < 1e-6);
+        }
     }
 
     #[test]
@@ -485,5 +1208,18 @@ mod tests {
             "saved {} vs dense {dense}",
             saved.saved_bytes()
         );
+    }
+
+    #[test]
+    fn project_rows_matches_reconstruct_then_matmul() {
+        let a = rand_mat(24, 8, 300);
+        let w = rand_mat(8, 5, 301);
+        let mut rng = Xoshiro256::new(302);
+        let idx = pamm::sample_generators(&mut rng, 24, 6);
+        let comp = pamm::compress_with(&a, &idx, Eps::Val(0.7), &Pool::serial());
+        let g = comp.project_generators(&w);
+        let got = project_rows(&comp, &g);
+        let want = comp.reconstruct().matmul(&w);
+        assert!(got.max_abs_diff(&want) <= 1e-4 * want.frob_norm().max(1.0));
     }
 }

@@ -93,6 +93,17 @@ USAGE:
   pamm train [--preset NAME] [--config FILE] [--model M] [--variant V]
              [--r-inv N] [--steps N] [--batch N] [--seq N] [--seed N]
              [--workers N] [--grad-accum N] [--artifacts DIR] [--quiet]
+  pamm train --native [--model M] [--steps N] [--batch N] [--seq N]
+             [--k N | --r-inv N] [--lr F] [--seed N] [--ckpt-every N]
+             [--resume] [--quiet]
+  pamm train --quick                  # NATIVE multi-layer next-token
+                                      # pretraining smoke (no artifacts):
+                                      # model zoo geometry (default nano,
+                                      # 2 layers), every block's QKV and
+                                      # MLP activations PAMM-compressed,
+                                      # loss-decrease asserted; --native
+                                      # runs the full-length version with
+                                      # periodic checkpoints + --resume
   pamm finetune --task NAME [--r-inv N] [--steps N] [--seed N]
   pamm reproduce <fig3a|fig3b|table1|table2a|table2b|table3|table4|table5|
                   table6|table7|fig4a|fig4b|fig5|fig6|fig7|attention|all>
@@ -109,6 +120,12 @@ USAGE:
                                       # per-phase memory ledger (forward /
                                       # saved-for-backward / backward) with
                                       # the analytic bounds, no artifacts
+  pamm ledger --layers N [--shape BxHxLxD] [--vocab N] [--d-ff N]
+              [--k N | --r-inv N]     # whole-MODEL per-layer ledger: one
+                                      # cold tracked N-layer LM train step,
+                                      # per-block saved bytes vs dense,
+                                      # model totals, backward peak checked
+                                      # against the model-level bound
   pamm memory [--model M] [--batch N] [--seq N] [--r-inv N]
   pamm kernels [--artifacts DIR]      # validate native vs Pallas artifacts
   pamm kernels --probe                # print SIMD dispatch level, tile

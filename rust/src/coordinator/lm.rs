@@ -1,0 +1,579 @@
+//! Native LM pretraining driver: real next-token training of the
+//! multi-layer `model::TransformerLM` on the `data` pipeline — no
+//! artifacts, no PJRT (DESIGN.md §7).
+//!
+//! [`LmTrainer`] owns the model, the optimizer state (SGD or Adam over
+//! the flat parameter vector, fixed-order scalar f32 updates), the
+//! step counter and the generator-sampling RNG stream;
+//! [`train_lm_native`] is the run loop `pamm train --native` /
+//! `--quick` drives: `data::BatchIterator` batches → fwd → softmax
+//! cross-entropy → tape backward → update, with run logging, periodic
+//! [`checkpoint::save`] and exact resume.
+//!
+//! # Exact resume
+//!
+//! A checkpoint stores parameters, Adam moments, the step counter,
+//! the generator-RNG state (`rngx::Xoshiro256::state`, eight i32
+//! words) and the run hyperparameters (batch/seq/k + optimizer
+//! constants). On resume the trainer restores the first four,
+//! **refuses** a hyperparameter mismatch (continuing under different
+//! geometry or optimizer constants would silently diverge from the
+//! original run), and the run loop appends to the existing run log
+//! and fast-forwards the deterministic batch stream by
+//! [`BatchIterator::skip_batches`] — so an interrupted-and-resumed run
+//! is **bit-identical, step for step**, to an uninterrupted one
+//! (property-tested in `rust/tests/prop_model.rs`). Combined with the
+//! kernel contracts below, the whole training run is reproducible from
+//! `(seed, steps)` at any thread count and SIMD dispatch level.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::checkpoint;
+use crate::coordinator::trainer::{NativeOpt, TrainOutcome};
+use crate::data::batcher::BatchIterator;
+use crate::jsonx;
+use crate::memory::MemoryLedger;
+use crate::metrics::{perplexity, Ema, RunLogger, ThroughputMeter};
+use crate::model::{self, LmConfig, SavedInventory, TransformerLM};
+use crate::pamm::Eps;
+use crate::poolx::Pool;
+use crate::rngx::Xoshiro256;
+use crate::runtime::HostTensor;
+use crate::tensor::kernels::{self, Dispatch};
+use crate::tensor::Mat;
+
+/// First/second-moment state of one parameter matrix (Adam only).
+#[derive(Debug, Clone)]
+struct Moments {
+    m: Mat,
+    v: Mat,
+}
+
+/// Everything one LM step produced (ledger/harness consumers).
+#[derive(Debug)]
+pub struct LmStepReport {
+    pub loss: f32,
+    /// Exact saved-for-backward bytes of the step's whole tape.
+    pub saved_bytes: usize,
+    /// The same bytes split per layer (embedding / blocks / tail).
+    pub inventory: SavedInventory,
+}
+
+/// The native multi-layer trainer: model + optimizer + RNG stream.
+pub struct LmTrainer {
+    pub model: TransformerLM,
+    pub batch: usize,
+    pub seq: usize,
+    /// Generator budget per compression (`k = ⌈r·b⌉` of the paper).
+    pub k: usize,
+    pub eps: Eps,
+    opt: NativeOpt,
+    moments: Option<Vec<Moments>>,
+    step_no: usize,
+    rng: Xoshiro256,
+    /// The run seed (model init, generator stream AND the data stream
+    /// the run loop derives from it) — checkpointed so resume can
+    /// refuse a seed change, which would silently swap the batch
+    /// stream under the restored weights.
+    seed: u64,
+}
+
+impl LmTrainer {
+    /// Deterministic init: model weights from `seed`, generator
+    /// sampling from an independent stream. Same seed ⇒ the same run
+    /// at any thread count or dispatch level.
+    pub fn new(
+        cfg: LmConfig,
+        batch: usize,
+        seq: usize,
+        k: usize,
+        opt: NativeOpt,
+        seed: u64,
+    ) -> Self {
+        let model = TransformerLM::new(cfg, seed);
+        let moments = match opt {
+            NativeOpt::Sgd { .. } => None,
+            NativeOpt::Adam { .. } => Some(
+                model
+                    .params
+                    .iter()
+                    .map(|p| Moments {
+                        m: Mat::zeros(p.rows(), p.cols()),
+                        v: Mat::zeros(p.rows(), p.cols()),
+                    })
+                    .collect(),
+            ),
+        };
+        Self {
+            model,
+            batch,
+            seq,
+            k: k.max(1),
+            eps: Eps::Inf,
+            opt,
+            moments,
+            step_no: 0,
+            rng: Xoshiro256::new(seed ^ 0x9E3779B97F4A7C15),
+            seed,
+        }
+    }
+
+    pub fn step_no(&self) -> usize {
+        self.step_no
+    }
+
+    /// One full training step on a packed `(batch, seq+1)` token row
+    /// block (the [`crate::data::batcher::TokenBatch`] layout):
+    /// `tokens[:, :-1]` are the inputs, `tokens[:, 1:]` the targets.
+    pub fn train_step(
+        &mut self,
+        tokens: &[i32],
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> f32 {
+        self.step_report(kernels::active(), tokens, pool, ledger).loss
+    }
+
+    /// [`LmTrainer::train_step`] with an explicit dispatch level,
+    /// returning the full report (tests, benches, `pamm ledger`).
+    pub fn step_report(
+        &mut self,
+        d: Dispatch,
+        tokens: &[i32],
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> LmStepReport {
+        let (batch, seq) = (self.batch, self.seq);
+        assert_eq!(
+            tokens.len(),
+            batch * (seq + 1),
+            "lm step: expected a packed (batch, seq+1) token block"
+        );
+        let mut inputs = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for r in 0..batch {
+            let row = &tokens[r * (seq + 1)..(r + 1) * (seq + 1)];
+            inputs.extend_from_slice(&row[..seq]);
+            targets.extend_from_slice(&row[1..]);
+        }
+        let (loss, tape) = self.model.forward(
+            d,
+            &inputs,
+            &targets,
+            batch,
+            seq,
+            self.k,
+            self.eps,
+            &mut self.rng,
+            pool,
+            ledger,
+        );
+        let saved_bytes = tape.saved_bytes();
+        let inventory = model::saved_inventory(&tape, self.model.cfg.n_layers);
+        let res = tape.backward(d, &self.model.params, pool, ledger);
+        self.step_no += 1;
+        self.apply_update(&res.params);
+        LmStepReport { loss, saved_bytes, inventory }
+    }
+
+    /// Fixed-order scalar f32 optimizer update over the flat parameter
+    /// vector — bit-identical given bit-identical gradients.
+    fn apply_update(&mut self, grads: &[Mat]) {
+        let t = self.step_no;
+        match self.opt {
+            NativeOpt::Sgd { lr } => {
+                for (p, g) in self.model.params.iter_mut().zip(grads) {
+                    for (pv, &gv) in p.data_mut().iter_mut().zip(g.data()) {
+                        *pv -= lr * gv;
+                    }
+                }
+            }
+            NativeOpt::Adam { lr, beta1, beta2, eps } => {
+                let moments = self.moments.as_mut().expect("adam state");
+                let bc1 = 1.0 - beta1.powi(t as i32);
+                let bc2 = 1.0 - beta2.powi(t as i32);
+                for ((p, g), st) in self.model.params.iter_mut().zip(grads).zip(moments) {
+                    for (((pv, &gv), mv), vv) in p
+                        .data_mut()
+                        .iter_mut()
+                        .zip(g.data())
+                        .zip(st.m.data_mut().iter_mut())
+                        .zip(st.v.data_mut().iter_mut())
+                    {
+                        *mv = beta1 * *mv + (1.0 - beta1) * gv;
+                        *vv = beta2 * *vv + (1.0 - beta2) * gv * gv;
+                        let mhat = *mv / bc1;
+                        let vhat = *vv / bc2;
+                        *pv -= lr * mhat / (vhat.sqrt() + eps);
+                    }
+                }
+            }
+        }
+    }
+
+    // -- checkpointing ------------------------------------------------------
+
+    /// Save parameters + optimizer moments + step counter + generator
+    /// RNG state under `dir/name.{bin,json}`.
+    pub fn save_checkpoint(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        let names = model::param_names(&self.model.cfg);
+        let mut tensors: Vec<(String, HostTensor)> = Vec::with_capacity(
+            self.model.params.len() * if self.moments.is_some() { 3 } else { 1 } + 2,
+        );
+        let as_tensor =
+            |m: &Mat| HostTensor::f32(vec![m.rows(), m.cols()], m.data().to_vec());
+        for (n, p) in names.iter().zip(&self.model.params) {
+            tensors.push((n.clone(), as_tensor(p)));
+        }
+        if let Some(ms) = &self.moments {
+            for (n, st) in names.iter().zip(ms) {
+                tensors.push((format!("opt_m.{n}"), as_tensor(&st.m)));
+                tensors.push((format!("opt_v.{n}"), as_tensor(&st.v)));
+            }
+        }
+        tensors.push(("meta.step".into(), HostTensor::i32(vec![1], vec![self.step_no as i32])));
+        tensors.push(("meta.rng".into(), HostTensor::i32(vec![8], rng_words(self.rng.state()))));
+        // Run hyperparameters that the bit-exact-resume contract depends
+        // on: geometry + seed (batch/seq/k/seed drive the data stream
+        // and generator sampling) and the optimizer constants.
+        tensors.push(("meta.geom".into(), HostTensor::i32(vec![5], self.geom_words())));
+        tensors.push(("meta.opt".into(), HostTensor::f32(vec![5], opt_words(self.opt))));
+        checkpoint::save(dir, name, &tensors)
+    }
+
+    /// Restore a checkpoint written by [`LmTrainer::save_checkpoint`]
+    /// into this trainer (which must have the same config/optimizer).
+    /// After this, continuing the run reproduces the uninterrupted one
+    /// bit for bit (the caller fast-forwards the batch stream by
+    /// [`LmTrainer::step_no`] batches).
+    pub fn resume(&mut self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        let loaded = checkpoint::load(dir, name)?;
+        let map: std::collections::BTreeMap<String, HostTensor> = loaded.into_iter().collect();
+        let names = model::param_names(&self.model.cfg);
+        let restore = |dst: &mut Mat, key: &str| -> Result<()> {
+            let t = map.get(key).with_context(|| format!("checkpoint missing `{key}`"))?;
+            ensure!(
+                t.shape() == [dst.rows(), dst.cols()],
+                "checkpoint `{key}`: shape {:?} vs model {}x{}",
+                t.shape(),
+                dst.rows(),
+                dst.cols()
+            );
+            dst.data_mut().copy_from_slice(t.as_f32()?);
+            Ok(())
+        };
+        for (n, p) in names.iter().zip(self.model.params.iter_mut()) {
+            restore(p, n)?;
+        }
+        match &mut self.moments {
+            Some(ms) => {
+                ensure!(
+                    map.contains_key(&format!("opt_m.{}", names[0])),
+                    "checkpoint has no Adam moments but the trainer uses Adam"
+                );
+                for (n, st) in names.iter().zip(ms.iter_mut()) {
+                    restore(&mut st.m, &format!("opt_m.{n}"))?;
+                    restore(&mut st.v, &format!("opt_v.{n}"))?;
+                }
+            }
+            None => {
+                if map.contains_key(&format!("opt_m.{}", names[0])) {
+                    bail!("checkpoint carries Adam moments but the trainer uses SGD");
+                }
+            }
+        }
+        // The resume contract is "bit-identical to the uninterrupted
+        // run" — that only holds if the data-stream geometry, the run
+        // seed, the generator budget and the optimizer constants are
+        // all unchanged.
+        let geom = map.get("meta.geom").context("checkpoint missing `meta.geom`")?;
+        let g = geom.as_i32()?;
+        let want_geom = self.geom_words();
+        ensure!(
+            g == &want_geom[..],
+            "checkpoint was trained with batch/seq/k/seed = {g:?}, trainer uses {want_geom:?} — \
+             resuming would silently diverge from the original run"
+        );
+        let opt = map.get("meta.opt").context("checkpoint missing `meta.opt`")?;
+        let want = opt_words(self.opt);
+        let got = opt.as_f32()?;
+        ensure!(
+            got.iter().map(|v| v.to_bits()).eq(want.iter().map(|v| v.to_bits())),
+            "checkpoint optimizer {got:?} differs from the trainer's {want:?}"
+        );
+        let step = map.get("meta.step").context("checkpoint missing `meta.step`")?;
+        self.step_no = step.as_i32()?[0].max(0) as usize;
+        let words = map.get("meta.rng").context("checkpoint missing `meta.rng`")?;
+        self.rng = Xoshiro256::from_state(words_to_state(words.as_i32()?)?);
+        Ok(())
+    }
+
+    /// `[batch, seq, k, seed_lo, seed_hi]` as i32 words — the geometry
+    /// fingerprint a checkpoint must match to be resumable.
+    fn geom_words(&self) -> Vec<i32> {
+        vec![
+            self.batch as i32,
+            self.seq as i32,
+            self.k as i32,
+            (self.seed & 0xFFFF_FFFF) as u32 as i32,
+            (self.seed >> 32) as u32 as i32,
+        ]
+    }
+}
+
+/// Optimizer constants as a flat f32 tensor (`[kind, lr, β1, β2, ε]`;
+/// kind 0 = SGD, 1 = Adam) — checkpointed so resume can refuse a
+/// hyperparameter mismatch that would break bit-exactness.
+fn opt_words(opt: NativeOpt) -> Vec<f32> {
+    match opt {
+        NativeOpt::Sgd { lr } => vec![0.0, lr, 0.0, 0.0, 0.0],
+        NativeOpt::Adam { lr, beta1, beta2, eps } => vec![1.0, lr, beta1, beta2, eps],
+    }
+}
+
+/// `[u64; 4]` RNG state ⇄ eight little-endian i32 words (checkpoints
+/// only carry f32/i32 tensors).
+fn rng_words(s: [u64; 4]) -> Vec<i32> {
+    s.iter()
+        .flat_map(|&x| [(x & 0xFFFF_FFFF) as u32 as i32, (x >> 32) as u32 as i32])
+        .collect()
+}
+
+fn words_to_state(w: &[i32]) -> Result<[u64; 4]> {
+    ensure!(w.len() == 8, "meta.rng: expected 8 words, got {}", w.len());
+    let mut s = [0u64; 4];
+    for (i, st) in s.iter_mut().enumerate() {
+        let lo = w[2 * i] as u32 as u64;
+        let hi = w[2 * i + 1] as u32 as u64;
+        *st = (hi << 32) | lo;
+    }
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// The run loop (`pamm train --native` / `--quick`)
+// ---------------------------------------------------------------------------
+
+/// Run configuration for one native LM pretraining run.
+#[derive(Debug, Clone)]
+pub struct LmRunConfig {
+    pub cfg: LmConfig,
+    pub batch: usize,
+    pub seq: usize,
+    pub steps: usize,
+    pub k: usize,
+    pub opt: NativeOpt,
+    pub seed: u64,
+    /// Checkpoint every N optimizer steps (0 = only the final one).
+    pub ckpt_every: usize,
+    pub run_dir: String,
+    pub run_name: String,
+    /// Resume from `run_dir/ckpt/run_name` if that checkpoint exists.
+    pub resume: bool,
+}
+
+/// Native next-token pretraining end to end: tokenizer + packed
+/// batches from `data`, fwd/bwd through the graph tape, SGD/Adam
+/// updates, run logging, periodic checkpoints, exact resume. Returns
+/// the standard [`TrainOutcome`] (curve subsampled like the PJRT
+/// trainer; with ≤ 50 steps every step is on the curve).
+pub fn train_lm_native(rc: &LmRunConfig, pool: &Pool, quiet: bool) -> Result<TrainOutcome> {
+    ensure!(rc.steps > 0, "lm train: steps must be > 0");
+    let mut t = LmTrainer::new(rc.cfg.clone(), rc.batch, rc.seq, rc.k, rc.opt, rc.seed);
+    let ckpt_dir = format!("{}/ckpt", rc.run_dir);
+    let mut resumed = false;
+    if rc.resume && Path::new(&ckpt_dir).join(format!("{}.json", rc.run_name)).exists() {
+        t.resume(&ckpt_dir, &rc.run_name)?;
+        resumed = true;
+        if !quiet {
+            println!("resumed `{}` at step {}", rc.run_name, t.step_no());
+        }
+    }
+    ensure!(
+        t.step_no() <= rc.steps,
+        "checkpoint is at step {} but the run asks for {} steps",
+        t.step_no(),
+        rc.steps
+    );
+    if t.step_no() == rc.steps {
+        // Already complete: nothing to train, nothing to (re)log — and
+        // the caller gets an empty curve it must not index blindly.
+        if !quiet {
+            println!("run `{}` is already at its final step {} — nothing to do", rc.run_name, rc.steps);
+        }
+        return Ok(TrainOutcome {
+            run_name: rc.run_name.clone(),
+            steps: rc.steps,
+            final_loss: f32::NAN,
+            final_eval_loss: None,
+            final_ppl: None,
+            tokens_per_sec: None,
+            curve: Vec::new(),
+        });
+    }
+
+    let mut it = BatchIterator::from_seed(rc.cfg.vocab, rc.batch, rc.seq, rc.seed);
+    it.skip_batches(t.step_no()); // deterministic stream fast-forward
+    // A resumed run appends to the existing log instead of truncating
+    // the pre-interruption step history, and drops a resume marker:
+    // steps between the last checkpoint and a crash are re-logged after
+    // it (training replays them bit-identically; the EMA column
+    // restarts from the first replayed loss — it is presentation-only
+    // smoothing, not training state).
+    let mut logger = if resumed {
+        let mut l = RunLogger::append(&rc.run_dir, &rc.run_name)?;
+        l.log_resume(t.step_no())?;
+        l
+    } else {
+        RunLogger::create(&rc.run_dir, &rc.run_name)?
+    };
+    let mut ema = Ema::new(0.05);
+    let mut meter = ThroughputMeter::new(2.min(rc.steps / 4));
+    let mut curve = Vec::new();
+    let mut last_loss = f32::NAN;
+
+    for s in t.step_no()..rc.steps {
+        let b = it.next_batch();
+        let loss = t.train_step(&b.tokens, pool, None);
+        meter.step(b.n_tokens());
+        last_loss = loss;
+        let sm = ema.update(loss as f64);
+        if s % (rc.steps / 50).max(1) == 0 || s + 1 == rc.steps {
+            curve.push((s, loss));
+            logger.log_step(s, loss as f64, sm, meter.tokens_per_sec())?;
+            if !quiet {
+                println!(
+                    "step {s:>5}  loss {loss:7.4}  ema {sm:7.4}  ppl {:8.2}  tok/s {}",
+                    perplexity(sm),
+                    meter
+                        .tokens_per_sec()
+                        .map(|t| format!("{t:.0}"))
+                        .unwrap_or_else(|| "-".into())
+                );
+            }
+        }
+        if rc.ckpt_every > 0 && (s + 1) % rc.ckpt_every == 0 && s + 1 < rc.steps {
+            t.save_checkpoint(&ckpt_dir, &rc.run_name)?;
+        }
+    }
+    t.save_checkpoint(&ckpt_dir, &rc.run_name)?;
+
+    let tok_s = meter.tokens_per_sec();
+    logger.log_summary(vec![
+        ("final_loss", jsonx::num(last_loss as f64)),
+        ("steps", jsonx::num(rc.steps as f64)),
+        ("layers", jsonx::num(rc.cfg.n_layers as f64)),
+        ("k", jsonx::num(rc.k as f64)),
+        ("tok_s", tok_s.map(jsonx::num).unwrap_or(jsonx::Value::Null)),
+    ])?;
+
+    Ok(TrainOutcome {
+        run_name: rc.run_name.clone(),
+        steps: rc.steps,
+        final_loss: last_loss,
+        final_eval_loss: None,
+        final_ppl: None,
+        tokens_per_sec: tok_s,
+        curve,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> LmConfig {
+        LmConfig { vocab: 300, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 }
+    }
+
+    #[test]
+    fn rng_state_words_roundtrip() {
+        let s = [0x0123_4567_89AB_CDEFu64, u64::MAX, 0, 0x8000_0000_0000_0001];
+        let w = rng_words(s);
+        assert_eq!(w.len(), 8);
+        assert_eq!(words_to_state(&w).unwrap(), s);
+        assert!(words_to_state(&w[..7]).is_err());
+    }
+
+    #[test]
+    fn lm_training_on_real_batches_reduces_the_loss() {
+        let cfg = tiny_cfg();
+        let (batch, seq) = (2usize, 24usize);
+        let mut t = LmTrainer::new(cfg.clone(), batch, seq, 8, NativeOpt::adam(3e-3), 5);
+        let mut it = BatchIterator::from_seed(cfg.vocab, batch, seq, 5);
+        let pool = Pool::serial();
+        let mut first = 0f32;
+        let mut last = 0f32;
+        let steps = 25;
+        let mut head = Vec::new();
+        let mut tail = Vec::new();
+        for s in 0..steps {
+            let b = it.next_batch();
+            let loss = t.train_step(&b.tokens, &pool, None);
+            if s == 0 {
+                first = loss;
+            }
+            if s < 5 {
+                head.push(loss);
+            }
+            if s >= steps - 5 {
+                tail.push(loss);
+            }
+            last = loss;
+        }
+        assert!(first.is_finite() && last.is_finite());
+        let avg = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        assert!(
+            avg(&tail) < avg(&head),
+            "LM pretraining must reduce the loss: head {:?} tail {:?}",
+            head,
+            tail
+        );
+        assert_eq!(t.step_no(), steps);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_restores_exact_state() {
+        let dir = std::env::temp_dir().join(format!("pamm_lm_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = tiny_cfg();
+        let (batch, seq) = (1usize, 16usize);
+        let mut a = LmTrainer::new(cfg.clone(), batch, seq, 4, NativeOpt::adam(1e-3), 9);
+        let mut it = BatchIterator::from_seed(cfg.vocab, batch, seq, 9);
+        let pool = Pool::serial();
+        for _ in 0..3 {
+            let b = it.next_batch();
+            a.train_step(&b.tokens, &pool, None);
+        }
+        a.save_checkpoint(&dir, "t").unwrap();
+
+        let mut b = LmTrainer::new(cfg.clone(), batch, seq, 4, NativeOpt::adam(1e-3), 9);
+        b.resume(&dir, "t").unwrap();
+        assert_eq!(b.step_no(), 3);
+        for (pa, pb) in a.model.params.iter().zip(&b.model.params) {
+            assert_eq!(pa, pb, "params must restore bit-identically");
+        }
+        let (ma, mb) = (a.moments.as_ref().unwrap(), b.moments.as_ref().unwrap());
+        for (sa, sb) in ma.iter().zip(mb) {
+            assert_eq!(sa.m, sb.m);
+            assert_eq!(sa.v, sb.v);
+        }
+        assert_eq!(a.rng.state(), b.rng.state(), "generator stream must resume in place");
+
+        // An SGD trainer must refuse an Adam checkpoint…
+        let mut c = LmTrainer::new(cfg.clone(), batch, seq, 4, NativeOpt::Sgd { lr: 0.1 }, 9);
+        assert!(c.resume(&dir, "t").is_err());
+        // …and so must a trainer whose geometry (here k) or optimizer
+        // constants differ — either would silently break bit-exact
+        // resume.
+        let mut d = LmTrainer::new(cfg.clone(), batch, seq, 5, NativeOpt::adam(1e-3), 9);
+        assert!(d.resume(&dir, "t").is_err(), "k mismatch must be refused");
+        let mut e = LmTrainer::new(cfg.clone(), batch, seq, 4, NativeOpt::adam(2e-3), 9);
+        assert!(e.resume(&dir, "t").is_err(), "lr mismatch must be refused");
+        let mut f = LmTrainer::new(cfg, batch, seq, 4, NativeOpt::adam(1e-3), 10);
+        assert!(f.resume(&dir, "t").is_err(), "seed mismatch must be refused");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -19,11 +19,19 @@
 //!   plus [`trainer::NativeTrainer`]: the artifact-free native train
 //!   step (compressed-activation fwd+bwd+update through
 //!   `crate::autograd`, the `pamm reproduce table7 --native` engine).
+//! * [`lm`] — native **multi-layer LM pretraining**
+//!   ([`lm::LmTrainer`] / [`lm::train_lm_native`]): real next-token
+//!   training of `model::TransformerLM` on `data::BatchIterator`
+//!   batches through the multi-op graph tape, with SGD/Adam, periodic
+//!   checkpoints and bit-exact resume — the `pamm train --native` /
+//!   `--quick` engine (no artifacts needed).
 
 pub mod ddp;
+pub mod lm;
 pub mod pipeline;
 pub mod session;
 pub mod trainer;
 
+pub use lm::{train_lm_native, LmRunConfig, LmStepReport, LmTrainer};
 pub use session::{ClassifierSession, TrainSession};
 pub use trainer::{train_run, NativeOpt, NativeTrainer, TrainOutcome};

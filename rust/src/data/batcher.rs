@@ -85,6 +85,17 @@ impl BatchIterator {
         &self.tok
     }
 
+    /// Advance the stream by `n` batches without materializing tensors
+    /// — how a resumed training run fast-forwards the deterministic
+    /// token stream to its checkpointed step (`coordinator::lm`).
+    /// `skip_batches(n)` followed by `next_batch()` yields exactly the
+    /// `(n+1)`-th batch of a fresh iterator with the same seed.
+    pub fn skip_batches(&mut self, n: usize) {
+        for _ in 0..n {
+            let _ = self.next_batch();
+        }
+    }
+
     /// Produce the next packed batch (never fails — the corpus is infinite).
     pub fn next_batch(&mut self) -> TokenBatch {
         let need = self.batch * (self.seq + 1);

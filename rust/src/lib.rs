@@ -12,9 +12,14 @@
 //!   pool, `--threads`), the fused flash-attention subsystem
 //!   (`attention`: tiled online softmax consuming PAMM-compressed
 //!   Q/K/V), the compressed-activation autograd (`autograd`: a
-//!   reverse-mode tape whose saved state is the `Compressed` struct +
-//!   O(seq) softmax statistics, with a measured per-phase memory
-//!   ledger), data pipeline, memory accountant, experiment harness
+//!   reverse-mode **multi-op graph tape** — embedding, layernorm,
+//!   fused PAMM-QKV attention, residual, PAMM MLP, tied head, softmax
+//!   cross-entropy — whose projection nodes save only the `Compressed`
+//!   struct + O(seq) softmax statistics, with a measured per-phase
+//!   memory ledger), the GPT-style native LM built on it (`model`:
+//!   config-driven layer count, trained end to end by `pamm train
+//!   --native` through `coordinator::LmTrainer` with checkpointed
+//!   resume), data pipeline, memory accountant, experiment harness
 //!   (one per paper table/figure — see DESIGN.md).
 //!
 //! Python never runs on the request path: `make artifacts` once, then the
@@ -37,6 +42,7 @@ pub mod experiments;
 pub mod jsonx;
 pub mod memory;
 pub mod metrics;
+pub mod model;
 pub mod pamm;
 pub mod poolx;
 pub mod propx;

@@ -111,6 +111,13 @@ fn build_config(args: &Args) -> Result<RunConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
+    // `--native` (or the `--quick` smoke) runs REAL multi-layer
+    // next-token pretraining on the native substrates — no artifacts,
+    // no PJRT (coordinator::train_lm_native over model::TransformerLM).
+    let quick = args.get_bool("quick");
+    if quick || args.get_bool("native") {
+        return cmd_train_native(args, &cfg, quick);
+    }
     let engine = Engine::load(&cfg.artifacts_dir)?;
     println!(
         "training {} [{}] for {} steps (batch {}×{}, workers {}, accum {})",
@@ -124,6 +131,106 @@ fn cmd_train(args: &Args) -> Result<()> {
         out.tokens_per_sec.map(|t| format!(", {t:.0} tok/s")).unwrap_or_default()
     );
     println!("run log: {}/{}.jsonl", cfg.run_dir, out.run_name);
+    Ok(())
+}
+
+/// `pamm train --native` / `--quick`: native LM pretraining end to end
+/// — model geometry from the `memory::ModelGeometry` zoo (`--model`,
+/// default `nano`: 2 layers), packed next-token batches from the
+/// `data` pipeline, fwd/bwd through the multi-op graph tape, Adam,
+/// periodic checkpoints (`--ckpt-every`, `--resume`). `--quick`
+/// shrinks the run to a CI smoke AND asserts the loss decreased.
+fn cmd_train_native(args: &Args, cfg: &RunConfig, quick: bool) -> Result<()> {
+    use pamm::coordinator::{train_lm_native, LmRunConfig, NativeOpt};
+    use pamm::model::LmConfig;
+
+    let g = ModelGeometry::by_name(&cfg.model)
+        .with_context(|| format!("unknown model `{}` (zoo: nano/tiny/small/…)", cfg.model))?;
+    let mcfg = LmConfig::from_geometry(&g)?;
+    let (batch, seq, steps) = if quick {
+        (
+            args.get_usize("batch")?.unwrap_or(2),
+            args.get_usize("seq")?.unwrap_or(32),
+            args.get_usize("steps")?.unwrap_or(40),
+        )
+    } else {
+        (cfg.batch, cfg.seq, cfg.steps)
+    };
+    let tokens = batch * seq;
+    let r_inv = args.get_usize("r-inv")?.unwrap_or(16).max(1);
+    let k = match args.get_usize("k")? {
+        Some(k) => k.clamp(1, tokens),
+        None => tokens.div_ceil(r_inv).max(1),
+    };
+    let lr = args.get_f64("lr")?.unwrap_or(3e-3) as f32;
+    let rc = LmRunConfig {
+        cfg: mcfg.clone(),
+        batch,
+        seq,
+        steps,
+        k,
+        opt: NativeOpt::adam(lr),
+        seed: cfg.seed,
+        ckpt_every: args.get_usize("ckpt-every")?.unwrap_or(if quick { 0 } else { 50 }),
+        run_dir: cfg.run_dir.clone(),
+        run_name: format!("{}_native_k{}_s{}", cfg.model, k, cfg.seed),
+        resume: args.get_bool("resume"),
+    };
+    println!(
+        "native LM pretraining: {} ({} layers, d_model {}, d_ff {}, vocab {}) — batch {batch}x{seq}, k={k}, {steps} steps, Adam lr {lr}, threads {}",
+        cfg.model,
+        mcfg.n_layers,
+        mcfg.d_model(),
+        mcfg.d_ff,
+        mcfg.vocab,
+        pamm::poolx::global().threads()
+    );
+    let out = train_lm_native(&rc, pamm::poolx::global(), args.get_bool("quiet"))?;
+    if out.curve.is_empty() {
+        // A --resume of an already-finished run trains nothing; the
+        // checkpoint is the result. (The quick smoke needs fresh steps.)
+        anyhow::ensure!(
+            !quick,
+            "quick smoke: checkpoint `{}` is already at the final step — \
+             remove {}/ckpt or raise --steps",
+            out.run_name,
+            cfg.run_dir
+        );
+        println!("checkpoint: {}/ckpt/{}.bin (already complete)", cfg.run_dir, out.run_name);
+        return Ok(());
+    }
+    println!(
+        "done: final loss {:.4}{}",
+        out.final_loss,
+        out.tokens_per_sec.map(|t| format!(", {t:.0} tok/s")).unwrap_or_default()
+    );
+    println!(
+        "run log: {}/{}.jsonl  checkpoint: {}/ckpt/{}.bin",
+        cfg.run_dir, out.run_name, cfg.run_dir, out.run_name
+    );
+    if quick {
+        // Acceptance smoke: multi-layer (N ≥ 2) native pretraining must
+        // make real progress.
+        anyhow::ensure!(
+            mcfg.n_layers >= 2,
+            "--quick expects a multi-layer model (got {} layers)",
+            mcfg.n_layers
+        );
+        let window = (out.curve.len() / 2).clamp(1, 5);
+        let avg = |w: &[(usize, f32)]| {
+            w.iter().map(|&(_, l)| l as f64).sum::<f64>() / w.len() as f64
+        };
+        let head = avg(&out.curve[..window]);
+        let tail = avg(&out.curve[out.curve.len() - window..]);
+        anyhow::ensure!(
+            tail < head,
+            "quick smoke: loss did not decrease (first {head:.4} vs last {tail:.4})"
+        );
+        println!(
+            "quick smoke OK: loss {head:.4} -> {tail:.4} over {steps} steps ({} layers, every layer PAMM-compressed)",
+            mcfg.n_layers
+        );
+    }
     Ok(())
 }
 
@@ -218,18 +325,8 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
     pamm::experiments::run(&engine, name, args.get_bool("quick"), &out)
 }
 
-/// `pamm ledger` — one cold tracked fwd+bwd of the native train step at
-/// a CLI-chosen shape, rendered as the per-phase memory ledger (the
-/// README quickstart for the paper's training-memory claim; no
-/// artifacts needed).
-fn cmd_ledger(args: &Args) -> Result<()> {
-    use pamm::attention::AttnShape;
-    use pamm::coordinator::{NativeOpt, NativeTrainer};
-    use pamm::memory::{fmt_bytes, MemoryLedger};
-    use pamm::rngx::Xoshiro256;
-    use pamm::tensor::Mat;
-
-    let shape_s = args.get_str("shape").unwrap_or_else(|| "2x4x256x64".into());
+/// Parse a `BxHxLxD` shape flag.
+fn parse_shape(shape_s: &str) -> Result<[usize; 4]> {
     let dims: Vec<usize> = shape_s
         .split('x')
         .map(|p| p.parse::<usize>().map_err(|_| anyhow::anyhow!("--shape expects BxHxLxD, got `{shape_s}`")))
@@ -237,6 +334,29 @@ fn cmd_ledger(args: &Args) -> Result<()> {
     if dims.len() != 4 || dims.iter().any(|&v| v == 0) {
         bail!("--shape expects 4 nonzero dims BxHxLxD, got `{shape_s}`");
     }
+    Ok([dims[0], dims[1], dims[2], dims[3]])
+}
+
+/// `pamm ledger` — one cold tracked fwd+bwd of the native train step at
+/// a CLI-chosen shape, rendered as the per-phase memory ledger (the
+/// README quickstart for the paper's training-memory claim; no
+/// artifacts needed). `--layers N` switches to the whole-model
+/// per-layer ledger (`cmd_ledger_model`).
+fn cmd_ledger(args: &Args) -> Result<()> {
+    use pamm::attention::AttnShape;
+    use pamm::coordinator::{NativeOpt, NativeTrainer};
+    use pamm::memory::{fmt_bytes, MemoryLedger};
+    use pamm::rngx::Xoshiro256;
+    use pamm::tensor::Mat;
+
+    // `--layers N` switches to the whole-model per-layer ledger (one
+    // tracked LM train step across N transformer blocks).
+    if let Some(layers) = args.get_usize("layers")? {
+        return cmd_ledger_model(args, layers.max(1));
+    }
+
+    let shape_s = args.get_str("shape").unwrap_or_else(|| "2x4x256x64".into());
+    let dims = parse_shape(&shape_s)?;
     let shape = AttnShape::new(dims[0], dims[1], dims[2], dims[3], !args.get_bool("no-causal"));
     let tokens = shape.tokens();
     let k = match args.get_usize("k")? {
@@ -286,6 +406,111 @@ fn cmd_ledger(args: &Args) -> Result<()> {
     println!(
         "saved-for-backward = Compressed (C {k}×{dm} + α/f {tokens} rows + β) + log-sum-exp ({} rows)",
         shape.batch * shape.heads * shape.seq
+    );
+    Ok(())
+}
+
+/// `pamm ledger --layers N`: per-layer memory ledger of one cold
+/// tracked **whole-model** train step — per-block saved bytes vs the
+/// dense-autodiff baseline, whole-model totals, and the measured
+/// backward peak asserted under the model-level analytic bound
+/// (`model::backward_peak_bound` = layers × per-block bound +
+/// block-stack residual slack).
+fn cmd_ledger_model(args: &Args, layers: usize) -> Result<()> {
+    use pamm::attention::AttnShape;
+    use pamm::coordinator::{LmTrainer, NativeOpt};
+    use pamm::memory::{fmt_bytes, MemoryLedger};
+    use pamm::model::{self, LmConfig};
+    use pamm::rngx::Xoshiro256;
+
+    let shape_s = args.get_str("shape").unwrap_or_else(|| "1x2x128x32".into());
+    let [b, h, l, d] = parse_shape(&shape_s)?;
+    let dm = h * d;
+    let tokens = b * l;
+    let vocab = args.get_usize("vocab")?.unwrap_or(256).max(4);
+    let d_ff = args.get_usize("d-ff")?.unwrap_or(4 * dm);
+    let k = match args.get_usize("k")? {
+        Some(k) => k.clamp(1, tokens),
+        None => {
+            let r_inv = args.get_usize("r-inv")?.unwrap_or(16).max(1);
+            tokens.div_ceil(r_inv).max(1)
+        }
+    };
+    let cfg = LmConfig { vocab, n_layers: layers, heads: h, head_dim: d, d_ff };
+    let threads = pamm::poolx::global().threads();
+    println!(
+        "memory ledger: one native LM train step, {layers} layers, shape b={b} h={h} l={l} d={d} (tokens {tokens}, d_model {dm}, d_ff {d_ff}, vocab {vocab}), k={k}, threads={threads}"
+    );
+
+    // Random token block — the ledger measures memory, not language.
+    let mut rng = Xoshiro256::new(0x1ED6E8);
+    let toks: Vec<i32> =
+        (0..b * (l + 1)).map(|_| rng.next_below(vocab as u64) as i32).collect();
+
+    // Cold protocol (EXPERIMENTS.md P12): fresh pool + fresh caller
+    // thread so per-worker TLS scratch growth is measured.
+    let ledger = MemoryLedger::new();
+    let mut report = None;
+    std::thread::scope(|sc| {
+        sc.spawn(|| {
+            let cold = pamm::poolx::Pool::new(threads);
+            let mut t = LmTrainer::new(cfg.clone(), b, l, k, NativeOpt::adam(1e-3), 7);
+            report =
+                Some(t.step_report(pamm::tensor::kernels::active(), &toks, &cold, Some(&ledger)));
+        });
+    });
+    let rep = report.expect("tracked step ran");
+    let shape = AttnShape::new(b, h, l, d, true);
+    let dense_block = model::dense_block_saved_bytes(&cfg, &shape);
+    let tail = model::tail_saved_bytes(&cfg, &shape);
+    let dense_total = model::dense_model_saved_bytes(&cfg, &shape);
+
+    println!("\nper-layer saved-for-backward (step loss {:.4}):", rep.loss);
+    println!("{:<14} {:>12} {:>12} {:>8}", "segment", "pamm saved", "dense saved", "factor");
+    let shared = rep.inventory.embedding + rep.inventory.tail;
+    println!(
+        "{:<14} {:>12} {:>12} {:>7.1}x",
+        "emb+head+loss",
+        fmt_bytes(shared),
+        fmt_bytes(tail),
+        tail as f64 / shared.max(1) as f64
+    );
+    for (i, &bsaved) in rep.inventory.blocks.iter().enumerate() {
+        println!(
+            "{:<14} {:>12} {:>12} {:>7.1}x",
+            format!("block {i}"),
+            fmt_bytes(bsaved),
+            fmt_bytes(dense_block),
+            dense_block as f64 / bsaved.max(1) as f64
+        );
+    }
+    println!(
+        "{:<14} {:>12} {:>12} {:>7.1}x\n",
+        "total",
+        fmt_bytes(rep.inventory.total()),
+        fmt_bytes(dense_total),
+        dense_total as f64 / rep.inventory.total().max(1) as f64
+    );
+    print!("{}", ledger.render(dense_total));
+    let bound = model::backward_peak_bound(&cfg, &shape, k, threads);
+    println!(
+        "backward peak ≤ model-level analytic bound: {} ≤ {}",
+        fmt_bytes(ledger.backward.peak()),
+        fmt_bytes(bound)
+    );
+    anyhow::ensure!(
+        ledger.backward.peak() <= bound,
+        "measured backward peak {} exceeds the model-level bound {bound}",
+        ledger.backward.peak()
+    );
+    anyhow::ensure!(
+        ledger.saved() == rep.saved_bytes,
+        "ledger saved {} vs tape inventory {}",
+        ledger.saved(),
+        rep.saved_bytes
+    );
+    println!(
+        "per-block saved = 2×LN(residual stream) + Compressed(QKV) + lse + O + Compressed(MLP); dense adds X_qkv + Q/K/V + X_mlp + z instead of the two Compressed structs"
     );
     Ok(())
 }

@@ -137,6 +137,23 @@ impl RunLogger {
         Ok(RunLogger { jsonl, csv, wrote_csv_header: false })
     }
 
+    /// Open an existing run log for appending — a **resumed** run must
+    /// not truncate the pre-interruption step history
+    /// (`coordinator::lm::train_lm_native`). The CSV header is treated
+    /// as already written when the file is non-empty.
+    pub fn append(dir: impl AsRef<Path>, run_name: &str) -> Result<RunLogger> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let open = |path: std::path::PathBuf| {
+            std::fs::OpenOptions::new().create(true).append(true).open(path)
+        };
+        let csv_path = dir.join(format!("{run_name}.csv"));
+        let had_rows = std::fs::metadata(&csv_path).map(|m| m.len() > 0).unwrap_or(false);
+        let jsonl = BufWriter::new(open(dir.join(format!("{run_name}.jsonl")))?);
+        let csv = BufWriter::new(open(csv_path)?);
+        Ok(RunLogger { jsonl, csv, wrote_csv_header: had_rows })
+    }
+
     /// Log one training step (step, loss, lr-free — schedule is in HLO).
     pub fn log_step(&mut self, step: usize, loss: f64, ema: f64, tok_s: Option<f64>) -> Result<()> {
         let mut pairs = vec![
@@ -154,6 +171,22 @@ impl RunLogger {
             self.wrote_csv_header = true;
         }
         writeln!(self.csv, "{step},{loss},{ema},{}", tok_s.unwrap_or(f64::NAN))?;
+        Ok(())
+    }
+
+    /// Mark a resume point in the JSONL stream. Steps between the last
+    /// checkpoint and a crash get re-logged after the marker (training
+    /// replays them bit-identically); consumers that want a clean curve
+    /// keep, for any step, the row after the LAST resume marker.
+    pub fn log_resume(&mut self, step: usize) -> Result<()> {
+        writeln!(
+            self.jsonl,
+            "{}",
+            jsonx::obj(vec![
+                ("event", jsonx::s("resume")),
+                ("step", jsonx::num(step as f64)),
+            ])
+        )?;
         Ok(())
     }
 
@@ -234,6 +267,29 @@ mod tests {
         m.step(100);
         let t = m.tokens_per_sec().unwrap();
         assert!(t > 0.0 && t < 1e7, "tok/s = {t}");
+    }
+
+    #[test]
+    fn run_logger_append_preserves_history() {
+        let dir = std::env::temp_dir().join(format!("pamm_test_logs_app_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut lg = RunLogger::create(&dir, "resume").unwrap();
+            lg.log_step(0, 5.0, 5.0, None).unwrap();
+            lg.flush().unwrap();
+        }
+        {
+            let mut lg = RunLogger::append(&dir, "resume").unwrap();
+            lg.log_step(1, 4.0, 4.5, None).unwrap();
+            lg.flush().unwrap();
+        }
+        let jsonl = std::fs::read_to_string(dir.join("resume.jsonl")).unwrap();
+        assert_eq!(jsonl.lines().count(), 2, "append must keep the first run's rows");
+        let csv = std::fs::read_to_string(dir.join("resume.csv")).unwrap();
+        // One header + two data rows — no second header on append.
+        assert_eq!(csv.lines().count(), 3, "{csv}");
+        assert_eq!(csv.lines().filter(|l| l.starts_with("step,")).count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,457 @@
+//! Property tests for the multi-layer native LM (`model` +
+//! `coordinator::LmTrainer` over the multi-op graph tape):
+//!
+//! * f64 finite-difference gradient check through **two stacked
+//!   transformer blocks** (all-generators, so the compressed forward
+//!   is the function the oracle differentiates),
+//! * scalar==sse2==avx2 bit-equality of loss and every gradient,
+//! * 1/2/4-thread parity of whole training trajectories,
+//! * the PAMM MLP op at all-generators == the exact dense backward,
+//! * measured per-layer backward peak ≤ the model-level analytic
+//!   bound, with the tape's saved inventory matching its analytic rows,
+//! * checkpoint round-trip + resume: a save/reload/continue run is
+//!   bit-identical, step for step, to an uninterrupted one.
+//!
+//! Run under both `PAMM_SIMD=native` (default) and `PAMM_SIMD=scalar`
+//! (CI does both).
+
+use pamm::autograd::{Tape, LN_EPS};
+use pamm::coordinator::{LmTrainer, NativeOpt};
+use pamm::data::batcher::BatchIterator;
+use pamm::memory::MemoryLedger;
+use pamm::model::{self, LmConfig, TransformerLM};
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels::{self, Dispatch};
+use pamm::tensor::Mat;
+
+fn rand_mat(rows: usize, cols: usize, std: f32, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    Mat::random_normal(rows, cols, std, &mut rng)
+}
+
+fn token_batch(vocab: usize, n: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let ids = (0..n).map(|_| rng.next_below(vocab as u64) as i32).collect();
+    let targets = (0..n).map(|_| rng.next_below(vocab as u64) as i32).collect();
+    (ids, targets)
+}
+
+/// A two-block test model with weights large enough that every
+/// parameter group gets a well-sized gradient (the 0.02 production
+/// init leaves deep-layer grads in the f32 noise floor at FD scales).
+fn fd_model(cfg: &LmConfig, seed: u64) -> TransformerLM {
+    let mut m = TransformerLM::new(cfg.clone(), seed);
+    let dm = cfg.d_model();
+    let mut s = seed;
+    let mut next = |rows: usize, cols: usize, std: f32| {
+        s += 1;
+        rand_mat(rows, cols, std, s)
+    };
+    m.params[0] = next(cfg.vocab, dm, 0.5); // emb
+    for b in 0..cfg.n_layers {
+        let p = 1 + b * model::PARAMS_PER_BLOCK;
+        let mut g = next(1, dm, 0.2);
+        for v in g.data_mut() {
+            *v += 1.0; // gains near 1, not 0
+        }
+        m.params[p] = g;
+        m.params[p + 1] = next(1, dm, 0.1);
+        m.params[p + 2] = next(dm, dm, 0.4);
+        m.params[p + 3] = next(dm, dm, 0.4);
+        m.params[p + 4] = next(dm, dm, 0.4);
+        let mut g2 = next(1, dm, 0.2);
+        for v in g2.data_mut() {
+            *v += 1.0;
+        }
+        m.params[p + 5] = g2;
+        m.params[p + 6] = next(1, dm, 0.1);
+        m.params[p + 7] = next(dm, cfg.d_ff, 0.4);
+        m.params[p + 8] = next(cfg.d_ff, dm, 0.4);
+    }
+    let lnf = 1 + cfg.n_layers * model::PARAMS_PER_BLOCK;
+    let mut gf = next(1, dm, 0.2);
+    for v in gf.data_mut() {
+        *v += 1.0;
+    }
+    m.params[lnf] = gf;
+    m.params[lnf + 1] = next(1, dm, 0.1);
+    m
+}
+
+// ---------------------------------------------------------------------------
+// f64 oracle — an independent dense implementation of the whole model
+// ---------------------------------------------------------------------------
+
+fn mm64(a: &[f64], b: &[f64], r: usize, k: usize, c: usize) -> Vec<f64> {
+    let mut out = vec![0f64; r * c];
+    for i in 0..r {
+        for p in 0..k {
+            let av = a[i * k + p];
+            for j in 0..c {
+                out[i * c + j] += av * b[p * c + j];
+            }
+        }
+    }
+    out
+}
+
+fn ln64(x: &[f64], rows: usize, n: usize, g: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut out = vec![0f64; rows * n];
+    for i in 0..rows {
+        let xr = &x[i * n..(i + 1) * n];
+        let mu: f64 = xr.iter().sum::<f64>() / n as f64;
+        let var: f64 = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / n as f64;
+        let r = 1.0 / (var + LN_EPS as f64).sqrt();
+        for j in 0..n {
+            out[i * n + j] = (xr[j] - mu) * r * g[j] + b[j];
+        }
+    }
+    out
+}
+
+fn gelu64(z: f64) -> f64 {
+    let c = 0.7978845608028654f64; // √(2/π)
+    let a = 0.044715f64;
+    0.5 * z * (1.0 + (c * (z + a * z * z * z)).tanh())
+}
+
+/// Dense causal multi-head attention, token-major in and out.
+fn attn64(
+    qp: &[f64],
+    kp: &[f64],
+    vp: &[f64],
+    batch: usize,
+    seq: usize,
+    heads: usize,
+    dh: usize,
+) -> Vec<f64> {
+    let dm = heads * dh;
+    let scale = 1.0 / (dh as f64).sqrt();
+    let mut out = vec![0f64; batch * seq * dm];
+    for b in 0..batch {
+        for h in 0..heads {
+            for i in 0..seq {
+                let ri = (b * seq + i) * dm + h * dh;
+                let mut scores = vec![0f64; i + 1];
+                for (j, s) in scores.iter_mut().enumerate() {
+                    let rj = (b * seq + j) * dm + h * dh;
+                    let mut acc = 0f64;
+                    for c in 0..dh {
+                        acc += qp[ri + c] * kp[rj + c];
+                    }
+                    *s = scale * acc;
+                }
+                let mx = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mut sum = 0f64;
+                for s in scores.iter_mut() {
+                    *s = (*s - mx).exp();
+                    sum += *s;
+                }
+                for c in 0..dh {
+                    let mut acc = 0f64;
+                    for (j, p) in scores.iter().enumerate() {
+                        let rj = (b * seq + j) * dm + h * dh;
+                        acc += p * vp[rj + c];
+                    }
+                    out[ri + c] = acc / sum;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The whole model in f64, dense (no compression — the function the
+/// compressed forward equals at all-generators, α = 1, β = 1).
+fn oracle_loss(
+    cfg: &LmConfig,
+    params: &[Vec<f64>],
+    ids: &[i32],
+    targets: &[i32],
+    batch: usize,
+    seq: usize,
+) -> f64 {
+    let dm = cfg.d_model();
+    let tokens = batch * seq;
+    let emb = &params[0];
+    let mut x = vec![0f64; tokens * dm];
+    for (i, &id) in ids.iter().enumerate() {
+        x[i * dm..(i + 1) * dm].copy_from_slice(&emb[id as usize * dm..(id as usize + 1) * dm]);
+    }
+    for b in 0..cfg.n_layers {
+        let p = 1 + b * model::PARAMS_PER_BLOCK;
+        let h1 = ln64(&x, tokens, dm, &params[p], &params[p + 1]);
+        let qp = mm64(&h1, &params[p + 2], tokens, dm, dm);
+        let kp = mm64(&h1, &params[p + 3], tokens, dm, dm);
+        let vp = mm64(&h1, &params[p + 4], tokens, dm, dm);
+        let attn = attn64(&qp, &kp, &vp, batch, seq, cfg.heads, cfg.head_dim);
+        for (xv, av) in x.iter_mut().zip(&attn) {
+            *xv += av;
+        }
+        let h2 = ln64(&x, tokens, dm, &params[p + 5], &params[p + 6]);
+        let mut z = mm64(&h2, &params[p + 7], tokens, dm, cfg.d_ff);
+        for v in z.iter_mut() {
+            *v = gelu64(*v);
+        }
+        let y = mm64(&z, &params[p + 8], tokens, cfg.d_ff, dm);
+        for (xv, yv) in x.iter_mut().zip(&y) {
+            *xv += yv;
+        }
+    }
+    let lnf = 1 + cfg.n_layers * model::PARAMS_PER_BLOCK;
+    let hf = ln64(&x, tokens, dm, &params[lnf], &params[lnf + 1]);
+    let mut loss = 0f64;
+    for i in 0..tokens {
+        let hr = &hf[i * dm..(i + 1) * dm];
+        let mut logits = vec![0f64; cfg.vocab];
+        for (t, l) in logits.iter_mut().enumerate() {
+            let er = &emb[t * dm..(t + 1) * dm];
+            *l = hr.iter().zip(er).map(|(a, b)| a * b).sum();
+        }
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = mx + logits.iter().map(|l| (l - mx).exp()).sum::<f64>().ln();
+        loss += lse - logits[targets[i] as usize];
+    }
+    loss / tokens as f64
+}
+
+#[test]
+fn finite_difference_gradient_check_through_two_stacked_blocks() {
+    let cfg = LmConfig { vocab: 17, n_layers: 2, heads: 2, head_dim: 3, d_ff: 10 };
+    let (batch, seq) = (1usize, 6usize);
+    let tokens = batch * seq;
+    let m = fd_model(&cfg, 9000);
+    let (ids, targets) = token_batch(cfg.vocab, tokens, 9100);
+    let pool = Pool::serial();
+
+    // All generators: the compression is the identity up to Lemma-1 α
+    // rounding (≈1e-7), β = 1 — the analytic gradients are exact for
+    // the dense function the oracle computes.
+    let k = tokens;
+    let mut rng = Xoshiro256::new(9200);
+    let (loss, grads) = m.loss_and_grads(
+        kernels::active(),
+        &ids,
+        &targets,
+        batch,
+        seq,
+        k,
+        Eps::Inf,
+        &mut rng,
+        &pool,
+        None,
+    );
+    let params64: Vec<Vec<f64>> =
+        m.params.iter().map(|p| p.data().iter().map(|&v| v as f64).collect()).collect();
+    let oracle = oracle_loss(&cfg, &params64, &ids, &targets, batch, seq);
+    assert!(
+        (loss as f64 - oracle).abs() < 1e-3 * oracle.abs().max(1.0),
+        "forward mismatch: native {loss} vs oracle {oracle}"
+    );
+
+    let h = 1e-3f64;
+    let mut w64 = params64;
+    let names = model::param_names(&cfg);
+    for (pi, name) in names.iter().enumerate() {
+        let n_entries = w64[pi].len();
+        let mut fds = Vec::with_capacity(n_entries);
+        for e in 0..n_entries {
+            let orig = w64[pi][e];
+            w64[pi][e] = orig + h;
+            let lp = oracle_loss(&cfg, &w64, &ids, &targets, batch, seq);
+            w64[pi][e] = orig - h;
+            let lm = oracle_loss(&cfg, &w64, &ids, &targets, batch, seq);
+            w64[pi][e] = orig;
+            fds.push((lp - lm) / (2.0 * h));
+        }
+        let fd_scale = fds.iter().map(|f| f.abs()).fold(0f64, f64::max).max(1e-4);
+        for (e, &fd) in fds.iter().enumerate() {
+            let gv = grads[pi].data()[e] as f64;
+            assert!(
+                (gv - fd).abs() <= 3e-2 * fd_scale,
+                "{name} entry {e}: analytic {gv} vs fd {fd} (scale {fd_scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn loss_and_grads_bit_identical_across_dispatch_levels() {
+    let cfg = LmConfig { vocab: 31, n_layers: 2, heads: 2, head_dim: 8, d_ff: 24 };
+    let (batch, seq) = (2usize, 33usize);
+    let m = fd_model(&cfg, 9400);
+    let (ids, targets) = token_batch(cfg.vocab, batch * seq, 9500);
+    let pool = Pool::serial();
+    let run = |d: Dispatch| {
+        let mut rng = Xoshiro256::new(9600);
+        m.loss_and_grads(d, &ids, &targets, batch, seq, 12, Eps::Inf, &mut rng, &pool, None)
+    };
+    let (loss_b, grads_b) = run(Dispatch::Scalar);
+    for d in [Dispatch::Sse2, Dispatch::Avx2] {
+        if !d.available() {
+            continue;
+        }
+        let (loss, grads) = run(d);
+        assert_eq!(loss.to_bits(), loss_b.to_bits(), "{}: loss", d.name());
+        for (pi, (g, gb)) in grads.iter().zip(&grads_b).enumerate() {
+            let bits = |m: &Mat| m.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(g), bits(gb), "{}: grad of param {pi}", d.name());
+        }
+    }
+}
+
+#[test]
+fn training_trajectories_bit_identical_across_thread_counts() {
+    let cfg = LmConfig { vocab: 300, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 };
+    let (batch, seq) = (2usize, 24usize);
+    let run = |pool: &Pool| {
+        let mut t = LmTrainer::new(cfg.clone(), batch, seq, 8, NativeOpt::adam(2e-3), 17);
+        let mut it = BatchIterator::from_seed(cfg.vocab, batch, seq, 17);
+        let losses: Vec<u32> =
+            (0..3).map(|_| t.train_step(&it.next_batch().tokens, pool, None).to_bits()).collect();
+        (losses, t.model.params)
+    };
+    let base = run(&Pool::serial());
+    for threads in [2usize, 4] {
+        let got = run(&Pool::new(threads).with_min_chunk(1));
+        assert_eq!(got.0, base.0, "loss trajectory t={threads}");
+        for (pi, (p, pb)) in got.1.iter().zip(&base.1).enumerate() {
+            assert_eq!(p, pb, "param {pi} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn mlp_all_generators_matches_the_exact_dense_backward() {
+    // Every row a generator ⇒ Ã = X (α = 1 up to Lemma-1 rounding),
+    // β = 1: the PAMM MLP op must reproduce the dense MLP backward
+    // z = X·W₁, h = GELU(z), dW₂ = hᵀdY, dz = dY·W₂ᵀ ∘ GELU'(z),
+    // dW₁ = Xᵀdz, dX = dz·W₁ᵀ.
+    let (b, dm, dff) = (40usize, 10usize, 14usize);
+    let x = rand_mat(b, dm, 1.0, 9700);
+    let w1 = rand_mat(dm, dff, 0.3, 9701);
+    let w2 = rand_mat(dff, dm, 0.3, 9702);
+    let dy = rand_mat(b, dm, 1.0, 9703);
+    let idx: Vec<usize> = (0..b).collect();
+    let pool = Pool::serial();
+
+    let mut tape = Tape::new();
+    let xid = tape.leaf();
+    let (y, yid) = tape.mlp_pamm(&x, xid, &w1, 0, &w2, 1, &idx, Eps::Inf, &pool, None);
+    tape.seed(yid, dy.clone());
+    let res = tape.backward(kernels::active(), &[w1.clone(), w2.clone()], &pool, None);
+
+    // Dense reference in plain f32 Mat ops.
+    let z = x.matmul(&w1);
+    let mut hh = z.clone();
+    for v in hh.data_mut() {
+        *v = pamm::autograd::gelu(*v);
+    }
+    let y_ref = hh.matmul(&w2);
+    let mut dz = dy.matmul(&w2.transpose());
+    for (dv, &zv) in dz.data_mut().iter_mut().zip(z.data()) {
+        *dv *= pamm::autograd::gelu_grad(zv);
+    }
+    let dw1_ref = x.t_matmul(&dz);
+    let dw2_ref = hh.t_matmul(&dy);
+    let dx_ref = dz.matmul(&w1.transpose());
+
+    let close = |got: &Mat, want: &Mat, name: &str| {
+        let scale = want.frob_norm().max(1e-6);
+        assert!(
+            got.max_abs_diff(want) <= 1e-3 * scale,
+            "{name}: diff {} vs scale {scale}",
+            got.max_abs_diff(want)
+        );
+    };
+    close(&y, &y_ref, "forward y");
+    close(&res.params[0], &dw1_ref, "dw1");
+    close(&res.params[1], &dw2_ref, "dw2");
+    close(res.values[xid].as_ref().unwrap(), &dx_ref, "dx");
+}
+
+#[test]
+fn measured_model_backward_peak_respects_the_model_level_bound() {
+    let cfg = LmConfig { vocab: 128, n_layers: 2, heads: 2, head_dim: 16, d_ff: 64 };
+    let (batch, seq) = (1usize, 64usize);
+    let k = 8usize;
+    let (toks, _) = token_batch(cfg.vocab, batch * (seq + 1), 9800);
+    let threads = 2usize;
+    let ledger = MemoryLedger::new();
+    let mut report = None;
+    std::thread::scope(|sc| {
+        sc.spawn(|| {
+            let cold = Pool::new(threads).with_min_chunk(1);
+            let mut t = LmTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(1e-3), 23);
+            report = Some(t.step_report(kernels::active(), &toks, &cold, Some(&ledger)));
+        });
+    });
+    let rep = report.unwrap();
+    assert_eq!(ledger.saved(), rep.saved_bytes, "ledger records the tape inventory exactly");
+    let shape = pamm::attention::AttnShape::new(batch, cfg.heads, seq, cfg.head_dim, true);
+    // The shared tail matches its analytic inventory to the byte, and
+    // every block undercuts the dense baseline.
+    assert_eq!(
+        rep.inventory.embedding + rep.inventory.tail,
+        model::tail_saved_bytes(&cfg, &shape)
+    );
+    let dense_block = model::dense_block_saved_bytes(&cfg, &shape);
+    for (i, &b) in rep.inventory.blocks.iter().enumerate() {
+        assert!(b < dense_block, "block {i}: saved {b} vs dense {dense_block}");
+    }
+    assert!(rep.saved_bytes < model::dense_model_saved_bytes(&cfg, &shape));
+    // Both phase trackers saw real transients, and the backward peak
+    // sits under the model-level analytic bound.
+    assert!(ledger.forward.peak() > 0);
+    assert!(ledger.backward.peak() > 0);
+    let bound = model::backward_peak_bound(&cfg, &shape, k, threads);
+    assert!(
+        ledger.backward.peak() <= bound,
+        "measured backward peak {} exceeds the model bound {bound}",
+        ledger.backward.peak()
+    );
+}
+
+#[test]
+fn resumed_training_matches_an_uninterrupted_run_step_for_step() {
+    let dir = std::env::temp_dir().join(format!("pamm_prop_model_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = LmConfig { vocab: 300, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 };
+    let (batch, seq, seed) = (2usize, 16usize, 29u64);
+    let pool = Pool::serial();
+    let total = 6usize;
+    let split = 3usize;
+
+    // Uninterrupted run A.
+    let mut a = LmTrainer::new(cfg.clone(), batch, seq, 6, NativeOpt::adam(2e-3), seed);
+    let mut it_a = BatchIterator::from_seed(cfg.vocab, batch, seq, seed);
+    let losses_a: Vec<u32> =
+        (0..total).map(|_| a.train_step(&it_a.next_batch().tokens, &pool, None).to_bits()).collect();
+
+    // Run B: train to the split, checkpoint, resume into a FRESH
+    // trainer, fast-forward the stream, continue.
+    let mut b1 = LmTrainer::new(cfg.clone(), batch, seq, 6, NativeOpt::adam(2e-3), seed);
+    let mut it_b = BatchIterator::from_seed(cfg.vocab, batch, seq, seed);
+    let mut losses_b: Vec<u32> = (0..split)
+        .map(|_| b1.train_step(&it_b.next_batch().tokens, &pool, None).to_bits())
+        .collect();
+    b1.save_checkpoint(&dir, "resume").unwrap();
+    drop(b1);
+
+    let mut b2 = LmTrainer::new(cfg.clone(), batch, seq, 6, NativeOpt::adam(2e-3), seed);
+    b2.resume(&dir, "resume").unwrap();
+    assert_eq!(b2.step_no(), split);
+    let mut it_b2 = BatchIterator::from_seed(cfg.vocab, batch, seq, seed);
+    it_b2.skip_batches(split);
+    losses_b.extend(
+        (split..total).map(|_| b2.train_step(&it_b2.next_batch().tokens, &pool, None).to_bits()),
+    );
+
+    assert_eq!(losses_a, losses_b, "resumed run must replay the loss trajectory bitwise");
+    for (pi, (pa, pb)) in a.model.params.iter().zip(&b2.model.params).enumerate() {
+        assert_eq!(pa, pb, "param {pi}: resumed weights must match the uninterrupted run");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
