@@ -4,12 +4,25 @@
 //! Requires `make artifacts`. Run:
 //!   cargo run --release --example finetune_glue
 
+#[cfg(feature = "pjrt")]
 use pamm::config::Variant;
+#[cfg(feature = "pjrt")]
 use pamm::coordinator::pipeline::LabeledPipeline;
+#[cfg(feature = "pjrt")]
 use pamm::coordinator::ClassifierSession;
+#[cfg(feature = "pjrt")]
 use pamm::data::glue::{self, TaskGenerator};
+#[cfg(feature = "pjrt")]
 use pamm::runtime::{Engine, HostTensor};
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "finetune_glue drives the PJRT artifact runtime; rebuild with `--features pjrt`."
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let engine = Engine::load("artifacts")?;
     let spec = glue::glue_suite().into_iter().find(|t| t.name == "SST2").unwrap();

@@ -1,4 +1,4 @@
-//! End-to-end headline run (DESIGN.md §8): train the largest
+//! End-to-end headline run (DESIGN.md §9): train the largest
 //! CPU-tractable LLaMA-style model through the full AOT→PJRT→coordinator
 //! stack, baseline vs PAMM r = 1/512, logging both loss curves.
 //!
@@ -8,11 +8,24 @@
 //!
 //! The loss curves land in runs/e2e/*.csv; EXPERIMENTS.md records a run.
 
+#[cfg(feature = "pjrt")]
 use pamm::config::{RunConfig, Variant};
+#[cfg(feature = "pjrt")]
 use pamm::coordinator::train_run;
+#[cfg(feature = "pjrt")]
 use pamm::memory::{self, ModelGeometry};
+#[cfg(feature = "pjrt")]
 use pamm::runtime::Engine;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "train_e2e drives the PJRT artifact runtime; rebuild with `--features pjrt`. \
+         The artifact-free equivalent is `pamm train --native`."
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("PAMM_E2E_QUICK").is_ok();
     let engine = Engine::load("artifacts")?;

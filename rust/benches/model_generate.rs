@@ -1,0 +1,143 @@
+//! Bench: native generation with the PAMM-compressed KV cache —
+//! prefill, end-to-end greedy decode, and the continuous-batching
+//! serve loop, per dispatch level × thread count. The acceptance trail
+//! for the generation subsystem: `benchmarks/BENCH_model_generate.json`
+//! → BENCHMARKS.md §model_generate.
+//!
+//! Ops are dispatch-tagged via `kernels::force` (the sanctioned bench
+//! use — single process, rows run serially). GFLOP/s uses the standard
+//! parameter-flop model `2·N` per processed token with
+//! `N = LmConfig::param_count()` — comparability figures, not absolute
+//! kernel throughput (the kernel suites carry those). Prefill/decode
+//! rows are annotated with the session's EXACT compressed-vs-dense
+//! KV-cache savings (`saved_bytes` column):
+//! `dense_kv_cache_bytes - kv_cache_bytes` at the effective k and the
+//! session capacity — the inference twin of the training ledger's
+//! headline quantity.
+//!
+//! Run: `cargo bench --bench model_generate` (PAMM_BENCH_QUICK=1 for
+//! CI); render with `pamm bench-report`.
+
+use std::time::Duration;
+
+use pamm::benchx::{BenchOpts, BenchSink, Suite};
+use pamm::coordinator::{scripted_load, serve, ServeConfig};
+use pamm::generate::{self, Decoder, GenConfig};
+use pamm::memory::fmt_bytes;
+use pamm::model::{LmConfig, TransformerLM};
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels::{self, Dispatch};
+
+fn opts() -> BenchOpts {
+    if std::env::var("PAMM_BENCH_QUICK").is_ok() {
+        BenchOpts { warmup_iters: 0, min_iters: 1, max_iters: 3, max_total: Duration::from_secs(2) }
+    } else {
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            max_total: Duration::from_secs(12),
+        }
+    }
+}
+
+fn main() {
+    // Same block geometry as model_train (heads=4, d=16 → d_model 64,
+    // d_ff 256, vocab 256) so the two suites read side by side.
+    let cfg = LmConfig { vocab: 256, n_layers: 2, heads: 4, head_dim: 16, d_ff: 256 };
+    let (prompt_len, n_new) = (128usize, 32usize);
+    let max_tokens = prompt_len + n_new;
+    let k = prompt_len / 16; // r = 1/16 over the prompt domain
+    let native = Dispatch::native();
+    let threads: &[usize] = &[1, 2, 4];
+    let mut sink = BenchSink::new("model_generate");
+
+    let n_params = cfg.param_count() as f64;
+    let prefill_flops = 2.0 * n_params * prompt_len as f64;
+    let e2e_flops = 2.0 * n_params * max_tokens as f64;
+    let saved =
+        generate::dense_kv_cache_bytes(&cfg, max_tokens) - generate::kv_cache_bytes(&cfg, k, max_tokens);
+
+    let model = TransformerLM::new(cfg.clone(), 11);
+    let mut rng = Xoshiro256::new(23);
+    let prompt: Vec<i32> =
+        (0..prompt_len).map(|_| rng.next_below(cfg.vocab as u64) as i32).collect();
+
+    let shape_s = format!(
+        "L={} dm={} ff={} prompt={prompt_len} new={n_new} k={k}",
+        cfg.n_layers,
+        cfg.d_model(),
+        cfg.d_ff
+    );
+    println!("model_generate: native dispatch = {}", native.name());
+    println!(
+        "  per-session KV cache: compressed {} vs dense {} (saves {})",
+        fmt_bytes(generate::kv_cache_bytes(&cfg, k, max_tokens)),
+        fmt_bytes(generate::dense_kv_cache_bytes(&cfg, max_tokens)),
+        fmt_bytes(saved)
+    );
+
+    let mut suite = Suite::with_opts(&format!("model_generate {shape_s}"), opts());
+    suite.header();
+
+    let mut plan: Vec<(Dispatch, usize)> = vec![(Dispatch::Scalar, 1)];
+    if native != Dispatch::Scalar {
+        plan.extend(threads.iter().map(|&t| (native, t)));
+    }
+    for &(disp, t) in &plan {
+        kernels::force(Some(disp));
+        let tag = disp.name();
+        let pool = Pool::new(t);
+        let gcfg = GenConfig::new(k, Eps::Inf, 5, max_tokens);
+
+        // Prefill: batch-compress the prompt, build every layer cache.
+        let r = suite
+            .bench(&format!("gen_prefill[{tag}] t={t}"), || {
+                let mut dec = Decoder::new(&model, gcfg);
+                std::hint::black_box(dec.prefill(&prompt, &pool)[0]);
+            })
+            .clone();
+        sink.record_flops(&format!("gen_prefill[{tag}]"), &shape_s, t, &r, prefill_flops);
+        sink.annotate_saved_bytes(saved);
+
+        // End to end: prefill + greedy decode of n_new folded tokens.
+        let r = suite
+            .bench(&format!("gen_e2e[{tag}] t={t}"), || {
+                let mut dec = Decoder::new(&model, gcfg);
+                dec.prefill(&prompt, &pool);
+                std::hint::black_box(dec.generate(n_new, &pool));
+            })
+            .clone();
+        sink.record_flops(&format!("gen_e2e[{tag}]"), &shape_s, t, &r, e2e_flops);
+        sink.annotate_saved_bytes(saved);
+        println!("    -> {:.0} tok/s end-to-end", r.rate(max_tokens as f64));
+
+        // Serve loop: 8 scripted requests through continuous batching.
+        let reqs = scripted_load(8, cfg.vocab, 7);
+        let scfg = ServeConfig { max_concurrent: 4, k: 4, eps: Eps::Inf, seed: 13 };
+        let served_tokens: usize = reqs.iter().map(|r| r.max_new).sum();
+        let r = suite
+            .bench(&format!("serve[{tag}] t={t}"), || {
+                std::hint::black_box(serve(&model, &scfg, &reqs, &pool).unwrap().steps);
+            })
+            .clone();
+        sink.record(&format!("serve[{tag}]"), &format!("{shape_s} reqs=8"), t, &r);
+        println!("    -> {:.0} served tok/s", r.rate(served_tokens as f64));
+    }
+    kernels::force(None);
+
+    if let Some(sp) =
+        suite.ratio(&format!("gen_e2e[{}] t=1", native.name()), "gen_e2e[scalar] t=1")
+    {
+        println!("  decode vs scalar (single thread, {}): {sp:.2}x", native.name());
+    }
+
+    match sink.flush() {
+        Ok(path) => {
+            println!("\npersisted {} entries to {}", sink.entries().len(), path.display())
+        }
+        Err(e) => eprintln!("bench persistence failed: {e}"),
+    }
+}

@@ -1101,6 +1101,202 @@ fn ws_bytes(ws: &Workspace) -> usize {
 }
 
 // ---------------------------------------------------------------------------
+// Cached-decode entry point (generation)
+// ---------------------------------------------------------------------------
+
+/// One head of the cached-decode walk: queries are **dense** projection
+/// rows (`q` token-major, head columns `[col0, col0+dh)`, absolute
+/// positions `[pos0, pos0+q_len)`), K/V strips are gather-scaled per
+/// tile from the compressed cache's projected generators — the dense
+/// K/V slabs never materialize, exactly like [`attend_head`]'s Pamm
+/// source. The tile walk and the online-softmax recurrence are the
+/// same statements as [`attend_head`] with `i0` replaced by the
+/// absolute `pos0 + i0`, so a query row computed here is bit-identical
+/// whether it arrives in a many-row prefill call or a one-row decode
+/// call: the per-row softmax state is independent, the S/acc GEMMs'
+/// per-element accumulation order depends only on the depth, and
+/// entries masked to `NEG_INF` contribute exactly `+0.0` (the same
+/// argument that lets causal walks skip fully-masked tiles).
+#[allow(clippy::too_many_arguments)]
+fn attend_head_cached(
+    d: Dispatch,
+    q: &Mat,
+    pos0: usize,
+    col0: usize,
+    gk: &Mat,
+    gv: &Mat,
+    alpha: &[f32],
+    assign: &[u32],
+    kv_len: usize,
+    dh: usize,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
+    let q_len = q.rows();
+    debug_assert_eq!(out.len(), q_len * dh);
+    debug_assert_eq!(kv_len, pos0 + q_len);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let Workspace { packs, attn, .. } = ws;
+    attn.ensure(BR.min(q_len.max(1)), BC.min(kv_len.max(1)), dh);
+
+    for i0 in (0..q_len).step_by(BR) {
+        let br = BR.min(q_len - i0);
+        for r in 0..br {
+            let src = &q.row(i0 + r)[col0..col0 + dh];
+            for (o, &s) in attn.qs[r * dh..(r + 1) * dh].iter_mut().zip(src) {
+                *o = s * scale;
+            }
+        }
+        attn.m[..br].fill(NEG_INF);
+        attn.l[..br].fill(0.0);
+        attn.acc[..br * dh].fill(0.0);
+
+        // Causal: walk cache tiles up to the one holding the last query
+        // row's own position (self-attention includes the query row —
+        // the caller folds a token into the cache *before* attending).
+        let ntiles = (pos0 + i0 + br).div_ceil(BC);
+        for jt in 0..ntiles {
+            let j0 = jt * BC;
+            let bc = BC.min(kv_len - j0);
+            strip_pamm(&mut attn.ks, gk, alpha, assign, 0, col0, j0, bc, dh, 1.0);
+            strip_pamm(&mut attn.vs, gv, alpha, assign, 0, col0, j0, bc, dh, 1.0);
+            for c in 0..dh {
+                for r in 0..bc {
+                    attn.kt[c * bc + r] = attn.ks[r * dh + c];
+                }
+            }
+            attn.s[..br * bc].fill(0.0);
+            kernels::gemm_into(
+                d,
+                false,
+                br,
+                bc,
+                dh,
+                &attn.qs[..br * dh],
+                dh,
+                &attn.kt[..dh * bc],
+                bc,
+                &mut attn.s[..br * bc],
+                bc,
+                packs,
+            );
+            if j0 + bc > pos0 + i0 + 1 {
+                for r in 0..br {
+                    let first_masked = (pos0 + i0 + r + 1).saturating_sub(j0);
+                    if first_masked < bc {
+                        attn.s[r * bc + first_masked..(r + 1) * bc].fill(NEG_INF);
+                    }
+                }
+            }
+            for r in 0..br {
+                let srow = &mut attn.s[r * bc..(r + 1) * bc];
+                let mut mx = NEG_INF;
+                for &sv in srow.iter() {
+                    mx = mx.max(sv);
+                }
+                let m_new = attn.m[r].max(mx);
+                let corr = (attn.m[r] - m_new).exp();
+                let mut psum = 0.0f32;
+                for sv in srow.iter_mut() {
+                    *sv = (*sv - m_new).exp();
+                    psum += *sv;
+                }
+                attn.l[r] = attn.l[r] * corr + psum;
+                attn.m[r] = m_new;
+                if corr != 1.0 {
+                    for av in &mut attn.acc[r * dh..(r + 1) * dh] {
+                        *av *= corr;
+                    }
+                }
+            }
+            kernels::gemm_into(
+                d,
+                false,
+                br,
+                dh,
+                bc,
+                &attn.s[..br * bc],
+                bc,
+                &attn.vs[..bc * dh],
+                dh,
+                &mut attn.acc[..br * dh],
+                dh,
+                packs,
+            );
+        }
+        for r in 0..br {
+            let denom = attn.l[r].max(1e-30);
+            let orow = &mut out[(i0 + r) * dh..(i0 + r + 1) * dh];
+            for (o, &av) in orow.iter_mut().zip(&attn.acc[r * dh..(r + 1) * dh]) {
+                *o = av / denom;
+            }
+        }
+    }
+}
+
+/// Causal attention over a PAMM-compressed KV cache — the generation
+/// entry point (`crate::generate`, DESIGN.md §8). Queries are dense
+/// `(q_len × d_model)` projection rows at absolute positions
+/// `[pos0, pos0 + q_len)`; keys and values for all `kv_len = pos0 +
+/// q_len` cached positions are gather-scaled per tile from the
+/// projected generators `gk`/`gv` (`k × d_model` each, from
+/// [`Compressed::project_generators`]) with the cache's `α`/`f` rows —
+/// the dense K/V slabs never exist. Parallel over the head grid only
+/// (partition-only-task: each head's tile walk is a fixed serial
+/// order), so the output is bit-identical at any thread count and
+/// across the dispatch ladder; and because per-row softmax state is
+/// independent and masked entries contribute exactly `+0.0`, a decode
+/// call with one query row is bit-identical to the same row of a
+/// prefill call over the whole sequence — the parity `prop_generate`
+/// asserts.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_cached_on(
+    d: Dispatch,
+    q: &Mat,
+    pos0: usize,
+    gk: &Mat,
+    gv: &Mat,
+    alpha: &[f32],
+    assign: &[u32],
+    heads: usize,
+    head_dim: usize,
+    pool: &Pool,
+) -> Mat {
+    let q_len = q.rows();
+    let dm = heads * head_dim;
+    let kv_len = pos0 + q_len;
+    assert!(head_dim >= 1, "attend_cached: head_dim must be ≥ 1");
+    assert!(head_dim <= kernels::NC, "attend_cached: head_dim above the kernel NC block");
+    assert_eq!(q.cols(), dm, "attend_cached: q width vs heads·head_dim");
+    assert_eq!(gk.cols(), dm, "attend_cached: gk width vs heads·head_dim");
+    assert_eq!(gv.cols(), dm, "attend_cached: gv width vs heads·head_dim");
+    assert!(alpha.len() >= kv_len, "attend_cached: cache shorter than kv_len");
+    assert_eq!(alpha.len(), assign.len(), "attend_cached: α/f length mismatch");
+    let slab = q_len * head_dim;
+    let packed = pool.for_tasks().map_chunks_flat(heads, slab, |s, e, out| {
+        kernels::with_workspace(|ws| {
+            for h in s..e {
+                attend_head_cached(
+                    d,
+                    q,
+                    pos0,
+                    h * head_dim,
+                    gk,
+                    gv,
+                    &alpha[..kv_len],
+                    &assign[..kv_len],
+                    kv_len,
+                    head_dim,
+                    ws,
+                    &mut out[(h - s) * slab..(h - s + 1) * slab],
+                );
+            }
+        })
+    });
+    merge_heads(&packed, &AttnShape::new(1, heads, q_len, head_dim, true))
+}
+
+// ---------------------------------------------------------------------------
 // Memory model
 // ---------------------------------------------------------------------------
 
@@ -1422,6 +1618,119 @@ mod tests {
         let (dq, dk, dv) =
             flash_attention_bwd_on(d, &q, &k, &v, &o, &dout, &lse, &shape, &pool);
         assert!(dq.iter().chain(&dk).chain(&dv).all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn cached_decode_matches_prefill_bitwise() {
+        // One-shot prefill over the whole sequence vs one-row decode
+        // calls against the same cache must agree bit-for-bit — the
+        // generation parity contract (kv walks differ only in masked
+        // entries that contribute exactly +0.0).
+        let (heads, dh, seq) = (2usize, 8usize, BC + 9);
+        let dm = heads * dh;
+        let x = rand_mat(seq, dm, 60);
+        let wk = rand_mat(dm, dm, 61);
+        let wv = rand_mat(dm, dm, 62);
+        let mut rng = Xoshiro256::new(63);
+        let idx = pamm::sample_generators(&mut rng, seq, 10);
+        let pool = Pool::serial();
+        let comp = pamm::compress_with(&x, &idx, Eps::Inf, &pool);
+        let gk = comp.project_generators(&wk);
+        let gv = comp.project_generators(&wv);
+        let q = rand_mat(seq, dm, 64);
+        let d = kernels::active();
+        let one = attend_cached_on(d, &q, 0, &gk, &gv, &comp.alpha, &comp.assign, heads, dh, &pool);
+        for t in 0..seq {
+            let qt = Mat::from_fn(1, dm, |_, j| q.get(t, j));
+            let row = attend_cached_on(
+                d,
+                &qt,
+                t,
+                &gk,
+                &gv,
+                &comp.alpha[..t + 1],
+                &comp.assign[..t + 1],
+                heads,
+                dh,
+                &pool,
+            );
+            let got: Vec<u32> = row.row(0).iter().map(|v| v.to_bits()).collect();
+            let want: Vec<u32> = one.row(t).iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "decode row {t} diverges from prefill");
+        }
+    }
+
+    #[test]
+    fn cached_decode_matches_naive_on_reconstructed_kv() {
+        // Semantics pin: attending the cache == naive attention over
+        // the materialized Ã·W keys/values (up to GEMM rounding).
+        let (heads, dh, seq) = (2usize, 4usize, 21usize);
+        let dm = heads * dh;
+        let x = rand_mat(seq, dm, 70);
+        let wk = rand_mat(dm, dm, 71);
+        let wv = rand_mat(dm, dm, 72);
+        let mut rng = Xoshiro256::new(73);
+        let idx = pamm::sample_generators(&mut rng, seq, 6);
+        let pool = Pool::serial();
+        let comp = pamm::compress_with(&x, &idx, Eps::Inf, &pool);
+        let gk = comp.project_generators(&wk);
+        let gv = comp.project_generators(&wv);
+        let q = rand_mat(seq, dm, 74);
+        let got = attend_cached_on(
+            kernels::active(), &q, 0, &gk, &gv, &comp.alpha, &comp.assign, heads, dh, &pool,
+        );
+        let shape = AttnShape::new(1, heads, seq, dh, true);
+        let xr = comp.reconstruct();
+        let want = naive_attention(
+            &split_heads(&q, &shape),
+            &split_heads(&xr.matmul(&wk), &shape),
+            &split_heads(&xr.matmul(&wv), &shape),
+            &shape,
+        );
+        let want = merge_heads(&want, &shape);
+        for i in 0..seq {
+            for j in 0..dm {
+                let (g, w) = (got.get(i, j), want.get(i, j));
+                assert!((g - w).abs() <= 1e-3 * w.abs().max(1.0), "({i},{j}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_decode_thread_and_dispatch_parity() {
+        let (heads, dh, seq) = (4usize, 8usize, 40usize);
+        let dm = heads * dh;
+        let x = rand_mat(seq, dm, 80);
+        let wk = rand_mat(dm, dm, 81);
+        let wv = rand_mat(dm, dm, 82);
+        let mut rng = Xoshiro256::new(83);
+        let idx = pamm::sample_generators(&mut rng, seq, 7);
+        let serial = Pool::serial();
+        let comp = pamm::compress_with(&x, &idx, Eps::Inf, &serial);
+        let gk = comp.project_generators(&wk);
+        let gv = comp.project_generators(&wv);
+        let q = rand_mat(seq, dm, 84);
+        let base = attend_cached_on(
+            Dispatch::Scalar, &q, 0, &gk, &gv, &comp.alpha, &comp.assign, heads, dh, &serial,
+        );
+        for d in [Dispatch::Sse2, Dispatch::Avx2] {
+            if !d.available() {
+                continue;
+            }
+            let got =
+                attend_cached_on(d, &q, 0, &gk, &gv, &comp.alpha, &comp.assign, heads, dh, &serial);
+            assert_eq!(got, base, "dispatch {d:?}");
+        }
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads).with_min_chunk(1);
+            let got = attend_cached_on(
+                kernels::active(), &q, 0, &gk, &gv, &comp.alpha, &comp.assign, heads, dh, &pool,
+            );
+            let want = attend_cached_on(
+                kernels::active(), &q, 0, &gk, &gv, &comp.alpha, &comp.assign, heads, dh, &serial,
+            );
+            assert_eq!(got, want, "threads {threads}");
+        }
     }
 
     #[test]

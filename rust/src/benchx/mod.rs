@@ -105,7 +105,11 @@ pub fn thread_sweep() -> Vec<usize> {
     sweep
 }
 
-fn percentile(sorted: &[Duration], p: f64) -> Duration {
+/// Nearest-rank percentile of an ascending-sorted, non-empty sample
+/// (`p` in `[0, 1]`): index `round((len-1)·p)`. Shared by the bench
+/// summaries and `coordinator::serve`'s latency table;
+/// `rust/tests/prop_serve.rs` checks it against a sorted reference.
+pub fn percentile(sorted: &[Duration], p: f64) -> Duration {
     let ix = ((sorted.len() - 1) as f64 * p).round() as usize;
     sorted[ix]
 }

@@ -104,6 +104,29 @@ USAGE:
                                       # loss-decrease asserted; --native
                                       # runs the full-length version with
                                       # periodic checkpoints + --resume
+  pamm generate [--native] [--model M] [--prompt-len N] [--max-new N]
+                [--k N | --r-inv N] [--eps F] [--seed N]
+                [--ckpt NAME] [--ckpt-dir DIR] [--quick]
+                                      # native greedy decoding with the
+                                      # PAMM-compressed KV cache (dense K/V
+                                      # never materialize); asserts one-shot
+                                      # prefill == incremental decode BITWISE
+                                      # and measured cache peak ≤ the
+                                      # analytic bound on every run, then
+                                      # prints the compressed-vs-dense
+                                      # cache-bytes table. Weights: --ckpt
+                                      # loads a `train --native` checkpoint,
+                                      # otherwise fresh init from --seed
+  pamm serve-sim [--requests N] [--max-concurrent N] [--model M]
+                 [--k N] [--eps F] [--seed N] [--quick]
+                                      # continuous-batching simulation over
+                                      # a scripted load: FIFO admission by
+                                      # (arrival, id), one token per active
+                                      # session per step over the task pool
+                                      # (streams bit-identical at any
+                                      # worker count); prints per-request
+                                      # schedule + latency p50/p95/p99 +
+                                      # tok/s + KV-cache bytes saved
   pamm finetune --task NAME [--r-inv N] [--steps N] [--seed N]
   pamm reproduce <fig3a|fig3b|table1|table2a|table2b|table3|table4|table5|
                   table6|table7|fig4a|fig4b|fig5|fig6|fig7|attention|all>

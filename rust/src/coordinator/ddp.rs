@@ -16,11 +16,19 @@
 //! Determinism: worker w at optimizer step s derives its PAMM seed from
 //! (seed, w, s), so runs are reproducible at any worker count.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use crate::runtime::HostTensor;
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
 use crate::coordinator::pipeline::BatchPipeline;
+#[cfg(feature = "pjrt")]
 use crate::data::batcher::BatchIterator;
-use crate::runtime::{Engine, Exec, HostTensor};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{Engine, Exec};
+#[cfg(feature = "pjrt")]
 use crate::rngx::Xoshiro256;
 
 /// Element-wise mean of `sets` gradient vectors (the all-reduce).
@@ -65,6 +73,7 @@ pub fn all_reduce_mean(sets: Vec<Vec<HostTensor>>) -> Result<Vec<HostTensor>> {
 }
 
 /// DDP/grad-accum trainer built on the (grads, apply) artifact pair.
+#[cfg(feature = "pjrt")]
 pub struct DdpTrainer {
     grads_exec: Exec,
     apply_exec: Exec,
@@ -79,6 +88,7 @@ pub struct DdpTrainer {
     pipelines: Vec<BatchPipeline>,
 }
 
+#[cfg(feature = "pjrt")]
 impl DdpTrainer {
     pub fn new(
         engine: &Engine,

@@ -9,8 +9,17 @@
 //! we reproduce the *coordination logic* on the CPU device).
 //!
 //! Pieces:
-//! * [`session::TrainSession`] — one model replica bound to a train_step
-//!   artifact; owns the params/m/v literals and threads them step to step.
+//! * [`session::GenSession`] — one generation request's decode state
+//!   over a shared `model::TransformerLM` (a `generate::Decoder` with
+//!   its PAMM-compressed KV cache), the unit [`serve`] schedules.
+//! * [`serve`] — the continuous-batching serve loop: FIFO admission by
+//!   `(arrival, id)`, one token per active session per step over
+//!   `poolx::Pool::for_tasks`, wall-clock latency percentiles — the
+//!   `pamm serve-sim` engine (deterministic token streams at any
+//!   worker count, `rust/tests/prop_serve.rs`).
+//! * [`session::TrainSession`] (feature `pjrt`) — one model replica
+//!   bound to a train_step artifact; owns the params/m/v literals and
+//!   threads them step to step.
 //! * [`pipeline::BatchPipeline`] — background-thread batch producer
 //!   (bounded channel) so tokenization never stalls a step.
 //! * [`ddp`] — gradient accumulation + simulated multi-worker all-reduce
@@ -29,9 +38,15 @@
 pub mod ddp;
 pub mod lm;
 pub mod pipeline;
+pub mod serve;
 pub mod session;
 pub mod trainer;
 
 pub use lm::{train_lm_native, LmRunConfig, LmStepReport, LmTrainer};
+pub use serve::{serve, scripted_load, Completion, ServeConfig, ServeOutcome, ServeRequest};
+pub use session::GenSession;
+#[cfg(feature = "pjrt")]
 pub use session::{ClassifierSession, TrainSession};
-pub use trainer::{train_run, NativeOpt, NativeTrainer, TrainOutcome};
+#[cfg(feature = "pjrt")]
+pub use trainer::train_run;
+pub use trainer::{NativeOpt, NativeTrainer, TrainOutcome};

@@ -1,0 +1,318 @@
+//! Continuous-batching serve loop over [`GenSession`]s (DESIGN.md §8).
+//!
+//! The simulator plays a scripted request load against one shared
+//! [`TransformerLM`]: requests become visible at their `arrival` step,
+//! are admitted FIFO by `(arrival, id)` while a concurrency slot is
+//! free, and every active session emits exactly one token per step —
+//! prefill + first token at the admission step, one decode afterwards
+//! (the "continuous" in continuous batching: completions free their
+//! slot for the next queued request at the very next step, no batch
+//! barrier).
+//!
+//! **Determinism.** Sessions are partitioned over the serve pool's
+//! workers by the partition-only-task rule ([`Pool::for_tasks`], one
+//! lock per session per step, inner compute on [`Pool::serial`]), and
+//! a session's token stream is a pure function of its own `(seed,
+//! prompt)` — never of which worker ran it or what else was active.
+//! Admission is decided before any session advances, from the script
+//! alone. A fixed arrival script therefore yields **bit-identical
+//! per-request token streams at any worker count**
+//! (`rust/tests/prop_serve.rs` asserts 1 == 2 == 4 workers, and that
+//! each stream equals a standalone [`generate::Decoder`] run).
+//!
+//! Wall-clock per-request latency (arrival-visible → final token,
+//! queueing included) feeds the nearest-rank percentile summary
+//! ([`benchx::percentile`]) the `pamm serve-sim` table renders next to
+//! tokens/s and the compressed-vs-dense cache savings.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::benchx;
+use crate::coordinator::session::GenSession;
+use crate::model::TransformerLM;
+use crate::pamm::Eps;
+use crate::poolx::Pool;
+
+/// One scripted request: `arrival` is the serve step at which it
+/// becomes visible to the admission policy.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: usize,
+    pub arrival: usize,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// Serve-loop knobs. `seed` is folded with each request id so every
+/// session draws its own generator stream deterministically.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Admission cap: at most this many sessions decode concurrently.
+    pub max_concurrent: usize,
+    /// Generator count per layer for every session's KV cache.
+    pub k: usize,
+    /// Neighborhood condition for the caches.
+    pub eps: Eps,
+    pub seed: u64,
+}
+
+/// One finished request with its schedule and cache accounting.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: usize,
+    pub arrival: usize,
+    /// Step at which the session was admitted (== prefill step).
+    pub admitted_step: usize,
+    /// Step at which the final token was emitted.
+    pub finished_step: usize,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Arrival-visible → final token, queueing included.
+    pub latency: Duration,
+    /// Measured compressed-cache peak (== the analytic bound).
+    pub cache_peak_bytes: usize,
+    /// Dense KV baseline minus the compressed bound.
+    pub cache_saved_bytes: usize,
+}
+
+/// Everything the simulation measured. `completions` is ordered by
+/// `(finished_step, id)` — the completion order itself.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub completions: Vec<Completion>,
+    /// Serve steps executed (idle gaps between arrivals are skipped).
+    pub steps: usize,
+    pub wall: Duration,
+}
+
+impl ServeOutcome {
+    pub fn total_tokens(&self) -> usize {
+        self.completions.iter().map(|c| c.tokens.len()).sum()
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.total_tokens() as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    pub fn total_cache_saved_bytes(&self) -> usize {
+        self.completions.iter().map(|c| c.cache_saved_bytes).sum()
+    }
+
+    /// Nearest-rank latency percentile (`p` in `[0, 1]`).
+    pub fn latency_percentile(&self, p: f64) -> Duration {
+        let mut lats: Vec<Duration> = self.completions.iter().map(|c| c.latency).collect();
+        if lats.is_empty() {
+            return Duration::ZERO;
+        }
+        lats.sort_unstable();
+        benchx::percentile(&lats, p)
+    }
+}
+
+/// Run the scripted load to completion. Requests must have unique ids;
+/// the per-session compute runs serial (`Pool::serial`) while sessions
+/// themselves are spread over `pool.for_tasks()`.
+pub fn serve(
+    model: &TransformerLM,
+    cfg: &ServeConfig,
+    requests: &[ServeRequest],
+    pool: &Pool,
+) -> Result<ServeOutcome> {
+    ensure!(cfg.max_concurrent > 0, "serve: max_concurrent must be ≥ 1");
+    let mut ids: Vec<usize> = requests.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ensure!(ids.len() == requests.len(), "serve: duplicate request ids");
+
+    // FIFO admission order: (arrival, id). Pop from the back.
+    let mut pending: Vec<&ServeRequest> = requests.iter().collect();
+    pending.sort_by_key(|r| (r.arrival, r.id));
+    pending.reverse();
+
+    let t0 = Instant::now();
+    let task_pool = pool.for_tasks();
+    let inner = Pool::serial();
+    let mut active: Vec<(GenSession<'_>, usize, Instant)> = Vec::new(); // (session, admitted_step, seen)
+    let mut seen_at: Vec<(usize, Instant)> = Vec::new(); // requests visible but not yet admitted
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut step = 0usize;
+    let mut steps_run = 0usize;
+
+    while !pending.is_empty() || !active.is_empty() {
+        // Nothing to run yet — jump to the next arrival instead of
+        // spinning through empty steps.
+        if active.is_empty() && pending.last().is_some_and(|r| r.arrival > step) {
+            step = pending.last().unwrap().arrival;
+        }
+
+        // Stamp the queue-entry instant of every request that just
+        // became visible (latency includes its queueing time).
+        for r in pending.iter().rev() {
+            if r.arrival > step {
+                break;
+            }
+            if !seen_at.iter().any(|(id, _)| *id == r.id) {
+                seen_at.push((r.id, Instant::now()));
+            }
+        }
+
+        // Admission: strict (arrival, id) FIFO while slots are free.
+        while active.len() < cfg.max_concurrent
+            && pending.last().is_some_and(|r| r.arrival <= step)
+        {
+            let r = pending.pop().unwrap();
+            let seen = seen_at
+                .iter()
+                .find(|(id, _)| *id == r.id)
+                .map(|(_, t)| *t)
+                .unwrap_or_else(Instant::now);
+            let sess = GenSession::new(
+                r.id,
+                r.arrival,
+                r.prompt.clone(),
+                r.max_new,
+                cfg.k,
+                cfg.eps,
+                cfg.seed ^ (r.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            active.push((sess, step, seen));
+        }
+
+        // One token per active session, sessions spread over the task
+        // pool. Each Mutex cell is locked by exactly one chunk, so
+        // this is partition-only parallelism — results are those of
+        // the serial loop at any worker count.
+        {
+            let cells: Vec<Mutex<&mut GenSession<'_>>> =
+                active.iter_mut().map(|(s, _, _)| Mutex::new(s)).collect();
+            task_pool.map_chunks(cells.len(), |lo, hi| {
+                for cell in &cells[lo..hi] {
+                    let mut s = cell.lock().unwrap();
+                    if s.is_admitted() {
+                        s.advance(&inner);
+                    } else {
+                        s.admit(model, &inner);
+                    }
+                }
+            });
+        }
+        steps_run += 1;
+
+        // Collect completions (ascending id within the step — stable
+        // since admission kept (arrival, id) order in `active`).
+        let now = Instant::now();
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].0.is_done() {
+                let (sess, admitted_step, seen) = active.remove(i);
+                seen_at.retain(|(id, _)| *id != sess.id);
+                let peak = sess.cache_peak_bytes();
+                let saved = sess.dense_baseline_bytes().saturating_sub(sess.cache_bound_bytes());
+                completions.push(Completion {
+                    id: sess.id,
+                    arrival: sess.arrival,
+                    admitted_step,
+                    finished_step: step,
+                    prompt_len: sess.prompt.len(),
+                    tokens: sess.tokens().to_vec(),
+                    latency: now.duration_since(seen),
+                    cache_peak_bytes: peak,
+                    cache_saved_bytes: saved,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        step += 1;
+    }
+
+    Ok(ServeOutcome { completions, steps: steps_run, wall: t0.elapsed() })
+}
+
+/// Deterministic synthetic load for `pamm serve-sim` and the benches:
+/// `n` requests with staggered arrivals (every other step), prompt
+/// lengths cycling 4/6/8 over a tiny vocab, `max_new` cycling 4..8.
+pub fn scripted_load(n: usize, vocab: usize, seed: u64) -> Vec<ServeRequest> {
+    let mut rng = crate::rngx::Xoshiro256::new(seed);
+    (0..n)
+        .map(|i| {
+            let plen = 4 + 2 * (i % 3);
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| (rng.next_below(vocab as u64) as i32)).collect();
+            ServeRequest { id: i, arrival: i / 2, prompt, max_new: 4 + (i % 5) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::{Decoder, GenConfig};
+    use crate::model::LmConfig;
+
+    fn tiny_model() -> TransformerLM {
+        TransformerLM::new(
+            LmConfig { vocab: 29, n_layers: 2, heads: 2, head_dim: 4, d_ff: 16 },
+            5,
+        )
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { max_concurrent: 2, k: 4, eps: Eps::Inf, seed: 17 }
+    }
+
+    #[test]
+    fn streams_match_standalone_decoder_and_any_worker_count() {
+        let model = tiny_model();
+        let reqs = scripted_load(5, model.cfg.vocab, 3);
+        let serial = serve(&model, &cfg(), &reqs, &Pool::serial()).unwrap();
+        assert_eq!(serial.completions.len(), reqs.len());
+        for workers in [2usize, 4] {
+            let pool = Pool::new(workers).with_min_chunk(1);
+            let out = serve(&model, &cfg(), &reqs, &pool).unwrap();
+            for (a, b) in serial.completions.iter().zip(&out.completions) {
+                assert_eq!((a.id, &a.tokens), (b.id, &b.tokens), "worker-count drift");
+            }
+        }
+        // Each stream equals a standalone decoder over the same seed:
+        // the session emits greedy(logits) one step before appending,
+        // so its stream is exactly Decoder::generate's.
+        for c in &serial.completions {
+            let r = reqs.iter().find(|r| r.id == c.id).unwrap();
+            let gc = GenConfig::new(
+                cfg().k,
+                cfg().eps,
+                cfg().seed ^ (r.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                r.prompt.len() + r.max_new,
+            );
+            let mut dec = Decoder::new(&model, gc);
+            dec.prefill(&r.prompt, &Pool::serial());
+            assert_eq!(dec.generate(r.max_new, &Pool::serial()), c.tokens);
+        }
+    }
+
+    #[test]
+    fn admission_is_fifo_and_nothing_starves() {
+        let model = tiny_model();
+        // All arrive at step 0 with one slot: strict id order.
+        let reqs: Vec<ServeRequest> = (0..4)
+            .map(|i| ServeRequest {
+                id: 3 - i, // shuffled ids
+                arrival: 0,
+                prompt: vec![1, 2, 3],
+                max_new: 3,
+            })
+            .collect();
+        let one_slot = ServeConfig { max_concurrent: 1, ..cfg() };
+        let out = serve(&model, &one_slot, &reqs, &Pool::serial()).unwrap();
+        let admitted: Vec<usize> = out.completions.iter().map(|c| c.admitted_step).collect();
+        let ids: Vec<usize> = out.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "admission must follow (arrival, id)");
+        assert!(admitted.windows(2).all(|w| w[0] < w[1]), "one slot ⇒ serialized sessions");
+        assert_eq!(out.total_tokens(), 12);
+        assert!(out.total_cache_saved_bytes() > 0);
+    }
+}

@@ -1,16 +1,121 @@
-//! One model replica bound to a train_step artifact.
+//! Model-replica sessions.
 //!
-//! Owns the `params / m / v` literals, initializes them from the manifest
-//! param spec (Gaussian by `init_std`, ones for norm gains), and threads
-//! them through successive executions — the steady-state loop allocates
-//! nothing but the token literal and the loss readback.
+//! Two kinds live here:
+//!
+//! * [`GenSession`] — the **native generation session**: one request's
+//!   decode state over a shared [`TransformerLM`], wrapping a
+//!   [`generate::Decoder`] with its PAMM-compressed KV cache. This is
+//!   the unit `coordinator::serve`'s continuous-batching loop
+//!   schedules — each session advances one token per serve step, and
+//!   because a session's compute is a pure serial function of its own
+//!   state (inner pool = serial, partition-only-task rule), a fixed
+//!   arrival script yields bit-identical token streams at any worker
+//!   count.
+//! * [`TrainSession`] / [`ClassifierSession`] (feature `pjrt`) — one
+//!   replica bound to a train_step artifact: owns the `params / m / v`
+//!   literals, initializes them from the manifest param spec and
+//!   threads them through successive executions. Artifact-bound and
+//!   PJRT-only, so they compile only with `--features pjrt`.
 
+use crate::generate::{self, Decoder, GenConfig};
+use crate::model::TransformerLM;
+use crate::pamm::Eps;
+use crate::poolx::Pool;
+
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context, Result};
-
+#[cfg(feature = "pjrt")]
 use crate::runtime::{ArtifactMeta, Engine, Exec, HostTensor};
+#[cfg(feature = "pjrt")]
 use crate::rngx::Xoshiro256;
 
+/// One generation request's session state: prompt in, greedy tokens
+/// out, one token per [`GenSession::advance`] call. The decoder (and
+/// its compressed KV cache) is created at admission time, so queued
+/// sessions hold no cache memory.
+pub struct GenSession<'m> {
+    pub id: usize,
+    /// Serve-step index at which the request becomes visible.
+    pub arrival: usize,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    cfg: GenConfig,
+    dec: Option<Decoder<'m>>,
+    emitted: Vec<i32>,
+}
+
+impl<'m> GenSession<'m> {
+    /// `seed` feeds the per-layer generator draw; sessions with the
+    /// same (seed, prompt) build bit-identical caches regardless of
+    /// scheduling. The cache is sized to `prompt + max_new` tokens.
+    pub fn new(
+        id: usize,
+        arrival: usize,
+        prompt: Vec<i32>,
+        max_new: usize,
+        k: usize,
+        eps: Eps,
+        seed: u64,
+    ) -> Self {
+        assert!(!prompt.is_empty(), "serve: empty prompt in request {id}");
+        assert!(max_new > 0, "serve: request {id} asks for zero tokens");
+        let cfg = GenConfig::new(k, eps, seed, prompt.len() + max_new);
+        GenSession { id, arrival, prompt, max_new, cfg, dec: None, emitted: Vec::new() }
+    }
+
+    /// Prefill the prompt and emit the first token. Called once, by
+    /// the serve loop, at the step the session is admitted.
+    pub fn admit(&mut self, model: &'m TransformerLM, pool: &Pool) {
+        assert!(self.dec.is_none(), "serve: request {} admitted twice", self.id);
+        let mut dec = Decoder::new(model, self.cfg);
+        dec.prefill(&self.prompt, pool);
+        self.emitted.push(generate::greedy(dec.last_logits()));
+        self.dec = Some(dec);
+    }
+
+    /// One decode step: fold the previously emitted token into the
+    /// cache, emit the next. The final emitted token is never folded
+    /// (nothing attends past it), which is why `advance` emits the
+    /// same stream as [`Decoder::generate`] one step earlier.
+    pub fn advance(&mut self, pool: &Pool) {
+        assert!(!self.is_done(), "serve: request {} advanced past completion", self.id);
+        let dec = self.dec.as_mut().expect("serve: advance before admit");
+        let last = *self.emitted.last().expect("admit emits the first token");
+        dec.decode_step(last, pool);
+        self.emitted.push(generate::greedy(dec.last_logits()));
+    }
+
+    pub fn is_admitted(&self) -> bool {
+        self.dec.is_some()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.emitted.len() >= self.max_new
+    }
+
+    /// Greedy tokens emitted so far.
+    pub fn tokens(&self) -> &[i32] {
+        &self.emitted
+    }
+
+    /// Measured cache peak of this session (0 before admission).
+    pub fn cache_peak_bytes(&self) -> usize {
+        self.dec.as_ref().map_or(0, |d| d.cache_peak_bytes())
+    }
+
+    /// Analytic cache bound for this session.
+    pub fn cache_bound_bytes(&self) -> usize {
+        self.dec.as_ref().map_or(0, |d| d.cache_bound_bytes())
+    }
+
+    /// Bytes a dense KV cache would hold for this session.
+    pub fn dense_baseline_bytes(&self) -> usize {
+        self.dec.as_ref().map_or(0, |d| d.dense_baseline_bytes())
+    }
+}
+
 /// Initialize one parameter tensor per its spec entry.
+#[cfg(feature = "pjrt")]
 fn init_tensor(shape: &[usize], init_std: f64, rng: &mut Xoshiro256) -> HostTensor {
     let n: usize = shape.iter().product();
     let data = if init_std < 0.0 {
@@ -25,6 +130,7 @@ fn init_tensor(shape: &[usize], init_std: f64, rng: &mut Xoshiro256) -> HostTens
 
 /// Build the initial (params, m, v) literal vector for an artifact.
 /// m and v start at zero (AdamW convention).
+#[cfg(feature = "pjrt")]
 pub fn init_state_for(meta: &ArtifactMeta, seed: u64) -> Result<Vec<xla::Literal>> {
     if meta.param_spec.is_empty() {
         bail!("{}: artifact has no param_spec", meta.name);
@@ -42,6 +148,7 @@ pub fn init_state_for(meta: &ArtifactMeta, seed: u64) -> Result<Vec<xla::Literal
 }
 
 /// Decoder-LM training session.
+#[cfg(feature = "pjrt")]
 pub struct TrainSession {
     exec: Exec,
     eval_exec: Option<Exec>,
@@ -54,6 +161,7 @@ pub struct TrainSession {
     pub seq: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl TrainSession {
     /// Bind to `train_artifact`; optionally attach an eval artifact.
     pub fn new(
@@ -170,6 +278,7 @@ impl TrainSession {
 
 /// Classifier (GLUE/AID) training session — adds labels to each step and
 /// an argmax-prediction eval path.
+#[cfg(feature = "pjrt")]
 pub struct ClassifierSession {
     exec: Exec,
     eval_exec: Exec,
@@ -181,6 +290,7 @@ pub struct ClassifierSession {
     pub seq: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl ClassifierSession {
     pub fn new(
         engine: &Engine,

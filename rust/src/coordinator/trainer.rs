@@ -16,25 +16,37 @@
 //!   dispatch level (the optimizer arithmetic is fixed-order scalar
 //!   f32 on top of bit-identical gradients).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::attention::AttnShape;
 use crate::autograd::{self, QkvGrads};
-use crate::checkpoint;
-use crate::config::RunConfig;
-use crate::coordinator::ddp::DdpTrainer;
-use crate::coordinator::pipeline::BatchPipeline;
-use crate::coordinator::session::TrainSession;
-use crate::data::batcher::BatchIterator;
-use crate::jsonx;
 use crate::memory::MemoryLedger;
-use crate::metrics::{perplexity, Ema, RunLogger, ThroughputMeter};
 use crate::pamm::{self, Eps};
 use crate::poolx::Pool;
 use crate::rngx::Xoshiro256;
-use crate::runtime::{Engine, HostTensor};
 use crate::tensor::kernels::Dispatch;
 use crate::tensor::Mat;
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
+use crate::checkpoint;
+#[cfg(feature = "pjrt")]
+use crate::config::RunConfig;
+#[cfg(feature = "pjrt")]
+use crate::coordinator::ddp::DdpTrainer;
+#[cfg(feature = "pjrt")]
+use crate::coordinator::pipeline::BatchPipeline;
+#[cfg(feature = "pjrt")]
+use crate::coordinator::session::TrainSession;
+#[cfg(feature = "pjrt")]
+use crate::data::batcher::BatchIterator;
+#[cfg(feature = "pjrt")]
+use crate::jsonx;
+#[cfg(feature = "pjrt")]
+use crate::metrics::{perplexity, Ema, RunLogger, ThroughputMeter};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{Engine, HostTensor};
 
 /// Result of a completed run (consumed by the experiment harness).
 #[derive(Debug, Clone)]
@@ -50,10 +62,12 @@ pub struct TrainOutcome {
 }
 
 /// Seed for the held-out eval stream (never used for training data).
+#[cfg(feature = "pjrt")]
 const EVAL_STREAM: u64 = 0xE7A1;
 
 /// Fixed eval token set: held-out stream so eval is comparable across
 /// steps and variants.
+#[cfg(feature = "pjrt")]
 fn eval_batches(vocab: usize, batch: usize, seq: usize, n: usize, seed: u64) -> Vec<HostTensor> {
     let mut it = BatchIterator::from_seed(vocab, batch, seq, seed);
     (0..n).map(|_| it.next_batch().to_tensor()).collect()
@@ -61,6 +75,7 @@ fn eval_batches(vocab: usize, batch: usize, seq: usize, n: usize, seed: u64) -> 
 
 /// Run a full training session per `cfg`. `quiet` suppresses per-step
 /// prints (harness mode).
+#[cfg(feature = "pjrt")]
 pub fn train_run(engine: &Engine, cfg: &RunConfig, quiet: bool) -> Result<TrainOutcome> {
     if cfg.workers > 1 || cfg.grad_accum > 1 {
         return train_run_ddp(engine, cfg, quiet);
@@ -317,6 +332,7 @@ impl NativeTrainer {
 }
 
 /// DDP / grad-accum path (grads + apply artifact pair).
+#[cfg(feature = "pjrt")]
 fn train_run_ddp(engine: &Engine, cfg: &RunConfig, quiet: bool) -> Result<TrainOutcome> {
     let grads = format!(
         "grads_{}_{}_{}x{}",

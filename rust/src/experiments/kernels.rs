@@ -15,16 +15,20 @@
 
 use std::fmt::Write as _;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{bail, Context};
 
 use crate::attention::{self, AttnShape};
 use crate::benchx::{bench_fn, BenchOpts};
 use crate::pamm::{self, Eps};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{ArtifactMeta, Engine, HostTensor};
 use crate::rngx::Xoshiro256;
 use crate::tensor::kernels::{self, Dispatch, KC, LADDER, MC, MR, NC, NR};
 use crate::tensor::Mat;
 
+#[cfg(feature = "pjrt")]
 fn dims(meta: &ArtifactMeta, input: &str) -> Result<Vec<usize>> {
     Ok(meta
         .inputs
@@ -35,10 +39,12 @@ fn dims(meta: &ArtifactMeta, input: &str) -> Result<Vec<usize>> {
         .clone())
 }
 
+#[cfg(feature = "pjrt")]
 fn mat_tensor(m: &Mat) -> HostTensor {
     HostTensor::f32(vec![m.rows(), m.cols()], m.data().to_vec())
 }
 
+#[cfg(feature = "pjrt")]
 fn max_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
 }
@@ -231,6 +237,7 @@ pub fn probe() -> String {
 }
 
 /// Validate every kernel artifact in the manifest; returns count checked.
+#[cfg(feature = "pjrt")]
 pub fn validate_kernels(engine: &Engine) -> Result<usize> {
     let kernels: Vec<ArtifactMeta> = engine
         .manifest

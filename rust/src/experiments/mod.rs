@@ -1,6 +1,6 @@
 //! Experiment harness — one entry per table & figure of the paper,
 //! plus the native attention table P9/P10 and the native train-step
-//! harness P11 (DESIGN.md §8 maps each id to modules and
+//! harness P11 (DESIGN.md §9 maps each id to modules and
 //! expectations).
 //!
 //! Every harness prints the paper-style rows AND writes a CSV under the
@@ -14,17 +14,24 @@
 //! across hosts. Per-op timings also persist via `benchx::BenchSink`
 //! from the bench binaries — see BENCHMARKS.md for the rendered trail.
 
+#[cfg(feature = "pjrt")]
 pub mod analysisfigs;
 pub mod attention;
+#[cfg(feature = "pjrt")]
 pub mod finetune;
 pub mod kernels;
+#[cfg(feature = "pjrt")]
 pub mod pretrain;
 pub mod throughput;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
 
+#[cfg(feature = "pjrt")]
 pub use kernels::validate_kernels;
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 
 /// Run a native-only experiment — one that needs no artifacts and no
@@ -55,6 +62,7 @@ pub fn run_native(name: &str, quick: bool, native_train: bool, out: &str) -> Opt
     Some(run())
 }
 
+#[cfg(feature = "pjrt")]
 pub fn run(engine: &Engine, name: &str, quick: bool, out: &str) -> Result<()> {
     std::fs::create_dir_all(out)?;
     match name {

@@ -9,19 +9,25 @@
 //! breakdown reflects the same parallel kernels the benches measure.
 //! Results are thread-count invariant; only the timings change.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use crate::attention::{self, AttnShape};
 use crate::autograd;
 use crate::benchx::{bench_fn, BenchOpts};
 use crate::checkpoint::write_csv;
+#[cfg(feature = "pjrt")]
 use crate::config::Variant;
+#[cfg(feature = "pjrt")]
 use crate::coordinator::session::TrainSession;
 use crate::coordinator::{NativeOpt, NativeTrainer};
+#[cfg(feature = "pjrt")]
 use crate::data::batcher::BatchIterator;
 use crate::memory::{fmt_bytes, MemoryLedger};
 use crate::pamm::{self, Eps};
 use crate::poolx::{self, Pool};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 use crate::rngx::Xoshiro256;
 use crate::tensor::Mat;
@@ -35,6 +41,7 @@ fn opts(quick: bool) -> BenchOpts {
 }
 
 /// Median seconds per training step for (model, variant).
+#[cfg(feature = "pjrt")]
 fn step_time(engine: &Engine, model: &str, var: &Variant, b: usize, l: usize, quick: bool) -> Result<f64> {
     let train_name = format!("train_{model}_{}_{b}x{l}", var.tag());
     let mut session = TrainSession::new(engine, &train_name, None, 7)?;
@@ -50,6 +57,7 @@ fn step_time(engine: &Engine, model: &str, var: &Variant, b: usize, l: usize, qu
 }
 
 /// Table 2a: tokens/sec across model sizes, PAMM vs baseline.
+#[cfg(feature = "pjrt")]
 pub fn table2a(engine: &Engine, quick: bool, out: &str) -> Result<()> {
     let sizes: &[(&str, usize, usize)] =
         if quick { &[("tiny", 8, 128)] } else { &[("tiny", 8, 128), ("small", 8, 128), ("medium", 4, 256)] };
@@ -73,6 +81,7 @@ pub fn table2a(engine: &Engine, quick: bool, out: &str) -> Result<()> {
 }
 
 /// Table 2b: forward-pass vs total-step throughput split.
+#[cfg(feature = "pjrt")]
 pub fn table2b(engine: &Engine, quick: bool, out: &str) -> Result<()> {
     let (model, b, l) = ("tiny", 8usize, 128usize);
     let toks = (b * l) as f64;

@@ -1,0 +1,604 @@
+//! Native autoregressive generation with a PAMM-compressed KV cache.
+//!
+//! The training stack (DESIGN.md §6–§7) erases the QKV projection
+//! memory by saving `pamm::Compressed` instead of dense activations;
+//! this module extends the same trick to the *inference* side, where
+//! the KV cache is the dominant memory consumer. Per layer the cache
+//! is one [`Compressed`] over the layer-normed hidden rows plus the
+//! gather-ready projected generators `Gk = C·Wk`, `Gv = C·Wv`
+//! ([`Compressed::project_generators`]) — dense K/V slabs never
+//! materialize, at prefill or at decode:
+//!
+//! * **prefill** compresses the prompt's `h1` rows in one batch pass
+//!   (generators drawn from the prompt positions), projects the k
+//!   generator rows once, and attends through
+//!   [`attention::attend_cached_on`] which gather-scales K/V strips
+//!   tile by tile.
+//! * **decode** folds each new token's `h1` row into the cache with
+//!   [`pamm::IncrementalCompressor::fold_on`] — a 1×k Gram row +
+//!   argmax, appending one `(α, f)` pair — then attends the single
+//!   query row at its absolute position. No per-token dense K/V, no
+//!   per-token cache reallocation (α/f are pre-sized to the session's
+//!   `max_tokens`).
+//!
+//! **Bit-parity contract** (asserted by `rust/tests/prop_generate.rs`
+//! and by `pamm generate --native` in-command): incremental decode is
+//! bit-identical to a one-shot prefill over the full sequence whose
+//! generator domain is the prompt length. The argument chains three
+//! partition-invariance facts: the microkernel GEMM's per-element
+//! accumulation order depends only on the depth blocking, never the
+//! row count, so the 1-row fold/projection matches the same row of the
+//! batch pass; the cached flash walk's masked lanes contribute exactly
+//! `+0.0` after `exp(-inf)`, so a row's online-softmax state never
+//! sees future positions; and every remaining op (embed, layernorm,
+//! GELU, residual, the tied-head matvec) is row-local. Causality then
+//! gives prefix invariance layer by layer, so the one-shot reference's
+//! prompt rows — and its generator draw — match the incremental
+//! session's exactly.
+//!
+//! Two deliberate deviations from the *training* forward (DESIGN.md
+//! §7): queries stay dense (`Q = h1·Wq` — Q is never cached, so
+//! compressing it saves nothing at decode and costs fidelity), and the
+//! MLP runs dense (its activations die within the step; PAMM-MLP only
+//! pays off when activations are *saved* for backward). The fidelity
+//! oracle (Lemma 1 via the f64 reference in `prop_generate`) therefore
+//! bounds exactly the error the cache introduces, nothing else.
+//!
+//! Memory accounting: the per-session cache inventory is charged to a
+//! [`MemoryTracker`] at prefill (decode allocates nothing), and
+//! [`kv_cache_bytes`] is the analytic bound the measured peak is
+//! asserted against — see DESIGN.md §8 for the derivation and the
+//! crossover vs the dense `2·T·d_model` baseline.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::attention;
+use crate::autograd::{gelu, LN_EPS};
+use crate::checkpoint;
+use crate::memory::MemoryTracker;
+use crate::model::{param_names, LmConfig, TransformerLM, PARAMS_PER_BLOCK};
+use crate::pamm::{self, Compressed, Eps, IncrementalCompressor};
+use crate::poolx::Pool;
+use crate::rngx::Xoshiro256;
+use crate::runtime::{ConfigMeta, HostTensor};
+use crate::tensor::kernels;
+use crate::tensor::{dot, Mat};
+
+/// Generation-time knobs. `seed` feeds the per-layer generator draw at
+/// prefill (one draw per layer, over prompt positions only), so two
+/// decoders with the same seed and prompt build bit-identical caches.
+#[derive(Debug, Clone, Copy)]
+pub struct GenConfig {
+    /// Generator count per layer (clamped to the generator domain).
+    pub k: usize,
+    /// Neighborhood condition for both the batch prefill compression
+    /// and every incremental fold.
+    pub eps: Eps,
+    /// Generator-sampling seed.
+    pub seed: u64,
+    /// Session capacity: prompt + generated tokens. The α/f columns of
+    /// every layer cache are pre-sized to this, so decode steps never
+    /// reallocate and the analytic bound is exact.
+    pub max_tokens: usize,
+}
+
+impl GenConfig {
+    pub fn new(k: usize, eps: Eps, seed: u64, max_tokens: usize) -> Self {
+        GenConfig { k, eps, seed, max_tokens }
+    }
+}
+
+/// One layer's compressed KV cache: the shared compression state plus
+/// the projected generator panels. `comp.alpha`/`comp.assign` grow by
+/// one entry per decoded token; everything else is fixed at prefill.
+struct LayerCache {
+    comp: Compressed,
+    inc: IncrementalCompressor,
+    gk: Mat,
+    gv: Mat,
+}
+
+/// Incremental greedy decoder over a [`TransformerLM`].
+///
+/// Lifecycle: [`Decoder::new`] → [`Decoder::prefill`] (once) →
+/// [`Decoder::decode_step`] / [`Decoder::generate`]. The decoder holds
+/// only borrowed parameters plus its per-layer [`LayerCache`]s — many
+/// sessions can share one model (see `coordinator::serve`).
+pub struct Decoder<'m> {
+    model: &'m TransformerLM,
+    cfg: GenConfig,
+    rng: Xoshiro256,
+    layers: Vec<LayerCache>,
+    len: usize,
+    tracker: MemoryTracker,
+    last_logits: Vec<f32>,
+}
+
+impl<'m> Decoder<'m> {
+    pub fn new(model: &'m TransformerLM, cfg: GenConfig) -> Self {
+        assert!(cfg.max_tokens > 0, "generate: max_tokens must be ≥ 1");
+        let seed = cfg.seed;
+        Decoder {
+            model,
+            cfg,
+            rng: Xoshiro256::new(seed),
+            layers: Vec::new(),
+            len: 0,
+            tracker: MemoryTracker::new(),
+            last_logits: Vec::new(),
+        }
+    }
+
+    /// Tokens currently in the cache (prompt + decoded).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Logits of the most recent position (empty before prefill).
+    pub fn last_logits(&self) -> &[f32] {
+        &self.last_logits
+    }
+
+    /// Effective generator count after the prefill clamp.
+    pub fn effective_k(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.comp.k())
+    }
+
+    /// High-water mark of the charged cache bytes.
+    pub fn cache_peak_bytes(&self) -> usize {
+        self.tracker.peak()
+    }
+
+    /// Analytic bound for this session's cache: [`kv_cache_bytes`] at
+    /// the effective k (valid only after prefill).
+    pub fn cache_bound_bytes(&self) -> usize {
+        kv_cache_bytes(&self.model.cfg, self.effective_k(), self.cfg.max_tokens)
+    }
+
+    /// Dense-cache baseline for this session's capacity.
+    pub fn dense_baseline_bytes(&self) -> usize {
+        dense_kv_cache_bytes(&self.model.cfg, self.cfg.max_tokens)
+    }
+
+    /// Compress the prompt and emit its last position's logits.
+    /// Generator indices are drawn from all prompt positions.
+    pub fn prefill(&mut self, tokens: &[i32], pool: &Pool) -> &[f32] {
+        self.prefill_with_domain(tokens, tokens.len(), pool)
+    }
+
+    /// Prefill with generator indices restricted to the first
+    /// `gen_domain` positions. This is the one-shot *reference* entry:
+    /// prefilling `prompt ++ generated` with `gen_domain = prompt.len()`
+    /// reproduces an incremental session's cache bit for bit (causal
+    /// prefix invariance keeps the prompt rows — and hence the
+    /// generator draw — identical between the two).
+    pub fn prefill_with_domain(&mut self, tokens: &[i32], gen_domain: usize, pool: &Pool) -> &[f32] {
+        assert!(self.layers.is_empty(), "generate: prefill called twice");
+        assert!(!tokens.is_empty(), "generate: empty prompt");
+        assert!(
+            tokens.len() <= self.cfg.max_tokens,
+            "generate: prompt {} exceeds max_tokens {}",
+            tokens.len(),
+            self.cfg.max_tokens
+        );
+        assert!(
+            gen_domain >= 1 && gen_domain <= tokens.len(),
+            "generate: gen_domain {} outside 1..={}",
+            gen_domain,
+            tokens.len()
+        );
+        let logits = self.forward_rows(tokens, Some(gen_domain), pool);
+        self.last_logits = logits;
+        &self.last_logits
+    }
+
+    /// Fold one token into every layer cache and emit the next logits.
+    pub fn decode_step(&mut self, token: i32, pool: &Pool) -> &[f32] {
+        assert!(!self.layers.is_empty(), "generate: decode before prefill");
+        assert!(
+            self.len < self.cfg.max_tokens,
+            "generate: session at max_tokens {}",
+            self.cfg.max_tokens
+        );
+        let logits = self.forward_rows(&[token], None, pool);
+        self.last_logits = logits;
+        &self.last_logits
+    }
+
+    /// Greedy-decode `n_new` tokens (each emitted token is appended, so
+    /// the cache afterwards holds prompt + all generated tokens and the
+    /// final `last_logits` is the next-token distribution past them).
+    pub fn generate(&mut self, n_new: usize, pool: &Pool) -> Vec<i32> {
+        assert!(!self.layers.is_empty(), "generate: generate before prefill");
+        assert!(
+            self.len + n_new <= self.cfg.max_tokens,
+            "generate: {} + {} new tokens exceeds max_tokens {}",
+            self.len,
+            n_new,
+            self.cfg.max_tokens
+        );
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            let tok = greedy(&self.last_logits);
+            out.push(tok);
+            self.decode_step(tok, pool);
+        }
+        out
+    }
+
+    /// Shared prefill/decode forward over `ids` at absolute positions
+    /// `len..len+ids.len()`. `prefill_domain = Some(d)` builds the
+    /// caches (batch compression, generators from the first `d` rows);
+    /// `None` folds each row into the existing caches. Returns the
+    /// last row's tied-head logits.
+    fn forward_rows(&mut self, ids: &[i32], prefill_domain: Option<usize>, pool: &Pool) -> Vec<f32> {
+        let d = kernels::active();
+        let cfg = &self.model.cfg;
+        let (dm, heads, head_dim) = (cfg.d_model(), cfg.heads, cfg.head_dim);
+        let eps = self.cfg.eps;
+        let pos0 = self.len;
+        let rows = ids.len();
+
+        // Embedding gather — row-local, same bits at any batch size.
+        let emb = &self.model.params[0];
+        let mut x = Mat::zeros(rows, dm);
+        for (r, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            assert!(id < cfg.vocab, "generate: token {id} outside vocab {}", cfg.vocab);
+            x.row_mut(r).copy_from_slice(emb.row(id));
+        }
+
+        for b in 0..cfg.n_layers {
+            let p = |o: usize| 1 + b * PARAMS_PER_BLOCK + o;
+            let h1 = ln_rows(&x, &self.model.params[p(0)], &self.model.params[p(1)]);
+
+            if let Some(domain) = prefill_domain {
+                // Build this layer's cache: batch-compress the prompt's
+                // h1 rows, project the generators once, pre-size α/f to
+                // the session capacity, and charge the whole inventory.
+                let k_eff = self.cfg.k.clamp(1, domain);
+                let gen_idx = pamm::sample_generators(&mut self.rng, domain, k_eff);
+                let mut comp = pamm::compress_with(&h1, &gen_idx, eps, pool);
+                let cap = self.cfg.max_tokens;
+                let mut alpha = Vec::with_capacity(cap);
+                alpha.extend_from_slice(&comp.alpha);
+                comp.alpha = alpha;
+                let mut assign = Vec::with_capacity(cap);
+                assign.extend_from_slice(&comp.assign);
+                comp.assign = assign;
+                let inc = IncrementalCompressor::new(&comp);
+                let gk = comp.project_generators(&self.model.params[p(3)]);
+                let gv = comp.project_generators(&self.model.params[p(4)]);
+                self.tracker.alloc(
+                    comp.generators.rows() * comp.generators.cols() * 4 // C
+                        + inc.stored_bytes()                            // Cᵀ + ‖c‖
+                        + 2 * cap * 4 + 4                               // α, f, β
+                        + gk.rows() * gk.cols() * 4                     // Gk
+                        + gv.rows() * gv.cols() * 4,                    // Gv
+                );
+                self.layers.push(LayerCache { comp, inc, gk, gv });
+            } else {
+                let lc = &mut self.layers[b];
+                for r in 0..rows {
+                    lc.inc.fold_on(d, &mut lc.comp, h1.row(r), eps);
+                }
+                debug_assert!(
+                    lc.comp.alpha.capacity() == self.cfg.max_tokens
+                        && lc.comp.assign.capacity() == self.cfg.max_tokens,
+                    "generate: decode fold reallocated the cache"
+                );
+            }
+
+            // Dense queries; K/V stay compressed and are gather-scaled
+            // strip by strip inside the cached flash walk.
+            let lc = &self.layers[b];
+            let q = h1.matmul_with(&self.model.params[p(2)], pool);
+            let attn = attention::attend_cached_on(
+                d,
+                &q,
+                pos0,
+                &lc.gk,
+                &lc.gv,
+                &lc.comp.alpha,
+                &lc.comp.assign,
+                heads,
+                head_dim,
+                pool,
+            );
+            x.add_assign(&attn);
+
+            // Dense MLP (activations die within the step — nothing to
+            // compress at inference).
+            let h2 = ln_rows(&x, &self.model.params[p(5)], &self.model.params[p(6)]);
+            let mut z = h2.matmul_with(&self.model.params[p(7)], pool);
+            for v in z.data_mut() {
+                *v = gelu(*v);
+            }
+            let y = z.matmul_with(&self.model.params[p(8)], pool);
+            x.add_assign(&y);
+        }
+
+        let lnf = 1 + cfg.n_layers * PARAMS_PER_BLOCK;
+        let hf = ln_rows(&x, &self.model.params[lnf], &self.model.params[lnf + 1]);
+        self.len += rows;
+        tied_logits(hf.row(rows - 1), emb)
+    }
+}
+
+/// Greedy argmax (strict `>`, lowest index on ties — deterministic).
+pub fn greedy(logits: &[f32]) -> i32 {
+    assert!(!logits.is_empty(), "generate: greedy over empty logits");
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Inference layernorm — the exact per-row arithmetic of the training
+/// tape's `layer_norm` (same `inv_n` mean/variance loops, same
+/// [`LN_EPS`]), minus the saved state. Row-local, so prefill and
+/// decode see identical bits.
+fn ln_rows(x: &Mat, gain: &Mat, bias: &Mat) -> Mat {
+    let (rows, n) = (x.rows(), x.cols());
+    let inv_n = 1.0 / n as f32;
+    let (g, bvec) = (gain.data(), bias.data());
+    let mut y = Mat::zeros(rows, n);
+    for i in 0..rows {
+        let xr = x.row(i);
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu *= inv_n;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let dv = v - mu;
+            var += dv * dv;
+        }
+        var *= inv_n;
+        let r = 1.0 / (var + LN_EPS).sqrt();
+        let yr = y.row_mut(i);
+        for j in 0..n {
+            yr[j] = (xr[j] - mu) * r * g[j] + bvec[j];
+        }
+    }
+    y
+}
+
+/// Tied-head logits of one hidden row: `logits[v] = ⟨hf, emb_v⟩` as a
+/// serial matvec over the vocab — no `embᵀ` materialization, and
+/// trivially the same bits for the same row at prefill and decode.
+fn tied_logits(hf_row: &[f32], emb: &Mat) -> Vec<f32> {
+    (0..emb.rows()).map(|v| dot(hf_row, emb.row(v))).collect()
+}
+
+/// Analytic per-session cache bytes at generator count `k` and session
+/// capacity `max_tokens` (DESIGN.md §8): per layer the generator panel
+/// `C` (k·dm), its transpose + norms held by the fold state (k·dm + k),
+/// the projected `Gk`/`Gv` (2·k·dm), the pre-sized α/f columns
+/// (2·max_tokens) and β — all f32/u32, 4 bytes each. The per-*token*
+/// marginal is 8 bytes/layer vs the dense cache's `2·dm·4`.
+pub fn kv_cache_bytes(cfg: &LmConfig, k: usize, max_tokens: usize) -> usize {
+    let dm = cfg.d_model();
+    cfg.n_layers * (4 * k * dm * 4 + k * 4 + 2 * max_tokens * 4 + 4)
+}
+
+/// Dense KV-cache baseline: per layer K and V slabs of
+/// `max_tokens × d_model` f32 each.
+pub fn dense_kv_cache_bytes(cfg: &LmConfig, max_tokens: usize) -> usize {
+    cfg.n_layers * 2 * max_tokens * cfg.d_model() * 4
+}
+
+/// Assert bitwise prefill-vs-decode parity for a finished session: a
+/// fresh one-shot prefill over `prompt ++ generated` (same `cfg`,
+/// generator domain = prompt length) must reproduce `got_logits` — the
+/// incremental session's final logits — bit for bit.
+pub fn check_decode_parity(
+    model: &TransformerLM,
+    cfg: &GenConfig,
+    prompt: &[i32],
+    generated: &[i32],
+    got_logits: &[f32],
+    pool: &Pool,
+) -> Result<()> {
+    ensure!(!prompt.is_empty(), "decode parity: empty prompt");
+    let mut full = prompt.to_vec();
+    full.extend_from_slice(generated);
+    let mut oneshot = Decoder::new(model, *cfg);
+    oneshot.prefill_with_domain(&full, prompt.len(), pool);
+    let want = oneshot.last_logits();
+    ensure!(
+        want.len() == got_logits.len(),
+        "decode parity: logit width {} vs {}",
+        want.len(),
+        got_logits.len()
+    );
+    for (i, (w, g)) in want.iter().zip(got_logits.iter()).enumerate() {
+        ensure!(
+            w.to_bits() == g.to_bits(),
+            "decode parity: logit {i} differs — one-shot {w:e} vs incremental {g:e}"
+        );
+    }
+    Ok(())
+}
+
+/// Map a serving-manifest model card onto the native [`LmConfig`]
+/// (activates the `runtime::manifest` scaffolding on the native path).
+pub fn config_from_manifest(meta: &ConfigMeta) -> Result<LmConfig> {
+    ensure!(meta.n_heads > 0, "manifest config {}: zero heads", meta.name);
+    ensure!(
+        meta.d_model % meta.n_heads == 0,
+        "manifest config {}: d_model {} not divisible by {} heads",
+        meta.name,
+        meta.d_model,
+        meta.n_heads
+    );
+    ensure!(meta.n_layers > 0, "manifest config {}: zero layers", meta.name);
+    ensure!(meta.vocab > 0 && meta.d_ff > 0, "manifest config {}: empty dims", meta.name);
+    let cfg = LmConfig {
+        vocab: meta.vocab,
+        n_layers: meta.n_layers,
+        heads: meta.n_heads,
+        head_dim: meta.d_model / meta.n_heads,
+        d_ff: meta.d_ff,
+    };
+    ensure!(
+        meta.param_count == 0 || meta.param_count == cfg.param_count(),
+        "manifest config {}: param_count {} vs derived {}",
+        meta.name,
+        meta.param_count,
+        cfg.param_count()
+    );
+    Ok(cfg)
+}
+
+/// Load trained weights from a `checkpoint::save`d file into `model`,
+/// validating every parameter's name and shape against
+/// [`param_names`]. (`LmTrainer` checkpoints carry no geometry, so the
+/// caller picks the model config — mismatches fail loudly here.)
+pub fn load_checkpoint_params(
+    model: &mut TransformerLM,
+    dir: impl AsRef<Path>,
+    name: &str,
+) -> Result<()> {
+    let tensors = checkpoint::load(dir, name)?;
+    let map: BTreeMap<String, HostTensor> = tensors.into_iter().collect();
+    for (i, pname) in param_names(&model.cfg).iter().enumerate() {
+        let t = map
+            .get(pname.as_str())
+            .with_context(|| format!("checkpoint missing parameter `{pname}`"))?;
+        let (r, c) = (model.params[i].rows(), model.params[i].cols());
+        ensure!(
+            t.shape() == [r, c],
+            "checkpoint `{pname}`: shape {:?} vs model [{r}, {c}]",
+            t.shape()
+        );
+        let data = t.as_f32().with_context(|| format!("checkpoint `{pname}` dtype"))?;
+        model.params[i] = Mat::from_vec(r, c, data.to_vec());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> LmConfig {
+        LmConfig { vocab: 31, n_layers: 2, heads: 2, head_dim: 4, d_ff: 16 }
+    }
+
+    fn gc(max_tokens: usize) -> GenConfig {
+        GenConfig::new(4, Eps::Inf, 9, max_tokens)
+    }
+
+    #[test]
+    fn incremental_decode_matches_one_shot_bitwise() {
+        let model = TransformerLM::new(tiny(), 7);
+        let pool = Pool::new(2).with_min_chunk(1);
+        let prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9];
+        let mut dec = Decoder::new(&model, gc(16));
+        dec.prefill(&prompt, &pool);
+        let toks = dec.generate(5, &pool);
+        assert_eq!(toks.len(), 5);
+        assert_eq!(dec.len(), prompt.len() + 5);
+        let got = dec.last_logits().to_vec();
+        check_decode_parity(&model, &gc(16), &prompt, &toks, &got, &pool).unwrap();
+        // Eps::Val exercises the drop path through the same parity.
+        let cfg2 = GenConfig::new(3, Eps::Val(0.7), 9, 16);
+        let mut dec2 = Decoder::new(&model, cfg2);
+        dec2.prefill(&prompt, &pool);
+        let toks2 = dec2.generate(4, &pool);
+        let got2 = dec2.last_logits().to_vec();
+        check_decode_parity(&model, &cfg2, &prompt, &toks2, &got2, &pool).unwrap();
+    }
+
+    #[test]
+    fn cache_peak_matches_analytic_inventory() {
+        let model = TransformerLM::new(tiny(), 11);
+        let pool = Pool::serial();
+        let cfg = gc(24);
+        let mut dec = Decoder::new(&model, cfg);
+        dec.prefill(&[2, 7, 1, 8, 2, 8], &pool);
+        dec.generate(6, &pool);
+        assert_eq!(dec.effective_k(), 4);
+        let bound = kv_cache_bytes(&model.cfg, dec.effective_k(), cfg.max_tokens);
+        // The charged inventory is exact, so peak == bound here.
+        assert_eq!(dec.cache_peak_bytes(), bound);
+        assert_eq!(dec.cache_bound_bytes(), bound);
+        assert!(
+            bound < dec.dense_baseline_bytes(),
+            "compressed cache {} not below dense {} at this shape",
+            bound,
+            dec.dense_baseline_bytes()
+        );
+    }
+
+    #[test]
+    fn greedy_is_lowest_index_on_ties() {
+        assert_eq!(greedy(&[0.0, 2.0, 2.0, -1.0]), 1);
+        assert_eq!(greedy(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn manifest_config_maps_and_validates() {
+        let meta = ConfigMeta {
+            name: "nano".into(),
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 176,
+            param_count: 0,
+        };
+        let cfg = config_from_manifest(&meta).unwrap();
+        assert_eq!((cfg.vocab, cfg.n_layers, cfg.heads, cfg.head_dim, cfg.d_ff), (256, 2, 2, 32, 176));
+        let mut counted = meta.clone();
+        counted.param_count = cfg.param_count();
+        assert!(config_from_manifest(&counted).is_ok());
+        let mut bad = meta.clone();
+        bad.d_model = 65;
+        assert!(config_from_manifest(&bad).is_err());
+        let mut wrong = meta;
+        wrong.param_count = 1;
+        assert!(config_from_manifest(&wrong).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_drives_identical_logits() {
+        let dir = std::env::temp_dir().join(format!("pamm-gen-ckpt-{}", std::process::id()));
+        let model = TransformerLM::new(tiny(), 13);
+        let names = param_names(&model.cfg);
+        let tensors: Vec<(String, HostTensor)> = names
+            .iter()
+            .zip(&model.params)
+            .map(|(n, m)| {
+                (n.clone(), HostTensor::f32(vec![m.rows(), m.cols()], m.data().to_vec()))
+            })
+            .collect();
+        checkpoint::save(&dir, "gen-test", &tensors).unwrap();
+        let mut loaded = TransformerLM::new(tiny(), 999);
+        load_checkpoint_params(&mut loaded, &dir, "gen-test").unwrap();
+        let pool = Pool::serial();
+        let mut a = Decoder::new(&model, gc(8));
+        let mut b = Decoder::new(&loaded, gc(8));
+        let la = a.prefill(&[1, 2, 3], &pool).to_vec();
+        let lb = b.prefill(&[1, 2, 3], &pool).to_vec();
+        assert_eq!(
+            la.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            lb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -19,8 +19,12 @@
 //!   memory ledger), the GPT-style native LM built on it (`model`:
 //!   config-driven layer count, trained end to end by `pamm train
 //!   --native` through `coordinator::LmTrainer` with checkpointed
-//!   resume), data pipeline, memory accountant, experiment harness
-//!   (one per paper table/figure — see DESIGN.md).
+//!   resume), the inference subsystem (`generate`: prefill +
+//!   incremental greedy decode over a PAMM-compressed KV cache,
+//!   `coordinator::serve`: deterministic continuous-batching loop,
+//!   `pamm generate` / `pamm serve-sim`), data pipeline, memory
+//!   accountant, experiment harness (one per paper table/figure — see
+//!   DESIGN.md).
 //!
 //! Python never runs on the request path: `make artifacts` once, then the
 //! Rust binary is self-contained.
@@ -39,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod generate;
 pub mod jsonx;
 pub mod memory;
 pub mod metrics;

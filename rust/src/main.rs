@@ -1,18 +1,38 @@
 //! `pamm` — leader entrypoint.
 //!
-//! Subcommands (see `cli::USAGE`): train / finetune / reproduce /
-//! ledger / memory / kernels / list. Python never runs here: every
-//! computation comes from `artifacts/*.hlo.txt` via the PJRT engine or
-//! from the native substrates.
+//! Subcommands (see `cli::USAGE`): train / generate / serve-sim /
+//! finetune / reproduce / ledger / memory / kernels / list. Python
+//! never runs here: the native substrates are self-contained, and the
+//! artifact commands (`artifacts/*.hlo.txt` via the PJRT engine) are
+//! gated behind the `pjrt` cargo feature — without it they fail with a
+//! pointer to the native equivalents.
 
 use anyhow::{bail, Context, Result};
 
 use pamm::cli::{Args, USAGE};
-use pamm::config::{preset, RunConfig, Variant};
-use pamm::coordinator::train_run;
-use pamm::data::glue;
+use pamm::config::{preset, RunConfig};
 use pamm::memory::{self, ModelGeometry};
+
+#[cfg(feature = "pjrt")]
+use pamm::config::Variant;
+#[cfg(feature = "pjrt")]
+use pamm::coordinator::train_run;
+#[cfg(feature = "pjrt")]
+use pamm::data::glue;
+#[cfg(feature = "pjrt")]
 use pamm::runtime::{Engine, HostTensor};
+
+/// The uniform "this build has no PJRT" error for artifact commands.
+#[cfg(not(feature = "pjrt"))]
+fn engine_unavailable(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "`{what}` drives the PJRT artifact runtime, which this binary was built without \
+         (rebuild with `--features pjrt` and an xla binding in the workspace). \
+         The native path is self-contained: `pamm train --native`, `pamm generate`, \
+         `pamm serve-sim`, `pamm ledger`, `pamm memory`, `pamm reproduce table7|attention`, \
+         `pamm kernels --probe`, `pamm bench-report`."
+    )
+}
 
 fn main() {
     if let Err(e) = real_main() {
@@ -30,6 +50,8 @@ fn real_main() -> Result<()> {
     }
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "generate" => cmd_generate(&args),
+        "serve-sim" => cmd_serve_sim(&args),
         "finetune" => cmd_finetune(&args),
         "reproduce" => cmd_reproduce(&args),
         "ledger" => cmd_ledger(&args),
@@ -118,20 +140,25 @@ fn cmd_train(args: &Args) -> Result<()> {
     if quick || args.get_bool("native") {
         return cmd_train_native(args, &cfg, quick);
     }
-    let engine = Engine::load(&cfg.artifacts_dir)?;
-    println!(
-        "training {} [{}] for {} steps (batch {}×{}, workers {}, accum {})",
-        cfg.model, cfg.variant.tag(), cfg.steps, cfg.batch, cfg.seq, cfg.workers, cfg.grad_accum
-    );
-    let out = train_run(&engine, &cfg, args.get_bool("quiet"))?;
-    println!(
-        "done: final loss {:.4}{}{}",
-        out.final_loss,
-        out.final_ppl.map(|p| format!(", eval ppl {p:.2}")).unwrap_or_default(),
-        out.tokens_per_sec.map(|t| format!(", {t:.0} tok/s")).unwrap_or_default()
-    );
-    println!("run log: {}/{}.jsonl", cfg.run_dir, out.run_name);
-    Ok(())
+    #[cfg(feature = "pjrt")]
+    {
+        let engine = Engine::load(&cfg.artifacts_dir)?;
+        println!(
+            "training {} [{}] for {} steps (batch {}×{}, workers {}, accum {})",
+            cfg.model, cfg.variant.tag(), cfg.steps, cfg.batch, cfg.seq, cfg.workers, cfg.grad_accum
+        );
+        let out = train_run(&engine, &cfg, args.get_bool("quiet"))?;
+        println!(
+            "done: final loss {:.4}{}{}",
+            out.final_loss,
+            out.final_ppl.map(|p| format!(", eval ppl {p:.2}")).unwrap_or_default(),
+            out.tokens_per_sec.map(|t| format!(", {t:.0} tok/s")).unwrap_or_default()
+        );
+        println!("run log: {}/{}.jsonl", cfg.run_dir, out.run_name);
+        Ok(())
+    }
+    #[cfg(not(feature = "pjrt"))]
+    Err(engine_unavailable("pamm train (artifact mode)"))
 }
 
 /// `pamm train --native` / `--quick`: native LM pretraining end to end
@@ -234,6 +261,184 @@ fn cmd_train_native(args: &Args, cfg: &RunConfig, quick: bool) -> Result<()> {
     Ok(())
 }
 
+
+/// `pamm generate` — native greedy decoding with the PAMM-compressed
+/// KV cache (no artifacts, no PJRT): prefill the prompt, fold one row
+/// per decoded token into each layer's `Compressed`, and assert —
+/// in-command, every run — that a one-shot prefill of
+/// `prompt ++ generated` reproduces the incremental final logits bit
+/// for bit, and that the measured cache peak sits under the analytic
+/// byte bound (DESIGN.md §8). Weights come from `--ckpt NAME`
+/// (a `pamm train --native` checkpoint under `--ckpt-dir`) or a fresh
+/// seeded init — parity and memory hold for any weights.
+fn cmd_generate(args: &Args) -> Result<()> {
+    use pamm::generate::{self, Decoder, GenConfig};
+    use pamm::memory::fmt_bytes;
+    use pamm::model::{LmConfig, TransformerLM};
+    use pamm::pamm::Eps;
+    use pamm::rngx::Xoshiro256;
+
+    let quick = args.get_bool("quick");
+    let model_name = args.get_str("model").unwrap_or_else(|| "nano".into());
+    let g = ModelGeometry::by_name(&model_name)
+        .with_context(|| format!("unknown model `{model_name}` (zoo: nano/tiny/small/…)"))?;
+    let mcfg = LmConfig::from_geometry(&g)?;
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16).max(1);
+    let max_new = args.get_usize("max-new")?.unwrap_or(if quick { 16 } else { 32 }).max(1);
+    let r_inv = args.get_usize("r-inv")?.unwrap_or(4).max(1);
+    let k = match args.get_usize("k")? {
+        Some(k) => k.clamp(1, prompt_len),
+        None => prompt_len.div_ceil(r_inv).max(1),
+    };
+    let eps = match args.get_f64("eps")? {
+        Some(e) if e >= 0.0 => Eps::Val(e as f32),
+        _ => Eps::Inf,
+    };
+
+    let mut model = TransformerLM::new(mcfg.clone(), seed);
+    let weights = match args.get_str("ckpt") {
+        Some(name) => {
+            let dir = args.get_str("ckpt-dir").unwrap_or_else(|| "runs/ckpt".into());
+            generate::load_checkpoint_params(&mut model, &dir, &name)?;
+            format!("checkpoint {dir}/{name}.bin")
+        }
+        None => format!("fresh init (seed {seed})"),
+    };
+
+    let pool = pamm::poolx::global();
+    let mut rng = Xoshiro256::new(seed ^ 0xD0);
+    let prompt: Vec<i32> =
+        (0..prompt_len).map(|_| rng.next_below(mcfg.vocab as u64) as i32).collect();
+
+    let gcfg = GenConfig::new(k, eps, seed, prompt_len + max_new);
+    println!(
+        "generate: {model_name} ({} layers, d_model {}, vocab {}), {weights} — prompt {prompt_len} tokens, {max_new} new, k={k}, threads {}",
+        mcfg.n_layers,
+        mcfg.d_model(),
+        mcfg.vocab,
+        pool.threads()
+    );
+    let t0 = std::time::Instant::now();
+    let mut dec = Decoder::new(&model, gcfg);
+    dec.prefill(&prompt, pool);
+    let generated = dec.generate(max_new, pool);
+    let wall = t0.elapsed();
+
+    // The tentpole contract, asserted on every invocation: one-shot
+    // prefill over prompt ++ generated == incremental decode, bitwise.
+    generate::check_decode_parity(&model, &gcfg, &prompt, &generated, dec.last_logits(), pool)?;
+
+    let peak = dec.cache_peak_bytes();
+    let bound = dec.cache_bound_bytes();
+    let dense = dec.dense_baseline_bytes();
+    anyhow::ensure!(
+        peak <= bound,
+        "KV-cache peak {peak} B exceeds the analytic bound {bound} B"
+    );
+    println!("tokens: {generated:?}");
+    println!(
+        "decode parity OK (one-shot prefill == incremental decode, bitwise) — {:.1} tok/s",
+        max_new as f64 / wall.as_secs_f64().max(1e-12)
+    );
+    println!(
+        "KV cache, {} layers × {} tokens (k={} generators/layer):",
+        mcfg.n_layers,
+        dec.len(),
+        dec.effective_k()
+    );
+    println!("  measured peak   {:>12}", fmt_bytes(peak));
+    println!("  analytic bound  {:>12}", fmt_bytes(bound));
+    println!("  dense K/V       {:>12}", fmt_bytes(dense));
+    println!(
+        "  saved           {:>12} ({:.1}% of dense)",
+        fmt_bytes(dense.saturating_sub(bound)),
+        100.0 * dense.saturating_sub(bound) as f64 / dense.max(1) as f64
+    );
+    Ok(())
+}
+
+/// `pamm serve-sim` — play a deterministic scripted request load
+/// through the continuous-batching serve loop
+/// (`coordinator::serve`, DESIGN.md §8) and render the latency
+/// percentiles, throughput, and compressed-vs-dense KV-cache savings.
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    use pamm::coordinator::{scripted_load, serve, ServeConfig};
+    use pamm::memory::fmt_bytes;
+    use pamm::model::{LmConfig, TransformerLM};
+    use pamm::pamm::Eps;
+
+    let quick = args.get_bool("quick");
+    let model_name = args.get_str("model").unwrap_or_else(|| "nano".into());
+    let g = ModelGeometry::by_name(&model_name)
+        .with_context(|| format!("unknown model `{model_name}` (zoo: nano/tiny/small/…)"))?;
+    let mcfg = LmConfig::from_geometry(&g)?;
+    let n = args.get_usize("requests")?.unwrap_or(if quick { 6 } else { 12 }).max(1);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let max_concurrent = args.get_usize("max-concurrent")?.unwrap_or(4).max(1);
+    let k = args.get_usize("k")?.unwrap_or(4).max(1);
+    let eps = match args.get_f64("eps")? {
+        Some(e) if e >= 0.0 => Eps::Val(e as f32),
+        _ => Eps::Inf,
+    };
+
+    let model = TransformerLM::new(mcfg.clone(), seed);
+    let reqs = scripted_load(n, mcfg.vocab, seed ^ 0x5EED);
+    let scfg = ServeConfig { max_concurrent, k, eps, seed };
+    let pool = pamm::poolx::global();
+    println!(
+        "serve-sim: {model_name} ({} layers, d_model {}, vocab {}) — {n} scripted requests, ≤{max_concurrent} concurrent, k={k}, threads {}",
+        mcfg.n_layers,
+        mcfg.d_model(),
+        mcfg.vocab,
+        pool.threads()
+    );
+    let out = serve(&model, &scfg, &reqs, pool)?;
+
+    let ms = |d: std::time::Duration| format!("{:.3}ms", d.as_secs_f64() * 1e3);
+    println!(
+        "{:>4} {:>7} {:>6} {:>6} {:>5} {:>11} {:>12}",
+        "id", "arrive", "admit", "done", "toks", "latency", "cache saved"
+    );
+    for c in &out.completions {
+        println!(
+            "{:>4} {:>7} {:>6} {:>6} {:>5} {:>11} {:>12}",
+            c.id,
+            c.arrival,
+            c.admitted_step,
+            c.finished_step,
+            c.tokens.len(),
+            ms(c.latency),
+            fmt_bytes(c.cache_saved_bytes)
+        );
+    }
+    println!(
+        "{} requests over {} serve steps in {} — {:.1} tok/s ({} tokens)",
+        out.completions.len(),
+        out.steps,
+        ms(out.wall),
+        out.tokens_per_sec(),
+        out.total_tokens()
+    );
+    println!(
+        "latency p50 {}  p95 {}  p99 {}",
+        ms(out.latency_percentile(0.50)),
+        ms(out.latency_percentile(0.95)),
+        ms(out.latency_percentile(0.99))
+    );
+    println!(
+        "compressed KV caches saved {} vs dense K/V across the run",
+        fmt_bytes(out.total_cache_saved_bytes())
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_finetune(_args: &Args) -> Result<()> {
+    Err(engine_unavailable("pamm finetune"))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_finetune(args: &Args) -> Result<()> {
     use pamm::coordinator::pipeline::LabeledPipeline;
     use pamm::coordinator::ClassifierSession;
@@ -321,8 +526,16 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
     {
         return r;
     }
-    let engine = Engine::load(&artifacts)?;
-    pamm::experiments::run(&engine, name, args.get_bool("quick"), &out)
+    #[cfg(feature = "pjrt")]
+    {
+        let engine = Engine::load(&artifacts)?;
+        pamm::experiments::run(&engine, name, args.get_bool("quick"), &out)
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = artifacts;
+        Err(engine_unavailable(&format!("pamm reproduce {name}")))
+    }
 }
 
 /// Parse a `BxHxLxD` shape flag.
@@ -542,11 +755,16 @@ fn cmd_kernels(args: &Args) -> Result<()> {
         print!("{}", pamm::experiments::kernels::probe());
         return Ok(());
     }
-    let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
-    let engine = Engine::load(&artifacts)?;
-    let n = pamm::experiments::validate_kernels(&engine)?;
-    println!("kernel validation OK ({n} artifacts checked)");
-    Ok(())
+    #[cfg(feature = "pjrt")]
+    {
+        let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
+        let engine = Engine::load(&artifacts)?;
+        let n = pamm::experiments::validate_kernels(&engine)?;
+        println!("kernel validation OK ({n} artifacts checked)");
+        Ok(())
+    }
+    #[cfg(not(feature = "pjrt"))]
+    Err(engine_unavailable("pamm kernels (artifact validation; try --probe)"))
 }
 
 /// Render the persisted `BENCH_*.json` perf trail into markdown.
@@ -563,6 +781,12 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_list(_args: &Args) -> Result<()> {
+    Err(engine_unavailable("pamm list"))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_list(args: &Args) -> Result<()> {
     let artifacts = args.get_str("artifacts").unwrap_or_else(|| "artifacts".into());
     let engine = Engine::load(&artifacts)?;

@@ -383,6 +383,100 @@ pub fn apply_with(comp: &Compressed, b_mat: &Mat, pool: &Pool) -> Mat {
     out
 }
 
+/// Incremental Stage-1 state: fold rows one at a time into an existing
+/// [`Compressed`] against its **fixed** generators — the decode-time
+/// KV-cache recurrence of `crate::generate` (DESIGN.md §8). Holds the
+/// pre-transposed generator matrix and the generator norms so each fold
+/// is one `1×k` Gram GEMM plus the Lemma-1 argmax/α sweep, replicating
+/// [`compress_with`]'s per-row arithmetic exactly: the microkernel's
+/// per-element accumulation order depends only on the depth blocking,
+/// never on how many rows share the call, so a row folded here is
+/// bit-identical to the same row scored inside a batch compress.
+///
+/// β bookkeeping: `new` counts the existing dropped rows as
+/// `α == 0` (exactly the rows `compress_range` left at zero), and every
+/// fold re-derives `β = b/kept` from the same integer counts the batch
+/// path divides — so the running [`Compressed`] stays field-for-field
+/// bit-equal to a one-shot compression of all rows seen so far.
+#[derive(Debug, Clone)]
+pub struct IncrementalCompressor {
+    ct: Mat,
+    nc: Vec<f32>,
+    dropped: usize,
+}
+
+impl IncrementalCompressor {
+    /// Build the fold state from a compressed prefix (generators fixed
+    /// from here on).
+    pub fn new(comp: &Compressed) -> Self {
+        IncrementalCompressor {
+            ct: comp.generators.transpose(),
+            nc: comp.generators.row_norms(),
+            dropped: comp.alpha.iter().filter(|a| **a == 0.0).count(),
+        }
+    }
+
+    /// Bytes of the incremental state (Cᵀ + generator norms) — counted
+    /// by `generate::kv_cache_bytes` next to the `Compressed` itself.
+    pub fn stored_bytes(&self) -> usize {
+        self.ct.rows() * self.ct.cols() * 4 + self.nc.len() * 4
+    }
+
+    /// Fold one row on the active dispatch level.
+    pub fn fold(&mut self, comp: &mut Compressed, row: &[f32], eps: Eps) {
+        self.fold_on(kernels::active(), comp, row, eps)
+    }
+
+    /// Fold one row: append its assignment and scale to `comp` and
+    /// refresh β. One Gram GEMM against the fixed Cᵀ, then the exact
+    /// `compress_range` sweep (strict argmax, lowest index on ties).
+    pub fn fold_on(
+        &mut self,
+        d: kernels::Dispatch,
+        comp: &mut Compressed,
+        row: &[f32],
+        eps: Eps,
+    ) {
+        let (n, k) = (self.ct.rows(), self.ct.cols());
+        assert_eq!(row.len(), n, "fold: row width vs generator width");
+        assert_eq!(comp.generators.rows(), k, "fold: comp/state generator mismatch");
+        let (assign_v, alpha_v, is_dropped) = kernels::with_workspace(|ws| {
+            let Workspace { packs, s, .. } = ws;
+            s.clear();
+            s.resize(k, 0.0);
+            kernels::gemm_into(d, false, 1, k, n, row, n, self.ct.data(), k, s, k, packs);
+            let na = dot(row, row).sqrt();
+            if na <= NORM_EPS {
+                return (0u32, 0f32, true);
+            }
+            let mut best_j = 0usize;
+            let mut best_abs = -1.0f32;
+            let mut best_cs = 0.0f32;
+            for (j, &dv) in s[..k].iter().enumerate() {
+                let cs = dv / (na * self.nc[j]).max(NORM_EPS);
+                if cs.abs() > best_abs {
+                    best_abs = cs.abs();
+                    best_cs = cs;
+                    best_j = j;
+                }
+            }
+            if eps.keeps(best_cs * best_cs) {
+                (best_j as u32, best_cs * na / self.nc[best_j].max(NORM_EPS), false)
+            } else {
+                (0u32, 0f32, true)
+            }
+        });
+        comp.assign.push(assign_v);
+        comp.alpha.push(alpha_v);
+        if is_dropped {
+            self.dropped += 1;
+        }
+        let b = comp.alpha.len();
+        let kept = b - self.dropped;
+        comp.beta = if kept > 0 { b as f32 / kept as f32 } else { 1.0 };
+    }
+}
+
 /// Backward entry point of the compressed projection (the native twin
 /// of `python/compile/pamm_layer.py`'s `_pamm_bwd`): the VJP of
 /// `Z = Ã·W` with respect to `W`, treating the assignment `f` and the
@@ -668,6 +762,57 @@ mod tests {
         let exact = exact_matmul(&a, &dz);
         let got = grad_w(&comp, &dz);
         assert!(got.max_abs_diff(&exact) < 1e-4 * exact.frob_norm().max(1.0));
+    }
+
+    #[test]
+    fn incremental_fold_matches_batch_compress_bitwise() {
+        // Compress a 16-row prefix, fold the remaining rows one at a
+        // time, and demand the running Compressed is field-for-field
+        // bit-equal to a one-shot compression of all rows — the
+        // decode-cache recurrence contract.
+        let mut a = rand_mat(48, 12, 71);
+        for j in 0..12 {
+            a.set(30, j, 0.0); // a dropped row in the folded region
+        }
+        let mut rng = Xoshiro256::new(72);
+        let idx = sample_generators(&mut rng, 16, 5);
+        for eps in [Eps::Inf, Eps::Val(0.6)] {
+            let pool = Pool::serial();
+            let full = compress_with(&a, &idx, eps, &pool);
+            let prefix = Mat::from_fn(16, 12, |i, j| a.get(i, j));
+            let mut comp = compress_with(&prefix, &idx, eps, &pool);
+            let mut inc = IncrementalCompressor::new(&comp);
+            for i in 16..48 {
+                inc.fold(&mut comp, a.row(i), eps);
+            }
+            assert_eq!(comp.generators, full.generators, "{eps:?}");
+            assert_eq!(comp.assign, full.assign, "{eps:?}");
+            let got: Vec<u32> = comp.alpha.iter().map(|v| v.to_bits()).collect();
+            let want: Vec<u32> = full.alpha.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "{eps:?}");
+            assert_eq!(comp.beta.to_bits(), full.beta.to_bits(), "{eps:?}");
+        }
+    }
+
+    #[test]
+    fn incremental_fold_thread_and_stored_bytes_invariants() {
+        // The batch side of the parity can run on any pool; folds are
+        // serial by construction. Also pin the incremental state bytes.
+        let a = rand_mat(40, 8, 81);
+        let mut rng = Xoshiro256::new(82);
+        let idx = sample_generators(&mut rng, 20, 6);
+        let pool = Pool::new(4).with_min_chunk(1);
+        let full = compress_with(&a, &idx, Eps::Inf, &pool);
+        let prefix = Mat::from_fn(20, 8, |i, j| a.get(i, j));
+        let mut comp = compress_with(&prefix, &idx, Eps::Inf, &pool);
+        let mut inc = IncrementalCompressor::new(&comp);
+        assert_eq!(inc.stored_bytes(), 6 * 8 * 4 + 6 * 4);
+        for i in 20..40 {
+            inc.fold(&mut comp, a.row(i), Eps::Inf);
+        }
+        assert_eq!(comp.assign, full.assign);
+        assert_eq!(comp.alpha, full.alpha);
+        assert_eq!(comp.beta.to_bits(), full.beta.to_bits());
     }
 
     #[test]

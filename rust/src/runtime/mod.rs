@@ -7,15 +7,28 @@
 //! training keeps params/optimizer state as device buffers and threads them
 //! from one step's outputs to the next — the only per-step host traffic is
 //! the token batch in and the loss scalar out.
+//!
+//! The PJRT pieces ([`Exec`], [`Engine`], the literal conversions) are
+//! gated behind the `pjrt` cargo feature — the default build carries
+//! only the host-side types: [`HostTensor`] (the checkpoint / native
+//! interchange value) and the [`manifest`] model (whose `ConfigMeta`
+//! cards also drive the native `pamm generate` path via
+//! `generate::config_from_manifest`).
 
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 pub use manifest::{ArtifactMeta, ConfigMeta, Dtype, IoSpec, Manifest, ParamSpec, VariantMeta};
 
@@ -88,10 +101,12 @@ impl HostTensor {
         Ok(d[0])
     }
 
+    #[cfg(feature = "pjrt")]
     fn dims_i64(&self) -> Vec<i64> {
         self.shape().iter().map(|&d| d as i64).collect()
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
             HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&self.dims_i64())?,
@@ -100,6 +115,7 @@ impl HostTensor {
         Ok(lit)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -116,11 +132,13 @@ impl HostTensor {
 }
 
 /// A compiled artifact plus its manifest row.
+#[cfg(feature = "pjrt")]
 pub struct Exec {
     pub meta: ArtifactMeta,
     exe: Rc<xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Exec {
     /// Execute with host tensors; returns host tensors (convenience path —
     /// tests, kernel validation, one-shot evals).
@@ -197,6 +215,7 @@ impl Exec {
 }
 
 /// Artifact directory + PJRT client + compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -204,6 +223,7 @@ pub struct Engine {
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
         let dir = artifact_dir.as_ref().to_path_buf();

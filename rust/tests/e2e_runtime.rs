@@ -6,6 +6,11 @@
 //! pin down: manifest↔zoo agreement, kernel three-way agreement,
 //! training convergence through the full stack, eval, checkpoints, DDP
 //! equivalence and determinism.
+//!
+//! The whole suite is gated on the `pjrt` cargo feature — the default
+//! build has no PJRT engine to run them against.
+
+#![cfg(feature = "pjrt")]
 
 use pamm::checkpoint;
 use pamm::config::{RunConfig, Variant};

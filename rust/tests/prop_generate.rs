@@ -1,0 +1,343 @@
+//! Property tests for native generation with the PAMM-compressed KV
+//! cache (`generate::Decoder`, DESIGN.md §8):
+//!
+//! * **Fidelity oracle** — at all-generators (k = prompt length,
+//!   `Eps::Inf`) the compressed cache is the identity up to Lemma-1 α
+//!   rounding, so prefill logits must match an independent f64 dense
+//!   implementation of the whole forward within a small relative
+//!   tolerance.
+//! * **Decode parity** — incremental decode is *bitwise* identical to
+//!   a one-shot prefill of `prompt ++ generated` whose generator
+//!   domain is the prompt, across k (including the clamp), ε-drop
+//!   settings, and prompt/continuation lengths.
+//! * **Thread parity** — the whole prefill + greedy-decode trajectory
+//!   (token stream and final logits) is bit-identical at 1/2/4 pool
+//!   threads.
+//! * **Dispatch parity** — the two decode-side kernels this subsystem
+//!   adds, `IncrementalCompressor::fold_on` and
+//!   `attention::attend_cached_on`, are bit-identical at
+//!   scalar/sse2/avx2 (explicit `Dispatch` arguments; no process-wide
+//!   `kernels::force`).
+//! * **Memory** — the measured cache peak equals the analytic
+//!   `kv_cache_bytes` bound exactly, decode allocates nothing, and the
+//!   bound undercuts the dense `2·T·d_model` baseline.
+//!
+//! Run under both `PAMM_SIMD=native` (default) and `PAMM_SIMD=scalar`
+//! (CI does both).
+
+use pamm::attention;
+use pamm::autograd::LN_EPS;
+use pamm::generate::{self, check_decode_parity, Decoder, GenConfig};
+use pamm::model::{self, LmConfig, TransformerLM};
+use pamm::pamm::{compress_with, sample_generators, Eps, IncrementalCompressor};
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels::Dispatch;
+use pamm::tensor::Mat;
+
+fn rand_mat(rows: usize, cols: usize, std: f32, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    Mat::random_normal(rows, cols, std, &mut rng)
+}
+
+fn token_ids(vocab: usize, n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| rng.next_below(vocab as u64) as i32).collect()
+}
+
+/// A model with weights large enough that logits are well above the
+/// f32 noise floor (the 0.02 production init would make the relative
+/// oracle comparison vacuous), small enough not to blow up through the
+/// stacked blocks.
+fn oracle_model(cfg: &LmConfig, seed: u64) -> TransformerLM {
+    let mut m = TransformerLM::new(cfg.clone(), seed);
+    let dm = cfg.d_model();
+    let mut s = seed;
+    let mut next = |rows: usize, cols: usize, std: f32| {
+        s += 1;
+        rand_mat(rows, cols, std, s)
+    };
+    m.params[0] = next(cfg.vocab, dm, 0.4); // emb (tied head)
+    for b in 0..cfg.n_layers {
+        let p = 1 + b * model::PARAMS_PER_BLOCK;
+        let mut g = next(1, dm, 0.2);
+        for v in g.data_mut() {
+            *v += 1.0;
+        }
+        m.params[p] = g;
+        m.params[p + 1] = next(1, dm, 0.1);
+        m.params[p + 2] = next(dm, dm, 0.3);
+        m.params[p + 3] = next(dm, dm, 0.3);
+        m.params[p + 4] = next(dm, dm, 0.3);
+        let mut g2 = next(1, dm, 0.2);
+        for v in g2.data_mut() {
+            *v += 1.0;
+        }
+        m.params[p + 5] = g2;
+        m.params[p + 6] = next(1, dm, 0.1);
+        m.params[p + 7] = next(dm, cfg.d_ff, 0.3);
+        m.params[p + 8] = next(cfg.d_ff, dm, 0.3);
+    }
+    let lnf = 1 + cfg.n_layers * model::PARAMS_PER_BLOCK;
+    let mut gf = next(1, dm, 0.2);
+    for v in gf.data_mut() {
+        *v += 1.0;
+    }
+    m.params[lnf] = gf;
+    m.params[lnf + 1] = next(1, dm, 0.1);
+    m
+}
+
+// ---------------------------------------------------------------------------
+// f64 oracle — an independent dense implementation of the inference
+// forward (same structure as prop_model's training oracle, single
+// sequence, last-row tied-head logits instead of the loss).
+// ---------------------------------------------------------------------------
+
+fn mm64(a: &[f64], b: &[f64], r: usize, k: usize, c: usize) -> Vec<f64> {
+    let mut out = vec![0f64; r * c];
+    for i in 0..r {
+        for p in 0..k {
+            let av = a[i * k + p];
+            for j in 0..c {
+                out[i * c + j] += av * b[p * c + j];
+            }
+        }
+    }
+    out
+}
+
+fn ln64(x: &[f64], rows: usize, n: usize, g: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut out = vec![0f64; rows * n];
+    for i in 0..rows {
+        let xr = &x[i * n..(i + 1) * n];
+        let mu: f64 = xr.iter().sum::<f64>() / n as f64;
+        let var: f64 = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / n as f64;
+        let r = 1.0 / (var + LN_EPS as f64).sqrt();
+        for j in 0..n {
+            out[i * n + j] = (xr[j] - mu) * r * g[j] + b[j];
+        }
+    }
+    out
+}
+
+fn gelu64(z: f64) -> f64 {
+    let c = 0.7978845608028654f64; // √(2/π)
+    let a = 0.044715f64;
+    0.5 * z * (1.0 + (c * (z + a * z * z * z)).tanh())
+}
+
+/// Dense causal multi-head attention over one sequence, token-major.
+fn attn64(qp: &[f64], kp: &[f64], vp: &[f64], seq: usize, heads: usize, dh: usize) -> Vec<f64> {
+    let dm = heads * dh;
+    let scale = 1.0 / (dh as f64).sqrt();
+    let mut out = vec![0f64; seq * dm];
+    for h in 0..heads {
+        for i in 0..seq {
+            let ri = i * dm + h * dh;
+            let mut scores = vec![0f64; i + 1];
+            for (j, s) in scores.iter_mut().enumerate() {
+                let rj = j * dm + h * dh;
+                let mut acc = 0f64;
+                for c in 0..dh {
+                    acc += qp[ri + c] * kp[rj + c];
+                }
+                *s = scale * acc;
+            }
+            let mx = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut sum = 0f64;
+            for s in scores.iter_mut() {
+                *s = (*s - mx).exp();
+                sum += *s;
+            }
+            for c in 0..dh {
+                let mut acc = 0f64;
+                for (j, p) in scores.iter().enumerate() {
+                    let rj = j * dm + h * dh;
+                    acc += p * vp[rj + c];
+                }
+                out[ri + c] = acc / sum;
+            }
+        }
+    }
+    out
+}
+
+/// The whole inference forward in f64, dense K/V (the function the
+/// compressed-cache forward equals at all-generators): returns the
+/// last position's tied-head logits.
+fn oracle_logits(cfg: &LmConfig, params: &[Vec<f64>], ids: &[i32]) -> Vec<f64> {
+    let dm = cfg.d_model();
+    let seq = ids.len();
+    let emb = &params[0];
+    let mut x = vec![0f64; seq * dm];
+    for (i, &id) in ids.iter().enumerate() {
+        x[i * dm..(i + 1) * dm].copy_from_slice(&emb[id as usize * dm..(id as usize + 1) * dm]);
+    }
+    for b in 0..cfg.n_layers {
+        let p = 1 + b * model::PARAMS_PER_BLOCK;
+        let h1 = ln64(&x, seq, dm, &params[p], &params[p + 1]);
+        let qp = mm64(&h1, &params[p + 2], seq, dm, dm);
+        let kp = mm64(&h1, &params[p + 3], seq, dm, dm);
+        let vp = mm64(&h1, &params[p + 4], seq, dm, dm);
+        let attn = attn64(&qp, &kp, &vp, seq, cfg.heads, cfg.head_dim);
+        for (xv, av) in x.iter_mut().zip(&attn) {
+            *xv += av;
+        }
+        let h2 = ln64(&x, seq, dm, &params[p + 5], &params[p + 6]);
+        let mut z = mm64(&h2, &params[p + 7], seq, dm, cfg.d_ff);
+        for v in z.iter_mut() {
+            *v = gelu64(*v);
+        }
+        let y = mm64(&z, &params[p + 8], seq, cfg.d_ff, dm);
+        for (xv, yv) in x.iter_mut().zip(&y) {
+            *xv += yv;
+        }
+    }
+    let lnf = 1 + cfg.n_layers * model::PARAMS_PER_BLOCK;
+    let hf = ln64(&x, seq, dm, &params[lnf], &params[lnf + 1]);
+    let hr = &hf[(seq - 1) * dm..seq * dm];
+    (0..cfg.vocab)
+        .map(|t| {
+            let er = &emb[t * dm..(t + 1) * dm];
+            hr.iter().zip(er).map(|(a, b)| a * b).sum()
+        })
+        .collect()
+}
+
+fn params64(m: &TransformerLM) -> Vec<Vec<f64>> {
+    m.params.iter().map(|p| p.data().iter().map(|&v| v as f64).collect()).collect()
+}
+
+#[test]
+fn all_generators_prefill_matches_the_f64_dense_oracle() {
+    let cfg = LmConfig { vocab: 23, n_layers: 2, heads: 2, head_dim: 4, d_ff: 12 };
+    let m = oracle_model(&cfg, 4100);
+    let prompt = token_ids(cfg.vocab, 10, 4200);
+    let pool = Pool::serial();
+    // k = prompt length, Eps::Inf: every row a generator, α ≈ 1 up to
+    // Lemma-1 rounding — the cache is semantically the dense one.
+    let gcfg = GenConfig::new(prompt.len(), Eps::Inf, 5, prompt.len());
+    let mut dec = Decoder::new(&m, gcfg);
+    let got = dec.prefill(&prompt, &pool).to_vec();
+    assert_eq!(dec.effective_k(), prompt.len());
+    let want = oracle_logits(&cfg, &params64(&m), &prompt);
+    let scale = want.iter().fold(1f64, |a, w| a.max(w.abs()));
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            ((*g as f64) - w).abs() <= 2e-3 * scale,
+            "logit {i}: native {g} vs oracle {w} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn incremental_decode_matches_one_shot_prefill_bitwise_across_shapes() {
+    let cfg = LmConfig { vocab: 41, n_layers: 3, heads: 2, head_dim: 8, d_ff: 32 };
+    let model = TransformerLM::new(cfg.clone(), 77);
+    let pool = Pool::new(2).with_min_chunk(1);
+    for (k, eps, plen, n_new) in [
+        (1usize, Eps::Inf, 5usize, 6usize), // degenerate single generator
+        (4, Eps::Inf, 12, 8),
+        (8, Eps::Val(0.6), 9, 7), // ε-drop path active at decode folds
+        (16, Eps::Inf, 7, 4),     // k clamps to the generator domain
+    ] {
+        let prompt = token_ids(cfg.vocab, plen, 5000 + k as u64);
+        let gcfg = GenConfig::new(k, eps, 13, plen + n_new);
+        let mut dec = Decoder::new(&model, gcfg);
+        dec.prefill(&prompt, &pool);
+        let toks = dec.generate(n_new, &pool);
+        assert_eq!(toks.len(), n_new);
+        assert_eq!(dec.len(), plen + n_new);
+        let got = dec.last_logits().to_vec();
+        check_decode_parity(&model, &gcfg, &prompt, &toks, &got, &pool)
+            .unwrap_or_else(|e| panic!("k={k} eps={eps:?} plen={plen}: {e}"));
+    }
+}
+
+#[test]
+fn generation_is_bit_identical_at_any_thread_count() {
+    let cfg = LmConfig { vocab: 101, n_layers: 2, heads: 2, head_dim: 16, d_ff: 64 };
+    let model = TransformerLM::new(cfg.clone(), 99);
+    let prompt = token_ids(cfg.vocab, 16, 6000);
+    let run = |pool: &Pool| {
+        let mut dec = Decoder::new(&model, GenConfig::new(6, Eps::Inf, 11, 48));
+        dec.prefill(&prompt, pool);
+        let toks = dec.generate(12, pool);
+        let bits: Vec<u32> = dec.last_logits().iter().map(|v| v.to_bits()).collect();
+        (toks, bits)
+    };
+    let base = run(&Pool::serial());
+    for threads in [2usize, 4] {
+        assert_eq!(run(&Pool::new(threads).with_min_chunk(1)), base, "threads {threads}");
+    }
+}
+
+#[test]
+fn fold_and_cached_attention_bit_identical_across_dispatch_levels() {
+    // The two kernels the generation subsystem adds, driven directly
+    // through their explicit-Dispatch entry points (prop_kernels
+    // already covers the shared GEMM ladder).
+    let (n, dm, heads, dh, k, q_rows) = (24usize, 16usize, 2usize, 8usize, 6usize, 4usize);
+    let h = rand_mat(n + q_rows, dm, 0.8, 4400); // prefix rows + decode rows
+    let wk = rand_mat(dm, dm, 0.3, 4401);
+    let wv = rand_mat(dm, dm, 0.3, 4402);
+    let q = rand_mat(q_rows, dm, 0.5, 4403);
+    let pool = Pool::serial();
+    let prefix = Mat::from_vec(n, dm, h.data()[..n * dm].to_vec());
+    let run = |d: Dispatch| {
+        let mut rng = Xoshiro256::new(4500);
+        let gen_idx = sample_generators(&mut rng, n, k);
+        let mut comp = compress_with(&prefix, &gen_idx, Eps::Inf, &pool);
+        let mut inc = IncrementalCompressor::new(&comp);
+        for r in n..n + q_rows {
+            // ε tight enough that some folds take the drop path too.
+            inc.fold_on(d, &mut comp, h.row(r), Eps::Val(0.5));
+        }
+        let gk = comp.project_generators(&wk);
+        let gv = comp.project_generators(&wv);
+        let out = attention::attend_cached_on(
+            d,
+            &q,
+            n,
+            &gk,
+            &gv,
+            &comp.alpha,
+            &comp.assign,
+            heads,
+            dh,
+            &pool,
+        );
+        let alpha_bits: Vec<u32> = comp.alpha.iter().map(|v| v.to_bits()).collect();
+        let out_bits: Vec<u32> = out.data().iter().map(|v| v.to_bits()).collect();
+        (comp.assign.clone(), alpha_bits, out_bits)
+    };
+    let base = run(Dispatch::Scalar);
+    for d in [Dispatch::Sse2, Dispatch::Avx2] {
+        if !d.available() {
+            continue;
+        }
+        assert_eq!(run(d), base, "{} vs scalar", d.name());
+    }
+}
+
+#[test]
+fn measured_cache_peak_equals_the_analytic_bound_and_undercuts_dense() {
+    let cfg = LmConfig { vocab: 127, n_layers: 3, heads: 2, head_dim: 16, d_ff: 64 };
+    let model = TransformerLM::new(cfg.clone(), 31);
+    let pool = Pool::serial();
+    let (plen, n_new, k) = (24usize, 16usize, 6usize);
+    let gcfg = GenConfig::new(k, Eps::Inf, 3, plen + n_new);
+    let mut dec = Decoder::new(&model, gcfg);
+    dec.prefill(&token_ids(cfg.vocab, plen, 4600), &pool);
+    let peak_after_prefill = dec.cache_peak_bytes();
+    dec.generate(n_new, &pool);
+    // Decode must not allocate: α/f were pre-sized to max_tokens.
+    assert_eq!(dec.cache_peak_bytes(), peak_after_prefill, "decode allocated cache memory");
+    let bound = generate::kv_cache_bytes(&cfg, k, plen + n_new);
+    assert_eq!(dec.cache_peak_bytes(), bound, "measured peak vs analytic bound");
+    assert_eq!(dec.cache_bound_bytes(), bound);
+    let dense = generate::dense_kv_cache_bytes(&cfg, plen + n_new);
+    assert_eq!(dec.dense_baseline_bytes(), dense);
+    assert!(bound < dense, "compressed cache {bound} not below dense {dense}");
+}

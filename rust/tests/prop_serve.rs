@@ -1,0 +1,157 @@
+//! Property tests for the continuous-batching serve loop
+//! (`coordinator::serve`, DESIGN.md §8):
+//!
+//! * **Worker-count determinism** — a fixed arrival script yields
+//!   bit-identical per-request token streams (and identical schedules)
+//!   at 1/2/4 serve workers, and every stream equals a standalone
+//!   `generate::Decoder` run with the session's derived seed.
+//! * **Admission policy** — strict `(arrival, id)` FIFO: admission
+//!   steps follow the script order, nothing starves, every request
+//!   completes with exactly `max_new` tokens, and the per-completion
+//!   cache accounting matches the analytic `kv_cache_bytes` inventory.
+//! * **Percentiles** — `benchx::percentile` (shared by the serve table
+//!   and the bench reports) matches hand-computed nearest-rank values.
+//!
+//! Run under both `PAMM_SIMD=native` (default) and `PAMM_SIMD=scalar`
+//! (CI does both).
+
+use std::time::Duration;
+
+use pamm::benchx;
+use pamm::coordinator::{scripted_load, serve, ServeConfig, ServeRequest};
+use pamm::generate::{self, Decoder, GenConfig};
+use pamm::model::{LmConfig, TransformerLM};
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+
+fn serve_model() -> TransformerLM {
+    TransformerLM::new(
+        LmConfig { vocab: 53, n_layers: 2, heads: 2, head_dim: 8, d_ff: 24 },
+        41,
+    )
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig { max_concurrent: 3, k: 4, eps: Eps::Inf, seed: 2718 }
+}
+
+/// The per-session seed derivation `serve` uses (documented contract:
+/// a session's stream is a pure function of `(seed, prompt)`).
+fn session_seed(base: u64, id: usize) -> u64 {
+    base ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+#[test]
+fn token_streams_bit_identical_at_one_two_four_workers() {
+    let model = serve_model();
+    let cfg = serve_cfg();
+    let reqs = scripted_load(9, model.cfg.vocab, 7);
+    let base = serve(&model, &cfg, &reqs, &Pool::serial()).unwrap();
+    assert_eq!(base.completions.len(), reqs.len());
+    let schedule = |o: &pamm::coordinator::ServeOutcome| {
+        o.completions
+            .iter()
+            .map(|c| (c.id, c.admitted_step, c.finished_step, c.tokens.clone()))
+            .collect::<Vec<_>>()
+    };
+    let want = schedule(&base);
+    for workers in [2usize, 4] {
+        let pool = Pool::new(workers).with_min_chunk(1);
+        let out = serve(&model, &cfg, &reqs, &pool).unwrap();
+        assert_eq!(schedule(&out), want, "schedule/stream drift at {workers} workers");
+        assert_eq!(out.steps, base.steps, "step count drift at {workers} workers");
+    }
+}
+
+#[test]
+fn every_stream_equals_a_standalone_decoder() {
+    let model = serve_model();
+    let cfg = serve_cfg();
+    let reqs = scripted_load(6, model.cfg.vocab, 19);
+    let out = serve(&model, &cfg, &reqs, &Pool::new(2).with_min_chunk(1)).unwrap();
+    let pool = Pool::serial();
+    for c in &out.completions {
+        let r = reqs.iter().find(|r| r.id == c.id).unwrap();
+        let gc = GenConfig::new(
+            cfg.k,
+            cfg.eps,
+            session_seed(cfg.seed, r.id),
+            r.prompt.len() + r.max_new,
+        );
+        let mut dec = Decoder::new(&model, gc);
+        dec.prefill(&r.prompt, &pool);
+        let toks = dec.generate(r.max_new, &pool);
+        assert_eq!(toks, c.tokens, "request {} diverged from a standalone decode", c.id);
+        // And the standalone stream itself is prefill/decode parity-clean.
+        let got = dec.last_logits().to_vec();
+        generate::check_decode_parity(&model, &gc, &r.prompt, &toks, &got, &pool).unwrap();
+    }
+}
+
+#[test]
+fn admission_is_fifo_nothing_starves_and_cache_accounting_is_exact() {
+    let model = serve_model();
+    // Deliberately adversarial script: ids descending, arrivals
+    // staggered so later-arriving low ids must NOT jump the queue.
+    let reqs: Vec<ServeRequest> = vec![
+        ServeRequest { id: 5, arrival: 0, prompt: vec![1, 2, 3, 4], max_new: 5 },
+        ServeRequest { id: 4, arrival: 0, prompt: vec![9, 8, 7], max_new: 4 },
+        ServeRequest { id: 3, arrival: 1, prompt: vec![5, 5], max_new: 6 },
+        ServeRequest { id: 2, arrival: 3, prompt: vec![6, 1, 2, 3, 4, 5], max_new: 3 },
+        ServeRequest { id: 1, arrival: 7, prompt: vec![2, 4], max_new: 4 },
+    ];
+    let cfg = ServeConfig { max_concurrent: 2, k: 3, eps: Eps::Inf, seed: 99 };
+    let out = serve(&model, &cfg, &reqs, &Pool::serial()).unwrap();
+
+    // Nothing starves: every scripted request completes, with exactly
+    // max_new tokens in vocab range.
+    assert_eq!(out.completions.len(), reqs.len());
+    for r in &reqs {
+        let c = out.completions.iter().find(|c| c.id == r.id).unwrap();
+        assert_eq!(c.tokens.len(), r.max_new, "request {} truncated", r.id);
+        assert!(c.tokens.iter().all(|&t| (t as usize) < model.cfg.vocab));
+        assert_eq!(c.prompt_len, r.prompt.len());
+        assert!(c.admitted_step >= r.arrival, "request {} admitted before arrival", r.id);
+        assert!(c.finished_step >= c.admitted_step);
+        // Cache accounting: the session's measured peak is exactly the
+        // analytic inventory at its (clamped) k and capacity, and the
+        // reported savings are dense-minus-bound.
+        let k_eff = cfg.k.clamp(1, r.prompt.len());
+        let cap = r.prompt.len() + r.max_new;
+        let bound = generate::kv_cache_bytes(&model.cfg, k_eff, cap);
+        let dense = generate::dense_kv_cache_bytes(&model.cfg, cap);
+        assert_eq!(c.cache_peak_bytes, bound, "request {} cache peak", r.id);
+        assert_eq!(c.cache_saved_bytes, dense - bound, "request {} cache savings", r.id);
+    }
+    assert!(out.total_cache_saved_bytes() > 0);
+    assert_eq!(out.total_tokens(), reqs.iter().map(|r| r.max_new).sum::<usize>());
+
+    // FIFO: admission steps are monotone in (arrival, id) script order.
+    let mut script: Vec<&ServeRequest> = reqs.iter().collect();
+    script.sort_by_key(|r| (r.arrival, r.id));
+    let admits: Vec<usize> = script
+        .iter()
+        .map(|r| out.completions.iter().find(|c| c.id == r.id).unwrap().admitted_step)
+        .collect();
+    assert!(
+        admits.windows(2).all(|w| w[0] <= w[1]),
+        "admission steps {admits:?} violate (arrival, id) FIFO order"
+    );
+}
+
+#[test]
+fn percentile_matches_hand_computed_nearest_rank() {
+    let ms = |v: u64| Duration::from_millis(v);
+    // Ten sorted samples: nearest rank round((n-1)·p).
+    let ten: Vec<Duration> = (1..=10).map(ms).collect();
+    assert_eq!(benchx::percentile(&ten, 0.0), ms(1));
+    assert_eq!(benchx::percentile(&ten, 0.5), ms(6)); // round(4.5) = 5
+    assert_eq!(benchx::percentile(&ten, 0.95), ms(10)); // round(8.55) = 9
+    assert_eq!(benchx::percentile(&ten, 1.0), ms(10));
+    // Odd length: p50 is the exact median.
+    let five: Vec<Duration> = [3, 7, 9, 20, 31].iter().map(|&v| ms(v)).collect();
+    assert_eq!(benchx::percentile(&five, 0.5), ms(9));
+    assert_eq!(benchx::percentile(&five, 0.99), ms(31));
+    // Single sample: every percentile is that sample.
+    assert_eq!(benchx::percentile(&[ms(4)], 0.5), ms(4));
+}
