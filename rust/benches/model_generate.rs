@@ -116,7 +116,7 @@ fn main() {
 
         // Serve loop: 8 scripted requests through continuous batching.
         let reqs = scripted_load(8, cfg.vocab, 7);
-        let scfg = ServeConfig { max_concurrent: 4, k: 4, eps: Eps::Inf, seed: 13 };
+        let scfg = ServeConfig::new(4, 4, Eps::Inf, 13);
         let served_tokens: usize = reqs.iter().map(|r| r.max_new).sum();
         let r = suite
             .bench(&format!("serve[{tag}] t={t}"), || {

@@ -108,7 +108,7 @@ fn main() {
             let r = suite
                 .bench(&format!("lm_step[{tag}] t={t}"), || {
                     std::hint::black_box(
-                        trainer.step_report(disp, &tok_block, &pool, None).loss,
+                        trainer.step_report(disp, &tok_block, &pool, None).expect("bench step").loss,
                     );
                 })
                 .clone();

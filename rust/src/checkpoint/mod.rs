@@ -1,28 +1,94 @@
-//! Checkpointing: parameter/optimizer-state save & restore.
+//! Checkpointing: crash-safe parameter/optimizer-state save & restore.
 //!
 //! Format: one flat little-endian binary blob per checkpoint
 //! (`<name>.bin`) with a JSON index (`<name>.json`) describing tensor
-//! order, names, shapes, dtypes and byte offsets — restorable without the
-//! manifest. Used by the coordinator for resume + for capturing
-//! activations/params for the analysis harnesses (fig5/6/7).
+//! order, names, shapes, dtypes, byte offsets and CRC32 checksums —
+//! restorable without the manifest. Used by the coordinator for resume
+//! + for capturing activations/params for the analysis harnesses.
+//!
+//! # Crash safety (DESIGN.md §9)
+//!
+//! Both files are written to a `.tmp` sibling, fsynced, then renamed
+//! into place (and the directory fsynced on unix), so a kill at any
+//! instant leaves either the previous checkpoint or the new one —
+//! never a half-written file under the real name. The `.json` rename
+//! is the commit point: a load requires the index, and the index
+//! carries a whole-blob CRC32 plus one per tensor, so a stale
+//! blob/index pairing or any bitrot is *detected* (contextful error
+//! naming the failing tensor), never silently loaded. A
+//! [`CheckpointRing`] retains the last N verified checkpoints of a run
+//! and [`CheckpointRing::load_latest_good`] falls back newest → oldest
+//! past corrupted or truncated entries, reporting each skip.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::jsonx::{self, Value};
 use crate::runtime::{Dtype, HostTensor};
 
-const MAGIC: &str = "pamm-ckpt-v1";
+/// v2 adds `crc` per tensor entry + `blob_crc`; v1 files (no
+/// checksums) are still loadable for backward compatibility.
+const MAGIC: &str = "pamm-ckpt-v2";
+const MAGIC_V1: &str = "pamm-ckpt-v1";
 
-/// Save named tensors; order is preserved on load.
-pub fn save(dir: impl AsRef<Path>, name: &str, tensors: &[(String, HostTensor)]) -> Result<()> {
-    let dir = dir.as_ref();
-    std::fs::create_dir_all(dir)?;
+// -- checksums --------------------------------------------------------------
+
+/// CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) — the ubiquitous
+/// zlib/PNG polynomial, hand-rolled because the repo takes no deps.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// -- atomic file writes -----------------------------------------------------
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Write-to-temp + fsync + atomic rename: after this returns, `path`
+/// holds either its previous content or exactly `bytes` — a crash
+/// mid-call can only leave a stray `.tmp` (ignored by every loader).
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", path.display()))?;
+    Ok(())
+}
+
+/// Persist the rename itself (directory metadata). Unix-only; on
+/// other targets the rename is still atomic within the running system.
+fn sync_dir(dir: &Path) {
+    #[cfg(unix)]
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+}
+
+// -- save / load ------------------------------------------------------------
+
+fn encode(tensors: &[(String, HostTensor)]) -> (Vec<u8>, Vec<Value>) {
     let mut blob: Vec<u8> = Vec::new();
     let mut entries = Vec::new();
-
     for (tname, t) in tensors {
         let offset = blob.len();
         let (dtype, bytes): (&str, Vec<u8>) = match t {
@@ -43,33 +109,91 @@ pub fn save(dir: impl AsRef<Path>, name: &str, tensors: &[(String, HostTensor)])
             ("dtype", jsonx::s(dtype)),
             ("offset", jsonx::num(offset as f64)),
             ("bytes", jsonx::num(bytes.len() as f64)),
+            ("crc", jsonx::num(crc32(&bytes) as f64)),
         ]));
     }
+    (blob, entries)
+}
 
+/// Save named tensors crash-safely; order is preserved on load.
+pub fn save(dir: impl AsRef<Path>, name: &str, tensors: &[(String, HostTensor)]) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let (blob, entries) = encode(tensors);
     let index = jsonx::obj(vec![
         ("magic", jsonx::s(MAGIC)),
         ("tensors", jsonx::arr(entries)),
         ("blob_bytes", jsonx::num(blob.len() as f64)),
+        ("blob_crc", jsonx::num(crc32(&blob) as f64)),
     ]);
-
-    std::fs::File::create(dir.join(format!("{name}.bin")))?.write_all(&blob)?;
-    std::fs::write(dir.join(format!("{name}.json")), index.to_string())?;
+    // Blob first, index last: the `.json` rename is the commit point.
+    write_atomic(&dir.join(format!("{name}.bin")), &blob)
+        .with_context(|| format!("checkpoint `{name}` blob"))?;
+    write_atomic(&dir.join(format!("{name}.json")), index.to_string().as_bytes())
+        .with_context(|| format!("checkpoint `{name}` index"))?;
+    sync_dir(dir);
     Ok(())
 }
 
-/// Load a checkpoint saved by [`save`].
+/// Fault-injection hook (`faultx`): simulate a kill halfway through
+/// the blob write — the first `keep_pct`% of the blob lands in the
+/// `.bin.tmp` sibling and **nothing is renamed**, exactly the on-disk
+/// state a mid-write crash leaves. Loaders never see the tmp file, so
+/// the previous checkpoint (if any) stays intact.
+pub fn save_interrupted(
+    dir: impl AsRef<Path>,
+    name: &str,
+    tensors: &[(String, HostTensor)],
+    keep_pct: u8,
+) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let (blob, _) = encode(tensors);
+    let keep = blob.len() * (keep_pct.min(100) as usize) / 100;
+    let tmp = tmp_path(&dir.join(format!("{name}.bin")));
+    let mut f =
+        std::fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(&blob[..keep]).with_context(|| format!("writing {}", tmp.display()))?;
+    f.sync_all().ok();
+    Ok(())
+}
+
+/// Load a checkpoint saved by [`save`], verifying length and (for v2
+/// files) the whole-blob and per-tensor CRC32s. Any mismatch is a
+/// contextful error naming the failing piece — corrupted state is
+/// never silently returned.
 pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Vec<(String, HostTensor)>> {
     let dir = dir.as_ref();
     let index_text = std::fs::read_to_string(dir.join(format!("{name}.json")))
         .with_context(|| format!("checkpoint index {name}.json"))?;
-    let index = jsonx::parse(&index_text)?;
-    if index.req_str("magic")? != MAGIC {
-        bail!("bad checkpoint magic");
-    }
+    let index =
+        jsonx::parse(&index_text).with_context(|| format!("checkpoint `{name}`: index parse"))?;
+    let magic = index.req_str("magic")?;
+    let checksummed = match magic {
+        m if m == MAGIC => true,
+        m if m == MAGIC_V1 => false, // legacy: no checksums to verify
+        other => bail!("checkpoint `{name}`: bad magic `{other}`"),
+    };
     let mut blob = Vec::new();
-    std::fs::File::open(dir.join(format!("{name}.bin")))?.read_to_end(&mut blob)?;
-    if blob.len() != index.req_usize("blob_bytes")? {
-        bail!("checkpoint blob truncated");
+    std::fs::File::open(dir.join(format!("{name}.bin")))
+        .with_context(|| format!("checkpoint blob {name}.bin"))?
+        .read_to_end(&mut blob)
+        .with_context(|| format!("checkpoint blob {name}.bin"))?;
+    let want_len = index.req_usize("blob_bytes")?;
+    ensure!(
+        blob.len() == want_len,
+        "checkpoint `{name}`: blob truncated ({} of {want_len} bytes)",
+        blob.len()
+    );
+    if checksummed {
+        let want_crc = index.req_usize("blob_crc")? as u32;
+        let got_crc = crc32(&blob);
+        ensure!(
+            got_crc == want_crc,
+            "checkpoint `{name}`: blob checksum mismatch (crc32 {got_crc:08x}, index says {want_crc:08x}) — file is corrupted"
+        );
     }
 
     let mut out = Vec::new();
@@ -84,7 +208,15 @@ pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Vec<(String, HostTensor
         let nbytes = e.req_usize("bytes")?;
         let slice = blob
             .get(offset..offset + nbytes)
-            .context("checkpoint entry out of range")?;
+            .with_context(|| format!("checkpoint `{name}`: tensor `{tname}` out of range"))?;
+        if checksummed {
+            let want = e.req_usize("crc")? as u32;
+            let got = crc32(slice);
+            ensure!(
+                got == want,
+                "checkpoint `{name}`: tensor `{tname}` checksum mismatch (crc32 {got:08x}, index says {want:08x})"
+            );
+        }
         let t = match e.req_str("dtype")? {
             "f32" => HostTensor::f32(
                 shape,
@@ -100,11 +232,17 @@ pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Vec<(String, HostTensor
                     .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect(),
             ),
-            other => bail!("unknown checkpoint dtype {other}"),
+            other => bail!("checkpoint `{name}`: unknown dtype {other}"),
         };
         out.push((tname, t));
     }
     Ok(out)
+}
+
+/// Full integrity check without keeping the tensors: Ok(()) iff
+/// [`load`] would succeed.
+pub fn verify(dir: impl AsRef<Path>, name: &str) -> Result<()> {
+    load(dir, name).map(|_| ())
 }
 
 /// Convenience: dtype of a saved tensor without loading the blob.
@@ -123,23 +261,119 @@ pub fn peek_dtypes(dir: impl AsRef<Path>, name: &str) -> Result<Vec<(String, Dty
     Ok(out)
 }
 
+// -- the retained-last-N ring ----------------------------------------------
+
+/// A retained ring of the last `keep` checkpoints of one run: entries
+/// are `{base}.s{step:08}` under `dir`, pruned oldest-first after each
+/// save, recovered newest-good-first by [`load_latest_good`]
+/// (skipping — and reporting — any entry that fails verification).
+///
+/// [`load_latest_good`]: CheckpointRing::load_latest_good
+#[derive(Debug, Clone)]
+pub struct CheckpointRing {
+    dir: PathBuf,
+    base: String,
+    keep: usize,
+}
+
+impl CheckpointRing {
+    /// `keep` is clamped to ≥ 1 (a ring that retains nothing cannot
+    /// recover anything).
+    pub fn new(dir: impl AsRef<Path>, base: &str, keep: usize) -> CheckpointRing {
+        CheckpointRing { dir: dir.as_ref().to_path_buf(), base: base.to_string(), keep: keep.max(1) }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Ring-entry checkpoint name for a boundary step.
+    pub fn entry_name(&self, step: usize) -> String {
+        format!("{}.s{step:08}", self.base)
+    }
+
+    /// Path of an entry's binary blob (bitrot-injection target).
+    pub fn blob_path(&self, step: usize) -> PathBuf {
+        self.dir.join(format!("{}.bin", self.entry_name(step)))
+    }
+
+    /// Save a ring entry for `step`, then prune beyond `keep`.
+    pub fn save(&self, step: usize, tensors: &[(String, HostTensor)]) -> Result<()> {
+        save(&self.dir, &self.entry_name(step), tensors)
+            .with_context(|| format!("ring entry step {step}"))?;
+        self.prune()
+    }
+
+    /// Committed ring entries (step, name), ascending by step — only
+    /// files whose `.json` index landed count (the commit point).
+    pub fn entries(&self) -> Vec<(usize, String)> {
+        let prefix = format!("{}.s", self.base);
+        let mut out = Vec::new();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return out;
+        };
+        for entry in rd.flatten() {
+            let fname = entry.file_name();
+            let Some(fname) = fname.to_str() else { continue };
+            let Some(rest) = fname.strip_prefix(&prefix) else { continue };
+            let Some(digits) = rest.strip_suffix(".json") else { continue };
+            if let Ok(step) = digits.parse::<usize>() {
+                out.push((step, format!("{prefix}{digits}")));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn prune(&self) -> Result<()> {
+        let entries = self.entries();
+        if entries.len() <= self.keep {
+            return Ok(());
+        }
+        for (_, name) in &entries[..entries.len() - self.keep] {
+            // Index first so a kill mid-prune can't leave an index
+            // pointing at a deleted blob.
+            let _ = std::fs::remove_file(self.dir.join(format!("{name}.json")));
+            let _ = std::fs::remove_file(self.dir.join(format!("{name}.bin")));
+        }
+        Ok(())
+    }
+
+    /// Newest ring entry that passes full verification, with the
+    /// diagnostics for every newer entry that had to be skipped
+    /// (corrupted / truncated / unreadable). `Ok((None, diags))` means
+    /// no entry verified — the caller starts from scratch, knowing
+    /// exactly why.
+    #[allow(clippy::type_complexity)]
+    pub fn load_latest_good(
+        &self,
+    ) -> (Option<(usize, Vec<(String, HostTensor)>)>, Vec<String>) {
+        let mut diags = Vec::new();
+        for (step, name) in self.entries().into_iter().rev() {
+            match load(&self.dir, &name) {
+                Ok(tensors) => return (Some((step, tensors)), diags),
+                Err(e) => diags.push(format!("ring entry `{name}` failed verification: {e:#}")),
+            }
+        }
+        (None, diags)
+    }
+}
+
 /// Helper for writing CSV artifacts (fig5/6/7 outputs).
 pub fn write_csv(path: impl AsRef<Path>, header: &str, rows: &[String]) -> Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent)?;
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
     }
-    let mut f = std::fs::File::create(path)?;
+    let mut f =
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
     writeln!(f, "{header}")?;
     for r in rows {
         writeln!(f, "{r}")?;
     }
     Ok(())
 }
-
-#[allow(unused_imports)]
-use jsonx as _jsonx_used; // (jsonx::Value used via helpers)
-#[allow(dead_code)]
-fn _type_uses(_: &Value) {}
 
 #[cfg(test)]
 mod tests {
@@ -149,6 +383,18 @@ mod tests {
         let d = std::env::temp_dir().join(format!("pamm_ckpt_{tag}"));
         let _ = std::fs::remove_dir_all(&d);
         d
+    }
+
+    fn one(v: f32) -> Vec<(String, HostTensor)> {
+        vec![("x".to_string(), HostTensor::f32(vec![4], vec![v; 4]))]
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC32 check values.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
     }
 
     #[test]
@@ -166,6 +412,14 @@ mod tests {
             assert_eq!(n1, n2);
             assert_eq!(t1, t2);
         }
+        verify(&dir, "test").unwrap();
+        // No stray tmp files after a clean save.
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(stray.is_empty(), "atomic save must clean up its temp files");
     }
 
     #[test]
@@ -181,11 +435,55 @@ mod tests {
     fn detects_truncation() {
         let dir = tmpdir("trunc");
         save(&dir, "t", &[("x".into(), HostTensor::f32(vec![8], vec![0.0; 8]))]).unwrap();
-        // Truncate the blob.
         let bin = dir.join("t.bin");
         let data = std::fs::read(&bin).unwrap();
         std::fs::write(&bin, &data[..data.len() - 4]).unwrap();
-        assert!(load(&dir, "t").is_err());
+        let err = load(&dir, "t").unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let dir = tmpdir("flip");
+        save(&dir, "b", &[("x".into(), HostTensor::f32(vec![16], vec![1.0; 16]))]).unwrap();
+        let bin = dir.join("b.bin");
+        let mut data = std::fs::read(&bin).unwrap();
+        data[17] ^= 0x04; // one bit, mid-blob
+        std::fs::write(&bin, &data).unwrap();
+        let err = load(&dir, "b").unwrap_err();
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn loads_legacy_v1_files_without_checksums() {
+        let dir = tmpdir("v1");
+        save(&dir, "l", &one(2.5)).unwrap();
+        // Rewrite the index as a v1 file: old magic, no crc fields.
+        let idx = dir.join("l.json");
+        let text = std::fs::read_to_string(&idx).unwrap();
+        let v = jsonx::parse(&text).unwrap();
+        let entries: Vec<Value> = v
+            .req_arr("tensors")
+            .unwrap()
+            .iter()
+            .map(|e| {
+                jsonx::obj(vec![
+                    ("name", jsonx::s(e.req_str("name").unwrap())),
+                    ("shape", Value::Arr(e.req_arr("shape").unwrap().to_vec())),
+                    ("dtype", jsonx::s(e.req_str("dtype").unwrap())),
+                    ("offset", jsonx::num(e.req_usize("offset").unwrap() as f64)),
+                    ("bytes", jsonx::num(e.req_usize("bytes").unwrap() as f64)),
+                ])
+            })
+            .collect();
+        let v1 = jsonx::obj(vec![
+            ("magic", jsonx::s(MAGIC_V1)),
+            ("tensors", jsonx::arr(entries)),
+            ("blob_bytes", jsonx::num(v.req_usize("blob_bytes").unwrap() as f64)),
+        ]);
+        std::fs::write(&idx, v1.to_string()).unwrap();
+        let loaded = load(&dir, "l").unwrap();
+        assert_eq!(loaded, one(2.5));
     }
 
     #[test]
@@ -196,6 +494,52 @@ mod tests {
         let text = std::fs::read_to_string(&idx).unwrap().replace(MAGIC, "nope");
         std::fs::write(&idx, text).unwrap();
         assert!(load(&dir, "m").is_err());
+    }
+
+    #[test]
+    fn interrupted_save_leaves_only_a_tmp_and_previous_state() {
+        let dir = tmpdir("mid");
+        save(&dir, "r", &one(1.0)).unwrap();
+        save_interrupted(&dir, "r", &one(9.0), 50).unwrap();
+        // The committed checkpoint still loads — with the OLD value.
+        let loaded = load(&dir, "r").unwrap();
+        assert_eq!(loaded, one(1.0));
+        assert!(dir.join("r.bin.tmp").exists(), "mid-write crash leaves a partial tmp");
+    }
+
+    #[test]
+    fn ring_keeps_last_n_and_falls_back_past_corruption() {
+        let dir = tmpdir("ring");
+        let ring = CheckpointRing::new(&dir, "run", 2);
+        ring.save(2, &one(2.0)).unwrap();
+        ring.save(4, &one(4.0)).unwrap();
+        ring.save(6, &one(6.0)).unwrap();
+        let steps: Vec<usize> = ring.entries().iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![4, 6], "keep-last-2 must prune step 2");
+
+        // Newest good first…
+        let (found, diags) = ring.load_latest_good();
+        let (step, tensors) = found.unwrap();
+        assert_eq!((step, tensors), (6, one(6.0)));
+        assert!(diags.is_empty());
+
+        // …corrupt the newest: fall back to step 4 with a diagnostic.
+        let mut data = std::fs::read(ring.blob_path(6)).unwrap();
+        data[3] ^= 0x40;
+        std::fs::write(ring.blob_path(6), &data).unwrap();
+        let (found, diags) = ring.load_latest_good();
+        let (step, tensors) = found.unwrap();
+        assert_eq!((step, tensors), (4, one(4.0)));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].contains("checksum mismatch"), "{}", diags[0]);
+
+        // …corrupt everything: None + two diagnostics, no panic.
+        let p = ring.blob_path(4);
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..2]).unwrap();
+        let (found, diags) = ring.load_latest_good();
+        assert!(found.is_none());
+        assert_eq!(diags.len(), 2);
     }
 
     #[test]

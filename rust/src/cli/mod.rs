@@ -95,7 +95,12 @@ USAGE:
              [--workers N] [--grad-accum N] [--artifacts DIR] [--quiet]
   pamm train --native [--model M] [--steps N] [--batch N] [--seq N]
              [--k N | --r-inv N] [--lr F] [--seed N] [--ckpt-every N]
-             [--resume] [--quiet]
+             [--keep-last N] [--resume] [--quiet]
+                                      # checkpoints are written atomically
+                                      # (tmp+fsync+rename, CRC-checksummed)
+                                      # into a keep-last-N ring; --resume
+                                      # falls back past corrupt entries to
+                                      # the newest one that verifies
   pamm train --quick                  # NATIVE multi-layer next-token
                                       # pretraining smoke (no artifacts):
                                       # model zoo geometry (default nano,
@@ -119,14 +124,31 @@ USAGE:
                                       # otherwise fresh init from --seed
   pamm serve-sim [--requests N] [--max-concurrent N] [--model M]
                  [--k N] [--eps F] [--seed N] [--quick]
+                 [--max-queue N] [--token-budget N]
+                 [--deadline-steps N] [--deadline-ms N]
                                       # continuous-batching simulation over
                                       # a scripted load: FIFO admission by
                                       # (arrival, id), one token per active
                                       # session per step over the task pool
                                       # (streams bit-identical at any
                                       # worker count); prints per-request
-                                      # schedule + latency p50/p95/p99 +
-                                      # tok/s + KV-cache bytes saved
+                                      # schedule + status + latency
+                                      # p50/p95/p99 + tok/s + KV-cache bytes
+                                      # saved. The degradation knobs bound
+                                      # the queue (overflow = shed), clamp
+                                      # per-session tokens (truncated) and
+                                      # impose deadlines (timed-out)
+  pamm chaos [--quick] [--seed N] [--dir DIR]
+                                      # deterministic fault-injection
+                                      # campaign: scripted kills at every
+                                      # checkpoint boundary × phase (quick:
+                                      # one seeded kill), checkpoint bitrot
+                                      # + ring fallback, poisoned serve
+                                      # sessions, burst overload — each
+                                      # verified BITWISE against the
+                                      # fault-free baseline; prints a
+                                      # pass/fail table, exits non-zero on
+                                      # any failure
   pamm finetune --task NAME [--r-inv N] [--steps N] [--seed N]
   pamm reproduce <fig3a|fig3b|table1|table2a|table2b|table3|table4|table5|
                   table6|table7|fig4a|fig4b|fig5|fig6|fig7|attention|all>

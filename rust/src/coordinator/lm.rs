@@ -25,12 +25,27 @@
 //! (property-tested in `rust/tests/prop_model.rs`). Combined with the
 //! kernel contracts below, the whole training run is reproducible from
 //! `(seed, steps)` at any thread count and SIMD dispatch level.
+//!
+//! # Crash recovery (DESIGN.md §9)
+//!
+//! PR 7 extends the resume contract from "user restarted cleanly" to
+//! "process died at an arbitrary step": checkpoints go through a
+//! [`checkpoint::CheckpointRing`] (atomic writes, CRC32-verified,
+//! last-N retained), the run log is fsynced at every checkpoint
+//! boundary, and [`train_lm_supervised`] wraps the run loop — catching
+//! [`faultx::InjectedCrash`] kills, re-opening the ring, resuming from
+//! the newest checkpoint that *verifies* (corrupted entries are
+//! skipped with a diagnostic) and replaying to completion. The
+//! recovered trajectory is bitwise identical to the uninterrupted
+//! run's at every kill point (`rust/tests/prop_faults.rs`,
+//! `pamm chaos`).
 
 use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::checkpoint;
+use crate::checkpoint::{self, CheckpointRing};
+use crate::faultx::{self, CrashPhase, InjectedCrash};
 use crate::coordinator::trainer::{NativeOpt, TrainOutcome};
 use crate::data::batcher::BatchIterator;
 use crate::jsonx;
@@ -127,13 +142,18 @@ impl LmTrainer {
     /// One full training step on a packed `(batch, seq+1)` token row
     /// block (the [`crate::data::batcher::TokenBatch`] layout):
     /// `tokens[:, :-1]` are the inputs, `tokens[:, 1:]` the targets.
+    ///
+    /// Fails — with the parameters, Adam moments and step counter
+    /// untouched — if the loss or any gradient is non-finite (the
+    /// divergence guard: a NaN that reaches the optimizer would
+    /// silently corrupt the moments and every subsequent step).
     pub fn train_step(
         &mut self,
         tokens: &[i32],
         pool: &Pool,
         ledger: Option<&MemoryLedger>,
-    ) -> f32 {
-        self.step_report(kernels::active(), tokens, pool, ledger).loss
+    ) -> Result<f32> {
+        Ok(self.step_report(kernels::active(), tokens, pool, ledger)?.loss)
     }
 
     /// [`LmTrainer::train_step`] with an explicit dispatch level,
@@ -144,12 +164,14 @@ impl LmTrainer {
         tokens: &[i32],
         pool: &Pool,
         ledger: Option<&MemoryLedger>,
-    ) -> LmStepReport {
+    ) -> Result<LmStepReport> {
         let (batch, seq) = (self.batch, self.seq);
-        assert_eq!(
-            tokens.len(),
-            batch * (seq + 1),
-            "lm step: expected a packed (batch, seq+1) token block"
+        ensure!(
+            tokens.len() == batch * (seq + 1),
+            "lm step: expected a packed (batch, seq+1) = {}x{} token block, got {} tokens",
+            batch,
+            seq + 1,
+            tokens.len()
         );
         let mut inputs = Vec::with_capacity(batch * seq);
         let mut targets = Vec::with_capacity(batch * seq);
@@ -170,17 +192,29 @@ impl LmTrainer {
             pool,
             ledger,
         );
+        // Divergence guard, stage 1: a non-finite loss means the
+        // forward already blew up — refuse before touching any state.
+        ensure!(
+            loss.is_finite(),
+            "non-finite loss ({loss}) at step {}: training diverged; \
+             parameters and optimizer moments left untouched",
+            self.step_no + 1
+        );
         let saved_bytes = tape.saved_bytes();
         let inventory = model::saved_inventory(&tape, self.model.cfg.n_layers);
         let res = tape.backward(d, &self.model.params, pool, ledger);
+        // Stage 2: a finite loss can still backprop into Inf/NaN
+        // gradients (overflow in the chain products). Scan before the
+        // update and name the offending parameter.
+        check_finite_grads(&model::param_names(&self.model.cfg), &res.params, self.step_no + 1)?;
         self.step_no += 1;
-        self.apply_update(&res.params);
-        LmStepReport { loss, saved_bytes, inventory }
+        self.apply_update(&res.params)?;
+        Ok(LmStepReport { loss, saved_bytes, inventory })
     }
 
     /// Fixed-order scalar f32 optimizer update over the flat parameter
     /// vector — bit-identical given bit-identical gradients.
-    fn apply_update(&mut self, grads: &[Mat]) {
+    fn apply_update(&mut self, grads: &[Mat]) -> Result<()> {
         let t = self.step_no;
         match self.opt {
             NativeOpt::Sgd { lr } => {
@@ -191,7 +225,10 @@ impl LmTrainer {
                 }
             }
             NativeOpt::Adam { lr, beta1, beta2, eps } => {
-                let moments = self.moments.as_mut().expect("adam state");
+                let moments = self
+                    .moments
+                    .as_mut()
+                    .context("adam update without moment state (trainer invariant broken)")?;
                 let bc1 = 1.0 - beta1.powi(t as i32);
                 let bc2 = 1.0 - beta2.powi(t as i32);
                 for ((p, g), st) in self.model.params.iter_mut().zip(grads).zip(moments) {
@@ -211,13 +248,17 @@ impl LmTrainer {
                 }
             }
         }
+        Ok(())
     }
 
     // -- checkpointing ------------------------------------------------------
 
-    /// Save parameters + optimizer moments + step counter + generator
-    /// RNG state under `dir/name.{bin,json}`.
-    pub fn save_checkpoint(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+    /// The full trainer state as named tensors — everything a
+    /// checkpoint must carry for bit-exact resume: parameters, Adam
+    /// moments, step counter, generator RNG state and the run
+    /// hyperparameters ([`LmTrainer::restore_from`] refuses a
+    /// mismatch).
+    pub fn checkpoint_tensors(&self) -> Vec<(String, HostTensor)> {
         let names = model::param_names(&self.model.cfg);
         let mut tensors: Vec<(String, HostTensor)> = Vec::with_capacity(
             self.model.params.len() * if self.moments.is_some() { 3 } else { 1 } + 2,
@@ -240,7 +281,14 @@ impl LmTrainer {
         // and generator sampling) and the optimizer constants.
         tensors.push(("meta.geom".into(), HostTensor::i32(vec![5], self.geom_words())));
         tensors.push(("meta.opt".into(), HostTensor::f32(vec![5], opt_words(self.opt))));
-        checkpoint::save(dir, name, &tensors)
+        tensors
+    }
+
+    /// Save parameters + optimizer moments + step counter + generator
+    /// RNG state under `dir/name.{bin,json}` (crash-safe:
+    /// [`checkpoint::save`] writes atomically with checksums).
+    pub fn save_checkpoint(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        checkpoint::save(dir, name, &self.checkpoint_tensors())
     }
 
     /// Restore a checkpoint written by [`LmTrainer::save_checkpoint`]
@@ -250,6 +298,13 @@ impl LmTrainer {
     /// [`LmTrainer::step_no`] batches).
     pub fn resume(&mut self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
         let loaded = checkpoint::load(dir, name)?;
+        self.restore_from(loaded)
+    }
+
+    /// Restore from already-loaded checkpoint tensors (the ring
+    /// recovery path, where [`CheckpointRing::load_latest_good`]
+    /// verified and loaded the newest good entry).
+    pub fn restore_from(&mut self, loaded: Vec<(String, HostTensor)>) -> Result<()> {
         let map: std::collections::BTreeMap<String, HostTensor> = loaded.into_iter().collect();
         let names = model::param_names(&self.model.cfg);
         let restore = |dst: &mut Mat, key: &str| -> Result<()> {
@@ -323,6 +378,23 @@ impl LmTrainer {
     }
 }
 
+/// Divergence guard, stage 2: refuse a gradient vector containing a
+/// NaN/Inf, naming the first offending parameter (`names` follows
+/// [`model::param_names`] order). Runs *before* `step_no` and the
+/// optimizer update mutate, so a failed step leaves the trainer
+/// exactly as it was.
+fn check_finite_grads(names: &[String], grads: &[Mat], step: usize) -> Result<()> {
+    for (name, g) in names.iter().zip(grads) {
+        if let Some((i, bad)) = g.data().iter().enumerate().find(|(_, v)| !v.is_finite()) {
+            bail!(
+                "non-finite gradient ({bad}) in `{name}`[{i}] at step {step}: training \
+                 diverged; parameters and optimizer moments left untouched"
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Optimizer constants as a flat f32 tensor (`[kind, lr, β1, β2, ε]`;
 /// kind 0 = SGD, 1 = Adam) — checkpointed so resume can refuse a
 /// hyperparameter mismatch that would break bit-exactness.
@@ -368,10 +440,90 @@ pub struct LmRunConfig {
     pub seed: u64,
     /// Checkpoint every N optimizer steps (0 = only the final one).
     pub ckpt_every: usize,
+    /// Ring retention: keep the last N boundary checkpoints (clamped
+    /// to ≥ 1) so recovery can fall back past a corrupted newest.
+    pub keep_last: usize,
     pub run_dir: String,
     pub run_name: String,
-    /// Resume from `run_dir/ckpt/run_name` if that checkpoint exists.
+    /// Resume from the newest verifying ring entry under
+    /// `run_dir/ckpt` (falling back to the plain `run_name`
+    /// checkpoint from pre-ring runs) if one exists.
     pub resume: bool,
+}
+
+/// The checkpoint-boundary steps of a run — every
+/// `ckpt_every`-divisible completed-step count plus the final step.
+/// This is the site list fault plans are sampled from
+/// ([`faultx::FaultPlan::sample_train`]).
+pub fn checkpoint_boundaries(rc: &LmRunConfig) -> Vec<usize> {
+    let mut out = Vec::new();
+    if rc.ckpt_every > 0 {
+        let mut s = rc.ckpt_every;
+        while s < rc.steps {
+            out.push(s);
+            s += rc.ckpt_every;
+        }
+    }
+    out.push(rc.steps);
+    out
+}
+
+/// What [`train_lm_native_run`] produced beyond the outcome: where it
+/// resumed from (if it did) and the ring-recovery diagnostics (every
+/// corrupted/truncated entry that had to be skipped).
+#[derive(Debug)]
+pub struct LmRunReport {
+    pub outcome: TrainOutcome,
+    pub resumed_from: Option<usize>,
+    pub recovery_diags: Vec<String>,
+}
+
+/// Write the boundary checkpoint for `step` — ring entry (+ the plain
+/// `run_name` checkpoint at the final boundary) — then fsync the run
+/// log (the `RunLogger` durability contract: every row up to a
+/// checkpoint is on disk before the checkpoint is trusted). An armed
+/// [`faultx::TrainFault`] for this boundary turns the call into the
+/// scripted kill instead: before / halfway through / right after the
+/// write, surfacing as an [`InjectedCrash`] error.
+fn write_boundary_checkpoint(
+    t: &LmTrainer,
+    rc: &LmRunConfig,
+    ring: &CheckpointRing,
+    logger: &mut RunLogger,
+    step: usize,
+    fault: Option<&faultx::TrainFault>,
+) -> Result<()> {
+    let armed = fault.filter(|f| f.step == step);
+    if let Some(f) = armed {
+        match f.phase {
+            CrashPhase::BeforeCheckpoint => {
+                logger.sync()?;
+                return Err(InjectedCrash { step, phase: f.phase }.into());
+            }
+            CrashPhase::MidCheckpointWrite => {
+                checkpoint::save_interrupted(
+                    ring.dir(),
+                    &ring.entry_name(step),
+                    &t.checkpoint_tensors(),
+                    50,
+                )?;
+                logger.sync()?;
+                return Err(InjectedCrash { step, phase: f.phase }.into());
+            }
+            CrashPhase::AfterCheckpoint => {}
+        }
+    }
+    let tensors = t.checkpoint_tensors();
+    ring.save(step, &tensors).with_context(|| format!("checkpoint boundary {step}"))?;
+    if step == rc.steps {
+        checkpoint::save(ring.dir(), &rc.run_name, &tensors)
+            .with_context(|| format!("final checkpoint `{}`", rc.run_name))?;
+    }
+    logger.sync()?;
+    if let Some(f) = armed {
+        return Err(InjectedCrash { step, phase: f.phase }.into());
+    }
+    Ok(())
 }
 
 /// Native next-token pretraining end to end: tokenizer + packed
@@ -380,15 +532,49 @@ pub struct LmRunConfig {
 /// the standard [`TrainOutcome`] (curve subsampled like the PJRT
 /// trainer; with ≤ 50 steps every step is on the curve).
 pub fn train_lm_native(rc: &LmRunConfig, pool: &Pool, quiet: bool) -> Result<TrainOutcome> {
+    Ok(train_lm_native_run(rc, None, pool, quiet)?.outcome)
+}
+
+/// [`train_lm_native`] with an optional armed training fault — the
+/// fault-injection entry point the supervisor and `pamm chaos` drive.
+/// With `fault: None` this *is* the production run loop; the injection
+/// sites cost one comparison per checkpoint boundary.
+pub fn train_lm_native_run(
+    rc: &LmRunConfig,
+    fault: Option<&faultx::TrainFault>,
+    pool: &Pool,
+    quiet: bool,
+) -> Result<LmRunReport> {
     ensure!(rc.steps > 0, "lm train: steps must be > 0");
     let mut t = LmTrainer::new(rc.cfg.clone(), rc.batch, rc.seq, rc.k, rc.opt, rc.seed);
     let ckpt_dir = format!("{}/ckpt", rc.run_dir);
-    let mut resumed = false;
-    if rc.resume && Path::new(&ckpt_dir).join(format!("{}.json", rc.run_name)).exists() {
-        t.resume(&ckpt_dir, &rc.run_name)?;
-        resumed = true;
-        if !quiet {
-            println!("resumed `{}` at step {}", rc.run_name, t.step_no());
+    let ring = CheckpointRing::new(&ckpt_dir, &rc.run_name, rc.keep_last);
+    let mut resumed_from = None;
+    let mut recovery_diags = Vec::new();
+    if rc.resume {
+        let (found, diags) = ring.load_latest_good();
+        for d in &diags {
+            if !quiet {
+                println!("recovery: {d}");
+            }
+        }
+        recovery_diags = diags;
+        match found {
+            Some((_, tensors)) => {
+                t.restore_from(tensors)?;
+                resumed_from = Some(t.step_no());
+            }
+            None => {
+                // Pre-ring runs left only the plain `run_name`
+                // checkpoint; honor it so old run dirs stay resumable.
+                if Path::new(&ckpt_dir).join(format!("{}.json", rc.run_name)).exists() {
+                    t.resume(&ckpt_dir, &rc.run_name)?;
+                    resumed_from = Some(t.step_no());
+                }
+            }
+        }
+        if let (Some(s), false) = (resumed_from, quiet) {
+            println!("resumed `{}` at step {s}", rc.run_name);
         }
     }
     ensure!(
@@ -400,17 +586,25 @@ pub fn train_lm_native(rc: &LmRunConfig, pool: &Pool, quiet: bool) -> Result<Tra
     if t.step_no() == rc.steps {
         // Already complete: nothing to train, nothing to (re)log — and
         // the caller gets an empty curve it must not index blindly.
+        // (A kill right after the final ring entry landed can still
+        // have lost the plain checkpoint — rewrite it; the state is
+        // bit-identical so the overwrite is idempotent.)
+        checkpoint::save(&ckpt_dir, &rc.run_name, &t.checkpoint_tensors())?;
         if !quiet {
             println!("run `{}` is already at its final step {} — nothing to do", rc.run_name, rc.steps);
         }
-        return Ok(TrainOutcome {
-            run_name: rc.run_name.clone(),
-            steps: rc.steps,
-            final_loss: f32::NAN,
-            final_eval_loss: None,
-            final_ppl: None,
-            tokens_per_sec: None,
-            curve: Vec::new(),
+        return Ok(LmRunReport {
+            outcome: TrainOutcome {
+                run_name: rc.run_name.clone(),
+                steps: rc.steps,
+                final_loss: f32::NAN,
+                final_eval_loss: None,
+                final_ppl: None,
+                tokens_per_sec: None,
+                curve: Vec::new(),
+            },
+            resumed_from,
+            recovery_diags,
         });
     }
 
@@ -422,7 +616,7 @@ pub fn train_lm_native(rc: &LmRunConfig, pool: &Pool, quiet: bool) -> Result<Tra
     // it (training replays them bit-identically; the EMA column
     // restarts from the first replayed loss — it is presentation-only
     // smoothing, not training state).
-    let mut logger = if resumed {
+    let mut logger = if resumed_from.is_some() {
         let mut l = RunLogger::append(&rc.run_dir, &rc.run_name)?;
         l.log_resume(t.step_no())?;
         l
@@ -436,7 +630,9 @@ pub fn train_lm_native(rc: &LmRunConfig, pool: &Pool, quiet: bool) -> Result<Tra
 
     for s in t.step_no()..rc.steps {
         let b = it.next_batch();
-        let loss = t.train_step(&b.tokens, pool, None);
+        let loss = t
+            .train_step(&b.tokens, pool, None)
+            .with_context(|| format!("run `{}` step {s}", rc.run_name))?;
         meter.step(b.n_tokens());
         last_loss = loss;
         let sm = ema.update(loss as f64);
@@ -455,10 +651,10 @@ pub fn train_lm_native(rc: &LmRunConfig, pool: &Pool, quiet: bool) -> Result<Tra
             }
         }
         if rc.ckpt_every > 0 && (s + 1) % rc.ckpt_every == 0 && s + 1 < rc.steps {
-            t.save_checkpoint(&ckpt_dir, &rc.run_name)?;
+            write_boundary_checkpoint(&t, rc, &ring, &mut logger, s + 1, fault)?;
         }
     }
-    t.save_checkpoint(&ckpt_dir, &rc.run_name)?;
+    write_boundary_checkpoint(&t, rc, &ring, &mut logger, rc.steps, fault)?;
 
     let tok_s = meter.tokens_per_sec();
     logger.log_summary(vec![
@@ -469,15 +665,116 @@ pub fn train_lm_native(rc: &LmRunConfig, pool: &Pool, quiet: bool) -> Result<Tra
         ("tok_s", tok_s.map(jsonx::num).unwrap_or(jsonx::Value::Null)),
     ])?;
 
-    Ok(TrainOutcome {
-        run_name: rc.run_name.clone(),
-        steps: rc.steps,
-        final_loss: last_loss,
-        final_eval_loss: None,
-        final_ppl: None,
-        tokens_per_sec: tok_s,
-        curve,
+    Ok(LmRunReport {
+        outcome: TrainOutcome {
+            run_name: rc.run_name.clone(),
+            steps: rc.steps,
+            final_loss: last_loss,
+            final_eval_loss: None,
+            final_ppl: None,
+            tokens_per_sec: tok_s,
+            curve,
+        },
+        resumed_from,
+        recovery_diags,
     })
+}
+
+// ---------------------------------------------------------------------------
+// The crash supervisor
+// ---------------------------------------------------------------------------
+
+/// What a supervised (crash-recovering) run went through on its way
+/// to the final [`TrainOutcome`].
+#[derive(Debug)]
+pub struct SupervisedOutcome {
+    pub outcome: TrainOutcome,
+    /// Total run-loop launches (1 = no crash fired).
+    pub attempts: usize,
+    /// Every injected kill that was caught, in firing order.
+    pub crashes: Vec<InjectedCrash>,
+    /// Step each recovery resumed from (one per successful fallback).
+    pub resume_steps: Vec<usize>,
+    /// Ring diagnostics: every corrupted/truncated entry skipped, plus
+    /// the injected-corruption notes.
+    pub recovery_diags: Vec<String>,
+}
+
+/// Supervise [`train_lm_native_run`] under a [`faultx::FaultPlan`]:
+/// run, catch the injected kill, re-open the ring, resume from the
+/// newest checkpoint that verifies, repeat until the run completes.
+/// Attempt `i` arms `plan.crashes[i]` (ascending steps, so each kill
+/// fires after the previous recovery has replayed past it); if the
+/// plan scripts checkpoint corruption, the newest ring entry gets a
+/// seeded bit flip before the corresponding recovery — forcing the
+/// checksum-detect + fall-back path. A *real* error (not an
+/// [`InjectedCrash`]) propagates immediately.
+///
+/// Because resume is bit-exact and the batch/generator streams are
+/// pure functions of `(seed, step)`, the returned outcome is bitwise
+/// identical to the crash-free run's — the property `pamm chaos` and
+/// `prop_faults.rs` assert at every kill point.
+pub fn train_lm_supervised(
+    rc: &LmRunConfig,
+    plan: &faultx::FaultPlan,
+    pool: &Pool,
+    quiet: bool,
+) -> Result<SupervisedOutcome> {
+    let mut rc2 = rc.clone();
+    let ckpt_dir = format!("{}/ckpt", rc.run_dir);
+    let ring = CheckpointRing::new(&ckpt_dir, &rc.run_name, rc.keep_last);
+    let mut crashes: Vec<InjectedCrash> = Vec::new();
+    let mut resume_steps = Vec::new();
+    let mut recovery_diags = Vec::new();
+    // Every armed crash fires at most once, so crashes.len() + 1
+    // launches always suffice; the bound exists so a supervisor bug
+    // cannot loop forever.
+    let max_attempts = plan.crashes.len() + 1;
+    for attempt in 0..max_attempts {
+        let fault = plan.crashes.get(crashes.len());
+        match train_lm_native_run(&rc2, fault, pool, quiet) {
+            Ok(rep) => {
+                if let Some(s) = rep.resumed_from {
+                    resume_steps.push(s);
+                }
+                recovery_diags.extend(rep.recovery_diags);
+                return Ok(SupervisedOutcome {
+                    outcome: rep.outcome,
+                    attempts: attempt + 1,
+                    crashes,
+                    resume_steps,
+                    recovery_diags,
+                });
+            }
+            Err(e) => {
+                let Some(crash) = faultx::injected_crash(&e) else {
+                    return Err(e);
+                };
+                if !quiet {
+                    println!("supervisor: caught {crash}; recovering from the ring");
+                }
+                if plan.corrupt_after_attempt == Some(crashes.len()) {
+                    // Scripted bitrot: flip one seeded bit in the
+                    // newest committed ring entry (if any) so the
+                    // recovery must detect it and fall back.
+                    if let Some(&(step, _)) = ring.entries().last() {
+                        let mut rng =
+                            crate::rngx::Xoshiro256::fold_in(plan.seed, 0xB17F, crashes.len() as u64);
+                        let (byte, bit) = faultx::flip_bit_in_file(ring.blob_path(step), &mut rng)?;
+                        recovery_diags.push(format!(
+                            "injected corruption: flipped bit {bit} of byte {byte} in ring entry step {step}"
+                        ));
+                    }
+                }
+                crashes.push(crash);
+                rc2.resume = true;
+            }
+        }
+    }
+    bail!(
+        "supervisor: plan with {} crash(es) did not converge within {max_attempts} attempts",
+        plan.crashes.len()
+    )
 }
 
 #[cfg(test)]
@@ -511,7 +808,7 @@ mod tests {
         let mut tail = Vec::new();
         for s in 0..steps {
             let b = it.next_batch();
-            let loss = t.train_step(&b.tokens, &pool, None);
+            let loss = t.train_step(&b.tokens, &pool, None).unwrap();
             if s == 0 {
                 first = loss;
             }
@@ -545,7 +842,7 @@ mod tests {
         let pool = Pool::serial();
         for _ in 0..3 {
             let b = it.next_batch();
-            a.train_step(&b.tokens, &pool, None);
+            a.train_step(&b.tokens, &pool, None).unwrap();
         }
         a.save_checkpoint(&dir, "t").unwrap();
 
@@ -575,5 +872,97 @@ mod tests {
         let mut f = LmTrainer::new(cfg, batch, seq, 4, NativeOpt::adam(1e-3), 10);
         assert!(f.resume(&dir, "t").is_err(), "seed mismatch must be refused");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn divergent_batch_fails_the_step_and_leaves_state_untouched() {
+        let cfg = tiny_cfg();
+        let (batch, seq) = (1usize, 12usize);
+        let mut t = LmTrainer::new(cfg.clone(), batch, seq, 4, NativeOpt::adam(1e-3), 3);
+        let mut it = BatchIterator::from_seed(cfg.vocab, batch, seq, 3);
+        let pool = Pool::serial();
+        // One healthy step so the moments are non-trivial.
+        let b = it.next_batch();
+        t.train_step(&b.tokens, &pool, None).unwrap();
+
+        // Craft divergence: a NaN lands in a block weight (the state a
+        // diverged update leaves behind); the very next forward must
+        // produce a non-finite loss.
+        t.model.params[3].data_mut()[0] = f32::NAN; // blk0.wq
+        let params_before: Vec<Vec<u32>> = t
+            .model
+            .params
+            .iter()
+            .map(|p| p.data().iter().map(|v| v.to_bits()).collect())
+            .collect();
+        let moments_before: Vec<(Vec<u32>, Vec<u32>)> = t
+            .moments
+            .as_ref()
+            .unwrap()
+            .iter()
+            .map(|st| {
+                (
+                    st.m.data().iter().map(|v| v.to_bits()).collect(),
+                    st.v.data().iter().map(|v| v.to_bits()).collect(),
+                )
+            })
+            .collect();
+        let rng_before = t.rng.state();
+
+        let b = it.next_batch();
+        let err = t.train_step(&b.tokens, &pool, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite loss"), "{msg}");
+        assert!(msg.contains("step 2"), "error must name the failing step: {msg}");
+
+        // The guard's whole point: nothing the optimizer owns moved.
+        assert_eq!(t.step_no(), 1, "a failed step must not count");
+        for (p, before) in t.model.params.iter().zip(&params_before) {
+            let now: Vec<u32> = p.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(&now, before, "params must be bitwise untouched");
+        }
+        for (st, (m, v)) in t.moments.as_ref().unwrap().iter().zip(&moments_before) {
+            let mn: Vec<u32> = st.m.data().iter().map(|x| x.to_bits()).collect();
+            let vn: Vec<u32> = st.v.data().iter().map(|x| x.to_bits()).collect();
+            assert_eq!((&mn, &vn), (m, v), "moments must be bitwise untouched");
+        }
+        // (The generator stream advanced — sampling happened inside
+        // the forward — which is fine: the run is dead either way.)
+        assert_ne!(t.rng.state(), rng_before);
+    }
+
+    #[test]
+    fn grad_guard_names_the_offending_parameter() {
+        let names = vec!["emb".to_string(), "blk0.wq".to_string()];
+        let good = Mat::zeros(2, 2);
+        let mut bad = Mat::zeros(2, 2);
+        bad.data_mut()[3] = f32::INFINITY;
+        let err = check_finite_grads(&names, &[good.clone(), bad], 7).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("`blk0.wq`[3]"), "{msg}");
+        assert!(msg.contains("step 7"), "{msg}");
+        assert!(check_finite_grads(&names, &[good.clone(), good], 7).is_ok());
+    }
+
+    #[test]
+    fn boundaries_cover_periodic_and_final_steps() {
+        let rc = |steps: usize, every: usize| LmRunConfig {
+            cfg: tiny_cfg(),
+            batch: 1,
+            seq: 8,
+            steps,
+            k: 4,
+            opt: NativeOpt::adam(1e-3),
+            seed: 1,
+            ckpt_every: every,
+            keep_last: 3,
+            run_dir: "/tmp/unused".into(),
+            run_name: "unused".into(),
+            resume: false,
+        };
+        assert_eq!(checkpoint_boundaries(&rc(8, 2)), vec![2, 4, 6, 8]);
+        assert_eq!(checkpoint_boundaries(&rc(8, 3)), vec![3, 6, 8]);
+        assert_eq!(checkpoint_boundaries(&rc(8, 0)), vec![8], "ckpt_every=0 ⇒ final only");
+        assert_eq!(checkpoint_boundaries(&rc(4, 4)), vec![4], "no duplicate final boundary");
     }
 }

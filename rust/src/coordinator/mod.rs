@@ -33,7 +33,12 @@
 //!   training of `model::TransformerLM` on `data::BatchIterator`
 //!   batches through the multi-op graph tape, with SGD/Adam, periodic
 //!   checkpoints and bit-exact resume — the `pamm train --native` /
-//!   `--quick` engine (no artifacts needed).
+//!   `--quick` engine (no artifacts needed). PR 7 wraps the run loop
+//!   in a crash supervisor ([`lm::train_lm_supervised`]): injected
+//!   kills from a `faultx::FaultPlan` are caught, recovery falls back
+//!   to the newest *verifying* ring checkpoint, and the recovered
+//!   trajectory is bitwise identical to the uninterrupted one
+//!   (DESIGN.md §9, `pamm chaos`).
 
 pub mod ddp;
 pub mod lm;
@@ -42,8 +47,14 @@ pub mod serve;
 pub mod session;
 pub mod trainer;
 
-pub use lm::{train_lm_native, LmRunConfig, LmStepReport, LmTrainer};
-pub use serve::{serve, scripted_load, Completion, ServeConfig, ServeOutcome, ServeRequest};
+pub use lm::{
+    checkpoint_boundaries, train_lm_native, train_lm_native_run, train_lm_supervised, LmRunConfig,
+    LmRunReport, LmStepReport, LmTrainer, SupervisedOutcome,
+};
+pub use serve::{
+    serve, serve_faulted, scripted_load, Completion, ServeConfig, ServeOutcome, ServeRequest,
+    SessionStatus, ShedRequest,
+};
 pub use session::GenSession;
 #[cfg(feature = "pjrt")]
 pub use session::{ClassifierSession, TrainSession};

@@ -1,4 +1,5 @@
-//! Continuous-batching serve loop over [`GenSession`]s (DESIGN.md §8).
+//! Continuous-batching serve loop over [`GenSession`]s (DESIGN.md §8;
+//! graceful degradation §9).
 //!
 //! The simulator plays a scripted request load against one shared
 //! [`TransformerLM`]: requests become visible at their `arrival` step,
@@ -20,11 +21,28 @@
 //! (`rust/tests/prop_serve.rs` asserts 1 == 2 == 4 workers, and that
 //! each stream equals a standalone [`generate::Decoder`] run).
 //!
+//! **Graceful degradation.** Instead of panicking or stalling, the
+//! loop accounts for every request with a [`SessionStatus`]: malformed
+//! requests are `Rejected` up front (empty prompt, zero tokens,
+//! out-of-vocab ids), arrivals past a bounded queue are shed
+//! ([`ServeOutcome::shed`]), sessions past their per-session token
+//! budget complete `Truncated`, sessions past a step/wall deadline
+//! complete `TimedOut` with their partial stream, and a session whose
+//! decode produces non-finite logits is `Quarantined` with a
+//! diagnostic — its clean token prefix retained, its NaN never
+//! emitted ([`GenSession::advance`] refuses to emit from non-finite
+//! logits). Because streams are pure per-session functions, every
+//! *surviving* stream stays bit-identical to its fault-free run — the
+//! isolation property `prop_faults.rs` checks at 1/2/4 workers.
+//!
 //! Wall-clock per-request latency (arrival-visible → final token,
 //! queueing included) feeds the nearest-rank percentile summary
 //! ([`benchx::percentile`]) the `pamm serve-sim` table renders next to
 //! tokens/s and the compressed-vs-dense cache savings.
+//!
+//! [`generate::Decoder`]: crate::generate::Decoder
 
+use std::collections::VecDeque;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -32,6 +50,7 @@ use anyhow::{ensure, Result};
 
 use crate::benchx;
 use crate::coordinator::session::GenSession;
+use crate::faultx::FaultPlan;
 use crate::model::TransformerLM;
 use crate::pamm::Eps;
 use crate::poolx::Pool;
@@ -47,7 +66,9 @@ pub struct ServeRequest {
 }
 
 /// Serve-loop knobs. `seed` is folded with each request id so every
-/// session draws its own generator stream deterministically.
+/// session draws its own generator stream deterministically. The
+/// hardening knobs ([`ServeConfig::new`] defaults them off) bound the
+/// queue, the per-session token count and the per-session lifetime.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
     /// Admission cap: at most this many sessions decode concurrently.
@@ -57,19 +78,82 @@ pub struct ServeConfig {
     /// Neighborhood condition for the caches.
     pub eps: Eps,
     pub seed: u64,
+    /// Bounded admission queue: at most this many visible-but-waiting
+    /// requests; arrivals beyond it are shed (0 = unbounded).
+    pub max_queue: usize,
+    /// Per-session token budget: `max_new` is clamped to this and the
+    /// completion marked [`SessionStatus::Truncated`] (0 = no cap).
+    pub token_budget: usize,
+    /// Deterministic deadline: a session still running after this many
+    /// serve steps completes [`SessionStatus::TimedOut`] with its
+    /// partial stream (0 = none).
+    pub deadline_steps: usize,
+    /// Wall-clock deadline per session (admission → now). Inherently
+    /// non-deterministic — a CLI knob, not a test knob.
+    pub deadline: Option<Duration>,
 }
 
-/// One finished request with its schedule and cache accounting.
+impl ServeConfig {
+    /// The fault-free configuration used everywhere before PR 7:
+    /// unbounded queue, no budget, no deadlines.
+    pub fn new(max_concurrent: usize, k: usize, eps: Eps, seed: u64) -> ServeConfig {
+        ServeConfig {
+            max_concurrent,
+            k,
+            eps,
+            seed,
+            max_queue: 0,
+            token_budget: 0,
+            deadline_steps: 0,
+            deadline: None,
+        }
+    }
+}
+
+/// How a request's service ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// Ran to its requested `max_new` tokens.
+    Ok,
+    /// Completed, but the token budget clamped it below `max_new`.
+    Truncated,
+    /// Deadline fired first; the stream is the partial prefix.
+    TimedOut,
+    /// Non-finite logits — isolated with its clean token prefix.
+    Quarantined,
+    /// Malformed request, never admitted (empty prompt, zero tokens,
+    /// out-of-vocab ids).
+    Rejected,
+}
+
+impl SessionStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            SessionStatus::Ok => "ok",
+            SessionStatus::Truncated => "truncated",
+            SessionStatus::TimedOut => "timed-out",
+            SessionStatus::Quarantined => "quarantined",
+            SessionStatus::Rejected => "rejected",
+        }
+    }
+}
+
+/// One finished request with its schedule, status and cache accounting.
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: usize,
     pub arrival: usize,
-    /// Step at which the session was admitted (== prefill step).
+    /// Step at which the session was admitted (== prefill step; the
+    /// visibility step for `Rejected`).
     pub admitted_step: usize,
-    /// Step at which the final token was emitted.
+    /// Step at which the final token was emitted (or the session was
+    /// retired).
     pub finished_step: usize,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
+    pub status: SessionStatus,
+    /// Human-readable reason for any non-`Ok` status.
+    pub diag: Option<String>,
     /// Arrival-visible → final token, queueing included.
     pub latency: Duration,
     /// Measured compressed-cache peak (== the analytic bound).
@@ -78,11 +162,22 @@ pub struct Completion {
     pub cache_saved_bytes: usize,
 }
 
+/// A request dropped by the bounded admission queue — it never ran.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedRequest {
+    pub id: usize,
+    pub arrival: usize,
+    /// Step at which the full queue turned it away.
+    pub shed_step: usize,
+}
+
 /// Everything the simulation measured. `completions` is ordered by
 /// `(finished_step, id)` — the completion order itself.
 #[derive(Debug)]
 pub struct ServeOutcome {
     pub completions: Vec<Completion>,
+    /// Requests the bounded queue turned away (empty when unbounded).
+    pub shed: Vec<ShedRequest>,
     /// Serve steps executed (idle gaps between arrivals are skipped).
     pub steps: usize,
     pub wall: Duration,
@@ -101,15 +196,41 @@ impl ServeOutcome {
         self.completions.iter().map(|c| c.cache_saved_bytes).sum()
     }
 
-    /// Nearest-rank latency percentile (`p` in `[0, 1]`).
+    /// Completions that ended with `status`.
+    pub fn count(&self, status: SessionStatus) -> usize {
+        self.completions.iter().filter(|c| c.status == status).count()
+    }
+
+    /// Nearest-rank latency percentile (`p` in `[0, 1]`) over the
+    /// requests that actually ran (rejected/shed ones never queued).
     pub fn latency_percentile(&self, p: f64) -> Duration {
-        let mut lats: Vec<Duration> = self.completions.iter().map(|c| c.latency).collect();
+        let mut lats: Vec<Duration> = self
+            .completions
+            .iter()
+            .filter(|c| c.status != SessionStatus::Rejected)
+            .map(|c| c.latency)
+            .collect();
         if lats.is_empty() {
             return Duration::ZERO;
         }
         lats.sort_unstable();
         benchx::percentile(&lats, p)
     }
+}
+
+/// Why a request cannot be admitted, if it cannot be.
+fn validate_request(model: &TransformerLM, r: &ServeRequest) -> Option<String> {
+    if r.prompt.is_empty() {
+        return Some("empty prompt".into());
+    }
+    if r.max_new == 0 {
+        return Some("zero tokens requested".into());
+    }
+    let vocab = model.cfg.vocab as i32;
+    if let Some(&bad) = r.prompt.iter().find(|&&t| t < 0 || t >= vocab) {
+        return Some(format!("prompt token {bad} outside vocab 0..{vocab}"));
+    }
+    None
 }
 
 /// Run the scripted load to completion. Requests must have unique ids;
@@ -119,6 +240,21 @@ pub fn serve(
     model: &TransformerLM,
     cfg: &ServeConfig,
     requests: &[ServeRequest],
+    pool: &Pool,
+) -> Result<ServeOutcome> {
+    serve_faulted(model, cfg, requests, None, pool)
+}
+
+/// [`serve`] with an optional [`FaultPlan`]: each scripted
+/// [`crate::faultx::PoisonSite`] turns the matching session's logits
+/// non-finite once it has emitted `after_tokens` tokens — the health
+/// check must then quarantine it while every other stream is
+/// untouched. With `plan: None` this *is* the production loop.
+pub fn serve_faulted(
+    model: &TransformerLM,
+    cfg: &ServeConfig,
+    requests: &[ServeRequest],
+    plan: Option<&FaultPlan>,
     pool: &Pool,
 ) -> Result<ServeOutcome> {
     ensure!(cfg.max_concurrent > 0, "serve: max_concurrent must be ≥ 1");
@@ -132,53 +268,81 @@ pub fn serve(
     pending.sort_by_key(|r| (r.arrival, r.id));
     pending.reverse();
 
+    struct Active<'m> {
+        sess: GenSession<'m>,
+        admitted_step: usize,
+        seen: Instant,
+        /// `max_new` the request asked for (the session's own may be
+        /// budget-clamped below it).
+        requested: usize,
+    }
+
     let t0 = Instant::now();
     let task_pool = pool.for_tasks();
     let inner = Pool::serial();
-    let mut active: Vec<(GenSession<'_>, usize, Instant)> = Vec::new(); // (session, admitted_step, seen)
-    let mut seen_at: Vec<(usize, Instant)> = Vec::new(); // requests visible but not yet admitted
+    let mut active: Vec<Active<'_>> = Vec::new();
+    let mut waiting: VecDeque<(&ServeRequest, Instant)> = VecDeque::new();
     let mut completions: Vec<Completion> = Vec::new();
+    let mut shed: Vec<ShedRequest> = Vec::new();
     let mut step = 0usize;
     let mut steps_run = 0usize;
 
-    while !pending.is_empty() || !active.is_empty() {
+    while !pending.is_empty() || !waiting.is_empty() || !active.is_empty() {
         // Nothing to run yet — jump to the next arrival instead of
         // spinning through empty steps.
-        if active.is_empty() && pending.last().is_some_and(|r| r.arrival > step) {
-            step = pending.last().unwrap().arrival;
-        }
-
-        // Stamp the queue-entry instant of every request that just
-        // became visible (latency includes its queueing time).
-        for r in pending.iter().rev() {
-            if r.arrival > step {
-                break;
-            }
-            if !seen_at.iter().any(|(id, _)| *id == r.id) {
-                seen_at.push((r.id, Instant::now()));
+        if active.is_empty() && waiting.is_empty() {
+            if let Some(r) = pending.last() {
+                if r.arrival > step {
+                    step = r.arrival;
+                }
             }
         }
 
-        // Admission: strict (arrival, id) FIFO while slots are free.
-        while active.len() < cfg.max_concurrent
-            && pending.last().is_some_and(|r| r.arrival <= step)
-        {
-            let r = pending.pop().unwrap();
-            let seen = seen_at
-                .iter()
-                .find(|(id, _)| *id == r.id)
-                .map(|(_, t)| *t)
-                .unwrap_or_else(Instant::now);
+        // Visibility: validate newly-arrived requests, then queue or
+        // shed them. Rejection and shedding are decided from the
+        // script alone, before anything advances — deterministic at
+        // any worker count.
+        while pending.last().is_some_and(|r| r.arrival <= step) {
+            let Some(r) = pending.pop() else { break };
+            if let Some(reason) = validate_request(model, r) {
+                completions.push(Completion {
+                    id: r.id,
+                    arrival: r.arrival,
+                    admitted_step: step,
+                    finished_step: step,
+                    prompt_len: r.prompt.len(),
+                    tokens: Vec::new(),
+                    status: SessionStatus::Rejected,
+                    diag: Some(reason),
+                    latency: Duration::ZERO,
+                    cache_peak_bytes: 0,
+                    cache_saved_bytes: 0,
+                });
+                continue;
+            }
+            if cfg.max_queue > 0 && waiting.len() >= cfg.max_queue {
+                shed.push(ShedRequest { id: r.id, arrival: r.arrival, shed_step: step });
+                continue;
+            }
+            waiting.push_back((r, Instant::now()));
+        }
+
+        // Admission: strict (arrival, id) FIFO while slots are free,
+        // with the token budget clamped in at admission time.
+        while active.len() < cfg.max_concurrent {
+            let Some((r, seen)) = waiting.pop_front() else { break };
+            let max_new =
+                if cfg.token_budget > 0 { r.max_new.min(cfg.token_budget) } else { r.max_new };
             let sess = GenSession::new(
                 r.id,
                 r.arrival,
                 r.prompt.clone(),
-                r.max_new,
+                max_new,
                 cfg.k,
                 cfg.eps,
                 cfg.seed ^ (r.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
             );
-            active.push((sess, step, seen));
+            active.push(Active { sess, admitted_step: step, seen, requested: r.max_new });
         }
 
         // One token per active session, sessions spread over the task
@@ -187,10 +351,10 @@ pub fn serve(
         // the serial loop at any worker count.
         {
             let cells: Vec<Mutex<&mut GenSession<'_>>> =
-                active.iter_mut().map(|(s, _, _)| Mutex::new(s)).collect();
+                active.iter_mut().map(|a| Mutex::new(&mut a.sess)).collect();
             task_pool.map_chunks(cells.len(), |lo, hi| {
                 for cell in &cells[lo..hi] {
-                    let mut s = cell.lock().unwrap();
+                    let mut s = cell.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                     if s.is_admitted() {
                         s.advance(&inner);
                     } else {
@@ -201,35 +365,89 @@ pub fn serve(
         }
         steps_run += 1;
 
-        // Collect completions (ascending id within the step — stable
+        // Scripted poison injection — serial phase, after the parallel
+        // advance, so it is deterministic and the health check below
+        // catches it before another token is emitted.
+        if let Some(plan) = plan {
+            for a in active.iter_mut() {
+                if let Some(site) = plan.poison_for(a.sess.id) {
+                    if a.sess.tokens().len() == site.after_tokens {
+                        a.sess.inject_poison();
+                    }
+                }
+            }
+        }
+
+        // Retire sessions: health check (quarantine), deadlines, then
+        // normal completion — ascending id within the step (stable,
         // since admission kept (arrival, id) order in `active`).
         let now = Instant::now();
         let mut i = 0;
         while i < active.len() {
-            if active[i].0.is_done() {
-                let (sess, admitted_step, seen) = active.remove(i);
-                seen_at.retain(|(id, _)| *id != sess.id);
-                let peak = sess.cache_peak_bytes();
-                let saved = sess.dense_baseline_bytes().saturating_sub(sess.cache_bound_bytes());
-                completions.push(Completion {
-                    id: sess.id,
-                    arrival: sess.arrival,
-                    admitted_step,
-                    finished_step: step,
-                    prompt_len: sess.prompt.len(),
-                    tokens: sess.tokens().to_vec(),
-                    latency: now.duration_since(seen),
-                    cache_peak_bytes: peak,
-                    cache_saved_bytes: saved,
-                });
+            let a = &active[i];
+            let emitted = a.sess.tokens().len();
+            let steps_used = step + 1 - a.admitted_step;
+            let verdict: Option<(SessionStatus, Option<String>)> = if !a.sess.logits_finite() {
+                Some((
+                    SessionStatus::Quarantined,
+                    Some(format!(
+                        "non-finite logits after {emitted} clean token(s) — session quarantined, \
+                         stream truncated"
+                    )),
+                ))
+            } else if a.sess.is_done() {
+                if a.sess.max_new < a.requested {
+                    Some((
+                        SessionStatus::Truncated,
+                        Some(format!(
+                            "token budget {} < requested {}",
+                            a.sess.max_new, a.requested
+                        )),
+                    ))
+                } else {
+                    Some((SessionStatus::Ok, None))
+                }
+            } else if cfg.deadline_steps > 0 && steps_used >= cfg.deadline_steps {
+                Some((
+                    SessionStatus::TimedOut,
+                    Some(format!(
+                        "deadline of {} serve step(s) exceeded after {emitted} token(s)",
+                        cfg.deadline_steps
+                    )),
+                ))
+            } else if cfg.deadline.is_some_and(|d| now.duration_since(a.seen) >= d) {
+                Some((
+                    SessionStatus::TimedOut,
+                    Some(format!("wall-clock deadline exceeded after {emitted} token(s)")),
+                ))
             } else {
+                None
+            };
+            let Some((status, diag)) = verdict else {
                 i += 1;
-            }
+                continue;
+            };
+            let a = active.remove(i);
+            let peak = a.sess.cache_peak_bytes();
+            let saved = a.sess.dense_baseline_bytes().saturating_sub(a.sess.cache_bound_bytes());
+            completions.push(Completion {
+                id: a.sess.id,
+                arrival: a.sess.arrival,
+                admitted_step: a.admitted_step,
+                finished_step: step,
+                prompt_len: a.sess.prompt.len(),
+                tokens: a.sess.tokens().to_vec(),
+                status,
+                diag,
+                latency: now.duration_since(a.seen),
+                cache_peak_bytes: peak,
+                cache_saved_bytes: saved,
+            });
         }
         step += 1;
     }
 
-    Ok(ServeOutcome { completions, steps: steps_run, wall: t0.elapsed() })
+    Ok(ServeOutcome { completions, shed, steps: steps_run, wall: t0.elapsed() })
 }
 
 /// Deterministic synthetic load for `pamm serve-sim` and the benches:
@@ -261,7 +479,7 @@ mod tests {
     }
 
     fn cfg() -> ServeConfig {
-        ServeConfig { max_concurrent: 2, k: 4, eps: Eps::Inf, seed: 17 }
+        ServeConfig::new(2, 4, Eps::Inf, 17)
     }
 
     #[test]
@@ -270,6 +488,8 @@ mod tests {
         let reqs = scripted_load(5, model.cfg.vocab, 3);
         let serial = serve(&model, &cfg(), &reqs, &Pool::serial()).unwrap();
         assert_eq!(serial.completions.len(), reqs.len());
+        assert!(serial.completions.iter().all(|c| c.status == SessionStatus::Ok));
+        assert!(serial.shed.is_empty());
         for workers in [2usize, 4] {
             let pool = Pool::new(workers).with_min_chunk(1);
             let out = serve(&model, &cfg(), &reqs, &pool).unwrap();
@@ -314,5 +534,94 @@ mod tests {
         assert!(admitted.windows(2).all(|w| w[0] < w[1]), "one slot ⇒ serialized sessions");
         assert_eq!(out.total_tokens(), 12);
         assert!(out.total_cache_saved_bytes() > 0);
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_not_panicked() {
+        let model = tiny_model();
+        let reqs = vec![
+            ServeRequest { id: 0, arrival: 0, prompt: vec![1, 2], max_new: 3 },
+            ServeRequest { id: 1, arrival: 0, prompt: vec![], max_new: 3 },
+            ServeRequest { id: 2, arrival: 0, prompt: vec![1, 999], max_new: 3 },
+            ServeRequest { id: 3, arrival: 0, prompt: vec![1], max_new: 0 },
+        ];
+        let out = serve(&model, &cfg(), &reqs, &Pool::serial()).unwrap();
+        assert_eq!(out.completions.len(), 4);
+        assert_eq!(out.count(SessionStatus::Rejected), 3);
+        assert_eq!(out.count(SessionStatus::Ok), 1);
+        for c in &out.completions {
+            if c.status == SessionStatus::Rejected {
+                assert!(c.tokens.is_empty());
+                assert!(c.diag.is_some(), "rejections must say why");
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_queue_sheds_and_budget_truncates_deterministically() {
+        let model = tiny_model();
+        // 6 requests all at step 0, 1 slot, queue of 2: ids 0 admitted,
+        // 1-2 queued, 3-5 shed.
+        let reqs: Vec<ServeRequest> = (0..6)
+            .map(|i| ServeRequest { id: i, arrival: 0, prompt: vec![1, 2, 3], max_new: 6 })
+            .collect();
+        let hard = ServeConfig {
+            max_concurrent: 1,
+            max_queue: 2,
+            token_budget: 4,
+            ..cfg()
+        };
+        let out = serve(&model, &hard, &reqs, &Pool::serial()).unwrap();
+        let shed_ids: Vec<usize> = out.shed.iter().map(|s| s.id).collect();
+        assert_eq!(shed_ids, vec![3, 4, 5], "overflow arrivals shed in script order");
+        assert_eq!(out.completions.len(), 3);
+        for c in &out.completions {
+            assert_eq!(c.status, SessionStatus::Truncated, "budget 4 < requested 6");
+            assert_eq!(c.tokens.len(), 4);
+        }
+        // Deterministic at any worker count (shedding is decided from
+        // the script, before anything advances).
+        let par = serve(&model, &hard, &reqs, &Pool::new(4).with_min_chunk(1)).unwrap();
+        let par_shed: Vec<usize> = par.shed.iter().map(|s| s.id).collect();
+        assert_eq!(par_shed, shed_ids);
+    }
+
+    #[test]
+    fn step_deadline_times_out_with_partial_stream() {
+        let model = tiny_model();
+        let reqs = vec![ServeRequest { id: 0, arrival: 0, prompt: vec![1, 2], max_new: 8 }];
+        let strict = ServeConfig { deadline_steps: 3, ..cfg() };
+        let out = serve(&model, &strict, &reqs, &Pool::serial()).unwrap();
+        let c = &out.completions[0];
+        assert_eq!(c.status, SessionStatus::TimedOut);
+        assert_eq!(c.tokens.len(), 3, "3 steps ⇒ 3 tokens, then the deadline fires");
+        // The partial stream is the prefix of the unconstrained run.
+        let free = serve(&model, &cfg(), &reqs, &Pool::serial()).unwrap();
+        assert_eq!(free.completions[0].tokens[..3], c.tokens[..]);
+    }
+
+    #[test]
+    fn poisoned_session_is_quarantined_with_its_clean_prefix() {
+        let model = tiny_model();
+        let reqs = scripted_load(4, model.cfg.vocab, 7);
+        let clean = serve(&model, &cfg(), &reqs, &Pool::serial()).unwrap();
+        let plan = FaultPlan::new(9)
+            .sample_poison(&reqs.iter().map(|r| (r.id, r.max_new)).collect::<Vec<_>>(), 1);
+        assert_eq!(plan.poison.len(), 1);
+        let site = plan.poison[0];
+        let out = serve_faulted(&model, &cfg(), &reqs, Some(&plan), &Pool::serial()).unwrap();
+        assert_eq!(out.count(SessionStatus::Quarantined), 1);
+        for c in &out.completions {
+            let clean_c = clean.completions.iter().find(|k| k.id == c.id).unwrap();
+            if c.id == site.id {
+                assert_eq!(c.status, SessionStatus::Quarantined);
+                assert_eq!(c.tokens.len(), site.after_tokens);
+                assert_eq!(c.tokens[..], clean_c.tokens[..site.after_tokens], "prefix must be clean");
+                assert!(c.diag.as_deref().unwrap_or("").contains("non-finite"), "{:?}", c.diag);
+            } else {
+                assert_eq!(c.status, SessionStatus::Ok);
+                assert_eq!(c.tokens, clean_c.tokens, "survivors must be bit-identical");
+            }
+        }
     }
 }

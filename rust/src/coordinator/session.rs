@@ -65,11 +65,19 @@ impl<'m> GenSession<'m> {
 
     /// Prefill the prompt and emit the first token. Called once, by
     /// the serve loop, at the step the session is admitted.
+    ///
+    /// If the prefill produces non-finite logits the first token is
+    /// **not** emitted — the session reports unhealthy
+    /// ([`GenSession::logits_finite`]) and the serve loop quarantines
+    /// it instead of streaming a token derived from NaN (greedy over
+    /// all-NaN logits would silently return token 0).
     pub fn admit(&mut self, model: &'m TransformerLM, pool: &Pool) {
         assert!(self.dec.is_none(), "serve: request {} admitted twice", self.id);
         let mut dec = Decoder::new(model, self.cfg);
         dec.prefill(&self.prompt, pool);
-        self.emitted.push(generate::greedy(dec.last_logits()));
+        if dec.logits_finite() {
+            self.emitted.push(generate::greedy(dec.last_logits()));
+        }
         self.dec = Some(dec);
     }
 
@@ -77,16 +85,37 @@ impl<'m> GenSession<'m> {
     /// cache, emit the next. The final emitted token is never folded
     /// (nothing attends past it), which is why `advance` emits the
     /// same stream as [`Decoder::generate`] one step earlier.
+    ///
+    /// Like [`GenSession::admit`], never emits from non-finite logits:
+    /// the poisoned step leaves the emitted stream as its clean prefix
+    /// and the serve loop's health check takes over.
     pub fn advance(&mut self, pool: &Pool) {
         assert!(!self.is_done(), "serve: request {} advanced past completion", self.id);
         let dec = self.dec.as_mut().expect("serve: advance before admit");
         let last = *self.emitted.last().expect("admit emits the first token");
         dec.decode_step(last, pool);
-        self.emitted.push(generate::greedy(dec.last_logits()));
+        if dec.logits_finite() {
+            self.emitted.push(generate::greedy(dec.last_logits()));
+        }
     }
 
     pub fn is_admitted(&self) -> bool {
         self.dec.is_some()
+    }
+
+    /// Health check: false iff the decoder's current logits contain a
+    /// NaN/Inf (true before admission — nothing has run yet). The
+    /// serve loop quarantines unhealthy sessions.
+    pub fn logits_finite(&self) -> bool {
+        self.dec.as_ref().map_or(true, |d| d.logits_finite())
+    }
+
+    /// Fault-injection hook (`faultx` / `pamm chaos`): poison the
+    /// decoder's current logits with NaN. No-op before admission.
+    pub fn inject_poison(&mut self) {
+        if let Some(dec) = self.dec.as_mut() {
+            dec.poison_last_logits();
+        }
     }
 
     pub fn is_done(&self) -> bool {

@@ -1,0 +1,371 @@
+//! The `pamm chaos` campaign: scripted fault injection with
+//! pass/fail verdicts (DESIGN.md §9, EXPERIMENTS.md P15).
+//!
+//! Each row of the campaign runs one deterministic fault scenario
+//! end-to-end and checks the recovery *property*, not just survival:
+//!
+//! * **Kill sweep** — one supervised training run per scripted kill
+//!   (`--quick`: one seeded kill; full: every checkpoint boundary ×
+//!   every [`CrashPhase`]). Pass iff the recovered run's final
+//!   checkpoint is **bitwise identical** to the uninterrupted
+//!   baseline's and the fsync'd run log replays to the identical loss
+//!   curve ([`metrics::replay_run_log`]).
+//! * **Corruption fallback** — a kill right after a mid-run
+//!   checkpoint, then a seeded bit flip in the newest ring entry.
+//!   Pass iff recovery *detects* the corruption (diagnostic present),
+//!   falls back to the previous ring entry, and still converges to
+//!   the bitwise-identical final state.
+//! * **Serve quarantine** — a poisoned session under the
+//!   continuous-batching loop at 1 and 2 workers. Pass iff exactly
+//!   the scripted sessions are quarantined with clean token prefixes
+//!   and every *surviving* stream is bitwise identical to the
+//!   fault-free baseline at every worker count.
+//! * **Overload shedding** — a burst load against a bounded queue
+//!   with a token budget. Pass iff every request is accounted for
+//!   (completions + shed == requests) and the shed/truncation
+//!   decisions are identical at 1 and 2 workers.
+//!
+//! The campaign is a pure function of `(seed, quick)` — rerunning it
+//! reproduces every fault and every verdict bit-for-bit, which is
+//! what makes a failing row debuggable.
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint;
+use crate::coordinator::lm::{
+    checkpoint_boundaries, train_lm_native_run, train_lm_supervised, LmRunConfig,
+};
+use crate::coordinator::serve::{serve, serve_faulted, ServeConfig, ServeRequest, SessionStatus};
+use crate::coordinator::NativeOpt;
+use crate::faultx::{CrashPhase, FaultPlan, TrainFault};
+use crate::metrics;
+use crate::model::LmConfig;
+use crate::pamm::Eps;
+use crate::poolx::Pool;
+use crate::runtime::HostTensor;
+
+/// Campaign knobs (the `pamm chaos` flags).
+#[derive(Debug, Clone)]
+pub struct ChaosOpts {
+    /// CI smoke mode: one seeded kill + one poisoned session instead
+    /// of the exhaustive boundary × phase sweep.
+    pub quick: bool,
+    pub seed: u64,
+    /// Scratch directory for the campaign's run dirs (wiped first).
+    pub dir: String,
+}
+
+impl Default for ChaosOpts {
+    fn default() -> Self {
+        ChaosOpts { quick: false, seed: 0xC4A0_5, dir: "target/chaos".into() }
+    }
+}
+
+/// One scenario's verdict.
+#[derive(Debug)]
+pub struct ChaosRow {
+    pub name: String,
+    pub pass: bool,
+    /// What was checked (pass) or what diverged (fail).
+    pub detail: String,
+}
+
+/// The full campaign result; `pamm chaos` renders it as a table and
+/// exits non-zero unless [`ChaosReport::passed`].
+#[derive(Debug)]
+pub struct ChaosReport {
+    pub rows: Vec<ChaosRow>,
+}
+
+impl ChaosReport {
+    pub fn passed(&self) -> bool {
+        self.rows.iter().all(|r| r.pass)
+    }
+
+    /// Render the pass/fail table to stdout.
+    pub fn print_table(&self) {
+        let w = self.rows.iter().map(|r| r.name.len()).max().unwrap_or(8).max(8);
+        println!("{:<w$}  {:<6}  detail", "scenario", "verdict");
+        println!("{}  {}  {}", "-".repeat(w), "-".repeat(6), "-".repeat(32));
+        for r in &self.rows {
+            println!("{:<w$}  {:<6}  {}", r.name, if r.pass { "PASS" } else { "FAIL" }, r.detail);
+        }
+        let (p, n) = (self.rows.iter().filter(|r| r.pass).count(), self.rows.len());
+        println!("{}", "-".repeat(w + 10 + 32));
+        println!("{p}/{n} scenarios passed");
+    }
+}
+
+/// The tiny-but-real model every training scenario uses: 2 layers so
+/// cross-layer state is exercised, small enough that the full sweep
+/// (a dozen supervised runs) stays in CI-smoke territory.
+fn train_rc(opts: &ChaosOpts, run_name: &str) -> LmRunConfig {
+    LmRunConfig {
+        cfg: LmConfig { vocab: 120, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 },
+        batch: 2,
+        seq: 12,
+        steps: if opts.quick { 4 } else { 8 },
+        k: 4,
+        opt: NativeOpt::adam(3e-3),
+        seed: opts.seed,
+        ckpt_every: 2,
+        keep_last: 3,
+        run_dir: format!("{}/{run_name}", opts.dir),
+        run_name: run_name.to_string(),
+        resume: false,
+    }
+}
+
+/// Final plain checkpoint of a finished run, for bitwise comparison.
+fn final_tensors(rc: &LmRunConfig) -> Result<Vec<(String, HostTensor)>> {
+    checkpoint::load(format!("{}/ckpt", rc.run_dir), &rc.run_name)
+        .with_context(|| format!("final checkpoint of `{}`", rc.run_name))
+}
+
+/// Replayed (step, loss-bits) curve of a run's fsync'd log.
+fn replayed_bits(rc: &LmRunConfig) -> Result<Vec<(usize, u64)>> {
+    let curve = metrics::replay_run_log(&rc.run_dir, &rc.run_name)?;
+    Ok(curve.into_iter().map(|(s, l)| (s, l.to_bits())).collect())
+}
+
+/// Run the whole campaign. Wipes `opts.dir` first; every scenario gets
+/// its own run dir underneath it.
+pub fn run_campaign(opts: &ChaosOpts, pool: &Pool) -> Result<ChaosReport> {
+    let _ = std::fs::remove_dir_all(&opts.dir);
+    std::fs::create_dir_all(&opts.dir)
+        .with_context(|| format!("creating chaos dir {}", opts.dir))?;
+    let mut rows = Vec::new();
+
+    // -- training baseline: the uninterrupted run every recovery must
+    //    reproduce bit-for-bit.
+    let base_rc = train_rc(opts, "base");
+    train_lm_native_run(&base_rc, None, pool, true)?;
+    let base_final = final_tensors(&base_rc)?;
+    let base_log = replayed_bits(&base_rc)?;
+
+    // -- kill sweep.
+    let boundaries = checkpoint_boundaries(&base_rc);
+    let plans: Vec<FaultPlan> = if opts.quick {
+        vec![FaultPlan::sample_train(opts.seed, &boundaries, 1)]
+    } else {
+        FaultPlan::every_boundary(opts.seed, &boundaries)
+    };
+    for plan in &plans {
+        let f = plan.crashes[0];
+        let name = format!("kill s{}/{}", f.step, f.phase.name());
+        let rc = train_rc(opts, &format!("kill_s{}_{}", f.step, f.phase.name()));
+        rows.push(match kill_row(&rc, plan, pool, &base_final, &base_log) {
+            Ok(detail) => ChaosRow { name, pass: true, detail },
+            Err(e) => ChaosRow { name, pass: false, detail: format!("{e:#}") },
+        });
+    }
+
+    // -- corruption fallback: kill right after the second boundary's
+    //    checkpoint landed, then bit-flip it — recovery must detect,
+    //    fall back to the first boundary, and still converge bitwise.
+    {
+        let rc = train_rc(opts, "corrupt");
+        let plan = {
+            let mut p = FaultPlan::new(opts.seed);
+            p.crashes.push(TrainFault { step: boundaries[1], phase: CrashPhase::AfterCheckpoint });
+            p.with_corruption(0)
+        };
+        rows.push(match corruption_row(&rc, &plan, boundaries[0], pool, &base_final) {
+            Ok(detail) => ChaosRow { name: "corrupt newest ckpt".into(), pass: true, detail },
+            Err(e) => ChaosRow { name: "corrupt newest ckpt".into(), pass: false, detail: format!("{e:#}") },
+        });
+    }
+
+    // -- serve scenarios (no run dirs; pure in-memory).
+    let model = crate::model::TransformerLM::new(
+        LmConfig { vocab: 64, n_layers: 2, heads: 2, head_dim: 4, d_ff: 16 },
+        opts.seed,
+    );
+    let load = crate::coordinator::scripted_load(if opts.quick { 6 } else { 8 }, 64, opts.seed);
+    let scfg = ServeConfig::new(2, 4, Eps::Inf, opts.seed);
+    rows.push(
+        match quarantine_row(&model, &scfg, &load, opts, if opts.quick { 1 } else { 2 }) {
+            Ok(detail) => ChaosRow { name: "serve quarantine".into(), pass: true, detail },
+            Err(e) => ChaosRow { name: "serve quarantine".into(), pass: false, detail: format!("{e:#}") },
+        },
+    );
+    rows.push(match shed_row(&model, &scfg, &load) {
+        Ok(detail) => ChaosRow { name: "overload shed".into(), pass: true, detail },
+        Err(e) => ChaosRow { name: "overload shed".into(), pass: false, detail: format!("{e:#}") },
+    });
+
+    Ok(ChaosReport { rows })
+}
+
+/// One supervised run under `plan`; pass iff bitwise-identical final
+/// checkpoint and replayed log vs the baseline.
+fn kill_row(
+    rc: &LmRunConfig,
+    plan: &FaultPlan,
+    pool: &Pool,
+    base_final: &[(String, HostTensor)],
+    base_log: &[(usize, u64)],
+) -> Result<String> {
+    let out = train_lm_supervised(rc, plan, pool, true)?;
+    anyhow::ensure!(
+        out.crashes.len() == plan.crashes.len(),
+        "armed {} crash(es) but {} fired",
+        plan.crashes.len(),
+        out.crashes.len()
+    );
+    let fin = final_tensors(rc)?;
+    anyhow::ensure!(fin == base_final, "recovered final checkpoint differs from baseline");
+    let log = replayed_bits(rc)?;
+    anyhow::ensure!(log == base_log, "replayed run log differs from baseline");
+    Ok(format!(
+        "recovered in {} attempt(s), resume at {:?}; final ckpt + replayed log bitwise equal",
+        out.attempts, out.resume_steps
+    ))
+}
+
+/// Corruption scenario; pass iff the flip was detected, the ring fell
+/// back to `expect_resume`, and the final state still matches.
+fn corruption_row(
+    rc: &LmRunConfig,
+    plan: &FaultPlan,
+    expect_resume: usize,
+    pool: &Pool,
+    base_final: &[(String, HostTensor)],
+) -> Result<String> {
+    let out = train_lm_supervised(rc, plan, pool, true)?;
+    anyhow::ensure!(
+        out.recovery_diags.iter().any(|d| d.contains("injected corruption")),
+        "corruption was never injected"
+    );
+    anyhow::ensure!(
+        out.recovery_diags.iter().any(|d| d.contains("failed verification")),
+        "corrupted entry was not detected: {:?}",
+        out.recovery_diags
+    );
+    anyhow::ensure!(
+        out.resume_steps == vec![expect_resume],
+        "expected fallback resume at step {expect_resume}, got {:?}",
+        out.resume_steps
+    );
+    let fin = final_tensors(rc)?;
+    anyhow::ensure!(fin == base_final, "post-fallback final checkpoint differs from baseline");
+    Ok(format!(
+        "flip detected, fell back to s{expect_resume}, final ckpt bitwise equal ({} diag(s))",
+        out.recovery_diags.len()
+    ))
+}
+
+/// Poisoned-session scenario at 1 and 2 workers.
+fn quarantine_row(
+    model: &crate::model::TransformerLM,
+    scfg: &ServeConfig,
+    load: &[ServeRequest],
+    opts: &ChaosOpts,
+    n_poison: usize,
+) -> Result<String> {
+    let clean = serve(model, scfg, load, &Pool::serial())?;
+    let sessions: Vec<(usize, usize)> = load.iter().map(|r| (r.id, r.max_new)).collect();
+    let plan = FaultPlan::new(opts.seed).sample_poison(&sessions, n_poison);
+    anyhow::ensure!(plan.poison.len() == n_poison, "poison sampling came up short");
+    let mut detail = String::new();
+    for workers in [1usize, 2] {
+        let pool = if workers == 1 { Pool::serial() } else { Pool::new(2).with_min_chunk(1) };
+        let out = serve_faulted(model, scfg, load, Some(&plan), &pool)?;
+        anyhow::ensure!(
+            out.count(SessionStatus::Quarantined) == n_poison,
+            "expected {n_poison} quarantined at {workers} worker(s), got {}",
+            out.count(SessionStatus::Quarantined)
+        );
+        for c in &out.completions {
+            let base = clean
+                .completions
+                .iter()
+                .find(|k| k.id == c.id)
+                .context("completion for unknown id")?;
+            if let Some(site) = plan.poison_for(c.id) {
+                anyhow::ensure!(
+                    c.status == SessionStatus::Quarantined
+                        && c.tokens[..] == base.tokens[..site.after_tokens],
+                    "poisoned session {} kept a dirty stream at {workers} worker(s)",
+                    c.id
+                );
+            } else {
+                anyhow::ensure!(
+                    c.status == SessionStatus::Ok && c.tokens == base.tokens,
+                    "survivor {} drifted at {workers} worker(s)",
+                    c.id
+                );
+            }
+        }
+        detail = format!(
+            "{n_poison} quarantined with clean prefixes, {} survivor(s) bitwise equal @ 1+2 workers",
+            out.completions.len() - n_poison
+        );
+    }
+    Ok(detail)
+}
+
+/// Burst load against a bounded queue + token budget.
+fn shed_row(model: &crate::model::TransformerLM, scfg: &ServeConfig, load: &[ServeRequest]) -> Result<String> {
+    // Everyone arrives at once; one slot and a 2-deep queue force shed.
+    let burst: Vec<ServeRequest> =
+        load.iter().map(|r| ServeRequest { arrival: 0, ..r.clone() }).collect();
+    let hard = ServeConfig { max_concurrent: 1, max_queue: 2, token_budget: 3, ..*scfg };
+    let serial = serve(model, &hard, &burst, &Pool::serial())?;
+    anyhow::ensure!(!serial.shed.is_empty(), "bounded queue never shed under burst load");
+    anyhow::ensure!(
+        serial.completions.len() + serial.shed.len() == burst.len(),
+        "requests unaccounted for: {} completed + {} shed of {}",
+        serial.completions.len(),
+        serial.shed.len(),
+        burst.len()
+    );
+    let par = serve(model, &hard, &burst, &Pool::new(2).with_min_chunk(1))?;
+    let ids = |o: &crate::coordinator::ServeOutcome| {
+        (
+            o.shed.iter().map(|s| s.id).collect::<Vec<_>>(),
+            o.completions.iter().map(|c| (c.id, c.status, c.tokens.clone())).collect::<Vec<_>>(),
+        )
+    };
+    anyhow::ensure!(ids(&serial) == ids(&par), "shed/truncation decisions drifted with workers");
+    let truncated = serial.count(SessionStatus::Truncated);
+    Ok(format!(
+        "{} shed, {truncated} truncated by budget, all {} accounted for, deterministic @ 1+2 workers",
+        serial.shed.len(),
+        burst.len()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_campaign_passes_end_to_end() {
+        let dir = std::env::temp_dir().join("pamm_chaos_quick");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ChaosOpts {
+            quick: true,
+            seed: 11,
+            dir: dir.to_string_lossy().into_owned(),
+        };
+        let report = run_campaign(&opts, &Pool::serial()).unwrap();
+        assert!(!report.rows.is_empty());
+        for r in &report.rows {
+            assert!(r.pass, "chaos scenario `{}` failed: {}", r.name, r.detail);
+        }
+        assert!(report.passed());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn report_table_counts_failures() {
+        let rep = ChaosReport {
+            rows: vec![
+                ChaosRow { name: "a".into(), pass: true, detail: "ok".into() },
+                ChaosRow { name: "b".into(), pass: false, detail: "boom".into() },
+            ],
+        };
+        assert!(!rep.passed());
+    }
+}

@@ -1,0 +1,295 @@
+//! Deterministic fault injection (DESIGN.md §9).
+//!
+//! A [`FaultPlan`] is a *replayable* chaos script: sampled once from a
+//! seed via [`rngx::Xoshiro256`], it names the exact sites at which
+//! faults fire — training crashes at checkpoint boundaries
+//! ([`TrainFault`], three [`CrashPhase`]s), checkpoint-file corruption
+//! (a seeded bit flip in the newest ring entry), and poisoned serve
+//! sessions ([`PoisonSite`], non-finite logits injected after a fixed
+//! token count). The same seed yields the same plan on every machine,
+//! thread count and SIMD level — chaos runs are as reproducible as the
+//! training runs they attack, matching the repo's determinism
+//! discipline.
+//!
+//! Injected crashes travel as [`InjectedCrash`] errors through the
+//! ordinary `anyhow` error channel; the supervisor
+//! (`coordinator::lm::train_lm_supervised`) recognizes them by
+//! downcast ([`injected_crash`]) and recovers, while any *real* error
+//! still propagates. The `chaos` submodule drives scripted campaigns
+//! (`pamm chaos`).
+
+pub mod chaos;
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::rngx::Xoshiro256;
+
+/// Where, relative to a checkpoint boundary, an injected kill lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPhase {
+    /// The process dies after the optimizer step but before the
+    /// checkpoint write starts — the boundary's checkpoint is lost.
+    BeforeCheckpoint,
+    /// The process dies halfway through the blob write: a partial
+    /// `.bin.tmp` is left behind, nothing was renamed into place.
+    MidCheckpointWrite,
+    /// The checkpoint (and the synced run log) landed, then the
+    /// process dies — recovery resumes exactly at this boundary.
+    AfterCheckpoint,
+}
+
+impl CrashPhase {
+    pub const ALL: [CrashPhase; 3] =
+        [CrashPhase::BeforeCheckpoint, CrashPhase::MidCheckpointWrite, CrashPhase::AfterCheckpoint];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CrashPhase::BeforeCheckpoint => "before-ckpt",
+            CrashPhase::MidCheckpointWrite => "mid-write",
+            CrashPhase::AfterCheckpoint => "after-ckpt",
+        }
+    }
+}
+
+/// One scripted training kill: the run dies at checkpoint boundary
+/// `step` (a completed-optimizer-step count), in the given phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrainFault {
+    pub step: usize,
+    pub phase: CrashPhase,
+}
+
+/// The error an injected kill raises. Carried inside `anyhow::Error`
+/// so it flows through the normal error channel; the supervisor picks
+/// it out by downcast ([`injected_crash`]) — anything else is a real
+/// failure and still propagates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedCrash {
+    pub step: usize,
+    pub phase: CrashPhase,
+}
+
+impl fmt::Display for InjectedCrash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected crash at checkpoint boundary {} ({})", self.step, self.phase.name())
+    }
+}
+
+impl std::error::Error for InjectedCrash {}
+
+/// Downcast an error chain to the injected kill it carries, if any.
+pub fn injected_crash(e: &anyhow::Error) -> Option<InjectedCrash> {
+    e.downcast_ref::<InjectedCrash>().copied()
+}
+
+/// One poisoned serve session: request `id`'s logits turn non-finite
+/// once it has emitted `after_tokens` tokens (so every prior token is
+/// clean, and the session is quarantined before emitting another).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoisonSite {
+    pub id: usize,
+    pub after_tokens: usize,
+}
+
+/// A complete scripted fault campaign. [`PartialEq`] so the replay
+/// contract — same seed ⇒ the identical plan — is directly testable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Training kills, ascending by step; the supervisor arms
+    /// `crashes[attempt]` on its `attempt`-th run.
+    pub crashes: Vec<TrainFault>,
+    /// After this many crashes have fired, flip one seeded bit in the
+    /// newest ring entry before recovery — forcing the checksum +
+    /// ring-fallback path.
+    pub corrupt_after_attempt: Option<usize>,
+    /// Poisoned serve sessions.
+    pub poison: Vec<PoisonSite>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults) under `seed`.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, crashes: Vec::new(), corrupt_after_attempt: None, poison: Vec::new() }
+    }
+
+    /// Sample `n_crashes` distinct checkpoint boundaries (each with a
+    /// seeded phase) from `boundaries`. Crashes are sorted ascending
+    /// so every one fires: the supervisor's attempt `i` replays past
+    /// all earlier kill points before `crashes[i]` triggers.
+    pub fn sample_train(seed: u64, boundaries: &[usize], n_crashes: usize) -> FaultPlan {
+        let mut plan = FaultPlan::new(seed);
+        if boundaries.is_empty() || n_crashes == 0 {
+            return plan;
+        }
+        let mut rng = Xoshiro256::fold_in(seed, 0xFA17, 0);
+        let picks =
+            rng.sample_without_replacement(boundaries.len(), n_crashes.min(boundaries.len()));
+        let mut steps: Vec<usize> = picks.into_iter().map(|i| boundaries[i]).collect();
+        steps.sort_unstable();
+        plan.crashes = steps
+            .into_iter()
+            .map(|step| {
+                let phase = CrashPhase::ALL[rng.next_below(3) as usize];
+                TrainFault { step, phase }
+            })
+            .collect();
+        plan
+    }
+
+    /// Every boundary × a cycling phase — the exhaustive kill sweep
+    /// `prop_faults.rs` and the full chaos campaign iterate (one
+    /// supervised run per entry, not one run with all of them).
+    pub fn every_boundary(seed: u64, boundaries: &[usize]) -> Vec<FaultPlan> {
+        let mut out = Vec::with_capacity(boundaries.len() * CrashPhase::ALL.len());
+        for &step in boundaries {
+            for phase in CrashPhase::ALL {
+                let mut plan = FaultPlan::new(seed);
+                plan.crashes.push(TrainFault { step, phase });
+                out.push(plan);
+            }
+        }
+        out
+    }
+
+    /// Poison `n` of the given `(id, max_new)` sessions at seeded
+    /// token offsets in `[1, max_new - 2]` — strictly after the first
+    /// clean token and strictly before the stream would complete, so a
+    /// quarantine always fires and always leaves clean tokens behind.
+    /// Sessions with `max_new < 3` are not eligible.
+    pub fn sample_poison(mut self, sessions: &[(usize, usize)], n: usize) -> FaultPlan {
+        let eligible: Vec<(usize, usize)> =
+            sessions.iter().copied().filter(|&(_, max_new)| max_new >= 3).collect();
+        if eligible.is_empty() || n == 0 {
+            return self;
+        }
+        let mut rng = Xoshiro256::fold_in(self.seed, 0xFA17, 1);
+        let picks = rng.sample_without_replacement(eligible.len(), n.min(eligible.len()));
+        let mut sites: Vec<PoisonSite> = picks
+            .into_iter()
+            .map(|i| {
+                let (id, max_new) = eligible[i];
+                PoisonSite { id, after_tokens: 1 + rng.next_below((max_new - 2) as u64) as usize }
+            })
+            .collect();
+        sites.sort_by_key(|s| s.id);
+        self.poison = sites;
+        self
+    }
+
+    /// Arm the checkpoint-corruption fault after crash `attempt`.
+    pub fn with_corruption(mut self, after_attempt: usize) -> FaultPlan {
+        self.corrupt_after_attempt = Some(after_attempt);
+        self
+    }
+
+    /// The poison site for request `id`, if this plan has one.
+    pub fn poison_for(&self, id: usize) -> Option<PoisonSite> {
+        self.poison.iter().copied().find(|s| s.id == id)
+    }
+}
+
+/// Flip one seeded bit of the file at `path` (bitrot injection for the
+/// checksum/fallback tests). Returns `(byte_offset, bit)` for the
+/// diagnostic trail.
+pub fn flip_bit_in_file(path: impl AsRef<Path>, rng: &mut Xoshiro256) -> Result<(usize, u8)> {
+    let path = path.as_ref();
+    let mut data = std::fs::read(path)
+        .with_context(|| format!("fault injection: reading {}", path.display()))?;
+    ensure!(!data.is_empty(), "fault injection: {} is empty", path.display());
+    let byte = rng.next_below(data.len() as u64) as usize;
+    let bit = (rng.next_below(8)) as u8;
+    data[byte] ^= 1 << bit;
+    std::fs::write(path, &data)
+        .with_context(|| format!("fault injection: rewriting {}", path.display()))?;
+    Ok((byte, bit))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_replay_identically_from_the_same_seed() {
+        let boundaries = [2usize, 4, 6, 8];
+        let sessions = [(0usize, 5usize), (1, 8), (2, 4), (3, 3)];
+        let a = FaultPlan::sample_train(41, &boundaries, 2).sample_poison(&sessions, 2);
+        let b = FaultPlan::sample_train(41, &boundaries, 2).sample_poison(&sessions, 2);
+        assert_eq!(a, b, "same seed must yield the identical plan");
+        let c = FaultPlan::sample_train(42, &boundaries, 2).sample_poison(&sessions, 2);
+        assert!(!a.crashes.is_empty() && !a.poison.is_empty());
+        // (different seeds *may* collide on tiny spaces; these don't)
+        assert_ne!(a, c, "a different seed must be able to move the fault sites");
+    }
+
+    #[test]
+    fn sampled_crashes_are_sorted_distinct_boundaries() {
+        let boundaries = [10usize, 2, 6, 4, 8];
+        let plan = FaultPlan::sample_train(7, &boundaries, 4);
+        let steps: Vec<usize> = plan.crashes.iter().map(|c| c.step).collect();
+        let mut sorted = steps.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(steps, sorted, "crashes must be ascending and distinct: {steps:?}");
+        assert!(steps.iter().all(|s| boundaries.contains(s)));
+    }
+
+    #[test]
+    fn poison_sites_leave_room_on_both_sides() {
+        let sessions: Vec<(usize, usize)> = (0..8).map(|i| (i, 3 + i % 5)).collect();
+        let plan = FaultPlan::new(3).sample_poison(&sessions, 8);
+        assert!(!plan.poison.is_empty());
+        for site in &plan.poison {
+            let (_, max_new) = sessions.iter().find(|(id, _)| *id == site.id).unwrap();
+            assert!(
+                site.after_tokens >= 1 && site.after_tokens <= max_new - 2,
+                "site {site:?} out of [1, {}]",
+                max_new - 2
+            );
+        }
+    }
+
+    #[test]
+    fn every_boundary_covers_the_full_grid() {
+        let plans = FaultPlan::every_boundary(1, &[2, 4]);
+        assert_eq!(plans.len(), 6);
+        for phase in CrashPhase::ALL {
+            for step in [2usize, 4] {
+                assert!(plans
+                    .iter()
+                    .any(|p| p.crashes == vec![TrainFault { step, phase }]));
+            }
+        }
+    }
+
+    #[test]
+    fn injected_crash_downcasts_through_anyhow() {
+        let crash = InjectedCrash { step: 4, phase: CrashPhase::MidCheckpointWrite };
+        let err = anyhow::Error::new(crash).context("checkpoint boundary 4");
+        assert_eq!(injected_crash(&err), Some(crash));
+        let real = anyhow::anyhow!("disk on fire");
+        assert_eq!(injected_crash(&real), None);
+    }
+
+    #[test]
+    fn bit_flip_changes_exactly_one_bit() {
+        let dir = std::env::temp_dir().join(format!("pamm_faultx_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("blob");
+        let original = vec![0xA5u8; 64];
+        std::fs::write(&p, &original).unwrap();
+        let mut rng = Xoshiro256::new(11);
+        let (byte, bit) = flip_bit_in_file(&p, &mut rng).unwrap();
+        let flipped = std::fs::read(&p).unwrap();
+        assert_eq!(flipped.len(), original.len());
+        let diff: Vec<usize> =
+            (0..64).filter(|&i| flipped[i] != original[i]).collect();
+        assert_eq!(diff, vec![byte]);
+        assert_eq!(flipped[byte] ^ original[byte], 1 << bit);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

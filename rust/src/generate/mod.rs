@@ -146,6 +146,22 @@ impl<'m> Decoder<'m> {
         &self.last_logits
     }
 
+    /// True iff every current logit is finite. Empty (pre-prefill)
+    /// counts as healthy — there is nothing to emit from yet.
+    pub fn logits_finite(&self) -> bool {
+        self.last_logits.iter().all(|v| v.is_finite())
+    }
+
+    /// Fault-injection hook (`faultx` / `pamm chaos`): overwrite the
+    /// current logits with NaN, simulating a numerically poisoned
+    /// decode. The serve loop's health check must quarantine this
+    /// session before it emits another token.
+    pub fn poison_last_logits(&mut self) {
+        for v in &mut self.last_logits {
+            *v = f32::NAN;
+        }
+    }
+
     /// Effective generator count after the prefill clamp.
     pub fn effective_k(&self) -> usize {
         self.layers.first().map_or(0, |l| l.comp.k())

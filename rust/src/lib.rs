@@ -23,8 +23,10 @@
 //!   incremental greedy decode over a PAMM-compressed KV cache,
 //!   `coordinator::serve`: deterministic continuous-batching loop,
 //!   `pamm generate` / `pamm serve-sim`), data pipeline, memory
-//!   accountant, experiment harness (one per paper table/figure — see
-//!   DESIGN.md).
+//!   accountant, the fault-injection & recovery subsystem (`faultx`:
+//!   seeded crash/corruption/poison plans, crash-safe checkpoint ring,
+//!   the `pamm chaos` campaign), experiment harness (one per paper
+//!   table/figure — see DESIGN.md).
 //!
 //! Python never runs on the request path: `make artifacts` once, then the
 //! Rust binary is self-contained.
@@ -43,6 +45,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod faultx;
 pub mod generate;
 pub mod jsonx;
 pub mod memory;

@@ -1,7 +1,7 @@
 //! `pamm` — leader entrypoint.
 //!
 //! Subcommands (see `cli::USAGE`): train / generate / serve-sim /
-//! finetune / reproduce / ledger / memory / kernels / list. Python
+//! chaos / finetune / reproduce / ledger / memory / kernels / list. Python
 //! never runs here: the native substrates are self-contained, and the
 //! artifact commands (`artifacts/*.hlo.txt` via the PJRT engine) are
 //! gated behind the `pjrt` cargo feature — without it they fail with a
@@ -52,6 +52,7 @@ fn real_main() -> Result<()> {
         "train" => cmd_train(&args),
         "generate" => cmd_generate(&args),
         "serve-sim" => cmd_serve_sim(&args),
+        "chaos" => cmd_chaos(&args),
         "finetune" => cmd_finetune(&args),
         "reproduce" => cmd_reproduce(&args),
         "ledger" => cmd_ledger(&args),
@@ -199,6 +200,7 @@ fn cmd_train_native(args: &Args, cfg: &RunConfig, quick: bool) -> Result<()> {
         opt: NativeOpt::adam(lr),
         seed: cfg.seed,
         ckpt_every: args.get_usize("ckpt-every")?.unwrap_or(if quick { 0 } else { 50 }),
+        keep_last: args.get_usize("keep-last")?.unwrap_or(3),
         run_dir: cfg.run_dir.clone(),
         run_name: format!("{}_native_k{}_s{}", cfg.model, k, cfg.seed),
         resume: args.get_bool("resume"),
@@ -362,8 +364,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
 /// through the continuous-batching serve loop
 /// (`coordinator::serve`, DESIGN.md §8) and render the latency
 /// percentiles, throughput, and compressed-vs-dense KV-cache savings.
+/// The degradation knobs (`--max-queue`, `--token-budget`,
+/// `--deadline-steps`, `--deadline-ms`) exercise the bounded-queue /
+/// budget / deadline paths (DESIGN.md §9) and surface per-status
+/// counters in the summary.
 fn cmd_serve_sim(args: &Args) -> Result<()> {
-    use pamm::coordinator::{scripted_load, serve, ServeConfig};
+    use pamm::coordinator::{scripted_load, serve, ServeConfig, SessionStatus};
     use pamm::memory::fmt_bytes;
     use pamm::model::{LmConfig, TransformerLM};
     use pamm::pamm::Eps;
@@ -384,7 +390,13 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
 
     let model = TransformerLM::new(mcfg.clone(), seed);
     let reqs = scripted_load(n, mcfg.vocab, seed ^ 0x5EED);
-    let scfg = ServeConfig { max_concurrent, k, eps, seed };
+    let mut scfg = ServeConfig::new(max_concurrent, k, eps, seed);
+    scfg.max_queue = args.get_usize("max-queue")?.unwrap_or(0);
+    scfg.token_budget = args.get_usize("token-budget")?.unwrap_or(0);
+    scfg.deadline_steps = args.get_usize("deadline-steps")?.unwrap_or(0);
+    if let Some(ms) = args.get_usize("deadline-ms")? {
+        scfg.deadline = Some(std::time::Duration::from_millis(ms as u64));
+    }
     let pool = pamm::poolx::global();
     println!(
         "serve-sim: {model_name} ({} layers, d_model {}, vocab {}) — {n} scripted requests, ≤{max_concurrent} concurrent, k={k}, threads {}",
@@ -397,28 +409,42 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
 
     let ms = |d: std::time::Duration| format!("{:.3}ms", d.as_secs_f64() * 1e3);
     println!(
-        "{:>4} {:>7} {:>6} {:>6} {:>5} {:>11} {:>12}",
-        "id", "arrive", "admit", "done", "toks", "latency", "cache saved"
+        "{:>4} {:>7} {:>6} {:>6} {:>5} {:>11} {:>12}  {:<11}",
+        "id", "arrive", "admit", "done", "toks", "latency", "cache saved", "status"
     );
     for c in &out.completions {
         println!(
-            "{:>4} {:>7} {:>6} {:>6} {:>5} {:>11} {:>12}",
+            "{:>4} {:>7} {:>6} {:>6} {:>5} {:>11} {:>12}  {:<11}{}",
             c.id,
             c.arrival,
             c.admitted_step,
             c.finished_step,
             c.tokens.len(),
             ms(c.latency),
-            fmt_bytes(c.cache_saved_bytes)
+            fmt_bytes(c.cache_saved_bytes),
+            c.status.name(),
+            c.diag.as_deref().map(|d| format!("  ({d})")).unwrap_or_default()
         );
+    }
+    for s in &out.shed {
+        println!("{:>4} {:>7}   shed at step {} (queue full)", s.id, s.arrival, s.shed_step);
     }
     println!(
         "{} requests over {} serve steps in {} — {:.1} tok/s ({} tokens)",
-        out.completions.len(),
+        out.completions.len() + out.shed.len(),
         out.steps,
         ms(out.wall),
         out.tokens_per_sec(),
         out.total_tokens()
+    );
+    println!(
+        "status: {} ok, {} truncated, {} timed-out, {} quarantined, {} rejected, {} shed",
+        out.count(SessionStatus::Ok),
+        out.count(SessionStatus::Truncated),
+        out.count(SessionStatus::TimedOut),
+        out.count(SessionStatus::Quarantined),
+        out.count(SessionStatus::Rejected),
+        out.shed.len()
     );
     println!(
         "latency p50 {}  p95 {}  p99 {}",
@@ -430,6 +456,32 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         "compressed KV caches saved {} vs dense K/V across the run",
         fmt_bytes(out.total_cache_saved_bytes())
     );
+    Ok(())
+}
+
+/// `pamm chaos` — the deterministic fault-injection campaign
+/// (`faultx::chaos`, DESIGN.md §9, EXPERIMENTS.md P15): scripted
+/// kills at checkpoint boundaries, checkpoint bitrot, poisoned serve
+/// sessions and burst overload, each verified against the fault-free
+/// baseline (bitwise recovery / survivor identity). Exits non-zero if
+/// any scenario fails. `--quick` is the CI smoke.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use pamm::faultx::chaos::{run_campaign, ChaosOpts};
+
+    let opts = ChaosOpts {
+        quick: args.get_bool("quick"),
+        seed: args.get_usize("seed")?.unwrap_or(0xC4A05) as u64,
+        dir: args.get_str("dir").unwrap_or_else(|| "target/chaos".into()),
+    };
+    println!(
+        "chaos campaign: seed {}, {} mode, scratch dir {}",
+        opts.seed,
+        if opts.quick { "quick" } else { "full" },
+        opts.dir
+    );
+    let report = run_campaign(&opts, pamm::poolx::global())?;
+    report.print_table();
+    anyhow::ensure!(report.passed(), "chaos campaign failed");
     Ok(())
 }
 
@@ -672,7 +724,7 @@ fn cmd_ledger_model(args: &Args, layers: usize) -> Result<()> {
                 Some(t.step_report(pamm::tensor::kernels::active(), &toks, &cold, Some(&ledger)));
         });
     });
-    let rep = report.expect("tracked step ran");
+    let rep = report.expect("tracked step ran")?;
     let shape = AttnShape::new(b, h, l, d, true);
     let dense_block = model::dense_block_saved_bytes(&cfg, &shape);
     let tail = model::tail_saved_bytes(&cfg, &shape);

@@ -6,7 +6,7 @@ use std::io::{BufWriter, Write};
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::jsonx::{self, Value};
 
@@ -216,6 +216,42 @@ impl RunLogger {
         self.csv.flush()?;
         Ok(())
     }
+
+    /// Flush + fsync both log files. The trainer calls this whenever a
+    /// checkpoint is written, so the crash-window contract holds under
+    /// real kills: every step row up to the last checkpoint is durable,
+    /// and a resumed run's `{"event":"resume"}` marker lands after a
+    /// prefix the disk actually has (`log_resume`'s replay rule).
+    pub fn sync(&mut self) -> Result<()> {
+        self.jsonl.flush()?;
+        self.jsonl.get_ref().sync_all()?;
+        self.csv.flush()?;
+        self.csv.get_ref().sync_all()?;
+        Ok(())
+    }
+}
+
+/// Replay a JSONL run log into a clean `(step, loss)` curve, applying
+/// the resume rule from [`RunLogger::log_resume`]: for any step, the
+/// row written after the LAST resume marker wins (replayed steps are
+/// bit-identical, so later rows simply overwrite earlier ones).
+/// This is how the chaos harness proves a crashed-and-recovered run's
+/// *logged* trajectory matches the uninterrupted one step for step.
+pub fn replay_run_log(dir: impl AsRef<Path>, run_name: &str) -> Result<Vec<(usize, f64)>> {
+    let path = dir.as_ref().join(format!("{run_name}.jsonl"));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("run log {}", path.display()))?;
+    let mut by_step: std::collections::BTreeMap<usize, f64> = std::collections::BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let v = jsonx::parse(line)
+            .with_context(|| format!("{}:{}: bad JSONL row", path.display(), lineno + 1))?;
+        if v.get("event").as_str() == Some("step") {
+            let step = v.req_usize("step")?;
+            let loss = v.get("loss").as_f64().context("step row missing loss")?;
+            by_step.insert(step, loss);
+        }
+    }
+    Ok(by_step.into_iter().collect())
 }
 
 #[cfg(test)]
@@ -289,6 +325,38 @@ mod tests {
         // One header + two data rows — no second header on append.
         assert_eq!(csv.lines().count(), 3, "{csv}");
         assert_eq!(csv.lines().filter(|l| l.starts_with("step,")).count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_applies_the_last_resume_wins_rule() {
+        let dir = std::env::temp_dir().join(format!("pamm_test_logs_replay_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            // Crash window: steps 0..3 logged, checkpoint at 2, the
+            // process dies; only rows the fsync landed survive.
+            let mut lg = RunLogger::create(&dir, "r").unwrap();
+            lg.log_step(0, 5.0, 5.0, None).unwrap();
+            lg.log_step(1, 4.5, 4.7, None).unwrap();
+            lg.sync().unwrap();
+            lg.log_step(2, 4.25, 4.5, None).unwrap();
+            lg.flush().unwrap(); // flushed but (conceptually) not durable
+        }
+        {
+            // Resume from the step-2 checkpoint: marker, then steps
+            // 2.. are re-logged bit-identically.
+            let mut lg = RunLogger::append(&dir, "r").unwrap();
+            lg.log_resume(2).unwrap();
+            lg.log_step(2, 4.25, 4.25, None).unwrap();
+            lg.log_step(3, 4.0, 4.2, None).unwrap();
+            lg.sync().unwrap();
+        }
+        let curve = replay_run_log(&dir, "r").unwrap();
+        assert_eq!(
+            curve,
+            vec![(0, 5.0), (1, 4.5), (2, 4.25), (3, 4.0)],
+            "replay must keep exactly one row per step"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,306 @@
+//! Fault-tolerance property tests (DESIGN.md §9, EXPERIMENTS.md P15):
+//!
+//! * **Kill-anywhere bit-parity** — a supervised run killed at EVERY
+//!   checkpoint boundary × every crash phase (before / mid-write /
+//!   after the checkpoint) recovers to a final checkpoint AND a
+//!   replayed run log bitwise identical to the uninterrupted run's.
+//! * **Checksum + ring fallback** — scripted bitrot in the newest ring
+//!   entry is detected by the CRC layer, reported as a diagnostic, and
+//!   recovery falls back to the previous verifying entry (truncation
+//!   behaves the same); the run still converges bitwise.
+//! * **Quarantine isolation** — a poisoned serve session is retired
+//!   with its clean token prefix while every surviving stream stays
+//!   bit-identical to the fault-free baseline at 1/2/4 workers.
+//! * **Degradation determinism** — shed / truncation / timeout
+//!   decisions under a burst load are pure functions of the script,
+//!   identical at every worker count.
+//! * **Plan replay** — a `FaultPlan` is a pure function of its seed:
+//!   the same seed reproduces the identical campaign.
+//!
+//! Run under both `PAMM_SIMD=native` (default) and `PAMM_SIMD=scalar`
+//! (CI does both).
+
+use std::path::PathBuf;
+
+use pamm::checkpoint::{self, CheckpointRing};
+use pamm::coordinator::{
+    checkpoint_boundaries, scripted_load, serve, serve_faulted, train_lm_native_run,
+    train_lm_supervised, LmRunConfig, NativeOpt, ServeConfig, SessionStatus,
+};
+use pamm::faultx::{CrashPhase, FaultPlan, TrainFault};
+use pamm::metrics::replay_run_log;
+use pamm::model::{LmConfig, TransformerLM};
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+use pamm::runtime::HostTensor;
+
+fn scratch(test: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pamm_prop_faults_{}_{test}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn train_rc(dir: &std::path::Path, run_name: &str) -> LmRunConfig {
+    LmRunConfig {
+        cfg: LmConfig { vocab: 120, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 },
+        batch: 1,
+        seq: 8,
+        steps: 8,
+        k: 4,
+        opt: NativeOpt::adam(3e-3),
+        seed: 33,
+        ckpt_every: 2,
+        keep_last: 3,
+        run_dir: dir.join(run_name).to_string_lossy().into_owned(),
+        run_name: run_name.to_string(),
+        resume: false,
+    }
+}
+
+fn final_tensors(rc: &LmRunConfig) -> Vec<(String, HostTensor)> {
+    checkpoint::load(format!("{}/ckpt", rc.run_dir), &rc.run_name).expect("final checkpoint")
+}
+
+fn replayed(rc: &LmRunConfig) -> Vec<(usize, u64)> {
+    replay_run_log(&rc.run_dir, &rc.run_name)
+        .expect("replay run log")
+        .into_iter()
+        .map(|(s, l)| (s, l.to_bits()))
+        .collect()
+}
+
+#[test]
+fn recovery_is_bitwise_identical_at_every_kill_point_and_phase() {
+    let dir = scratch("kill_sweep");
+    let pool = Pool::serial();
+    let base_rc = train_rc(&dir, "base");
+    train_lm_native_run(&base_rc, None, &pool, true).unwrap();
+    let base_final = final_tensors(&base_rc);
+    let base_log = replayed(&base_rc);
+    let boundaries = checkpoint_boundaries(&base_rc);
+    assert_eq!(boundaries, vec![2, 4, 6, 8]);
+
+    for (i, plan) in FaultPlan::every_boundary(33, &boundaries).iter().enumerate() {
+        let f = plan.crashes[0];
+        let rc = train_rc(&dir, &format!("kill_{i}"));
+        let out = train_lm_supervised(&rc, plan, &pool, true)
+            .unwrap_or_else(|e| panic!("kill s{}/{}: {e:#}", f.step, f.phase.name()));
+        assert_eq!(
+            out.crashes.len(),
+            1,
+            "kill s{}/{} never fired",
+            f.step,
+            f.phase.name()
+        );
+        assert_eq!(out.crashes[0].step, f.step);
+        assert_eq!(out.attempts, 2, "one crash ⇒ exactly one recovery launch");
+        assert_eq!(
+            final_tensors(&rc),
+            base_final,
+            "kill s{}/{}: final checkpoint drifted",
+            f.step,
+            f.phase.name()
+        );
+        assert_eq!(
+            replayed(&rc),
+            base_log,
+            "kill s{}/{}: replayed run log drifted",
+            f.step,
+            f.phase.name()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_newest_checkpoint_is_detected_and_recovery_falls_back() {
+    let dir = scratch("corruption");
+    let pool = Pool::serial();
+    let base_rc = train_rc(&dir, "base");
+    train_lm_native_run(&base_rc, None, &pool, true).unwrap();
+    let base_final = final_tensors(&base_rc);
+
+    // Kill right after the step-4 checkpoint landed, then bit-flip it:
+    // recovery must detect the flip (CRC), skip the entry with a
+    // diagnostic, and resume from the step-2 entry instead.
+    let rc = train_rc(&dir, "corrupt");
+    let plan = {
+        let mut p = FaultPlan::new(33);
+        p.crashes.push(TrainFault { step: 4, phase: CrashPhase::AfterCheckpoint });
+        p.with_corruption(0)
+    };
+    let out = train_lm_supervised(&rc, &plan, &pool, true).unwrap();
+    assert!(
+        out.recovery_diags.iter().any(|d| d.contains("injected corruption")),
+        "corruption injection missing from diags: {:?}",
+        out.recovery_diags
+    );
+    assert!(
+        out.recovery_diags.iter().any(|d| d.contains("failed verification")),
+        "CRC never flagged the flipped entry: {:?}",
+        out.recovery_diags
+    );
+    assert_eq!(out.resume_steps, vec![2], "must fall back past the corrupt step-4 entry");
+    assert_eq!(final_tensors(&rc), base_final, "post-fallback run drifted from baseline");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_ring_entry_falls_back_without_panicking() {
+    let dir = scratch("truncation");
+    let pool = Pool::serial();
+    let rc = train_rc(&dir, "trunc");
+    train_lm_native_run(&rc, None, &pool, true).unwrap();
+
+    let ring = CheckpointRing::new(format!("{}/ckpt", rc.run_dir), &rc.run_name, rc.keep_last);
+    let entries = ring.entries();
+    assert_eq!(entries.len(), 3, "keep_last=3 must retain 3 of the 4 boundary entries");
+    let &(newest, _) = entries.last().unwrap();
+    let blob = ring.blob_path(newest);
+    let bytes = std::fs::read(&blob).unwrap();
+    std::fs::write(&blob, &bytes[..bytes.len() / 2]).unwrap();
+
+    let (found, diags) = ring.load_latest_good();
+    let (step, tensors) = found.expect("older entries must still verify");
+    assert_eq!(step, entries[entries.len() - 2].0, "fallback target is the next-newest entry");
+    assert!(!tensors.is_empty());
+    assert_eq!(diags.len(), 1);
+    assert!(diags[0].contains("failed verification"), "{diags:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn serve_model() -> TransformerLM {
+    TransformerLM::new(LmConfig { vocab: 53, n_layers: 2, heads: 2, head_dim: 8, d_ff: 24 }, 41)
+}
+
+#[test]
+fn quarantine_leaves_every_surviving_stream_bitwise_unchanged() {
+    let model = serve_model();
+    let cfg = ServeConfig::new(3, 4, Eps::Inf, 2718);
+    let reqs = scripted_load(8, model.cfg.vocab, 7);
+    let clean = serve(&model, &cfg, &reqs, &Pool::serial()).unwrap();
+
+    let sessions: Vec<(usize, usize)> = reqs.iter().map(|r| (r.id, r.max_new)).collect();
+    let plan = FaultPlan::new(77).sample_poison(&sessions, 2);
+    assert_eq!(plan.poison.len(), 2);
+
+    let mut last: Option<Vec<(usize, Vec<i32>)>> = None;
+    for workers in [1usize, 2, 4] {
+        let pool =
+            if workers == 1 { Pool::serial() } else { Pool::new(workers).with_min_chunk(1) };
+        let out = serve_faulted(&model, &cfg, &reqs, Some(&plan), &pool).unwrap();
+        assert_eq!(out.completions.len(), reqs.len(), "every request must be accounted for");
+        assert_eq!(out.count(SessionStatus::Quarantined), 2, "at {workers} workers");
+        for c in &out.completions {
+            let base = clean.completions.iter().find(|k| k.id == c.id).unwrap();
+            match plan.poison_for(c.id) {
+                Some(site) => {
+                    assert_eq!(c.status, SessionStatus::Quarantined, "id {}", c.id);
+                    assert_eq!(c.tokens.len(), site.after_tokens, "id {}", c.id);
+                    assert_eq!(
+                        c.tokens[..],
+                        base.tokens[..site.after_tokens],
+                        "id {}: quarantined stream must be the clean prefix",
+                        c.id
+                    );
+                    assert!(c.diag.as_deref().unwrap_or("").contains("non-finite"));
+                }
+                None => {
+                    assert_eq!(c.status, SessionStatus::Ok, "id {}", c.id);
+                    assert_eq!(
+                        c.tokens, base.tokens,
+                        "id {}: survivor drifted at {workers} workers",
+                        c.id
+                    );
+                }
+            }
+        }
+        let streams: Vec<(usize, Vec<i32>)> =
+            out.completions.iter().map(|c| (c.id, c.tokens.clone())).collect();
+        if let Some(prev) = &last {
+            assert_eq!(&streams, prev, "faulted schedule drifted at {workers} workers");
+        }
+        last = Some(streams);
+    }
+}
+
+#[test]
+fn shed_truncate_and_timeout_decisions_are_worker_count_invariant() {
+    let model = serve_model();
+    let reqs: Vec<pamm::coordinator::ServeRequest> = scripted_load(8, model.cfg.vocab, 11)
+        .into_iter()
+        .map(|mut r| {
+            r.arrival = 0; // burst: everyone at once
+            r
+        })
+        .collect();
+    let mut cfg = ServeConfig::new(1, 4, Eps::Inf, 5);
+    cfg.max_queue = 2;
+    cfg.token_budget = 3;
+    cfg.deadline_steps = 2;
+
+    let fingerprint = |out: &pamm::coordinator::ServeOutcome| {
+        (
+            out.shed.iter().map(|s| (s.id, s.shed_step)).collect::<Vec<_>>(),
+            out.completions
+                .iter()
+                .map(|c| (c.id, c.status, c.tokens.clone(), c.admitted_step, c.finished_step))
+                .collect::<Vec<_>>(),
+        )
+    };
+    let serial = serve(&model, &cfg, &reqs, &Pool::serial()).unwrap();
+    assert!(!serial.shed.is_empty(), "queue of 2 must shed under an 8-request burst");
+    assert_eq!(serial.completions.len() + serial.shed.len(), reqs.len());
+    // Budget 3 < every requested max_new (≥ 4), deadline 2 < budget 3:
+    // every admitted session times out at 2 tokens before truncation.
+    for c in &serial.completions {
+        assert_eq!(c.status, SessionStatus::TimedOut, "id {}", c.id);
+        assert_eq!(c.tokens.len(), 2, "id {}", c.id);
+    }
+    for workers in [2usize, 4] {
+        let out = serve(&model, &cfg, &reqs, &Pool::new(workers).with_min_chunk(1)).unwrap();
+        assert_eq!(
+            fingerprint(&out),
+            fingerprint(&serial),
+            "degradation decisions drifted at {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn fault_plans_replay_identically_from_their_seed() {
+    let boundaries = [2usize, 4, 6, 8];
+    let sessions: Vec<(usize, usize)> = (0..6).map(|i| (i, 4 + i % 5)).collect();
+    let a = FaultPlan::sample_train(99, &boundaries, 2).sample_poison(&sessions, 2);
+    let b = FaultPlan::sample_train(99, &boundaries, 2).sample_poison(&sessions, 2);
+    assert_eq!(a, b, "same seed must reproduce the identical campaign");
+    let c = FaultPlan::sample_train(100, &boundaries, 2).sample_poison(&sessions, 2);
+    assert!(
+        a != c || a.crashes.is_empty(),
+        "different seeds should not collide on this tiny space"
+    );
+    // Structural guarantees the supervisor and serve loop rely on.
+    assert!(a.crashes.windows(2).all(|w| w[0].step < w[1].step), "crashes ascending");
+    for s in &a.poison {
+        let (_, max_new) = sessions[s.id];
+        assert!(s.after_tokens >= 1 && s.after_tokens <= max_new - 2);
+    }
+}
+
+#[test]
+fn malformed_requests_never_reach_a_session() {
+    let model = serve_model();
+    let cfg = ServeConfig::new(2, 4, Eps::Inf, 3);
+    let reqs = vec![
+        pamm::coordinator::ServeRequest { id: 0, arrival: 0, prompt: vec![], max_new: 4 },
+        pamm::coordinator::ServeRequest { id: 1, arrival: 0, prompt: vec![1, 2], max_new: 0 },
+        pamm::coordinator::ServeRequest { id: 2, arrival: 0, prompt: vec![1, -7], max_new: 4 },
+        pamm::coordinator::ServeRequest { id: 3, arrival: 1, prompt: vec![3, 4], max_new: 4 },
+    ];
+    let out = serve(&model, &cfg, &reqs, &Pool::serial()).unwrap();
+    assert_eq!(out.count(SessionStatus::Rejected), 3);
+    assert_eq!(out.count(SessionStatus::Ok), 1);
+    let ok = out.completions.iter().find(|c| c.status == SessionStatus::Ok).unwrap();
+    assert_eq!(ok.id, 3);
+    assert_eq!(ok.tokens.len(), 4);
+}

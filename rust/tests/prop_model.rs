@@ -310,7 +310,9 @@ fn training_trajectories_bit_identical_across_thread_counts() {
         let mut t = LmTrainer::new(cfg.clone(), batch, seq, 8, NativeOpt::adam(2e-3), 17);
         let mut it = BatchIterator::from_seed(cfg.vocab, batch, seq, 17);
         let losses: Vec<u32> =
-            (0..3).map(|_| t.train_step(&it.next_batch().tokens, pool, None).to_bits()).collect();
+            (0..3)
+            .map(|_| t.train_step(&it.next_batch().tokens, pool, None).unwrap().to_bits())
+            .collect();
         (losses, t.model.params)
     };
     let base = run(&Pool::serial());
@@ -388,7 +390,7 @@ fn measured_model_backward_peak_respects_the_model_level_bound() {
             report = Some(t.step_report(kernels::active(), &toks, &cold, Some(&ledger)));
         });
     });
-    let rep = report.unwrap();
+    let rep = report.unwrap().unwrap();
     assert_eq!(ledger.saved(), rep.saved_bytes, "ledger records the tape inventory exactly");
     let shape = pamm::attention::AttnShape::new(batch, cfg.heads, seq, cfg.head_dim, true);
     // The shared tail matches its analytic inventory to the byte, and
@@ -428,14 +430,16 @@ fn resumed_training_matches_an_uninterrupted_run_step_for_step() {
     let mut a = LmTrainer::new(cfg.clone(), batch, seq, 6, NativeOpt::adam(2e-3), seed);
     let mut it_a = BatchIterator::from_seed(cfg.vocab, batch, seq, seed);
     let losses_a: Vec<u32> =
-        (0..total).map(|_| a.train_step(&it_a.next_batch().tokens, &pool, None).to_bits()).collect();
+        (0..total)
+        .map(|_| a.train_step(&it_a.next_batch().tokens, &pool, None).unwrap().to_bits())
+        .collect();
 
     // Run B: train to the split, checkpoint, resume into a FRESH
     // trainer, fast-forward the stream, continue.
     let mut b1 = LmTrainer::new(cfg.clone(), batch, seq, 6, NativeOpt::adam(2e-3), seed);
     let mut it_b = BatchIterator::from_seed(cfg.vocab, batch, seq, seed);
     let mut losses_b: Vec<u32> = (0..split)
-        .map(|_| b1.train_step(&it_b.next_batch().tokens, &pool, None).to_bits())
+        .map(|_| b1.train_step(&it_b.next_batch().tokens, &pool, None).unwrap().to_bits())
         .collect();
     b1.save_checkpoint(&dir, "resume").unwrap();
     drop(b1);
@@ -446,7 +450,8 @@ fn resumed_training_matches_an_uninterrupted_run_step_for_step() {
     let mut it_b2 = BatchIterator::from_seed(cfg.vocab, batch, seq, seed);
     it_b2.skip_batches(split);
     losses_b.extend(
-        (split..total).map(|_| b2.train_step(&it_b2.next_batch().tokens, &pool, None).to_bits()),
+        (split..total)
+            .map(|_| b2.train_step(&it_b2.next_batch().tokens, &pool, None).unwrap().to_bits()),
     );
 
     assert_eq!(losses_a, losses_b, "resumed run must replay the loss trajectory bitwise");

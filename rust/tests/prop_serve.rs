@@ -32,7 +32,7 @@ fn serve_model() -> TransformerLM {
 }
 
 fn serve_cfg() -> ServeConfig {
-    ServeConfig { max_concurrent: 3, k: 4, eps: Eps::Inf, seed: 2718 }
+    ServeConfig::new(3, 4, Eps::Inf, 2718)
 }
 
 /// The per-session seed derivation `serve` uses (documented contract:
@@ -100,7 +100,7 @@ fn admission_is_fifo_nothing_starves_and_cache_accounting_is_exact() {
         ServeRequest { id: 2, arrival: 3, prompt: vec![6, 1, 2, 3, 4, 5], max_new: 3 },
         ServeRequest { id: 1, arrival: 7, prompt: vec![2, 4], max_new: 4 },
     ];
-    let cfg = ServeConfig { max_concurrent: 2, k: 3, eps: Eps::Inf, seed: 99 };
+    let cfg = ServeConfig::new(2, 3, Eps::Inf, 99);
     let out = serve(&model, &cfg, &reqs, &Pool::serial()).unwrap();
 
     // Nothing starves: every scripted request completes, with exactly
