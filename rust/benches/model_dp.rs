@@ -1,0 +1,118 @@
+//! Bench: native data-parallel fleet training — one full DP optimizer
+//! step (R workers × fwd + xent + tape backward, fixed rank-order
+//! all-reduce, Adam) per worker count × dispatch level × thread count.
+//! The acceptance trail for `coordinator::dp`:
+//! `benchmarks/BENCH_model_dp.json` → BENCHMARKS.md §model_dp.
+//!
+//! Ops are dispatch-tagged (`dp_step[avx2] w2`, …). GFLOP/s uses the
+//! standard parameter-flop model per microbatch, `6·N·tokens` with
+//! `N = LmConfig::param_count()`, scaled by the E = R·A microbatches a
+//! fleet step consumes — the figures compare worker counts against the
+//! R=1 row (which is bit-identical to the single-process trainer), not
+//! absolute kernel throughput. Every row is annotated with the fleet's
+//! aggregate saved-for-backward bytes (`saved_bytes` column): the
+//! paper's headline quantity scales with E while the ranks reduce in
+//! fixed order on one pool, so transient peaks stay per-microbatch.
+//!
+//! Run: `cargo bench --bench model_dp` (PAMM_BENCH_QUICK=1 for CI);
+//! render with `pamm bench-report`.
+
+use std::time::Duration;
+
+use pamm::benchx::{BenchOpts, BenchSink, Suite};
+use pamm::coordinator::{DpTrainer, NativeOpt};
+use pamm::memory::fmt_bytes;
+use pamm::model::LmConfig;
+use pamm::poolx::Pool;
+use pamm::tensor::kernels::Dispatch;
+
+fn opts() -> BenchOpts {
+    if std::env::var("PAMM_BENCH_QUICK").is_ok() {
+        BenchOpts { warmup_iters: 0, min_iters: 1, max_iters: 3, max_total: Duration::from_secs(2) }
+    } else {
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            max_total: Duration::from_secs(12),
+        }
+    }
+}
+
+fn main() {
+    // Worker-count sweep at a fixed block geometry (2 layers, heads=4,
+    // d=16 → d_model 64, d_ff 256, vocab 256), one 1×128 microbatch
+    // per rank per step, k = tokens/16.
+    let worker_counts: &[usize] = &[1, 2, 4];
+    let (batch, seq) = (1usize, 128usize);
+    let tokens = batch * seq;
+    let k = tokens / 16;
+    let cfg = LmConfig { vocab: 256, n_layers: 2, heads: 4, head_dim: 16, d_ff: 256 };
+    let native = Dispatch::native();
+    let threads: &[usize] = &[1, 2, 4];
+    let mut sink = BenchSink::new("model_dp");
+
+    println!("model_dp: native dispatch = {}", native.name());
+
+    for &workers in worker_counts {
+        let shape_s = format!(
+            "R={workers} A=1 b={batch} l={seq} L={} dm={} ff={} k={k}",
+            cfg.n_layers,
+            cfg.d_model(),
+            cfg.d_ff
+        );
+        let n_params = cfg.param_count() as f64;
+        // E microbatches of `6·N·tokens` per fleet step.
+        let step_flops = 6.0 * n_params * tokens as f64 * workers as f64;
+
+        let mut suite = Suite::with_opts(&format!("model_dp {shape_s}"), opts());
+        suite.header();
+
+        let mut plan: Vec<(Dispatch, usize)> = vec![(Dispatch::Scalar, 1)];
+        if native != Dispatch::Scalar {
+            plan.extend(threads.iter().map(|&t| (native, t)));
+        }
+        let mut fleet_saved = 0usize;
+        for &(disp, t) in &plan {
+            let tag = disp.name();
+            let pool = Pool::new(t);
+            let mut trainer =
+                DpTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(1e-3), 11, workers, 1);
+            let r = suite
+                .bench(&format!("dp_step[{tag}] w{workers} t={t}"), || {
+                    std::hint::black_box(
+                        trainer.step_report(disp, &pool, None).expect("bench step").loss,
+                    );
+                })
+                .clone();
+            sink.record_flops(&format!("dp_step[{tag}]"), &shape_s, t, &r, step_flops);
+            // Aggregate saved-for-backward of one fleet step (exact,
+            // from the tape inventory — identical at every dispatch).
+            let mut probe =
+                DpTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(1e-3), 11, workers, 1);
+            let rep = probe.step_report(disp, &pool, None).expect("probe step");
+            sink.annotate_saved_bytes(rep.saved_bytes);
+            fleet_saved = rep.saved_bytes;
+            println!("    -> {:.0} tok/s", r.rate((tokens * workers) as f64));
+        }
+
+        if let Some(sp) = suite.ratio(
+            &format!("dp_step[{}] w{workers} t=1", native.name()),
+            &format!("dp_step[scalar] w{workers} t=1"),
+        ) {
+            println!("  fleet step vs scalar (single thread, {}): {sp:.2}x", native.name());
+        }
+        println!(
+            "  aggregate saved-for-backward: {} across E={workers} microbatches (per-rank {})",
+            fmt_bytes(fleet_saved),
+            fmt_bytes(fleet_saved / workers.max(1)),
+        );
+    }
+
+    match sink.flush() {
+        Ok(path) => {
+            println!("\npersisted {} entries to {}", sink.entries().len(), path.display())
+        }
+        Err(e) => eprintln!("bench persistence failed: {e}"),
+    }
+}

@@ -19,6 +19,18 @@
 //! [`CheckpointRing`] retains the last N verified checkpoints of a run
 //! and [`CheckpointRing::load_latest_good`] falls back newest → oldest
 //! past corrupted or truncated entries, reporting each skip.
+//!
+//! # Sharded entries (DESIGN.md §10)
+//!
+//! Data-parallel runs write one shard blob per worker rank
+//! (`{base}.s{step}.r{rank}`, each itself an atomic CRC-checked
+//! checkpoint) and commit the entry with a tiny manifest under the
+//! plain entry name **after** every shard has fsynced — the manifest's
+//! `.json` rename is the commit point, so a kill between shard writes
+//! leaves no committed entry.
+//! [`CheckpointRing::load_latest_good_sharded`] requires the manifest
+//! and all of its shards to verify, falling back past entries with a
+//! missing, truncated or bit-rotted shard.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -357,6 +369,128 @@ impl CheckpointRing {
         }
         (None, diags)
     }
+
+    // -- sharded entries (data-parallel training, DESIGN.md §10) ------------
+
+    /// Checkpoint name of worker rank `rank`'s shard of the sharded
+    /// entry for `step`. The `.r{rank}` infix makes shard files
+    /// invisible to the plain [`CheckpointRing::entries`] scan (the
+    /// digits parse fails), so only the manifest — written last —
+    /// commits the entry.
+    pub fn shard_name(&self, step: usize, rank: usize) -> String {
+        format!("{}.r{rank}", self.entry_name(step))
+    }
+
+    /// Path of one shard's binary blob (bitrot-injection target).
+    pub fn shard_blob_path(&self, step: usize, rank: usize) -> PathBuf {
+        self.dir.join(format!("{}.bin", self.shard_name(step, rank)))
+    }
+
+    /// Save a sharded ring entry: one full checkpoint blob per worker
+    /// rank (each atomically written and CRC-checksummed on its own),
+    /// then a tiny manifest under the plain entry name. The manifest's
+    /// `.json` rename is the entry's **commit point** — it lands only
+    /// after every shard has fsynced, so a crash between shard writes
+    /// leaves no committed entry and recovery falls back to the
+    /// previous boundary.
+    pub fn save_sharded(
+        &self,
+        step: usize,
+        shards: &[Vec<(String, HostTensor)>],
+    ) -> Result<()> {
+        ensure!(!shards.is_empty(), "sharded ring entry step {step}: no shards");
+        for (rank, tensors) in shards.iter().enumerate() {
+            save(&self.dir, &self.shard_name(step, rank), tensors)
+                .with_context(|| format!("ring shard {rank} of step {step}"))?;
+        }
+        let manifest = vec![
+            ("meta.step".to_string(), HostTensor::i32(vec![1], vec![step as i32])),
+            ("meta.shards".to_string(), HostTensor::i32(vec![1], vec![shards.len() as i32])),
+        ];
+        self.save(step, &manifest)?;
+        self.prune_shards()
+    }
+
+    /// Shard count recorded in a committed entry's manifest (`None`
+    /// for a plain, unsharded entry).
+    pub fn manifest_shards(&self, step: usize) -> Option<usize> {
+        let tensors = load(&self.dir, &self.entry_name(step)).ok()?;
+        let (_, t) = tensors.iter().find(|(n, _)| n == "meta.shards")?;
+        t.as_i32().ok().and_then(|v| v.first().map(|&n| n.max(0) as usize))
+    }
+
+    /// Remove shard files whose step no longer has a committed
+    /// manifest — the retention GC for sharded entries (the manifest
+    /// ring itself is pruned by [`CheckpointRing::save`]).
+    fn prune_shards(&self) -> Result<()> {
+        let live: std::collections::BTreeSet<usize> =
+            self.entries().into_iter().map(|(s, _)| s).collect();
+        let prefix = format!("{}.s", self.base);
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return Ok(());
+        };
+        for entry in rd.flatten() {
+            let fname = entry.file_name();
+            let Some(fname) = fname.to_str() else { continue };
+            let Some(rest) = fname.strip_prefix(&prefix) else { continue };
+            // Shard files are `{digits}.r{digits}.{bin|json}`.
+            let Some((digits, shard_tail)) = rest.split_once(".r") else { continue };
+            let Ok(step) = digits.parse::<usize>() else { continue };
+            let is_shard = ["bin", "json"].iter().any(|ext| {
+                shard_tail
+                    .strip_suffix(&format!(".{ext}"))
+                    .map(|r| !r.is_empty() && r.bytes().all(|b| b.is_ascii_digit()))
+                    .unwrap_or(false)
+            });
+            if is_shard && !live.contains(&step) {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+        Ok(())
+    }
+
+    /// Newest sharded entry whose manifest **and every shard** verify,
+    /// fully loaded per rank — falling back past (and reporting) any
+    /// entry with a corrupted manifest or a missing/corrupt/truncated
+    /// shard. One bad shard disqualifies the whole entry: resuming a
+    /// fleet from a mixed-boundary state would break bitwise recovery.
+    #[allow(clippy::type_complexity)]
+    pub fn load_latest_good_sharded(
+        &self,
+    ) -> (Option<(usize, Vec<Vec<(String, HostTensor)>>)>, Vec<String>) {
+        let mut diags = Vec::new();
+        'entry: for (step, name) in self.entries().into_iter().rev() {
+            let manifest = match load(&self.dir, &name) {
+                Ok(t) => t,
+                Err(e) => {
+                    diags.push(format!("ring manifest `{name}` failed verification: {e:#}"));
+                    continue;
+                }
+            };
+            let n = manifest
+                .iter()
+                .find(|(k, _)| k == "meta.shards")
+                .and_then(|(_, t)| t.as_i32().ok().and_then(|v| v.first().copied()));
+            let Some(n) = n.map(|n| n.max(0) as usize).filter(|&n| n > 0) else {
+                diags.push(format!("ring entry `{name}` carries no `meta.shards` — skipping"));
+                continue;
+            };
+            let mut shards = Vec::with_capacity(n);
+            for rank in 0..n {
+                match load(&self.dir, &self.shard_name(step, rank)) {
+                    Ok(t) => shards.push(t),
+                    Err(e) => {
+                        diags.push(format!(
+                            "ring entry step {step}: shard {rank}/{n} failed verification: {e:#}"
+                        ));
+                        continue 'entry;
+                    }
+                }
+            }
+            return (Some((step, shards)), diags);
+        }
+        (None, diags)
+    }
 }
 
 /// Helper for writing CSV artifacts (fig5/6/7 outputs).
@@ -549,5 +683,94 @@ mod tests {
         write_csv(&p, "a,b", &["1,2".into(), "3,4".into()]).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text.lines().count(), 3);
+    }
+
+    fn shards_for(step: usize, n: usize) -> Vec<Vec<(String, HostTensor)>> {
+        (0..n)
+            .map(|r| {
+                vec![(
+                    format!("p{r}"),
+                    HostTensor::f32(vec![2], vec![step as f32, r as f32]),
+                )]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_entry_roundtrips_and_hides_shards_from_the_plain_scan() {
+        let dir = tmpdir("sharded_roundtrip");
+        let ring = CheckpointRing::new(&dir, "run", 3);
+        ring.save_sharded(2, &shards_for(2, 3)).unwrap();
+        // The plain scan sees only the manifest entry; `.r{rank}`
+        // files fail the digits parse.
+        assert_eq!(ring.entries().iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(ring.manifest_shards(2), Some(3));
+        let (found, diags) = ring.load_latest_good_sharded();
+        assert!(diags.is_empty(), "{diags:?}");
+        let (step, shards) = found.unwrap();
+        assert_eq!(step, 2);
+        assert_eq!(shards.len(), 3);
+        for (r, shard) in shards.iter().enumerate() {
+            assert_eq!(shard[0].0, format!("p{r}"));
+            assert_eq!(shard[0].1.as_f32().unwrap(), &[2.0, r as f32]);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_or_corrupt_shard_falls_back_to_the_previous_entry() {
+        let dir = tmpdir("sharded_fallback");
+        let ring = CheckpointRing::new(&dir, "run", 3);
+        ring.save_sharded(2, &shards_for(2, 2)).unwrap();
+        ring.save_sharded(4, &shards_for(4, 2)).unwrap();
+        // Delete one shard of the newest entry: the manifest still
+        // commits it, but recovery must fall back to step 2 with a
+        // diagnostic naming the missing shard.
+        std::fs::remove_file(ring.shard_blob_path(4, 1)).unwrap();
+        let (found, diags) = ring.load_latest_good_sharded();
+        assert_eq!(found.unwrap().0, 2);
+        assert!(
+            diags.iter().any(|d| d.contains("shard 1/2")),
+            "diagnostic must name the bad shard: {diags:?}"
+        );
+        // Same for bitrot inside a shard blob.
+        ring.save_sharded(6, &shards_for(6, 2)).unwrap();
+        let p = ring.shard_blob_path(6, 0);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let (found, diags) = ring.load_latest_good_sharded();
+        assert_eq!(found.unwrap().0, 4);
+        assert!(diags.iter().any(|d| d.contains("shard 0/2")), "{diags:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_retention_prunes_shard_files_with_their_manifest() {
+        let dir = tmpdir("sharded_prune");
+        let ring = CheckpointRing::new(&dir, "run", 2);
+        for step in [2usize, 4, 6] {
+            ring.save_sharded(step, &shards_for(step, 2)).unwrap();
+        }
+        assert_eq!(ring.entries().iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![4, 6]);
+        assert!(!ring.shard_blob_path(2, 0).exists(), "pruned entry's shards must go too");
+        assert!(!ring.shard_blob_path(2, 1).exists());
+        assert!(ring.shard_blob_path(4, 0).exists());
+        assert!(ring.shard_blob_path(6, 1).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn uncommitted_shards_without_a_manifest_are_invisible() {
+        // A crash between shard writes leaves shard files but no
+        // manifest: the entry must not exist for either loader.
+        let dir = tmpdir("sharded_uncommitted");
+        let ring = CheckpointRing::new(&dir, "run", 3);
+        ring.save_sharded(2, &shards_for(2, 2)).unwrap();
+        save(&dir, &ring.shard_name(4, 0), &shards_for(4, 2)[0]).unwrap();
+        assert_eq!(ring.entries().iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![2]);
+        let (found, _) = ring.load_latest_good_sharded();
+        assert_eq!(found.unwrap().0, 2, "uncommitted step-4 shards must be ignored");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

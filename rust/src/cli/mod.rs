@@ -96,11 +96,22 @@ USAGE:
   pamm train --native [--model M] [--steps N] [--batch N] [--seq N]
              [--k N | --r-inv N] [--lr F] [--seed N] [--ckpt-every N]
              [--keep-last N] [--resume] [--quiet]
+             [--workers R] [--grad-accum A] [--elastic] [--stall-budget N]
                                       # checkpoints are written atomically
                                       # (tmp+fsync+rename, CRC-checksummed)
                                       # into a keep-last-N ring; --resume
                                       # falls back past corrupt entries to
-                                      # the newest one that verifies
+                                      # the newest one that verifies.
+                                      # --workers R runs the data-parallel
+                                      # fleet: R logical workers on
+                                      # deterministic interleaved shards,
+                                      # fixed rank-order all-reduce (loss
+                                      # trajectory bit-identical for any
+                                      # R×A split of the effective batch;
+                                      # R=1 A=1 == the single-process path),
+                                      # sharded per-rank ring checkpoints;
+                                      # --elastic degrades onto survivors
+                                      # when a worker exceeds --stall-budget
   pamm train --quick                  # NATIVE multi-layer next-token
                                       # pretraining smoke (no artifacts):
                                       # model zoo geometry (default nano,
@@ -138,7 +149,7 @@ USAGE:
                                       # the queue (overflow = shed), clamp
                                       # per-session tokens (truncated) and
                                       # impose deadlines (timed-out)
-  pamm chaos [--quick] [--seed N] [--dir DIR]
+  pamm chaos [--quick] [--seed N] [--dir DIR] [--dp]
                                       # deterministic fault-injection
                                       # campaign: scripted kills at every
                                       # checkpoint boundary × phase (quick:
@@ -148,7 +159,12 @@ USAGE:
                                       # verified BITWISE against the
                                       # fault-free baseline; prints a
                                       # pass/fail table, exits non-zero on
-                                      # any failure
+                                      # any failure. --dp targets the
+                                      # data-parallel fleet instead: worker
+                                      # kills at every (rank × boundary ×
+                                      # phase), shard corruption + fallback,
+                                      # stragglers within/past the stall
+                                      # budget, elastic degradation
   pamm finetune --task NAME [--r-inv N] [--steps N] [--seed N]
   pamm reproduce <fig3a|fig3b|table1|table2a|table2b|table3|table4|table5|
                   table6|table7|fig4a|fig4b|fig5|fig6|fig7|attention|all>
@@ -171,6 +187,14 @@ USAGE:
                                       # per-block saved bytes vs dense,
                                       # model totals, backward peak checked
                                       # against the model-level bound
+  pamm ledger --workers R [--grad-accum A] [--layers N] [--shape BxHxLxD]
+              [--vocab N] [--d-ff N] [--k N | --r-inv N]
+                                      # data-parallel FLEET ledger: one cold
+                                      # tracked DP step, per-worker +
+                                      # aggregate saved-for-backward vs the
+                                      # dense baseline across R×A
+                                      # microbatches (ranks reduce in fixed
+                                      # order — peaks stay per-microbatch)
   pamm memory [--model M] [--batch N] [--seq N] [--r-inv N]
   pamm kernels [--artifacts DIR]      # validate native vs Pallas artifacts
   pamm kernels --probe                # print SIMD dispatch level, tile

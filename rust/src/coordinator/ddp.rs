@@ -1,4 +1,9 @@
-//! Simulated data-parallel training: gradient accumulation + all-reduce.
+//! Legacy PJRT-era simulated data-parallel training (feature `pjrt`
+//! only). The native path — deterministic rank-order reduce, sharded
+//! crash-safe checkpoints, elastic recovery — lives in
+//! [`crate::coordinator::dp`] (DESIGN.md §10); this module remains as
+//! the thin artifact-based shim for the PJRT build and carries no
+//! surface in the default build.
 //!
 //! The paper trains LLaMA-1B/7B with 8-GPU DDP (Table 2a). This host has
 //! one PJRT CPU device, so we reproduce the *coordination logic* exactly

@@ -1,0 +1,1174 @@
+//! Elastic fault-tolerant data-parallel LM training (DESIGN.md §10).
+//!
+//! [`DpTrainer`] runs `R` *logical* workers in fixed rank order over
+//! one shared model replica: each rank owns a deterministic
+//! interleaved shard of the global batch stream
+//! ([`data::BatchShard`](crate::data::BatchShard)) and its own slice
+//! of the generator-RNG stream, gradients accumulate microbatch by
+//! microbatch in **global stream order** (rank-order all-reduce = the
+//! partition-only rule the kernels already obey), and one optimizer
+//! update fires per step. Because the reduce order is the global
+//! microbatch order regardless of how microbatches are assigned to
+//! ranks, the loss trajectory is a function of the *effective batch*
+//! `E = R·A` alone: bit-identical at any physical thread count and
+//! SIMD level, identical across `R × A` factorizations of the same
+//! `E`, and `R = 1, A = 1` bit-matches the single-process
+//! [`LmTrainer`](crate::coordinator::lm::LmTrainer).
+//!
+//! # RNG partitioning
+//!
+//! There is exactly one logical generator stream — the same
+//! `seed ^ golden-ratio` stream the single-process trainer owns —
+//! advanced in global microbatch order. The model forward draws
+//! exactly two `sample_generators` calls per block per microbatch, so
+//! a rank fast-forwards past other ranks' slices by *replaying* those
+//! draws and discarding them ([`skip_microbatch_draws`]); replay (not
+//! arithmetic jump-ahead) stays exact even though rejection sampling
+//! consumes a variable number of raw RNG words.
+//!
+//! # Sharded checkpoints
+//!
+//! A boundary checkpoint is one ring entry of `R` shard blobs — shard
+//! `r` carries every parameter (and Adam moment) with index
+//! `i mod R == r`, plus that rank's RNG state and shard cursor — and a
+//! tiny manifest whose atomic rename commits the entry only after all
+//! shards fsync ([`CheckpointRing::save_sharded`]). Recovery falls
+//! back past any entry with a missing or corrupt shard
+//! ([`CheckpointRing::load_latest_good_sharded`]), and
+//! [`train_lm_dp_supervised`] proves the recovered trajectory bitwise
+//! identical to the uninterrupted run at every (rank × boundary ×
+//! phase) kill point (`rust/tests/prop_dp.rs`, `pamm chaos --dp`).
+//!
+//! # Elastic degradation
+//!
+//! A straggler that misses more deadline polls than the stall budget
+//! is declared dead. Non-elastic runs fail with a diagnostic; under
+//! `--elastic` the fleet drops the rank immediately (interim steps
+//! average over the survivors) and at the next checkpoint boundary
+//! **re-shards**: the global stream is re-interleaved across the
+//! survivors from the boundary's cursor — the dead rank's *future*
+//! data is redistributed, not lost — and the event is logged as
+//! `{"event":"reshard"}`. From that row on the determinism contract is
+//! restated as a function of the surviving worker set: same survivors,
+//! same boundary ⇒ the same bit-exact continuation.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::checkpoint::{self, CheckpointRing};
+use crate::coordinator::lm::{
+    apply_opt_update, check_finite_grads, opt_words, rng_words, words_to_state, LmRunConfig,
+    Moments,
+};
+use crate::coordinator::trainer::{NativeOpt, TrainOutcome};
+use crate::data::BatchShard;
+use crate::faultx::{self, CrashPhase, InjectedCrash, WorkerKill, WorkerStall};
+use crate::jsonx;
+use crate::memory::MemoryLedger;
+use crate::metrics::{perplexity, Ema, RunLogger, ThroughputMeter};
+use crate::model::{self, LmConfig, TransformerLM};
+use crate::pamm::{self, Eps};
+use crate::poolx::Pool;
+use crate::rngx::Xoshiro256;
+use crate::runtime::HostTensor;
+use crate::tensor::kernels::{self, Dispatch};
+use crate::tensor::Mat;
+
+/// The shared generator stream the whole fleet partitions — identical
+/// to the single-process trainer's stream, which is what makes
+/// `R = 1` a bit-match.
+fn base_stream(seed: u64) -> Xoshiro256 {
+    Xoshiro256::new(seed ^ 0x9E3779B97F4A7C15)
+}
+
+/// Fast-forward `rng` past `micro` microbatches' worth of generator
+/// draws by replaying them: the model forward draws exactly two
+/// `sample_generators(rng, tokens, k)` per block (attention, then
+/// MLP), so replay-and-discard advances the stream to exactly where a
+/// real forward would leave it — robust to the variable raw-word
+/// consumption of rejection sampling inside the RNG.
+pub(crate) fn skip_microbatch_draws(
+    rng: &mut Xoshiro256,
+    micro: usize,
+    n_layers: usize,
+    tokens: usize,
+    k: usize,
+) {
+    let k = k.clamp(1, tokens);
+    for _ in 0..micro {
+        for _ in 0..n_layers {
+            let _ = pamm::sample_generators(rng, tokens, k);
+            let _ = pamm::sample_generators(rng, tokens, k);
+        }
+    }
+}
+
+fn split_words(n: usize) -> Vec<i32> {
+    vec![(n as u64 & 0xFFFF_FFFF) as u32 as i32, ((n as u64) >> 32) as u32 as i32]
+}
+
+fn join_words(w: &[i32]) -> Result<usize> {
+    ensure!(w.len() == 2, "expected 2 cursor words, got {}", w.len());
+    let lo = w[0] as u32 as u64;
+    let hi = w[1] as u32 as u64;
+    Ok(((hi << 32) | lo) as usize)
+}
+
+/// One logical worker: its slice of the generator stream, its batch
+/// shard, and whether it is still part of the fleet. Dead workers keep
+/// their slot (the interleave pattern stays static) until the next
+/// checkpoint boundary reshards them away.
+struct DpWorker {
+    rank: usize,
+    rng: Xoshiro256,
+    shard: BatchShard,
+    alive: bool,
+}
+
+/// Everything one data-parallel step produced.
+#[derive(Debug)]
+pub struct DpStepReport {
+    /// Mean microbatch loss over the live fleet.
+    pub loss: f32,
+    /// Aggregate saved-for-backward bytes across all microbatch tapes.
+    pub saved_bytes: usize,
+    /// The same bytes per worker: `(rank, bytes over its A
+    /// microbatches)` — the `pamm ledger --workers` table rows.
+    pub per_worker_saved: Vec<(usize, usize)>,
+    /// Microbatches that actually contributed (`live workers × accum`;
+    /// shrinks between a death and the reshard boundary).
+    pub e_active: usize,
+}
+
+/// One elastic degradation event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DpReshard {
+    /// Checkpoint boundary (completed-step count) the reshard ran at.
+    pub step: usize,
+    pub dead_rank: usize,
+    /// Surviving worker count after the re-interleave.
+    pub workers: usize,
+}
+
+/// The data-parallel trainer: one model replica, `R` logical workers.
+pub struct DpTrainer {
+    pub model: TransformerLM,
+    pub batch: usize,
+    pub seq: usize,
+    pub k: usize,
+    pub eps: Eps,
+    opt: NativeOpt,
+    moments: Option<Vec<Moments>>,
+    step_no: usize,
+    seed: u64,
+    accum: usize,
+    workers: Vec<DpWorker>,
+    /// Global-stream batches consumed *or dropped* before the current
+    /// step — advances by `slots × accum` per optimizer step and
+    /// anchors the elastic re-interleave.
+    origin: usize,
+}
+
+impl DpTrainer {
+    /// Deterministic init: same model weights as
+    /// [`LmTrainer::new`](crate::coordinator::lm::LmTrainer::new)
+    /// under the same seed; worker `r`'s generator stream is the
+    /// shared stream fast-forwarded past ranks `0..r`'s first-step
+    /// microbatch draws.
+    pub fn new(
+        cfg: LmConfig,
+        batch: usize,
+        seq: usize,
+        k: usize,
+        opt: NativeOpt,
+        seed: u64,
+        workers: usize,
+        accum: usize,
+    ) -> Self {
+        assert!(workers >= 1 && accum >= 1, "dp trainer: workers/accum must be >= 1");
+        let model = TransformerLM::new(cfg, seed);
+        let moments = match opt {
+            NativeOpt::Sgd { .. } => None,
+            NativeOpt::Adam { .. } => {
+                Some(model.params.iter().map(Moments::zeros_like).collect())
+            }
+        };
+        let k = k.max(1);
+        let tokens = batch * seq;
+        let (n_layers, vocab) = (model.cfg.n_layers, model.cfg.vocab);
+        let mut stream = base_stream(seed);
+        let mut ws = Vec::with_capacity(workers);
+        for r in 0..workers {
+            ws.push(DpWorker {
+                rank: r,
+                rng: Xoshiro256::from_state(stream.state()),
+                shard: BatchShard::new(vocab, batch, seq, seed, r, workers, accum),
+                alive: true,
+            });
+            skip_microbatch_draws(&mut stream, accum, n_layers, tokens, k);
+        }
+        Self {
+            model,
+            batch,
+            seq,
+            k,
+            eps: Eps::Inf,
+            opt,
+            moments,
+            step_no: 0,
+            seed,
+            accum,
+            workers: ws,
+            origin: 0,
+        }
+    }
+
+    pub fn step_no(&self) -> usize {
+        self.step_no
+    }
+
+    /// Worker slots (live + dead-awaiting-reshard).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    pub fn is_live(&self, rank: usize) -> bool {
+        self.workers.iter().any(|w| w.rank == rank && w.alive)
+    }
+
+    pub fn accum(&self) -> usize {
+        self.accum
+    }
+
+    /// One data-parallel optimizer step with the active dispatch.
+    pub fn train_step(&mut self, pool: &Pool, ledger: Option<&MemoryLedger>) -> Result<DpStepReport> {
+        self.step_report(kernels::active(), pool, ledger)
+    }
+
+    /// [`DpTrainer::train_step`] with an explicit dispatch level.
+    ///
+    /// Ranks run in fixed rank order (the repo's `poolx` forbids
+    /// nested parallelism, so each microbatch's kernels parallelize
+    /// internally); gradients accumulate in global microbatch order
+    /// and are scaled by `1/E` only when `E > 1`, so the `E = 1` path
+    /// is bit-for-bit the single-process step. Fails — with
+    /// parameters, moments and step counter untouched — on a
+    /// non-finite loss or gradient, naming the offending worker.
+    pub fn step_report(
+        &mut self,
+        d: Dispatch,
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> Result<DpStepReport> {
+        let (batch, seq) = (self.batch, self.seq);
+        let live = self.live_workers();
+        ensure!(live >= 1, "dp step: no live workers");
+        let e_active = live * self.accum;
+        let names = model::param_names(&self.model.cfg);
+        let step = self.step_no + 1;
+        let accum = self.accum;
+        let mut acc: Option<Vec<Mat>> = None;
+        let mut loss_sum: Option<f32> = None;
+        let mut per_worker_saved = Vec::with_capacity(live);
+        let mut saved_total = 0usize;
+        for w in self.workers.iter_mut().filter(|w| w.alive) {
+            let mut w_saved = 0usize;
+            for _ in 0..accum {
+                let b = w.shard.next_batch();
+                let mut inputs = Vec::with_capacity(batch * seq);
+                let mut targets = Vec::with_capacity(batch * seq);
+                for r in 0..batch {
+                    let row = &b.tokens[r * (seq + 1)..(r + 1) * (seq + 1)];
+                    inputs.extend_from_slice(&row[..seq]);
+                    targets.extend_from_slice(&row[1..]);
+                }
+                let (loss, tape) = self.model.forward(
+                    d,
+                    &inputs,
+                    &targets,
+                    batch,
+                    seq,
+                    self.k,
+                    self.eps,
+                    &mut w.rng,
+                    pool,
+                    ledger,
+                );
+                ensure!(
+                    loss.is_finite(),
+                    "non-finite loss ({loss}) on worker {} at step {step}: training diverged; \
+                     parameters and optimizer moments left untouched",
+                    w.rank
+                );
+                w_saved += tape.saved_bytes();
+                let res = tape.backward(d, &self.model.params, pool, ledger);
+                check_finite_grads(&names, &res.params, step)
+                    .with_context(|| format!("worker {}", w.rank))?;
+                // Global-order accumulation: the first microbatch's
+                // gradients are *moved in*, not added to zeros — a
+                // `0.0 + g` pass could flip -0.0 signs and break the
+                // E = 1 bit-match with the single-process trainer.
+                match &mut acc {
+                    None => acc = Some(res.params),
+                    Some(a) => {
+                        for (av, g) in a.iter_mut().zip(&res.params) {
+                            for (x, &y) in av.data_mut().iter_mut().zip(g.data()) {
+                                *x += y;
+                            }
+                        }
+                    }
+                }
+                loss_sum = Some(match loss_sum {
+                    None => loss,
+                    Some(l) => l + loss,
+                });
+            }
+            per_worker_saved.push((w.rank, w_saved));
+            saved_total += w_saved;
+        }
+        let mut grads = acc.context("dp step produced no microbatches (invariant broken)")?;
+        let mut loss = loss_sum.context("dp step produced no loss (invariant broken)")?;
+        if e_active > 1 {
+            let scale = 1.0 / e_active as f32;
+            for g in &mut grads {
+                for v in g.data_mut() {
+                    *v *= scale;
+                }
+            }
+            loss *= scale;
+        }
+        self.step_no += 1;
+        apply_opt_update(self.opt, &mut self.model.params, self.moments.as_mut(), &grads, self.step_no)?;
+        // Fast-forward every live worker's generator stream past the
+        // other slots' draws (dead slots included — the interleave
+        // pattern stays static until the reshard boundary), landing
+        // each rank on its slice of the next step.
+        let width = self.workers.len() * accum;
+        let (tokens, k, n_layers) = (batch * seq, self.k, self.model.cfg.n_layers);
+        for w in self.workers.iter_mut().filter(|w| w.alive) {
+            skip_microbatch_draws(&mut w.rng, width - accum, n_layers, tokens, k);
+        }
+        self.origin += width;
+        Ok(DpStepReport { loss, saved_bytes: saved_total, per_worker_saved, e_active })
+    }
+
+    /// Declare `rank` dead (straggler past the stall budget). Its slot
+    /// keeps occupying the interleave — its microbatches are dropped,
+    /// interim steps average over the survivors — until
+    /// [`DpTrainer::reshard`] at the next checkpoint boundary.
+    pub fn mark_dead(&mut self, rank: usize) -> Result<()> {
+        let live = self.live_workers();
+        let w = self
+            .workers
+            .iter_mut()
+            .find(|w| w.rank == rank)
+            .with_context(|| format!("mark_dead: no worker with rank {rank}"))?;
+        ensure!(w.alive, "mark_dead: worker {rank} is already dead");
+        ensure!(
+            live >= 2,
+            "mark_dead: worker {rank} is the last live worker — nothing to degrade onto"
+        );
+        w.alive = false;
+        Ok(())
+    }
+
+    /// Re-interleave the global stream across the survivors from the
+    /// current cursor (`origin`): survivors become ranks `0..R′`, each
+    /// with a fresh shard and a generator stream reconstructed from
+    /// the shared base stream — the dead rank's future data is
+    /// redistributed, not lost. Returns the new worker count.
+    /// Checkpoints are only ever written *after* a pending reshard, so
+    /// a sharded entry never contains a dead worker.
+    pub fn reshard(&mut self) -> Result<usize> {
+        let live = self.live_workers();
+        ensure!(live >= 1, "reshard: no survivors");
+        ensure!(live < self.workers.len(), "reshard: no dead workers to drop");
+        let (batch, seq, k, accum, seed) = (self.batch, self.seq, self.k, self.accum, self.seed);
+        let (n_layers, vocab) = (self.model.cfg.n_layers, self.model.cfg.vocab);
+        let tokens = batch * seq;
+        // Rewind-by-replay: xoshiro cannot step backwards and the
+        // survivors' streams are already ahead, so rebuild the shared
+        // stream from scratch and fast-forward it to `origin`. O(origin)
+        // replayed draws — trivial next to one training step.
+        let mut stream = base_stream(seed);
+        skip_microbatch_draws(&mut stream, self.origin, n_layers, tokens, k);
+        let mut ws = Vec::with_capacity(live);
+        for slot in 0..live {
+            ws.push(DpWorker {
+                rank: slot,
+                rng: Xoshiro256::from_state(stream.state()),
+                shard: BatchShard::at_origin(vocab, batch, seq, seed, slot, live, accum, self.origin),
+                alive: true,
+            });
+            skip_microbatch_draws(&mut stream, accum, n_layers, tokens, k);
+        }
+        self.workers = ws;
+        Ok(live)
+    }
+
+    /// `[batch, seq, k, seed_lo, seed_hi, accum]` — the geometry
+    /// fingerprint every shard must match to be resumable (worker
+    /// count is *not* geometry: it lives in the ring manifest, and an
+    /// elastic run legitimately changes it).
+    fn geom_words(&self) -> Vec<i32> {
+        vec![
+            self.batch as i32,
+            self.seq as i32,
+            self.k as i32,
+            (self.seed & 0xFFFF_FFFF) as u32 as i32,
+            (self.seed >> 32) as u32 as i32,
+            self.accum as i32,
+        ]
+    }
+
+    /// The fleet state as one shard of named tensors per worker: shard
+    /// `r` carries every parameter (and Adam moment) with index
+    /// `i mod R == r`, plus the shared metadata and that rank's RNG
+    /// state and shard cursor. Refuses to snapshot a fleet with dead
+    /// workers — the run loop reshards first, so checkpoints are
+    /// always a clean R′-worker state.
+    pub fn shard_tensors(&self) -> Result<Vec<Vec<(String, HostTensor)>>> {
+        ensure!(
+            self.workers.iter().all(|w| w.alive),
+            "sharded checkpoint with dead workers (reshard must run first)"
+        );
+        let names = model::param_names(&self.model.cfg);
+        let r = self.workers.len();
+        let as_tensor = |m: &Mat| HostTensor::f32(vec![m.rows(), m.cols()], m.data().to_vec());
+        let mut shards = Vec::with_capacity(r);
+        for (slot, w) in self.workers.iter().enumerate() {
+            let mut t: Vec<(String, HostTensor)> = Vec::new();
+            for (i, (n, p)) in names.iter().zip(&self.model.params).enumerate() {
+                if i % r == slot {
+                    t.push((n.clone(), as_tensor(p)));
+                }
+            }
+            if let Some(ms) = &self.moments {
+                for (i, (n, st)) in names.iter().zip(ms).enumerate() {
+                    if i % r == slot {
+                        t.push((format!("opt_m.{n}"), as_tensor(&st.m)));
+                        t.push((format!("opt_v.{n}"), as_tensor(&st.v)));
+                    }
+                }
+            }
+            t.push(("meta.step".into(), HostTensor::i32(vec![1], vec![self.step_no as i32])));
+            t.push(("meta.geom".into(), HostTensor::i32(vec![6], self.geom_words())));
+            t.push(("meta.opt".into(), HostTensor::f32(vec![5], opt_words(self.opt))));
+            t.push(("meta.rank".into(), HostTensor::i32(vec![2], vec![slot as i32, r as i32])));
+            t.push(("meta.rng".into(), HostTensor::i32(vec![8], rng_words(w.rng.state()))));
+            t.push(("meta.cursor".into(), HostTensor::i32(vec![2], split_words(w.shard.cursor()))));
+            t.push(("meta.origin".into(), HostTensor::i32(vec![2], split_words(self.origin))));
+            shards.push(t);
+        }
+        Ok(shards)
+    }
+
+    /// Restore the fleet from a verified sharded ring entry. The shard
+    /// count is authoritative (an elastic run may have degraded since
+    /// this trainer was configured): the fleet is rebuilt at
+    /// `shards.len()` workers. Refuses geometry/optimizer/step
+    /// mismatches shard by shard, exactly like the single-process
+    /// resume contract.
+    pub fn restore_from_shards(&mut self, shards: Vec<Vec<(String, HostTensor)>>) -> Result<()> {
+        let r = shards.len();
+        ensure!(r >= 1, "restore: empty shard set");
+        let maps: Vec<std::collections::BTreeMap<String, HostTensor>> =
+            shards.into_iter().map(|s| s.into_iter().collect()).collect();
+        let want_geom = self.geom_words();
+        let want_opt = opt_words(self.opt);
+        let mut step = None;
+        for (slot, m) in maps.iter().enumerate() {
+            let geom =
+                m.get("meta.geom").with_context(|| format!("shard {slot}: missing `meta.geom`"))?;
+            let g = geom.as_i32()?;
+            ensure!(
+                g == &want_geom[..],
+                "shard {slot} was trained with batch/seq/k/seed/accum = {g:?}, trainer uses \
+                 {want_geom:?} — resuming would silently diverge from the original run"
+            );
+            let opt =
+                m.get("meta.opt").with_context(|| format!("shard {slot}: missing `meta.opt`"))?;
+            let got = opt.as_f32()?;
+            ensure!(
+                got.iter().map(|v| v.to_bits()).eq(want_opt.iter().map(|v| v.to_bits())),
+                "shard {slot} optimizer {got:?} differs from the trainer's {want_opt:?}"
+            );
+            let rank =
+                m.get("meta.rank").with_context(|| format!("shard {slot}: missing `meta.rank`"))?;
+            let rk = rank.as_i32()?;
+            ensure!(
+                rk == [slot as i32, r as i32],
+                "shard {slot}: rank stamp {rk:?} does not match its position in the {r}-shard set"
+            );
+            let s = m
+                .get("meta.step")
+                .with_context(|| format!("shard {slot}: missing `meta.step`"))?
+                .as_i32()?[0]
+                .max(0) as usize;
+            match step {
+                None => step = Some(s),
+                Some(prev) => ensure!(prev == s, "shards disagree on the step: {prev} vs {s}"),
+            }
+        }
+        let names = model::param_names(&self.model.cfg);
+        let restore = |dst: &mut Mat,
+                       key: &str,
+                       map: &std::collections::BTreeMap<String, HostTensor>|
+         -> Result<()> {
+            let t = map.get(key).with_context(|| format!("shard set missing `{key}`"))?;
+            ensure!(
+                t.shape() == [dst.rows(), dst.cols()],
+                "checkpoint `{key}`: shape {:?} vs model {}x{}",
+                t.shape(),
+                dst.rows(),
+                dst.cols()
+            );
+            dst.data_mut().copy_from_slice(t.as_f32()?);
+            Ok(())
+        };
+        for (i, (n, p)) in names.iter().zip(self.model.params.iter_mut()).enumerate() {
+            restore(p, n, &maps[i % r])?;
+        }
+        match &mut self.moments {
+            Some(ms) => {
+                ensure!(
+                    maps[0].contains_key(&format!("opt_m.{}", names[0])),
+                    "checkpoint has no Adam moments but the trainer uses Adam"
+                );
+                for (i, (n, st)) in names.iter().zip(ms.iter_mut()).enumerate() {
+                    restore(&mut st.m, &format!("opt_m.{n}"), &maps[i % r])?;
+                    restore(&mut st.v, &format!("opt_v.{n}"), &maps[i % r])?;
+                }
+            }
+            None => {
+                if maps[0].contains_key(&format!("opt_m.{}", names[0])) {
+                    bail!("checkpoint carries Adam moments but the trainer uses SGD");
+                }
+            }
+        }
+        self.step_no = step.unwrap_or(0);
+        self.origin = join_words(
+            maps[0].get("meta.origin").context("shard 0: missing `meta.origin`")?.as_i32()?,
+        )?;
+        let (vocab, batch, seq, seed, accum) =
+            (self.model.cfg.vocab, self.batch, self.seq, self.seed, self.accum);
+        let mut ws = Vec::with_capacity(r);
+        for (slot, m) in maps.iter().enumerate() {
+            let rng = Xoshiro256::from_state(words_to_state(
+                m.get("meta.rng")
+                    .with_context(|| format!("shard {slot}: missing `meta.rng`"))?
+                    .as_i32()?,
+            )?);
+            let cursor = join_words(
+                m.get("meta.cursor")
+                    .with_context(|| format!("shard {slot}: missing `meta.cursor`"))?
+                    .as_i32()?,
+            )?;
+            ws.push(DpWorker {
+                rank: slot,
+                rng,
+                shard: BatchShard::from_cursor(vocab, batch, seq, seed, slot, r, accum, cursor),
+                alive: true,
+            });
+        }
+        self.workers = ws;
+        Ok(())
+    }
+
+    /// The merged full-model view — what the final plain
+    /// `{run_name}.bin/json` checkpoint carries for downstream
+    /// consumers (`pamm generate --ckpt` reads parameters by name).
+    /// Sharded ring entries, not this file, are the resume format.
+    pub fn merged_tensors(&self) -> Vec<(String, HostTensor)> {
+        let names = model::param_names(&self.model.cfg);
+        let mut tensors = Vec::with_capacity(self.model.params.len() + 1);
+        for (n, p) in names.iter().zip(&self.model.params) {
+            tensors.push((n.clone(), HostTensor::f32(vec![p.rows(), p.cols()], p.data().to_vec())));
+        }
+        tensors.push(("meta.step".into(), HostTensor::i32(vec![1], vec![self.step_no as i32])));
+        tensors
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The run loop (`pamm train --native --workers R`)
+// ---------------------------------------------------------------------------
+
+/// Run configuration for one data-parallel run: the single-process
+/// config plus the fleet shape. `base.batch` is the *per-microbatch*
+/// batch size; the effective batch is `workers × accum × base.batch`
+/// rows per optimizer step.
+#[derive(Debug, Clone)]
+pub struct DpRunConfig {
+    pub base: LmRunConfig,
+    pub workers: usize,
+    /// Gradient-accumulation microbatches per worker per step.
+    pub accum: usize,
+    /// Degrade onto the survivors when a worker dies (vs failing).
+    pub elastic: bool,
+    /// Deadline polls a stalled worker may miss before it is declared
+    /// dead.
+    pub stall_budget: usize,
+}
+
+impl DpRunConfig {
+    pub fn effective_batch(&self) -> usize {
+        self.workers * self.accum * self.base.batch
+    }
+}
+
+/// What [`train_lm_dp_native_run`] produced beyond the outcome.
+#[derive(Debug)]
+pub struct DpRunReport {
+    pub outcome: TrainOutcome,
+    pub resumed_from: Option<usize>,
+    /// Ring diagnostics: every manifest/shard that failed verification
+    /// on the way to the newest good entry.
+    pub recovery_diags: Vec<String>,
+    /// Elastic degradation events, in firing order.
+    pub reshards: Vec<DpReshard>,
+    /// Stalls absorbed by the retry/backoff budget.
+    pub stalls_recovered: usize,
+    /// Fleet size at the end of the run (< configured `workers` after
+    /// an elastic death).
+    pub workers_final: usize,
+}
+
+/// Write the sharded boundary checkpoint for `step` (+ the merged
+/// plain checkpoint at the final boundary), then fsync the run log.
+/// An armed [`WorkerKill`] for this boundary turns the call into the
+/// scripted kill instead: shards `0..rank` land, then the fleet dies
+/// before / halfway through / right after rank's shard — for the two
+/// early phases no manifest was committed, so the partial entry is
+/// invisible to recovery.
+fn write_dp_boundary_checkpoint(
+    t: &DpTrainer,
+    rc: &DpRunConfig,
+    ring: &CheckpointRing,
+    logger: &mut RunLogger,
+    step: usize,
+    kill: Option<&WorkerKill>,
+) -> Result<()> {
+    let armed = kill.filter(|k| k.step == step);
+    let shards = t.shard_tensors()?;
+    if let Some(k) = armed {
+        // An elastic run may have shrunk below the scripted rank;
+        // clamp so every scripted kill still fires.
+        let rank = k.rank.min(shards.len() - 1);
+        match k.phase {
+            CrashPhase::BeforeCheckpoint | CrashPhase::MidCheckpointWrite => {
+                for (r, shard) in shards.iter().take(rank).enumerate() {
+                    checkpoint::save(ring.dir(), &ring.shard_name(step, r), shard)?;
+                }
+                if k.phase == CrashPhase::MidCheckpointWrite {
+                    checkpoint::save_interrupted(
+                        ring.dir(),
+                        &ring.shard_name(step, rank),
+                        &shards[rank],
+                        50,
+                    )?;
+                }
+                logger.sync()?;
+                return Err(InjectedCrash { step, phase: k.phase }.into());
+            }
+            CrashPhase::AfterCheckpoint => {}
+        }
+    }
+    ring.save_sharded(step, &shards).with_context(|| format!("sharded checkpoint boundary {step}"))?;
+    if step == rc.base.steps {
+        checkpoint::save(ring.dir(), &rc.base.run_name, &t.merged_tensors())
+            .with_context(|| format!("final merged checkpoint `{}`", rc.base.run_name))?;
+    }
+    logger.sync()?;
+    if let Some(k) = armed {
+        return Err(InjectedCrash { step, phase: k.phase }.into());
+    }
+    Ok(())
+}
+
+/// Data-parallel native pretraining end to end — the production entry
+/// point `pamm train --native --workers R` drives.
+pub fn train_lm_dp_native(rc: &DpRunConfig, pool: &Pool, quiet: bool) -> Result<TrainOutcome> {
+    Ok(train_lm_dp_native_run(rc, None, &[], pool, quiet)?.outcome)
+}
+
+/// [`train_lm_dp_native`] with an optional armed worker kill and
+/// scripted stragglers — the fault-injection entry point the DP
+/// supervisor and `pamm chaos --dp` drive. With no faults armed this
+/// *is* the production run loop.
+pub fn train_lm_dp_native_run(
+    rc: &DpRunConfig,
+    kill: Option<&WorkerKill>,
+    stalls: &[WorkerStall],
+    pool: &Pool,
+    quiet: bool,
+) -> Result<DpRunReport> {
+    let b = &rc.base;
+    ensure!(b.steps > 0, "dp train: steps must be > 0");
+    ensure!(rc.workers >= 1 && rc.accum >= 1, "dp train: workers/accum must be >= 1");
+    let mut t =
+        DpTrainer::new(b.cfg.clone(), b.batch, b.seq, b.k, b.opt, b.seed, rc.workers, rc.accum);
+    let ckpt_dir = format!("{}/ckpt", b.run_dir);
+    let ring = CheckpointRing::new(&ckpt_dir, &b.run_name, b.keep_last);
+    let mut resumed_from = None;
+    let mut recovery_diags = Vec::new();
+    if b.resume {
+        let (found, diags) = ring.load_latest_good_sharded();
+        for d in &diags {
+            if !quiet {
+                println!("recovery: {d}");
+            }
+        }
+        recovery_diags = diags;
+        if let Some((_, shards)) = found {
+            t.restore_from_shards(shards)?;
+            resumed_from = Some(t.step_no());
+            if !quiet {
+                println!(
+                    "resumed `{}` at step {} with {} worker(s)",
+                    b.run_name,
+                    t.step_no(),
+                    t.workers()
+                );
+            }
+        }
+    }
+    ensure!(
+        t.step_no() <= b.steps,
+        "checkpoint is at step {} but the run asks for {} steps",
+        t.step_no(),
+        b.steps
+    );
+    if t.step_no() == b.steps {
+        // Already complete (a kill right after the final entry landed
+        // can still have lost the merged checkpoint — rewrite it; the
+        // state is bit-identical so the overwrite is idempotent).
+        checkpoint::save(&ckpt_dir, &b.run_name, &t.merged_tensors())?;
+        if !quiet {
+            println!("run `{}` is already at its final step {} — nothing to do", b.run_name, b.steps);
+        }
+        return Ok(DpRunReport {
+            outcome: TrainOutcome {
+                run_name: b.run_name.clone(),
+                steps: b.steps,
+                final_loss: f32::NAN,
+                final_eval_loss: None,
+                final_ppl: None,
+                tokens_per_sec: None,
+                curve: Vec::new(),
+            },
+            resumed_from,
+            recovery_diags,
+            reshards: Vec::new(),
+            stalls_recovered: 0,
+            workers_final: t.workers(),
+        });
+    }
+
+    let mut logger = if resumed_from.is_some() {
+        let mut l = RunLogger::append(&b.run_dir, &b.run_name)?;
+        l.log_resume(t.step_no())?;
+        l
+    } else {
+        RunLogger::create(&b.run_dir, &b.run_name)?
+    };
+    let mut ema = Ema::new(0.05);
+    let mut meter = ThroughputMeter::new(2.min(b.steps / 4));
+    let mut curve = Vec::new();
+    let mut last_loss = f32::NAN;
+    let mut reshards: Vec<DpReshard> = Vec::new();
+    let mut stalls_recovered = 0usize;
+    let mut pending_dead: Vec<usize> = Vec::new();
+
+    for s in t.step_no()..b.steps {
+        // Scripted stragglers: a virtual per-step deadline poll loop.
+        // Within the budget the retry/backoff absorbs the stall (the
+        // step result is unchanged — determinism holds); past it the
+        // rank is declared dead.
+        for st in stalls.iter().filter(|st| st.step == s) {
+            if !t.is_live(st.rank) {
+                continue;
+            }
+            if st.polls <= rc.stall_budget {
+                logger.log_stall(s, st.rank, st.polls, true)?;
+                stalls_recovered += 1;
+                if !quiet {
+                    println!(
+                        "worker {} stalled for {} poll(s) at step {s}; recovered within budget {}",
+                        st.rank, st.polls, rc.stall_budget
+                    );
+                }
+            } else {
+                logger.log_stall(s, st.rank, st.polls, false)?;
+                if !rc.elastic {
+                    bail!(
+                        "worker {} missed {} deadline poll(s) at step {s} (stall budget {}); \
+                         rerun with --elastic to degrade onto the survivors instead of failing",
+                        st.rank,
+                        st.polls,
+                        rc.stall_budget
+                    );
+                }
+                t.mark_dead(st.rank).with_context(|| format!("declaring worker {} dead", st.rank))?;
+                pending_dead.push(st.rank);
+                if !quiet {
+                    println!(
+                        "worker {} declared dead at step {s} ({} polls > budget {}); \
+                         degrading elastically",
+                        st.rank, st.polls, rc.stall_budget
+                    );
+                }
+            }
+        }
+        let rep =
+            t.train_step(pool, None).with_context(|| format!("run `{}` step {s}", b.run_name))?;
+        meter.step(rep.e_active * b.batch * (b.seq + 1));
+        last_loss = rep.loss;
+        let sm = ema.update(rep.loss as f64);
+        if s % (b.steps / 50).max(1) == 0 || s + 1 == b.steps {
+            curve.push((s, rep.loss));
+            logger.log_step(s, rep.loss as f64, sm, meter.tokens_per_sec())?;
+            if !quiet {
+                println!(
+                    "step {s:>5}  loss {:7.4}  ema {sm:7.4}  ppl {:8.2}  workers {}  tok/s {}",
+                    rep.loss,
+                    perplexity(sm),
+                    rep.e_active / rc.accum,
+                    meter
+                        .tokens_per_sec()
+                        .map(|t| format!("{t:.0}"))
+                        .unwrap_or_else(|| "-".into())
+                );
+            }
+        }
+        let boundary =
+            (b.ckpt_every > 0 && (s + 1) % b.ckpt_every == 0 && s + 1 < b.steps) || s + 1 == b.steps;
+        if boundary {
+            if !pending_dead.is_empty() {
+                let survivors = t.reshard()?;
+                for dead in pending_dead.drain(..) {
+                    logger.log_reshard(s + 1, dead, survivors)?;
+                    reshards.push(DpReshard { step: s + 1, dead_rank: dead, workers: survivors });
+                    if !quiet {
+                        println!(
+                            "resharded at boundary {}: rank {dead} dropped, {survivors} \
+                             worker(s) re-interleaved",
+                            s + 1
+                        );
+                    }
+                }
+            }
+            write_dp_boundary_checkpoint(&t, rc, &ring, &mut logger, s + 1, kill)?;
+        }
+    }
+
+    let tok_s = meter.tokens_per_sec();
+    logger.log_summary(vec![
+        ("final_loss", jsonx::num(last_loss as f64)),
+        ("steps", jsonx::num(b.steps as f64)),
+        ("layers", jsonx::num(b.cfg.n_layers as f64)),
+        ("k", jsonx::num(b.k as f64)),
+        ("workers", jsonx::num(t.workers() as f64)),
+        ("grad_accum", jsonx::num(rc.accum as f64)),
+        ("tok_s", tok_s.map(jsonx::num).unwrap_or(jsonx::Value::Null)),
+    ])?;
+
+    Ok(DpRunReport {
+        outcome: TrainOutcome {
+            run_name: b.run_name.clone(),
+            steps: b.steps,
+            final_loss: last_loss,
+            final_eval_loss: None,
+            final_ppl: None,
+            tokens_per_sec: tok_s,
+            curve,
+        },
+        resumed_from,
+        recovery_diags,
+        reshards,
+        stalls_recovered,
+        workers_final: t.workers(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The fleet crash supervisor
+// ---------------------------------------------------------------------------
+
+/// What a supervised data-parallel run went through on its way to the
+/// final [`TrainOutcome`].
+#[derive(Debug)]
+pub struct DpSupervisedOutcome {
+    pub outcome: TrainOutcome,
+    /// Total run-loop launches (1 = no kill fired).
+    pub attempts: usize,
+    /// Every scripted worker kill that fired, in order.
+    pub kills: Vec<WorkerKill>,
+    /// Step each recovery resumed from.
+    pub resume_steps: Vec<usize>,
+    /// Ring diagnostics plus injected-corruption notes.
+    pub recovery_diags: Vec<String>,
+    /// Elastic degradation events of the completing attempt.
+    pub reshards: Vec<DpReshard>,
+    pub stalls_recovered: usize,
+    pub workers_final: usize,
+}
+
+/// Supervise [`train_lm_dp_native_run`] under a [`faultx::FaultPlan`]:
+/// run, catch the injected worker kill, re-open the sharded ring,
+/// resume the whole fleet from the newest entry whose manifest *and
+/// every shard* verify, repeat until the run completes. Attempt `i`
+/// arms `plan.worker_kills[i]`; scripted stalls replay on every
+/// attempt (they are survivable and deterministic, so replaying keeps
+/// attempts trajectory-equal). If the plan scripts corruption, one
+/// seeded bit flips in a seeded shard of the newest entry before the
+/// corresponding recovery — forcing the per-shard checksum-detect +
+/// whole-entry fallback path. A real error propagates immediately.
+///
+/// Because sharded resume is bit-exact and both the batch and
+/// generator streams are pure functions of `(seed, position)`, the
+/// returned outcome is bitwise identical to the kill-free run's at
+/// every (rank × boundary × phase) kill point — the property
+/// `prop_dp.rs` and `pamm chaos --dp` assert.
+pub fn train_lm_dp_supervised(
+    rc: &DpRunConfig,
+    plan: &faultx::FaultPlan,
+    pool: &Pool,
+    quiet: bool,
+) -> Result<DpSupervisedOutcome> {
+    let mut rc2 = rc.clone();
+    let ckpt_dir = format!("{}/ckpt", rc.base.run_dir);
+    let ring = CheckpointRing::new(&ckpt_dir, &rc.base.run_name, rc.base.keep_last);
+    let mut kills: Vec<WorkerKill> = Vec::new();
+    let mut resume_steps = Vec::new();
+    let mut recovery_diags = Vec::new();
+    // Every armed kill fires at most once, so kills.len() + 1 launches
+    // always suffice; the bound exists so a supervisor bug cannot loop
+    // forever.
+    let max_attempts = plan.worker_kills.len() + 1;
+    for attempt in 0..max_attempts {
+        let kill = plan.worker_kills.get(kills.len());
+        match train_lm_dp_native_run(&rc2, kill, &plan.stalls, pool, quiet) {
+            Ok(rep) => {
+                if let Some(s) = rep.resumed_from {
+                    resume_steps.push(s);
+                }
+                recovery_diags.extend(rep.recovery_diags);
+                return Ok(DpSupervisedOutcome {
+                    outcome: rep.outcome,
+                    attempts: attempt + 1,
+                    kills,
+                    resume_steps,
+                    recovery_diags,
+                    reshards: rep.reshards,
+                    stalls_recovered: rep.stalls_recovered,
+                    workers_final: rep.workers_final,
+                });
+            }
+            Err(e) => {
+                let Some(crash) = faultx::injected_crash(&e) else {
+                    return Err(e);
+                };
+                let Some(&armed) = kill else {
+                    return Err(e);
+                };
+                if !quiet {
+                    println!(
+                        "supervisor: caught {crash} (worker {}); recovering the fleet from the \
+                         sharded ring",
+                        armed.rank
+                    );
+                }
+                if plan.corrupt_after_attempt == Some(kills.len()) {
+                    // Scripted bitrot in one seeded shard of the
+                    // newest committed entry (if any): recovery must
+                    // detect it and fall back a whole entry.
+                    if let Some(&(step, _)) = ring.entries().last() {
+                        if let Some(n) = ring.manifest_shards(step).filter(|&n| n > 0) {
+                            let mut rng =
+                                Xoshiro256::fold_in(plan.seed, 0xB17F, kills.len() as u64);
+                            let shard = rng.next_below(n as u64) as usize;
+                            let (byte, bit) = faultx::flip_bit_in_file(
+                                ring.shard_blob_path(step, shard),
+                                &mut rng,
+                            )?;
+                            recovery_diags.push(format!(
+                                "injected corruption: flipped bit {bit} of byte {byte} in shard \
+                                 {shard} of ring entry step {step}"
+                            ));
+                        }
+                    }
+                }
+                kills.push(armed);
+                rc2.base.resume = true;
+            }
+        }
+    }
+    bail!(
+        "dp supervisor: plan with {} worker kill(s) did not converge within {max_attempts} attempts",
+        plan.worker_kills.len()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::lm::LmTrainer;
+    use crate::data::BatchIterator;
+
+    fn tiny_cfg() -> LmConfig {
+        LmConfig { vocab: 120, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 }
+    }
+
+    fn param_bits(params: &[Mat]) -> Vec<Vec<u32>> {
+        params.iter().map(|p| p.data().iter().map(|v| v.to_bits()).collect()).collect()
+    }
+
+    #[test]
+    fn microbatch_rng_skip_matches_a_real_forward() {
+        let cfg = tiny_cfg();
+        let model = TransformerLM::new(cfg.clone(), 3);
+        let (batch, seq, k) = (1usize, 8usize, 3usize);
+        let mut a = Xoshiro256::new(99);
+        let mut b = Xoshiro256::from_state(a.state());
+        let ids: Vec<i32> = (0..batch * seq).map(|i| (i % cfg.vocab) as i32).collect();
+        let pool = Pool::serial();
+        let _ = model.forward(
+            kernels::active(),
+            &ids,
+            &ids,
+            batch,
+            seq,
+            k,
+            Eps::Inf,
+            &mut a,
+            &pool,
+            None,
+        );
+        skip_microbatch_draws(&mut b, 1, cfg.n_layers, batch * seq, k);
+        assert_eq!(a.state(), b.state(), "replay-skip must land exactly where a forward does");
+    }
+
+    #[test]
+    fn single_worker_dp_bit_matches_the_lm_trainer() {
+        let cfg = tiny_cfg();
+        let (batch, seq, k, seed) = (1usize, 12usize, 4usize, 9u64);
+        let pool = Pool::serial();
+        let mut lm = LmTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(3e-3), seed);
+        let mut it = BatchIterator::from_seed(cfg.vocab, batch, seq, seed);
+        let mut dp = DpTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(3e-3), seed, 1, 1);
+        for _ in 0..4 {
+            let b = it.next_batch();
+            let lm_loss = lm.train_step(&b.tokens, &pool, None).unwrap();
+            let dp_loss = dp.train_step(&pool, None).unwrap().loss;
+            assert_eq!(
+                lm_loss.to_bits(),
+                dp_loss.to_bits(),
+                "R=1 A=1 loss must bit-match the single-process trainer"
+            );
+        }
+        assert_eq!(
+            param_bits(&lm.model.params),
+            param_bits(&dp.model.params),
+            "R=1 A=1 params must bit-match the single-process trainer"
+        );
+    }
+
+    #[test]
+    fn worker_and_accum_factorizations_of_e_commute() {
+        let cfg = tiny_cfg();
+        let (batch, seq, k, seed) = (1usize, 10usize, 3usize, 7u64);
+        let pool = Pool::serial();
+        let mut runs: Vec<(Vec<u32>, Vec<Vec<u32>>)> = Vec::new();
+        for (r, a) in [(4usize, 1usize), (2, 2), (1, 4)] {
+            let mut t =
+                DpTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(3e-3), seed, r, a);
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(t.train_step(&pool, None).unwrap().loss.to_bits());
+            }
+            runs.push((losses, param_bits(&t.model.params)));
+        }
+        assert_eq!(runs[0], runs[1], "4x1 and 2x2 must produce the identical trajectory");
+        assert_eq!(runs[0], runs[2], "4x1 and 1x4 must produce the identical trajectory");
+    }
+
+    #[test]
+    fn sharded_roundtrip_restores_exact_state() {
+        let cfg = tiny_cfg();
+        let (batch, seq, k, seed) = (1usize, 10usize, 3usize, 11u64);
+        let pool = Pool::serial();
+        let mut a = DpTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(1e-3), seed, 2, 1);
+        for _ in 0..3 {
+            a.train_step(&pool, None).unwrap();
+        }
+        let shards = a.shard_tensors().unwrap();
+        assert_eq!(shards.len(), 2);
+        let mut b = DpTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(1e-3), seed, 2, 1);
+        b.restore_from_shards(shards).unwrap();
+        assert_eq!(b.step_no(), 3);
+        assert_eq!(param_bits(&a.model.params), param_bits(&b.model.params));
+        // Continuing must stay bit-identical.
+        let la = a.train_step(&pool, None).unwrap().loss;
+        let lb = b.train_step(&pool, None).unwrap().loss;
+        assert_eq!(la.to_bits(), lb.to_bits(), "post-restore step must bit-match");
+        assert_eq!(param_bits(&a.model.params), param_bits(&b.model.params));
+    }
+
+    #[test]
+    fn restore_refuses_mismatched_shards() {
+        let cfg = tiny_cfg();
+        let pool = Pool::serial();
+        let mut a = DpTrainer::new(cfg.clone(), 1, 10, 3, NativeOpt::adam(1e-3), 5, 2, 1);
+        a.train_step(&pool, None).unwrap();
+        let shards = a.shard_tensors().unwrap();
+
+        // accum is geometry: a different accumulation schedule resumes
+        // a *different* global stream partition.
+        let mut b = DpTrainer::new(cfg.clone(), 1, 10, 3, NativeOpt::adam(1e-3), 5, 2, 2);
+        let err = b.restore_from_shards(shards.clone()).unwrap_err();
+        assert!(format!("{err:#}").contains("silently diverge"), "{err:#}");
+
+        // Optimizer constants are bit-compared.
+        let mut c = DpTrainer::new(cfg.clone(), 1, 10, 3, NativeOpt::adam(2e-3), 5, 2, 1);
+        assert!(c.restore_from_shards(shards.clone()).is_err());
+
+        // Shards out of order: the rank stamp catches the swap.
+        let mut d = DpTrainer::new(cfg.clone(), 1, 10, 3, NativeOpt::adam(1e-3), 5, 2, 1);
+        let swapped: Vec<_> = shards.into_iter().rev().collect();
+        let err = d.restore_from_shards(swapped).unwrap_err();
+        assert!(format!("{err:#}").contains("rank stamp"), "{err:#}");
+    }
+
+    #[test]
+    fn reshard_drops_the_dead_rank_and_reinterleaves_from_the_cursor() {
+        let cfg = tiny_cfg();
+        let (batch, seq, k, seed) = (1usize, 10usize, 3usize, 13u64);
+        let pool = Pool::serial();
+        let mut t = DpTrainer::new(cfg.clone(), batch, seq, k, NativeOpt::adam(1e-3), seed, 2, 1);
+        for _ in 0..2 {
+            t.train_step(&pool, None).unwrap();
+        }
+        assert!(t.mark_dead(1).is_ok());
+        assert_eq!(t.live_workers(), 1);
+        // The interim step averages over the survivor only.
+        let rep = t.train_step(&pool, None).unwrap();
+        assert_eq!(rep.e_active, 1);
+        let origin_before = t.origin;
+        assert_eq!(t.reshard().unwrap(), 1);
+        assert_eq!(t.workers(), 1);
+        // The survivor's new shard re-interleaves from the boundary
+        // cursor: rank 0 of 1 starts exactly at `origin`.
+        assert_eq!(t.workers[0].shard.cursor(), origin_before);
+        assert_eq!(t.workers[0].shard.ranks(), 1);
+        // And the fleet keeps training.
+        assert!(t.train_step(&pool, None).unwrap().loss.is_finite());
+        // A second reshard with nothing dead is an error, as is
+        // killing the last survivor.
+        assert!(t.reshard().is_err());
+        assert!(t.mark_dead(0).is_err());
+    }
+}

@@ -60,10 +60,18 @@ use crate::tensor::kernels::{self, Dispatch};
 use crate::tensor::Mat;
 
 /// First/second-moment state of one parameter matrix (Adam only).
+/// `pub(crate)` so the data-parallel trainer (`coordinator::dp`) can
+/// reuse the exact same optimizer state representation.
 #[derive(Debug, Clone)]
-struct Moments {
-    m: Mat,
-    v: Mat,
+pub(crate) struct Moments {
+    pub(crate) m: Mat,
+    pub(crate) v: Mat,
+}
+
+impl Moments {
+    pub(crate) fn zeros_like(p: &Mat) -> Moments {
+        Moments { m: Mat::zeros(p.rows(), p.cols()), v: Mat::zeros(p.rows(), p.cols()) }
+    }
 }
 
 /// Everything one LM step produced (ledger/harness consumers).
@@ -110,16 +118,9 @@ impl LmTrainer {
         let model = TransformerLM::new(cfg, seed);
         let moments = match opt {
             NativeOpt::Sgd { .. } => None,
-            NativeOpt::Adam { .. } => Some(
-                model
-                    .params
-                    .iter()
-                    .map(|p| Moments {
-                        m: Mat::zeros(p.rows(), p.cols()),
-                        v: Mat::zeros(p.rows(), p.cols()),
-                    })
-                    .collect(),
-            ),
+            NativeOpt::Adam { .. } => {
+                Some(model.params.iter().map(Moments::zeros_like).collect())
+            }
         };
         Self {
             model,
@@ -215,40 +216,7 @@ impl LmTrainer {
     /// Fixed-order scalar f32 optimizer update over the flat parameter
     /// vector — bit-identical given bit-identical gradients.
     fn apply_update(&mut self, grads: &[Mat]) -> Result<()> {
-        let t = self.step_no;
-        match self.opt {
-            NativeOpt::Sgd { lr } => {
-                for (p, g) in self.model.params.iter_mut().zip(grads) {
-                    for (pv, &gv) in p.data_mut().iter_mut().zip(g.data()) {
-                        *pv -= lr * gv;
-                    }
-                }
-            }
-            NativeOpt::Adam { lr, beta1, beta2, eps } => {
-                let moments = self
-                    .moments
-                    .as_mut()
-                    .context("adam update without moment state (trainer invariant broken)")?;
-                let bc1 = 1.0 - beta1.powi(t as i32);
-                let bc2 = 1.0 - beta2.powi(t as i32);
-                for ((p, g), st) in self.model.params.iter_mut().zip(grads).zip(moments) {
-                    for (((pv, &gv), mv), vv) in p
-                        .data_mut()
-                        .iter_mut()
-                        .zip(g.data())
-                        .zip(st.m.data_mut().iter_mut())
-                        .zip(st.v.data_mut().iter_mut())
-                    {
-                        *mv = beta1 * *mv + (1.0 - beta1) * gv;
-                        *vv = beta2 * *vv + (1.0 - beta2) * gv * gv;
-                        let mhat = *mv / bc1;
-                        let vhat = *vv / bc2;
-                        *pv -= lr * mhat / (vhat.sqrt() + eps);
-                    }
-                }
-            }
-        }
-        Ok(())
+        apply_opt_update(self.opt, &mut self.model.params, self.moments.as_mut(), grads, self.step_no)
     }
 
     // -- checkpointing ------------------------------------------------------
@@ -378,12 +346,58 @@ impl LmTrainer {
     }
 }
 
+/// The fixed-order scalar f32 optimizer update, shared verbatim by the
+/// single-process trainer and the data-parallel one
+/// (`coordinator::dp`): same loop nesting, same operation order, so
+/// bit-identical gradients produce bit-identical parameters wherever
+/// the update runs. `t` is the step count *after* the step was counted
+/// (Adam bias correction uses `1 - βᵗ`).
+pub(crate) fn apply_opt_update(
+    opt: NativeOpt,
+    params: &mut [Mat],
+    moments: Option<&mut Vec<Moments>>,
+    grads: &[Mat],
+    t: usize,
+) -> Result<()> {
+    match opt {
+        NativeOpt::Sgd { lr } => {
+            for (p, g) in params.iter_mut().zip(grads) {
+                for (pv, &gv) in p.data_mut().iter_mut().zip(g.data()) {
+                    *pv -= lr * gv;
+                }
+            }
+        }
+        NativeOpt::Adam { lr, beta1, beta2, eps } => {
+            let moments =
+                moments.context("adam update without moment state (trainer invariant broken)")?;
+            let bc1 = 1.0 - beta1.powi(t as i32);
+            let bc2 = 1.0 - beta2.powi(t as i32);
+            for ((p, g), st) in params.iter_mut().zip(grads).zip(moments) {
+                for (((pv, &gv), mv), vv) in p
+                    .data_mut()
+                    .iter_mut()
+                    .zip(g.data())
+                    .zip(st.m.data_mut().iter_mut())
+                    .zip(st.v.data_mut().iter_mut())
+                {
+                    *mv = beta1 * *mv + (1.0 - beta1) * gv;
+                    *vv = beta2 * *vv + (1.0 - beta2) * gv * gv;
+                    let mhat = *mv / bc1;
+                    let vhat = *vv / bc2;
+                    *pv -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Divergence guard, stage 2: refuse a gradient vector containing a
 /// NaN/Inf, naming the first offending parameter (`names` follows
 /// [`model::param_names`] order). Runs *before* `step_no` and the
 /// optimizer update mutate, so a failed step leaves the trainer
 /// exactly as it was.
-fn check_finite_grads(names: &[String], grads: &[Mat], step: usize) -> Result<()> {
+pub(crate) fn check_finite_grads(names: &[String], grads: &[Mat], step: usize) -> Result<()> {
     for (name, g) in names.iter().zip(grads) {
         if let Some((i, bad)) = g.data().iter().enumerate().find(|(_, v)| !v.is_finite()) {
             bail!(
@@ -398,7 +412,7 @@ fn check_finite_grads(names: &[String], grads: &[Mat], step: usize) -> Result<()
 /// Optimizer constants as a flat f32 tensor (`[kind, lr, β1, β2, ε]`;
 /// kind 0 = SGD, 1 = Adam) — checkpointed so resume can refuse a
 /// hyperparameter mismatch that would break bit-exactness.
-fn opt_words(opt: NativeOpt) -> Vec<f32> {
+pub(crate) fn opt_words(opt: NativeOpt) -> Vec<f32> {
     match opt {
         NativeOpt::Sgd { lr } => vec![0.0, lr, 0.0, 0.0, 0.0],
         NativeOpt::Adam { lr, beta1, beta2, eps } => vec![1.0, lr, beta1, beta2, eps],
@@ -407,13 +421,13 @@ fn opt_words(opt: NativeOpt) -> Vec<f32> {
 
 /// `[u64; 4]` RNG state ⇄ eight little-endian i32 words (checkpoints
 /// only carry f32/i32 tensors).
-fn rng_words(s: [u64; 4]) -> Vec<i32> {
+pub(crate) fn rng_words(s: [u64; 4]) -> Vec<i32> {
     s.iter()
         .flat_map(|&x| [(x & 0xFFFF_FFFF) as u32 as i32, (x >> 32) as u32 as i32])
         .collect()
 }
 
-fn words_to_state(w: &[i32]) -> Result<[u64; 4]> {
+pub(crate) fn words_to_state(w: &[i32]) -> Result<[u64; 4]> {
     ensure!(w.len() == 8, "meta.rng: expected 8 words, got {}", w.len());
     let mut s = [0u64; 4];
     for (i, st) in s.iter_mut().enumerate() {

@@ -22,8 +22,20 @@
 //!   threads them step to step.
 //! * [`pipeline::BatchPipeline`] — background-thread batch producer
 //!   (bounded channel) so tokenization never stalls a step.
-//! * [`ddp`] — gradient accumulation + simulated multi-worker all-reduce
-//!   built on the grad/apply artifact pair.
+//! * [`ddp`] (feature `pjrt`) — the legacy artifact-era gradient
+//!   accumulation + simulated all-reduce shim; the rank-order-reduce
+//!   concept now lives in the native [`dp`] path, so the default build
+//!   carries no dead DDP surface.
+//! * [`dp`] — **native data-parallel training** (DESIGN.md §10):
+//!   [`dp::DpTrainer`] runs R logical workers with deterministic
+//!   interleaved batch/RNG sharding and a fixed rank-order gradient
+//!   all-reduce (trajectories bit-identical for any `R × accum`
+//!   factorization of the effective batch, `R = 1` bit-matches
+//!   [`lm::train_lm_native`]), sharded crash-safe ring checkpoints,
+//!   a fleet crash supervisor ([`dp::train_lm_dp_supervised`]) with
+//!   bitwise worker-kill recovery, and elastic degradation
+//!   (straggler death → re-shard onto the survivors) — the
+//!   `pamm train --native --workers R` / `pamm chaos --dp` engine.
 //! * [`trainer`] — the top-level run loop used by the CLI and examples,
 //!   plus [`trainer::NativeTrainer`]: the artifact-free native train
 //!   step (compressed-activation fwd+bwd+update through
@@ -40,13 +52,19 @@
 //!   trajectory is bitwise identical to the uninterrupted one
 //!   (DESIGN.md §9, `pamm chaos`).
 
+#[cfg(feature = "pjrt")]
 pub mod ddp;
+pub mod dp;
 pub mod lm;
 pub mod pipeline;
 pub mod serve;
 pub mod session;
 pub mod trainer;
 
+pub use dp::{
+    train_lm_dp_native, train_lm_dp_native_run, train_lm_dp_supervised, DpRunConfig, DpRunReport,
+    DpStepReport, DpSupervisedOutcome, DpTrainer,
+};
 pub use lm::{
     checkpoint_boundaries, train_lm_native, train_lm_native_run, train_lm_supervised, LmRunConfig,
     LmRunReport, LmStepReport, LmTrainer, SupervisedOutcome,

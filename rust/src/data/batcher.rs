@@ -115,6 +115,141 @@ impl BatchIterator {
     }
 }
 
+/// One worker rank's deterministic interleaved shard of the global
+/// batch stream (`coordinator::dp`).
+///
+/// The global stream is the plain [`BatchIterator`] sequence
+/// `j = 0, 1, 2, …`. With `ranks = R` workers and `accum = A`
+/// microbatches per worker per optimizer step, step `s` consumes the
+/// contiguous window `[s·R·A, (s+1)·R·A)` and rank `r` owns the slice
+/// `[s·R·A + r·A, s·R·A + (r+1)·A)` — every global batch belongs to
+/// exactly one rank, and the union of all ranks' streams is the global
+/// stream in order. `R = 1, A = 1` degenerates to the plain iterator
+/// bit for bit, which is what makes the single-worker data-parallel
+/// trainer bit-match `train_lm_native`.
+///
+/// # Ragged-count contract
+///
+/// A *bounded* stream of `total` batches shards into exactly
+/// [`BatchShard::complete_rounds`]`(total, R, A)` full optimizer
+/// steps. The ragged tail of `total mod (R·A)` batches is **dropped
+/// deterministically** — it is never assigned to any rank, and in
+/// particular never duplicated across ranks (duplicating it would
+/// silently bias the gradient toward the tail batches and break the
+/// R-invariance of the trajectory). Tested below
+/// (`ragged_tail_is_dropped_never_duplicated`).
+pub struct BatchShard {
+    it: BatchIterator,
+    rank: usize,
+    ranks: usize,
+    accum: usize,
+    /// Global-stream batches this shard has consumed *or skipped* —
+    /// the shard cursor a sharded checkpoint persists; at an optimizer
+    /// step boundary it equals `origin + s·R·A + rank·A`.
+    cursor: usize,
+    /// Batches taken in the current accumulation window (`0..accum`).
+    taken: usize,
+}
+
+impl BatchShard {
+    /// Rank `rank` of `ranks` workers over the seed's global stream,
+    /// starting at global batch 0.
+    pub fn new(
+        vocab_size: usize,
+        batch: usize,
+        seq: usize,
+        seed: u64,
+        rank: usize,
+        ranks: usize,
+        accum: usize,
+    ) -> Self {
+        Self::at_origin(vocab_size, batch, seq, seed, rank, ranks, accum, 0)
+    }
+
+    /// A shard re-attached at global stream position `origin` — the
+    /// elastic-reshard constructor: after a worker dies, survivors
+    /// re-interleave the global stream from the checkpoint boundary's
+    /// cursor, so the dead rank's data is redistributed instead of
+    /// lost (`coordinator::dp` reshard contract).
+    pub fn at_origin(
+        vocab_size: usize,
+        batch: usize,
+        seq: usize,
+        seed: u64,
+        rank: usize,
+        ranks: usize,
+        accum: usize,
+        origin: usize,
+    ) -> Self {
+        assert!(ranks >= 1 && accum >= 1, "shard: ranks/accum must be >= 1");
+        assert!(rank < ranks, "shard: rank {rank} out of 0..{ranks}");
+        let mut it = BatchIterator::from_seed(vocab_size, batch, seq, seed);
+        let cursor = origin + rank * accum;
+        it.skip_batches(cursor);
+        Self { it, rank, ranks, accum, cursor, taken: 0 }
+    }
+
+    /// Exact restore from a persisted shard cursor (a sharded
+    /// checkpoint's `meta.cursor`). Restoring replays the underlying
+    /// stream to `cursor`, so the next batch is bit-identical to the
+    /// one the checkpointed shard would have produced. Only optimizer
+    /// step boundaries are checkpointed, so the accumulation window is
+    /// always empty at restore.
+    pub fn from_cursor(
+        vocab_size: usize,
+        batch: usize,
+        seq: usize,
+        seed: u64,
+        rank: usize,
+        ranks: usize,
+        accum: usize,
+        cursor: usize,
+    ) -> Self {
+        assert!(ranks >= 1 && accum >= 1, "shard: ranks/accum must be >= 1");
+        assert!(rank < ranks, "shard: rank {rank} out of 0..{ranks}");
+        let mut it = BatchIterator::from_seed(vocab_size, batch, seq, seed);
+        it.skip_batches(cursor);
+        Self { it, rank, ranks, accum, cursor, taken: 0 }
+    }
+
+    /// Full optimizer steps a bounded stream of `total` batches
+    /// yields at `ranks × accum` microbatches per step — the ragged
+    /// tail `total % (ranks·accum)` is dropped, never duplicated.
+    pub fn complete_rounds(total: usize, ranks: usize, accum: usize) -> usize {
+        total / (ranks.max(1) * accum.max(1))
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Global-stream position (consumed + skipped batches) — what a
+    /// sharded checkpoint persists for exact restore.
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// The next batch this rank owns. After `accum` consecutive
+    /// batches the shard skips the other `ranks − 1` workers' windows,
+    /// landing on its slice of the next optimizer step.
+    pub fn next_batch(&mut self) -> TokenBatch {
+        let b = self.it.next_batch();
+        self.cursor += 1;
+        self.taken += 1;
+        if self.taken == self.accum {
+            let skip = (self.ranks - 1) * self.accum;
+            self.it.skip_batches(skip);
+            self.cursor += skip;
+            self.taken = 0;
+        }
+        b
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +301,99 @@ mod tests {
     fn consecutive_batches_differ() {
         let mut it = iter(2, 32);
         assert_ne!(it.next_batch().tokens, it.next_batch().tokens);
+    }
+
+    /// First `n` global batches of the seed-7 stream.
+    fn global_prefix(n: usize) -> Vec<Vec<i32>> {
+        let mut it = iter(1, 8);
+        (0..n).map(|_| it.next_batch().tokens).collect()
+    }
+
+    fn shard(rank: usize, ranks: usize, accum: usize) -> BatchShard {
+        BatchShard::new(512, 1, 8, 7, rank, ranks, accum)
+    }
+
+    #[test]
+    fn shards_partition_the_global_stream_exactly_once() {
+        // 3 steps × (R=3 × A=2) = 18 global batches; rank r's 6
+        // batches must be exactly its interleaved slices, and the
+        // union must be the global prefix with no batch duplicated
+        // or dropped.
+        let (ranks, accum, steps) = (3usize, 2usize, 3usize);
+        let global = global_prefix(steps * ranks * accum);
+        let mut seen = vec![0usize; global.len()];
+        for r in 0..ranks {
+            let mut sh = shard(r, ranks, accum);
+            for s in 0..steps {
+                for a in 0..accum {
+                    let j = s * ranks * accum + r * accum + a;
+                    let b = sh.next_batch();
+                    assert_eq!(b.tokens, global[j], "rank {r} step {s} accum {a} != global batch {j}");
+                    seen[j] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "every global batch exactly once: {seen:?}");
+    }
+
+    #[test]
+    fn single_worker_shard_is_the_plain_iterator() {
+        let mut plain = iter(1, 8);
+        let mut sh = shard(0, 1, 1);
+        for _ in 0..5 {
+            assert_eq!(sh.next_batch().tokens, plain.next_batch().tokens);
+        }
+    }
+
+    #[test]
+    fn ragged_tail_is_dropped_never_duplicated() {
+        // 10 batches across R=3, A=1: exactly 3 complete rounds
+        // (batches 0..9 minus the ragged batch 9). The contract: the
+        // tail is dropped — no rank's complete-round stream contains
+        // it, and no batch appears twice.
+        let (ranks, total) = (3usize, 10usize);
+        let rounds = BatchShard::complete_rounds(total, ranks, 1);
+        assert_eq!(rounds, 3);
+        let global = global_prefix(total);
+        let mut counts = vec![0usize; total];
+        for r in 0..ranks {
+            let mut sh = shard(r, ranks, 1);
+            for _ in 0..rounds {
+                let b = sh.next_batch();
+                let j = global.iter().position(|g| g == &b.tokens).expect("batch from the global stream");
+                counts[j] += 1;
+            }
+        }
+        assert_eq!(&counts[..9], &[1; 9], "complete rounds cover batches 0..9 exactly once");
+        assert_eq!(counts[9], 0, "the ragged batch must be dropped, not assigned");
+    }
+
+    #[test]
+    fn cursor_restore_is_bit_exact() {
+        let (ranks, accum) = (2usize, 2usize);
+        let mut a = shard(1, ranks, accum);
+        for _ in 0..accum * 3 {
+            a.next_batch();
+        }
+        // Step boundary: cursor = 3·R·A + rank·A.
+        assert_eq!(a.cursor(), 3 * ranks * accum + accum);
+        let mut b = BatchShard::from_cursor(512, 1, 8, 7, 1, ranks, accum, a.cursor());
+        for _ in 0..4 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+        assert_eq!(a.cursor(), b.cursor());
+    }
+
+    #[test]
+    fn reshard_at_origin_reinterleaves_survivors() {
+        // After 2 steps of R=2/A=1 (origin 4), a reshard to R=1 must
+        // hand the single survivor the whole global stream from
+        // batch 4 on — including batches the dead rank would have
+        // owned.
+        let global = global_prefix(8);
+        let mut sh = BatchShard::at_origin(512, 1, 8, 7, 0, 1, 1, 4);
+        for j in 4..8 {
+            assert_eq!(sh.next_batch().tokens, global[j], "resharded stream must continue at batch {j}");
+        }
     }
 }

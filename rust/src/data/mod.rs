@@ -23,6 +23,6 @@ pub mod corpus;
 pub mod glue;
 pub mod tokenizer;
 
-pub use batcher::{BatchIterator, TokenBatch};
+pub use batcher::{BatchIterator, BatchShard, TokenBatch};
 pub use corpus::CorpusGenerator;
 pub use tokenizer::Tokenizer;

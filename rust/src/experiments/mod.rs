@@ -1,6 +1,6 @@
 //! Experiment harness — one entry per table & figure of the paper,
 //! plus the native attention table P9/P10 and the native train-step
-//! harness P11 (DESIGN.md §10 maps each id to modules and
+//! harness P11 (DESIGN.md §11 maps each id to modules and
 //! expectations).
 //!
 //! Every harness prints the paper-style rows AND writes a CSV under the

@@ -25,6 +25,18 @@
 //!   (completions + shed == requests) and the shed/truncation
 //!   decisions are identical at 1 and 2 workers.
 //!
+//! With `--dp` the campaign targets the data-parallel fleet instead
+//! (DESIGN.md §10, EXPERIMENTS.md P16): a 2-worker baseline checked
+//! for physical-thread invariance, a worker-kill sweep against
+//! *sharded* checkpoints (quick: one seeded (rank, boundary, phase);
+//! full: every rank × boundary × phase), a shard-corruption fallback
+//! row, a within-budget straggler row (the stall must not change the
+//! trajectory), a straggler-timeout row (the non-elastic run must fail
+//! with the actionable diagnostic), and an elastic degradation row
+//! (the fleet reshards onto the survivor, logs
+//! `{"event":"reshard"}`, and a rerun reproduces the degraded run
+//! bit for bit).
+//!
 //! The campaign is a pure function of `(seed, quick)` — rerunning it
 //! reproduces every fault and every verdict bit-for-bit, which is
 //! what makes a failing row debuggable.
@@ -32,6 +44,9 @@
 use anyhow::{Context, Result};
 
 use crate::checkpoint;
+use crate::coordinator::dp::{
+    train_lm_dp_native_run, train_lm_dp_supervised, DpRunConfig,
+};
 use crate::coordinator::lm::{
     checkpoint_boundaries, train_lm_native_run, train_lm_supervised, LmRunConfig,
 };
@@ -50,6 +65,10 @@ pub struct ChaosOpts {
     /// CI smoke mode: one seeded kill + one poisoned session instead
     /// of the exhaustive boundary × phase sweep.
     pub quick: bool,
+    /// Target the data-parallel fleet (worker kills, shard corruption,
+    /// stragglers, elastic degradation) instead of the single-process
+    /// scenarios.
+    pub dp: bool,
     pub seed: u64,
     /// Scratch directory for the campaign's run dirs (wiped first).
     pub dir: String,
@@ -57,7 +76,7 @@ pub struct ChaosOpts {
 
 impl Default for ChaosOpts {
     fn default() -> Self {
-        ChaosOpts { quick: false, seed: 0xC4A0_5, dir: "target/chaos".into() }
+        ChaosOpts { quick: false, dp: false, seed: 0xC4A0_5, dir: "target/chaos".into() }
     }
 }
 
@@ -129,11 +148,15 @@ fn replayed_bits(rc: &LmRunConfig) -> Result<Vec<(usize, u64)>> {
 }
 
 /// Run the whole campaign. Wipes `opts.dir` first; every scenario gets
-/// its own run dir underneath it.
+/// its own run dir underneath it. `--dp` switches to the data-parallel
+/// fleet campaign.
 pub fn run_campaign(opts: &ChaosOpts, pool: &Pool) -> Result<ChaosReport> {
     let _ = std::fs::remove_dir_all(&opts.dir);
     std::fs::create_dir_all(&opts.dir)
         .with_context(|| format!("creating chaos dir {}", opts.dir))?;
+    if opts.dp {
+        return run_dp_campaign(opts, pool);
+    }
     let mut rows = Vec::new();
 
     // -- training baseline: the uninterrupted run every recovery must
@@ -336,6 +359,230 @@ fn shed_row(model: &crate::model::TransformerLM, scfg: &ServeConfig, load: &[Ser
     ))
 }
 
+// ---------------------------------------------------------------------------
+// The data-parallel campaign (`pamm chaos --dp`)
+// ---------------------------------------------------------------------------
+
+/// The 2-worker fleet every DP scenario uses (`batch` drops to 1 so a
+/// fleet step costs what a single-process step does).
+fn dp_rc(opts: &ChaosOpts, run_name: &str, elastic: bool) -> DpRunConfig {
+    let mut base = train_rc(opts, run_name);
+    base.batch = 1;
+    base.steps = if opts.quick { 4 } else { 6 };
+    DpRunConfig { base, workers: 2, accum: 1, elastic, stall_budget: 3 }
+}
+
+fn row(name: &str, res: Result<String>) -> ChaosRow {
+    match res {
+        Ok(detail) => ChaosRow { name: name.to_string(), pass: true, detail },
+        Err(e) => ChaosRow { name: name.to_string(), pass: false, detail: format!("{e:#}") },
+    }
+}
+
+/// The `--dp` campaign: fleet determinism, worker-kill recovery from
+/// sharded checkpoints, shard-corruption fallback, stragglers within
+/// and past the stall budget, and elastic degradation.
+fn run_dp_campaign(opts: &ChaosOpts, pool: &Pool) -> Result<ChaosReport> {
+    let mut rows = Vec::new();
+
+    // -- baseline: the uninterrupted 2-worker run every recovery must
+    //    reproduce bit-for-bit — itself checked for physical-thread
+    //    invariance first.
+    let base_rc = dp_rc(opts, "dp_base", false);
+    train_lm_dp_native_run(&base_rc, None, &[], pool, true)?;
+    let base_final = final_tensors(&base_rc.base)?;
+    let base_log = replayed_bits(&base_rc.base)?;
+    {
+        let rc2 = dp_rc(opts, "dp_base_t2", false);
+        train_lm_dp_native_run(&rc2, None, &[], &Pool::new(2).with_min_chunk(1), true)?;
+        let fin = final_tensors(&rc2.base)?;
+        rows.push(row(
+            "dp determinism",
+            if fin == base_final {
+                Ok("2-worker fleet bitwise equal at 1 and 2 physical threads".into())
+            } else {
+                Err(anyhow::anyhow!("final checkpoint drifted with physical threads"))
+            },
+        ));
+    }
+
+    // -- worker-kill sweep against sharded checkpoints.
+    let boundaries = checkpoint_boundaries(&base_rc.base);
+    let plans: Vec<FaultPlan> = if opts.quick {
+        vec![FaultPlan::sample_worker_kill(opts.seed, base_rc.workers, &boundaries)]
+    } else {
+        FaultPlan::every_worker_boundary(opts.seed, base_rc.workers, &boundaries)
+    };
+    for plan in &plans {
+        let k = plan.worker_kills[0];
+        let name = format!("dp kill r{} s{}/{}", k.rank, k.step, k.phase.name());
+        let rc = dp_rc(opts, &format!("dp_kill_r{}_s{}_{}", k.rank, k.step, k.phase.name()), false);
+        rows.push(row(&name, dp_kill_row(&rc, plan, pool, &base_final, &base_log)));
+    }
+
+    // -- shard-corruption fallback: kill right after a mid-run sharded
+    //    entry committed, flip one seeded bit in one of its shards —
+    //    recovery must detect the bad shard, fall back a whole entry,
+    //    and still converge bitwise.
+    {
+        let rc = dp_rc(opts, "dp_corrupt", false);
+        let plan = FaultPlan::new(opts.seed)
+            .with_worker_kill(1, boundaries[1], CrashPhase::AfterCheckpoint)
+            .with_corruption(0);
+        rows.push(row(
+            "dp corrupt shard",
+            dp_corruption_row(&rc, &plan, boundaries[0], pool, &base_final),
+        ));
+    }
+
+    // -- straggler within the stall budget: retry/backoff absorbs it
+    //    and the trajectory must not change.
+    {
+        let rc = dp_rc(opts, "dp_stall", false);
+        let plan = FaultPlan::new(opts.seed).with_stall(1, 1, 2);
+        rows.push(row("dp straggler ok", dp_stall_row(&rc, &plan, pool, &base_final)));
+    }
+
+    // -- straggler past the budget, non-elastic: the run must fail
+    //    with the actionable diagnostic, not hang or corrupt.
+    {
+        let rc = dp_rc(opts, "dp_timeout", false);
+        let plan = FaultPlan::new(opts.seed).with_stall(1, 1, 5);
+        rows.push(row("dp straggler timeout", dp_timeout_row(&rc, &plan, pool)));
+    }
+
+    // -- elastic degradation: same overload under --elastic — the
+    //    fleet reshards onto the survivor and a rerun reproduces the
+    //    degraded trajectory bit for bit.
+    {
+        let rc_a = dp_rc(opts, "dp_elastic_a", true);
+        let rc_b = dp_rc(opts, "dp_elastic_b", true);
+        let plan = FaultPlan::new(opts.seed).with_stall(1, 1, 5);
+        rows.push(row("dp elastic reshard", dp_elastic_row(&rc_a, &rc_b, &plan, pool)));
+    }
+
+    Ok(ChaosReport { rows })
+}
+
+/// One supervised fleet run under `plan`; pass iff bitwise-identical
+/// final checkpoint and replayed log vs the kill-free baseline.
+fn dp_kill_row(
+    rc: &DpRunConfig,
+    plan: &FaultPlan,
+    pool: &Pool,
+    base_final: &[(String, HostTensor)],
+    base_log: &[(usize, u64)],
+) -> Result<String> {
+    let out = train_lm_dp_supervised(rc, plan, pool, true)?;
+    anyhow::ensure!(
+        out.kills.len() == plan.worker_kills.len(),
+        "armed {} kill(s) but {} fired",
+        plan.worker_kills.len(),
+        out.kills.len()
+    );
+    let fin = final_tensors(&rc.base)?;
+    anyhow::ensure!(fin == base_final, "recovered final checkpoint differs from baseline");
+    let log = replayed_bits(&rc.base)?;
+    anyhow::ensure!(log == base_log, "replayed run log differs from baseline");
+    Ok(format!(
+        "fleet recovered in {} attempt(s), resume at {:?}; final ckpt + replayed log bitwise equal",
+        out.attempts, out.resume_steps
+    ))
+}
+
+/// Shard-corruption scenario; pass iff the bad shard was detected, the
+/// ring fell back to `expect_resume`, and the final state matches.
+fn dp_corruption_row(
+    rc: &DpRunConfig,
+    plan: &FaultPlan,
+    expect_resume: usize,
+    pool: &Pool,
+    base_final: &[(String, HostTensor)],
+) -> Result<String> {
+    let out = train_lm_dp_supervised(rc, plan, pool, true)?;
+    anyhow::ensure!(
+        out.recovery_diags.iter().any(|d| d.contains("injected corruption")),
+        "corruption was never injected"
+    );
+    anyhow::ensure!(
+        out.recovery_diags.iter().any(|d| d.contains("shard") && d.contains("failed verification")),
+        "corrupted shard was not detected: {:?}",
+        out.recovery_diags
+    );
+    anyhow::ensure!(
+        out.resume_steps == vec![expect_resume],
+        "expected fallback resume at step {expect_resume}, got {:?}",
+        out.resume_steps
+    );
+    let fin = final_tensors(&rc.base)?;
+    anyhow::ensure!(fin == base_final, "post-fallback final checkpoint differs from baseline");
+    Ok(format!(
+        "bad shard detected, fell back to s{expect_resume}, final ckpt bitwise equal ({} diag(s))",
+        out.recovery_diags.len()
+    ))
+}
+
+/// Within-budget straggler; pass iff the stall was absorbed and the
+/// trajectory is unchanged.
+fn dp_stall_row(
+    rc: &DpRunConfig,
+    plan: &FaultPlan,
+    pool: &Pool,
+    base_final: &[(String, HostTensor)],
+) -> Result<String> {
+    let out = train_lm_dp_supervised(rc, plan, pool, true)?;
+    anyhow::ensure!(out.stalls_recovered == plan.stalls.len(), "stall was never absorbed");
+    anyhow::ensure!(out.reshards.is_empty(), "within-budget stall must not reshard");
+    let fin = final_tensors(&rc.base)?;
+    anyhow::ensure!(fin == base_final, "an absorbed stall changed the trajectory");
+    Ok(format!(
+        "{} stall(s) absorbed by the retry budget, trajectory bitwise unchanged",
+        out.stalls_recovered
+    ))
+}
+
+/// Past-budget straggler, non-elastic; pass iff the run fails with the
+/// actionable diagnostic.
+fn dp_timeout_row(rc: &DpRunConfig, plan: &FaultPlan, pool: &Pool) -> Result<String> {
+    let err = match train_lm_dp_native_run(rc, None, &plan.stalls, pool, true) {
+        Ok(_) => anyhow::bail!("over-budget straggler did not fail the non-elastic run"),
+        Err(e) => format!("{e:#}"),
+    };
+    anyhow::ensure!(
+        err.contains("--elastic") && err.contains("deadline poll"),
+        "timeout diagnostic is not actionable: {err}"
+    );
+    Ok("over-budget straggler failed fast with the --elastic hint".into())
+}
+
+/// Elastic degradation; pass iff the fleet resharded onto the
+/// survivor, logged the reshard event, and a rerun reproduces the
+/// degraded trajectory bit for bit.
+fn dp_elastic_row(
+    rc_a: &DpRunConfig,
+    rc_b: &DpRunConfig,
+    plan: &FaultPlan,
+    pool: &Pool,
+) -> Result<String> {
+    let out = train_lm_dp_supervised(rc_a, plan, pool, true)?;
+    anyhow::ensure!(out.reshards.len() == 1, "expected 1 reshard, got {:?}", out.reshards);
+    anyhow::ensure!(out.workers_final == 1, "fleet should have degraded to 1 worker");
+    let jsonl = std::fs::read_to_string(format!(
+        "{}/{}.jsonl",
+        rc_a.base.run_dir, rc_a.base.run_name
+    ))?;
+    anyhow::ensure!(jsonl.contains("\"reshard\""), "reshard event missing from the run log");
+    let a = final_tensors(&rc_a.base)?;
+    train_lm_dp_supervised(rc_b, plan, pool, true)?;
+    let b = final_tensors(&rc_b.base)?;
+    anyhow::ensure!(a == b, "degraded trajectory is not reproducible");
+    let r = out.reshards[0];
+    Ok(format!(
+        "rank {} dropped at boundary {}, resharded onto {} survivor(s), rerun bitwise equal",
+        r.dead_rank, r.step, r.workers
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,6 +593,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let opts = ChaosOpts {
             quick: true,
+            dp: false,
             seed: 11,
             dir: dir.to_string_lossy().into_owned(),
         };
@@ -353,6 +601,25 @@ mod tests {
         assert!(!report.rows.is_empty());
         for r in &report.rows {
             assert!(r.pass, "chaos scenario `{}` failed: {}", r.name, r.detail);
+        }
+        assert!(report.passed());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quick_dp_campaign_passes_end_to_end() {
+        let dir = std::env::temp_dir().join("pamm_chaos_dp_quick");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ChaosOpts {
+            quick: true,
+            dp: true,
+            seed: 11,
+            dir: dir.to_string_lossy().into_owned(),
+        };
+        let report = run_campaign(&opts, &Pool::serial()).unwrap();
+        assert!(!report.rows.is_empty());
+        for r in &report.rows {
+            assert!(r.pass, "dp chaos scenario `{}` failed: {}", r.name, r.detail);
         }
         assert!(report.passed());
         let _ = std::fs::remove_dir_all(&dir);

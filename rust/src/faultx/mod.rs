@@ -3,10 +3,12 @@
 //! A [`FaultPlan`] is a *replayable* chaos script: sampled once from a
 //! seed via [`rngx::Xoshiro256`], it names the exact sites at which
 //! faults fire — training crashes at checkpoint boundaries
-//! ([`TrainFault`], three [`CrashPhase`]s), checkpoint-file corruption
-//! (a seeded bit flip in the newest ring entry), and poisoned serve
-//! sessions ([`PoisonSite`], non-finite logits injected after a fixed
-//! token count). The same seed yields the same plan on every machine,
+//! ([`TrainFault`], three [`CrashPhase`]s), data-parallel worker kills
+//! and stragglers ([`WorkerKill`], [`WorkerStall`], DESIGN.md §10),
+//! checkpoint-file corruption (a seeded bit flip in the newest ring
+//! entry), and poisoned serve sessions ([`PoisonSite`], non-finite
+//! logits injected after a fixed token count). The same seed yields
+//! the same plan on every machine,
 //! thread count and SIMD level — chaos runs are as reproducible as the
 //! training runs they attack, matching the repo's determinism
 //! discipline.
@@ -85,6 +87,33 @@ pub fn injected_crash(e: &anyhow::Error) -> Option<InjectedCrash> {
     e.downcast_ref::<InjectedCrash>().copied()
 }
 
+/// One scripted data-parallel worker kill: logical worker `rank` dies
+/// at checkpoint boundary `step` (a completed-optimizer-step count) in
+/// the given phase. For sharded checkpoints the phases map onto the
+/// per-shard write sequence: `BeforeCheckpoint` kills before rank's
+/// shard is written (earlier ranks' shards already landed but no
+/// manifest committed), `MidCheckpointWrite` tears rank's shard blob
+/// mid-write, `AfterCheckpoint` kills after the whole entry (manifest
+/// included) committed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerKill {
+    pub rank: usize,
+    pub step: usize,
+    pub phase: CrashPhase,
+}
+
+/// One scripted straggler: logical worker `rank` stalls at
+/// 0-based execution step `step` for `polls` deadline polls before its
+/// step report arrives. The supervisor retries with backoff up to its
+/// stall budget; past the budget the rank is declared dead (elastic
+/// runs re-shard, non-elastic runs fail with a diagnostic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerStall {
+    pub rank: usize,
+    pub step: usize,
+    pub polls: usize,
+}
+
 /// One poisoned serve session: request `id`'s logits turn non-finite
 /// once it has emitted `after_tokens` tokens (so every prior token is
 /// clean, and the session is quarantined before emitting another).
@@ -108,12 +137,25 @@ pub struct FaultPlan {
     pub corrupt_after_attempt: Option<usize>,
     /// Poisoned serve sessions.
     pub poison: Vec<PoisonSite>,
+    /// Data-parallel worker kills, ascending by step; the DP
+    /// supervisor arms `worker_kills[attempt]` on its `attempt`-th run.
+    pub worker_kills: Vec<WorkerKill>,
+    /// Scripted stragglers, applied on every attempt (stalls are
+    /// survivable, so replaying them keeps attempts trajectory-equal).
+    pub stalls: Vec<WorkerStall>,
 }
 
 impl FaultPlan {
     /// An empty plan (no faults) under `seed`.
     pub fn new(seed: u64) -> FaultPlan {
-        FaultPlan { seed, crashes: Vec::new(), corrupt_after_attempt: None, poison: Vec::new() }
+        FaultPlan {
+            seed,
+            crashes: Vec::new(),
+            corrupt_after_attempt: None,
+            poison: Vec::new(),
+            worker_kills: Vec::new(),
+            stalls: Vec::new(),
+        }
     }
 
     /// Sample `n_crashes` distinct checkpoint boundaries (each with a
@@ -184,6 +226,51 @@ impl FaultPlan {
     pub fn with_corruption(mut self, after_attempt: usize) -> FaultPlan {
         self.corrupt_after_attempt = Some(after_attempt);
         self
+    }
+
+    /// Arm one data-parallel worker kill.
+    pub fn with_worker_kill(mut self, rank: usize, step: usize, phase: CrashPhase) -> FaultPlan {
+        self.worker_kills.push(WorkerKill { rank, step, phase });
+        self.worker_kills.sort_by_key(|k| k.step);
+        self
+    }
+
+    /// Arm one scripted straggler.
+    pub fn with_stall(mut self, rank: usize, step: usize, polls: usize) -> FaultPlan {
+        self.stalls.push(WorkerStall { rank, step, polls });
+        self
+    }
+
+    /// Every (rank × boundary × phase) worker kill — the exhaustive DP
+    /// recovery sweep `prop_dp.rs` and the full `pamm chaos --dp`
+    /// campaign iterate (one supervised run per entry).
+    pub fn every_worker_boundary(seed: u64, ranks: usize, boundaries: &[usize]) -> Vec<FaultPlan> {
+        let mut out = Vec::with_capacity(ranks * boundaries.len() * CrashPhase::ALL.len());
+        for rank in 0..ranks {
+            for &step in boundaries {
+                for phase in CrashPhase::ALL {
+                    let mut plan = FaultPlan::new(seed);
+                    plan.worker_kills.push(WorkerKill { rank, step, phase });
+                    out.push(plan);
+                }
+            }
+        }
+        out
+    }
+
+    /// Sample one worker kill at a seeded (rank, boundary, phase) —
+    /// the quick-mode stand-in for the exhaustive sweep.
+    pub fn sample_worker_kill(seed: u64, ranks: usize, boundaries: &[usize]) -> FaultPlan {
+        let mut plan = FaultPlan::new(seed);
+        if ranks == 0 || boundaries.is_empty() {
+            return plan;
+        }
+        let mut rng = Xoshiro256::fold_in(seed, 0xFA17, 2);
+        let rank = rng.next_below(ranks as u64) as usize;
+        let step = boundaries[rng.next_below(boundaries.len() as u64) as usize];
+        let phase = CrashPhase::ALL[rng.next_below(3) as usize];
+        plan.worker_kills.push(WorkerKill { rank, step, phase });
+        plan
     }
 
     /// The poison site for request `id`, if this plan has one.
@@ -263,6 +350,44 @@ mod tests {
                     .any(|p| p.crashes == vec![TrainFault { step, phase }]));
             }
         }
+    }
+
+    #[test]
+    fn every_worker_boundary_covers_the_full_grid() {
+        let plans = FaultPlan::every_worker_boundary(1, 2, &[2, 4]);
+        assert_eq!(plans.len(), 12);
+        for rank in 0..2 {
+            for step in [2usize, 4] {
+                for phase in CrashPhase::ALL {
+                    assert!(plans
+                        .iter()
+                        .any(|p| p.worker_kills == vec![WorkerKill { rank, step, phase }]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_worker_kills_replay_and_stay_in_range() {
+        let boundaries = [2usize, 4, 6];
+        let a = FaultPlan::sample_worker_kill(9, 4, &boundaries);
+        let b = FaultPlan::sample_worker_kill(9, 4, &boundaries);
+        assert_eq!(a, b, "same seed must yield the identical kill");
+        assert_eq!(a.worker_kills.len(), 1);
+        let k = a.worker_kills[0];
+        assert!(k.rank < 4 && boundaries.contains(&k.step));
+        assert!(FaultPlan::sample_worker_kill(9, 0, &boundaries).worker_kills.is_empty());
+    }
+
+    #[test]
+    fn worker_kill_and_stall_builders_compose() {
+        let plan = FaultPlan::new(5)
+            .with_worker_kill(1, 6, CrashPhase::MidCheckpointWrite)
+            .with_worker_kill(0, 2, CrashPhase::AfterCheckpoint)
+            .with_stall(2, 3, 2);
+        let steps: Vec<usize> = plan.worker_kills.iter().map(|k| k.step).collect();
+        assert_eq!(steps, vec![2, 6], "kills must sort ascending by step");
+        assert_eq!(plan.stalls, vec![WorkerStall { rank: 2, step: 3, polls: 2 }]);
     }
 
     #[test]

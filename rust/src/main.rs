@@ -191,7 +191,7 @@ fn cmd_train_native(args: &Args, cfg: &RunConfig, quick: bool) -> Result<()> {
         None => tokens.div_ceil(r_inv).max(1),
     };
     let lr = args.get_f64("lr")?.unwrap_or(3e-3) as f32;
-    let rc = LmRunConfig {
+    let mut rc = LmRunConfig {
         cfg: mcfg.clone(),
         batch,
         seq,
@@ -205,6 +205,39 @@ fn cmd_train_native(args: &Args, cfg: &RunConfig, quick: bool) -> Result<()> {
         run_name: format!("{}_native_k{}_s{}", cfg.model, k, cfg.seed),
         resume: args.get_bool("resume"),
     };
+
+    // `--workers R` / `--grad-accum A` / `--elastic` route to the
+    // data-parallel fleet (coordinator::dp): R logical workers on
+    // deterministic interleaved shards, fixed rank-order all-reduce,
+    // sharded crash-safe checkpoints. R = 1, A = 1 is bit-identical to
+    // the single-process path below.
+    let workers = cfg.workers.max(1);
+    let accum = cfg.grad_accum.max(1);
+    let elastic = args.get_bool("elastic");
+    if workers > 1 || accum > 1 || elastic {
+        use pamm::coordinator::{train_lm_dp_native, DpRunConfig};
+        rc.run_name = format!("{}_native_k{}_s{}_w{}", cfg.model, k, cfg.seed, workers);
+        let drc = DpRunConfig {
+            base: rc,
+            workers,
+            accum,
+            elastic,
+            stall_budget: args.get_usize("stall-budget")?.unwrap_or(3).max(1),
+        };
+        println!(
+            "native DP LM pretraining: {} ({} layers, d_model {}, d_ff {}, vocab {}) — {workers} worker(s) × {accum} microbatch(es), effective batch {} ({batch}x{seq} per microbatch), k={k}, {steps} steps, Adam lr {lr}, elastic {}, threads {}",
+            cfg.model,
+            mcfg.n_layers,
+            mcfg.d_model(),
+            mcfg.d_ff,
+            mcfg.vocab,
+            drc.effective_batch(),
+            if elastic { "on" } else { "off" },
+            pamm::poolx::global().threads()
+        );
+        let out = train_lm_dp_native(&drc, pamm::poolx::global(), args.get_bool("quiet"))?;
+        return report_native_train(cfg, &mcfg, &out, quick, steps);
+    }
     println!(
         "native LM pretraining: {} ({} layers, d_model {}, d_ff {}, vocab {}) — batch {batch}x{seq}, k={k}, {steps} steps, Adam lr {lr}, threads {}",
         cfg.model,
@@ -215,6 +248,19 @@ fn cmd_train_native(args: &Args, cfg: &RunConfig, quick: bool) -> Result<()> {
         pamm::poolx::global().threads()
     );
     let out = train_lm_native(&rc, pamm::poolx::global(), args.get_bool("quiet"))?;
+    report_native_train(cfg, &mcfg, &out, quick, steps)
+}
+
+/// Shared post-run reporting for the single-process and DP native
+/// paths: already-complete handling, the done/run-log lines, and the
+/// `--quick` loss-decreased acceptance smoke.
+fn report_native_train(
+    cfg: &RunConfig,
+    mcfg: &pamm::model::LmConfig,
+    out: &pamm::coordinator::TrainOutcome,
+    quick: bool,
+    steps: usize,
+) -> Result<()> {
     if out.curve.is_empty() {
         // A --resume of an already-finished run trains nothing; the
         // checkpoint is the result. (The quick smoke needs fresh steps.)
@@ -470,13 +516,15 @@ fn cmd_chaos(args: &Args) -> Result<()> {
 
     let opts = ChaosOpts {
         quick: args.get_bool("quick"),
+        dp: args.get_bool("dp"),
         seed: args.get_usize("seed")?.unwrap_or(0xC4A05) as u64,
         dir: args.get_str("dir").unwrap_or_else(|| "target/chaos".into()),
     };
     println!(
-        "chaos campaign: seed {}, {} mode, scratch dir {}",
+        "chaos campaign: seed {}, {} mode{}, scratch dir {}",
         opts.seed,
         if opts.quick { "quick" } else { "full" },
+        if opts.dp { " (data-parallel fleet)" } else { "" },
         opts.dir
     );
     let report = run_campaign(&opts, pamm::poolx::global())?;
@@ -614,6 +662,11 @@ fn cmd_ledger(args: &Args) -> Result<()> {
     use pamm::rngx::Xoshiro256;
     use pamm::tensor::Mat;
 
+    // `--workers R` switches to the data-parallel fleet ledger (one
+    // tracked DP step: per-worker + aggregate saved-for-backward).
+    if let Some(workers) = args.get_usize("workers")? {
+        return cmd_ledger_dp(args, workers.max(1));
+    }
     // `--layers N` switches to the whole-model per-layer ledger (one
     // tracked LM train step across N transformer blocks).
     if let Some(layers) = args.get_usize("layers")? {
@@ -776,6 +829,90 @@ fn cmd_ledger_model(args: &Args, layers: usize) -> Result<()> {
     );
     println!(
         "per-block saved = 2×LN(residual stream) + Compressed(QKV) + lse + O + Compressed(MLP); dense adds X_qkv + Q/K/V + X_mlp + z instead of the two Compressed structs"
+    );
+    Ok(())
+}
+
+/// `pamm ledger --workers R`: memory ledger of one cold tracked
+/// **data-parallel fleet** step — per-worker and aggregate
+/// saved-for-backward bytes across R × accum microbatches, against the
+/// dense-autodiff baseline. The ranks execute in fixed order on the
+/// one pool, so the transient peaks are per-microbatch, not R×.
+fn cmd_ledger_dp(args: &Args, workers: usize) -> Result<()> {
+    use pamm::attention::AttnShape;
+    use pamm::coordinator::{DpTrainer, NativeOpt};
+    use pamm::memory::{fmt_bytes, MemoryLedger};
+    use pamm::model::{self, LmConfig};
+
+    let shape_s = args.get_str("shape").unwrap_or_else(|| "1x2x128x32".into());
+    let [b, h, l, d] = parse_shape(&shape_s)?;
+    let dm = h * d;
+    let tokens = b * l;
+    let vocab = args.get_usize("vocab")?.unwrap_or(256).max(4);
+    let d_ff = args.get_usize("d-ff")?.unwrap_or(4 * dm);
+    let layers = args.get_usize("layers")?.unwrap_or(2).max(1);
+    let accum = args.get_usize("grad-accum")?.unwrap_or(1).max(1);
+    let k = match args.get_usize("k")? {
+        Some(k) => k.clamp(1, tokens),
+        None => {
+            let r_inv = args.get_usize("r-inv")?.unwrap_or(16).max(1);
+            tokens.div_ceil(r_inv).max(1)
+        }
+    };
+    let cfg = LmConfig { vocab, n_layers: layers, heads: h, head_dim: d, d_ff };
+    let threads = pamm::poolx::global().threads();
+    println!(
+        "memory ledger: one native DP fleet step, {workers} worker(s) × {accum} microbatch(es), {layers} layers, shape b={b} h={h} l={l} d={d} (tokens {tokens}, d_model {dm}, d_ff {d_ff}, vocab {vocab}), k={k}, threads={threads}"
+    );
+
+    // Cold protocol (EXPERIMENTS.md P12): fresh pool + fresh caller
+    // thread so per-worker TLS scratch growth is measured.
+    let ledger = MemoryLedger::new();
+    let mut report = None;
+    std::thread::scope(|sc| {
+        sc.spawn(|| {
+            let cold = pamm::poolx::Pool::new(threads);
+            let mut t =
+                DpTrainer::new(cfg.clone(), b, l, k, NativeOpt::adam(1e-3), 7, workers, accum);
+            report = Some(t.train_step(&cold, Some(&ledger)));
+        });
+    });
+    let rep = report.expect("tracked fleet step ran")?;
+
+    let shape = AttnShape::new(b, h, l, d, true);
+    let dense_one = model::dense_model_saved_bytes(&cfg, &shape);
+    println!(
+        "\nper-worker saved-for-backward (fleet step loss {:.4}, E = {} microbatches):",
+        rep.loss, rep.e_active
+    );
+    println!("{:<10} {:>12} {:>12} {:>8}", "worker", "pamm saved", "dense saved", "factor");
+    let dense_worker = dense_one * accum;
+    for &(rank, saved) in &rep.per_worker_saved {
+        println!(
+            "{:<10} {:>12} {:>12} {:>7.1}x",
+            format!("rank {rank}"),
+            fmt_bytes(saved),
+            fmt_bytes(dense_worker),
+            dense_worker as f64 / saved.max(1) as f64
+        );
+    }
+    let dense_total = dense_one * rep.e_active;
+    println!(
+        "{:<10} {:>12} {:>12} {:>7.1}x\n",
+        "aggregate",
+        fmt_bytes(rep.saved_bytes),
+        fmt_bytes(dense_total),
+        dense_total as f64 / rep.saved_bytes.max(1) as f64
+    );
+    print!("{}", ledger.render(dense_total));
+    anyhow::ensure!(
+        ledger.saved() == rep.saved_bytes,
+        "ledger saved {} vs fleet per-worker total {}",
+        ledger.saved(),
+        rep.saved_bytes
+    );
+    println!(
+        "ranks reduce in fixed order on one pool — transient peaks are per-microbatch, the saved rows scale with E = workers × accum"
     );
     Ok(())
 }

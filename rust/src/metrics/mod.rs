@@ -190,6 +190,43 @@ impl RunLogger {
         Ok(())
     }
 
+    /// Elastic degradation marker (`coordinator::dp`, DESIGN.md §10):
+    /// at checkpoint boundary `step` the dead `rank` was dropped and
+    /// the stream re-interleaved across the `workers` survivors. The
+    /// determinism contract from this row on is a function of the
+    /// surviving rank set.
+    pub fn log_reshard(&mut self, step: usize, dead_rank: usize, workers: usize) -> Result<()> {
+        writeln!(
+            self.jsonl,
+            "{}",
+            jsonx::obj(vec![
+                ("event", jsonx::s("reshard")),
+                ("step", jsonx::num(step as f64)),
+                ("dead_rank", jsonx::num(dead_rank as f64)),
+                ("workers", jsonx::num(workers as f64)),
+            ])
+        )?;
+        self.flush()
+    }
+
+    /// Straggler marker: worker `rank` missed `polls` deadline polls at
+    /// execution step `step`; `recovered` says whether it came back
+    /// within the stall budget.
+    pub fn log_stall(&mut self, step: usize, rank: usize, polls: usize, recovered: bool) -> Result<()> {
+        writeln!(
+            self.jsonl,
+            "{}",
+            jsonx::obj(vec![
+                ("event", jsonx::s("stall")),
+                ("step", jsonx::num(step as f64)),
+                ("rank", jsonx::num(rank as f64)),
+                ("polls", jsonx::num(polls as f64)),
+                ("recovered", jsonx::Value::Bool(recovered)),
+            ])
+        )?;
+        self.flush()
+    }
+
     pub fn log_eval(&mut self, step: usize, loss: f64) -> Result<()> {
         writeln!(
             self.jsonl,

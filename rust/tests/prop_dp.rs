@@ -1,0 +1,315 @@
+//! Data-parallel training property tests (DESIGN.md §10,
+//! EXPERIMENTS.md P16):
+//!
+//! * **Single-worker identity** — an R=1, A=1 fleet run is bitwise the
+//!   single-process `train_lm_native` run: identical replayed loss
+//!   curve and identical final parameters.
+//! * **Stream partition** — the R interleaved [`BatchShard`]s consume
+//!   exactly the global microbatch stream `j = s·E + r·A + a` of the
+//!   plain [`BatchIterator`]: nothing duplicated, nothing reordered.
+//! * **Factorization + thread invariance** — every `R × A` split of a
+//!   fixed effective batch E, at every physical thread count, produces
+//!   the identical loss trajectory and final merged parameters
+//!   (gradient-accumulation equivalence falls out as the R=1 column).
+//! * **Kill-anywhere bit-parity** — a supervised fleet killed at EVERY
+//!   (rank × checkpoint boundary × crash phase) recovers from the
+//!   sharded ring to a final checkpoint AND replayed run log bitwise
+//!   identical to the uninterrupted fleet's.
+//! * **Shard corruption fallback** — scripted bitrot in one shard of
+//!   the newest sharded entry is detected per-shard (CRC), reported,
+//!   and recovery falls back a whole entry — then still converges
+//!   bitwise.
+//! * **Elastic degradation determinism** — a straggler past the stall
+//!   budget dies, the fleet reshards onto the survivor at the next
+//!   boundary, and the degraded trajectory is reproducible bit for bit
+//!   at any thread count (while the non-elastic run fails fast with an
+//!   actionable diagnostic).
+//!
+//! Run under both `PAMM_SIMD=native` (default) and `PAMM_SIMD=scalar`
+//! (CI does both).
+
+use std::path::PathBuf;
+
+use pamm::checkpoint;
+use pamm::coordinator::dp::DpReshard;
+use pamm::coordinator::{
+    checkpoint_boundaries, train_lm_dp_native_run, train_lm_dp_supervised, train_lm_native_run,
+    DpRunConfig, LmRunConfig, NativeOpt,
+};
+use pamm::data::{BatchIterator, BatchShard};
+use pamm::faultx::{CrashPhase, FaultPlan};
+use pamm::metrics::replay_run_log;
+use pamm::model::LmConfig;
+use pamm::poolx::Pool;
+use pamm::runtime::HostTensor;
+
+fn scratch(test: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pamm_prop_dp_{}_{test}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn base_rc(dir: &std::path::Path, run_name: &str, steps: usize) -> LmRunConfig {
+    LmRunConfig {
+        cfg: LmConfig { vocab: 120, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 },
+        batch: 1,
+        seq: 8,
+        steps,
+        k: 4,
+        opt: NativeOpt::adam(3e-3),
+        seed: 33,
+        ckpt_every: 2,
+        keep_last: 3,
+        run_dir: dir.join(run_name).to_string_lossy().into_owned(),
+        run_name: run_name.to_string(),
+        resume: false,
+    }
+}
+
+fn dp_rc(dir: &std::path::Path, run_name: &str, steps: usize, workers: usize, accum: usize) -> DpRunConfig {
+    DpRunConfig {
+        base: base_rc(dir, run_name, steps),
+        workers,
+        accum,
+        elastic: false,
+        stall_budget: 3,
+    }
+}
+
+/// Final checkpoint restricted to model parameters: the single-process
+/// final checkpoint also carries optimizer/meta tensors the merged DP
+/// checkpoint deliberately omits, so cross-path comparisons use the
+/// parameter set both formats share.
+fn final_params(rc: &LmRunConfig) -> Vec<(String, HostTensor)> {
+    checkpoint::load(format!("{}/ckpt", rc.run_dir), &rc.run_name)
+        .expect("final checkpoint")
+        .into_iter()
+        .filter(|(n, _)| !n.starts_with("meta.") && !n.starts_with("opt_"))
+        .collect()
+}
+
+fn replayed(rc: &LmRunConfig) -> Vec<(usize, u64)> {
+    replay_run_log(&rc.run_dir, &rc.run_name)
+        .expect("replay run log")
+        .into_iter()
+        .map(|(s, l)| (s, l.to_bits()))
+        .collect()
+}
+
+#[test]
+fn single_worker_fleet_bit_matches_the_single_process_trainer() {
+    let dir = scratch("r1_identity");
+    let pool = Pool::serial();
+    let lm_rc = base_rc(&dir, "lm", 8);
+    let lm_out = train_lm_native_run(&lm_rc, None, &pool, true).unwrap();
+
+    let rc = dp_rc(&dir, "dp", 8, 1, 1);
+    let dp_out = train_lm_dp_native_run(&rc, None, &[], &pool, true).unwrap();
+
+    assert_eq!(
+        lm_out.outcome.final_loss.to_bits(),
+        dp_out.outcome.final_loss.to_bits(),
+        "R=1 A=1 final loss must bit-match the single-process run"
+    );
+    assert_eq!(replayed(&lm_rc), replayed(&rc.base), "replayed loss curves must bit-match");
+    assert_eq!(
+        final_params(&lm_rc),
+        final_params(&rc.base),
+        "final parameters must bit-match"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shards_partition_the_global_microbatch_stream() {
+    let (vocab, batch, seq, seed) = (50usize, 2usize, 6usize, 9u64);
+    let (ranks, accum, rounds) = (3usize, 2usize, 4usize);
+    let e = ranks * accum;
+
+    let mut global = BatchIterator::from_seed(vocab, batch, seq, seed);
+    let stream: Vec<Vec<i32>> = (0..e * rounds).map(|_| global.next_batch().tokens).collect();
+
+    for r in 0..ranks {
+        let mut shard = BatchShard::new(vocab, batch, seq, seed, r, ranks, accum);
+        for s in 0..rounds {
+            for a in 0..accum {
+                let got = shard.next_batch().tokens;
+                let j = s * e + r * accum + a;
+                assert_eq!(
+                    got, stream[j],
+                    "rank {r} microbatch (round {s}, a {a}) must be global microbatch {j}"
+                );
+            }
+        }
+        assert_eq!(shard.cursor(), e * rounds + r * accum, "cursor sits at the next round's slot");
+    }
+}
+
+#[test]
+fn fixed_e_factorizations_and_thread_counts_agree() {
+    let dir = scratch("factorizations");
+    let steps = 4;
+    let mut reference: Option<(Vec<(usize, u64)>, Vec<(String, HostTensor)>)> = None;
+    for (workers, accum) in [(1usize, 4usize), (2, 2), (4, 1)] {
+        for threads in [1usize, 2, 4] {
+            let pool =
+                if threads == 1 { Pool::serial() } else { Pool::new(threads).with_min_chunk(1) };
+            let name = format!("w{workers}a{accum}t{threads}");
+            let rc = dp_rc(&dir, &name, steps, workers, accum);
+            train_lm_dp_native_run(&rc, None, &[], &pool, true)
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            let got = (replayed(&rc.base), final_params(&rc.base));
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => {
+                    assert_eq!(&got.0, &want.0, "{name}: loss trajectory drifted");
+                    assert_eq!(&got.1, &want.1, "{name}: final parameters drifted");
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn worker_kill_recovery_is_bitwise_at_every_rank_boundary_and_phase() {
+    let dir = scratch("kill_sweep");
+    let pool = Pool::serial();
+    let steps = 6;
+    let workers = 2;
+    let base = dp_rc(&dir, "base", steps, workers, 1);
+    train_lm_dp_native_run(&base, None, &[], &pool, true).unwrap();
+    let base_final = final_params(&base.base);
+    let base_log = replayed(&base.base);
+    let boundaries = checkpoint_boundaries(&base.base);
+    assert_eq!(boundaries, vec![2, 4, 6]);
+
+    let plans = FaultPlan::every_worker_boundary(33, workers, &boundaries);
+    assert_eq!(plans.len(), workers * boundaries.len() * CrashPhase::ALL.len());
+    for (i, plan) in plans.iter().enumerate() {
+        let k = plan.worker_kills[0];
+        let rc = dp_rc(&dir, &format!("kill_{i}"), steps, workers, 1);
+        let out = train_lm_dp_supervised(&rc, plan, &pool, true)
+            .unwrap_or_else(|e| panic!("kill r{} s{}/{}: {e:#}", k.rank, k.step, k.phase.name()));
+        assert_eq!(out.kills.len(), 1, "kill r{} s{}/{} never fired", k.rank, k.step, k.phase.name());
+        assert_eq!(out.attempts, 2, "one kill ⇒ exactly one recovery launch");
+        assert_eq!(
+            final_params(&rc.base),
+            base_final,
+            "kill r{} s{}/{}: final checkpoint drifted",
+            k.rank,
+            k.step,
+            k.phase.name()
+        );
+        assert_eq!(
+            replayed(&rc.base),
+            base_log,
+            "kill r{} s{}/{}: replayed run log drifted",
+            k.rank,
+            k.step,
+            k.phase.name()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_shard_is_detected_and_recovery_falls_back_a_whole_entry() {
+    let dir = scratch("shard_corruption");
+    let pool = Pool::serial();
+    let steps = 6;
+    let base = dp_rc(&dir, "base", steps, 2, 1);
+    train_lm_dp_native_run(&base, None, &[], &pool, true).unwrap();
+    let base_final = final_params(&base.base);
+
+    // Kill right after the step-4 sharded entry committed, then flip
+    // one seeded bit in one of its shards: recovery must flag that
+    // shard, discard the whole entry, and resume from step 2.
+    let rc = dp_rc(&dir, "corrupt", steps, 2, 1);
+    let plan = FaultPlan::new(33)
+        .with_worker_kill(1, 4, CrashPhase::AfterCheckpoint)
+        .with_corruption(0);
+    let out = train_lm_dp_supervised(&rc, &plan, &pool, true).unwrap();
+    assert!(
+        out.recovery_diags.iter().any(|d| d.contains("injected corruption")),
+        "corruption injection missing from diags: {:?}",
+        out.recovery_diags
+    );
+    assert!(
+        out.recovery_diags
+            .iter()
+            .any(|d| d.contains("shard") && d.contains("failed verification")),
+        "per-shard CRC never flagged the flipped shard: {:?}",
+        out.recovery_diags
+    );
+    assert_eq!(out.resume_steps, vec![2], "must fall back past the corrupt step-4 entry");
+    assert_eq!(final_params(&rc.base), base_final, "post-fallback run drifted from baseline");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn straggler_timeout_fails_fast_without_elastic() {
+    let dir = scratch("timeout");
+    let rc = dp_rc(&dir, "timeout", 6, 2, 1);
+    let plan = FaultPlan::new(33).with_stall(1, 1, 5);
+    let err = train_lm_dp_native_run(&rc, None, &plan.stalls, &Pool::serial(), true)
+        .expect_err("an over-budget straggler must fail the non-elastic run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 1"), "diagnostic must name the dead rank: {msg}");
+    assert!(msg.contains("--elastic"), "diagnostic must point at --elastic: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn elastic_reshard_is_deterministic_and_thread_invariant() {
+    let dir = scratch("elastic");
+    let steps = 6;
+    let plan = FaultPlan::new(33).with_stall(1, 1, 5);
+    let mut reference: Option<Vec<(String, HostTensor)>> = None;
+    for (i, threads) in [1usize, 1, 2].iter().enumerate() {
+        let pool =
+            if *threads == 1 { Pool::serial() } else { Pool::new(*threads).with_min_chunk(1) };
+        let mut rc = dp_rc(&dir, &format!("elastic_{i}"), steps, 2, 1);
+        rc.elastic = true;
+        let out = train_lm_dp_supervised(&rc, &plan, &pool, true).unwrap();
+        // Rank 1 dies at step 1 (5 polls > budget 3); the fleet
+        // reshards onto rank 0 at the next boundary.
+        assert_eq!(
+            out.reshards,
+            vec![DpReshard { step: 2, dead_rank: 1, workers: 1 }],
+            "run {i}"
+        );
+        assert_eq!(out.workers_final, 1, "run {i}");
+        assert_eq!(out.stalls_recovered, 0, "run {i}");
+        let fin = final_params(&rc.base);
+        match &reference {
+            None => reference = Some(fin),
+            Some(want) => {
+                assert_eq!(&fin, want, "run {i}: degraded trajectory is not reproducible")
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn within_budget_stall_leaves_the_trajectory_bitwise_unchanged() {
+    let dir = scratch("stall_ok");
+    let pool = Pool::serial();
+    let base = dp_rc(&dir, "base", 4, 2, 1);
+    train_lm_dp_native_run(&base, None, &[], &pool, true).unwrap();
+
+    let rc = dp_rc(&dir, "stalled", 4, 2, 1);
+    let plan = FaultPlan::new(33).with_stall(0, 1, 2).with_stall(1, 2, 3);
+    let out = train_lm_dp_supervised(&rc, &plan, &pool, true).unwrap();
+    assert_eq!(out.stalls_recovered, 2, "both stalls sit within the budget of 3");
+    assert!(out.reshards.is_empty());
+    assert_eq!(out.attempts, 1, "no kill ⇒ single launch");
+    assert_eq!(
+        final_params(&rc.base),
+        final_params(&base.base),
+        "absorbed stalls must not change the trajectory"
+    );
+    assert_eq!(replayed(&rc.base), replayed(&base.base));
+    let _ = std::fs::remove_dir_all(&dir);
+}
