@@ -1,4 +1,4 @@
-//! End-to-end headline run (DESIGN.md §11): train the largest
+//! End-to-end headline run (DESIGN.md §12): train the largest
 //! CPU-tractable LLaMA-style model through the full AOT→PJRT→coordinator
 //! stack, baseline vs PAMM r = 1/512, logging both loss curves.
 //!

@@ -1,0 +1,122 @@
+//! Bench: native fine-tuning — the full classification train step
+//! (trunk fwd + mean pool + head + label xent + tape backward + Adam)
+//! and the pure dev evaluation pass, per dispatch level × thread
+//! count. The acceptance trail for the quality loop (P17):
+//! `benchmarks/BENCH_model_finetune.json` → BENCHMARKS.md
+//! §model_finetune.
+//!
+//! GFLOP/s uses the standard parameter-flop model over the LM trunk +
+//! head: step ≈ `6·N·tokens`, eval forward ≈ `2·N·tokens` with
+//! `N = LmConfig::param_count() + d_model·n_classes` — comparable to
+//! the `model_train` rows, not absolute kernel throughput. Step rows
+//! are annotated with the tape's EXACT saved-for-backward bytes: the
+//! classification tail adds only the pooled activations on top of the
+//! compressed trunk.
+//!
+//! Run: `cargo bench --bench model_finetune` (PAMM_BENCH_QUICK=1 for
+//! CI); render with `pamm bench-report`.
+
+use std::time::Duration;
+
+use pamm::benchx::{BenchOpts, BenchSink, Suite};
+use pamm::coordinator::{find_task, FtTrainer, NativeOpt};
+use pamm::data::glue::{LabeledStream, TaskCorpus};
+use pamm::memory::fmt_bytes;
+use pamm::model::LmConfig;
+use pamm::poolx::Pool;
+use pamm::tensor::kernels::Dispatch;
+
+fn opts() -> BenchOpts {
+    if std::env::var("PAMM_BENCH_QUICK").is_ok() {
+        BenchOpts { warmup_iters: 0, min_iters: 1, max_iters: 3, max_total: Duration::from_secs(2) }
+    } else {
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            max_total: Duration::from_secs(12),
+        }
+    }
+}
+
+fn main() {
+    // One fine-tuning shape: 2-block trunk (heads=4, d=16 → d_model
+    // 64, d_ff 256), SST2 stand-in, k = tokens/16.
+    let cfg = LmConfig { vocab: 256, n_layers: 2, heads: 4, head_dim: 16, d_ff: 256 };
+    let task = find_task("SST2").expect("SST2 is a known task");
+    let (batch, seq) = (4usize, 64usize);
+    let tokens = batch * seq;
+    let k = tokens / 16;
+    let native = Dispatch::native();
+    let threads: &[usize] = &[1, 2, 4];
+    let mut sink = BenchSink::new("model_finetune");
+
+    let n_params = cfg.param_count() as f64 + (cfg.d_model() * task.n_classes) as f64;
+    let step_flops = 6.0 * n_params * tokens as f64;
+    let shape_s = format!(
+        "task={} L={} b={batch} l={seq} dm={} ff={} k={k}",
+        task.name, cfg.n_layers, cfg.d_model(), cfg.d_ff
+    );
+
+    println!("model_finetune: native dispatch = {}", native.name());
+
+    let corpus = TaskCorpus::synthetic(task.clone(), cfg.vocab, seq, 64, 7);
+    let dev = TaskCorpus::synthetic(task.clone(), cfg.vocab, seq, 32, 9);
+    let lb = LabeledStream::new(corpus, batch, 7).next_batch();
+    let eval_tokens = (dev.examples.len() / batch) * batch * seq;
+    let eval_flops = 2.0 * n_params * eval_tokens as f64;
+
+    let mut suite = Suite::with_opts(&format!("model_finetune {shape_s}"), opts());
+    suite.header();
+
+    let mut plan: Vec<(Dispatch, usize)> = vec![(Dispatch::Scalar, 1)];
+    if native != Dispatch::Scalar {
+        plan.extend(threads.iter().map(|&t| (native, t)));
+    }
+    for &(disp, t) in &plan {
+        let tag = disp.name();
+        let pool = Pool::new(t);
+
+        // Full fine-tune step: classify fwd + label xent + backward + Adam.
+        let mut trainer =
+            FtTrainer::new(cfg.clone(), task.clone(), batch, seq, k, NativeOpt::adam(2e-3), 11);
+        let r = suite
+            .bench(&format!("ft_step[{tag}] t={t}"), || {
+                std::hint::black_box(
+                    trainer.step_report(disp, &lb, &pool, None).expect("bench step").loss,
+                );
+            })
+            .clone();
+        sink.record_flops(&format!("ft_step[{tag}]"), &shape_s, t, &r, step_flops);
+        let rep = trainer.step_report(disp, &lb, &pool, None).expect("saved-bytes probe");
+        sink.annotate_saved_bytes(rep.saved_bytes);
+        println!(
+            "    -> {:.0} tok/s, saved/backward {}",
+            r.rate(tokens as f64),
+            fmt_bytes(rep.saved_bytes)
+        );
+
+        // Dev evaluation: pure forward over the dev corpus.
+        let eval_trainer =
+            FtTrainer::new(cfg.clone(), task.clone(), batch, seq, k, NativeOpt::adam(2e-3), 11);
+        let r = suite
+            .bench(&format!("ft_eval[{tag}] t={t}"), || {
+                std::hint::black_box(eval_trainer.evaluate(&dev, &pool).hits);
+            })
+            .clone();
+        sink.record_flops(&format!("ft_eval[{tag}]"), &shape_s, t, &r, eval_flops);
+    }
+
+    if let Some(sp) =
+        suite.ratio(&format!("ft_step[{}] t=1", native.name()), "ft_step[scalar] t=1")
+    {
+        println!("  step vs scalar (single thread, {}): {sp:.2}x", native.name());
+    }
+
+    match sink.flush() {
+        Ok(path) => {
+            println!("\npersisted {} entries to {}", sink.entries().len(), path.display())
+        }
+        Err(e) => eprintln!("bench persistence failed: {e}"),
+    }
+}

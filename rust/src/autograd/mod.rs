@@ -37,6 +37,8 @@
 //! | residual add | nothing |
 //! | PAMM MLP | [`Compressed`] only — `z = Ã·W₁` and `h = GELU(z)` are **recomputed** in the backward from the saved compression |
 //! | tied LM head | its input `x` (final LN output, once per model) |
+//! | mean pool | nothing (geometry only) |
+//! | linear head | its pooled input `x` (`batch×d_model`, once per model) |
 //! | softmax cross-entropy | `dlogits` (the backward seed) |
 //!
 //! The projection-layer activations — the paper's headline quantity —
@@ -165,6 +167,12 @@ pub enum Op {
     MlpPamm { comp: Compressed, w1: ParamId, w2: ParamId, input: ValueId, out: ValueId },
     /// `logits = x·Embᵀ` (weight tying) — saves its input `x`.
     TiedHead { x: Mat, emb: ParamId, input: ValueId, out: ValueId },
+    /// `out[b] = (1/seq)·Σ_t x[b·seq+t]` — sequence mean-pooling for
+    /// the classification head; saves only the geometry.
+    MeanPool { batch: usize, seq: usize, input: ValueId, out: ValueId },
+    /// Dense classification head `logits = x·W` over the pooled rows —
+    /// saves its (small, `batch×d_model`) input.
+    LinearHead { x: Mat, w: ParamId, input: ValueId, out: ValueId },
     /// Mean softmax cross-entropy — computes and saves `dlogits`, the
     /// backward seed, in the forward pass (one pass over the logits).
     SoftmaxXent { dlogits: Mat, input: ValueId },
@@ -179,6 +187,8 @@ impl Op {
             Op::Residual { .. } => "residual",
             Op::MlpPamm { .. } => "mlp_pamm",
             Op::TiedHead { .. } => "tied_head",
+            Op::MeanPool { .. } => "mean_pool",
+            Op::LinearHead { .. } => "linear_head",
             Op::SoftmaxXent { .. } => "softmax_xent",
         }
     }
@@ -194,6 +204,8 @@ impl Op {
             Op::Residual { .. } => 0,
             Op::MlpPamm { comp, .. } => comp.stored_bytes(),
             Op::TiedHead { x, .. } => x.rows() * x.cols() * 4,
+            Op::MeanPool { .. } => 0,
+            Op::LinearHead { x, .. } => x.rows() * x.cols() * 4,
             Op::SoftmaxXent { dlogits, .. } => dlogits.rows() * dlogits.cols() * 4,
         }
     }
@@ -490,6 +502,60 @@ impl Tape {
         (logits, vid)
     }
 
+    /// Sequence mean-pool: collapse `batch·seq` token rows into one
+    /// pooled row per sequence, `out[b] = (1/seq)·Σ_t x[b·seq+t]`.
+    /// Fixed-order scalar f32 on the caller thread (ascending t) —
+    /// thread- and dispatch-invariant; the node saves nothing but the
+    /// geometry (the backward is a broadcast of `dout/seq`).
+    pub fn mean_pool(
+        &mut self,
+        x: &Mat,
+        xid: ValueId,
+        batch: usize,
+        seq: usize,
+        ledger: Option<&MemoryLedger>,
+    ) -> (Mat, ValueId) {
+        assert_eq!(x.rows(), batch * seq, "mean_pool: rows vs batch*seq");
+        let n = x.cols();
+        let inv = 1.0 / seq.max(1) as f32;
+        let mut out = Mat::zeros(batch, n);
+        for b in 0..batch {
+            let or = out.row_mut(b);
+            for t in 0..seq {
+                let xr = x.row(b * seq + t);
+                for j in 0..n {
+                    or[j] += xr[j];
+                }
+            }
+            for v in or.iter_mut() {
+                *v *= inv;
+            }
+        }
+        let vid = self.leaf();
+        self.push(Op::MeanPool { batch, seq, input: xid, out: vid }, ledger);
+        (out, vid)
+    }
+
+    /// Dense classification head: `logits = x·W` with `x` the pooled
+    /// `batch×d_model` matrix and `W` a `d_model×n_classes` parameter.
+    /// Saves its input — `batch` rows, not `batch·seq`, so the head's
+    /// saved state is negligible next to the residual stream.
+    pub fn linear_head(
+        &mut self,
+        x: &Mat,
+        xid: ValueId,
+        w: &Mat,
+        w_id: ParamId,
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> (Mat, ValueId) {
+        assert_eq!(x.cols(), w.rows(), "linear head: x width vs W rows");
+        let logits = x.matmul_with(w, pool);
+        let vid = self.leaf();
+        self.push(Op::LinearHead { x: x.clone(), w: w_id, input: xid, out: vid }, ledger);
+        (logits, vid)
+    }
+
     /// Mean softmax cross-entropy over next-token targets. Loss and
     /// `dlogits = (softmax − onehot)/rows` are computed in one pass;
     /// the node stores `dlogits` as the backward seed. Fixed-order
@@ -565,6 +631,30 @@ impl Tape {
                     let demb = g.matmul_tn_with(&x, pool);
                     acc_param(&mut pgrads, emb, demb);
                     let dx = g.matmul_with(&params[emb], pool);
+                    acc_value(&mut vgrads, input, dx);
+                }
+                Op::LinearHead { x, w, input, out } => {
+                    let Some(g) = vgrads[out].take() else { continue };
+                    // dW = xᵀ·g, dx = g·Wᵀ — both tiny (`batch` rows).
+                    let dw = x.matmul_tn_with(&g, pool);
+                    acc_param(&mut pgrads, w, dw);
+                    let dx = g.matmul_with(&params[w].transpose(), pool);
+                    acc_value(&mut vgrads, input, dx);
+                }
+                Op::MeanPool { batch, seq, input, out } => {
+                    let Some(g) = vgrads[out].take() else { continue };
+                    let n = g.cols();
+                    let inv = 1.0 / seq.max(1) as f32;
+                    let mut dx = Mat::zeros(batch * seq, n);
+                    for b in 0..batch {
+                        let gr = g.row(b);
+                        for t in 0..seq {
+                            let dr = dx.row_mut(b * seq + t);
+                            for j in 0..n {
+                                dr[j] = gr[j] * inv;
+                            }
+                        }
+                    }
                     acc_value(&mut vgrads, input, dx);
                 }
                 Op::LayerNorm { x, mean, rstd, gain, bias, input, out } => {

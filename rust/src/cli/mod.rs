@@ -165,9 +165,41 @@ USAGE:
                                       # phase), shard corruption + fallback,
                                       # stragglers within/past the stall
                                       # budget, elastic degradation
-  pamm finetune --task NAME [--r-inv N] [--steps N] [--seed N]
+  pamm finetune --native --task NAME [--model M] [--batch N] [--seq N]
+               [--steps N] [--k N | --r-inv N] [--lr F] [--seed N]
+               [--examples N] [--dev-every N] [--eval-every N]
+               [--patience N] [--task-file PATH] [--ckpt-every N]
+               [--keep-last N] [--dir DIR] [--resume] [--quick] [--quiet]
+                                      # native GLUE-style fine-tuning, no
+                                      # artifacts: classification head over
+                                      # the LM trunk, deterministic synthetic
+                                      # task corpus (or --task-file with
+                                      # `label<TAB>token ids` rows), stride
+                                      # train/dev split (no leakage),
+                                      # dev-accuracy early stopping
+                                      # (--eval-every + --patience), crash-
+                                      # safe ring checkpoints + bit-exact
+                                      # --resume; reports dev accuracy + the
+                                      # task metric and ASSERTS the loss
+                                      # decreased on every fresh run. Tasks:
+                                      # CoLA STS-B MRPC RTE SST2 MNLI QNLI
+                                      # QQP AID. Without --native (pjrt
+                                      # builds) drives the artifact engine:
+                                      # --task NAME [--r-inv N] [--steps N]
+  pamm ablate [--epsilon F] [--k N] [--quick] [--out DIR]
+                                      # native ε/k ablation sweep (P17): one
+                                      # fresh LM pretraining run per (ε, k)
+                                      # cell over a fixed shape, final loss
+                                      # vs EXACT tape saved-bytes (ledger-
+                                      # verified per cell), all-generators
+                                      # cell asserted bit-equal to the dense
+                                      # baseline, saved bytes asserted
+                                      # monotone in k; closes with the
+                                      # analytic memory-zoo rows. --epsilon/
+                                      # --k add a row/column to the grid
   pamm reproduce <fig3a|fig3b|table1|table2a|table2b|table3|table4|table5|
-                  table6|table7|fig4a|fig4b|fig5|fig6|fig7|attention|all>
+                  table6|table7|fig4a|fig4b|fig5|fig6|fig7|attention|
+                  ablation|finetune|all>
                  [--quick] [--native] [--artifacts DIR] [--out DIR]
                                       # `attention` is native-only (P9/P10):
                                       # flash/fused throughput + measured
@@ -176,6 +208,11 @@ USAGE:
                                       # optimization (fwd+bwd+Adam through
                                       # the compressed-activation autograd)
                                       # + the measured memory ledger (P11)
+                                      # `ablation` + `finetune` are native-
+                                      # only too (P17): the ε/k quality
+                                      # sweep and the GLUE stand-in
+                                      # fine-tuning table, synthetic
+                                      # corpora, no downloads
   pamm ledger [--shape BxHxLxD] [--k N | --r-inv N] [--no-causal]
                                       # one cold tracked native train step:
                                       # per-phase memory ledger (forward /

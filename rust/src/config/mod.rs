@@ -116,7 +116,7 @@ pub fn preset(name: &str) -> Result<RunConfig> {
             c.variant = Variant::pamm(512);
         }
         "e2e" => {
-            // The headline end-to-end run (DESIGN.md §11): largest
+            // The headline end-to-end run (DESIGN.md §12): largest
             // CPU-tractable model, few hundred steps, loss curve logged.
             c.model = "medium".into();
             c.batch = 4;

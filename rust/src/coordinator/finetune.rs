@@ -1,0 +1,786 @@
+//! Native GLUE-style fine-tuning driver: sequence classification over
+//! the pretraining stack, end to end on the native substrates — no
+//! artifacts, no PJRT (DESIGN.md §11).
+//!
+//! [`FtTrainer`] owns a `model::TransformerLM` whose flat parameter
+//! vector carries one extra matrix past the LM layout — the
+//! `d_model×n_classes` classification head
+//! (`model::CLS_HEAD_NAME`, `ParamId == LmConfig::n_params()`) — plus
+//! the optimizer state, step counter and generator-sampling RNG,
+//! mirroring `coordinator::lm::LmTrainer` exactly so the two trainers
+//! share the optimizer update, the divergence guards and the
+//! checkpoint schema. [`finetune_native`] is the run loop
+//! `pamm finetune --native` drives: a deterministic
+//! [`TaskCorpus`] (synthetic by default, a GLUE-style task file when
+//! given), a stride train/dev split with no leakage, epoch-shuffled
+//! [`LabeledStream`] batches → `forward_classify` → tape backward →
+//! update, periodic dev evaluation with integer-exact early stopping,
+//! run logging, ring checkpoints and bit-exact resume.
+//!
+//! # Exact resume
+//!
+//! The checkpoint carries parameters (head included), Adam moments,
+//! the step counter, the generator-RNG words, the geometry fingerprint
+//! — extended with the task identity (`n_classes` + a task-name hash),
+//! so resuming under a different task is refused like any other
+//! geometry change — the optimizer constants, and the early-stopping
+//! bookkeeping as **integers** (best dev *hit count*, not a rounded
+//! accuracy, so resumed stop decisions compare exactly). The labeled
+//! stream fast-forwards by [`LabeledStream::skip_batches`], dev
+//! evaluation is a pure function of `(params, dev corpus, seed)`, and
+//! every kernel below is bit-identical at any thread count and
+//! dispatch level — so an interrupted-and-resumed fine-tuning run is
+//! bit-identical, step for step, to an uninterrupted one
+//! (`rust/tests/prop_finetune.rs`).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::checkpoint::{self, CheckpointRing};
+use crate::coordinator::lm::{
+    apply_opt_update, check_finite_grads, opt_words, rng_words, words_to_state, Moments,
+};
+use crate::coordinator::trainer::NativeOpt;
+use crate::data::glue::{self, LabeledBatch, LabeledStream, TaskCorpus, TaskSpec};
+use crate::jsonx;
+use crate::memory::MemoryLedger;
+use crate::metrics::{Ema, RunLogger};
+use crate::model::{self, LmConfig, TransformerLM};
+use crate::pamm::Eps;
+use crate::poolx::Pool;
+use crate::rngx::Xoshiro256;
+use crate::runtime::HostTensor;
+use crate::tensor::kernels::{self, Dispatch};
+use crate::tensor::Mat;
+
+/// Checkpoint-key order for a fine-tuning trainer: the LM layout plus
+/// the appended classification head.
+pub fn ft_param_names(cfg: &LmConfig) -> Vec<String> {
+    let mut names = model::param_names(cfg);
+    names.push(model::CLS_HEAD_NAME.to_string());
+    names
+}
+
+/// Stable i32 fingerprint of a task name (part of the checkpoint
+/// geometry so resume refuses a task swap).
+pub fn task_fingerprint(name: &str) -> i32 {
+    name.bytes().fold(0u32, |a, b| a.wrapping_mul(31).wrapping_add(b as u32)) as i32
+}
+
+/// Everything one fine-tuning step produced.
+#[derive(Debug)]
+pub struct FtStepReport {
+    pub loss: f32,
+    /// Exact saved-for-backward bytes of the step's whole tape.
+    pub saved_bytes: usize,
+}
+
+/// One dev-set evaluation: integer hits (the early-stopping currency —
+/// exact under resume), the task metric on the percent scale, and the
+/// raw accuracy.
+#[derive(Debug, Clone, Copy)]
+pub struct DevEval {
+    pub hits: usize,
+    pub examples: usize,
+    pub score: f64,
+    pub accuracy: f64,
+}
+
+/// The native fine-tuning trainer: LM + classification head +
+/// optimizer + RNG stream. The structural twin of
+/// `coordinator::lm::LmTrainer` — same optimizer update, same guards,
+/// same checkpoint schema (plus the head tensor and the task-aware
+/// geometry fingerprint).
+pub struct FtTrainer {
+    pub model: TransformerLM,
+    pub task: TaskSpec,
+    pub batch: usize,
+    pub seq: usize,
+    /// Generator budget per compression (`k = ⌈r·b⌉` of the paper).
+    pub k: usize,
+    pub eps: Eps,
+    opt: NativeOpt,
+    moments: Option<Vec<Moments>>,
+    step_no: usize,
+    rng: Xoshiro256,
+    seed: u64,
+    /// Early-stopping bookkeeping, checkpointed as integers:
+    /// best dev hit count, the step it was reached, and the number of
+    /// evaluations since without improvement.
+    best_hits: usize,
+    best_step: usize,
+    stale_evals: usize,
+}
+
+impl FtTrainer {
+    /// Deterministic init: LM weights from `seed` (the same init
+    /// `LmTrainer::new` produces — a pretrained checkpoint can be
+    /// loaded over them via [`FtTrainer::load_lm_params`]), the head
+    /// from an independent stream folded with the class count.
+    pub fn new(
+        cfg: LmConfig,
+        task: TaskSpec,
+        batch: usize,
+        seq: usize,
+        k: usize,
+        opt: NativeOpt,
+        seed: u64,
+    ) -> Self {
+        let mut model = TransformerLM::new(cfg, seed);
+        let dm = model.cfg.d_model();
+        let mut head_rng = Xoshiro256::fold_in(seed, 0xC125, task.n_classes as u64);
+        model.params.push(Mat::random_normal(dm, task.n_classes, 0.02, &mut head_rng));
+        let moments = match opt {
+            NativeOpt::Sgd { .. } => None,
+            NativeOpt::Adam { .. } => {
+                Some(model.params.iter().map(Moments::zeros_like).collect())
+            }
+        };
+        Self {
+            model,
+            task,
+            batch,
+            seq,
+            k: k.max(1),
+            eps: Eps::Inf,
+            opt,
+            moments,
+            step_no: 0,
+            rng: Xoshiro256::new(seed ^ 0x9E3779B97F4A7C15),
+            seed,
+            best_hits: 0,
+            best_step: 0,
+            stale_evals: 0,
+        }
+    }
+
+    pub fn step_no(&self) -> usize {
+        self.step_no
+    }
+
+    pub fn best_dev(&self) -> (usize, usize, usize) {
+        (self.best_hits, self.best_step, self.stale_evals)
+    }
+
+    /// Overwrite the LM trunk (everything but the head) from a `pamm
+    /// train --native` checkpoint's parameter tensors — fine-tuning
+    /// from pretrained weights instead of a fresh init.
+    pub fn load_lm_params(&mut self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        let map: std::collections::BTreeMap<String, HostTensor> =
+            checkpoint::load(dir, name)?.into_iter().collect();
+        for (n, p) in model::param_names(&self.model.cfg)
+            .iter()
+            .zip(self.model.params.iter_mut())
+        {
+            let t = map.get(n).with_context(|| format!("LM checkpoint missing `{n}`"))?;
+            ensure!(
+                t.shape() == [p.rows(), p.cols()],
+                "LM checkpoint `{n}`: shape {:?} vs model {}x{}",
+                t.shape(),
+                p.rows(),
+                p.cols()
+            );
+            p.data_mut().copy_from_slice(t.as_f32()?);
+        }
+        Ok(())
+    }
+
+    /// One fine-tuning step on a labeled batch. Fails — with the
+    /// parameters, moments and counters untouched — on a non-finite
+    /// loss or gradient (the same divergence guards as `LmTrainer`).
+    pub fn train_step(
+        &mut self,
+        lb: &LabeledBatch,
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> Result<f32> {
+        Ok(self.step_report(kernels::active(), lb, pool, ledger)?.loss)
+    }
+
+    /// [`FtTrainer::train_step`] with an explicit dispatch level,
+    /// returning the full report (tests, benches).
+    pub fn step_report(
+        &mut self,
+        d: Dispatch,
+        lb: &LabeledBatch,
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> Result<FtStepReport> {
+        ensure!(
+            lb.batch == self.batch && lb.seq == self.seq,
+            "ft step: batch geometry {}x{} vs trainer {}x{}",
+            lb.batch,
+            lb.seq,
+            self.batch,
+            self.seq
+        );
+        let (loss, tape) = self.model.forward_classify(
+            d,
+            &lb.tokens,
+            &lb.labels,
+            lb.batch,
+            lb.seq,
+            self.k,
+            self.eps,
+            &mut self.rng,
+            pool,
+            ledger,
+        );
+        ensure!(
+            loss.is_finite(),
+            "non-finite loss ({loss}) at step {}: fine-tuning diverged; \
+             parameters and optimizer moments left untouched",
+            self.step_no + 1
+        );
+        let saved_bytes = tape.saved_bytes();
+        let res = tape.backward(d, &self.model.params, pool, ledger);
+        check_finite_grads(&ft_param_names(&self.model.cfg), &res.params, self.step_no + 1)?;
+        self.step_no += 1;
+        apply_opt_update(
+            self.opt,
+            &mut self.model.params,
+            self.moments.as_mut(),
+            &res.params,
+            self.step_no,
+        )?;
+        Ok(FtStepReport { loss, saved_bytes })
+    }
+
+    /// Evaluate on a held-out corpus: fixed-order batches, argmax
+    /// predictions (first index wins ties), the task's own metric. A
+    /// pure function of `(params, corpus, seed)` — the generator draws
+    /// come from a fresh stream folded from the run seed, never from
+    /// the training RNG, so evaluation neither perturbs the training
+    /// trajectory nor depends on when it runs.
+    pub fn evaluate(&self, corpus: &TaskCorpus, pool: &Pool) -> DevEval {
+        let d = kernels::active();
+        let mut rng = Xoshiro256::fold_in(self.seed, 0xE7A1, self.task.n_classes as u64);
+        let (mut preds, mut golds) = (Vec::new(), Vec::new());
+        for lb in corpus.eval_batches(self.batch) {
+            let logits = self.model.classify_logits(
+                d, &lb.tokens, lb.batch, lb.seq, self.k, self.eps, &mut rng, pool,
+            );
+            for r in 0..lb.batch {
+                let row = logits.row(r);
+                let mut arg = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[arg] {
+                        arg = j;
+                    }
+                }
+                preds.push(arg as i32);
+            }
+            golds.extend_from_slice(&lb.labels);
+        }
+        let hits = preds.iter().zip(&golds).filter(|(p, g)| p == g).count();
+        DevEval {
+            hits,
+            examples: golds.len(),
+            score: glue::score(&self.task, &preds, &golds),
+            accuracy: hits as f64 / golds.len().max(1) as f64,
+        }
+    }
+
+    /// Record one dev evaluation into the early-stopping state;
+    /// returns true when `patience` consecutive evaluations failed to
+    /// improve the best hit count (0 disables stopping). Integer
+    /// comparisons only — exact under checkpoint/resume.
+    pub fn note_eval(&mut self, dev: &DevEval, patience: usize) -> bool {
+        if dev.hits > self.best_hits {
+            self.best_hits = dev.hits;
+            self.best_step = self.step_no;
+            self.stale_evals = 0;
+        } else {
+            self.stale_evals += 1;
+        }
+        patience > 0 && self.stale_evals >= patience
+    }
+
+    // -- checkpointing ------------------------------------------------------
+
+    /// The full trainer state as named tensors — the `LmTrainer`
+    /// schema plus the head tensor, the task-aware geometry and the
+    /// integer early-stopping words.
+    pub fn checkpoint_tensors(&self) -> Vec<(String, HostTensor)> {
+        let names = ft_param_names(&self.model.cfg);
+        let mut tensors: Vec<(String, HostTensor)> = Vec::with_capacity(
+            self.model.params.len() * if self.moments.is_some() { 3 } else { 1 } + 5,
+        );
+        let as_tensor =
+            |m: &Mat| HostTensor::f32(vec![m.rows(), m.cols()], m.data().to_vec());
+        for (n, p) in names.iter().zip(&self.model.params) {
+            tensors.push((n.clone(), as_tensor(p)));
+        }
+        if let Some(ms) = &self.moments {
+            for (n, st) in names.iter().zip(ms) {
+                tensors.push((format!("opt_m.{n}"), as_tensor(&st.m)));
+                tensors.push((format!("opt_v.{n}"), as_tensor(&st.v)));
+            }
+        }
+        tensors.push(("meta.step".into(), HostTensor::i32(vec![1], vec![self.step_no as i32])));
+        tensors.push(("meta.rng".into(), HostTensor::i32(vec![8], rng_words(self.rng.state()))));
+        tensors.push(("meta.geom".into(), HostTensor::i32(vec![7], self.geom_words())));
+        tensors.push(("meta.opt".into(), HostTensor::f32(vec![5], opt_words(self.opt))));
+        tensors.push((
+            "meta.dev".into(),
+            HostTensor::i32(
+                vec![3],
+                vec![self.best_hits as i32, self.best_step as i32, self.stale_evals as i32],
+            ),
+        ));
+        tensors
+    }
+
+    /// Crash-safe save under `dir/name.{bin,json}`.
+    pub fn save_checkpoint(&self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        checkpoint::save(dir, name, &self.checkpoint_tensors())
+    }
+
+    pub fn resume(&mut self, dir: impl AsRef<Path>, name: &str) -> Result<()> {
+        let loaded = checkpoint::load(dir, name)?;
+        self.restore_from(loaded)
+    }
+
+    /// Restore from already-loaded checkpoint tensors, refusing any
+    /// geometry / task / optimizer mismatch (the bit-exact-resume
+    /// contract of `LmTrainer::restore_from`, task-extended).
+    pub fn restore_from(&mut self, loaded: Vec<(String, HostTensor)>) -> Result<()> {
+        let map: std::collections::BTreeMap<String, HostTensor> = loaded.into_iter().collect();
+        let names = ft_param_names(&self.model.cfg);
+        let restore = |dst: &mut Mat, key: &str| -> Result<()> {
+            let t = map.get(key).with_context(|| format!("checkpoint missing `{key}`"))?;
+            ensure!(
+                t.shape() == [dst.rows(), dst.cols()],
+                "checkpoint `{key}`: shape {:?} vs model {}x{}",
+                t.shape(),
+                dst.rows(),
+                dst.cols()
+            );
+            dst.data_mut().copy_from_slice(t.as_f32()?);
+            Ok(())
+        };
+        for (n, p) in names.iter().zip(self.model.params.iter_mut()) {
+            restore(p, n)?;
+        }
+        match &mut self.moments {
+            Some(ms) => {
+                ensure!(
+                    map.contains_key(&format!("opt_m.{}", names[0])),
+                    "checkpoint has no Adam moments but the trainer uses Adam"
+                );
+                for (n, st) in names.iter().zip(ms.iter_mut()) {
+                    restore(&mut st.m, &format!("opt_m.{n}"))?;
+                    restore(&mut st.v, &format!("opt_v.{n}"))?;
+                }
+            }
+            None => {
+                if map.contains_key(&format!("opt_m.{}", names[0])) {
+                    bail!("checkpoint carries Adam moments but the trainer uses SGD");
+                }
+            }
+        }
+        let geom = map.get("meta.geom").context("checkpoint missing `meta.geom`")?;
+        let g = geom.as_i32()?;
+        let want_geom = self.geom_words();
+        ensure!(
+            g == &want_geom[..],
+            "checkpoint was fine-tuned with batch/seq/k/seed/task = {g:?}, trainer uses \
+             {want_geom:?} — resuming would silently diverge from the original run"
+        );
+        let opt = map.get("meta.opt").context("checkpoint missing `meta.opt`")?;
+        let want = opt_words(self.opt);
+        let got = opt.as_f32()?;
+        ensure!(
+            got.iter().map(|v| v.to_bits()).eq(want.iter().map(|v| v.to_bits())),
+            "checkpoint optimizer {got:?} differs from the trainer's {want:?}"
+        );
+        let step = map.get("meta.step").context("checkpoint missing `meta.step`")?;
+        self.step_no = step.as_i32()?[0].max(0) as usize;
+        let words = map.get("meta.rng").context("checkpoint missing `meta.rng`")?;
+        self.rng = Xoshiro256::from_state(words_to_state(words.as_i32()?)?);
+        let dev = map.get("meta.dev").context("checkpoint missing `meta.dev`")?;
+        let dw = dev.as_i32()?;
+        ensure!(dw.len() == 3, "meta.dev: expected 3 words, got {}", dw.len());
+        self.best_hits = dw[0].max(0) as usize;
+        self.best_step = dw[1].max(0) as usize;
+        self.stale_evals = dw[2].max(0) as usize;
+        Ok(())
+    }
+
+    /// `[batch, seq, k, seed_lo, seed_hi, n_classes, task_hash]` — the
+    /// geometry fingerprint a checkpoint must match to be resumable.
+    fn geom_words(&self) -> Vec<i32> {
+        vec![
+            self.batch as i32,
+            self.seq as i32,
+            self.k as i32,
+            (self.seed & 0xFFFF_FFFF) as u32 as i32,
+            (self.seed >> 32) as u32 as i32,
+            self.task.n_classes as i32,
+            task_fingerprint(self.task.name),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The run loop (`pamm finetune --native`)
+// ---------------------------------------------------------------------------
+
+/// Run configuration for one native fine-tuning run.
+#[derive(Debug, Clone)]
+pub struct FtRunConfig {
+    pub cfg: LmConfig,
+    pub task: TaskSpec,
+    pub batch: usize,
+    pub seq: usize,
+    /// Optimizer-step budget (early stopping may finish sooner).
+    pub steps: usize,
+    pub k: usize,
+    pub opt: NativeOpt,
+    pub seed: u64,
+    /// Synthetic corpus size (ignored when `task_file` is given).
+    pub corpus_examples: usize,
+    /// Train/dev stride: every `dev_every`-th example is dev (≥ 2).
+    pub dev_every: usize,
+    /// Dev evaluation every N steps (0 = final only).
+    pub eval_every: usize,
+    /// Early stop after N consecutive non-improving evals (0 = off).
+    pub patience: usize,
+    /// GLUE-style pre-tokenized task file; None ⇒ synthetic corpus.
+    pub task_file: Option<String>,
+    /// Checkpoint every N optimizer steps (0 = only the final one).
+    pub ckpt_every: usize,
+    pub keep_last: usize,
+    pub run_dir: String,
+    pub run_name: String,
+    pub resume: bool,
+}
+
+/// What a fine-tuning run produced.
+#[derive(Debug)]
+pub struct FtOutcome {
+    pub run_name: String,
+    /// Steps actually trained to (< the budget if stopped early).
+    pub steps: usize,
+    pub final_loss: f32,
+    /// Final dev evaluation (always present — the dev pass is pure).
+    pub dev: DevEval,
+    /// Best dev hit count seen and the step it was reached at.
+    pub best_hits: usize,
+    pub best_step: usize,
+    pub stopped_early: bool,
+    pub curve: Vec<(usize, f32)>,
+}
+
+/// Build the run's corpora: the full universe (synthetic fallback or
+/// task file) and its deterministic train/dev split.
+pub fn build_corpora(rc: &FtRunConfig) -> Result<(TaskCorpus, TaskCorpus)> {
+    let corpus = TaskCorpus::load_or_synthetic(
+        rc.task.clone(),
+        rc.cfg.vocab,
+        rc.seq,
+        rc.corpus_examples,
+        rc.seed,
+        rc.task_file.as_deref(),
+    )?;
+    ensure!(
+        corpus.examples.len() / rc.dev_every.max(2) >= 1,
+        "corpus of {} examples leaves no dev split at stride {}",
+        corpus.examples.len(),
+        rc.dev_every
+    );
+    Ok(corpus.split(rc.dev_every.max(2)))
+}
+
+/// Native fine-tuning end to end: deterministic labeled corpus →
+/// train/dev split → epoch-shuffled stream → classification fwd/bwd →
+/// SGD/Adam, with periodic dev evaluation, integer-exact early
+/// stopping, run logging, ring checkpoints and bit-exact resume.
+pub fn finetune_native(rc: &FtRunConfig, pool: &Pool, quiet: bool) -> Result<FtOutcome> {
+    ensure!(rc.steps > 0, "finetune: steps must be > 0");
+    let (train_c, dev_c) = build_corpora(rc)?;
+    ensure!(
+        train_c.examples.len() >= rc.batch,
+        "train split of {} examples cannot fill a batch of {}",
+        train_c.examples.len(),
+        rc.batch
+    );
+    let mut t =
+        FtTrainer::new(rc.cfg.clone(), rc.task.clone(), rc.batch, rc.seq, rc.k, rc.opt, rc.seed);
+    let ckpt_dir = format!("{}/ckpt", rc.run_dir);
+    let ring = CheckpointRing::new(&ckpt_dir, &rc.run_name, rc.keep_last);
+    let mut resumed_from = None;
+    if rc.resume {
+        let (found, diags) = ring.load_latest_good();
+        for d in &diags {
+            if !quiet {
+                println!("recovery: {d}");
+            }
+        }
+        match found {
+            Some((_, tensors)) => {
+                t.restore_from(tensors)?;
+                resumed_from = Some(t.step_no());
+            }
+            None => {
+                if Path::new(&ckpt_dir).join(format!("{}.json", rc.run_name)).exists() {
+                    t.resume(&ckpt_dir, &rc.run_name)?;
+                    resumed_from = Some(t.step_no());
+                }
+            }
+        }
+        if let (Some(s), false) = (resumed_from, quiet) {
+            println!("resumed `{}` at step {s}", rc.run_name);
+        }
+    }
+    ensure!(
+        t.step_no() <= rc.steps,
+        "checkpoint is at step {} but the run asks for {} steps",
+        t.step_no(),
+        rc.steps
+    );
+    if t.step_no() == rc.steps {
+        let dev = t.evaluate(&dev_c, pool);
+        if !quiet {
+            println!(
+                "run `{}` is already at its final step {} — nothing to do",
+                rc.run_name, rc.steps
+            );
+        }
+        let (best_hits, best_step, _) = t.best_dev();
+        return Ok(FtOutcome {
+            run_name: rc.run_name.clone(),
+            steps: rc.steps,
+            final_loss: f32::NAN,
+            dev,
+            best_hits,
+            best_step,
+            stopped_early: false,
+            curve: Vec::new(),
+        });
+    }
+
+    let mut stream = LabeledStream::new(train_c, rc.batch, rc.seed);
+    stream.skip_batches(t.step_no());
+    let mut logger = if resumed_from.is_some() {
+        let mut l = RunLogger::append(&rc.run_dir, &rc.run_name)?;
+        l.log_resume(t.step_no())?;
+        l
+    } else {
+        RunLogger::create(&rc.run_dir, &rc.run_name)?
+    };
+    let mut ema = Ema::new(0.05);
+    let mut curve = Vec::new();
+    let mut last_loss = f32::NAN;
+    let mut stopped_early = false;
+
+    for s in t.step_no()..rc.steps {
+        let lb = stream.next_batch();
+        let loss = t
+            .train_step(&lb, pool, None)
+            .with_context(|| format!("run `{}` step {s}", rc.run_name))?;
+        last_loss = loss;
+        let sm = ema.update(loss as f64);
+        if s % (rc.steps / 50).max(1) == 0 || s + 1 == rc.steps {
+            curve.push((s, loss));
+            logger.log_step(s, loss as f64, sm, None)?;
+            if !quiet {
+                println!("step {s:>5}  loss {loss:7.4}  ema {sm:7.4}");
+            }
+        }
+        let at_eval = rc.eval_every > 0 && (s + 1) % rc.eval_every == 0 && s + 1 < rc.steps;
+        if at_eval {
+            let dev = t.evaluate(&dev_c, pool);
+            let stop = t.note_eval(&dev, rc.patience);
+            if !quiet {
+                println!(
+                    "  dev @ step {}: {}/{} ({:.1}% acc, {} {:.2})",
+                    s + 1,
+                    dev.hits,
+                    dev.examples,
+                    100.0 * dev.accuracy,
+                    metric_name(&rc.task),
+                    dev.score
+                );
+            }
+            if stop {
+                stopped_early = true;
+            }
+        }
+        if rc.ckpt_every > 0 && (s + 1) % rc.ckpt_every == 0 && s + 1 < rc.steps {
+            let tensors = t.checkpoint_tensors();
+            ring.save(s + 1, &tensors)
+                .with_context(|| format!("checkpoint boundary {}", s + 1))?;
+            logger.sync()?;
+        }
+        if stopped_early {
+            break;
+        }
+    }
+    // Final checkpoint at wherever the loop stopped (budget or early
+    // stop) — ring entry + the plain `run_name` checkpoint.
+    let tensors = t.checkpoint_tensors();
+    ring.save(t.step_no(), &tensors).context("final ring checkpoint")?;
+    checkpoint::save(&ckpt_dir, &rc.run_name, &tensors)
+        .with_context(|| format!("final checkpoint `{}`", rc.run_name))?;
+    logger.sync()?;
+
+    let dev = t.evaluate(&dev_c, pool);
+    t.note_eval(&dev, 0);
+    let (best_hits, best_step, _) = t.best_dev();
+    logger.log_summary(vec![
+        ("final_loss", jsonx::num(last_loss as f64)),
+        ("steps", jsonx::num(t.step_no() as f64)),
+        ("k", jsonx::num(rc.k as f64)),
+        ("dev_hits", jsonx::num(dev.hits as f64)),
+        ("dev_examples", jsonx::num(dev.examples as f64)),
+        ("dev_score", jsonx::num(dev.score)),
+        ("stopped_early", jsonx::num(if stopped_early { 1.0 } else { 0.0 })),
+    ])?;
+
+    Ok(FtOutcome {
+        run_name: rc.run_name.clone(),
+        steps: t.step_no(),
+        final_loss: last_loss,
+        dev,
+        best_hits,
+        best_step,
+        stopped_early,
+        curve,
+    })
+}
+
+/// Human name of a task's metric (report lines).
+pub fn metric_name(task: &TaskSpec) -> &'static str {
+    match task.metric {
+        glue::Metric::Accuracy => "accuracy",
+        glue::Metric::F1 => "F1",
+        glue::Metric::Matthews => "Matthews",
+        glue::Metric::Pearson => "Pearson",
+    }
+}
+
+/// Look a task up by (case-insensitive) name across the GLUE stand-in
+/// suite and the AID task.
+pub fn find_task(name: &str) -> Result<TaskSpec> {
+    glue::glue_suite()
+        .into_iter()
+        .find(|t| t.name.eq_ignore_ascii_case(name))
+        .or_else(|| name.eq_ignore_ascii_case("aid").then(glue::aid_task))
+        .with_context(|| {
+            format!(
+                "unknown task `{name}` (tasks: {}, AID)",
+                glue::glue_suite()
+                    .iter()
+                    .map(|t| t.name)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> LmConfig {
+        LmConfig { vocab: 300, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 }
+    }
+
+    fn tiny_rc(dir: &str, steps: usize) -> FtRunConfig {
+        FtRunConfig {
+            cfg: tiny_cfg(),
+            task: find_task("SST2").unwrap(),
+            batch: 4,
+            seq: 16,
+            steps,
+            k: 8,
+            opt: NativeOpt::adam(2e-3),
+            seed: 11,
+            corpus_examples: 64,
+            dev_every: 4,
+            eval_every: 0,
+            patience: 0,
+            task_file: None,
+            ckpt_every: 0,
+            keep_last: 2,
+            run_dir: dir.to_string(),
+            run_name: "ft_test".into(),
+            resume: false,
+        }
+    }
+
+    #[test]
+    fn finetuning_reduces_the_loss_and_reports_dev() {
+        let dir = std::env::temp_dir().join(format!("pamm_ft_run_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let rc = tiny_rc(dir.to_str().unwrap(), 30);
+        let pool = Pool::serial();
+        let out = finetune_native(&rc, &pool, true).unwrap();
+        assert_eq!(out.steps, 30);
+        assert!(out.final_loss.is_finite());
+        let head: f32 = out.curve.iter().take(5).map(|&(_, l)| l).sum::<f32>() / 5.0;
+        let tail: f32 =
+            out.curve.iter().rev().take(5).map(|&(_, l)| l).sum::<f32>() / 5.0;
+        assert!(tail < head, "fine-tuning must reduce the loss: {head} -> {tail}");
+        assert!(out.dev.examples > 0 && out.dev.hits <= out.dev.examples);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_refuses_mismatches() {
+        let dir = std::env::temp_dir().join(format!("pamm_ft_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let task = find_task("SST2").unwrap();
+        let corpus = TaskCorpus::synthetic(task.clone(), 300, 12, 16, 7);
+        let mut stream = LabeledStream::new(corpus, 2, 7);
+        let mut a = FtTrainer::new(tiny_cfg(), task.clone(), 2, 12, 4, NativeOpt::adam(1e-3), 7);
+        let pool = Pool::serial();
+        for _ in 0..3 {
+            let lb = stream.next_batch();
+            a.train_step(&lb, &pool, None).unwrap();
+        }
+        a.save_checkpoint(&dir, "t").unwrap();
+
+        let mut b = FtTrainer::new(tiny_cfg(), task.clone(), 2, 12, 4, NativeOpt::adam(1e-3), 7);
+        b.resume(&dir, "t").unwrap();
+        assert_eq!(b.step_no(), 3);
+        for (pa, pb) in a.model.params.iter().zip(&b.model.params) {
+            assert_eq!(pa, pb, "params (head included) must restore bit-identically");
+        }
+        assert_eq!(a.rng.state(), b.rng.state());
+
+        // A different task (even with the same class count) must be
+        // refused — the corpus behind the stream would silently swap.
+        let rte = find_task("RTE").unwrap();
+        let mut c = FtTrainer::new(tiny_cfg(), rte, 2, 12, 4, NativeOpt::adam(1e-3), 7);
+        assert!(c.resume(&dir, "t").is_err(), "task swap must be refused");
+        let mut d = FtTrainer::new(tiny_cfg(), task.clone(), 2, 12, 5, NativeOpt::adam(1e-3), 7);
+        assert!(d.resume(&dir, "t").is_err(), "k mismatch must be refused");
+        let mut e = FtTrainer::new(tiny_cfg(), task, 2, 12, 4, NativeOpt::Sgd { lr: 0.1 }, 7);
+        assert!(e.resume(&dir, "t").is_err(), "optimizer mismatch must be refused");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn early_stopping_is_integer_exact() {
+        let task = find_task("SST2").unwrap();
+        let mut t = FtTrainer::new(tiny_cfg(), task, 2, 12, 4, NativeOpt::adam(1e-3), 7);
+        let mk = |hits| DevEval { hits, examples: 10, score: 0.0, accuracy: 0.0 };
+        assert!(!t.note_eval(&mk(5), 2)); // first eval sets the best
+        t.step_no = 1;
+        assert!(!t.note_eval(&mk(5), 2)); // stale 1
+        assert!(t.note_eval(&mk(4), 2), "two stale evals at patience 2 must stop");
+        assert!(!t.note_eval(&mk(6), 2), "an improvement resets staleness");
+        assert_eq!(t.best_dev().0, 6);
+    }
+
+    #[test]
+    fn task_lookup_and_fingerprint() {
+        assert_eq!(find_task("sst2").unwrap().name, "SST2");
+        assert_eq!(find_task("AID").unwrap().n_classes, 30);
+        assert!(find_task("nope").is_err());
+        assert_ne!(task_fingerprint("SST2"), task_fingerprint("RTE"));
+    }
+}

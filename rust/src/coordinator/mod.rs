@@ -40,6 +40,15 @@
 //!   plus [`trainer::NativeTrainer`]: the artifact-free native train
 //!   step (compressed-activation fwd+bwd+update through
 //!   `crate::autograd`, the `pamm reproduce table7 --native` engine).
+//! * [`finetune`] — native **GLUE-style fine-tuning** (DESIGN.md §11):
+//!   [`finetune::FtTrainer`] trains `model::TransformerLM` plus a
+//!   classification head (`model::forward_classify`) on labeled
+//!   [`crate::data::glue::TaskCorpus`] batches — deterministic
+//!   train/dev split, integer-exact dev-accuracy early stopping, and
+//!   the same bit-exact crash-safe checkpoint/resume contract as LM
+//!   pretraining, task-fingerprinted so resume refuses a task swap —
+//!   the `pamm finetune --native` engine
+//!   (`rust/tests/prop_finetune.rs`).
 //! * [`lm`] — native **multi-layer LM pretraining**
 //!   ([`lm::LmTrainer`] / [`lm::train_lm_native`]): real next-token
 //!   training of `model::TransformerLM` on `data::BatchIterator`
@@ -55,6 +64,7 @@
 #[cfg(feature = "pjrt")]
 pub mod ddp;
 pub mod dp;
+pub mod finetune;
 pub mod lm;
 pub mod pipeline;
 pub mod serve;
@@ -64,6 +74,10 @@ pub mod trainer;
 pub use dp::{
     train_lm_dp_native, train_lm_dp_native_run, train_lm_dp_supervised, DpRunConfig, DpRunReport,
     DpStepReport, DpSupervisedOutcome, DpTrainer,
+};
+pub use finetune::{
+    build_corpora, finetune_native, find_task, ft_param_names, task_fingerprint, DevEval,
+    FtOutcome, FtRunConfig, FtStepReport, FtTrainer,
 };
 pub use lm::{
     checkpoint_boundaries, train_lm_native, train_lm_native_run, train_lm_supervised, LmRunConfig,

@@ -13,6 +13,8 @@
 //! correlation (CoLA-like), Pearson (STS-B-like, labels = ordered
 //! buckets), accuracy (the rest).
 
+use anyhow::{ensure, Context, Result};
+
 use crate::rngx::{Xoshiro256, Zipf};
 
 /// Metric a task is scored with (paper Table 1 conventions).
@@ -114,6 +116,230 @@ impl TaskGenerator {
 
     pub fn vocab(&self) -> usize {
         self.vocab
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Labeled corpora + streaming (the native fine-tuning data path)
+// ---------------------------------------------------------------------------
+
+/// One labeled task example: a fixed-length token row plus its class.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskExample {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+/// A fixed, fully materialized labeled example universe for one task —
+/// the unit the train/dev split and the epoch shuffle operate on.
+/// Built either synthetically ([`TaskCorpus::synthetic`]: the CI path,
+/// no downloads) or from a GLUE-style task file
+/// ([`TaskCorpus::from_task_file`]).
+#[derive(Debug, Clone)]
+pub struct TaskCorpus {
+    pub spec: TaskSpec,
+    pub vocab: usize,
+    pub seq: usize,
+    pub examples: Vec<TaskExample>,
+}
+
+impl TaskCorpus {
+    /// Deterministic synthetic corpus: `n` examples drawn from
+    /// [`TaskGenerator`] at `seed`. Same `(spec, vocab, seq, n, seed)`
+    /// ⇒ bitwise the same corpus on every machine.
+    pub fn synthetic(spec: TaskSpec, vocab: usize, seq: usize, n: usize, seed: u64) -> Self {
+        let mut gen = TaskGenerator::new(spec.clone(), vocab, seed);
+        let lb = gen.batch(n, seq);
+        let examples = (0..n)
+            .map(|i| TaskExample {
+                tokens: lb.tokens[i * seq..(i + 1) * seq].to_vec(),
+                label: lb.labels[i],
+            })
+            .collect();
+        Self { spec, vocab, seq, examples }
+    }
+
+    /// Parse a GLUE-style pre-tokenized task file: one example per
+    /// line, `label<TAB>space-separated token ids`; blank lines and
+    /// `#` comments are skipped. Rows longer than `seq` are truncated,
+    /// shorter rows are right-padded with token 0. Labels must sit in
+    /// `0..n_classes` and ids in `0..vocab`.
+    pub fn from_task_file(spec: TaskSpec, vocab: usize, seq: usize, path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("task file `{path}`"))?;
+        let mut examples = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (lab, toks) = line
+                .split_once('\t')
+                .with_context(|| format!("{path}:{}: expected `label<TAB>ids`", ln + 1))?;
+            let label: i32 = lab
+                .trim()
+                .parse()
+                .with_context(|| format!("{path}:{}: bad label `{lab}`", ln + 1))?;
+            ensure!(
+                label >= 0 && (label as usize) < spec.n_classes,
+                "{path}:{}: label {label} outside 0..{}",
+                ln + 1,
+                spec.n_classes
+            );
+            let mut tokens = Vec::with_capacity(seq);
+            for t in toks.split_whitespace().take(seq) {
+                let id: i32 =
+                    t.parse().with_context(|| format!("{path}:{}: bad id `{t}`", ln + 1))?;
+                ensure!(
+                    id >= 0 && (id as usize) < vocab,
+                    "{path}:{}: token id {id} outside 0..{vocab}",
+                    ln + 1
+                );
+                tokens.push(id);
+            }
+            tokens.resize(seq, 0);
+            examples.push(TaskExample { tokens, label });
+        }
+        ensure!(!examples.is_empty(), "{path}: no examples");
+        Ok(Self { spec, vocab, seq, examples })
+    }
+
+    /// The task-file path when given, the synthetic fallback otherwise
+    /// — so CI and offline runs need no downloads.
+    pub fn load_or_synthetic(
+        spec: TaskSpec,
+        vocab: usize,
+        seq: usize,
+        n: usize,
+        seed: u64,
+        path: Option<&str>,
+    ) -> Result<Self> {
+        match path {
+            Some(p) => Self::from_task_file(spec, vocab, seq, p),
+            None => Ok(Self::synthetic(spec, vocab, seq, n, seed)),
+        }
+    }
+
+    /// Deterministic, disjoint train/dev split by fixed index stride:
+    /// every `dev_every`-th example (indices `dev_every−1, 2·dev_every−1, …`)
+    /// goes to dev, the rest to train. No randomness, no leakage —
+    /// train ∪ dev == the corpus, train ∩ dev == ∅.
+    pub fn split(self, dev_every: usize) -> (TaskCorpus, TaskCorpus) {
+        assert!(dev_every >= 2, "split: dev_every must be ≥ 2");
+        let (mut train, mut dev) = (Vec::new(), Vec::new());
+        for (i, ex) in self.examples.into_iter().enumerate() {
+            if i % dev_every == dev_every - 1 {
+                dev.push(ex);
+            } else {
+                train.push(ex);
+            }
+        }
+        let mk = |examples| TaskCorpus {
+            spec: self.spec.clone(),
+            vocab: self.vocab,
+            seq: self.seq,
+            examples,
+        };
+        (mk(train), mk(dev))
+    }
+
+    /// Fixed-order evaluation batches over the whole corpus — no rng,
+    /// no shuffle; the ragged tail (`len % batch` examples) is dropped
+    /// under the same complete-rounds contract as the training stream.
+    pub fn eval_batches(&self, batch: usize) -> Vec<LabeledBatch> {
+        let full = self.examples.len() / batch;
+        (0..full)
+            .map(|b| self.pack(&(0..batch).map(|i| b * batch + i).collect::<Vec<_>>()))
+            .collect()
+    }
+
+    fn pack(&self, idx: &[usize]) -> LabeledBatch {
+        let mut tokens = Vec::with_capacity(idx.len() * self.seq);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            tokens.extend_from_slice(&self.examples[i].tokens);
+            labels.push(self.examples[i].label);
+        }
+        LabeledBatch { batch: idx.len(), seq: self.seq, tokens, labels }
+    }
+}
+
+/// Epoch-shuffled labeled batch stream over a [`TaskCorpus`] — the
+/// labeled twin of `data::BatchIterator`, with the same two contracts
+/// the trainer's checkpoint/resume relies on: same seed ⇒ same stream,
+/// and [`LabeledStream::skip_batches`]`(n)` ≡ draining `n` batches.
+/// Each epoch's permutation is a pure function of `(seed, epoch)`
+/// (Fisher–Yates keyed by `fold_in`), so the fast-forward jumps to any
+/// epoch without replay; the ragged tail (`len % batch` examples per
+/// epoch) is **dropped**, matching `BatchShard::complete_rounds`.
+#[derive(Debug, Clone)]
+pub struct LabeledStream {
+    corpus: TaskCorpus,
+    batch: usize,
+    seed: u64,
+    epoch: usize,
+    cursor: usize,
+    perm: Vec<u32>,
+}
+
+impl LabeledStream {
+    pub fn new(corpus: TaskCorpus, batch: usize, seed: u64) -> Self {
+        assert!(
+            corpus.examples.len() >= batch && batch > 0,
+            "labeled stream: {} examples cannot fill a batch of {batch}",
+            corpus.examples.len()
+        );
+        let mut s = Self { corpus, batch, seed, epoch: 0, cursor: 0, perm: Vec::new() };
+        s.reshuffle();
+        s
+    }
+
+    /// Complete batches per epoch — the ragged tail is dropped, never
+    /// padded or duplicated (`BatchShard::complete_rounds` semantics).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.corpus.examples.len() / self.batch
+    }
+
+    pub fn corpus(&self) -> &TaskCorpus {
+        &self.corpus
+    }
+
+    fn reshuffle(&mut self) {
+        let n = self.corpus.examples.len();
+        let mut rng = Xoshiro256::fold_in(self.seed, 0x5F, self.epoch as u64);
+        self.perm = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = rng.next_below((i + 1) as u64) as usize;
+            self.perm.swap(i, j);
+        }
+    }
+
+    pub fn next_batch(&mut self) -> LabeledBatch {
+        let idx: Vec<usize> = (0..self.batch)
+            .map(|i| self.perm[self.cursor * self.batch + i] as usize)
+            .collect();
+        let lb = self.corpus.pack(&idx);
+        self.cursor += 1;
+        if self.cursor >= self.batches_per_epoch() {
+            self.cursor = 0;
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        lb
+    }
+
+    /// Fast-forward `n` batches — bit-identical to `n` `next_batch`
+    /// calls (the checkpoint-resume contract), O(epoch jump) thanks to
+    /// the pure per-epoch permutation.
+    pub fn skip_batches(&mut self, n: usize) {
+        let bpe = self.batches_per_epoch();
+        let abs = self.epoch * bpe + self.cursor + n;
+        let (e, c) = (abs / bpe, abs % bpe);
+        if e != self.epoch {
+            self.epoch = e;
+            self.reshuffle();
+        }
+        self.cursor = c;
     }
 }
 

@@ -1,0 +1,405 @@
+//! P17 — native ε/k ablation: the paper's quality-vs-compression
+//! trade-off, reproduced without artifacts (DESIGN.md §11).
+//!
+//! The sweep fixes one pretraining shape (config, batch, seq, steps,
+//! seed) and trains a fresh `coordinator::LmTrainer` per (ε, k) cell —
+//! same seed everywhere, so every cell sees the same init, the same
+//! batch stream and the same generator-sampling stream; the *only*
+//! thing that varies is the compression geometry. Each cell reports
+//! its final loss next to the **exact** saved-for-backward bytes of
+//! its tape, cross-checked against a live `memory::MemoryLedger` on
+//! the cell's last step (measured == analytic, asserted in-harness).
+//!
+//! Two more in-harness asserts pin the table's semantics
+//! (`rust/tests/prop_ablation.rs` re-runs them as properties):
+//!
+//! * **all-generators == dense** — at k = batch·seq with ε = ∞ every
+//!   row is its own generator (α = 1 exact copies), so the compressed
+//!   forward/backward is the dense computation; the sweep's k = n cell
+//!   must reproduce an independently-run dense baseline **bit for
+//!   bit**.
+//! * **saved bytes are monotone in k** — the compressed tape stores
+//!   C (k×n) per block, so shrinking k must strictly shrink the cell's
+//!   saved bytes.
+//!
+//! The table closes with the memory-zoo rows: analytic QKV vs PAMM
+//! saved bytes per model size at the paper's 64×256 per-GPU shape
+//! (`memory::qkv_saved_bytes` / `memory::pamm_saved_bytes`) — the
+//! ×512 headline next to the measured small-shape cells.
+
+use anyhow::{ensure, Result};
+
+use crate::checkpoint::write_csv;
+use crate::coordinator::{LmTrainer, NativeOpt};
+use crate::data::BatchIterator;
+use crate::memory::{self, MemoryLedger, ModelGeometry};
+use crate::model::LmConfig;
+use crate::pamm::Eps;
+use crate::poolx::{self, Pool};
+
+/// The fixed pretraining shape every cell of one sweep shares.
+#[derive(Debug, Clone)]
+pub struct AblationShape {
+    pub cfg: LmConfig,
+    pub batch: usize,
+    pub seq: usize,
+    pub steps: usize,
+    pub opt: NativeOpt,
+    pub seed: u64,
+}
+
+impl AblationShape {
+    /// Tokens per step — the generator-count ceiling (k = n ⇒ dense).
+    pub fn tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+
+    /// The CI shape (`--quick`): small enough that the full grid runs
+    /// in seconds, big enough that k spans 1 … n across three octaves.
+    pub fn quick() -> Self {
+        AblationShape {
+            cfg: LmConfig { vocab: 300, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 },
+            batch: 2,
+            seq: 32,
+            steps: 8,
+            opt: NativeOpt::adam(2e-3),
+            seed: 42,
+        }
+    }
+
+    /// The recorded EXPERIMENTS.md shape.
+    pub fn full() -> Self {
+        AblationShape {
+            cfg: LmConfig { vocab: 1000, n_layers: 4, heads: 4, head_dim: 16, d_ff: 128 },
+            batch: 4,
+            seq: 64,
+            steps: 60,
+            opt: NativeOpt::adam(2e-3),
+            seed: 42,
+        }
+    }
+}
+
+/// One cell of the quality-vs-saved-bytes table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AblationCell {
+    pub eps_label: String,
+    pub k: usize,
+    pub final_loss: f32,
+    /// Exact saved-for-backward bytes of the cell's tape (ledger ==
+    /// tape inventory, asserted where the cell is produced).
+    pub saved_bytes: usize,
+}
+
+/// Label an ε the way the paper writes it ("inf" = no condition).
+pub fn eps_label(eps: Eps) -> String {
+    match eps {
+        Eps::Inf => "inf".to_string(),
+        Eps::Val(v) => format!("{v}"),
+    }
+}
+
+/// Train one (ε, k) cell from scratch: fresh trainer, fresh batch
+/// stream, `shape.steps` optimizer steps. The last step runs with a
+/// live ledger and the measured saved bytes are asserted against the
+/// tape's own inventory — the cell's memory column is exact, not
+/// sampled.
+pub fn run_cell(shape: &AblationShape, eps: Eps, k: usize, pool: &Pool) -> Result<AblationCell> {
+    ensure!(k >= 1 && k <= shape.tokens(), "ablation cell: k={k} outside 1..={}", shape.tokens());
+    let mut t =
+        LmTrainer::new(shape.cfg.clone(), shape.batch, shape.seq, k, shape.opt, shape.seed);
+    t.eps = eps;
+    let mut it = BatchIterator::from_seed(shape.cfg.vocab, shape.batch, shape.seq, shape.seed);
+    let mut loss = f32::NAN;
+    let mut saved_bytes = 0usize;
+    for s in 0..shape.steps {
+        let b = it.next_batch();
+        if s + 1 == shape.steps {
+            let ledger = MemoryLedger::new();
+            let rep = t.step_report(
+                crate::tensor::kernels::active(),
+                &b.tokens,
+                pool,
+                Some(&ledger),
+            )?;
+            ensure!(
+                ledger.saved() == rep.saved_bytes,
+                "cell (eps={}, k={k}): ledger recorded {} saved bytes, tape inventory says {}",
+                eps_label(eps),
+                ledger.saved(),
+                rep.saved_bytes
+            );
+            loss = rep.loss;
+            saved_bytes = rep.saved_bytes;
+        } else {
+            loss = t.train_step(&b.tokens, pool, None)?;
+        }
+    }
+    Ok(AblationCell { eps_label: eps_label(eps), k, final_loss: loss, saved_bytes })
+}
+
+/// The ε × k grid for a shape: k descends from all-generators (dense)
+/// by octaves down to 1; ε covers ∞ plus the conditioned settings.
+pub fn grids(shape: &AblationShape, quick: bool) -> (Vec<Eps>, Vec<usize>) {
+    let eps_grid = if quick {
+        vec![Eps::Inf, Eps::Val(0.5)]
+    } else {
+        vec![Eps::Inf, Eps::Val(0.5), Eps::Val(0.25)]
+    };
+    let n = shape.tokens();
+    let mut k_grid = vec![n];
+    let mut k = n / 8;
+    while k >= 1 {
+        k_grid.push(k);
+        if k == 1 {
+            break;
+        }
+        k /= 8;
+        if k == 0 {
+            k = 1;
+        }
+    }
+    (eps_grid, k_grid)
+}
+
+/// Run the full sweep: one [`run_cell`] per (ε, k), row-major in grid
+/// order. Pure function of `(shape, grids, dispatch)` — same inputs ⇒
+/// a bitwise-identical table (`prop_ablation.rs` pins this).
+pub fn sweep(
+    shape: &AblationShape,
+    eps_grid: &[Eps],
+    k_grid: &[usize],
+    pool: &Pool,
+) -> Result<Vec<AblationCell>> {
+    let mut cells = Vec::with_capacity(eps_grid.len() * k_grid.len());
+    for &eps in eps_grid {
+        for &k in k_grid {
+            cells.push(run_cell(shape, eps, k, pool)?);
+        }
+    }
+    Ok(cells)
+}
+
+/// The `pamm ablate` engine: sweep, assert the table's semantics,
+/// print the quality-vs-saved-bytes table + the memory-zoo rows, write
+/// the CSV.
+pub fn ablation_table(quick: bool, out: &str) -> Result<()> {
+    ablation_table_with(quick, None, None, out)
+}
+
+/// [`ablation_table`] with the CLI's `--epsilon E` / `--k K` extras:
+/// each adds a row/column to the default grid (the dense anchor cell
+/// is always swept, so the in-harness asserts keep their reference).
+pub fn ablation_table_with(
+    quick: bool,
+    extra_eps: Option<f32>,
+    extra_k: Option<usize>,
+    out: &str,
+) -> Result<()> {
+    let shape = if quick { AblationShape::quick() } else { AblationShape::full() };
+    let (mut eps_grid, mut k_grid) = grids(&shape, quick);
+    if let Some(e) = extra_eps {
+        let eps = Eps::Val(e);
+        if !eps_grid.contains(&eps) {
+            eps_grid.push(eps);
+        }
+    }
+    if let Some(k) = extra_k {
+        ensure!(
+            k >= 1 && k <= shape.tokens(),
+            "--k {k} outside 1..={} for this shape",
+            shape.tokens()
+        );
+        if !k_grid.contains(&k) {
+            k_grid.push(k);
+            k_grid.sort_unstable_by(|a, b| b.cmp(a));
+        }
+    }
+    let pool = poolx::global();
+    let n = shape.tokens();
+    println!(
+        "epsilon/k ablation (vocab={} layers={} d_model={} b={} l={} steps={}, threads={}):",
+        shape.cfg.vocab,
+        shape.cfg.n_layers,
+        shape.cfg.d_model(),
+        shape.batch,
+        shape.seq,
+        shape.steps,
+        pool.threads()
+    );
+
+    let cells = sweep(&shape, &eps_grid, &k_grid, pool)?;
+
+    // The dense baseline, run independently (fresh trainer, same
+    // seed). At k = n every row is its own generator, so the sweep's
+    // all-generators cell must reproduce it bit for bit.
+    let dense = run_cell(&shape, Eps::Inf, n, pool)?;
+    let kn = cells
+        .iter()
+        .find(|c| c.k == n && c.eps_label == "inf")
+        .expect("grid always contains the (inf, n) cell");
+    ensure!(
+        kn.final_loss.to_bits() == dense.final_loss.to_bits(),
+        "all-generators cell (loss {}) must bit-match the dense baseline (loss {})",
+        kn.final_loss,
+        dense.final_loss
+    );
+
+    // Saved bytes must shrink strictly and monotonically with k at
+    // every ε (C is k×n per block).
+    for eps in &eps_grid {
+        let lbl = eps_label(*eps);
+        let row: Vec<&AblationCell> = cells.iter().filter(|c| c.eps_label == lbl).collect();
+        for w in row.windows(2) {
+            ensure!(
+                w[0].k > w[1].k && w[0].saved_bytes > w[1].saved_bytes,
+                "saved bytes not monotone in k at eps={lbl}: k={} saves {}, k={} saves {}",
+                w[0].k,
+                w[0].saved_bytes,
+                w[1].k,
+                w[1].saved_bytes
+            );
+        }
+    }
+
+    println!(
+        "{:<6} {:>6} {:>8} {:>10} {:>12} {:>10}",
+        "eps", "k", "r", "loss", "saved", "vs dense"
+    );
+    let mut rows = Vec::new();
+    for c in &cells {
+        let r = if c.k == n { "1".to_string() } else { format!("1/{}", n / c.k) };
+        let factor = dense.saved_bytes as f64 / c.saved_bytes.max(1) as f64;
+        println!(
+            "{:<6} {:>6} {:>8} {:>10.6} {:>12} {:>9.1}x",
+            c.eps_label,
+            c.k,
+            r,
+            c.final_loss,
+            memory::fmt_bytes(c.saved_bytes),
+            factor
+        );
+        rows.push(format!("{},{},{},{},{}", c.eps_label, c.k, r, c.final_loss, c.saved_bytes));
+    }
+    println!("(all-generators cell bit-matches the dense baseline: loss {})", dense.final_loss);
+
+    // Memory-zoo rows: the analytic saved-bytes story per model size
+    // at the paper's 64×256 per-GPU shape, r = 1/512 headline.
+    println!("\nmemory zoo (analytic, b=64 l=256, f32):");
+    println!("{:<10} {:>12} {:>12} {:>8}", "model", "qkv dense", "pamm 1/512", "factor");
+    for g in ModelGeometry::zoo() {
+        let dense_b = memory::qkv_saved_bytes(&g, 64, 256, 4);
+        let pamm_b = memory::pamm_saved_bytes(&g, 64, 256, 1.0 / 512.0, 4);
+        println!(
+            "{:<10} {:>12} {:>12} {:>7.0}x",
+            g.name,
+            memory::fmt_bytes(dense_b),
+            memory::fmt_bytes(pamm_b),
+            dense_b as f64 / pamm_b.max(1) as f64
+        );
+        rows.push(format!("zoo:{},{dense_b},{pamm_b},,", g.name));
+    }
+
+    write_csv(
+        format!("{out}/ablation{}.csv", if quick { "_quick" } else { "" }),
+        "eps,k,r,final_loss,saved_bytes",
+        &rows,
+    )?;
+    println!("\nshape check: loss degrades gracefully as k shrinks while saved bytes fall by the same octaves — the paper's quality-vs-compression trade-off, measured natively.");
+    Ok(())
+}
+
+/// The native `pamm reproduce finetune` engine: fine-tune the small
+/// shape on a slice of the GLUE stand-in suite through
+/// `coordinator::finetune_native` (synthetic corpora — no downloads),
+/// assert the loss decreased, and print dev metric + analytic memory
+/// per task.
+pub fn finetune_table(quick: bool, out: &str) -> Result<()> {
+    use crate::coordinator::{finetune_native, find_task, FtRunConfig};
+
+    let tasks: &[&str] = if quick { &["SST2"] } else { &["SST2", "RTE", "MNLI"] };
+    let (steps, examples, seq) = if quick { (12, 64, 16) } else { (80, 256, 32) };
+    let pool = poolx::global();
+    println!(
+        "native fine-tuning (synthetic GLUE stand-ins, {} steps, threads={}):",
+        steps,
+        pool.threads()
+    );
+    println!("{:<8} {:>10} {:>10} {:>10} {:>10}", "task", "metric", "dev score", "dev acc", "loss");
+    let mut rows = Vec::new();
+    for name in tasks {
+        let task = find_task(name)?;
+        let rc = FtRunConfig {
+            cfg: LmConfig { vocab: 300, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 },
+            task: task.clone(),
+            batch: 4,
+            seq,
+            steps,
+            k: 8,
+            opt: NativeOpt::adam(2e-3),
+            seed: 42,
+            corpus_examples: examples,
+            dev_every: 5,
+            eval_every: if quick { 0 } else { 20 },
+            patience: 0,
+            task_file: None,
+            ckpt_every: 0,
+            keep_last: 2,
+            run_dir: format!("{out}/finetune_runs"),
+            run_name: format!("ft_{}", name.to_lowercase().replace('-', "_")),
+            resume: false,
+        };
+        let o = finetune_native(&rc, pool, true)?;
+        let head: f32 =
+            o.curve.iter().take(3).map(|&(_, l)| l).sum::<f32>() / o.curve.len().min(3) as f32;
+        let tail: f32 = o.curve.iter().rev().take(3).map(|&(_, l)| l).sum::<f32>()
+            / o.curve.len().min(3) as f32;
+        ensure!(
+            tail < head,
+            "{name}: fine-tuning must reduce the loss ({head:.4} -> {tail:.4})"
+        );
+        let metric = crate::coordinator::finetune::metric_name(&task);
+        println!(
+            "{:<8} {:>10} {:>10.2} {:>9.1}% {:>10.4}",
+            task.name,
+            metric,
+            o.dev.score,
+            100.0 * o.dev.accuracy,
+            o.final_loss
+        );
+        rows.push(format!(
+            "{},{},{},{},{}",
+            task.name, metric, o.dev.score, o.dev.accuracy, o.final_loss
+        ));
+    }
+    write_csv(
+        format!("{out}/finetune_native{}.csv", if quick { "_quick" } else { "" }),
+        "task,metric,dev_score,dev_accuracy,final_loss",
+        &rows,
+    )?;
+    println!("(loss decrease asserted per task; dev split disjoint by stride — no leakage)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_cover_dense_to_one() {
+        let shape = AblationShape::quick();
+        let (eps_grid, k_grid) = grids(&shape, true);
+        assert_eq!(k_grid.first(), Some(&shape.tokens()));
+        assert_eq!(k_grid.last(), Some(&1));
+        assert!(k_grid.windows(2).all(|w| w[0] > w[1]), "k grid must descend");
+        assert!(eps_grid.contains(&Eps::Inf));
+    }
+
+    #[test]
+    fn cell_rejects_out_of_range_k() {
+        let shape = AblationShape::quick();
+        let pool = crate::poolx::Pool::serial();
+        assert!(run_cell(&shape, Eps::Inf, 0, &pool).is_err());
+        assert!(run_cell(&shape, Eps::Inf, shape.tokens() + 1, &pool).is_err());
+    }
+}

@@ -1,7 +1,7 @@
 //! Experiment harness — one entry per table & figure of the paper,
-//! plus the native attention table P9/P10 and the native train-step
-//! harness P11 (DESIGN.md §11 maps each id to modules and
-//! expectations).
+//! plus the native attention table P9/P10, the native train-step
+//! harness P11 and the native quality loop P17 (DESIGN.md §12 maps
+//! each id to modules and expectations).
 //!
 //! Every harness prints the paper-style rows AND writes a CSV under the
 //! `--out` directory so EXPERIMENTS.md can cite machine-readable results.
@@ -14,6 +14,7 @@
 //! across hosts. Per-op timings also persist via `benchx::BenchSink`
 //! from the bench binaries — see BENCHMARKS.md for the rendered trail.
 
+pub mod ablation;
 #[cfg(feature = "pjrt")]
 pub mod analysisfigs;
 pub mod attention;
@@ -35,19 +36,22 @@ pub use kernels::validate_kernels;
 use crate::runtime::Engine;
 
 /// Run a native-only experiment — one that needs no artifacts and no
-/// PJRT engine (`table7`, `attention`). Returns `None` when `name` is
-/// an engine-backed harness, so the CLI can decide whether to load
-/// artifacts at all (this is what makes `pamm reproduce attention
-/// --quick` a zero-dependency smoke drive).
+/// PJRT engine (`table7`, `attention`, `ablation`, `finetune`).
+/// Returns `None` when `name` is an engine-backed harness, so the CLI
+/// can decide whether to load artifacts at all (this is what makes
+/// `pamm reproduce attention --quick` a zero-dependency smoke drive).
 ///
 /// `native_train` is the `--native` flag: for `table7` it switches
 /// from the isolated per-op breakdown to the REAL optimization loop
 /// (`throughput::table7_native`, P11) — fwd → loss → compressed bwd →
 /// Adam update through `crate::autograd`, with the measured per-phase
-/// memory ledger asserted against its analytic bounds.
+/// memory ledger asserted against its analytic bounds. `ablation` and
+/// `finetune` are always native (P17): the ε/k quality sweep and the
+/// GLUE stand-in fine-tuning table run on synthetic corpora with no
+/// artifacts in any build.
 pub fn run_native(name: &str, quick: bool, native_train: bool, out: &str) -> Option<Result<()>> {
     match name {
-        "table7" | "attention" => {}
+        "table7" | "attention" | "ablation" | "finetune" => {}
         _ => return None,
     }
     let run = || -> Result<()> {
@@ -56,6 +60,8 @@ pub fn run_native(name: &str, quick: bool, native_train: bool, out: &str) -> Opt
             "table7" if native_train => throughput::table7_native(quick, out),
             "table7" => throughput::table7(quick, out),
             "attention" => attention::native_table(quick, out),
+            "ablation" => ablation::ablation_table(quick, out),
+            "finetune" => ablation::finetune_table(quick, out),
             _ => unreachable!("gated above"),
         }
     };

@@ -1,7 +1,7 @@
 //! `pamm` — leader entrypoint.
 //!
 //! Subcommands (see `cli::USAGE`): train / generate / serve-sim /
-//! chaos / finetune / reproduce / ledger / memory / kernels / list. Python
+//! chaos / finetune / ablate / reproduce / ledger / memory / kernels / list. Python
 //! never runs here: the native substrates are self-contained, and the
 //! artifact commands (`artifacts/*.hlo.txt` via the PJRT engine) are
 //! gated behind the `pjrt` cargo feature — without it they fail with a
@@ -28,9 +28,10 @@ fn engine_unavailable(what: &str) -> anyhow::Error {
     anyhow::anyhow!(
         "`{what}` drives the PJRT artifact runtime, which this binary was built without \
          (rebuild with `--features pjrt` and an xla binding in the workspace). \
-         The native path is self-contained: `pamm train --native`, `pamm generate`, \
-         `pamm serve-sim`, `pamm ledger`, `pamm memory`, `pamm reproduce table7|attention`, \
-         `pamm kernels --probe`, `pamm bench-report`."
+         The native path is self-contained: `pamm train --native`, `pamm finetune --native`, \
+         `pamm ablate`, `pamm generate`, `pamm serve-sim`, `pamm ledger`, `pamm memory`, \
+         `pamm reproduce table7|attention|ablation|finetune`, `pamm kernels --probe`, \
+         `pamm bench-report`."
     )
 }
 
@@ -54,6 +55,7 @@ fn real_main() -> Result<()> {
         "serve-sim" => cmd_serve_sim(&args),
         "chaos" => cmd_chaos(&args),
         "finetune" => cmd_finetune(&args),
+        "ablate" => cmd_ablate(&args),
         "reproduce" => cmd_reproduce(&args),
         "ledger" => cmd_ledger(&args),
         "memory" => cmd_memory(&args),
@@ -534,12 +536,150 @@ fn cmd_chaos(args: &Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_finetune(_args: &Args) -> Result<()> {
-    Err(engine_unavailable("pamm finetune"))
+fn cmd_finetune(args: &Args) -> Result<()> {
+    // No engine in this build — the native path is the only (and
+    // default) fine-tuning engine; `--native` is accepted as a no-op.
+    cmd_finetune_native(args)
+}
+
+/// `pamm finetune --native` — GLUE-style fine-tuning end to end on the
+/// native stack (DESIGN.md §11): deterministic task corpus (synthetic
+/// stand-in, or `--task-file` with pre-tokenized GLUE rows), stride
+/// train/dev split with no leakage, classification head over the LM
+/// trunk, dev-accuracy early stopping, bit-exact checkpoint/resume —
+/// and an in-command loss-decrease assertion on every fresh run.
+fn cmd_finetune_native(args: &Args) -> Result<()> {
+    use pamm::coordinator::{finetune_native, find_task, FtRunConfig, NativeOpt};
+    use pamm::model::LmConfig;
+
+    let quick = args.get_bool("quick");
+    let task_name =
+        args.get_str("task").context("--task required (e.g. SST2, RTE, MNLI, AID)")?;
+    let task = find_task(&task_name)?;
+    let model_name = args.get_str("model").unwrap_or_else(|| "nano".into());
+    let g = ModelGeometry::by_name(&model_name)
+        .with_context(|| format!("unknown model `{model_name}` (zoo: nano/tiny/small/…)"))?;
+    let mcfg = LmConfig::from_geometry(&g)?;
+    anyhow::ensure!(
+        mcfg.vocab > task.n_classes * 8 + 16,
+        "model `{model_name}` (vocab {}) is too small for task {} ({} classes) — \
+         pick a larger --model",
+        mcfg.vocab,
+        task.name,
+        task.n_classes
+    );
+    let batch = args.get_usize("batch")?.unwrap_or(4).max(1);
+    let seq = args.get_usize("seq")?.unwrap_or(if quick { 16 } else { 64 }).max(2);
+    let steps = args.get_usize("steps")?.unwrap_or(if quick { 30 } else { 300 }).max(1);
+    let tokens = batch * seq;
+    let r_inv = args.get_usize("r-inv")?.unwrap_or(8).max(1);
+    let k = match args.get_usize("k")? {
+        Some(k) => k.clamp(1, tokens),
+        None => tokens.div_ceil(r_inv).max(1),
+    };
+    let lr = args.get_f64("lr")?.unwrap_or(2e-3) as f32;
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let rc = FtRunConfig {
+        cfg: mcfg.clone(),
+        task: task.clone(),
+        batch,
+        seq,
+        steps,
+        k,
+        opt: NativeOpt::adam(lr),
+        seed,
+        corpus_examples: args.get_usize("examples")?.unwrap_or(if quick { 64 } else { 512 }),
+        dev_every: args.get_usize("dev-every")?.unwrap_or(5).max(2),
+        eval_every: args.get_usize("eval-every")?.unwrap_or(if quick { 0 } else { 50 }),
+        patience: args.get_usize("patience")?.unwrap_or(0),
+        task_file: args.get_str("task-file"),
+        ckpt_every: args.get_usize("ckpt-every")?.unwrap_or(0),
+        keep_last: args.get_usize("keep-last")?.unwrap_or(3),
+        run_dir: args.get_str("dir").unwrap_or_else(|| "runs".into()),
+        run_name: format!(
+            "ft_{model_name}_{}_k{k}_s{seed}",
+            task.name.to_lowercase().replace('-', "_")
+        ),
+        resume: args.get_bool("resume"),
+    };
+    println!(
+        "native fine-tuning: {} on {} ({} classes, {} metric) — batch {batch}x{seq}, k={k}, \
+         {steps} steps, Adam lr {lr}, threads {}",
+        model_name,
+        task.name,
+        task.n_classes,
+        pamm::coordinator::finetune::metric_name(&task),
+        pamm::poolx::global().threads()
+    );
+    let out = finetune_native(&rc, pamm::poolx::global(), args.get_bool("quiet"))?;
+    println!(
+        "dev: {}/{} correct ({:.1}% accuracy, {} {:.2})",
+        out.dev.hits,
+        out.dev.examples,
+        100.0 * out.dev.accuracy,
+        pamm::coordinator::finetune::metric_name(&task),
+        out.dev.score
+    );
+    if out.curve.is_empty() {
+        anyhow::ensure!(
+            !quick,
+            "quick smoke: checkpoint `{}` is already at the final step — \
+             remove {}/ckpt or raise --steps",
+            out.run_name,
+            rc.run_dir
+        );
+        println!("checkpoint: {}/ckpt/{}.bin (already complete)", rc.run_dir, out.run_name);
+        return Ok(());
+    }
+    if out.stopped_early {
+        println!(
+            "early stop at step {} (best dev {} hits at step {})",
+            out.steps, out.best_hits, out.best_step
+        );
+    }
+    println!(
+        "done: final loss {:.4}  run log: {}/{}.jsonl  checkpoint: {}/ckpt/{}.bin",
+        out.final_loss, rc.run_dir, out.run_name, rc.run_dir, out.run_name
+    );
+    if !rc.resume && out.curve.len() >= 2 {
+        // Acceptance smoke, asserted in-command on every fresh run:
+        // fine-tuning must make real progress on the task.
+        let window = (out.curve.len() / 2).clamp(1, 5);
+        let avg = |w: &[(usize, f32)]| {
+            w.iter().map(|&(_, l)| l as f64).sum::<f64>() / w.len() as f64
+        };
+        let head = avg(&out.curve[..window]);
+        let tail = avg(&out.curve[out.curve.len() - window..]);
+        anyhow::ensure!(
+            tail < head,
+            "fine-tuning loss did not decrease (first {head:.4} vs last {tail:.4})"
+        );
+        println!("loss decreased: {head:.4} -> {tail:.4} over {} steps", out.steps);
+    }
+    Ok(())
+}
+
+/// `pamm ablate` — the native ε/k quality-vs-saved-bytes sweep (P17):
+/// per-cell final loss against the exact tape saved bytes, the
+/// all-generators cell asserted bit-equal to an independent dense
+/// baseline, plus the analytic memory-zoo rows.
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let out = args.get_str("out").unwrap_or_else(|| "results".into());
+    let extra_eps = args.get_f64("epsilon")?.map(|e| e as f32);
+    let extra_k = args.get_usize("k")?;
+    pamm::experiments::ablation::ablation_table_with(
+        args.get_bool("quick"),
+        extra_eps,
+        extra_k,
+        &out,
+    )
 }
 
 #[cfg(feature = "pjrt")]
 fn cmd_finetune(args: &Args) -> Result<()> {
+    if args.get_bool("native") {
+        return cmd_finetune_native(args);
+    }
     use pamm::coordinator::pipeline::LabeledPipeline;
     use pamm::coordinator::ClassifierSession;
 

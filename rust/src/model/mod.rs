@@ -52,6 +52,16 @@ pub const PARAMS_PER_BLOCK: usize = 9;
 /// `LN, qkv_attn, residual, LN, mlp, residual`.
 pub const NODES_PER_BLOCK: usize = 6;
 
+/// Tape nodes past the block stack in a classification forward
+/// ([`TransformerLM::forward_classify`]):
+/// `LN, mean_pool, linear_head, softmax_xent`.
+pub const CLS_TAIL_NODES: usize = 4;
+
+/// Checkpoint key of the classification head weight — the one extra
+/// `d_model×n_classes` parameter `forward_classify` expects appended
+/// past the fixed LM layout (`ParamId == LmConfig::n_params()`).
+pub const CLS_HEAD_NAME: &str = "cls.head";
+
 /// Model geometry of the native transformer LM.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LmConfig {
@@ -152,18 +162,18 @@ impl TransformerLM {
         1 + block * PARAMS_PER_BLOCK + off
     }
 
-    /// Full training forward: embedding → N blocks → final LN → tied
-    /// head → mean next-token cross-entropy. Returns the loss and the
-    /// tape holding every node's minimal saved state; generator
+    /// Shared encoder trunk: embedding → N blocks → final LN. Returns
+    /// the final-LN output and its tape id; both heads (the tied LM
+    /// head of [`Self::forward`] and the classification head of
+    /// [`Self::forward_classify`]) sit on top of this. Generator
     /// indices for the 2·n_layers compressions are drawn from `rng` in
     /// a fixed order (two per block, attention first), so the sampling
     /// stream is independent of threads and dispatch.
     #[allow(clippy::too_many_arguments)]
-    pub fn forward(
+    fn encode(
         &self,
         d: Dispatch,
         ids: &[i32],
-        targets: &[i32],
         batch: usize,
         seq: usize,
         k: usize,
@@ -171,13 +181,12 @@ impl TransformerLM {
         rng: &mut Xoshiro256,
         pool: &Pool,
         ledger: Option<&MemoryLedger>,
-    ) -> (f32, Tape) {
+        tape: &mut Tape,
+    ) -> (Mat, usize) {
         let tokens = batch * seq;
         assert_eq!(ids.len(), tokens, "model: ids vs batch·seq");
-        assert_eq!(targets.len(), tokens, "model: targets vs batch·seq");
         let shape = self.shape_for(batch, seq);
         let k = k.clamp(1, tokens);
-        let mut tape = Tape::new();
         let (mut x, mut xid) = tape.embedding(&self.params[0], 0, ids, ledger);
         for b in 0..self.cfg.n_layers {
             let p = |o: usize| self.pid(b, o);
@@ -225,9 +234,100 @@ impl TransformerLM {
         let lnf = 1 + self.cfg.n_layers * PARAMS_PER_BLOCK;
         let (hf, hfid) =
             tape.layer_norm(&x, xid, &self.params[lnf], lnf, &self.params[lnf + 1], lnf + 1, ledger);
+        (hf, hfid)
+    }
+
+    /// Full training forward: embedding → N blocks → final LN → tied
+    /// head → mean next-token cross-entropy. Returns the loss and the
+    /// tape holding every node's minimal saved state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward(
+        &self,
+        d: Dispatch,
+        ids: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+        k: usize,
+        eps: Eps,
+        rng: &mut Xoshiro256,
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> (f32, Tape) {
+        assert_eq!(targets.len(), batch * seq, "model: targets vs batch·seq");
+        let mut tape = Tape::new();
+        let (hf, hfid) = self.encode(d, ids, batch, seq, k, eps, rng, pool, ledger, &mut tape);
         let (logits, lid) = tape.tied_head(&hf, hfid, &self.params[0], 0, pool, ledger);
         let loss = tape.softmax_xent(&logits, lid, targets, ledger);
         (loss, tape)
+    }
+
+    /// Classification forward: the same encoder trunk, then
+    /// mean-pool over each sequence → dense linear head → softmax
+    /// cross-entropy over `labels` (one per sequence). The head weight
+    /// is `self.params[cfg.n_params()]` — an extra `d_model×n_classes`
+    /// parameter appended past the fixed LM layout
+    /// ([`CLS_HEAD_NAME`], owned by `coordinator::finetune`), so LM
+    /// checkpoints and the pretraining layout are untouched. The tape
+    /// has `1 + n_layers·NODES_PER_BLOCK + CLS_TAIL_NODES` nodes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_classify(
+        &self,
+        d: Dispatch,
+        ids: &[i32],
+        labels: &[i32],
+        batch: usize,
+        seq: usize,
+        k: usize,
+        eps: Eps,
+        rng: &mut Xoshiro256,
+        pool: &Pool,
+        ledger: Option<&MemoryLedger>,
+    ) -> (f32, Tape) {
+        let head_id = self.cfg.n_params();
+        assert_eq!(
+            self.params.len(),
+            head_id + 1,
+            "forward_classify: params must be the LM layout + one classification head"
+        );
+        assert_eq!(labels.len(), batch, "model: one label per sequence");
+        let mut tape = Tape::new();
+        let (hf, hfid) = self.encode(d, ids, batch, seq, k, eps, rng, pool, ledger, &mut tape);
+        let (pooled, pid) = tape.mean_pool(&hf, hfid, batch, seq, ledger);
+        let (logits, lid) =
+            tape.linear_head(&pooled, pid, &self.params[head_id], head_id, pool, ledger);
+        let loss = tape.softmax_xent(&logits, lid, labels, ledger);
+        (loss, tape)
+    }
+
+    /// Prediction-only classification pass: the per-sequence class
+    /// logits (`batch×n_classes`), no loss, tape discarded. Same
+    /// forward function as [`Self::forward_classify`] — `rng` must be
+    /// positioned identically for the generator draws to match.
+    #[allow(clippy::too_many_arguments)]
+    pub fn classify_logits(
+        &self,
+        d: Dispatch,
+        ids: &[i32],
+        batch: usize,
+        seq: usize,
+        k: usize,
+        eps: Eps,
+        rng: &mut Xoshiro256,
+        pool: &Pool,
+    ) -> Mat {
+        let head_id = self.cfg.n_params();
+        assert_eq!(
+            self.params.len(),
+            head_id + 1,
+            "classify_logits: params must be the LM layout + one classification head"
+        );
+        let mut tape = Tape::new();
+        let (hf, hfid) = self.encode(d, ids, batch, seq, k, eps, rng, pool, None, &mut tape);
+        let (pooled, pid) = tape.mean_pool(&hf, hfid, batch, seq, None);
+        let (logits, _) =
+            tape.linear_head(&pooled, pid, &self.params[head_id], head_id, pool, None);
+        logits
     }
 
     /// Convenience: forward + backward in one call — returns the loss
@@ -480,6 +580,67 @@ mod tests {
         assert!(
             last < first * 0.95,
             "fixed-batch SGD must make progress: first {first}, last {last}"
+        );
+    }
+
+    #[test]
+    fn classify_forward_tape_shape_and_fixed_batch_learning() {
+        // The classification head must (a) produce a near-uniform loss
+        // at init, (b) lay down the documented tape layout, (c) route
+        // gradients into every parameter including the appended head,
+        // and (d) overfit a fixed labeled batch under plain SGD.
+        let cfg = tiny_cfg();
+        let mut m = TransformerLM::new(cfg.clone(), 51);
+        let n_classes = 3usize;
+        let mut init_rng = Xoshiro256::new(52);
+        m.params.push(Mat::random_normal(cfg.d_model(), n_classes, 0.02, &mut init_rng));
+        let (batch, seq) = (4usize, 6usize);
+        let (ids, _) = token_batch(&cfg, batch * seq, 53);
+        let labels: Vec<i32> = (0..batch).map(|b| (b % n_classes) as i32).collect();
+        let pool = Pool::serial();
+        let d = kernels::active();
+        let mut rng = Xoshiro256::new(54);
+        let (loss0, tape) = m.forward_classify(
+            d, &ids, &labels, batch, seq, batch * seq, Eps::Inf, &mut rng, &pool, None,
+        );
+        assert!(loss0.is_finite() && loss0 > 0.0, "loss {loss0}");
+        assert!((loss0 - (n_classes as f32).ln()).abs() < 0.5, "near-uniform init: {loss0}");
+        assert_eq!(tape.len(), 1 + cfg.n_layers * NODES_PER_BLOCK + CLS_TAIL_NODES);
+        let logits = m.classify_logits(
+            d, &ids, batch, seq, batch * seq, Eps::Inf, &mut Xoshiro256::new(54), &pool,
+        );
+        assert_eq!((logits.rows(), logits.cols()), (batch, n_classes));
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        let mut rng = Xoshiro256::new(55);
+        for s in 0..30 {
+            let (loss, tape) = m.forward_classify(
+                d, &ids, &labels, batch, seq, batch * seq, Eps::Inf, &mut rng, &pool, None,
+            );
+            let res = tape.backward(d, &m.params, &pool, None);
+            if s == 0 {
+                first = loss;
+                assert!(
+                    res.params[cfg.n_params()].data().iter().any(|&v| v != 0.0),
+                    "classification head got an all-zero gradient"
+                );
+                assert!(
+                    res.params[0].data().iter().any(|&v| v != 0.0),
+                    "embedding got an all-zero gradient through the head"
+                );
+            }
+            last = loss;
+            for (p, g) in m.params.iter_mut().zip(&res.params) {
+                for (pv, &gv) in p.data_mut().iter_mut().zip(g.data()) {
+                    *pv -= 0.3 * gv;
+                }
+            }
+        }
+        assert!(
+            last < first * 0.9,
+            "fixed-batch classification SGD must make progress: first {first}, last {last}"
         );
     }
 

@@ -1,0 +1,139 @@
+//! Property tests for the native ε/k ablation harness
+//! (`experiments::ablation`, P17 — the `pamm ablate` engine):
+//!
+//! * table determinism — the same (shape, grids) sweep run twice is
+//!   bitwise identical, cell for cell,
+//! * saved-bytes exactness — every cell's memory column equals an
+//!   independently measured `MemoryLedger` inventory for the same
+//!   trainer step (measured == analytic, no sampling),
+//! * all-generators == dense — the (ε = ∞, k = batch·seq) cell
+//!   bit-matches an independently run dense baseline,
+//! * monotone memory — at fixed ε, shrinking k strictly shrinks the
+//!   cell's saved bytes.
+//!
+//! Run under both `PAMM_SIMD=native` (default) and `PAMM_SIMD=scalar`
+//! (CI does both).
+
+use pamm::coordinator::LmTrainer;
+use pamm::data::BatchIterator;
+use pamm::experiments::ablation::{grids, run_cell, sweep, AblationShape};
+use pamm::memory::MemoryLedger;
+use pamm::model::LmConfig;
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+use pamm::tensor::kernels;
+
+/// A shape small enough that a full sweep is cheap in a test, but with
+/// ≥ 2 blocks and enough tokens for three k octaves (64, 8, 1).
+fn test_shape() -> AblationShape {
+    let mut s = AblationShape::quick();
+    s.steps = 4;
+    s
+}
+
+#[test]
+fn sweep_is_bitwise_deterministic() {
+    let shape = test_shape();
+    let (eps_grid, k_grid) = grids(&shape, true);
+    let pool = Pool::serial();
+    let digest = |cells: &[pamm::experiments::ablation::AblationCell]| {
+        cells
+            .iter()
+            .map(|c| (c.eps_label.clone(), c.k, c.final_loss.to_bits(), c.saved_bytes))
+            .collect::<Vec<_>>()
+    };
+    let a = sweep(&shape, &eps_grid, &k_grid, &pool).unwrap();
+    let b = sweep(&shape, &eps_grid, &k_grid, &pool).unwrap();
+    assert_eq!(a.len(), eps_grid.len() * k_grid.len(), "one cell per (eps, k)");
+    assert_eq!(digest(&a), digest(&b), "same seed must reproduce the table bitwise");
+}
+
+#[test]
+fn saved_bytes_cells_equal_an_independent_ledger_inventory() {
+    let shape = test_shape();
+    let pool = Pool::serial();
+    for (eps, k) in [(Eps::Inf, shape.tokens()), (Eps::Inf, 8), (Eps::Val(0.5), 8)] {
+        let cell = run_cell(&shape, eps, k, &pool).unwrap();
+        // Replay the cell's training run by hand and measure the final
+        // step with a live ledger: the cell's memory column must equal
+        // the measured inventory exactly.
+        let mut t =
+            LmTrainer::new(shape.cfg.clone(), shape.batch, shape.seq, k, shape.opt, shape.seed);
+        t.eps = eps;
+        let mut it =
+            BatchIterator::from_seed(shape.cfg.vocab, shape.batch, shape.seq, shape.seed);
+        for _ in 0..shape.steps - 1 {
+            let b = it.next_batch();
+            t.train_step(&b.tokens, &pool, None).unwrap();
+        }
+        let b = it.next_batch();
+        let ledger = MemoryLedger::new();
+        let rep = t.step_report(kernels::active(), &b.tokens, &pool, Some(&ledger)).unwrap();
+        assert_eq!(
+            cell.saved_bytes,
+            ledger.saved(),
+            "cell (eps={:?}, k={k}): table column vs measured ledger",
+            eps
+        );
+        assert_eq!(cell.saved_bytes, rep.saved_bytes, "ledger vs tape inventory");
+        assert_eq!(cell.final_loss.to_bits(), rep.loss.to_bits(), "replayed final loss");
+    }
+}
+
+#[test]
+fn all_generators_cell_bit_matches_the_dense_baseline() {
+    let shape = test_shape();
+    let n = shape.tokens();
+    let pool = Pool::serial();
+    let (eps_grid, k_grid) = grids(&shape, true);
+    assert_eq!(k_grid[0], n, "the grid must lead with the dense all-generators column");
+    let cells = sweep(&shape, &eps_grid, &k_grid, &pool).unwrap();
+    let kn = cells
+        .iter()
+        .find(|c| c.eps_label == "inf" && c.k == n)
+        .expect("sweep must contain the (inf, n) cell");
+    let dense = run_cell(&shape, Eps::Inf, n, &pool).unwrap();
+    assert_eq!(
+        kn.final_loss.to_bits(),
+        dense.final_loss.to_bits(),
+        "k = batch*seq with eps = inf is the dense computation — losses must bit-match"
+    );
+    assert_eq!(kn.saved_bytes, dense.saved_bytes, "dense saved bytes must match too");
+}
+
+#[test]
+fn saved_bytes_strictly_shrink_as_k_shrinks() {
+    let shape = test_shape();
+    let (eps_grid, k_grid) = grids(&shape, true);
+    assert!(k_grid.len() >= 3, "need at least three k octaves for a monotonicity check");
+    assert!(k_grid.windows(2).all(|w| w[0] > w[1]), "k grid must descend");
+    let pool = Pool::serial();
+    let cells = sweep(&shape, &eps_grid, &k_grid, &pool).unwrap();
+    for eps in &eps_grid {
+        let label = pamm::experiments::ablation::eps_label(*eps);
+        let row: Vec<&pamm::experiments::ablation::AblationCell> =
+            cells.iter().filter(|c| c.eps_label == label).collect();
+        assert_eq!(row.len(), k_grid.len());
+        for w in row.windows(2) {
+            assert!(
+                w[0].saved_bytes > w[1].saved_bytes,
+                "eps={label}: saved bytes must strictly shrink, k={} gave {} vs k={} gave {}",
+                w[0].k,
+                w[0].saved_bytes,
+                w[1].k,
+                w[1].saved_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn quick_config_is_a_valid_ablation_shape() {
+    // The CLI's `--quick` path must keep an n that supports the
+    // documented 8× octave grid, and LmConfig sanity for the sweep.
+    let shape = AblationShape::quick();
+    assert!(shape.tokens() >= 64, "quick shape must allow three k octaves");
+    assert_eq!(shape.cfg, LmConfig { vocab: 300, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 });
+    assert!(run_cell(&shape, Eps::Inf, shape.tokens() + 1, &Pool::serial()).is_err());
+    assert!(run_cell(&shape, Eps::Inf, 0, &Pool::serial()).is_err());
+}

@@ -5,6 +5,7 @@
 
 use pamm::data::batcher::BatchIterator;
 use pamm::data::corpus::{CorpusConfig, CorpusGenerator};
+use pamm::data::glue::{glue_suite, LabeledStream, TaskCorpus, TaskSpec};
 use pamm::data::tokenizer::{Tokenizer, PAD, SPECIAL_TOKENS};
 
 fn corpus_doc(seed: u64, words: usize) -> String {
@@ -96,5 +97,133 @@ fn packed_batches_are_lm_ready() {
         let specials =
             b.tokens.iter().filter(|&&t| (t as usize) < SPECIAL_TOKENS).count();
         assert!(specials * 4 < b.tokens.len(), "specials {specials} of {}", b.tokens.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GLUE-style labeled corpora (`data::glue` — the `pamm finetune
+// --native` input path)
+// ---------------------------------------------------------------------------
+
+fn glue_spec(name: &str) -> TaskSpec {
+    glue_suite().into_iter().find(|s| s.name == name).expect("known GLUE task")
+}
+
+#[test]
+fn glue_synthetic_corpus_is_deterministic() {
+    let spec = glue_spec("SST2");
+    let (vocab, seq, n) = (300usize, 16usize, 24usize);
+    let a = TaskCorpus::synthetic(spec.clone(), vocab, seq, n, 7);
+    let b = TaskCorpus::synthetic(spec.clone(), vocab, seq, n, 7);
+    assert_eq!(a.examples.len(), n);
+    for (i, (ea, eb)) in a.examples.iter().zip(&b.examples).enumerate() {
+        assert_eq!(ea.tokens, eb.tokens, "example {i}: tokens");
+        assert_eq!(ea.label, eb.label, "example {i}: label");
+    }
+    // A different seed must change the example universe somewhere.
+    let c = TaskCorpus::synthetic(spec, vocab, seq, n, 8);
+    assert!(
+        a.examples.iter().zip(&c.examples).any(|(ea, ec)| ea.tokens != ec.tokens),
+        "seed must matter"
+    );
+    // Labels must span every class (the generator is class-balanced
+    // enough for 24 examples over 2 classes).
+    for cls in 0..a.spec.n_classes as i32 {
+        assert!(a.examples.iter().any(|e| e.label == cls), "class {cls} unrepresented");
+    }
+}
+
+#[test]
+fn glue_labels_round_trip_through_the_labeled_stream() {
+    // Every packed row the stream emits must be a corpus example —
+    // tokens AND label together — and within one epoch no example may
+    // be emitted twice (the epoch permutation is a draw without
+    // replacement over full batches).
+    let spec = glue_spec("MNLI"); // 3 classes — labels are non-binary
+    let (vocab, seq, n, batch) = (300usize, 12usize, 22usize, 4usize);
+    let corpus = TaskCorpus::synthetic(spec, vocab, seq, n, 13);
+    let examples = corpus.examples.clone();
+    let mut stream = LabeledStream::new(corpus, batch, 13);
+    let bpe = stream.batches_per_epoch();
+    assert_eq!(bpe, n / batch, "full batches only — the ragged tail is dropped");
+    let mut used = vec![false; examples.len()];
+    for b in 0..bpe {
+        let lb = stream.next_batch();
+        assert_eq!(lb.batch, batch);
+        assert_eq!(lb.seq, seq);
+        assert_eq!(lb.tokens.len(), batch * seq);
+        assert_eq!(lb.labels.len(), batch);
+        for r in 0..batch {
+            let row = &lb.tokens[r * seq..(r + 1) * seq];
+            let hit = examples
+                .iter()
+                .enumerate()
+                .position(|(i, e)| !used[i] && e.tokens == row && e.label == lb.labels[r]);
+            let i = hit.unwrap_or_else(|| {
+                panic!("batch {b} row {r}: not an unused corpus example (label {})", lb.labels[r])
+            });
+            used[i] = true;
+        }
+    }
+    assert_eq!(used.iter().filter(|&&u| u).count(), bpe * batch);
+}
+
+#[test]
+fn glue_split_is_disjoint_and_complete() {
+    let spec = glue_spec("RTE");
+    let (vocab, seq, n, dev_every) = (300usize, 10usize, 23usize, 4usize);
+    let full = TaskCorpus::synthetic(spec, vocab, seq, n, 19);
+    let originals = full.examples.clone();
+    let (train, dev) = full.split(dev_every);
+    // The stride rule: index i goes to dev iff i % dev_every == dev_every-1.
+    let want_dev = originals.iter().enumerate().filter(|(i, _)| i % dev_every == dev_every - 1);
+    let want_train =
+        originals.iter().enumerate().filter(|(i, _)| i % dev_every != dev_every - 1);
+    assert_eq!(train.examples.len() + dev.examples.len(), n, "no example lost or duplicated");
+    for ((_, want), got) in want_dev.zip(&dev.examples) {
+        assert_eq!(want.tokens, got.tokens);
+        assert_eq!(want.label, got.label);
+    }
+    for ((_, want), got) in want_train.zip(&train.examples) {
+        assert_eq!(want.tokens, got.tokens);
+        assert_eq!(want.label, got.label);
+    }
+    // No leakage: no dev row appears among the train rows.
+    for (di, d) in dev.examples.iter().enumerate() {
+        assert!(
+            !train.examples.iter().any(|t| t.tokens == d.tokens),
+            "dev example {di} leaked into the train split"
+        );
+    }
+}
+
+#[test]
+fn glue_ragged_tail_and_skip_contract_match_batcher_semantics() {
+    // eval_batches and the stream agree with `BatchIterator`'s shard
+    // semantics: len/batch full batches, fixed order for eval, and
+    // skip_batches(n) ≡ draining n batches (the resume fast-forward).
+    let spec = glue_spec("SST2");
+    let (vocab, seq, n, batch) = (300usize, 8usize, 10usize, 4usize);
+    let corpus = TaskCorpus::synthetic(spec, vocab, seq, n, 23);
+    let evals = corpus.eval_batches(batch);
+    assert_eq!(evals.len(), n / batch, "eval drops the ragged tail");
+    for (b, lb) in evals.iter().enumerate() {
+        for r in 0..batch {
+            let e = &corpus.examples[b * batch + r];
+            assert_eq!(lb.tokens[r * seq..(r + 1) * seq], e.tokens[..], "eval order is fixed");
+            assert_eq!(lb.labels[r], e.label);
+        }
+    }
+    let mut skipped = LabeledStream::new(corpus.clone(), batch, 31);
+    let mut drained = LabeledStream::new(corpus, batch, 31);
+    skipped.skip_batches(3); // crosses an epoch boundary at bpe == 2
+    for _ in 0..3 {
+        let _ = drained.next_batch();
+    }
+    for step in 0..4 {
+        let a = skipped.next_batch();
+        let b = drained.next_batch();
+        assert_eq!(a.tokens, b.tokens, "step {step}: tokens");
+        assert_eq!(a.labels, b.labels, "step {step}: labels");
     }
 }

@@ -1,0 +1,409 @@
+//! Property tests for the native fine-tuning path (`model` with the
+//! classification head + `coordinator::FtTrainer` over the multi-op
+//! graph tape):
+//!
+//! * f64 finite-difference gradient check through the whole
+//!   classification stack — two transformer blocks, final LN, mean
+//!   pool, linear head, label cross-entropy (all-generators, so the
+//!   compressed forward is the dense function the oracle
+//!   differentiates),
+//! * scalar==sse2==avx2 bit-equality of the fine-tune loss and every
+//!   gradient (head included),
+//! * 1/2/4-thread parity of whole fine-tuning trajectories,
+//! * checkpoint round-trip + resume: a save/reload/continue
+//!   fine-tuning run is bit-identical, step for step, to an
+//!   uninterrupted one — dev evaluation included.
+//!
+//! Run under both `PAMM_SIMD=native` (default) and `PAMM_SIMD=scalar`
+//! (CI does both). Mirrors `prop_model.rs` through the LM trunk; the
+//! classification tail (mean pool → linear head → label xent) is the
+//! part only this suite covers.
+
+use pamm::autograd::LN_EPS;
+use pamm::coordinator::{find_task, ft_param_names, FtTrainer, NativeOpt};
+use pamm::data::glue::{LabeledStream, TaskCorpus};
+use pamm::model::{self, LmConfig, TransformerLM};
+use pamm::pamm::Eps;
+use pamm::poolx::Pool;
+use pamm::rngx::Xoshiro256;
+use pamm::tensor::kernels::{self, Dispatch};
+use pamm::tensor::Mat;
+
+fn rand_mat(rows: usize, cols: usize, std: f32, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    Mat::random_normal(rows, cols, std, &mut rng)
+}
+
+/// A two-block test model + classification head with weights large
+/// enough that every parameter group gets a well-sized gradient (same
+/// inflation scheme as `prop_model.rs::fd_model`).
+fn fd_cls_model(cfg: &LmConfig, n_classes: usize, seed: u64) -> TransformerLM {
+    let mut m = TransformerLM::new(cfg.clone(), seed);
+    let dm = cfg.d_model();
+    let mut s = seed;
+    let mut next = |rows: usize, cols: usize, std: f32| {
+        s += 1;
+        rand_mat(rows, cols, std, s)
+    };
+    m.params[0] = next(cfg.vocab, dm, 0.5); // emb
+    for b in 0..cfg.n_layers {
+        let p = 1 + b * model::PARAMS_PER_BLOCK;
+        let mut g = next(1, dm, 0.2);
+        for v in g.data_mut() {
+            *v += 1.0; // gains near 1, not 0
+        }
+        m.params[p] = g;
+        m.params[p + 1] = next(1, dm, 0.1);
+        m.params[p + 2] = next(dm, dm, 0.4);
+        m.params[p + 3] = next(dm, dm, 0.4);
+        m.params[p + 4] = next(dm, dm, 0.4);
+        let mut g2 = next(1, dm, 0.2);
+        for v in g2.data_mut() {
+            *v += 1.0;
+        }
+        m.params[p + 5] = g2;
+        m.params[p + 6] = next(1, dm, 0.1);
+        m.params[p + 7] = next(dm, cfg.d_ff, 0.4);
+        m.params[p + 8] = next(cfg.d_ff, dm, 0.4);
+    }
+    let lnf = 1 + cfg.n_layers * model::PARAMS_PER_BLOCK;
+    let mut gf = next(1, dm, 0.2);
+    for v in gf.data_mut() {
+        *v += 1.0;
+    }
+    m.params[lnf] = gf;
+    m.params[lnf + 1] = next(1, dm, 0.1);
+    m.params.push(next(dm, n_classes, 0.4)); // classification head
+    m
+}
+
+/// Classification forward + backward through the tape: the fine-tune
+/// gradient (every LM parameter + the head), all-generators.
+#[allow(clippy::too_many_arguments)]
+fn cls_loss_and_grads(
+    m: &TransformerLM,
+    d: Dispatch,
+    ids: &[i32],
+    labels: &[i32],
+    batch: usize,
+    seq: usize,
+    k: usize,
+    rng_seed: u64,
+    pool: &Pool,
+) -> (f32, Vec<Mat>) {
+    let mut rng = Xoshiro256::new(rng_seed);
+    let (loss, tape) =
+        m.forward_classify(d, ids, labels, batch, seq, k, Eps::Inf, &mut rng, pool, None);
+    let res = tape.backward(d, &m.params, pool, None);
+    (loss, res.params)
+}
+
+// ---------------------------------------------------------------------------
+// f64 oracle — an independent dense implementation of the whole
+// classification stack (trunk helpers identical to prop_model.rs)
+// ---------------------------------------------------------------------------
+
+fn mm64(a: &[f64], b: &[f64], r: usize, k: usize, c: usize) -> Vec<f64> {
+    let mut out = vec![0f64; r * c];
+    for i in 0..r {
+        for p in 0..k {
+            let av = a[i * k + p];
+            for j in 0..c {
+                out[i * c + j] += av * b[p * c + j];
+            }
+        }
+    }
+    out
+}
+
+fn ln64(x: &[f64], rows: usize, n: usize, g: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut out = vec![0f64; rows * n];
+    for i in 0..rows {
+        let xr = &x[i * n..(i + 1) * n];
+        let mu: f64 = xr.iter().sum::<f64>() / n as f64;
+        let var: f64 = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / n as f64;
+        let r = 1.0 / (var + LN_EPS as f64).sqrt();
+        for j in 0..n {
+            out[i * n + j] = (xr[j] - mu) * r * g[j] + b[j];
+        }
+    }
+    out
+}
+
+fn gelu64(z: f64) -> f64 {
+    let c = 0.7978845608028654f64; // √(2/π)
+    let a = 0.044715f64;
+    0.5 * z * (1.0 + (c * (z + a * z * z * z)).tanh())
+}
+
+/// Dense causal multi-head attention, token-major in and out.
+fn attn64(
+    qp: &[f64],
+    kp: &[f64],
+    vp: &[f64],
+    batch: usize,
+    seq: usize,
+    heads: usize,
+    dh: usize,
+) -> Vec<f64> {
+    let dm = heads * dh;
+    let scale = 1.0 / (dh as f64).sqrt();
+    let mut out = vec![0f64; batch * seq * dm];
+    for b in 0..batch {
+        for h in 0..heads {
+            for i in 0..seq {
+                let ri = (b * seq + i) * dm + h * dh;
+                let mut scores = vec![0f64; i + 1];
+                for (j, s) in scores.iter_mut().enumerate() {
+                    let rj = (b * seq + j) * dm + h * dh;
+                    let mut acc = 0f64;
+                    for c in 0..dh {
+                        acc += qp[ri + c] * kp[rj + c];
+                    }
+                    *s = scale * acc;
+                }
+                let mx = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mut sum = 0f64;
+                for s in scores.iter_mut() {
+                    *s = (*s - mx).exp();
+                    sum += *s;
+                }
+                for c in 0..dh {
+                    let mut acc = 0f64;
+                    for (j, p) in scores.iter().enumerate() {
+                        let rj = (b * seq + j) * dm + h * dh;
+                        acc += p * vp[rj + c];
+                    }
+                    out[ri + c] = acc / sum;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The whole classification stack in f64, dense: trunk (embedding →
+/// blocks → final LN) → sequence mean pool → linear head → label
+/// cross-entropy averaged over the batch.
+fn oracle_cls_loss(
+    cfg: &LmConfig,
+    params: &[Vec<f64>],
+    n_classes: usize,
+    ids: &[i32],
+    labels: &[i32],
+    batch: usize,
+    seq: usize,
+) -> f64 {
+    let dm = cfg.d_model();
+    let tokens = batch * seq;
+    let emb = &params[0];
+    let mut x = vec![0f64; tokens * dm];
+    for (i, &id) in ids.iter().enumerate() {
+        x[i * dm..(i + 1) * dm].copy_from_slice(&emb[id as usize * dm..(id as usize + 1) * dm]);
+    }
+    for b in 0..cfg.n_layers {
+        let p = 1 + b * model::PARAMS_PER_BLOCK;
+        let h1 = ln64(&x, tokens, dm, &params[p], &params[p + 1]);
+        let qp = mm64(&h1, &params[p + 2], tokens, dm, dm);
+        let kp = mm64(&h1, &params[p + 3], tokens, dm, dm);
+        let vp = mm64(&h1, &params[p + 4], tokens, dm, dm);
+        let attn = attn64(&qp, &kp, &vp, batch, seq, cfg.heads, cfg.head_dim);
+        for (xv, av) in x.iter_mut().zip(&attn) {
+            *xv += av;
+        }
+        let h2 = ln64(&x, tokens, dm, &params[p + 5], &params[p + 6]);
+        let mut z = mm64(&h2, &params[p + 7], tokens, dm, cfg.d_ff);
+        for v in z.iter_mut() {
+            *v = gelu64(*v);
+        }
+        let y = mm64(&z, &params[p + 8], tokens, cfg.d_ff, dm);
+        for (xv, yv) in x.iter_mut().zip(&y) {
+            *xv += yv;
+        }
+    }
+    let lnf = 1 + cfg.n_layers * model::PARAMS_PER_BLOCK;
+    let hf = ln64(&x, tokens, dm, &params[lnf], &params[lnf + 1]);
+    // Sequence mean pool: one d_model row per example.
+    let mut pooled = vec![0f64; batch * dm];
+    for b in 0..batch {
+        for t in 0..seq {
+            for j in 0..dm {
+                pooled[b * dm + j] += hf[(b * seq + t) * dm + j];
+            }
+        }
+        for j in 0..dm {
+            pooled[b * dm + j] /= seq as f64;
+        }
+    }
+    // Linear head + per-example softmax cross-entropy, batch-averaged.
+    let w = &params[cfg.n_params()];
+    let logits = mm64(&pooled, w, batch, dm, n_classes);
+    let mut loss = 0f64;
+    for b in 0..batch {
+        let lr = &logits[b * n_classes..(b + 1) * n_classes];
+        let mx = lr.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = mx + lr.iter().map(|l| (l - mx).exp()).sum::<f64>().ln();
+        loss += lse - lr[labels[b] as usize];
+    }
+    loss / batch as f64
+}
+
+#[test]
+fn finite_difference_gradient_check_through_the_classification_head() {
+    let cfg = LmConfig { vocab: 17, n_layers: 2, heads: 2, head_dim: 3, d_ff: 10 };
+    let n_classes = 3usize;
+    let (batch, seq) = (2usize, 4usize);
+    let tokens = batch * seq;
+    let m = fd_cls_model(&cfg, n_classes, 11000);
+    let mut rng = Xoshiro256::new(11100);
+    let ids: Vec<i32> = (0..tokens).map(|_| rng.next_below(cfg.vocab as u64) as i32).collect();
+    let labels: Vec<i32> = (0..batch).map(|_| rng.next_below(n_classes as u64) as i32).collect();
+    let pool = Pool::serial();
+
+    // All generators: the compression is the identity up to Lemma-1 α
+    // rounding (≈1e-7) — the analytic gradients are exact for the
+    // dense function the oracle computes.
+    let k = tokens;
+    let (loss, grads) =
+        cls_loss_and_grads(&m, kernels::active(), &ids, &labels, batch, seq, k, 11200, &pool);
+    let params64: Vec<Vec<f64>> =
+        m.params.iter().map(|p| p.data().iter().map(|&v| v as f64).collect()).collect();
+    let oracle = oracle_cls_loss(&cfg, &params64, n_classes, &ids, &labels, batch, seq);
+    assert!(
+        (loss as f64 - oracle).abs() < 1e-3 * oracle.abs().max(1.0),
+        "forward mismatch: native {loss} vs oracle {oracle}"
+    );
+
+    let h = 1e-3f64;
+    let mut w64 = params64;
+    let names = ft_param_names(&cfg);
+    for (pi, name) in names.iter().enumerate() {
+        let n_entries = w64[pi].len();
+        let mut fds = Vec::with_capacity(n_entries);
+        for e in 0..n_entries {
+            let orig = w64[pi][e];
+            w64[pi][e] = orig + h;
+            let lp = oracle_cls_loss(&cfg, &w64, n_classes, &ids, &labels, batch, seq);
+            w64[pi][e] = orig - h;
+            let lm = oracle_cls_loss(&cfg, &w64, n_classes, &ids, &labels, batch, seq);
+            w64[pi][e] = orig;
+            fds.push((lp - lm) / (2.0 * h));
+        }
+        let fd_scale = fds.iter().map(|f| f.abs()).fold(0f64, f64::max).max(1e-4);
+        for (e, &fd) in fds.iter().enumerate() {
+            let gv = grads[pi].data()[e] as f64;
+            assert!(
+                (gv - fd).abs() <= 3e-2 * fd_scale,
+                "{name} entry {e}: analytic {gv} vs fd {fd} (scale {fd_scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn finetune_loss_and_grads_bit_identical_across_dispatch_levels() {
+    let cfg = LmConfig { vocab: 31, n_layers: 2, heads: 2, head_dim: 8, d_ff: 24 };
+    let n_classes = 3usize;
+    let (batch, seq) = (2usize, 33usize);
+    let m = fd_cls_model(&cfg, n_classes, 11400);
+    let mut rng = Xoshiro256::new(11500);
+    let ids: Vec<i32> =
+        (0..batch * seq).map(|_| rng.next_below(cfg.vocab as u64) as i32).collect();
+    let labels: Vec<i32> = (0..batch).map(|_| rng.next_below(n_classes as u64) as i32).collect();
+    let pool = Pool::serial();
+    let run =
+        |d: Dispatch| cls_loss_and_grads(&m, d, &ids, &labels, batch, seq, 12, 11600, &pool);
+    let (loss_b, grads_b) = run(Dispatch::Scalar);
+    for d in [Dispatch::Sse2, Dispatch::Avx2] {
+        if !d.available() {
+            continue;
+        }
+        let (loss, grads) = run(d);
+        assert_eq!(loss.to_bits(), loss_b.to_bits(), "{}: fine-tune loss", d.name());
+        for (pi, (g, gb)) in grads.iter().zip(&grads_b).enumerate() {
+            let bits = |m: &Mat| m.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(g), bits(gb), "{}: grad of param {pi} (head is last)", d.name());
+        }
+    }
+}
+
+#[test]
+fn finetuning_trajectories_bit_identical_across_thread_counts() {
+    let cfg = LmConfig { vocab: 300, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 };
+    let task = find_task("SST2").unwrap();
+    let (batch, seq) = (2usize, 24usize);
+    let run = |pool: &Pool| {
+        let mut t =
+            FtTrainer::new(cfg.clone(), task.clone(), batch, seq, 8, NativeOpt::adam(2e-3), 17);
+        let corpus = TaskCorpus::synthetic(task.clone(), cfg.vocab, seq, 16, 17);
+        let mut stream = LabeledStream::new(corpus, batch, 17);
+        let losses: Vec<u32> = (0..3)
+            .map(|_| t.train_step(&stream.next_batch(), pool, None).unwrap().to_bits())
+            .collect();
+        (losses, t.model.params)
+    };
+    let base = run(&Pool::serial());
+    for threads in [2usize, 4] {
+        let got = run(&Pool::new(threads).with_min_chunk(1));
+        assert_eq!(got.0, base.0, "fine-tune loss trajectory t={threads}");
+        for (pi, (p, pb)) in got.1.iter().zip(&base.1).enumerate() {
+            assert_eq!(p, pb, "param {pi} t={threads} (head is last)");
+        }
+    }
+}
+
+#[test]
+fn resumed_finetuning_matches_an_uninterrupted_run_step_for_step() {
+    let dir = std::env::temp_dir().join(format!("pamm_prop_ft_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = LmConfig { vocab: 300, n_layers: 2, heads: 2, head_dim: 8, d_ff: 32 };
+    let task = find_task("MNLI").unwrap(); // 3 classes — head is non-trivial
+    let (batch, seq, seed) = (2usize, 16usize, 29u64);
+    let pool = Pool::serial();
+    let total = 6usize;
+    let split = 3usize;
+    let mk_stream = || {
+        LabeledStream::new(TaskCorpus::synthetic(task.clone(), cfg.vocab, seq, 10, seed), batch, seed)
+    };
+    let mk_trainer =
+        || FtTrainer::new(cfg.clone(), task.clone(), batch, seq, 6, NativeOpt::adam(2e-3), seed);
+    let dev = TaskCorpus::synthetic(task.clone(), cfg.vocab, seq, 8, seed ^ 5);
+
+    // Uninterrupted run A.
+    let mut a = mk_trainer();
+    let mut st_a = mk_stream();
+    let losses_a: Vec<u32> = (0..total)
+        .map(|_| a.train_step(&st_a.next_batch(), &pool, None).unwrap().to_bits())
+        .collect();
+
+    // Run B: train to the split, checkpoint, resume into a FRESH
+    // trainer, fast-forward the labeled stream, continue.
+    let mut b1 = mk_trainer();
+    let mut st_b = mk_stream();
+    let mut losses_b: Vec<u32> = (0..split)
+        .map(|_| b1.train_step(&st_b.next_batch(), &pool, None).unwrap().to_bits())
+        .collect();
+    b1.save_checkpoint(&dir, "resume").unwrap();
+    drop(b1);
+
+    let mut b2 = mk_trainer();
+    b2.resume(&dir, "resume").unwrap();
+    assert_eq!(b2.step_no(), split);
+    let mut st_b2 = mk_stream();
+    st_b2.skip_batches(split);
+    losses_b.extend(
+        (split..total).map(|_| b2.train_step(&st_b2.next_batch(), &pool, None).unwrap().to_bits()),
+    );
+
+    assert_eq!(losses_a, losses_b, "resumed fine-tuning must replay the loss trajectory bitwise");
+    for (pi, (pa, pb)) in a.model.params.iter().zip(&b2.model.params).enumerate() {
+        assert_eq!(pa, pb, "param {pi}: resumed weights must match (head is last)");
+    }
+    // Dev evaluation is a pure function of (params, corpus, seed): the
+    // two runs must agree on every prediction, hence the exact hits.
+    let ea = a.evaluate(&dev, &pool);
+    let eb = b2.evaluate(&dev, &pool);
+    assert_eq!(ea.hits, eb.hits, "dev hits must match after resume");
+    assert_eq!(ea.score.to_bits(), eb.score.to_bits(), "dev metric must match bitwise");
+    let _ = std::fs::remove_dir_all(&dir);
+}
