@@ -4,10 +4,11 @@
 //! attention subsystem: `benchmarks/BENCH_tensor_attention.json` →
 //! BENCHMARKS.md §tensor_attention).
 //!
-//! Ops are dispatch-tagged (`flash[avx2]`, `fused_pamm[scalar]`, …) via
-//! explicit-dispatch entry points (`flash_attention_on`,
-//! `attend_compressed_on`), so no process-global `kernels::force` state
-//! is involved. Entries carry GFLOP/s (`AttnShape::flops`, causal),
+//! Ops are dispatch-tagged (`flash[avx2]`, `flash[avx2fma]`,
+//! `fused_pamm[scalar]`, …) via explicit-dispatch entry points
+//! (`flash_attention_on`, `attend_compressed_on`), so no process-global
+//! `kernels::force` state is involved; the FMA fast tier, when the host
+//! has it, is swept alongside the bit-exact native level. Entries carry GFLOP/s (`AttnShape::flops`, causal),
 //! and the fused rows attach their **measured** peak transient bytes
 //! (`memory::MemoryTracker`) — each (level, threads) cell runs on a
 //! fresh pool so the cold per-worker scratch growth is what gets
@@ -51,11 +52,13 @@ fn main() {
     let threads: &[usize] = &[1, 2, 4];
     let mut sink = BenchSink::new("tensor_attention");
 
+    let fast = Dispatch::fastest();
     println!(
-        "tensor_attention: native dispatch = {} (tiles Br={} Bc={})",
+        "tensor_attention: native dispatch = {} / fast tier = {} (tiles Br={} Bc={})",
         native.name(),
-        attention::BR,
-        attention::BC
+        if fast != native { fast.name() } else { "none" },
+        attention::br(),
+        attention::bc()
     );
 
     for &(b, h, l, d, k) in shapes {
@@ -93,6 +96,10 @@ fn main() {
         let mut plan: Vec<(Dispatch, usize)> = vec![(Dispatch::Scalar, 1)];
         if native != Dispatch::Scalar {
             plan.extend(threads.iter().map(|&t| (native, t)));
+        }
+        // Fast tier (FMA) rows for the per-tier GFLOP/s comparison.
+        if fast != native && fast.available() {
+            plan.extend(threads.iter().map(|&t| (fast, t)));
         }
         for &(disp, t) in &plan {
             let tag = disp.name();

@@ -4,11 +4,14 @@
 //! BENCH_tensor_kernels.json` → BENCHMARKS.md §tensor_kernels).
 //!
 //! Ops are tagged with the dispatch level that actually ran
-//! (`gemm_nn[avx2]`, `gemm_tn[scalar]`, …) so the persisted JSON is its
-//! own provenance record; `benchx` resolves `speedup_vs_scalar` against
-//! the `[scalar]` twin at flush (same thread count when present, else
-//! the 1-thread scalar baseline — scalar is only swept serially to keep
-//! the suite bounded). Entries carry GFLOP/s (`2·m·n·k / ns`).
+//! (`gemm_nn[avx2]`, `gemm_nn[avx2fma]`, `gemm_tn[scalar]`, …) so the
+//! persisted JSON is its own provenance record; `benchx` resolves
+//! `speedup_vs_scalar` against the `[scalar]` twin at flush (same
+//! thread count when present, else the 1-thread scalar baseline —
+//! scalar is only swept serially to keep the suite bounded). Entries
+//! carry GFLOP/s (`2·m·n·k / ns`). When the host has the FMA fast tier
+//! it is swept alongside the bit-exact native level, so the trail shows
+//! per-tier throughput side by side.
 //!
 //! Both ops go through the `Mat` entry points (`matmul_with`,
 //! `matmul_tn_with`), not raw kernel calls, so the suite measures the
@@ -52,14 +55,16 @@ fn main() {
     let threads: &[usize] = &[1, 2, 4];
     let mut sink = BenchSink::new("tensor_kernels");
 
+    let fast = Dispatch::fastest();
     println!(
-        "tensor_kernels: native dispatch = {} (tiles MR={} NR={}, blocks MC={} KC={} NC={})",
+        "tensor_kernels: native dispatch = {} / fast tier = {} (tiles MR={} NR={}, blocks MC={} KC={} NC={})",
         native.name(),
+        if fast != native { fast.name() } else { "none" },
         kernels::MR,
         kernels::NR,
-        kernels::MC,
-        kernels::KC,
-        kernels::NC
+        kernels::mc(),
+        kernels::kc(),
+        kernels::nc()
     );
 
     for &(m, k, n) in shapes {
@@ -78,6 +83,11 @@ fn main() {
         let mut plan: Vec<(Dispatch, usize)> = vec![(Dispatch::Scalar, 1)];
         if native != Dispatch::Scalar {
             plan.extend(threads.iter().map(|&t| (native, t)));
+        }
+        // Fast tier (FMA): tolerance-checked elsewhere; here it gets its
+        // own rows so BENCHMARKS.md shows the per-tier GFLOP/s delta.
+        if fast != native && fast.available() {
+            plan.extend(threads.iter().map(|&t| (fast, t)));
         }
         for &(d, t) in &plan {
             kernels::force(Some(d));
@@ -98,12 +108,18 @@ fn main() {
         }
         kernels::force(None);
 
+        let mut levels = vec![native];
+        if fast != native {
+            levels.push(fast);
+        }
         for op in ["gemm_nn", "gemm_tn"] {
-            if let Some(sp) = suite.ratio(
-                &format!("{op}[{}] t=1", native.name()),
-                &format!("{op}[scalar] t=1"),
-            ) {
-                println!("  {op}: {} vs scalar (single thread): {sp:.2}x", native.name());
+            for &lvl in &levels {
+                if let Some(sp) = suite.ratio(
+                    &format!("{op}[{}] t=1", lvl.name()),
+                    &format!("{op}[scalar] t=1"),
+                ) {
+                    println!("  {op}: {} vs scalar (single thread): {sp:.2}x", lvl.name());
+                }
             }
         }
     }

@@ -99,10 +99,66 @@ use crate::poolx::{self, Pool};
 use crate::tensor::kernels::{self, Dispatch, Workspace};
 use crate::tensor::{dot, Mat};
 
-/// Query-tile rows per online-softmax pass.
+/// Default query-tile rows per online-softmax pass.
 pub const BR: usize = 64;
-/// KV-tile rows per inner walk step.
+/// Default KV-tile rows per inner walk step.
 pub const BC: usize = 64;
+
+/// One attention tile configuration — the defaults, a config
+/// `[kernels]` overlay, or a `--tune` winner. Like the GEMM k-panel,
+/// Br/Bc changes regroup the online-softmax update order and therefore
+/// change result *bits* (same math within the flash oracle tolerance),
+/// so the process-wide values are mutated only at startup or inside
+/// `pamm kernels --tune`; tests that need non-default tiles call
+/// [`flash_attention_tiled`] instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnTiles {
+    pub br: usize,
+    pub bc: usize,
+}
+
+impl AttnTiles {
+    /// The compiled-in defaults (`BR`/`BC`).
+    pub fn defaults() -> AttnTiles {
+        AttnTiles { br: BR, bc: BC }
+    }
+
+    pub fn validate(self) -> Result<(), String> {
+        for (name, v) in [("br", self.br), ("bc", self.bc)] {
+            if v < 1 {
+                return Err(format!("attention tile {name} must be ≥ 1, got {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+static BR_RT: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(BR);
+static BC_RT: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(BC);
+
+/// Live query-tile rows (default [`BR`]).
+pub fn br() -> usize {
+    BR_RT.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Live KV-tile rows (default [`BC`]).
+pub fn bc() -> usize {
+    BC_RT.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// The tile configuration every attention entry point uses right now.
+pub fn attn_tiles() -> AttnTiles {
+    AttnTiles { br: br(), bc: bc() }
+}
+
+/// Install process-wide attention tiles (startup/`--tune` only — see
+/// [`AttnTiles`] for why mid-run mutation is forbidden).
+pub fn set_attn_tiles(t: AttnTiles) -> Result<(), String> {
+    t.validate()?;
+    BR_RT.store(t.br, std::sync::atomic::Ordering::Relaxed);
+    BC_RT.store(t.bc, std::sync::atomic::Ordering::Relaxed);
+    Ok(())
+}
 
 /// Masked-score sentinel: finite (so `m − m_new` never forms NaN) yet
 /// low enough that `exp(S − m_new)` underflows to exactly `+0.0` —
@@ -166,10 +222,10 @@ impl AttnShape {
     fn validate(&self) {
         assert!(self.head_dim >= 1, "attention: head_dim must be ≥ 1");
         assert!(
-            self.head_dim <= kernels::NC,
-            "attention: head_dim {} above the kernel NC block {}",
+            self.head_dim <= kernels::nc(),
+            "attention: head_dim {} above the kernel nc block {}",
             self.head_dim,
-            kernels::NC
+            kernels::nc()
         );
     }
 }
@@ -251,23 +307,26 @@ fn strip_pamm(
 /// `L_i = m_i + ln(l_i)` — the O(seq) softmax statistic the training
 /// forward saves so the backward can rebuild `P = exp(S − L)` per tile
 /// without storing scores (FlashAttention-2's residual).
+#[allow(clippy::too_many_arguments)]
 fn attend_head(
     d: Dispatch,
     src: &HeadSrc<'_>,
     seq: usize,
     dh: usize,
     causal: bool,
+    t: AttnTiles,
     ws: &mut Workspace,
     out: &mut [f32],
     mut lse: Option<&mut [f32]>,
 ) {
     debug_assert_eq!(out.len(), seq * dh);
+    let (tbr, tbc) = (t.br, t.bc);
     let scale = 1.0 / (dh as f32).sqrt();
     let Workspace { packs, attn, .. } = ws;
-    attn.ensure(BR.min(seq.max(1)), BC.min(seq.max(1)), dh);
+    attn.ensure(tbr.min(seq.max(1)), tbc.min(seq.max(1)), dh);
 
-    for i0 in (0..seq).step_by(BR) {
-        let br = BR.min(seq - i0);
+    for i0 in (0..seq).step_by(tbr) {
+        let br = tbr.min(seq - i0);
         match src {
             HeadSrc::Dense { q, .. } => strip_dense(&mut attn.qs, q, i0, br, dh, scale),
             HeadSrc::Pamm { gq, alpha, assign, col0, tok0, .. } => {
@@ -281,10 +340,10 @@ fn attend_head(
         // Causal: the last KV tile that can hold an unmasked column for
         // this query tile is the one containing row i0+br−1; tiles
         // beyond it are fully masked and contribute exactly nothing.
-        let ntiles = if causal { (i0 + br).div_ceil(BC) } else { seq.div_ceil(BC) };
+        let ntiles = if causal { (i0 + br).div_ceil(tbc) } else { seq.div_ceil(tbc) };
         for jt in 0..ntiles {
-            let j0 = jt * BC;
-            let bc = BC.min(seq - j0);
+            let j0 = jt * tbc;
+            let bc = tbc.min(seq - j0);
             // Kᵀ panel (d × bc): the GEMM B operand of S = Qs·Kᵀ. The
             // dense path transposes straight from the K slab (and will
             // read V in place below) — the strip copies exist for the
@@ -425,6 +484,7 @@ fn attend_head_bwd(
     seq: usize,
     dh: usize,
     causal: bool,
+    t: AttnTiles,
     ws: &mut Workspace,
     dq: &mut [f32],
     dk: &mut [f32],
@@ -433,17 +493,18 @@ fn attend_head_bwd(
     debug_assert_eq!(o.len(), seq * dh);
     debug_assert_eq!(dout.len(), seq * dh);
     debug_assert_eq!(lse.len(), seq);
+    let (tbr, tbc) = (t.br, t.bc);
     let scale = 1.0 / (dh as f32).sqrt();
     let Workspace { packs, attn, .. } = ws;
-    attn.ensure_bwd(BR.min(seq.max(1)), BC.min(seq.max(1)), dh, seq.max(1));
+    attn.ensure_bwd(tbr.min(seq.max(1)), tbc.min(seq.max(1)), dh, seq.max(1));
 
     // D_i = Σ_c dO·O, ascending c — one fixed-order pass per head.
     for i in 0..seq {
         attn.dvec[i] = dot(&dout[i * dh..(i + 1) * dh], &o[i * dh..(i + 1) * dh]);
     }
 
-    for j0 in (0..seq).step_by(BC) {
-        let bc = BC.min(seq - j0);
+    for j0 in (0..seq).step_by(tbc) {
+        let bc = tbc.min(seq - j0);
         // K strip + d×bc Kᵀ panel, V strip + d×bc Vᵀ panel. The dense
         // path reads its K/V slabs in place for the row-major GEMM
         // operands and transposes straight from the slab; the fused
@@ -468,8 +529,8 @@ fn attend_head_bwd(
                 }
             }
         }
-        for i0 in (0..seq).step_by(BR) {
-            let br = BR.min(seq - i0);
+        for i0 in (0..seq).step_by(tbr) {
+            let br = tbr.min(seq - i0);
             if causal && j0 > i0 + br - 1 {
                 continue; // every (i, j) in the tile has j > i — P ≡ 0
             }
@@ -615,7 +676,23 @@ pub fn flash_attention_on(
     shape: &AttnShape,
     pool: &Pool,
 ) -> Vec<f32> {
+    flash_attention_tiled(d, q, k, v, shape, pool, attn_tiles())
+}
+
+/// [`flash_attention_on`] with explicit Br/Bc tiles — how the autotune
+/// sweep and the tiled property tests try candidate tile shapes
+/// without mutating the process-wide [`attn_tiles`] state.
+pub fn flash_attention_tiled(
+    d: Dispatch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: &AttnShape,
+    pool: &Pool,
+    tiles: AttnTiles,
+) -> Vec<f32> {
     shape.validate();
+    tiles.validate().expect("attention: invalid tiles");
     let n = shape.qkv_len();
     assert_eq!(q.len(), n, "attention: q length vs shape");
     assert_eq!(k.len(), n, "attention: k length vs shape");
@@ -638,6 +715,7 @@ pub fn flash_attention_on(
                     sq,
                     dh,
                     shape.causal,
+                    tiles,
                     ws,
                     &mut out[(t - s) * slab..(t - s + 1) * slab],
                     None,
@@ -669,6 +747,7 @@ pub fn flash_attention_fwd_on(
     let (sq, dh) = (shape.seq, shape.head_dim);
     let slab = sq * dh;
     let tasks = shape.batch * shape.heads;
+    let tiles = attn_tiles();
     pool.for_tasks().map_chunks_flat2(tasks, slab, sq, |s, e, out, stats| {
         kernels::with_workspace(|ws| {
             for t in s..e {
@@ -684,6 +763,7 @@ pub fn flash_attention_fwd_on(
                     sq,
                     dh,
                     shape.causal,
+                    tiles,
                     ws,
                     &mut out[(t - s) * slab..(t - s + 1) * slab],
                     Some(&mut stats[(t - s) * sq..(t - s + 1) * sq]),
@@ -720,6 +800,7 @@ pub fn flash_attention_bwd_on(
     let tasks = shape.batch * shape.heads;
     assert_eq!(lse.len(), tasks * sq, "attention bwd: lse length vs shape");
     let slab = sq * dh;
+    let tiles = attn_tiles();
     let packed = pool.for_tasks().map_chunks_flat(tasks, 3 * slab, |s, e, win| {
         kernels::with_workspace(|ws| {
             for t in s..e {
@@ -741,6 +822,7 @@ pub fn flash_attention_bwd_on(
                     sq,
                     dh,
                     shape.causal,
+                    tiles,
                     ws,
                     dq,
                     dk,
@@ -907,6 +989,7 @@ fn attend_compressed_core(
     let (sq, dh) = (shape.seq, shape.head_dim);
     let slab = sq * dh;
     let tasks = shape.batch * shape.heads;
+    let tiles = attn_tiles();
     let run_tasks = |s: usize, e: usize, out: &mut [f32], mut stats: Option<&mut [f32]>| {
         kernels::with_workspace(|ws| {
             let before = ws_bytes(ws);
@@ -927,6 +1010,7 @@ fn attend_compressed_core(
                     sq,
                     dh,
                     shape.causal,
+                    tiles,
                     ws,
                     &mut out[(t - s) * slab..(t - s + 1) * slab],
                     stats.as_deref_mut().map(|st| &mut st[(t - s) * sq..(t - s + 1) * sq]),
@@ -1034,6 +1118,7 @@ pub fn attend_compressed_bwd_on(
     if let Some(t) = tracker {
         t.alloc(tasks * 3 * slab * 4); // the packed dQ/dK/dV grid output
     }
+    let tiles = attn_tiles();
     let packed = pool.for_tasks().map_chunks_flat(tasks, 3 * slab, |s, e, win| {
         kernels::with_workspace(|ws| {
             let before = ws_bytes(ws);
@@ -1061,6 +1146,7 @@ pub fn attend_compressed_bwd_on(
                     sq,
                     dh,
                     shape.causal,
+                    tiles,
                     ws,
                     dq,
                     dk,
@@ -1135,12 +1221,13 @@ fn attend_head_cached(
     let q_len = q.rows();
     debug_assert_eq!(out.len(), q_len * dh);
     debug_assert_eq!(kv_len, pos0 + q_len);
+    let (tbr, tbc) = (br(), bc());
     let scale = 1.0 / (dh as f32).sqrt();
     let Workspace { packs, attn, .. } = ws;
-    attn.ensure(BR.min(q_len.max(1)), BC.min(kv_len.max(1)), dh);
+    attn.ensure(tbr.min(q_len.max(1)), tbc.min(kv_len.max(1)), dh);
 
-    for i0 in (0..q_len).step_by(BR) {
-        let br = BR.min(q_len - i0);
+    for i0 in (0..q_len).step_by(tbr) {
+        let br = tbr.min(q_len - i0);
         for r in 0..br {
             let src = &q.row(i0 + r)[col0..col0 + dh];
             for (o, &s) in attn.qs[r * dh..(r + 1) * dh].iter_mut().zip(src) {
@@ -1154,10 +1241,10 @@ fn attend_head_cached(
         // Causal: walk cache tiles up to the one holding the last query
         // row's own position (self-attention includes the query row —
         // the caller folds a token into the cache *before* attending).
-        let ntiles = (pos0 + i0 + br).div_ceil(BC);
+        let ntiles = (pos0 + i0 + br).div_ceil(tbc);
         for jt in 0..ntiles {
-            let j0 = jt * BC;
-            let bc = BC.min(kv_len - j0);
+            let j0 = jt * tbc;
+            let bc = tbc.min(kv_len - j0);
             strip_pamm(&mut attn.ks, gk, alpha, assign, 0, col0, j0, bc, dh, 1.0);
             strip_pamm(&mut attn.vs, gv, alpha, assign, 0, col0, j0, bc, dh, 1.0);
             for c in 0..dh {
@@ -1266,7 +1353,7 @@ pub fn attend_cached_on(
     let dm = heads * head_dim;
     let kv_len = pos0 + q_len;
     assert!(head_dim >= 1, "attend_cached: head_dim must be ≥ 1");
-    assert!(head_dim <= kernels::NC, "attend_cached: head_dim above the kernel NC block");
+    assert!(head_dim <= kernels::nc(), "attend_cached: head_dim above the kernel NC block");
     assert_eq!(q.cols(), dm, "attend_cached: q width vs heads·head_dim");
     assert_eq!(gk.cols(), dm, "attend_cached: gk width vs heads·head_dim");
     assert_eq!(gv.cols(), dm, "attend_cached: gv width vs heads·head_dim");
@@ -1301,27 +1388,30 @@ pub fn attend_cached_on(
 // ---------------------------------------------------------------------------
 
 /// Per-thread tile-scratch ceiling of one attention tile walk, in
-/// bytes: the `AttnScratch` buffers at full (BR, BC, d) tiles plus the
+/// bytes: the `AttnScratch` buffers at full (Br, Bc, d) tiles plus the
 /// packing panels the two per-tile GEMMs can reserve (`Q·Kᵀ` packs
-/// BR×kc / kc×BC-strips with kc = min(d, KC); `P·V` packs BR×BC /
-/// BC-deep d-wide strips). Valid for head_dim ≤ NC (asserted at every
+/// Br×kc / kc×Bc-strips with kc = min(d, KC); `P·V` packs Br×Bc /
+/// Bc-deep d-wide strips). Valid for head_dim ≤ NC (asserted at every
 /// entry point). The model counts capacities, which is sound because
 /// both the scratch (`fit`) and the packing buffers (`zero_fit`) grow
-/// with `reserve_exact` — never amortized doubling.
+/// with `reserve_exact` — never amortized doubling. Reads the
+/// *runtime* Br/Bc/KC ([`attn_tiles`], [`kernels::tiles`]) so the
+/// bound tracks autotuned tile installs.
 pub fn tile_scratch_bytes(head_dim: usize) -> usize {
-    use kernels::{KC, MR, NR};
+    use kernels::{MR, NR};
+    let (t_br, t_bc, t_kc) = (br(), bc(), kernels::kc());
     let d = head_dim;
-    let tiles = BR * d        // qs
-        + BC * d              // ks
-        + BC * d              // vs
-        + d * BC              // kt
-        + BR * BC             // s
-        + BR * d              // acc
-        + 2 * BR;             // m, l
+    let tiles = t_br * d      // qs
+        + t_bc * d            // ks
+        + t_bc * d            // vs
+        + d * t_bc            // kt
+        + t_br * t_bc         // s
+        + t_br * d            // acc
+        + 2 * t_br;           // m, l
     let dp = d.div_ceil(NR) * NR; // zero-padded strip width of the P·V pack
-    let kc = d.min(KC); //          deepest k panel of the Q·Kᵀ pack
-    let pa = BR.div_ceil(MR) * MR * kc.max(BC);
-    let pb = BC.div_ceil(NR) * NR * kc.max(dp);
+    let kc = d.min(t_kc); //        deepest k panel of the Q·Kᵀ pack
+    let pa = t_br.div_ceil(MR) * MR * kc.max(t_bc);
+    let pb = t_bc.div_ceil(NR) * NR * kc.max(dp);
     4 * (tiles + pa + pb)
 }
 
@@ -1334,7 +1424,8 @@ pub fn tile_scratch_bytes(head_dim: usize) -> usize {
 /// Bc·max(kc, d̂)` padded — already dominates every backward pack too;
 /// only the explicit scratch grows.
 pub fn bwd_tile_scratch_bytes(head_dim: usize, seq: usize) -> usize {
-    tile_scratch_bytes(head_dim) + 4 * (head_dim * BC + BR * BC + seq)
+    let (t_br, t_bc) = (br(), bc());
+    tile_scratch_bytes(head_dim) + 4 * (head_dim * t_bc + t_br * t_bc + seq)
 }
 
 /// Ceiling for the *tracked* peak of [`pamm_qkv_attention_tracked`]:
@@ -1344,15 +1435,16 @@ pub fn bwd_tile_scratch_bytes(head_dim: usize, seq: usize) -> usize {
 /// projections reserve. The acceptance test asserts
 /// `measured peak ≤ this bound < materialized Q/K/V`.
 pub fn fused_peak_bound(comp: &Compressed, shape: &AttnShape, threads: usize) -> usize {
-    use kernels::{KC, MC, MR, NC, NR};
+    use kernels::{MR, NR};
+    let t = kernels::tiles();
     let n_in = comp.generators.cols();
     let dm = shape.d_model();
     // G = C·W packing: pa holds ≤ min(k, MC) MR-padded rows × one KC
     // panel of n_in; pb holds ≤ min(dm, NC) NR-padded columns × the
     // same panel depth (exact capacities — see `tile_scratch_bytes`).
-    let kc = n_in.min(KC);
-    let proj_pa = comp.k().min(MC).div_ceil(MR) * MR * kc;
-    let proj_pb = dm.min(NC).div_ceil(NR) * NR * kc;
+    let kc = n_in.min(t.kc);
+    let proj_pa = comp.k().min(t.mc).div_ceil(MR) * MR * kc;
+    let proj_pb = dm.min(t.nc).div_ceil(NR) * NR * kc;
     tile_scratch_bytes(shape.head_dim) * threads
         + comp.stored_bytes()
         + 3 * comp.k() * dm * 4

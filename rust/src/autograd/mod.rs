@@ -82,7 +82,7 @@ use crate::attention::{self, AttnShape};
 use crate::memory::MemoryLedger;
 use crate::pamm::{self, Compressed, Eps};
 use crate::poolx::{self, Pool};
-use crate::tensor::kernels::{self, Dispatch, KC, MC, MR, NC, NR};
+use crate::tensor::kernels::{self, Dispatch, MR, NR};
 use crate::tensor::Mat;
 
 /// Identifier of one activation value flowing through a [`Tape`].
@@ -1020,11 +1020,14 @@ pub fn mse_loss(out: &[f32], target: &[f32]) -> (f32, Vec<f32>) {
 
 /// Packed-panel bytes one `m×n×k` GEMM can reserve (the exact-growth
 /// capacity model of `tensor::kernels`: MR/NR-padded strips of one
-/// MC×KC / KC×NC block). Shared with `model`'s whole-net bound.
+/// MC×KC / KC×NC block). Shared with `model`'s whole-net bound. Reads
+/// the *runtime* KC/MC/NC ([`kernels::tiles`]) so the bound tracks
+/// autotuned tile installs.
 pub fn pack_bytes_bound(m: usize, n: usize, k: usize) -> usize {
-    let kc = k.min(KC);
-    let pa = m.min(MC).div_ceil(MR) * MR * kc;
-    let pb = n.min(NC).div_ceil(NR) * NR * kc;
+    let t = kernels::tiles();
+    let kc = k.min(t.kc);
+    let pa = m.min(t.mc).div_ceil(MR) * MR * kc;
+    let pb = n.min(t.nc).div_ceil(NR) * NR * kc;
     4 * (pa + pb)
 }
 

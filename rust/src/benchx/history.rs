@@ -1,0 +1,545 @@
+//! Append-only, commit-keyed benchmark history.
+//!
+//! The single-snapshot `BENCH_*.json` files say where the repo *is*;
+//! this module keeps where it has *been*: one JSON document holding,
+//! per suite, a list of entries keyed by commit — the
+//! `window.BENCHMARK_DATA` schema of github-action-benchmark's
+//! published `dev/bench/data.js` (pijama's trail is the exemplar), so
+//! the file drops straight into that ecosystem's charting page:
+//!
+//! ```json
+//! {
+//!   "lastUpdate": 1719930300000,
+//!   "repoUrl": "…",
+//!   "entries": {
+//!     "tensor_kernels": [
+//!       { "commit": { "id": "…", "message": "…", "timestamp": "…" },
+//!         "date": 1719930300000,
+//!         "tool": "cargo",
+//!         "benches": [
+//!           { "name": "gemm_nn[avx2] m=512 k=512 n=512 t=1",
+//!             "value": 123456.0, "range": "± 0", "unit": "ns/iter" } ] } ] }
+//! }
+//! ```
+//!
+//! Bench names are the flattened `op shape t=N` key, so one history
+//! line is one (op, shape, threads) series over commits. Re-recording
+//! under the same commit id *replaces* that commit's entry (renders are
+//! idempotent); different commits append.
+//!
+//! [`gate`] is the CI regression check: a fresh snapshot directory vs
+//! the newest committed entry per suite, failing on configurable
+//! ns/iter regressions — unless the baseline's `tool` is
+//! [`BOOTSTRAP_TOOL`], in which case the gate *skips with a visible
+//! notice* (comparing real timings against hand-estimated ones would
+//! gate on noise; see ROADMAP item 5).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::load_dir;
+use crate::jsonx::{self, Value};
+
+/// The `tool` tag marking entries whose timings were *not* produced by
+/// a real toolchain run (the standing-caveat bootstrap estimates).
+/// Real runs set `PAMM_BENCH_TOOL=cargo`.
+pub const BOOTSTRAP_TOOL: &str = "bootstrap-estimate";
+
+/// Commit identity of one history entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommitInfo {
+    pub id: String,
+    pub message: String,
+    pub timestamp: String,
+}
+
+impl CommitInfo {
+    /// Resolve from `PAMM_COMMIT` (CI sets it), else `git rev-parse` /
+    /// `git log -1` on the working tree, else `"unknown"` throughout.
+    pub fn detect() -> Self {
+        if let Ok(id) = std::env::var("PAMM_COMMIT") {
+            return Self {
+                id,
+                message: std::env::var("PAMM_COMMIT_MESSAGE").unwrap_or_default(),
+                timestamp: std::env::var("PAMM_COMMIT_TIMESTAMP").unwrap_or_default(),
+            };
+        }
+        let git = |args: &[&str]| {
+            std::process::Command::new("git")
+                .args(args)
+                .output()
+                .ok()
+                .filter(|o| o.status.success())
+                .and_then(|o| String::from_utf8(o.stdout).ok())
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+        };
+        Self {
+            id: git(&["rev-parse", "HEAD"]).unwrap_or_else(|| "unknown".into()),
+            message: git(&["log", "-1", "--format=%s"]).unwrap_or_default(),
+            timestamp: git(&["log", "-1", "--format=%cI"]).unwrap_or_default(),
+        }
+    }
+}
+
+/// One measured series point: the flattened `op shape t=N` name plus
+/// its ns/iter value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistBench {
+    pub name: String,
+    pub value: f64,
+    pub range: String,
+    pub unit: String,
+}
+
+/// One commit's measurement of one suite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistEntry {
+    pub commit: CommitInfo,
+    /// Milliseconds since the epoch at record time.
+    pub date: f64,
+    pub tool: String,
+    pub benches: Vec<HistBench>,
+}
+
+/// The whole trail: suite name → entries, oldest first.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub last_update: f64,
+    pub repo_url: String,
+    pub entries: BTreeMap<String, Vec<HistEntry>>,
+}
+
+fn now_ms() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0)
+}
+
+impl History {
+    /// Parse `path`; a missing file is the empty trail.
+    pub fn load(path: impl AsRef<Path>) -> Result<History> {
+        let path = path.as_ref();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => return Ok(History::default()),
+        };
+        let doc = jsonx::parse(&text)
+            .with_context(|| format!("parsing history {}", path.display()))?;
+        let mut entries = BTreeMap::new();
+        if let Some(suites) = doc.get("entries").as_obj() {
+            for (suite, list) in suites {
+                let mut parsed = Vec::new();
+                for e in list.as_arr().unwrap_or(&[]) {
+                    let c = e.get("commit");
+                    let mut benches = Vec::new();
+                    for b in e.get("benches").as_arr().unwrap_or(&[]) {
+                        benches.push(HistBench {
+                            name: b.req_str("name")?.to_string(),
+                            value: b.req_f64("value")?,
+                            range: b.get("range").as_str().unwrap_or("± 0").to_string(),
+                            unit: b.get("unit").as_str().unwrap_or("ns/iter").to_string(),
+                        });
+                    }
+                    parsed.push(HistEntry {
+                        commit: CommitInfo {
+                            id: c.get("id").as_str().unwrap_or("unknown").to_string(),
+                            message: c.get("message").as_str().unwrap_or("").to_string(),
+                            timestamp: c.get("timestamp").as_str().unwrap_or("").to_string(),
+                        },
+                        date: e.get("date").as_f64().unwrap_or(0.0),
+                        tool: e.get("tool").as_str().unwrap_or(BOOTSTRAP_TOOL).to_string(),
+                        benches,
+                    });
+                }
+                entries.insert(suite.clone(), parsed);
+            }
+        }
+        Ok(History {
+            last_update: doc.get("lastUpdate").as_f64().unwrap_or(0.0),
+            repo_url: doc.get("repoUrl").as_str().unwrap_or("").to_string(),
+            entries,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let suites: BTreeMap<String, Value> = self
+            .entries
+            .iter()
+            .map(|(suite, list)| {
+                let arr = list
+                    .iter()
+                    .map(|e| {
+                        jsonx::obj(vec![
+                            (
+                                "commit",
+                                jsonx::obj(vec![
+                                    ("id", jsonx::s(e.commit.id.clone())),
+                                    ("message", jsonx::s(e.commit.message.clone())),
+                                    ("timestamp", jsonx::s(e.commit.timestamp.clone())),
+                                ]),
+                            ),
+                            ("date", jsonx::num(e.date)),
+                            ("tool", jsonx::s(e.tool.clone())),
+                            (
+                                "benches",
+                                jsonx::arr(
+                                    e.benches
+                                        .iter()
+                                        .map(|b| {
+                                            jsonx::obj(vec![
+                                                ("name", jsonx::s(b.name.clone())),
+                                                ("value", jsonx::num(b.value)),
+                                                ("range", jsonx::s(b.range.clone())),
+                                                ("unit", jsonx::s(b.unit.clone())),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect();
+                (suite.clone(), jsonx::arr(arr))
+            })
+            .collect();
+        let doc = jsonx::obj(vec![
+            ("lastUpdate", jsonx::num(self.last_update)),
+            ("repoUrl", jsonx::s(self.repo_url.clone())),
+            ("entries", Value::Obj(suites)),
+        ]);
+        std::fs::write(path, format!("{doc}\n"))?;
+        Ok(())
+    }
+
+    /// Record one suite measurement under `commit`: the same commit id
+    /// replaces its previous entry, a new one appends.
+    pub fn record(&mut self, suite: &str, entry: HistEntry) {
+        let list = self.entries.entry(suite.to_string()).or_default();
+        match list.iter_mut().find(|e| e.commit.id == entry.commit.id) {
+            Some(slot) => *slot = entry,
+            None => list.push(entry),
+        }
+        self.last_update = now_ms();
+    }
+
+    /// Resolve `key` against one suite's entry list: `latest` (newest),
+    /// `prev` (one before newest), or a commit-id prefix.
+    pub fn resolve<'a>(list: &'a [HistEntry], key: &str) -> Result<&'a HistEntry> {
+        match key {
+            "latest" => list.last().context("history is empty"),
+            "prev" => {
+                (list.len() >= 2).then(|| &list[list.len() - 2]).context("no previous entry")
+            }
+            prefix => {
+                let hits: Vec<_> =
+                    list.iter().filter(|e| e.commit.id.starts_with(prefix)).collect();
+                match hits.len() {
+                    0 => bail!("no history entry matches commit prefix `{prefix}`"),
+                    1 => Ok(hits[0]),
+                    n => bail!("commit prefix `{prefix}` is ambiguous ({n} entries)"),
+                }
+            }
+        }
+    }
+}
+
+/// Build one suite's [`HistEntry`] from its freshly-flushed snapshot
+/// entries (names flattened to `op shape t=N`).
+fn entry_from_suite(rec: &super::SuiteRecord, commit: &CommitInfo, tool: &str) -> HistEntry {
+    HistEntry {
+        commit: commit.clone(),
+        date: now_ms(),
+        tool: tool.to_string(),
+        benches: rec
+            .entries
+            .iter()
+            .map(|e| HistBench {
+                name: format!("{} {} t={}", e.op, e.shape, e.threads),
+                value: e.ns_per_iter,
+                range: "± 0".into(),
+                unit: "ns/iter".into(),
+            })
+            .collect(),
+    }
+}
+
+/// The `tool` tag for new entries: `PAMM_BENCH_TOOL` (CI sets `cargo`
+/// when a real toolchain ran the suite), else [`BOOTSTRAP_TOOL`].
+pub fn bench_tool() -> String {
+    std::env::var("PAMM_BENCH_TOOL").unwrap_or_else(|_| BOOTSTRAP_TOOL.into())
+}
+
+/// Fold every `BENCH_*.json` under `dir` into the history at
+/// `history_path` (commit/tool resolved from env/git — see
+/// [`CommitInfo::detect`] and [`bench_tool`]). Returns the number of
+/// suites recorded.
+pub fn append_from_dir(dir: impl AsRef<Path>, history_path: impl AsRef<Path>) -> Result<usize> {
+    append_from_dir_as(dir, history_path, &CommitInfo::detect(), &bench_tool())
+}
+
+/// [`append_from_dir`] with explicit commit/tool (what the tests use —
+/// no env or subprocess reliance).
+pub fn append_from_dir_as(
+    dir: impl AsRef<Path>,
+    history_path: impl AsRef<Path>,
+    commit: &CommitInfo,
+    tool: &str,
+) -> Result<usize> {
+    let suites = load_dir(dir)?;
+    if suites.is_empty() {
+        bail!("no BENCH_*.json snapshots to record");
+    }
+    let mut hist = History::load(&history_path)?;
+    let n = suites.len();
+    for rec in &suites {
+        let entry = entry_from_suite(rec, commit, tool);
+        hist.record(&rec.suite, entry);
+    }
+    hist.save(&history_path)?;
+    Ok(n)
+}
+
+/// Markdown diff of two history entries (`a`, `b`: commit prefixes or
+/// `latest`/`prev`), per suite, per flattened bench name present in
+/// both. Positive delta = `b` is slower than `a`.
+pub fn compare_report(history_path: impl AsRef<Path>, a: &str, b: &str) -> Result<String> {
+    let hist = History::load(&history_path)?;
+    if hist.entries.is_empty() {
+        bail!("history {} has no entries", history_path.as_ref().display());
+    }
+    let mut out = String::new();
+    for (suite, list) in &hist.entries {
+        let (ea, eb) = (History::resolve(list, a)?, History::resolve(list, b)?);
+        out.push_str(&format!(
+            "## {suite}\n\n`{}` ({}) → `{}` ({})\n\n",
+            short(&ea.commit.id),
+            ea.tool,
+            short(&eb.commit.id),
+            eb.tool
+        ));
+        out.push_str("| bench | a (ns/iter) | b (ns/iter) | Δ |\n|---|---:|---:|---:|\n");
+        for ba in &ea.benches {
+            if let Some(bb) = eb.benches.iter().find(|x| x.name == ba.name) {
+                let delta = (bb.value - ba.value) / ba.value.max(1.0) * 100.0;
+                out.push_str(&format!(
+                    "| {} | {:.0} | {:.0} | {:+.1}% |\n",
+                    ba.name, ba.value, bb.value, delta
+                ));
+            }
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+fn short(id: &str) -> &str {
+    &id[..id.len().min(12)]
+}
+
+/// Outcome of [`gate`]: a human-readable report plus the hard verdict
+/// the CLI turns into a non-zero exit.
+#[derive(Debug)]
+pub struct GateVerdict {
+    pub report: String,
+    pub failed: bool,
+    /// True when the gate could not arm (bootstrap baseline / missing
+    /// history) and was skipped with a notice instead of failing.
+    pub skipped: bool,
+}
+
+/// Regression gate: compare a fresh snapshot directory against the
+/// newest history entry of each suite; any matched bench more than
+/// `pct`% slower fails. Skips (with a notice, `failed == false`) when
+/// the baseline entry's tool is [`BOOTSTRAP_TOOL`] or the suite has no
+/// history yet — estimates are not a gating baseline.
+pub fn gate(dir: impl AsRef<Path>, history_path: impl AsRef<Path>, pct: f64) -> Result<GateVerdict> {
+    let suites = load_dir(dir)?;
+    let hist = History::load(&history_path)?;
+    let mut report = String::new();
+    let mut failed = false;
+    let mut skipped = true;
+    for rec in &suites {
+        let Some(list) = hist.entries.get(&rec.suite) else {
+            report.push_str(&format!("gate: {}: SKIPPED (no history entry yet)\n", rec.suite));
+            continue;
+        };
+        let Ok(base) = History::resolve(list, "latest") else {
+            report.push_str(&format!("gate: {}: SKIPPED (empty history)\n", rec.suite));
+            continue;
+        };
+        if base.tool == BOOTSTRAP_TOOL {
+            report.push_str(&format!(
+                "gate: {}: SKIPPED — baseline {} is a bootstrap estimate, not a measured \
+                 run; the gate arms once a real-toolchain runner records the suite \
+                 (PAMM_BENCH_TOOL=cargo)\n",
+                rec.suite,
+                short(&base.commit.id)
+            ));
+            continue;
+        }
+        skipped = false;
+        let mut checked = 0usize;
+        let mut suite_failed = false;
+        for e in &rec.entries {
+            let name = format!("{} {} t={}", e.op, e.shape, e.threads);
+            if let Some(b) = base.benches.iter().find(|x| x.name == name) {
+                checked += 1;
+                let delta = (e.ns_per_iter - b.value) / b.value.max(1.0) * 100.0;
+                if delta > pct {
+                    suite_failed = true;
+                    report.push_str(&format!(
+                        "gate: {}: FAIL {} — {:.0} ns/iter vs baseline {:.0} ({:+.1}% > {pct}%)\n",
+                        rec.suite, name, e.ns_per_iter, b.value, delta
+                    ));
+                }
+            }
+        }
+        failed |= suite_failed;
+        report.push_str(&format!(
+            "gate: {}: {} ({checked} benches vs {})\n",
+            rec.suite,
+            if suite_failed { "checked with failures" } else { "OK" },
+            short(&base.commit.id)
+        ));
+    }
+    if skipped && !failed {
+        report.push_str("gate: all suites skipped — nothing gated this run\n");
+    }
+    Ok(GateVerdict { report, failed, skipped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchx::{BenchResult, BenchSink};
+    use std::time::Duration;
+
+    fn mk(us: u64) -> BenchResult {
+        BenchResult {
+            name: "x".into(),
+            iters: 5,
+            median: Duration::from_micros(us),
+            p10: Duration::from_micros(us),
+            p90: Duration::from_micros(us),
+            mean: Duration::from_micros(us),
+        }
+    }
+
+    fn commit(id: &str) -> CommitInfo {
+        CommitInfo { id: id.into(), message: format!("commit {id}"), timestamp: "t".into() }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pamm_hist_{tag}_{}", std::process::id()))
+    }
+
+    fn snapshot(dir: &std::path::Path, us: u64) {
+        let mut sink = BenchSink::new("unit_kernels");
+        sink.record("gemm_nn[avx2]", "m=64 k=64 n=64", 1, &mk(us));
+        sink.flush_to(dir).unwrap();
+    }
+
+    #[test]
+    fn append_replaces_same_commit_and_appends_new() {
+        let dir = tmp("append");
+        let hist_path = dir.join("history.json");
+        snapshot(&dir, 100);
+        assert_eq!(append_from_dir_as(&dir, &hist_path, &commit("aaa111"), "cargo").unwrap(), 1);
+        // Same commit again → replaced, not duplicated.
+        snapshot(&dir, 120);
+        append_from_dir_as(&dir, &hist_path, &commit("aaa111"), "cargo").unwrap();
+        let h = History::load(&hist_path).unwrap();
+        assert_eq!(h.entries["unit_kernels"].len(), 1);
+        assert_eq!(h.entries["unit_kernels"][0].benches[0].value, 120_000.0);
+        assert_eq!(h.entries["unit_kernels"][0].benches[0].name, "gemm_nn[avx2] m=64 k=64 n=64 t=1");
+        // New commit → appended; latest/prev/prefix resolution works.
+        snapshot(&dir, 90);
+        append_from_dir_as(&dir, &hist_path, &commit("bbb222"), "cargo").unwrap();
+        let h = History::load(&hist_path).unwrap();
+        let list = &h.entries["unit_kernels"];
+        assert_eq!(list.len(), 2);
+        assert_eq!(History::resolve(list, "latest").unwrap().commit.id, "bbb222");
+        assert_eq!(History::resolve(list, "prev").unwrap().commit.id, "aaa111");
+        assert_eq!(History::resolve(list, "aaa").unwrap().commit.id, "aaa111");
+        assert!(History::resolve(list, "zzz").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compare_reports_the_delta() {
+        let dir = tmp("cmp");
+        let hist_path = dir.join("history.json");
+        snapshot(&dir, 100);
+        append_from_dir_as(&dir, &hist_path, &commit("aaa111"), "cargo").unwrap();
+        snapshot(&dir, 150);
+        append_from_dir_as(&dir, &hist_path, &commit("bbb222"), "cargo").unwrap();
+        let rep = compare_report(&hist_path, "prev", "latest").unwrap();
+        assert!(rep.contains("unit_kernels"), "{rep}");
+        assert!(rep.contains("+50.0%"), "{rep}");
+        let rev = compare_report(&hist_path, "latest", "prev").unwrap();
+        assert!(rev.contains("-33.3%"), "{rev}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gate_skips_bootstrap_and_fails_real_regressions() {
+        let dir = tmp("gate");
+        let hist_path = dir.join("history.json");
+        // Bootstrap baseline → skip, never fail.
+        snapshot(&dir, 100);
+        append_from_dir_as(&dir, &hist_path, &commit("aaa111"), BOOTSTRAP_TOOL).unwrap();
+        snapshot(&dir, 500);
+        let v = gate(&dir, &hist_path, 15.0).unwrap();
+        assert!(!v.failed && v.skipped, "{}", v.report);
+        assert!(v.report.contains("SKIPPED"), "{}", v.report);
+        // Real baseline → within threshold passes, beyond fails.
+        snapshot(&dir, 100);
+        append_from_dir_as(&dir, &hist_path, &commit("aaa111"), "cargo").unwrap();
+        snapshot(&dir, 110);
+        let v = gate(&dir, &hist_path, 15.0).unwrap();
+        assert!(!v.failed && !v.skipped, "{}", v.report);
+        snapshot(&dir, 130);
+        let v = gate(&dir, &hist_path, 15.0).unwrap();
+        assert!(v.failed, "{}", v.report);
+        assert!(v.report.contains("FAIL"), "{}", v.report);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn history_roundtrips_through_disk() {
+        let dir = tmp("rt");
+        let path = dir.join("history.json");
+        let mut h = History { repo_url: "https://example.invalid/pamm".into(), ..Default::default() };
+        h.record(
+            "s",
+            HistEntry {
+                commit: commit("c0ffee"),
+                date: 1.0,
+                tool: "cargo".into(),
+                benches: vec![HistBench {
+                    name: "op shape t=1".into(),
+                    value: 42.0,
+                    range: "± 0".into(),
+                    unit: "ns/iter".into(),
+                }],
+            },
+        );
+        h.save(&path).unwrap();
+        let h2 = History::load(&path).unwrap();
+        assert_eq!(h2.repo_url, h.repo_url);
+        assert_eq!(h2.entries["s"][0], h.entries["s"][0]);
+        // Missing file loads as the empty trail.
+        assert!(History::load(dir.join("absent.json")).unwrap().entries.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -16,6 +16,7 @@
 //! `BENCHMARKS.md` via `pamm bench-report` — the repo's perf trajectory
 //! is a diffable artifact, not folklore.
 
+pub mod history;
 pub mod report;
 
 use std::path::{Path, PathBuf};
@@ -182,13 +183,22 @@ impl Suite {
 }
 
 /// Host fingerprint stored alongside persisted entries so BENCHMARKS.md
-/// can say where a number came from.
+/// can say where a number came from (rvr-style provenance: CPU model,
+/// the SIMD levels `Dispatch` actually detected, thread count,
+/// toolchain).
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostInfo {
     pub os: String,
     pub arch: String,
     pub cpus: usize,
     pub cpu_model: String,
+    /// Space-separated dispatch levels available on this host
+    /// (`scalar sse2 avx2 avx2fma …`) — detected, not configured.
+    pub features: String,
+    /// `rustc --version` of the toolchain that built/ran the suite, or
+    /// `unknown` when no toolchain is on PATH (the bootstrap-estimate
+    /// case).
+    pub toolchain: String,
 }
 
 impl HostInfo {
@@ -202,11 +212,28 @@ impl HostInfo {
                     .and_then(|l| l.split(':').nth(1).map(|s| s.trim().to_string()))
             })
             .unwrap_or_else(|| "unknown".into());
+        let features = crate::tensor::kernels::Dispatch::ALL_LEVELS
+            .iter()
+            .filter(|d| d.available())
+            .map(|d| d.name())
+            .collect::<Vec<_>>()
+            .join(" ");
+        let toolchain = std::process::Command::new("rustc")
+            .arg("--version")
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".into());
         Self {
             os: std::env::consts::OS.into(),
             arch: std::env::consts::ARCH.into(),
             cpus,
             cpu_model,
+            features,
+            toolchain,
         }
     }
 }
@@ -382,6 +409,8 @@ impl BenchSink {
                     ("arch", jsonx::s(self.host.arch.clone())),
                     ("cpus", jsonx::num(self.host.cpus as f64)),
                     ("cpu_model", jsonx::s(self.host.cpu_model.clone())),
+                    ("features", jsonx::s(self.host.features.clone())),
+                    ("toolchain", jsonx::s(self.host.toolchain.clone())),
                 ]),
             ),
             ("entries", jsonx::arr(resolved.iter().map(entry_json).collect())),
@@ -445,6 +474,10 @@ pub fn load_file(path: impl AsRef<Path>) -> anyhow::Result<SuiteRecord> {
             arch: host.get("arch").as_str().unwrap_or("unknown").to_string(),
             cpus: host.get("cpus").as_usize().unwrap_or(0),
             cpu_model: host.get("cpu_model").as_str().unwrap_or("unknown").to_string(),
+            // Pre-PR-10 files carry neither field — "unknown" keeps the
+            // committed trail loadable.
+            features: host.get("features").as_str().unwrap_or("unknown").to_string(),
+            toolchain: host.get("toolchain").as_str().unwrap_or("unknown").to_string(),
         },
         entries,
     })

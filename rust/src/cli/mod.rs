@@ -234,23 +234,50 @@ USAGE:
                                       # order — peaks stay per-microbatch)
   pamm memory [--model M] [--batch N] [--seq N] [--r-inv N]
   pamm kernels [--artifacts DIR]      # validate native vs Pallas artifacts
-  pamm kernels --probe                # print SIMD dispatch level, tile
-                                      # parameters (GEMM + attention Br/Bc),
-                                      # GFLOP/s spot checks (no artifacts
-                                      # needed)
+  pamm kernels --probe                # print SIMD dispatch levels (incl.
+                                      # the fast tier), tile parameters
+                                      # (GEMM + attention Br/Bc), GFLOP/s
+                                      # spot checks (no artifacts needed)
+  pamm kernels --tune [--probe] [--quick] [--config FILE]
+                                      # sweep KC/MC/NC + attention Br/Bc,
+                                      # pick winners by measured GFLOP/s,
+                                      # persist them as the [kernels]
+                                      # section of FILE (default pamm.toml;
+                                      # loaded at startup, env-overridable)
   pamm list [--artifacts DIR]         # list manifest artifacts
-  pamm bench-report [--dir DIR] [--out FILE]
+  pamm bench-report [--dir DIR] [--out FILE] [--history FILE]
                                       # render BENCH_*.json -> BENCHMARKS.md
                                       # (default: benchmarks/ -> BENCHMARKS.md;
-                                      #  --out - prints to stdout)
+                                      #  --out - prints to stdout) and append
+                                      # the run to the commit-keyed history
+                                      # (default benchmarks/history.json)
+  pamm bench-report --compare A B [--history FILE]
+                                      # diff two history entries (commit
+                                      # prefixes, or latest/prev)
+  pamm bench-report --gate PCT [--dir DIR] [--history FILE]
+                                      # fail if any fresh timing regresses
+                                      # >PCT% vs the newest history entry;
+                                      # skips (with a notice) when the
+                                      # baseline is a bootstrap estimate
   pamm help
 
 GLOBAL FLAGS:
   --threads N    worker threads for the native compute pool (poolx);
                  0 or unset = auto (available parallelism, PAMM_THREADS
                  env respected). Results are bit-identical at any N.
-  PAMM_SIMD      env var: scalar|sse2|avx2|native (default native) —
-                 GEMM dispatch level; every level is bit-identical.
+  --config FILE  config file read at startup for the [kernels] tile
+                 section (default pamm.toml; missing file = defaults).
+  PAMM_SIMD      env var: scalar|sse2|avx2|avx2fma|avx512|native
+                 (default native) — GEMM dispatch level. scalar/sse2/
+                 avx2/native are bit-identical; avx2fma/avx512 are the
+                 opt-in fast tier, validated against the scalar oracle
+                 within a k-depth relative tolerance instead of bit
+                 equality. Unknown values are rejected at startup.
+  PAMM_KC/PAMM_MC/PAMM_NC
+                 env vars: override the GEMM cache-tile sizes for this
+                 run (beats the [kernels] config section).
+  PAMM_BR/PAMM_BC
+                 env vars: override the attention Br/Bc tile sizes.
 ";
 
 #[cfg(test)]

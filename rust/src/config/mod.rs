@@ -11,6 +11,8 @@ pub mod toml_lite;
 
 use anyhow::{bail, Result};
 
+use crate::attention::{self, AttnTiles};
+use crate::tensor::kernels::{self, Tiles};
 use toml_lite::TomlDoc;
 
 /// Which compression runs in the QKV backward — mirrors the python
@@ -198,6 +200,106 @@ impl RunConfig {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Kernel tile overlay ([kernels] section + PAMM_* env)
+// ---------------------------------------------------------------------------
+
+/// Tile overlay: the persistence half of `pamm kernels --tune`.
+/// Precedence is compiled-in default < config file `[kernels]` section
+/// < `PAMM_KC`/`PAMM_MC`/`PAMM_NC`/`PAMM_BR`/`PAMM_BC` env vars; fields
+/// left `None` keep the lower layer's value. [`KernelTiles::apply`]
+/// installs the result process-wide — called once at `pamm` startup
+/// (before any pool spins up), which is what keeps the "tiles mutate
+/// only at startup or `--tune`" determinism contract intact.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelTiles {
+    pub kc: Option<usize>,
+    pub mc: Option<usize>,
+    pub nc: Option<usize>,
+    pub br: Option<usize>,
+    pub bc: Option<usize>,
+}
+
+impl KernelTiles {
+    /// Read the `[kernels]` section of a parsed document (absent keys
+    /// stay `None`).
+    pub fn from_toml(doc: &TomlDoc) -> Self {
+        let g = |key: &str| doc.get_int("kernels", key).map(|v| v.max(0) as usize);
+        Self { kc: g("kc"), mc: g("mc"), nc: g("nc"), br: g("br"), bc: g("bc") }
+    }
+
+    /// Parse a config file's `[kernels]` section; a missing file is an
+    /// empty overlay (the CLI applies tiles even when no `--config` was
+    /// given, so env-only overrides still work).
+    pub fn load_file(path: &str) -> Result<Self> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => return Ok(Self::default()),
+        };
+        Ok(Self::from_toml(&toml_lite::parse(&text)?))
+    }
+
+    /// Layer the `PAMM_KC`/`PAMM_MC`/`PAMM_NC`/`PAMM_BR`/`PAMM_BC` env
+    /// vars over this overlay. Unparsable values are a friendly error,
+    /// not a silent fallback — same contract as `PAMM_SIMD`.
+    pub fn env_overlay(mut self) -> Result<Self> {
+        for (var, slot) in [
+            ("PAMM_KC", &mut self.kc),
+            ("PAMM_MC", &mut self.mc),
+            ("PAMM_NC", &mut self.nc),
+            ("PAMM_BR", &mut self.br),
+            ("PAMM_BC", &mut self.bc),
+        ] {
+            if let Ok(raw) = std::env::var(var) {
+                match raw.trim().parse::<usize>() {
+                    Ok(v) => *slot = Some(v),
+                    Err(_) => bail!("{var}={raw}: expected a positive integer tile size"),
+                }
+            }
+        }
+        Ok(self)
+    }
+
+    /// True when every field is `None` — nothing to install.
+    pub fn is_empty(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Install the overlay process-wide (defaults fill the `None`
+    /// gaps). Validation errors from the kernel/attention setters are
+    /// surfaced verbatim.
+    pub fn apply(&self) -> Result<()> {
+        if self.is_empty() {
+            return Ok(());
+        }
+        let d = Tiles::defaults();
+        let t = Tiles {
+            kc: self.kc.unwrap_or(d.kc),
+            mc: self.mc.unwrap_or(d.mc),
+            nc: self.nc.unwrap_or(d.nc),
+        };
+        kernels::set_tiles(t).map_err(anyhow::Error::msg)?;
+        let ad = AttnTiles::defaults();
+        let at = AttnTiles { br: self.br.unwrap_or(ad.br), bc: self.bc.unwrap_or(ad.bc) };
+        attention::set_attn_tiles(at).map_err(anyhow::Error::msg)?;
+        Ok(())
+    }
+
+    /// Render as a `[kernels]` TOML section — what `--tune` persists
+    /// (only the set fields are written).
+    pub fn toml_section(&self) -> String {
+        let mut s = String::from("[kernels]\n");
+        for (key, v) in
+            [("kc", self.kc), ("mc", self.mc), ("nc", self.nc), ("br", self.br), ("bc", self.bc)]
+        {
+            if let Some(v) = v {
+                s.push_str(&format!("{key} = {v}\n"));
+            }
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,5 +359,28 @@ mod tests {
         assert_eq!(c.threads, 3);
         assert_eq!(c.variant.tag(), "pamm512");
         assert!(c.variant.eps.is_none());
+    }
+
+    #[test]
+    fn kernel_tiles_overlay_roundtrip() {
+        // Parse → render → parse is a fixed point, and absent keys stay
+        // None. apply() with non-default values is deliberately NOT
+        // exercised here: it mutates process-wide tile state and would
+        // race with every other test (see `KernelTiles` docs).
+        let doc = toml_lite::parse("[kernels]\nkc = 384\nbr = 32\n").unwrap();
+        let t = KernelTiles::from_toml(&doc);
+        assert_eq!(t.kc, Some(384));
+        assert_eq!(t.br, Some(32));
+        assert_eq!(t.mc, None);
+        assert!(!t.is_empty());
+        assert!(KernelTiles::default().is_empty());
+        let rendered = t.toml_section();
+        let t2 = KernelTiles::from_toml(&toml_lite::parse(&rendered).unwrap());
+        assert_eq!(t, t2);
+        // Empty overlay applies as a no-op (no global mutation).
+        KernelTiles::default().apply().unwrap();
+        // A file without a [kernels] section is the empty overlay.
+        let none = KernelTiles::from_toml(&toml_lite::parse("[run]\nsteps = 1\n").unwrap());
+        assert!(none.is_empty());
     }
 }

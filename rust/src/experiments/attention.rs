@@ -67,8 +67,8 @@ pub fn native_table(quick: bool, out: &str) -> Result<()> {
         "native attention (threads={}, dispatch={}, tiles Br={} Bc={}):",
         pool.threads(),
         kernels::active().name(),
-        attention::BR,
-        attention::BC
+        attention::br(),
+        attention::bc()
     );
     println!(
         "{:<16} {:>10} {:>12} {:>14} {:>12}",

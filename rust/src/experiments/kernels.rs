@@ -19,13 +19,14 @@ use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use anyhow::{bail, Context};
 
-use crate::attention::{self, AttnShape};
+use crate::attention::{self, AttnShape, AttnTiles};
 use crate::benchx::{bench_fn, BenchOpts};
+use crate::config::KernelTiles;
 use crate::pamm::{self, Eps};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{ArtifactMeta, Engine, HostTensor};
 use crate::rngx::Xoshiro256;
-use crate::tensor::kernels::{self, Dispatch, KC, LADDER, MC, MR, NC, NR};
+use crate::tensor::kernels::{self, Dispatch, Tiles, MR, NR};
 use crate::tensor::Mat;
 
 #[cfg(feature = "pjrt")]
@@ -60,7 +61,7 @@ pub fn probe() -> String {
     let mut out = String::new();
     let env = std::env::var("PAMM_SIMD").ok();
     let avail: Vec<&str> =
-        LADDER.iter().filter(|d| d.available()).map(|d| d.name()).collect();
+        Dispatch::ALL_LEVELS.iter().filter(|d| d.available()).map(|d| d.name()).collect();
     let _ = writeln!(out, "tensor::kernels probe");
     let _ = writeln!(
         out,
@@ -69,9 +70,16 @@ pub fn probe() -> String {
         env.as_deref().unwrap_or("unset → native"),
         avail.join(" ")
     );
+    let t = kernels::tiles();
+    let defaults = Tiles::defaults();
     let _ = writeln!(
         out,
-        "  tiles: MR={MR} NR={NR}  blocks: MC={MC} KC={KC} NC={NC}  (f32, no-FMA determinism contract)"
+        "  tiles: MR={MR} NR={NR}  blocks: MC={} KC={} NC={}  ({}; scalar/sse2/avx2 bit-exact, \
+         avx2fma/avx512 tolerance-checked)",
+        t.mc,
+        t.kc,
+        t.nc,
+        if t == defaults { "compiled-in defaults" } else { "tuned — see [kernels] config" },
     );
 
     let dim = 512usize;
@@ -87,7 +95,7 @@ pub fn probe() -> String {
     };
     let _ = writeln!(out, "  spot check: gemm_nn {dim}x{dim}x{dim}, single thread");
     let mut scalar_ns = None;
-    for d in LADDER {
+    for d in Dispatch::ALL_LEVELS {
         if !d.available() {
             continue;
         }
@@ -138,8 +146,8 @@ pub fn probe() -> String {
     let _ = writeln!(
         out,
         "  attention: tiles Br={} Bc={}  grid: (batch·head) tasks, min-chunk {} → {} head(s) per task at {} thread(s)",
-        attention::BR,
-        attention::BC,
+        attention::br(),
+        attention::bc(),
         crate::poolx::TASK_MIN_CHUNK,
         tasks.div_ceil(tasks.min(threads).max(1)),
         threads
@@ -159,7 +167,7 @@ pub fn probe() -> String {
         shape.batch, shape.heads, shape.seq, shape.head_dim
     );
     let mut scalar_ns = None;
-    for d in LADDER {
+    for d in Dispatch::ALL_LEVELS {
         if !d.available() {
             continue;
         }
@@ -190,8 +198,8 @@ pub fn probe() -> String {
     let _ = writeln!(
         out,
         "  attention backward: same Br={}/Bc={} tiles, 5 GEMMs/tile, per-thread scratch {} (d={}, l={}; fwd {})",
-        attention::BR,
-        attention::BC,
+        attention::br(),
+        attention::bc(),
         crate::memory::fmt_bytes(attention::bwd_tile_scratch_bytes(shape.head_dim, shape.seq)),
         shape.head_dim,
         shape.seq,
@@ -207,7 +215,7 @@ pub fn probe() -> String {
         attention::flash_attention_fwd_on(Dispatch::Scalar, &q, &k, &v, &shape, &serial);
     let dout = mk_qkv(&mut rng);
     let mut scalar_ns = None;
-    for d in LADDER {
+    for d in Dispatch::ALL_LEVELS {
         if !d.available() {
             continue;
         }
@@ -234,6 +242,246 @@ pub fn probe() -> String {
         );
     }
     out
+}
+
+/// Single-thread GFLOP/s of one `dim³` GEMM under explicit tiles.
+fn gemm_tile_gflops(d: Dispatch, t: Tiles, dim: usize, a: &Mat, b: &Mat, opts: &BenchOpts) -> f64 {
+    let flops = 2.0 * (dim as f64).powi(3);
+    let mut c = Mat::zeros(dim, dim);
+    let r = bench_fn("tune", opts, || {
+        c.data_mut().fill(0.0);
+        kernels::with_workspace(|ws| {
+            kernels::gemm_into_tiled(
+                d,
+                t,
+                false,
+                dim,
+                dim,
+                dim,
+                a.data(),
+                dim,
+                b.data(),
+                dim,
+                c.data_mut(),
+                dim,
+                &mut ws.packs,
+            );
+        });
+        std::hint::black_box(c.data().first().copied());
+    });
+    flops / (r.median.as_nanos() as f64).max(1.0)
+}
+
+/// One `dim³` GEMM under explicit tiles (result matrix, for the
+/// winner's tolerance validation).
+fn gemm_tile_once(d: Dispatch, t: Tiles, dim: usize, a: &Mat, b: &Mat) -> Vec<f32> {
+    let mut c = Mat::zeros(dim, dim);
+    kernels::with_workspace(|ws| {
+        kernels::gemm_into_tiled(
+            d,
+            t,
+            false,
+            dim,
+            dim,
+            dim,
+            a.data(),
+            dim,
+            b.data(),
+            dim,
+            c.data_mut(),
+            dim,
+            &mut ws.packs,
+        );
+    });
+    c.data().to_vec()
+}
+
+/// `pamm kernels --tune`: runtime tile autotuning. Sweeps KC/MC/NC
+/// candidates around the compiled-in defaults on a square GEMM and
+/// attention Br/Bc candidates on a flash-forward spot shape, one sweep
+/// per dispatch tier in play (the bit-exact [`Dispatch::native`] level
+/// and, when different, the fast-tier [`Dispatch::fastest`]), picking
+/// winners by measured single-thread GFLOP/s at the *active* level —
+/// the one this process would actually run. Winners are
+/// tolerance-validated against the default tiling's scalar result
+/// ([`kernels::tol_check`] — KC regroups the k-panel accumulation, so
+/// bit equality is deliberately not required), persisted as the
+/// `[kernels]` section of `cfg_path` (other sections preserved
+/// verbatim), and installed process-wide.
+pub fn tune(cfg_path: &str, quick: bool) -> Result<String> {
+    let mut out = String::new();
+    let dim = if quick { 256 } else { 512 };
+    let (kcs, mcs, ncs): (&[usize], &[usize], &[usize]) = if quick {
+        (&[256, 384], &[128], &[2048])
+    } else {
+        (&[128, 256, 384, 512], &[64, 128, 256], &[1024, 2048, 4096])
+    };
+    let brbcs: &[usize] = if quick { &[32, 64] } else { &[32, 64, 128] };
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        min_iters: if quick { 2 } else { 3 },
+        max_iters: if quick { 3 } else { 5 },
+        max_total: std::time::Duration::from_secs(2),
+    };
+    let mut rng = Xoshiro256::new(0x7E5E);
+    let a = Mat::random_normal(dim, dim, 1.0, &mut rng);
+    let b = Mat::random_normal(dim, dim, 1.0, &mut rng);
+
+    // The tiers worth measuring: the bit-exact default plus the fast
+    // tier when the host has one. Winners are taken from the level the
+    // process actually dispatches to (`active`), so PAMM_SIMD steers
+    // what gets persisted.
+    let active = kernels::active();
+    let mut levels = vec![Dispatch::native()];
+    if Dispatch::fastest() != Dispatch::native() {
+        levels.push(Dispatch::fastest());
+    }
+    if !levels.contains(&active) {
+        levels.push(active);
+    }
+
+    let _ = writeln!(out, "kernel tile autotune (gemm {dim}\u{b3}, single thread)");
+    let mut winner = Tiles::defaults();
+    let mut winner_gf = 0.0;
+    for &d in &levels {
+        let mut best = (Tiles::defaults(), 0.0f64);
+        for &kc in kcs {
+            for &mc in mcs {
+                for &nc in ncs {
+                    let t = Tiles { kc, mc, nc };
+                    let gf = gemm_tile_gflops(d, t, dim, &a, &b, &opts);
+                    if gf > best.1 {
+                        best = (t, gf);
+                    }
+                }
+            }
+        }
+        let _ = writeln!(
+            out,
+            "  {:<7} best KC={} MC={} NC={}  {:>7.2} GFLOP/s (default {:.2})",
+            d.name(),
+            best.0.kc,
+            best.0.mc,
+            best.0.nc,
+            best.1,
+            gemm_tile_gflops(d, Tiles::defaults(), dim, &a, &b, &opts),
+        );
+        if d == active {
+            (winner, winner_gf) = best;
+        }
+    }
+    // Winner must agree with the default-tiling scalar oracle within
+    // the k-depth tolerance bound before it is allowed to persist.
+    let want = gemm_tile_once(Dispatch::Scalar, Tiles::defaults(), dim, &a, &b);
+    let got = gemm_tile_once(active, winner, dim, &a, &b);
+    kernels::tol_check(&got, &want, dim).map_err(anyhow::Error::msg)?;
+
+    // Attention Br/Bc sweep on the flash forward spot shape.
+    let shape = AttnShape::new(1, 4, if quick { 128 } else { 256 }, 64, true);
+    let total = shape.qkv_len();
+    let mk_qkv = |rng: &mut Xoshiro256| {
+        let mut v = vec![0f32; total];
+        rng.fill_normal_f32(&mut v, 1.0);
+        v
+    };
+    let (q, k, v) = (mk_qkv(&mut rng), mk_qkv(&mut rng), mk_qkv(&mut rng));
+    let serial = crate::poolx::Pool::serial();
+    let aflops = shape.flops();
+    let _ = writeln!(
+        out,
+        "attention tile autotune (flash fwd b={} h={} l={} d={}, single thread)",
+        shape.batch, shape.heads, shape.seq, shape.head_dim
+    );
+    let mut attn_winner = AttnTiles::defaults();
+    let mut attn_gf = 0.0f64;
+    for &br in brbcs {
+        for &bc in brbcs {
+            let t = AttnTiles { br, bc };
+            let r = bench_fn("tune", &opts, || {
+                std::hint::black_box(attention::flash_attention_tiled(
+                    active, &q, &k, &v, &shape, &serial, t,
+                ));
+            });
+            let gf = aflops / (r.median.as_nanos() as f64).max(1.0);
+            if gf > attn_gf {
+                (attn_winner, attn_gf) = (t, gf);
+            }
+        }
+    }
+    let _ = writeln!(
+        out,
+        "  {:<7} best Br={} Bc={}  {:>7.2} GFLOP/s",
+        active.name(),
+        attn_winner.br,
+        attn_winner.bc,
+        attn_gf
+    );
+    // Br/Bc regroup the online-softmax update order — validate the
+    // winner against the default tiling within the same relative
+    // tolerance (chain length ≈ seq dominates the bound's depth).
+    let want = attention::flash_attention_tiled(
+        Dispatch::Scalar,
+        &q,
+        &k,
+        &v,
+        &shape,
+        &serial,
+        AttnTiles::defaults(),
+    );
+    let got = attention::flash_attention_tiled(active, &q, &k, &v, &shape, &serial, attn_winner);
+    kernels::tol_check(&got, &want, shape.seq + shape.head_dim).map_err(anyhow::Error::msg)?;
+
+    // Persist as the [kernels] section (other sections untouched) and
+    // install for the rest of this process.
+    let tiles = KernelTiles {
+        kc: Some(winner.kc),
+        mc: Some(winner.mc),
+        nc: Some(winner.nc),
+        br: Some(attn_winner.br),
+        bc: Some(attn_winner.bc),
+    };
+    persist_kernels_section(cfg_path, &tiles.toml_section())?;
+    tiles.apply()?;
+    let _ = writeln!(
+        out,
+        "tuned: KC={} MC={} NC={} Br={} Bc={} ({:.2} GFLOP/s gemm at {}) → {cfg_path} [kernels]",
+        winner.kc,
+        winner.mc,
+        winner.nc,
+        attn_winner.br,
+        attn_winner.bc,
+        winner_gf,
+        active.name()
+    );
+    Ok(out)
+}
+
+/// Replace (or append) the `[kernels]` section of `path`, preserving
+/// every other line verbatim. `toml_lite` only parses, so persistence
+/// is a text-level section splice.
+fn persist_kernels_section(path: &str, section: &str) -> Result<()> {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let mut kept = String::new();
+    let mut in_kernels = false;
+    for line in existing.lines() {
+        let t = line.trim();
+        if t.starts_with('[') {
+            in_kernels = t == "[kernels]";
+        }
+        if !in_kernels {
+            kept.push_str(line);
+            kept.push('\n');
+        }
+    }
+    while kept.ends_with("\n\n") {
+        kept.pop();
+    }
+    if !kept.is_empty() {
+        kept.push('\n');
+    }
+    kept.push_str(section);
+    std::fs::write(path, kept)?;
+    Ok(())
 }
 
 /// Validate every kernel artifact in the manifest; returns count checked.

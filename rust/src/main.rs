@@ -44,6 +44,17 @@ fn main() {
 
 fn real_main() -> Result<()> {
     let args = Args::from_env()?;
+    // Reject unknown PAMM_SIMD values up front with the friendly
+    // level list — the library fallback (used by tests/benches that
+    // don't pass through here) only warns.
+    if let Err(msg) = pamm::tensor::kernels::env_request() {
+        bail!("{msg}");
+    }
+    // Install kernel tiles before any kernel runs: config `[kernels]`
+    // section (the `--tune` persistence target; missing file = empty
+    // overlay) layered under the PAMM_KC/MC/NC/BR/BC env overrides.
+    let tiles_path = args.get_str("config").unwrap_or_else(|| "pamm.toml".into());
+    pamm::config::KernelTiles::load_file(&tiles_path)?.env_overlay()?.apply()?;
     // Fix the native compute pool before any kernel runs; the CLI flag
     // wins over config-file `threads` (poolx is first-set-wins).
     if let Some(t) = args.get_usize("threads")? {
@@ -1080,6 +1091,15 @@ fn cmd_memory(args: &Args) -> Result<()> {
 /// / spot GFLOP/s of the native `tensor::kernels` GEMM (no artifacts
 /// needed).
 fn cmd_kernels(args: &Args) -> Result<()> {
+    if args.get_bool("tune") {
+        if args.get_bool("probe") {
+            print!("{}", pamm::experiments::kernels::probe());
+        }
+        let cfg_path = args.get_str("config").unwrap_or_else(|| "pamm.toml".into());
+        let quick = args.get_bool("quick");
+        print!("{}", pamm::experiments::kernels::tune(&cfg_path, quick)?);
+        return Ok(());
+    }
     if args.get_bool("probe") {
         print!("{}", pamm::experiments::kernels::probe());
         return Ok(());
@@ -1096,9 +1116,26 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     Err(engine_unavailable("pamm kernels (artifact validation; try --probe)"))
 }
 
-/// Render the persisted `BENCH_*.json` perf trail into markdown.
+/// Render the persisted `BENCH_*.json` perf trail into markdown, keep
+/// the commit-keyed history current, diff two history entries
+/// (`--compare <a> <b>` — commit prefixes or `latest`/`prev`), or gate
+/// a fresh run against the committed baseline (`--gate <pct>`).
 fn cmd_bench_report(args: &Args) -> Result<()> {
     let dir = args.get_str("dir").unwrap_or_else(|| "benchmarks".into());
+    let history = args.get_str("history").unwrap_or_else(|| "benchmarks/history.json".into());
+    if let Some(a) = args.get_str("compare") {
+        let b = args.pos(0, "second history entry (commit prefix | latest | prev)")?;
+        print!("{}", pamm::benchx::history::compare_report(&history, &a, b)?);
+        return Ok(());
+    }
+    if let Some(pct) = args.get_f64("gate")? {
+        let verdict = pamm::benchx::history::gate(&dir, &history, pct)?;
+        print!("{}", verdict.report);
+        if verdict.failed {
+            bail!("benchmark regression gate failed (>{pct}% vs baseline)");
+        }
+        return Ok(());
+    }
     let out = args.get_str("out").unwrap_or_else(|| "BENCHMARKS.md".into());
     let report = pamm::benchx::report::render(&dir)?;
     if out == "-" {
@@ -1106,6 +1143,12 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
     } else {
         std::fs::write(&out, &report)?;
         println!("wrote {out} from {dir}/BENCH_*.json");
+    }
+    // Keep the append-only trail in step with the snapshot dir (same
+    // commit ⇒ the entry is replaced, so re-renders don't duplicate).
+    match pamm::benchx::history::append_from_dir(&dir, &history) {
+        Ok(n) => println!("history: {history} now tracks {n} suite entr(y/ies) for this commit"),
+        Err(e) => eprintln!("history: skipped ({e})"),
     }
     Ok(())
 }

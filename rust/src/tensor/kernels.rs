@@ -38,11 +38,43 @@
 //! `scalar → sse2 → avx2`, highest available level wins
 //! ([`Dispatch::native`]). Selection order: a programmatic [`force`]
 //! override (benches / `pamm kernels --probe`), else the `PAMM_SIMD`
-//! env var (`scalar|sse2|avx2|native`, parsed once), else native. The
-//! SIMD paths are `std::arch` behind `#[target_feature]` with CPU
-//! support checked at selection time; non-x86_64 hosts always take the
-//! scalar path. "Scalar" means portable Rust — LLVM may still
-//! autovectorize it, which is fine because…
+//! env var (`scalar|sse2|avx2|avx2fma|avx512|native`, parsed once),
+//! else native. The SIMD paths are `std::arch` behind
+//! `#[target_feature]` with CPU support checked at selection time;
+//! non-x86_64 hosts always take the scalar path. "Scalar" means
+//! portable Rust — LLVM may still autovectorize it, which is fine
+//! because…
+//!
+//! # Fast tier (opt-in, tolerance-checked)
+//!
+//! Above the bit-exact ladder sit [`Dispatch::Avx2Fma`]
+//! (`_mm256_fmadd_ps` microkernel) and the AVX-512-ready
+//! [`Dispatch::Avx512`] slot. They are **never** selected by default:
+//! [`Dispatch::native`] stays the best *no-FMA* level, so an unset
+//! `PAMM_SIMD` keeps the whole repo bit-identical to the scalar
+//! oracle. Opting in (`PAMM_SIMD=avx2fma` or [`force`]) trades bit
+//! equality for one rounding per fused multiply-add; correctness is
+//! then stated by the relative-tolerance oracle [`tol_check`], whose
+//! bound [`tol_bound`] is derived from the k-panel accumulation depth.
+//! Requesting a fast level the host lacks clamps cleanly down the
+//! ladder ([`Dispatch::clamp_available`]) — the AVX-512 slot currently
+//! resolves to the 256-bit FMA microkernel even where AVX-512 is
+//! detected, until a toolchain-equipped runner can validate true
+//! 512-bit intrinsics.
+//!
+//! # Runtime tiles
+//!
+//! `KC`/`MC`/`NC` are compiled-in *defaults*; the live block sizes are
+//! process-wide atomics ([`tiles`]/[`set_tiles`]) so `pamm kernels
+//! --probe --tune` can sweep them per machine and the config
+//! `[kernels]` section can persist the winners. They are mutated only
+//! at startup or inside `--tune`: changing `kc` regroups the k-panel
+//! accumulation and therefore changes result *bits*, so a mid-run
+//! mutation would break the determinism ladder (tests that need
+//! non-default tiles call [`gemm_into_tiled`] instead of touching the
+//! globals). `mc`/`nc` changes never alter any per-element
+//! accumulation order — they only re-schedule which C tiles are
+//! visited when — so those two are bit-neutral.
 //!
 //! # Determinism contract
 //!
@@ -72,19 +104,90 @@
 //! computations and must not nest `with_workspace` calls.
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 /// Micro-tile rows (A values broadcast per k step).
 pub const MR: usize = 8;
 /// Micro-tile columns (one 8-float SIMD vector).
 pub const NR: usize = 8;
-/// k-panel depth: B strip (KC·NR·4 = 8 KiB) stays L1-resident.
+/// Default k-panel depth: B strip (KC·NR·4 = 8 KiB) stays L1-resident.
 pub const KC: usize = 256;
-/// m-block height: packed A panel (MC·KC·4 = 128 KiB) stays L2-resident.
+/// Default m-block height: packed A panel (MC·KC·4 = 128 KiB) in L2.
 pub const MC: usize = 128;
-/// n-block width: bounds the packed B panel at NC·KC·4 = 2 MiB.
+/// Default n-block width: bounds the packed B panel at NC·KC·4 = 2 MiB.
 pub const NC: usize = 2048;
+
+// ---------------------------------------------------------------------------
+// Runtime tiles
+// ---------------------------------------------------------------------------
+
+/// One set of GEMM block sizes — the compiled-in defaults, a config
+/// `[kernels]` overlay, or a `--tune` winner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiles {
+    /// k-panel depth (bit-relevant: regroups the panel accumulation).
+    pub kc: usize,
+    /// m-block height (bit-neutral scheduling).
+    pub mc: usize,
+    /// n-block width (bit-neutral scheduling).
+    pub nc: usize,
+}
+
+impl Tiles {
+    /// The compiled-in defaults (`KC`/`MC`/`NC`).
+    pub fn defaults() -> Tiles {
+        Tiles { kc: KC, mc: MC, nc: NC }
+    }
+
+    /// Reject degenerate block sizes before they reach the driver.
+    pub fn validate(self) -> Result<(), String> {
+        for (name, v) in [("kc", self.kc), ("mc", self.mc), ("nc", self.nc)] {
+            if v < 1 {
+                return Err(format!("kernel tile {name} must be ≥ 1, got {v}"));
+            }
+        }
+        if self.nc < NR {
+            return Err(format!("kernel tile nc must be ≥ NR = {NR}, got {}", self.nc));
+        }
+        Ok(())
+    }
+}
+
+static KC_RT: AtomicUsize = AtomicUsize::new(KC);
+static MC_RT: AtomicUsize = AtomicUsize::new(MC);
+static NC_RT: AtomicUsize = AtomicUsize::new(NC);
+
+/// Live k-panel depth (default [`KC`]).
+pub fn kc() -> usize {
+    KC_RT.load(Ordering::Relaxed)
+}
+
+/// Live m-block height (default [`MC`]).
+pub fn mc() -> usize {
+    MC_RT.load(Ordering::Relaxed)
+}
+
+/// Live n-block width (default [`NC`]).
+pub fn nc() -> usize {
+    NC_RT.load(Ordering::Relaxed)
+}
+
+/// The block sizes [`gemm_into`] uses right now.
+pub fn tiles() -> Tiles {
+    Tiles { kc: kc(), mc: mc(), nc: nc() }
+}
+
+/// Install process-wide block sizes. Startup/`--tune` only — a `kc`
+/// change alters result bits (see the module docs), so flipping this
+/// mid-computation would break the determinism contract.
+pub fn set_tiles(t: Tiles) -> Result<(), String> {
+    t.validate()?;
+    KC_RT.store(t.kc, Ordering::Relaxed);
+    MC_RT.store(t.mc, Ordering::Relaxed);
+    NC_RT.store(t.nc, Ordering::Relaxed);
+    Ok(())
+}
 
 // ---------------------------------------------------------------------------
 // Dispatch
@@ -101,10 +204,37 @@ pub enum Dispatch {
     Sse2,
     /// 256-bit `std::arch` path (requires AVX2 at runtime).
     Avx2,
+    /// 256-bit fused-multiply-add path — the opt-in fast tier. One
+    /// rounding per `a·b + acc` instead of two, so it is **not**
+    /// bit-identical to the ladder; validated by [`tol_check`].
+    Avx2Fma,
+    /// AVX-512-ready fast-tier slot. Detection requires `avx512f`;
+    /// the microkernel currently resolves to the 256-bit FMA variant
+    /// (see [`micro_kernel`]) until a toolchain-equipped runner can
+    /// validate 512-bit intrinsics. Same tolerance contract as
+    /// [`Dispatch::Avx2Fma`].
+    Avx512,
 }
 
-/// The full ladder, lowest to highest.
+/// The bit-exact ladder, lowest to highest — every level here is
+/// bit-identical to the scalar oracle.
 pub const LADDER: [Dispatch; 3] = [Dispatch::Scalar, Dispatch::Sse2, Dispatch::Avx2];
+
+/// The opt-in fast tier (FMA; tolerance-checked, not bit-exact).
+pub const FAST_TIER: [Dispatch; 2] = [Dispatch::Avx2Fma, Dispatch::Avx512];
+
+/// Every dispatch level, lowest to highest (`LADDER` then
+/// `FAST_TIER`) — the order [`Dispatch::clamp_available`] walks down.
+pub const ALL_LEVELS: [Dispatch; 5] = [
+    Dispatch::Scalar,
+    Dispatch::Sse2,
+    Dispatch::Avx2,
+    Dispatch::Avx2Fma,
+    Dispatch::Avx512,
+];
+
+/// Valid `PAMM_SIMD` spellings, for error messages.
+pub const SIMD_VALUES: &str = "scalar|sse2|avx2|avx2fma|avx512|native";
 
 fn sse2_detected() -> bool {
     #[cfg(target_arch = "x86_64")]
@@ -120,12 +250,32 @@ fn avx2_detected() -> bool {
     return false;
 }
 
+fn fma_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return is_x86_feature_detected!("fma");
+    #[cfg(not(target_arch = "x86_64"))]
+    return false;
+}
+
+fn avx512_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return is_x86_feature_detected!("avx512f");
+    #[cfg(not(target_arch = "x86_64"))]
+    return false;
+}
+
 impl Dispatch {
+    /// Alias for the module-level [`ALL_LEVELS`], for call sites that
+    /// already have `Dispatch` in scope.
+    pub const ALL_LEVELS: [Dispatch; 5] = ALL_LEVELS;
+
     pub fn name(self) -> &'static str {
         match self {
             Dispatch::Scalar => "scalar",
             Dispatch::Sse2 => "sse2",
             Dispatch::Avx2 => "avx2",
+            Dispatch::Avx2Fma => "avx2fma",
+            Dispatch::Avx512 => "avx512",
         }
     }
 
@@ -135,20 +285,55 @@ impl Dispatch {
             Dispatch::Scalar => true,
             Dispatch::Sse2 => sse2_detected(),
             Dispatch::Avx2 => avx2_detected(),
+            Dispatch::Avx2Fma => avx2_detected() && fma_detected(),
+            Dispatch::Avx512 => avx512_detected() && fma_detected(),
         }
     }
 
-    /// Highest available level on this host.
+    /// Whether this level sits in the fast tier — FMA kernels whose
+    /// correctness contract is [`tol_check`] rather than bit equality.
+    pub fn is_fast(self) -> bool {
+        matches!(self, Dispatch::Avx2Fma | Dispatch::Avx512)
+    }
+
+    /// Highest available **bit-exact** level on this host. Fast-tier
+    /// levels are never chosen implicitly: an unset `PAMM_SIMD` must
+    /// keep every run bit-identical to the scalar oracle.
     pub fn native() -> Dispatch {
         LADDER.iter().rev().copied().find(|d| d.available()).unwrap_or(Dispatch::Scalar)
     }
 
-    /// Parse a `PAMM_SIMD` value (`scalar|sse2|avx2|native`).
+    /// Highest available level *including* the fast tier — what
+    /// `--probe`/`--tune` and the benches sweep up to.
+    pub fn fastest() -> Dispatch {
+        ALL_LEVELS.iter().rev().copied().find(|d| d.available()).unwrap_or(Dispatch::Scalar)
+    }
+
+    /// This level if the host supports it, else the next lower
+    /// available one — the clean-fallback contract of the fast-tier
+    /// slots (`avx512` on an AVX2+FMA host runs as `avx2fma`; on a
+    /// no-FMA host, as `avx2`; and so on down to scalar).
+    pub fn clamp_available(self) -> Dispatch {
+        if self.available() {
+            return self;
+        }
+        let rank = ALL_LEVELS.iter().position(|&d| d == self).unwrap_or(0);
+        ALL_LEVELS[..rank]
+            .iter()
+            .rev()
+            .copied()
+            .find(|d| d.available())
+            .unwrap_or(Dispatch::Scalar)
+    }
+
+    /// Parse a `PAMM_SIMD` value (one of [`SIMD_VALUES`]).
     pub fn parse(s: &str) -> Option<Dispatch> {
         match s.trim().to_ascii_lowercase().as_str() {
             "scalar" => Some(Dispatch::Scalar),
             "sse2" => Some(Dispatch::Sse2),
             "avx2" => Some(Dispatch::Avx2),
+            "avx2fma" => Some(Dispatch::Avx2Fma),
+            "avx512" => Some(Dispatch::Avx512),
             "native" => Some(Dispatch::native()),
             _ => None,
         }
@@ -168,24 +353,41 @@ pub fn force(d: Option<Dispatch>) {
         Some(Dispatch::Scalar) => 1,
         Some(Dispatch::Sse2) => 2,
         Some(Dispatch::Avx2) => 3,
+        Some(Dispatch::Avx2Fma) => 4,
+        Some(Dispatch::Avx512) => 5,
     };
     FORCED.store(code, Ordering::Relaxed);
 }
 
+/// The `PAMM_SIMD` request, if any, with a friendly error for unknown
+/// spellings (the CLI rejects these at startup instead of silently
+/// falling back). A *known* level the host lacks is not an error — it
+/// clamps down the ladder at selection time.
+pub fn env_request() -> Result<Option<Dispatch>, String> {
+    match std::env::var("PAMM_SIMD") {
+        Err(_) => Ok(None),
+        Ok(v) => match Dispatch::parse(&v) {
+            Some(d) => Ok(Some(d)),
+            None => Err(format!(
+                "PAMM_SIMD={v}: unknown dispatch level; valid levels are {SIMD_VALUES} \
+                 (scalar|sse2|avx2 are bit-identical; avx2fma|avx512 are the \
+                 tolerance-checked fast tier)"
+            )),
+        },
+    }
+}
+
 fn env_default() -> Dispatch {
     static ENV: OnceLock<Dispatch> = OnceLock::new();
-    *ENV.get_or_init(|| match std::env::var("PAMM_SIMD") {
-        Ok(v) => match Dispatch::parse(&v) {
-            Some(d) if d.available() => d,
-            _ => {
-                eprintln!(
-                    "PAMM_SIMD={v}: unknown or unavailable on this host; using {}",
-                    Dispatch::native().name()
-                );
-                Dispatch::native()
-            }
-        },
-        Err(_) => Dispatch::native(),
+    *ENV.get_or_init(|| match env_request() {
+        Ok(Some(d)) => d.clamp_available(),
+        Ok(None) => Dispatch::native(),
+        Err(msg) => {
+            // Non-CLI entry (tests/benches): report and fall back.
+            // `pamm` itself rejects the value before getting here.
+            eprintln!("{msg}; using {}", Dispatch::native().name());
+            Dispatch::native()
+        }
     })
 }
 
@@ -197,13 +399,49 @@ pub fn active() -> Dispatch {
         1 => Dispatch::Scalar,
         2 => Dispatch::Sse2,
         3 => Dispatch::Avx2,
+        4 => Dispatch::Avx2Fma,
+        5 => Dispatch::Avx512,
         _ => env_default(),
     };
-    if d.available() {
-        d
-    } else {
-        Dispatch::Scalar
+    d.clamp_available()
+}
+
+// ---------------------------------------------------------------------------
+// Fast-tier tolerance oracle
+// ---------------------------------------------------------------------------
+
+/// Relative-tolerance bound for a fast-tier result against the scalar
+/// oracle, derived from the k-panel accumulation depth: each output
+/// element is a length-`kdim` chain of `acc + a·b` steps (grouped into
+/// k-panels), and replacing separate mul/add rounding with one fused
+/// rounding perturbs each step by ≤ ε relative — worst case the
+/// divergence grows linearly in the depth. The factor 8 absorbs the
+/// panel regrouping and intermediate-magnitude slack; at `kdim = 512`
+/// the bound is ≈ 5e-4 relative, orders of magnitude above observed
+/// FMA divergence on normal data yet far below any training signal.
+pub fn tol_bound(kdim: usize) -> f32 {
+    8.0 * f32::EPSILON * kdim.max(1) as f32
+}
+
+/// Check a fast-tier result element-wise against the bit-exact oracle:
+/// `|g − w| ≤ tol_bound(kdim) · max(|w|, 1)`. Returns the first
+/// offending element on failure. This is the acceptance oracle of the
+/// fast tier — the property suites and `--tune` validation all route
+/// through here. NaN/Inf in `got` always fail (the comparison is
+/// written so a non-finite difference cannot satisfy `≤`).
+pub fn tol_check(got: &[f32], want: &[f32], kdim: usize) -> Result<(), String> {
+    assert_eq!(got.len(), want.len(), "tol_check: length mismatch");
+    let tol = tol_bound(kdim);
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let lim = tol * w.abs().max(1.0);
+        if !((g - w).abs() <= lim) {
+            return Err(format!(
+                "elem {i}: {g} vs oracle {w} (|Δ| = {:e} > {lim:e} at kdim {kdim})",
+                (g - w).abs()
+            ));
+        }
     }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -566,9 +804,56 @@ unsafe fn mkernel_avx2(
     }
 }
 
+/// Fast-tier micro-kernel: the AVX2 loop with the separate
+/// multiply/add pair fused into `_mm256_fmadd_ps` — one rounding per
+/// step instead of two, which is exactly why this level is validated
+/// by [`tol_check`] instead of bit equality. Also serves the
+/// [`Dispatch::Avx512`] slot until 512-bit intrinsics can be
+/// validated on a real runner.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mkernel_avx2fma(
+    kc: usize,
+    pa: *const f32,
+    pb: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    use std::arch::x86_64::*;
+    let mut acc = [_mm256_setzero_ps(); MR];
+    for p in 0..kc {
+        let bv = _mm256_loadu_ps(pb.add(p * NR));
+        let pap = pa.add(p * MR);
+        for (ii, a) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*pap.add(ii));
+            *a = _mm256_fmadd_ps(av, bv, *a);
+        }
+    }
+    if mr == MR && nr == NR {
+        for (ii, a) in acc.iter().enumerate() {
+            let cp = c.add(ii * ldc);
+            _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), *a));
+        }
+    } else {
+        let mut buf = [0.0f32; MR * NR];
+        for (ii, a) in acc.iter().enumerate() {
+            _mm256_storeu_ps(buf.as_mut_ptr().add(ii * NR), *a);
+        }
+        for ii in 0..mr {
+            for jj in 0..nr {
+                *c.add(ii * ldc + jj) += buf[ii * NR + jj];
+            }
+        }
+    }
+}
+
 /// Resolve the micro-kernel for a dispatch level, re-checking CPU
 /// support so an unavailable request degrades to scalar instead of
-/// executing illegal instructions.
+/// executing illegal instructions. The AVX-512 slot intentionally
+/// resolves to the 256-bit FMA kernel for now (same tolerance
+/// contract; see [`Dispatch::Avx512`]).
 fn micro_kernel(d: Dispatch) -> MicroKernel {
     match d {
         Dispatch::Scalar => mkernel_scalar,
@@ -576,6 +861,10 @@ fn micro_kernel(d: Dispatch) -> MicroKernel {
         Dispatch::Sse2 if sse2_detected() => mkernel_sse2,
         #[cfg(target_arch = "x86_64")]
         Dispatch::Avx2 if avx2_detected() => mkernel_avx2,
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2Fma | Dispatch::Avx512 if avx2_detected() && fma_detected() => {
+            mkernel_avx2fma
+        }
         _ => mkernel_scalar,
     }
 }
@@ -611,9 +900,34 @@ pub fn gemm_into(
     ldc: usize,
     packs: &mut PackBufs,
 ) {
+    gemm_into_tiled(d, tiles(), trans_a, m, n, kdim, a, lda, b, ldb, c, ldc, packs)
+}
+
+/// [`gemm_into`] with explicit block sizes — how the autotune sweep
+/// and the tiled property tests try candidate tiles without mutating
+/// the process-wide [`tiles`] state (which would race with concurrent
+/// tests and, for `kc`, change bits under everyone else's feet).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_tiled(
+    d: Dispatch,
+    t: Tiles,
+    trans_a: bool,
+    m: usize,
+    n: usize,
+    kdim: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    packs: &mut PackBufs,
+) {
     if m == 0 || n == 0 || kdim == 0 {
         return;
     }
+    t.validate().expect("gemm: invalid tiles");
+    let (t_kc, t_mc, t_nc) = (t.kc, t.mc, t.nc);
     if trans_a {
         assert!(a.len() >= (kdim - 1) * lda + m, "gemm: Aᵀ storage too small");
         assert!(lda >= m, "gemm: Aᵀ row stride below row width");
@@ -626,14 +940,14 @@ pub fn gemm_into(
     assert!(ldc >= n && ldb >= n, "gemm: row stride below row width");
 
     let kern = micro_kernel(d);
-    for jc in (0..n).step_by(NC) {
-        let nc = NC.min(n - jc);
+    for jc in (0..n).step_by(t_nc) {
+        let nc = t_nc.min(n - jc);
         let nstrips = nc.div_ceil(NR);
-        for pc in (0..kdim).step_by(KC) {
-            let kc = KC.min(kdim - pc);
+        for pc in (0..kdim).step_by(t_kc) {
+            let kc = t_kc.min(kdim - pc);
             pack_b(&mut packs.pb, b, ldb, pc, kc, jc, nc);
-            for ic in (0..m).step_by(MC) {
-                let mc = MC.min(m - ic);
+            for ic in (0..m).step_by(t_mc) {
+                let mc = t_mc.min(m - ic);
                 let mstrips = mc.div_ceil(MR);
                 pack_a(&mut packs.pa, a, lda, trans_a, ic, mc, pc, kc);
                 for js in 0..nstrips {
@@ -801,10 +1115,99 @@ mod tests {
     fn dispatch_parse_and_ladder() {
         assert_eq!(Dispatch::parse("scalar"), Some(Dispatch::Scalar));
         assert_eq!(Dispatch::parse("AVX2"), Some(Dispatch::Avx2));
+        assert_eq!(Dispatch::parse("avx2fma"), Some(Dispatch::Avx2Fma));
+        assert_eq!(Dispatch::parse("AVX512"), Some(Dispatch::Avx512));
         assert_eq!(Dispatch::parse(" native "), Some(Dispatch::native()));
         assert_eq!(Dispatch::parse("mmx"), None);
         assert!(Dispatch::Scalar.available());
         assert!(Dispatch::native().available());
+        // The implicit default never opts into the fast tier.
+        assert!(!Dispatch::native().is_fast());
+        assert!(LADDER.iter().all(|d| !d.is_fast()));
+        assert!(FAST_TIER.iter().all(|d| d.is_fast()));
+        // Clamp walks down to an available level, never up.
+        let c = Dispatch::Avx512.clamp_available();
+        assert!(c.available());
+        if !Dispatch::Avx512.available() {
+            assert_ne!(c, Dispatch::Avx512);
+        }
+        assert_eq!(Dispatch::Scalar.clamp_available(), Dispatch::Scalar);
+        assert!(Dispatch::fastest().available());
+    }
+
+    #[test]
+    fn fast_tier_passes_the_tolerance_oracle() {
+        for d in FAST_TIER {
+            if !d.available() {
+                continue;
+            }
+            // Ragged MR±1 tails and a KC-crossing k — the shapes where
+            // a fused-rounding bug would hide.
+            for &(m, n, k) in &[(MR + 1, NR - 1, KC + 1), (MR - 1, NR + 1, KC - 1), (23, 17, 2 * KC + 3)] {
+                for trans_a in [false, true] {
+                    let a = rand_vec(m * k, 21);
+                    let b = rand_vec(k * n, 22);
+                    let want = run(Dispatch::Scalar, trans_a, m, n, k, &a, &b);
+                    let got = run(d, trans_a, m, n, k, &a, &b);
+                    tol_check(&got, &want, k).unwrap_or_else(|e| {
+                        panic!("{} m={m} n={n} k={k} trans={trans_a}: {e}", d.name())
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tol_bound_grows_with_depth_and_tol_check_rejects_garbage() {
+        assert!(tol_bound(512) > tol_bound(8));
+        assert!(tol_bound(0) > 0.0, "empty depth still has a positive bound");
+        tol_check(&[1.0, 2.0], &[1.0, 2.0], 4).unwrap();
+        assert!(tol_check(&[1.0, 2.5], &[1.0, 2.0], 4).is_err());
+        assert!(tol_check(&[f32::NAN], &[0.0], 4).is_err(), "NaN can never pass");
+    }
+
+    #[test]
+    fn tiles_accessors_and_validation() {
+        // The live tiles default to the compiled-in constants, and a
+        // defaults round-trip through set_tiles is a no-op (tests must
+        // not install non-default tiles: the globals are
+        // startup-mutate-only by contract).
+        assert_eq!(tiles(), Tiles::defaults());
+        set_tiles(Tiles::defaults()).unwrap();
+        assert_eq!((kc(), mc(), nc()), (KC, MC, NC));
+        assert!(Tiles { kc: 0, mc: MC, nc: NC }.validate().is_err());
+        assert!(Tiles { kc: KC, mc: MC, nc: NR - 1 }.validate().is_err());
+        assert!(Tiles { kc: 1, mc: 1, nc: NR }.validate().is_ok());
+    }
+
+    #[test]
+    fn mc_nc_tiles_are_bit_neutral_and_kc_is_tolerance_equal() {
+        // mc/nc only re-schedule which C tiles are visited when — the
+        // per-element accumulation order is untouched, so any mc/nc
+        // choice is bit-identical to the defaults. kc regroups the
+        // k-panel accumulation: different bits, same math under the
+        // tolerance oracle.
+        let (m, n, k) = (MC + 3, 37, 2 * KC + 5);
+        let a = rand_vec(m * k, 31);
+        let b = rand_vec(k * n, 32);
+        let mut packs = PackBufs::default();
+        let mut base = vec![0f32; m * n];
+        gemm_into_tiled(
+            Dispatch::Scalar, Tiles::defaults(), false, m, n, k, &a, k, &b, n, &mut base, n,
+            &mut packs,
+        );
+        for t in [Tiles { kc: KC, mc: 48, nc: 24 }, Tiles { kc: KC, mc: 1, nc: NR }] {
+            let mut c = vec![0f32; m * n];
+            gemm_into_tiled(Dispatch::Scalar, t, false, m, n, k, &a, k, &b, n, &mut c, n, &mut packs);
+            for (i, (g, w)) in c.iter().zip(&base).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "mc/nc retile: elem {i} with {t:?}");
+            }
+        }
+        for t in [Tiles { kc: KC - 1, mc: MC, nc: NC }, Tiles { kc: KC + 1, mc: MC, nc: NC }, Tiles { kc: 100, mc: 64, nc: 512 }] {
+            let mut c = vec![0f32; m * n];
+            gemm_into_tiled(Dispatch::Scalar, t, false, m, n, k, &a, k, &b, n, &mut c, n, &mut packs);
+            tol_check(&c, &base, k).unwrap_or_else(|e| panic!("kc retile {t:?}: {e}"));
+        }
     }
 
     #[test]

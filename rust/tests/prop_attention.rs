@@ -9,13 +9,13 @@
 //! modes, while the explicit-dispatch assertions sweep the whole ladder
 //! in a single process regardless of the env var.
 
-use pamm::attention::{self, AttnShape, BC, BR};
+use pamm::attention::{self, AttnShape, AttnTiles, BC, BR};
 use pamm::memory::MemoryTracker;
 use pamm::pamm as pammc;
 use pamm::pamm::Eps;
 use pamm::poolx::Pool;
 use pamm::rngx::Xoshiro256;
-use pamm::tensor::kernels::Dispatch;
+use pamm::tensor::kernels::{self, Dispatch};
 use pamm::tensor::Mat;
 
 fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
@@ -123,6 +123,71 @@ fn every_dispatch_level_is_bit_identical_on_every_edge_shape() {
                     "{} vs scalar: {shape:?} elem {i}",
                     d.name()
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_tier_flash_stays_within_the_tolerance_oracle() {
+    // The FMA tier must agree with the independent f64 oracle at the
+    // same bar as the ladder AND with the scalar flash walk within the
+    // relative-tolerance oracle (depth ≈ seq softmax chain + head_dim
+    // GEMM chain) — on the same ragged Br/Bc boundaries.
+    let serial = Pool::serial();
+    for (ix, shape) in edge_shapes().iter().enumerate() {
+        let n = shape.qkv_len();
+        let q = rand_vec(n, 1000 + ix as u64);
+        let k = rand_vec(n, 1100 + ix as u64);
+        let v = rand_vec(n, 1200 + ix as u64);
+        let want = oracle(&q, &k, &v, shape);
+        let base = attention::flash_attention_on(Dispatch::Scalar, &q, &k, &v, shape, &serial);
+        for d in kernels::FAST_TIER {
+            if !d.available() {
+                continue;
+            }
+            let got = attention::flash_attention_on(d, &q, &k, &v, shape, &serial);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                    "{} {shape:?} elem {i}: {g} vs f64 {w}",
+                    d.name()
+                );
+            }
+            kernels::tol_check(&got, &base, shape.seq + shape.head_dim)
+                .unwrap_or_else(|e| panic!("{} {shape:?}: {e}", d.name()));
+        }
+    }
+}
+
+#[test]
+fn autotuned_attention_tiles_stay_within_the_tolerance_oracle() {
+    // Non-default Br/Bc (the kind `--tune` installs) regroup the online
+    // softmax update order — bit-relevant, but every configuration must
+    // stay within the same relative tolerance of the default tiling, at
+    // the bit-exact native level and the fast tier alike.
+    let serial = Pool::serial();
+    let tile_sets =
+        [AttnTiles { br: 16, bc: 16 }, AttnTiles { br: 32, bc: 128 }, AttnTiles { br: 96, bc: 48 }];
+    for (ix, shape) in edge_shapes().iter().enumerate() {
+        let n = shape.qkv_len();
+        let q = rand_vec(n, 1300 + ix as u64);
+        let k = rand_vec(n, 1400 + ix as u64);
+        let v = rand_vec(n, 1500 + ix as u64);
+        let base = attention::flash_attention_tiled(
+            Dispatch::Scalar,
+            &q,
+            &k,
+            &v,
+            shape,
+            &serial,
+            AttnTiles::defaults(),
+        );
+        for d in [Dispatch::native(), Dispatch::fastest()] {
+            for t in tile_sets {
+                let got = attention::flash_attention_tiled(d, &q, &k, &v, shape, &serial, t);
+                kernels::tol_check(&got, &base, shape.seq + shape.head_dim)
+                    .unwrap_or_else(|e| panic!("{} tiles {t:?} {shape:?}: {e}", d.name()));
             }
         }
     }

@@ -239,6 +239,48 @@ fn gradients_are_bit_identical_across_dispatch_levels() {
 }
 
 #[test]
+fn fast_tier_gradients_stay_within_the_tolerance_oracle() {
+    // The FMA tier's backward contract: every gradient agrees with the
+    // scalar oracle's within the relative-tolerance bound. The depth
+    // fed to the bound reflects the composition — forward recompute plus
+    // the 5-GEMM backward tile walk chain several accumulations of
+    // length ≤ tokens/seq/head_dim, so the single-chain depth is scaled
+    // by the chain count.
+    let shape = AttnShape::new(2, 2, BR + 3, 16, true);
+    let dm = shape.d_model();
+    let x = rand_mat(shape.tokens(), dm, 1.0, 4000);
+    let wq = rand_mat(dm, dm, 0.1, 4001);
+    let wk = rand_mat(dm, dm, 0.1, 4002);
+    let wv = rand_mat(dm, dm, 0.1, 4003);
+    let mut rng = Xoshiro256::new(4004);
+    let idx = pammc::sample_generators(&mut rng, shape.tokens(), 20);
+    let target = rand_vec(shape.qkv_len(), 4005);
+    let pool = Pool::serial();
+
+    let (out_b, _, g_b) =
+        run_fwd_bwd(Dispatch::Scalar, &x, &wq, &wk, &wv, &idx, &shape, &target, &pool, true);
+    let depth = 4 * (shape.tokens() + shape.seq + shape.head_dim);
+    for d in kernels::FAST_TIER {
+        if !d.available() {
+            continue;
+        }
+        let (out, _, g) =
+            run_fwd_bwd(d, &x, &wq, &wk, &wv, &idx, &shape, &target, &pool, true);
+        kernels::tol_check(&out, &out_b, depth)
+            .unwrap_or_else(|e| panic!("{} fwd out: {e}", d.name()));
+        for (got, want, name) in [
+            (&g.dwq, &g_b.dwq, "dwq"),
+            (&g.dwk, &g_b.dwk, "dwk"),
+            (&g.dwv, &g_b.dwv, "dwv"),
+            (g.dx.as_ref().unwrap(), g_b.dx.as_ref().unwrap(), "dx"),
+        ] {
+            kernels::tol_check(got.data(), want.data(), depth)
+                .unwrap_or_else(|e| panic!("{} {name}: {e}", d.name()));
+        }
+    }
+}
+
+#[test]
 fn gradients_are_bit_identical_across_thread_counts() {
     let shape = AttnShape::new(2, 4, BR - 1, 17, false);
     let dm = shape.d_model();

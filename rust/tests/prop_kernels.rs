@@ -12,7 +12,7 @@
 
 use pamm::poolx::Pool;
 use pamm::rngx::Xoshiro256;
-use pamm::tensor::kernels::{self, Dispatch, PackBufs, KC, MC, MR, NC, NR};
+use pamm::tensor::kernels::{self, Dispatch, PackBufs, Tiles, KC, MC, MR, NC, NR};
 use pamm::tensor::Mat;
 
 fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
@@ -157,6 +157,94 @@ fn empty_matrices_are_handled() {
     let pool = Pool::new(2).with_min_chunk(1);
     assert_eq!(e05.matmul_with(&e53, &pool).rows(), 0);
     assert_eq!(e05.matmul_tn_with(&Mat::zeros(0, 7), &pool), Mat::zeros(5, 7));
+}
+
+#[test]
+fn fast_tier_matches_scalar_within_tolerance_on_edge_shapes() {
+    // The FMA tier is not bit-identical to the ladder; its contract is
+    // the k-depth relative tolerance oracle, on the same ragged tile
+    // boundaries (MR±1 / KC±1 / …) the bit ladder is exercised on.
+    for (ix, &(m, n, k)) in edge_dims().iter().enumerate() {
+        let a = rand_mat(m, k, 1000 + ix as u64);
+        let b = rand_mat(k, n, 1100 + ix as u64);
+        let at = rand_mat(k, m, 1200 + ix as u64);
+        for trans_a in [false, true] {
+            let lhs = if trans_a { &at } else { &a };
+            let base = explicit_gemm(Dispatch::Scalar, trans_a, lhs, &b);
+            for d in kernels::FAST_TIER {
+                if !d.available() {
+                    continue;
+                }
+                let got = explicit_gemm(d, trans_a, lhs, &b);
+                kernels::tol_check(&got, &base, k).unwrap_or_else(|e| {
+                    panic!("{} m={m} n={n} k={k} trans={trans_a}: {e}", d.name())
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn autotuned_tile_shapes_stay_within_the_tolerance_oracle() {
+    // Non-default KC/MC/NC (the kind `--tune` installs): mc/nc are
+    // bit-neutral scheduling, kc regroups the k-panel accumulation —
+    // every combination must stay within the same k-depth tolerance of
+    // the default-tiled scalar result, at both the bit-exact native
+    // level and the fast tier.
+    let tile_sets = [
+        Tiles { kc: KC / 2, mc: MC, nc: NC },
+        Tiles { kc: KC + 64, mc: MC / 2, nc: NC / 2 },
+        Tiles { kc: 96, mc: 48, nc: 512 },
+    ];
+    for (ix, &(m, n, k)) in edge_dims().iter().enumerate() {
+        let a = rand_mat(m, k, 1300 + ix as u64);
+        let b = rand_mat(k, n, 1400 + ix as u64);
+        let base = explicit_gemm(Dispatch::Scalar, false, &a, &b);
+        for d in [Dispatch::native(), Dispatch::fastest()] {
+            for t in tile_sets {
+                let mut c = vec![0f32; m * n];
+                let mut packs = PackBufs::default();
+                kernels::gemm_into_tiled(
+                    d,
+                    t,
+                    false,
+                    m,
+                    n,
+                    k,
+                    a.data(),
+                    k,
+                    b.data(),
+                    n,
+                    &mut c,
+                    n,
+                    &mut packs,
+                );
+                kernels::tol_check(&c, &base, k).unwrap_or_else(|e| {
+                    panic!("{} tiles {t:?} m={m} n={n} k={k}: {e}", d.name())
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn unset_pamm_simd_never_dispatches_the_fast_tier() {
+    // The fast tier is strictly opt-in: with PAMM_SIMD unset (or set to
+    // a ladder level), the active dispatch must stay bit-exact.
+    match std::env::var("PAMM_SIMD") {
+        Err(_) => assert!(
+            !kernels::active().is_fast(),
+            "unset PAMM_SIMD must stay on the bit-exact ladder, got {}",
+            kernels::active().name()
+        ),
+        Ok(v) => {
+            if let Some(d) = Dispatch::parse(&v) {
+                if !d.is_fast() {
+                    assert!(!kernels::active().is_fast());
+                }
+            }
+        }
+    }
 }
 
 #[test]
